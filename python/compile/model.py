@@ -1,0 +1,123 @@
+"""Layer-2 JAX model: the blocked Gibbs conditional update of SMURFF.
+
+One artifact = one jitted entry point lowered to HLO text by aot.py and
+executed from the Rust coordinator via PJRT.  Shapes are static per
+artifact (B rows per block, D padded ratings per row, K latent dims) and
+dataset-size independent: the Rust side gathers the rated columns'
+latent vectors into the dense [B, D, K] tile (DESIGN.md §2).
+
+All randomness (`eps`) is supplied by Rust so a session is reproducible
+from a single seed regardless of engine or thread count.
+
+IMPORTANT: no jnp.linalg.cholesky / solve here — on CPU those lower to
+``lapack_*_ffi`` custom-calls that xla_extension 0.5.1 (the version the
+Rust `xla` crate links) cannot execute.  The batched Cholesky and the
+triangular solves are hand-written (column loops over the static K,
+fully unrolled at trace time) and lower to pure HLO; aot.py self-checks
+that no custom-call survives in the emitted text.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.gram import masked_gram_rhs
+
+
+def batched_cholesky(a):
+    """Cholesky factor L (lower) of a batch of SPD matrices, pure HLO.
+
+    a: [B, K, K] SPD.  Column-by-column Cholesky-Crout, vectorized over
+    the batch; the column loop runs at trace time (K is static), so no
+    dynamic indexing and no LAPACK custom-call appears in the HLO.
+    """
+    k = a.shape[-1]
+    idx = jnp.arange(k)
+    l = jnp.zeros_like(a)
+    for j in range(k):
+        # Columns >= j of l are still zero, so no masking is needed:
+        # s[:, i] = a[:, i, j] - sum_{t<j} l[:, i, t] l[:, j, t]
+        s = a[:, :, j] - jnp.einsum("bit,bt->bi", l, l[:, j, :])
+        d = jnp.sqrt(jnp.maximum(s[:, j], 1e-30))
+        col = s / d[:, None]
+        newcol = jnp.where(idx[None, :] == j, d[:, None],
+                           jnp.where(idx[None, :] > j, col, 0.0))
+        l = l.at[:, :, j].set(newcol)
+    return l
+
+
+def tri_solve_lower(l, b):
+    """Solve L y = b for a batch of lower-triangular L.  l: [B,K,K], b: [B,K]."""
+    k = l.shape[-1]
+    y = jnp.zeros_like(b)
+    for i in range(k):
+        # entries >= i of y are still zero; row i of L has zeros past i.
+        num = b[:, i] - jnp.einsum("bt,bt->b", l[:, i, :], y)
+        y = y.at[:, i].set(num / l[:, i, i])
+    return y
+
+
+def tri_solve_upper_t(l, b):
+    """Solve L^T x = b (backward substitution).  l: [B,K,K] lower, b: [B,K]."""
+    k = l.shape[-1]
+    x = jnp.zeros_like(b)
+    for i in reversed(range(k)):
+        # column i of L is row i of L^T; entries <= i of x are still zero.
+        num = b[:, i] - jnp.einsum("bt,bt->b", l[:, :, i], x)
+        x = x.at[:, i].set(num / l[:, i, i])
+    return x
+
+
+def gibbs_solve_block(gram, rhs, prior_mean, lambda0, alpha, eps):
+    """Cholesky-sample a block given precomputed Gram/RHS (chunked rows).
+
+    Used by the Rust engine when a row has more non-zeros than the
+    artifact depth D: gram/rhs chunks are accumulated natively, then
+    this solves  u = Lam^-1 b + L^-T eps.
+    """
+    lam = lambda0[None, :, :] + alpha * gram
+    b = jnp.einsum("ij,bj->bi", lambda0, prior_mean) + alpha * rhs
+    l = batched_cholesky(lam)
+    mean = tri_solve_upper_t(l, tri_solve_lower(l, b))
+    return (mean + tri_solve_upper_t(l, eps),)
+
+
+def gram_block(v_sel, vals, mask):
+    """Layer-1 kernel as a standalone artifact (chunked accumulation path)."""
+    gram, rhs = masked_gram_rhs(v_sel, vals, mask)
+    return (gram, rhs)
+
+
+def gibbs_block_update(v_sel, vals, mask, prior_mean, lambda0, alpha, eps):
+    """Resample a block of B rows of the factor matrix (Algorithm 1 inner loop).
+
+    v_sel      [B,D,K]  latent vectors of the rated columns (Rust-gathered, padded)
+    vals       [B,D]    ratings; mask [B,D] 1/0 padding mask
+    prior_mean [B,K]    per-row prior mean (mu for BMF; mu + beta^T f_u for Macau)
+    lambda0    [K,K]    prior precision (Normal-Wishart sample of this iteration)
+    alpha      []       noise precision (fixed or adaptive)
+    eps        [B,K]    standard-normal draws from the Rust RNG
+
+    returns u_new [B,K]:  u = Lam^-1 b + L^-T eps  with
+      Lam = lambda0 + alpha * sum_d m v v^T   (Layer-1 Pallas kernel)
+      b   = lambda0 @ prior_mean + alpha * sum_d m r v
+    """
+    gram, rhs = masked_gram_rhs(v_sel, vals, mask)
+    return gibbs_solve_block(gram, rhs, prior_mean, lambda0, alpha, eps)
+
+
+def colstats_block(u_blk):
+    """Partial sums for the Normal-Wishart hyper-parameter step.
+
+    u_blk: [B,K] -> (sum [K], sum-of-outer-products [K,K]); Rust
+    accumulates across blocks and runs the K x K Wishart draw natively.
+    """
+    s = jnp.sum(u_blk, axis=0)
+    ss = jnp.dot(u_blk.T, u_blk, preferred_element_type=jnp.float32)
+    return (s, ss)
+
+
+def predict_block(u_sel, v_sel):
+    """Dense predictions for a block of test cells: dot(u_i, v_i) per cell.
+
+    u_sel, v_sel: [B,K] latent vectors of the (row, col) of each test cell.
+    """
+    return (jnp.einsum("bk,bk->b", u_sel, v_sel),)

@@ -1,0 +1,81 @@
+# pytest: Layer-1 Pallas kernel vs pure-jnp oracle — the CORE correctness
+# signal of the compile path.  hypothesis is not in the image, so the
+# shape/dtype grid is enumerated explicitly (same sweep, deterministic).
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels.gram import masked_gram_rhs
+from compile.kernels.ref import masked_gram_rhs_ref
+
+SHAPES = [
+    (1, 1, 1),
+    (1, 1, 8),
+    (2, 3, 4),
+    (4, 32, 8),
+    (8, 17, 16),   # non-power-of-two depth
+    (64, 32, 16),  # the default artifact block
+    (16, 128, 32),
+    (3, 64, 33),   # odd K
+]
+
+
+def _case(b, d, k, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((b, d, k)).astype(np.float32)
+    vals = rng.standard_normal((b, d)).astype(np.float32)
+    mask = (rng.random((b, d)) < 0.7).astype(np.float32)
+    return jnp.asarray(v), jnp.asarray(vals), jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("b,d,k", SHAPES)
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_gram_matches_ref(b, d, k, seed):
+    v, vals, mask = _case(b, d, k, seed)
+    gram, rhs = masked_gram_rhs(v, vals, mask)
+    gram_r, rhs_r = masked_gram_rhs_ref(v, vals, mask)
+    np.testing.assert_allclose(np.asarray(gram), np.asarray(gram_r), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rhs), np.asarray(rhs_r), rtol=1e-5, atol=1e-5)
+
+
+def test_all_masked_row_is_zero():
+    v, vals, mask = _case(4, 16, 8, 0)
+    mask = mask.at[2].set(0.0)
+    gram, rhs = masked_gram_rhs(v, vals, mask)
+    assert np.allclose(np.asarray(gram)[2], 0.0)
+    assert np.allclose(np.asarray(rhs)[2], 0.0)
+
+
+def test_full_mask_equals_unmasked_gram():
+    b, d, k = 3, 8, 4
+    rng = np.random.default_rng(7)
+    v = rng.standard_normal((b, d, k)).astype(np.float32)
+    vals = rng.standard_normal((b, d)).astype(np.float32)
+    gram, rhs = masked_gram_rhs(jnp.asarray(v), jnp.asarray(vals), jnp.ones((b, d), jnp.float32))
+    want_gram = np.einsum("bdi,bdj->bij", v, v)
+    want_rhs = np.einsum("bd,bdk->bk", vals, v)
+    np.testing.assert_allclose(np.asarray(gram), want_gram, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(rhs), want_rhs, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_is_symmetric_psd():
+    v, vals, mask = _case(8, 32, 8, 3)
+    gram, _ = masked_gram_rhs(v, vals, mask)
+    g = np.asarray(gram)
+    np.testing.assert_allclose(g, np.swapaxes(g, 1, 2), rtol=1e-5, atol=1e-5)
+    for gb in g:
+        w = np.linalg.eigvalsh(gb)
+        assert w.min() > -1e-4
+
+
+def test_fractional_mask_weights_once():
+    # mask is applied exactly once (weighting), not squared
+    b, d, k = 2, 4, 3
+    rng = np.random.default_rng(9)
+    v = rng.standard_normal((b, d, k)).astype(np.float32)
+    vals = rng.standard_normal((b, d)).astype(np.float32)
+    mask = np.full((b, d), 0.5, np.float32)
+    gram, rhs = masked_gram_rhs(jnp.asarray(v), jnp.asarray(vals), jnp.asarray(mask))
+    want = 0.5 * np.einsum("bdi,bdj->bij", v, v)
+    np.testing.assert_allclose(np.asarray(gram), want, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,140 @@
+# pytest: Layer-2 model (batched Cholesky, triangular solves, the full
+# blocked Gibbs update) vs jnp.linalg-based oracle.
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import gibbs_block_update_ref, colstats_ref
+
+KS = [1, 2, 4, 8, 16, 32]
+
+
+def _spd(b, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((b, k, k)).astype(np.float32)
+    return np.einsum("bij,bkj->bik", a, a) + (k + 1.0) * np.eye(k, dtype=np.float32)
+
+
+@pytest.mark.parametrize("k", KS)
+def test_batched_cholesky(k):
+    a = _spd(6, k, k)
+    l = np.asarray(model.batched_cholesky(jnp.asarray(a)))
+    want = np.linalg.cholesky(a)
+    np.testing.assert_allclose(l, want, rtol=3e-4, atol=3e-4)
+    # strictly lower result: upper triangle must be exactly zero
+    for i in range(k):
+        for j in range(i + 1, k):
+            assert np.all(l[:, i, j] == 0.0)
+
+
+@pytest.mark.parametrize("k", KS)
+def test_triangular_solves(k):
+    a = _spd(5, k, 100 + k)
+    l = np.linalg.cholesky(a)
+    rng = np.random.default_rng(k)
+    b = rng.standard_normal((5, k)).astype(np.float32)
+    y = np.asarray(model.tri_solve_lower(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(np.einsum("bij,bj->bi", l, y), b, rtol=2e-3, atol=2e-3)
+    x = np.asarray(model.tri_solve_upper_t(jnp.asarray(l), jnp.asarray(b)))
+    np.testing.assert_allclose(np.einsum("bji,bj->bi", l, x), b, rtol=2e-3, atol=2e-3)
+
+
+def _gibbs_case(b, d, k, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.standard_normal((b, d, k)).astype(np.float32)
+    vals = rng.standard_normal((b, d)).astype(np.float32)
+    mask = (rng.random((b, d)) < 0.6).astype(np.float32)
+    pm = rng.standard_normal((b, k)).astype(np.float32)
+    lam0 = rng.standard_normal((k, k)).astype(np.float32)
+    lam0 = lam0 @ lam0.T + (k + 1.0) * np.eye(k, dtype=np.float32)
+    eps = rng.standard_normal((b, k)).astype(np.float32)
+    return tuple(jnp.asarray(x) for x in (v, vals, mask, pm, lam0)) + (jnp.float32(1.7), jnp.asarray(eps))
+
+
+@pytest.mark.parametrize("b,d,k", [(4, 8, 4), (8, 32, 8), (64, 32, 16), (16, 128, 32)])
+def test_gibbs_block_update_vs_ref(b, d, k):
+    args = _gibbs_case(b, d, k, b * 1000 + d + k)
+    got = np.asarray(model.gibbs_block_update(*args)[0])
+    want = np.asarray(gibbs_block_update_ref(*args))
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_gibbs_zero_eps_is_conditional_mean():
+    b, d, k = 8, 16, 8
+    v, vals, mask, pm, lam0, alpha, _ = _gibbs_case(b, d, k, 5)
+    got = np.asarray(model.gibbs_block_update(v, vals, mask, pm, lam0, alpha,
+                                              jnp.zeros((b, k), jnp.float32))[0])
+    # closed form: mean = Lam^-1 (lam0 pm + alpha rhs)
+    from compile.kernels.ref import masked_gram_rhs_ref
+    gram, rhs = masked_gram_rhs_ref(v, vals, mask)
+    lam = np.asarray(lam0)[None] + float(alpha) * np.asarray(gram)
+    bb = np.einsum("ij,bj->bi", np.asarray(lam0), np.asarray(pm)) + float(alpha) * np.asarray(rhs)
+    want = np.linalg.solve(lam, bb[..., None])[..., 0]
+    np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+
+def test_gibbs_sampling_covariance():
+    """Statistical check: with many eps draws, the sample covariance of the
+    update equals Lam^-1 (the reparameterization is correct, not just the mean)."""
+    b, d, k = 1, 16, 4
+    v, vals, mask, pm, lam0, alpha, _ = _gibbs_case(b, d, k, 11)
+    n = 4000
+    rng = np.random.default_rng(42)
+    eps = rng.standard_normal((n, k)).astype(np.float32)
+    # tile the single row n times through the batch dimension
+    vv = jnp.tile(v, (n, 1, 1))
+    out = np.asarray(model.gibbs_block_update(
+        vv, jnp.tile(vals, (n, 1)), jnp.tile(mask, (n, 1)),
+        jnp.tile(pm, (n, 1)), lam0, alpha, jnp.asarray(eps))[0])
+    from compile.kernels.ref import masked_gram_rhs_ref
+    gram, _ = masked_gram_rhs_ref(v, vals, mask)
+    lam = np.asarray(lam0) + float(alpha) * np.asarray(gram)[0]
+    want_cov = np.linalg.inv(lam)
+    got_cov = np.cov(out.T)
+    np.testing.assert_allclose(got_cov, want_cov, rtol=0.25, atol=0.05)
+
+
+def test_gram_then_solve_equals_fused():
+    """Chunked path (gram_block + gibbs_solve_block) == fused gibbs_block_update."""
+    b, d, k = 8, 32, 8
+    v, vals, mask, pm, lam0, alpha, eps = _gibbs_case(b, d, k, 21)
+    fused = np.asarray(model.gibbs_block_update(v, vals, mask, pm, lam0, alpha, eps)[0])
+    gram, rhs = model.gram_block(v, vals, mask)
+    split = np.asarray(model.gibbs_solve_block(gram, rhs, pm, lam0, alpha, eps)[0])
+    np.testing.assert_allclose(fused, split, rtol=1e-5, atol=1e-5)
+
+
+def test_gram_chunk_accumulation():
+    """Accumulating gram over two D-chunks == one full-depth gram (the
+    path Rust takes when a row has nnz > artifact depth D)."""
+    b, d, k = 4, 32, 8
+    v, vals, mask, pm, lam0, alpha, eps = _gibbs_case(b, d, k, 31)
+    g_full, r_full = model.gram_block(v, vals, mask)
+    g1, r1 = model.gram_block(v[:, :16], vals[:, :16], mask[:, :16])
+    g2, r2 = model.gram_block(v[:, 16:], vals[:, 16:], mask[:, 16:])
+    np.testing.assert_allclose(np.asarray(g1) + np.asarray(g2), np.asarray(g_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1) + np.asarray(r2), np.asarray(r_full), rtol=1e-5, atol=1e-5)
+    u1 = np.asarray(model.gibbs_solve_block(g_full, r_full, pm, lam0, alpha, eps)[0])
+    u2 = np.asarray(model.gibbs_solve_block(jnp.asarray(np.asarray(g1) + np.asarray(g2)),
+                                            jnp.asarray(np.asarray(r1) + np.asarray(r2)),
+                                            pm, lam0, alpha, eps)[0])
+    np.testing.assert_allclose(u1, u2, rtol=1e-4, atol=1e-4)
+
+
+def test_colstats_block():
+    rng = np.random.default_rng(3)
+    u = rng.standard_normal((64, 16)).astype(np.float32)
+    s, ss = model.colstats_block(jnp.asarray(u))
+    sr, ssr = colstats_ref(jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ss), np.asarray(ssr), rtol=1e-4, atol=1e-4)
+
+
+def test_predict_block():
+    rng = np.random.default_rng(4)
+    u = rng.standard_normal((32, 8)).astype(np.float32)
+    v = rng.standard_normal((32, 8)).astype(np.float32)
+    p = np.asarray(model.predict_block(jnp.asarray(u), jnp.asarray(v))[0])
+    np.testing.assert_allclose(p, (u * v).sum(1), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,129 @@
+//! Micro-benchmarks of the hot-path primitives (criterion replacement,
+//! DESIGN.md §7): per-op wall-clock medians for the kernels that the
+//! §Perf optimization pass iterates on.
+//!
+//! Run: `cargo bench --bench microbench` (SMURFF_BENCH_QUICK=1 to trim).
+
+use smurff::coordinator::ThreadPool;
+use smurff::linalg::{gemm_into, ger_sym_blocked, ger_sym_naive, Backend, Chol, Mat};
+use smurff::rng::Rng;
+use smurff::util::Timer;
+
+fn median_time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut ts = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        f();
+        ts.push(t.elapsed_s());
+    }
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ts[ts.len() / 2]
+}
+
+fn fmt(t: f64) -> String {
+    if t >= 1e-3 {
+        format!("{:9.3} ms", t * 1e3)
+    } else {
+        format!("{:9.2} µs", t * 1e6)
+    }
+}
+
+fn main() {
+    let quick = std::env::var("SMURFF_BENCH_QUICK").is_ok();
+    let reps = if quick { 5 } else { 31 };
+    let mut rng = Rng::new(1);
+    println!("{:40} {:>12}", "primitive", "median");
+
+    for k in [8usize, 16, 32] {
+        let mut a = Mat::zeros(k, k);
+        let mut x = vec![0.0; k];
+        rng.fill_normal(&mut x);
+        let t = median_time(reps, || {
+            for _ in 0..1000 {
+                ger_sym_blocked(&mut a, 1.01, std::hint::black_box(&x));
+            }
+        });
+        println!("{:40} {:>12}", format!("ger_sym blocked K={k} x1000"), fmt(t));
+        let t = median_time(reps, || {
+            for _ in 0..1000 {
+                ger_sym_naive(&mut a, 1.01, std::hint::black_box(&x));
+            }
+        });
+        println!("{:40} {:>12}", format!("ger_sym naive   K={k} x1000"), fmt(t));
+    }
+
+    for k in [16usize, 32] {
+        let mut g = Mat::zeros(k + 3, k);
+        rng.fill_normal(g.data_mut());
+        let spd = {
+            let mut s = smurff::linalg::syrk(&g, Backend::Blocked);
+            for i in 0..k {
+                s[(i, i)] += k as f64;
+            }
+            s
+        };
+        let t = median_time(reps, || {
+            for _ in 0..100 {
+                let c = Chol::new(std::hint::black_box(spd.clone())).unwrap();
+                std::hint::black_box(c.log_det());
+            }
+        });
+        println!("{:40} {:>12}", format!("cholesky K={k} x100"), fmt(t));
+    }
+
+    for n in [64usize, 256] {
+        let mut a = Mat::zeros(n, n);
+        let mut b = Mat::zeros(n, n);
+        rng.fill_normal(a.data_mut());
+        rng.fill_normal(b.data_mut());
+        let mut c = Mat::zeros(n, n);
+        for backend in [Backend::Blocked, Backend::Naive] {
+            let t = median_time(reps, || {
+                gemm_into(
+                    std::hint::black_box(&a),
+                    std::hint::black_box(&b),
+                    &mut c,
+                    backend,
+                );
+            });
+            let gflops = 2.0 * (n as f64).powi(3) / t / 1e9;
+            println!(
+                "{:40} {:>12}  ({gflops:5.2} GF/s)",
+                format!("gemm {n}x{n} {backend:?}"),
+                fmt(t)
+            );
+        }
+    }
+
+    // threadpool dispatch overhead
+    for threads in [2usize, 4, 8] {
+        let pool = ThreadPool::new(threads);
+        let t = median_time(reps, || {
+            pool.parallel_for(threads * 4, 1, |i| {
+                std::hint::black_box(i);
+            });
+        });
+        println!("{:40} {:>12}", format!("parallel_for dispatch T={threads}"), fmt(t));
+    }
+
+    // one full BMF Gibbs iteration (the end-to-end hot path)
+    let (train, _) = smurff::data::movielens_like(2000, 500, 100_000, 0.0, 5);
+    for threads in [1usize, 4] {
+        let cfg = smurff::session::SessionConfig {
+            num_latent: 16,
+            burnin: 0,
+            nsamples: 1,
+            threads,
+            ..Default::default()
+        };
+        let mut s = smurff::session::TrainSession::bmf(train.clone(), None, cfg);
+        s.step();
+        let t = median_time(reps.min(11), || s.step());
+        let gf = 2.0 * 2.0 * train.nnz() as f64 * 256.0 / t / 1e9;
+        println!(
+            "{:40} {:>12}  ({gf:5.2} GF/s)",
+            format!("BMF iter 100k nnz K=16 T={threads}"),
+            fmt(t)
+        );
+    }
+}

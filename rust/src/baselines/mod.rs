@@ -1,0 +1,41 @@
+//! Reimplemented comparison systems for Figure 3 (DESIGN.md §4):
+//!
+//! * [`pymc_like`] — an interpreted probabilistic-programming stack
+//!   (tape-based autodiff + HMC), standing in for PyMC3: generic
+//!   gradient-based sampling with per-scalar graph interpretation.
+//! * [`graphchi_like`] — an out-of-core edge-shard Gibbs sampler,
+//!   standing in for GraphChi: disk-resident shards re-streamed and
+//!   re-indexed every sweep.
+//! * [`gaspi_like`] — multi-node BMF over the message-passing substrate
+//!   in [`crate::distributed`], standing in for the GASPI code of
+//!   Vander Aa et al. 2017.
+//!
+//! All three solve the *same* predictive task as the SMURFF session so
+//! Figure 3's runtime comparison is apples-to-apples, and each exposes
+//! `seconds_per_iteration` for the bench harness.
+
+pub mod gaspi_like;
+pub mod graphchi_like;
+pub mod pymc_like;
+
+/// Common result shape for the Figure-3 bench.
+#[derive(Debug, Clone)]
+pub struct BaselineResult {
+    pub name: String,
+    pub rmse: f64,
+    pub iterations: usize,
+    pub seconds_total: f64,
+    pub seconds_per_iteration: f64,
+}
+
+impl BaselineResult {
+    pub fn new(name: &str, rmse: f64, iterations: usize, seconds_total: f64) -> BaselineResult {
+        BaselineResult {
+            name: name.to_string(),
+            rmse,
+            iterations,
+            seconds_total,
+            seconds_per_iteration: seconds_total / iterations.max(1) as f64,
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Figure 3: runtime of BMF across implementations and core counts.
+//!
+//! Paper result: SMURFF ≈15× faster than GraphChi, ≈1400× than PyMC3 on
+//! one node; the GASPI implementation scales to many nodes.  Here each
+//! implementation factorizes the *same* synthetic ChEMBL-like matrix at
+//! matched per-iteration semantics (one posterior draw per iteration)
+//! and we report seconds/iteration, speedups and the PyMC3/GraphChi
+//! ratios.  Absolute ratios depend on this host; the *ordering* and
+//! rough magnitudes are the reproduction target.
+//!
+//! Host caveats (documented in EXPERIMENTS.md):
+//! * PyMC3-like HMC is measured on an nnz-subsample and scaled linearly
+//!   (its tape cost is exactly linear in nnz·K; the full matrix would
+//!   need gigabytes of tape).
+//! * this machine may have a single core: the multi-node GASPI line
+//!   additionally reports a *projected* sec/iter from measured per-node
+//!   compute + the interconnect model, which is what a real cluster
+//!   would see.
+
+use super::{fmt_s, Report, Table};
+use crate::baselines;
+use crate::distributed::NetSpec;
+use crate::session::{SessionConfig, TrainSession};
+use crate::util::Timer;
+
+pub fn run(quick: bool) -> Report {
+    let (rows, cols, nnz, k) = if quick {
+        (400, 80, 8_000, 8)
+    } else {
+        (20_000, 1_000, 1_000_000, 16)
+    };
+    let iters = if quick { 3 } else { 5 };
+    let spec = crate::data::ChemblSpec {
+        compounds: rows,
+        proteins: cols,
+        nnz,
+        seed: 42,
+        ..Default::default()
+    };
+    let d = crate::data::chembl_synth(&spec);
+    let (train, test) = crate::data::split_train_test(&d.activity, 0.2, 42);
+    let mut report = Report::new("fig3");
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let thread_sweep: Vec<usize> =
+        [1usize, 2, 4, 8, 16, 32].iter().copied().filter(|&t| t <= max_threads).collect();
+
+    let mut t = Table::new(
+        &format!("Figure 3: BMF runtime ({rows}x{cols}, {} nnz, K={k})", train.nnz()),
+        &["implementation", "cores", "sec/iter", "speedup vs 1 core", "RMSE"],
+    );
+
+    // --- SMURFF (this implementation)
+    let mut smurff_1core = 0.0;
+    let mut smurff_best = f64::INFINITY;
+    for &threads in &thread_sweep {
+        let cfg = SessionConfig {
+            num_latent: k,
+            burnin: 1,
+            nsamples: iters,
+            threads,
+            seed: 42,
+            ..Default::default()
+        };
+        let mut s = TrainSession::bmf(train.clone(), Some(test.clone()), cfg);
+        s.step(); // warm-up (burnin)
+        let timer = Timer::start();
+        for _ in 0..iters {
+            s.step();
+        }
+        let per_iter = timer.elapsed_s() / iters as f64;
+        if threads == 1 {
+            smurff_1core = per_iter;
+        }
+        smurff_best = smurff_best.min(per_iter);
+        t.row(vec![
+            "SMURFF".into(),
+            threads.to_string(),
+            fmt_s(per_iter),
+            format!("{:.2}x", smurff_1core / per_iter),
+            format!("{:.4}", s.view_rmse(0)),
+        ]);
+    }
+
+    // --- GraphChi-like (out-of-core)
+    let graphchi = baselines::graphchi_like::run_bmf(
+        &train,
+        &test,
+        k,
+        iters,
+        max_threads.min(8),
+        42,
+    )
+    .expect("graphchi baseline");
+    t.row(vec![
+        "GraphChi-like".into(),
+        max_threads.min(8).to_string(),
+        fmt_s(graphchi.seconds_per_iteration),
+        String::new(),
+        format!("{:.4}", graphchi.rmse),
+    ]);
+
+    // --- PyMC3-like (interpreted HMC) on an nnz-subsample, scaled
+    let sub_nnz_target = if quick { train.nnz() } else { 30_000 };
+    let (sub_train, sub_test, scale) = if train.nnz() > sub_nnz_target {
+        let keep = sub_nnz_target as f64 / train.nnz() as f64;
+        let (sub, _) = crate::data::split_train_test(&train, 1.0 - keep, 7);
+        let scale = train.nnz() as f64 / sub.nnz() as f64;
+        (sub, test.clone(), scale)
+    } else {
+        (train.clone(), test.clone(), 1.0)
+    };
+    let pymc_iters = if quick { 1 } else { 2 };
+    let pymc = baselines::pymc_like::run_bmf(&sub_train, &sub_test, k, pymc_iters, 42);
+    let pymc_per_iter = pymc.seconds_per_iteration * scale;
+    t.row(vec![
+        format!("PyMC3-like (x{scale:.0} nnz-scaled)"),
+        "1".into(),
+        fmt_s(pymc_per_iter),
+        String::new(),
+        format!("{:.4}", pymc.rmse),
+    ]);
+
+    // --- GASPI-like (multi-node, 1 thread per node)
+    let node_sweep: Vec<usize> = vec![1, 2, 4, 8];
+    let net = NetSpec::cluster();
+    let gaspi_iters = iters.min(3);
+    let r1 = baselines::gaspi_like::run_bmf(&train, &test, k, gaspi_iters, 1, net, 42);
+    for &nodes in &node_sweep {
+        // measured on this host (threads share its cores) + projection
+        // for a real cluster: compute scales 1/nodes, allgather adds
+        // latency + bytes/bandwidth per iteration
+        let factors_bytes = ((train.nrows() + train.ncols()) * k * 8) as f64;
+        let comm = 2.0 * (nodes as f64 - 1.0)
+            * (net.latency_us * 1e-6 + factors_bytes / (net.gbs * 1e9));
+        let projected = r1.seconds_per_iteration / nodes as f64 + comm;
+        let measured = if nodes == 1 {
+            r1.clone()
+        } else {
+            baselines::gaspi_like::run_bmf(&train, &test, k, gaspi_iters, nodes, net, 42)
+        };
+        t.row(vec![
+            format!("BMF+GASPI-like ({nodes} nodes, projected {})", fmt_s(projected)),
+            nodes.to_string(),
+            fmt_s(measured.seconds_per_iteration),
+            format!("{:.2}x", r1.seconds_per_iteration / projected),
+            format!("{:.4}", measured.rmse),
+        ]);
+    }
+    report.push(t);
+
+    // headline ratios (paper: 15x GraphChi, 1400x PyMC3)
+    let mut h = Table::new(
+        "Figure 3 headline ratios (vs best SMURFF)",
+        &["comparison", "paper", "measured here"],
+    );
+    h.row(vec![
+        "GraphChi / SMURFF".into(),
+        "~15x".into(),
+        format!("{:.1}x", graphchi.seconds_per_iteration / smurff_best),
+    ]);
+    h.row(vec![
+        "PyMC3 / SMURFF".into(),
+        "~1400x".into(),
+        format!("{:.0}x", pymc_per_iter / smurff_best),
+    ]);
+    report.push(h);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn quick_fig3_runs_and_orders() {
+        let r = super::run(true);
+        assert_eq!(r.tables.len(), 2);
+        let ratios = &r.tables[1];
+        // the real gaps need the full-size bench; at quick scale just
+        // require PyMC clearly slower and GraphChi not clearly faster
+        let v = |i: usize| -> f64 { ratios.rows[i][2].trim_end_matches('x').parse().unwrap() };
+        assert!(v(0) > 0.5, "GraphChi/SMURFF ratio {}", v(0));
+        assert!(v(1) > 2.0, "PyMC3/SMURFF ratio {}", v(1));
+    }
+}

@@ -1,0 +1,119 @@
+//! Figure 4: BMF / Macau-dense / Macau-sparse across Xeon, Xeon Phi and
+//! ARM ThunderX.
+//!
+//! We do not have the paper's testbeds (DESIGN.md §4): the three
+//! platforms are projected with the roofline+cache model in
+//! [`crate::hwmodel`], anchored by a *measured* run of each workload on
+//! this host.  The reproduction target is the ordering (Xeon best, Phi
+//! worst by 4–10×, ARM ≈3× off) and the sparse-input gap being widest.
+
+use super::{fmt_s, Report, Table};
+use crate::hwmodel::{all_platforms, bmf_profile, macau_profile, predict_seconds};
+use crate::session::{SessionConfig, TrainSession};
+use crate::util::Timer;
+
+pub fn run(quick: bool) -> Report {
+    let (n, m, nnz, k) = if quick {
+        (500, 100, 10_000, 8)
+    } else {
+        (4_000, 400, 200_000, 16)
+    };
+    let iters = if quick { 2 } else { 5 };
+    let mut report = Report::new("fig4");
+    let spec = crate::data::ChemblSpec { compounds: n, proteins: m, nnz, seed: 7, ..Default::default() };
+    let d = crate::data::chembl_synth(&spec);
+    let (train, _) = crate::data::split_train_test(&d.activity, 0.1, 7);
+    let fp_sparse_nnz = match &d.fingerprints_sparse {
+        crate::data::SideInfo::Sparse(s) => s.nnz(),
+        _ => unreachable!(),
+    };
+    let fp_dense_nnz = n * 1024;
+
+    // measured host times anchor the model (calibration column)
+    let cfg = SessionConfig { num_latent: k, burnin: 1, nsamples: 1, seed: 7, ..Default::default() };
+    let host = |mut s: TrainSession| -> f64 {
+        s.step();
+        let t = Timer::start();
+        for _ in 0..iters {
+            s.step();
+        }
+        t.elapsed_s() / iters as f64
+    };
+    let host_bmf = host(TrainSession::bmf(train.clone(), None, cfg.clone()));
+    let host_macau_dense = host(TrainSession::macau(
+        train.clone(),
+        None,
+        d.fingerprints_dense.clone(),
+        cfg.clone(),
+    ));
+    let host_macau_sparse = host(TrainSession::macau(
+        train.clone(),
+        None,
+        d.fingerprints_sparse.clone(),
+        cfg,
+    ));
+
+    let workloads = [
+        ("BMF", bmf_profile(n, m, train.nnz(), k), host_bmf),
+        ("Macau dense", macau_profile(n, m, train.nnz(), k, fp_dense_nnz, true), host_macau_dense),
+        (
+            "Macau sparse",
+            macau_profile(n, m, train.nnz(), k, fp_sparse_nnz, false),
+            host_macau_sparse,
+        ),
+    ];
+
+    let mut t = Table::new(
+        &format!("Figure 4: projected sec/iter on the paper's platforms ({n}x{m}, K={k})"),
+        &["workload", "host measured", "Xeon", "XeonPhi", "ARM", "Phi/Xeon", "ARM/Xeon"],
+    );
+    for (name, w, host_s) in &workloads {
+        let platforms = all_platforms();
+        let secs: Vec<f64> = platforms.iter().map(|p| predict_seconds(p, w, p.cores)).collect();
+        t.row(vec![
+            name.to_string(),
+            fmt_s(*host_s),
+            fmt_s(secs[0]),
+            fmt_s(secs[1]),
+            fmt_s(secs[2]),
+            format!("{:.1}x", secs[1] / secs[0]),
+            format!("{:.1}x", secs[2] / secs[0]),
+        ]);
+    }
+    report.push(t);
+
+    // thread-scaling panel per platform (the x-axis of Figure 4)
+    let mut s = Table::new(
+        "Figure 4 inset: BMF thread scaling per platform (projected sec/iter)",
+        &["threads", "Xeon", "XeonPhi", "ARM"],
+    );
+    let w = &workloads[0].1;
+    for threads in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let secs: Vec<String> = all_platforms()
+            .iter()
+            .map(|p| fmt_s(predict_seconds(p, w, threads)))
+            .collect();
+        s.row(vec![threads.to_string(), secs[0].clone(), secs[1].clone(), secs[2].clone()]);
+    }
+    report.push(s);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn quick_fig4_reproduces_ordering() {
+        let r = super::run(true);
+        let t = &r.tables[0];
+        assert_eq!(t.rows.len(), 3);
+        for row in &t.rows {
+            let phi: f64 = row[5].trim_end_matches('x').parse().unwrap();
+            let arm: f64 = row[6].trim_end_matches('x').parse().unwrap();
+            assert!(phi > 1.0 && arm > 1.0, "{}: Xeon must win", row[0]);
+            assert!(phi > arm, "{}: Phi must be worst", row[0]);
+        }
+        // sparse gap widest
+        let phi_of = |i: usize| -> f64 { t.rows[i][5].trim_end_matches('x').parse().unwrap() };
+        assert!(phi_of(2) > phi_of(1), "sparse {} vs dense {}", phi_of(2), phi_of(1));
+    }
+}

@@ -1,0 +1,107 @@
+//! Figure 5: Conda binary packaging vs native compilation, across
+//! algebra backends.
+//!
+//! Paper message: the Conda binary loses almost nothing because MKL
+//! dispatches to the best vector ISA *at runtime*, while a generic
+//! OpenBLAS build is much slower, especially for BMF; the compiler
+//! (gcc vs icc) does not matter because the time is inside the BLAS.
+//!
+//! Mapping here (DESIGN.md §4): our `linalg::Backend::Blocked` is the
+//! runtime-dispatching "MKL" (identical code in a native or generic
+//! build — dispatch happens at runtime, so the "Conda" column equals
+//! the "native" column by construction, which *is* the figure's
+//! message); `Backend::Naive` is the generic "OpenBLAS" build.
+
+use super::{fmt_s, Report, Table};
+use crate::linalg::Backend;
+use crate::session::{SessionConfig, TrainSession};
+use crate::util::Timer;
+
+fn measure(train: &crate::sparse::SparseMatrix, side: Option<crate::data::SideInfo>, k: usize, iters: usize) -> f64 {
+    let cfg = SessionConfig { num_latent: k, burnin: 1, nsamples: 1, seed: 3, ..Default::default() };
+    let mut s = match side {
+        Some(side) => TrainSession::macau(train.clone(), None, side, cfg),
+        None => TrainSession::bmf(train.clone(), None, cfg),
+    };
+    s.step();
+    // best-of-3 repetitions to reject OS noise / allocator drift
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Timer::start();
+        for _ in 0..iters {
+            s.step();
+        }
+        best = best.min(t.elapsed_s() / iters as f64);
+    }
+    best
+}
+
+pub fn run(quick: bool) -> Report {
+    let (n, m, nnz, k) = if quick {
+        (400, 100, 10_000, 8)
+    } else {
+        (3_000, 300, 150_000, 32)
+    };
+    let iters = if quick { 2 } else { 5 };
+    let mut report = Report::new("fig5");
+    let spec = crate::data::ChemblSpec { compounds: n, proteins: m, nnz, seed: 3, ..Default::default() };
+    let d = crate::data::chembl_synth(&spec);
+    let (train, _) = crate::data::split_train_test(&d.activity, 0.1, 3);
+
+    // the four build combinations of the figure
+    let combos: Vec<(&str, Backend)> = vec![
+        ("MKL-like  + native", Backend::Blocked),
+        ("MKL-like  + conda (runtime dispatch)", Backend::Blocked),
+        ("OpenBLAS-like + native", Backend::Naive),
+        ("OpenBLAS-like + conda", Backend::Naive),
+    ];
+
+    let mut t = Table::new(
+        &format!("Figure 5: build/backend combinations, sec/iter ({n}x{m}, K={k})"),
+        &["build", "BMF", "Macau"],
+    );
+    // warm-up pass so the first combo doesn't pay cold caches/page faults
+    Backend::set_global(Backend::Blocked);
+    let _ = measure(&train, None, k, 1);
+    let mut times = Vec::new();
+    for (name, backend) in &combos {
+        Backend::set_global(*backend);
+        let bmf = measure(&train, None, k, iters);
+        let macau = measure(&train, Some(d.fingerprints_dense.clone()), k, iters);
+        times.push((bmf, macau));
+        t.row(vec![name.to_string(), fmt_s(bmf), fmt_s(macau)]);
+    }
+    Backend::set_global(Backend::Blocked);
+    report.push(t);
+
+    let mut h = Table::new(
+        "Figure 5 headline: generic-BLAS slowdown (paper: MKL >> OpenBLAS for BMF; conda ~ native)",
+        &["comparison", "BMF", "Macau"],
+    );
+    h.row(vec![
+        "OpenBLAS-like / MKL-like".into(),
+        format!("{:.2}x", times[2].0 / times[0].0),
+        format!("{:.2}x", times[2].1 / times[0].1),
+    ]);
+    h.row(vec![
+        "conda / native (MKL-like)".into(),
+        format!("{:.2}x", times[1].0 / times[0].0),
+        format!("{:.2}x", times[1].1 / times[0].1),
+    ]);
+    report.push(h);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn quick_fig5_conda_is_free_and_naive_costs() {
+        let r = super::run(true);
+        let h = &r.tables[1];
+        let parse = |s: &str| -> f64 { s.trim_end_matches('x').parse().unwrap() };
+        // conda ≈ native (same backend): within measurement noise (wide
+        // band — quick mode measures very small times)
+        let conda = parse(&h.rows[1][1]);
+        assert!((0.3..3.0).contains(&conda), "conda/native {conda}");
+    }
+}

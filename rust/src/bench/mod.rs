@@ -1,0 +1,171 @@
+//! The benchmark harness: one module per paper table/figure
+//! (DESIGN.md §3).  Each regenerates the rows/series of its figure on
+//! this machine's scale; `cargo bench` runs them all via the
+//! `rust/benches/*.rs` wrappers, and `smurff bench <name>` runs one.
+//!
+//! Results print as aligned text tables and can be dumped as JSON.
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod gfa;
+pub mod macau;
+pub mod table1;
+
+use crate::util::JsonValue;
+
+/// A printable/serializable result table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        println!("\n== {} ==", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("title", JsonValue::str(&self.title)),
+            (
+                "headers",
+                JsonValue::Array(self.headers.iter().map(|h| JsonValue::str(h)).collect()),
+            ),
+            (
+                "rows",
+                JsonValue::Array(
+                    self.rows
+                        .iter()
+                        .map(|r| JsonValue::Array(r.iter().map(|c| JsonValue::str(c)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A named collection of tables (one bench run).
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub tables: Vec<Table>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Report {
+        Report { name: name.to_string(), tables: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: Table) {
+        t.print();
+        self.tables.push(t);
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        JsonValue::obj(vec![
+            ("name", JsonValue::str(&self.name)),
+            ("tables", JsonValue::Array(self.tables.iter().map(|t| t.to_json()).collect())),
+        ])
+    }
+}
+
+/// Dispatch used by `smurff bench <name>` and the bench wrappers.
+pub fn run_by_name(name: &str, quick: bool) -> anyhow::Result<Report> {
+    match name {
+        "fig3" => Ok(fig3::run(quick)),
+        "fig4" => Ok(fig4::run(quick)),
+        "fig5" => Ok(fig5::run(quick)),
+        "gfa" => Ok(gfa::run(quick)),
+        "macau" => Ok(macau::run(quick)),
+        "table1" => Ok(table1::run(quick)),
+        "all" => {
+            let mut all = Report::new("all");
+            for n in ["table1", "fig3", "fig4", "fig5", "gfa", "macau"] {
+                let r = run_by_name(n, quick)?;
+                all.tables.extend(r.tables);
+            }
+            Ok(all)
+        }
+        other => anyhow::bail!("unknown bench '{other}' (fig3|fig4|fig5|gfa|macau|table1|all)"),
+    }
+}
+
+pub(crate) fn fmt_s(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.0}")
+    } else if x >= 1.0 {
+        format!("{x:.2}")
+    } else if x >= 1e-3 {
+        format!("{:.2} ms", x * 1e3)
+    } else {
+        format!("{:.1} µs", x * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shapes_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("t"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn fmt_s_ranges() {
+        assert_eq!(fmt_s(120.0), "120");
+        assert_eq!(fmt_s(1.5), "1.50");
+        assert!(fmt_s(0.0015).contains("ms"));
+        assert!(fmt_s(2e-5).contains("µs"));
+    }
+
+    #[test]
+    fn unknown_bench_errors() {
+        assert!(run_by_name("nope", true).is_err());
+    }
+}

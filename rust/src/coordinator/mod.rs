@@ -1,0 +1,518 @@
+//! The coordination layer (Layer 3): the parallel Gibbs sweep over one
+//! side of the model, the engine abstraction that lets the same sweep run
+//! on the native Rust kernels or on the AOT-compiled XLA artifacts, and
+//! the fork-join [`ThreadPool`] standing in for OpenMP.
+//!
+//! Determinism invariant (DESIGN.md §5, property-tested in
+//! `rust/tests/coordinator_props.rs`): every row i of iteration t draws
+//! from `Rng::for_row(seed, t, side, i)`, so the sampled latents are
+//! identical for any thread count and any schedule.
+
+pub mod threadpool;
+
+pub use threadpool::ThreadPool;
+
+use crate::data::MatrixConfig;
+use crate::linalg::{Chol, Mat};
+use crate::noise::NoiseModel;
+use crate::priors::{MeanSpec, Prior, RowObs};
+use crate::rng::Rng;
+
+/// How the rows of the side being updated see one data view.
+pub enum DataAccess<'a> {
+    /// target rows are matrix rows (CSR view)
+    SparseRows(&'a crate::sparse::SparseMatrix),
+    /// target rows are matrix columns (CSC view)
+    SparseCols(&'a crate::sparse::SparseMatrix),
+    /// dense data, target rows are matrix rows
+    DenseRows(&'a Mat),
+    /// dense data, target rows are matrix columns
+    DenseCols(&'a Mat),
+}
+
+impl<'a> DataAccess<'a> {
+    /// Number of observed entries for target row i.
+    pub fn nnz(&self, i: usize) -> usize {
+        match self {
+            DataAccess::SparseRows(m) => m.row_nnz(i),
+            DataAccess::SparseCols(m) => m.col_nnz(i),
+            DataAccess::DenseRows(m) => m.cols(),
+            DataAccess::DenseCols(m) => m.rows(),
+        }
+    }
+
+    /// Visit every observed (other_index, value) of target row i.
+    #[inline]
+    pub fn for_each_obs<F: FnMut(usize, f64)>(&self, i: usize, mut f: F) {
+        match self {
+            DataAccess::SparseRows(m) => {
+                let (idx, vals) = m.row(i);
+                for (&j, &v) in idx.iter().zip(vals) {
+                    f(j as usize, v);
+                }
+            }
+            DataAccess::SparseCols(m) => {
+                let (idx, vals) = m.col(i);
+                for (&j, &v) in idx.iter().zip(vals) {
+                    f(j as usize, v);
+                }
+            }
+            DataAccess::DenseRows(m) => {
+                for (j, &v) in m.row(i).iter().enumerate() {
+                    f(j, v);
+                }
+            }
+            DataAccess::DenseCols(m) => {
+                for j in 0..m.rows() {
+                    f(j, m[(j, i)]);
+                }
+            }
+        }
+    }
+
+    /// Gather (idx, vals) into scratch vectors (used by custom samplers
+    /// and the XLA engine's block marshalling).
+    pub fn gather(&self, i: usize, idx: &mut Vec<u32>, vals: &mut Vec<f64>) {
+        idx.clear();
+        vals.clear();
+        self.for_each_obs(i, |j, v| {
+            idx.push(j as u32);
+            vals.push(v);
+        });
+    }
+}
+
+/// One data view as seen from the side being updated.
+pub struct ViewSlice<'a> {
+    pub data: DataAccess<'a>,
+    /// the opposite side's latents
+    pub other: &'a Mat,
+    /// likelihood precision of this view
+    pub alpha: f64,
+    /// probit augmentation (binary data)?
+    pub probit: bool,
+    /// α · OᵀO precomputed when the view is fully observed (the
+    /// "sparse fully known" / "dense" fast path of Table 1)
+    pub full_gram: Option<Mat>,
+}
+
+impl<'a> ViewSlice<'a> {
+    /// Precompute the full-gram fast path for fully-observed data.
+    pub fn full_gram_for(other: &Mat, alpha: f64) -> Mat {
+        let mut g = crate::linalg::syrk(other, crate::linalg::Backend::global());
+        g.scale(alpha);
+        g
+    }
+}
+
+/// Everything an engine needs to resample one side with MVN conditionals.
+pub struct MvnSweep<'a> {
+    pub lambda0: &'a Mat,
+    pub means: MeanSpec<'a>,
+    pub views: Vec<ViewSlice<'a>>,
+    pub seed: u64,
+    pub iteration: u64,
+    /// 0 = rows side, 1.. = column side of view v-1
+    pub side_id: u64,
+}
+
+/// A sampling engine: resamples all rows of `latents` in place.
+pub trait Engine: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn sample_mvn_side(&self, sweep: &MvnSweep<'_>, latents: &mut Mat, pool: &ThreadPool);
+}
+
+/// Shared mutable row access for disjoint parallel row writes.
+pub struct RowWriter {
+    ptr: *mut f64,
+    cols: usize,
+    #[allow(dead_code)]
+    rows: usize,
+}
+
+unsafe impl Send for RowWriter {}
+unsafe impl Sync for RowWriter {}
+
+impl RowWriter {
+    pub fn new(m: &mut Mat) -> RowWriter {
+        RowWriter { ptr: m.data_mut().as_mut_ptr(), cols: m.cols(), rows: m.rows() }
+    }
+
+    /// # Safety
+    /// Each row index must be accessed by at most one thread at a time.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut(&self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        std::slice::from_raw_parts_mut(self.ptr.add(i * self.cols), self.cols)
+    }
+}
+
+/// The pure-Rust engine: per-row Gram accumulation (the native analogue
+/// of the Layer-1 Pallas kernel) + Cholesky sampling.
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn sample_mvn_side(&self, sweep: &MvnSweep<'_>, latents: &mut Mat, pool: &ThreadPool) {
+        let n = latents.rows();
+        let k = latents.cols();
+        let writer = RowWriter::new(latents);
+        pool.parallel_for(n, 1, |i| {
+            let mut rng = Rng::for_row(sweep.seed, sweep.iteration, sweep.side_id, i as u64);
+            // SAFETY: each i is visited exactly once (threadpool contract)
+            let row = unsafe { writer.row_mut(i) };
+            sample_one_row_mvn(sweep, i, row, k, &mut rng);
+        });
+    }
+}
+
+thread_local! {
+    /// per-thread gather scratch for the rank-4 Gram path (no per-row
+    /// allocation on the hot loop — §Perf)
+    static GATHER: std::cell::RefCell<(Vec<f64>, Vec<f64>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
+    /// per-thread K-sized work area for the solve/sample phase (§Perf
+    /// change #3: zero allocations per row)
+    static ROW_WORK: std::cell::RefCell<Option<RowWork>> = const { std::cell::RefCell::new(None) };
+}
+
+struct RowWork {
+    lambda: Mat,
+    rhs: Vec<f64>,
+    tmp: Vec<f64>,
+    eps: Vec<f64>,
+}
+
+impl RowWork {
+    fn ensure(slot: &mut Option<RowWork>, k: usize) -> &mut RowWork {
+        let fresh = match slot {
+            Some(w) => w.rhs.len() != k,
+            None => true,
+        };
+        if fresh {
+            *slot = Some(RowWork {
+                lambda: Mat::zeros(k, k),
+                rhs: vec![0.0; k],
+                tmp: vec![0.0; k],
+                eps: vec![0.0; k],
+            });
+        }
+        slot.as_mut().unwrap()
+    }
+}
+
+/// The MVN row conditional shared by the native engine and (for the
+/// chunked path) the XLA engine's remainder handling:
+///   Λ = Λ₀ + Σ_views α O_selᵀ O_sel,   b = Λ₀ μ_i + Σ_views α O_selᵀ r
+///   u_i ~ N(Λ⁻¹ b, Λ⁻¹)
+pub fn sample_one_row_mvn(
+    sweep: &MvnSweep<'_>,
+    i: usize,
+    row_in_out: &mut [f64],
+    k: usize,
+    rng: &mut Rng,
+) {
+    ROW_WORK.with(|w| {
+        let mut slot = w.borrow_mut();
+        let work = RowWork::ensure(&mut slot, k);
+        sample_one_row_mvn_with(sweep, i, row_in_out, k, rng, work);
+    });
+}
+
+fn sample_one_row_mvn_with(
+    sweep: &MvnSweep<'_>,
+    i: usize,
+    row_in_out: &mut [f64],
+    k: usize,
+    rng: &mut Rng,
+    work: &mut RowWork,
+) {
+    let lambda = &mut work.lambda;
+    lambda.data_mut().copy_from_slice(sweep.lambda0.data());
+    let mean_i = sweep.means.row(i);
+    // rhs = Λ₀ μ_i (in place)
+    let rhs = &mut work.rhs;
+    for (r, row0) in rhs.iter_mut().zip(0..k) {
+        *r = crate::linalg::dot(sweep.lambda0.row(row0), mean_i);
+    }
+    for view in &sweep.views {
+        let alpha = view.alpha;
+        match (&view.full_gram, view.probit) {
+            (Some(fg), false) => {
+                lambda.add_assign(fg);
+                view.data.for_each_obs(i, |j, r| {
+                    if r != 0.0 {
+                        crate::linalg::axpy(rhs, alpha * r, view.other.row(j));
+                    }
+                });
+            }
+            _ => {
+                // §Perf changes #1+#2: upper-triangle-only accumulation,
+                // and (Blocked backend) gather-then-rank-4 so the inner
+                // loops are long enough to vectorize; mirrored once
+                // below before the Cholesky.
+                if crate::linalg::Backend::global() == crate::linalg::Backend::Blocked {
+                    GATHER.with(|g| {
+                        let (xs, vals) = &mut *g.borrow_mut();
+                        xs.clear();
+                        vals.clear();
+                        view.data.for_each_obs(i, |j, r| {
+                            let vrow = view.other.row(j);
+                            let val = if view.probit {
+                                let pred = crate::linalg::dot(row_in_out, vrow);
+                                NoiseModel::augment_probit(pred, r, rng)
+                            } else {
+                                r
+                            };
+                            xs.extend_from_slice(vrow);
+                            vals.push(val);
+                        });
+                        crate::linalg::gram_rhs_rank4(lambda, rhs, alpha, xs, vals);
+                    });
+                } else {
+                    view.data.for_each_obs(i, |j, r| {
+                        let vrow = view.other.row(j);
+                        let val = if view.probit {
+                            let pred = crate::linalg::dot(row_in_out, vrow);
+                            NoiseModel::augment_probit(pred, r, rng)
+                        } else {
+                            r
+                        };
+                        crate::linalg::ger_sym_upper(lambda, alpha, vrow);
+                        crate::linalg::axpy(rhs, alpha * val, vrow);
+                    });
+                }
+            }
+        }
+    }
+    crate::linalg::mirror_upper_to_lower(lambda);
+    // in-place Cholesky + three triangular solves (no allocation):
+    //   mean = Λ⁻¹ rhs,  u = mean + L⁻ᵀ ε
+    if crate::linalg::chol_inplace(lambda).is_err() {
+        // numerically degenerate row: fall back to the prior mean
+        row_in_out.copy_from_slice(mean_i);
+        return;
+    }
+    let l = &*lambda;
+    crate::linalg::tri_solve_lower_into(l, rhs, &mut work.tmp);
+    crate::linalg::tri_solve_upper_t_into(l, &work.tmp, rhs); // rhs := mean
+    rng.fill_normal(&mut work.eps);
+    crate::linalg::tri_solve_upper_t_into(l, &work.eps, &mut work.tmp); // tmp := L⁻ᵀε
+    for c in 0..k {
+        row_in_out[c] = rhs[c] + work.tmp[c];
+    }
+}
+
+/// Sweep for priors with custom row conditionals (spike-and-slab).
+/// These use a single view (GFA loadings each belong to one view).
+pub fn sample_side_custom(
+    prior: &dyn Prior,
+    view: &ViewSlice<'_>,
+    latents: &mut Mat,
+    pool: &ThreadPool,
+    seed: u64,
+    iteration: u64,
+    side_id: u64,
+) {
+    let n = latents.rows();
+    let writer = RowWriter::new(latents);
+    pool.parallel_for(n, 1, |i| {
+        let mut rng = Rng::for_row(seed, iteration, side_id, i as u64);
+        let mut idx = Vec::new();
+        let mut vals = Vec::new();
+        view.data.gather(i, &mut idx, &mut vals);
+        // SAFETY: disjoint rows
+        let row = unsafe { writer.row_mut(i) };
+        prior.sample_row_custom(
+            i,
+            RowObs { idx: &idx, vals: &vals },
+            view.other,
+            view.alpha,
+            &mut rng,
+            row,
+        );
+    });
+}
+
+/// Sum of squared residuals over the observed cells of a view — feeds the
+/// adaptive-noise Gamma update.  `target` indexes rows of `access`.
+pub fn view_sse(
+    access: &DataAccess<'_>,
+    target: &Mat,
+    other: &Mat,
+    pool: &ThreadPool,
+) -> (f64, usize) {
+    let n = target.rows();
+    let (sse, cnt) = pool.parallel_map_reduce(
+        n,
+        8,
+        |range| {
+            let mut s = 0.0;
+            let mut c = 0usize;
+            for i in range {
+                let trow = target.row(i);
+                access.for_each_obs(i, |j, r| {
+                    let e = r - crate::linalg::dot(trow, other.row(j));
+                    s += e * e;
+                    c += 1;
+                });
+            }
+            (s, c)
+        },
+        (0.0, 0usize),
+        |a, b| (a.0 + b.0, a.1 + b.1),
+    );
+    (sse, cnt)
+}
+
+/// Build the `DataAccess` for a side of a view.
+pub fn access_for<'a>(data: &'a MatrixConfig, target_is_rows: bool) -> DataAccess<'a> {
+    match (data, target_is_rows) {
+        (MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m), true) => {
+            DataAccess::SparseRows(m)
+        }
+        (MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m), false) => {
+            DataAccess::SparseCols(m)
+        }
+        (MatrixConfig::Dense(m), true) => DataAccess::DenseRows(m),
+        (MatrixConfig::Dense(m), false) => DataAccess::DenseCols(m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::priors::{NormalPrior, Prior};
+
+    fn toy_problem() -> (crate::sparse::SparseMatrix, Mat) {
+        let mut rng = Rng::new(71);
+        let (n, m, k) = (40, 30, 4);
+        let mut v = Mat::zeros(m, k);
+        rng.fill_normal(v.data_mut());
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..m {
+                if rng.next_f64() < 0.3 {
+                    trips.push((i as u32, j as u32, rng.normal()));
+                }
+            }
+        }
+        (crate::sparse::SparseMatrix::from_triplets(n, m, trips), v)
+    }
+
+    #[test]
+    fn native_sweep_is_thread_count_invariant() {
+        let (data, v) = toy_problem();
+        let mut prior = NormalPrior::new(4);
+        let mut rng = Rng::new(72);
+        let mut lat = crate::model::init_latents(40, 4, 0.1, &mut rng);
+        prior.update_hyper(&lat, &mut rng);
+
+        let run = |threads: usize, lat0: &Mat| {
+            let pool = ThreadPool::new(threads);
+            let mut lat = lat0.clone();
+            let spec = prior.mvn_spec().unwrap();
+            let sweep = MvnSweep {
+                lambda0: spec.lambda0,
+                means: spec.means,
+                views: vec![ViewSlice {
+                    data: DataAccess::SparseRows(&data),
+                    other: &v,
+                    alpha: 2.0,
+                    probit: false,
+                    full_gram: None,
+                }],
+                seed: 7,
+                iteration: 3,
+                side_id: 0,
+            };
+            NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
+            lat
+        };
+        let a = run(1, &lat);
+        let b = run(4, &lat);
+        let c = run(7, &lat);
+        assert!(a.max_abs_diff(&b) == 0.0, "1 vs 4 threads must be identical");
+        assert!(b.max_abs_diff(&c) == 0.0);
+        lat = a; // silence unused warning chain
+        assert!(lat.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn full_gram_path_matches_explicit_dense_iteration() {
+        // fully-observed dense data: fast path (full_gram) must equal the
+        // naive per-entry accumulation
+        let mut rng = Rng::new(73);
+        let (n, m, k) = (10, 8, 3);
+        let mut dense = Mat::zeros(n, m);
+        rng.fill_normal(dense.data_mut());
+        let mut v = Mat::zeros(m, k);
+        rng.fill_normal(v.data_mut());
+        let mut prior = NormalPrior::new(k);
+        let mut lat = crate::model::init_latents(n, k, 0.1, &mut rng);
+        prior.update_hyper(&lat, &mut rng);
+        let spec = prior.mvn_spec().unwrap();
+        let pool = ThreadPool::new(2);
+
+        let alpha = 1.5;
+        let make_sweep = |full: bool| MvnSweep {
+            lambda0: spec.lambda0,
+            means: MeanSpec::Shared(match &spec.means {
+                MeanSpec::Shared(s) => *s,
+                _ => unreachable!(),
+            }),
+            views: vec![ViewSlice {
+                data: DataAccess::DenseRows(&dense),
+                other: &v,
+                alpha,
+                probit: false,
+                full_gram: full.then(|| ViewSlice::full_gram_for(&v, alpha)),
+            }],
+            seed: 11,
+            iteration: 0,
+            side_id: 0,
+        };
+        let mut lat_fast = lat.clone();
+        NativeEngine.sample_mvn_side(&make_sweep(true), &mut lat_fast, &pool);
+        let mut lat_slow = lat.clone();
+        NativeEngine.sample_mvn_side(&make_sweep(false), &mut lat_slow, &pool);
+        // same RNG streams, same math -> tiny float drift from accumulation order
+        assert!(lat_fast.max_abs_diff(&lat_slow) < 1e-6);
+        lat = lat_fast;
+        assert!(lat.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn view_sse_counts_and_sums() {
+        let (data, v) = toy_problem();
+        let lat = Mat::zeros(40, 4); // all-zero latents -> residual = r
+        let pool = ThreadPool::new(3);
+        let (sse, cnt) = view_sse(&DataAccess::SparseRows(&data), &lat, &v, &pool);
+        let want: f64 = data.triplets().map(|(_, _, r)| r * r).sum();
+        assert!((sse - want).abs() < 1e-9);
+        assert_eq!(cnt, data.nnz());
+    }
+
+    #[test]
+    fn access_for_orientation() {
+        let (data, _) = toy_problem();
+        let mc = MatrixConfig::SparseUnknown(data.clone());
+        assert_eq!(access_for(&mc, true).nnz(0), data.row_nnz(0));
+        assert_eq!(access_for(&mc, false).nnz(0), data.col_nnz(0));
+        let d = MatrixConfig::Dense(Mat::zeros(3, 5));
+        assert_eq!(access_for(&d, true).nnz(2), 5);
+        assert_eq!(access_for(&d, false).nnz(4), 3);
+    }
+
+    #[test]
+    fn dense_cols_access_reads_columns() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let acc = DataAccess::DenseCols(&m);
+        let mut got = Vec::new();
+        acc.for_each_obs(1, |j, v| got.push((j, v)));
+        assert_eq!(got, vec![(0, 2.0), (1, 5.0)]);
+    }
+}

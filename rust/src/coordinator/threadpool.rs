@@ -1,0 +1,275 @@
+//! Fork-join worker pool — the OpenMP substitute (DESIGN.md §4).
+//!
+//! `parallel_for(n, grain, f)` runs `f(i)` for i in 0..n across the pool
+//! with dynamic chunk self-scheduling (an atomic cursor), which is what
+//! balances SMURFF's power-law row-degree distribution the way OpenMP's
+//! `schedule(dynamic)` + tasks do in the original.  The calling thread
+//! participates, so a pool of T threads gives T-way parallelism with
+//! T-1 workers.
+//!
+//! Correctness contract: `f` must be safe to call concurrently for
+//! distinct `i` (rows are disjoint in all our uses).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Type-erased job shared with the workers.  The `func` pointer's
+/// lifetime is erased; safety is upheld because `parallel_for` does not
+/// return until every worker has finished the job (`active == 0`).
+struct Job {
+    cursor: AtomicUsize,
+    n: usize,
+    chunk: usize,
+    active: AtomicUsize,
+    func: *const (dyn Fn(usize) + Sync),
+}
+
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct Shared {
+    slot: Mutex<(u64, Option<Arc<Job>>)>, // (generation, job)
+    start: Condvar,
+    done: Condvar,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    nthreads: usize,
+}
+
+impl ThreadPool {
+    /// A pool with `nthreads` total lanes (including the caller).
+    pub fn new(nthreads: usize) -> ThreadPool {
+        let nthreads = nthreads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new((0, None)),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::new();
+        for _ in 0..nthreads - 1 {
+            let sh = shared.clone();
+            handles.push(std::thread::spawn(move || worker_loop(sh)));
+        }
+        ThreadPool { shared, handles, nthreads }
+    }
+
+    /// Pool sized from std::thread::available_parallelism.
+    pub fn default_size() -> ThreadPool {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(n)
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.nthreads
+    }
+
+    /// Run `f(i)` for every i in 0..n.  `grain` is the smallest chunk a
+    /// worker grabs at once (use ~1 for heavy items, larger for light).
+    pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, grain: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        if self.nthreads == 1 || n <= grain {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        // aim for ~8 chunks per lane to absorb imbalance
+        let chunk = grain.max(n / (self.nthreads * 8)).max(1);
+        let fref: &(dyn Fn(usize) + Sync) = &f;
+        let job = Arc::new(Job {
+            cursor: AtomicUsize::new(0),
+            n,
+            chunk,
+            active: AtomicUsize::new(self.nthreads - 1),
+            // SAFETY: lifetime erased; we block below until active == 0,
+            // so no worker touches `f` after this frame ends.
+            func: unsafe {
+                std::mem::transmute::<
+                    *const (dyn Fn(usize) + Sync),
+                    *const (dyn Fn(usize) + Sync),
+                >(fref as *const _)
+            },
+        });
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.0 += 1;
+            slot.1 = Some(job.clone());
+        }
+        self.shared.start.notify_all();
+        // caller participates
+        run_chunks(&job);
+        // wait for all workers to leave the job
+        let mut slot = self.shared.slot.lock().unwrap();
+        while job.active.load(Ordering::Acquire) != 0 {
+            slot = self.shared.done.wait(slot).unwrap();
+        }
+        slot.1 = None;
+    }
+
+    /// Map chunks of 0..n through `map` and fold the partial results.
+    /// `T` must be combinable in any order (sums, maxima, …).
+    pub fn parallel_map_reduce<T, M, R>(&self, n: usize, grain: usize, map: M, init: T, reduce: R) -> T
+    where
+        T: Send,
+        M: Fn(std::ops::Range<usize>) -> T + Sync,
+        R: Fn(T, T) -> T,
+    {
+        if n == 0 {
+            return init;
+        }
+        let parts = Mutex::new(Vec::new());
+        let chunk = grain.max(n / (self.nthreads * 4)).max(1);
+        let nchunks = n.div_ceil(chunk);
+        self.parallel_for(nchunks, 1, |c| {
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            let t = map(lo..hi);
+            parts.lock().unwrap().push(t);
+        });
+        parts.into_inner().unwrap().into_iter().fold(init, |a, b| reduce(a, b))
+    }
+}
+
+fn run_chunks(job: &Job) {
+    let f = unsafe { &*job.func };
+    loop {
+        let lo = job.cursor.fetch_add(job.chunk, Ordering::Relaxed);
+        if lo >= job.n {
+            break;
+        }
+        let hi = (lo + job.chunk).min(job.n);
+        for i in lo..hi {
+            f(i);
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    let mut seen_gen = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if slot.0 > seen_gen {
+                    seen_gen = slot.0;
+                    match &slot.1 {
+                        Some(j) => break j.clone(),
+                        None => return, // poison: shutdown
+                    }
+                }
+                slot = shared.start.wait(slot).unwrap();
+            }
+        };
+        run_chunks(&job);
+        if job.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let _guard = shared.slot.lock().unwrap();
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut slot = self.shared.slot.lock().unwrap();
+            slot.0 += 1;
+            slot.1 = None; // poison
+        }
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(n, 16, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn reusable_across_calls() {
+        let pool = ThreadPool::new(3);
+        for round in 0..50 {
+            let acc = AtomicU64::new(0);
+            pool.parallel_for(100, 1, |i| {
+                acc.fetch_add(i as u64, Ordering::Relaxed);
+            });
+            assert_eq!(acc.load(Ordering::Relaxed), 4950, "round {round}");
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let acc = AtomicU64::new(0);
+        pool.parallel_for(10, 1, |i| {
+            acc.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(2);
+        pool.parallel_for(0, 1, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn map_reduce_sums() {
+        let pool = ThreadPool::new(4);
+        let s = pool.parallel_map_reduce(
+            1000,
+            10,
+            |r| r.map(|i| i as u64).sum::<u64>(),
+            0u64,
+            |a, b| a + b,
+        );
+        assert_eq!(s, 499_500);
+    }
+
+    #[test]
+    fn imbalanced_work_completes() {
+        // power-law work per item — the SMURFF row-degree situation
+        let pool = ThreadPool::new(4);
+        let acc = AtomicU64::new(0);
+        pool.parallel_for(500, 1, |i| {
+            let work = if i == 0 { 200_000 } else { 10 + i % 7 };
+            let mut s = 0u64;
+            for x in 0..work {
+                s = s.wrapping_add(x as u64 ^ (s >> 3));
+            }
+            acc.fetch_add((s & 1) + 1, Ordering::Relaxed);
+        });
+        assert!(acc.load(Ordering::Relaxed) >= 500);
+    }
+
+    #[test]
+    fn borrows_stack_data_safely() {
+        let pool = ThreadPool::new(4);
+        let data: Vec<u64> = (0..1000).collect();
+        let out: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(1000, 8, |i| {
+            out[i].store(data[i] * 2, Ordering::Relaxed);
+        });
+        for i in 0..1000 {
+            assert_eq!(out[i].load(Ordering::Relaxed), 2 * i as u64);
+        }
+    }
+}

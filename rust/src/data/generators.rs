@@ -1,0 +1,371 @@
+//! Synthetic workload generators — the substitutions for the paper's
+//! datasets (DESIGN.md §4):
+//!
+//! * [`chembl_synth`] — ChEMBL-like compound×protein IC50 matrix with
+//!   ECFP-like sparse binary fingerprints as side information.  Power-law
+//!   row degrees reproduce the load imbalance the paper's OpenMP-task
+//!   parallelism targets; the fingerprints are *correlated with the
+//!   latent structure* so Macau's link matrix genuinely helps, as in the
+//!   paper's compound-activity use case.
+//! * [`movielens_like`] — small ratings matrix for quickstarts/tests.
+//! * [`gfa_study_data`] — the Bunte et al. (2015) *simulated study*:
+//!   multiple views sharing row factors, with group-sparse structure
+//!   (each factor active in a known subset of views).
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+use crate::sparse::SparseMatrix;
+
+use super::SideInfo;
+
+/// Spec for the ChEMBL-like generator.
+#[derive(Debug, Clone)]
+pub struct ChemblSpec {
+    pub compounds: usize,
+    pub proteins: usize,
+    /// target number of observed IC50 cells
+    pub nnz: usize,
+    /// ground-truth latent dimension
+    pub rank: usize,
+    /// observation noise stddev
+    pub noise: f64,
+    /// number of fingerprint bits (ECFP-like)
+    pub fp_bits: usize,
+    /// expected on-bits per compound
+    pub fp_density: usize,
+    /// Zipf exponent for per-compound activity counts (load imbalance)
+    pub degree_exponent: f64,
+    pub seed: u64,
+}
+
+impl Default for ChemblSpec {
+    fn default() -> Self {
+        ChemblSpec {
+            compounds: 2000,
+            proteins: 200,
+            nnz: 40_000,
+            rank: 8,
+            noise: 0.4,
+            fp_bits: 1024,
+            fp_density: 40,
+            degree_exponent: 1.1,
+            seed: 42,
+        }
+    }
+}
+
+/// Output of [`chembl_synth`].
+pub struct ChemblData {
+    /// observed IC50-like activities (train + test together)
+    pub activity: SparseMatrix,
+    /// sparse binary fingerprints, compounds × fp_bits
+    pub fingerprints_sparse: SideInfo,
+    /// the same fingerprints densified (the paper uses both formats)
+    pub fingerprints_dense: SideInfo,
+    /// ground-truth factors (for recovery tests)
+    pub u_true: Mat,
+    pub v_true: Mat,
+}
+
+/// Generate a ChEMBL-like compound-activity dataset.
+///
+/// Latent structure: `U = F_real · W + noise` so the fingerprints carry
+/// real information about the compound factors (this is the property
+/// Macau exploits); `activity = U Vᵀ + ε`, sampled at power-law-degree
+/// cells, values shifted to an IC50-like scale (pIC50 ≈ 6 ± 1.5).
+pub fn chembl_synth(spec: &ChemblSpec) -> ChemblData {
+    let mut rng = Rng::from_parts(spec.seed, 0xC4E3);
+    let k = spec.rank;
+
+    // ECFP-like fingerprints: random sparse binary rows
+    let mut fp_trips = Vec::new();
+    for i in 0..spec.compounds {
+        // per-compound bit count varies a bit
+        let bits = (spec.fp_density as f64 * (0.5 + rng.next_f64())) as usize;
+        for _ in 0..bits.max(1) {
+            fp_trips.push((i as u32, rng.next_below(spec.fp_bits) as u32, 1.0));
+        }
+    }
+    let fp = SparseMatrix::from_triplets(spec.compounds, spec.fp_bits, fp_trips);
+
+    // link weights W: fp_bits × k, sparse-ish but strong — the
+    // fingerprints must genuinely predict the compound factors for the
+    // Macau use case to be reproducible (paper §4)
+    let mut w = Mat::zeros(spec.fp_bits, k);
+    for i in 0..spec.fp_bits {
+        for j in 0..k {
+            if rng.next_f64() < 0.3 {
+                w[(i, j)] = rng.normal();
+            }
+        }
+    }
+
+    // U = normalize(F W) + small idiosyncratic noise (SNR >> 1)
+    let mut u = Mat::zeros(spec.compounds, k);
+    for i in 0..spec.compounds {
+        let (cols, _) = fp.row(i);
+        let urow = u.row_mut(i);
+        for &c in cols {
+            for j in 0..k {
+                urow[j] += w[(c as usize, j)];
+            }
+        }
+        let scale = 1.0 / (cols.len().max(1) as f64).sqrt();
+        for j in 0..k {
+            urow[j] = urow[j] * scale + 0.15 * rng.normal();
+        }
+    }
+
+    let mut v = Mat::zeros(spec.proteins, k);
+    rng.fill_normal(v.data_mut());
+
+    // power-law compound degrees (Zipf over rank order)
+    let mut weights: Vec<f64> = (0..spec.compounds)
+        .map(|i| 1.0 / ((i + 1) as f64).powf(spec.degree_exponent))
+        .collect();
+    // shuffle so heavy compounds are spread across row indices
+    rng.shuffle(&mut weights);
+    let wsum: f64 = weights.iter().sum();
+
+    let mut trips = Vec::with_capacity(spec.nnz);
+    let mut seen = std::collections::HashSet::with_capacity(spec.nnz * 2);
+    for (i, wi) in weights.iter().enumerate() {
+        let cnt = ((wi / wsum) * spec.nnz as f64).round() as usize;
+        for _ in 0..cnt.max(1).min(spec.proteins) {
+            let j = rng.next_below(spec.proteins);
+            if !seen.insert((i as u32, j as u32)) {
+                continue;
+            }
+            let mean = crate::linalg::dot(u.row(i), v.row(j));
+            // pIC50-like scale
+            let val = 6.0 + mean + spec.noise * rng.normal();
+            trips.push((i as u32, j as u32, val));
+        }
+    }
+
+    let activity = SparseMatrix::from_triplets(spec.compounds, spec.proteins, trips);
+    let fp_dense = fp.to_dense();
+    ChemblData {
+        activity,
+        fingerprints_sparse: SideInfo::Sparse(fp),
+        fingerprints_dense: SideInfo::Dense(fp_dense),
+        u_true: u,
+        v_true: v,
+    }
+}
+
+/// Small MovieLens-like ratings matrix from a rank-`8` ground truth,
+/// ratings clipped to [1, 5].  Returns (train, test) split by `test_frac`.
+pub fn movielens_like(
+    users: usize,
+    movies: usize,
+    nnz: usize,
+    test_frac: f64,
+    seed: u64,
+) -> (SparseMatrix, SparseMatrix) {
+    let mut rng = Rng::from_parts(seed, 0x30DA);
+    let k = 8;
+    let mut u = Mat::zeros(users, k);
+    let mut v = Mat::zeros(movies, k);
+    rng.fill_normal(u.data_mut());
+    rng.fill_normal(v.data_mut());
+    let scale = 1.0 / (k as f64).sqrt();
+
+    let mut seen = std::collections::HashSet::with_capacity(nnz * 2);
+    let mut trips = Vec::with_capacity(nnz);
+    while trips.len() < nnz.min(users * movies * 9 / 10) {
+        let i = rng.next_below(users);
+        let j = rng.next_below(movies);
+        if !seen.insert((i as u32, j as u32)) {
+            continue;
+        }
+        let raw = 3.0 + 1.2 * scale * crate::linalg::dot(u.row(i), v.row(j)) + 0.3 * rng.normal();
+        trips.push((i as u32, j as u32, raw.clamp(1.0, 5.0)));
+    }
+    let all = SparseMatrix::from_triplets(users, movies, trips);
+    if test_frac > 0.0 {
+        super::split_train_test(&all, test_frac, seed ^ 0x7E57)
+    } else {
+        (all, SparseMatrix::from_triplets(users, movies, Vec::<(u32, u32, f64)>::new()))
+    }
+}
+
+/// Spec for the GFA simulated study (Bunte et al. 2015, §"Simulated study").
+#[derive(Debug, Clone)]
+pub struct GfaSpec {
+    /// shared sample count (rows of every view)
+    pub n: usize,
+    /// columns per view
+    pub view_cols: Vec<usize>,
+    /// total latent factors
+    pub k: usize,
+    /// for each factor, which views it is active in (group-sparsity
+    /// ground truth); length k, each a bitmask over views
+    pub activity: Vec<Vec<bool>>,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for GfaSpec {
+    fn default() -> Self {
+        // 3 views, 6 factors: 2 shared by all, 1 per pair, 1 private —
+        // the canonical group-factor pattern of the simulated study.
+        GfaSpec {
+            n: 100,
+            view_cols: vec![60, 40, 30],
+            k: 6,
+            activity: vec![
+                vec![true, true, true],
+                vec![true, true, true],
+                vec![true, true, false],
+                vec![true, false, true],
+                vec![false, true, true],
+                vec![true, false, false],
+            ],
+            noise: 0.3,
+            seed: 7,
+        }
+    }
+}
+
+/// Output of [`gfa_study_data`].
+pub struct GfaData {
+    /// one dense view per entry of `view_cols`, all sharing row factors
+    pub views: Vec<Mat>,
+    pub z_true: Mat,
+    /// per-view loadings with the group-sparse zero pattern applied
+    pub w_true: Vec<Mat>,
+}
+
+/// Generate the GFA simulated study: X_v = Z W_vᵀ + noise, with factor f
+/// active in view v only where `activity[f][v]`.
+pub fn gfa_study_data(spec: &GfaSpec) -> GfaData {
+    assert!(spec.activity.len() == spec.k, "activity must list every factor");
+    let nviews = spec.view_cols.len();
+    for a in &spec.activity {
+        assert_eq!(a.len(), nviews);
+    }
+    let mut rng = Rng::from_parts(spec.seed, 0x6FA);
+    let mut z = Mat::zeros(spec.n, spec.k);
+    rng.fill_normal(z.data_mut());
+
+    let mut views = Vec::new();
+    let mut w_true = Vec::new();
+    for (v, &cols) in spec.view_cols.iter().enumerate() {
+        let mut w = Mat::zeros(cols, spec.k);
+        for f in 0..spec.k {
+            if spec.activity[f][v] {
+                for j in 0..cols {
+                    w[(j, f)] = rng.normal();
+                }
+            }
+        }
+        let mut x = crate::linalg::gemm(&z, &w.transpose());
+        for val in x.data_mut().iter_mut() {
+            *val += spec.noise * rng.normal();
+        }
+        views.push(x);
+        w_true.push(w);
+    }
+    GfaData { views, z_true: z, w_true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chembl_shapes_and_scale() {
+        let spec = ChemblSpec { compounds: 300, proteins: 50, nnz: 5000, ..Default::default() };
+        let d = chembl_synth(&spec);
+        assert_eq!(d.activity.nrows(), 300);
+        assert_eq!(d.activity.ncols(), 50);
+        assert!(d.activity.nnz() > 1000, "nnz {}", d.activity.nnz());
+        // IC50-like scale
+        let m = d.activity.mean_value();
+        assert!((4.0..8.0).contains(&m), "mean {m}");
+        assert_eq!(d.fingerprints_sparse.nrows(), 300);
+        assert_eq!(d.fingerprints_sparse.nfeatures(), 1024);
+    }
+
+    #[test]
+    fn chembl_degrees_are_power_law_ish() {
+        let spec = ChemblSpec { compounds: 500, proteins: 100, nnz: 10_000, ..Default::default() };
+        let d = chembl_synth(&spec);
+        let mut hist = d.activity.row_nnz_histogram();
+        hist.sort_unstable_by(|a, b| b.cmp(a));
+        // heavy head: top 10% of compounds own > 25% of observations
+        let top: usize = hist[..50].iter().sum();
+        assert!(top * 4 > d.activity.nnz(), "top {top} of {}", d.activity.nnz());
+        // tail exists
+        assert!(*hist.last().unwrap() <= 2);
+    }
+
+    #[test]
+    fn chembl_fingerprints_predict_factors() {
+        // sanity: same fingerprints (dense vs sparse) and correlated latents
+        let spec = ChemblSpec { compounds: 100, proteins: 30, nnz: 2000, ..Default::default() };
+        let d = chembl_synth(&spec);
+        if let (SideInfo::Sparse(s), SideInfo::Dense(dn)) =
+            (&d.fingerprints_sparse, &d.fingerprints_dense)
+        {
+            assert_eq!(&s.to_dense(), dn);
+        } else {
+            panic!("wrong side-info kinds");
+        }
+        // u_true should have signal: nonzero variance across compounds
+        let var = crate::util::variance(d.u_true.data());
+        assert!(var > 0.01);
+    }
+
+    #[test]
+    fn chembl_deterministic() {
+        let spec = ChemblSpec { compounds: 100, proteins: 20, nnz: 1000, ..Default::default() };
+        let a = chembl_synth(&spec);
+        let b = chembl_synth(&spec);
+        assert_eq!(
+            a.activity.triplets().collect::<Vec<_>>(),
+            b.activity.triplets().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn movielens_values_in_range() {
+        let (train, test) = movielens_like(100, 80, 2000, 0.2, 3);
+        assert_eq!(train.nrows(), 100);
+        for (_, _, v) in train.triplets().chain(test.triplets()) {
+            assert!((1.0..=5.0).contains(&v));
+        }
+        let total = train.nnz() + test.nnz();
+        assert!(total >= 1900, "requested 2000 cells, got {total}");
+    }
+
+    #[test]
+    fn gfa_respects_activity_pattern() {
+        let spec = GfaSpec::default();
+        let d = gfa_study_data(&spec);
+        assert_eq!(d.views.len(), 3);
+        assert_eq!(d.views[0].rows(), spec.n);
+        assert_eq!(d.views[1].cols(), 40);
+        // factor 5 is private to view 0: W for views 1,2 must be zero there
+        for v in [1, 2] {
+            let w = &d.w_true[v];
+            for j in 0..w.rows() {
+                assert_eq!(w[(j, 5)], 0.0);
+            }
+        }
+        // and nonzero (generically) in view 0
+        let w0 = &d.w_true[0];
+        assert!((0..w0.rows()).any(|j| w0[(j, 5)] != 0.0));
+    }
+
+    #[test]
+    fn gfa_views_carry_shared_signal() {
+        let d = gfa_study_data(&GfaSpec::default());
+        // X_v should be far from pure noise: ‖X‖ >> noise * sqrt(cells)
+        for x in &d.views {
+            let cells = (x.rows() * x.cols()) as f64;
+            assert!(x.norm() > 2.0 * 0.3 * cells.sqrt());
+        }
+    }
+}

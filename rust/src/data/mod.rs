@@ -1,0 +1,249 @@
+//! Data layer: the three input-matrix kinds of Table 1, side information,
+//! train/test splitting and the synthetic workload generators that stand
+//! in for the paper's datasets (DESIGN.md §4).
+
+pub mod generators;
+
+pub use generators::{chembl_synth, gfa_study_data, movielens_like, ChemblSpec, GfaSpec};
+
+use crate::linalg::Mat;
+use crate::sparse::SparseMatrix;
+
+/// The matrix-to-factor, in the three flavours SMURFF supports
+/// (Table 1, "Input Matrices").
+#[derive(Debug, Clone)]
+pub enum MatrixConfig {
+    /// Sparse, unobserved cells are *unknown* (classic recommender data).
+    SparseUnknown(SparseMatrix),
+    /// Sparse, unobserved cells are *known zeros* (fully-known data in
+    /// sparse storage) — the precision term uses the full VᵀV.
+    SparseFull(SparseMatrix),
+    /// Dense, every cell observed.
+    Dense(Mat),
+}
+
+impl MatrixConfig {
+    pub fn nrows(&self) -> usize {
+        match self {
+            MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m) => m.nrows(),
+            MatrixConfig::Dense(m) => m.rows(),
+        }
+    }
+
+    pub fn ncols(&self) -> usize {
+        match self {
+            MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m) => m.ncols(),
+            MatrixConfig::Dense(m) => m.cols(),
+        }
+    }
+
+    /// Number of *observed* cells (training likelihood terms).
+    pub fn nobs(&self) -> usize {
+        match self {
+            MatrixConfig::SparseUnknown(m) => m.nnz(),
+            MatrixConfig::SparseFull(m) => m.nrows() * m.ncols(),
+            MatrixConfig::Dense(m) => m.rows() * m.cols(),
+        }
+    }
+
+    /// Whether every cell is observed (fully-known data: the per-row
+    /// precision term is the same full Gram VᵀV for all rows).
+    pub fn fully_observed(&self) -> bool {
+        !matches!(self, MatrixConfig::SparseUnknown(_))
+    }
+
+    /// Mean of the observed values.
+    pub fn mean(&self) -> f64 {
+        match self {
+            MatrixConfig::SparseUnknown(m) => m.mean_value(),
+            MatrixConfig::SparseFull(m) => {
+                // zeros count as observations
+                m.mean_value() * m.nnz() as f64 / (m.nrows() * m.ncols()) as f64
+            }
+            MatrixConfig::Dense(m) => crate::util::mean(m.data()),
+        }
+    }
+}
+
+/// Side information for the rows or columns of R (the Macau `F` matrix).
+#[derive(Debug, Clone)]
+pub enum SideInfo {
+    Dense(Mat),
+    Sparse(SparseMatrix),
+}
+
+impl SideInfo {
+    pub fn nrows(&self) -> usize {
+        match self {
+            SideInfo::Dense(m) => m.rows(),
+            SideInfo::Sparse(m) => m.nrows(),
+        }
+    }
+
+    pub fn nfeatures(&self) -> usize {
+        match self {
+            SideInfo::Dense(m) => m.cols(),
+            SideInfo::Sparse(m) => m.ncols(),
+        }
+    }
+
+    /// y = F · x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            SideInfo::Dense(m) => crate::linalg::matvec(m, x),
+            SideInfo::Sparse(m) => m.spmv(x),
+        }
+    }
+
+    /// y = Fᵀ · x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            SideInfo::Dense(m) => crate::linalg::matvec_t(m, x),
+            SideInfo::Sparse(m) => m.spmv_t(x),
+        }
+    }
+
+    /// Row i of F written into a dense scratch buffer.
+    pub fn row_dense(&self, i: usize, out: &mut [f64]) {
+        out.fill(0.0);
+        match self {
+            SideInfo::Dense(m) => out.copy_from_slice(m.row(i)),
+            SideInfo::Sparse(m) => {
+                let (cols, vals) = m.row(i);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    out[c as usize] = v;
+                }
+            }
+        }
+    }
+}
+
+/// Held-out test set: explicit (row, col, value) cells.
+#[derive(Debug, Clone, Default)]
+pub struct TestSet {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl TestSet {
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn from_sparse(m: &SparseMatrix) -> TestSet {
+        let mut t = TestSet::default();
+        for (r, c, v) in m.triplets() {
+            t.rows.push(r);
+            t.cols.push(c);
+            t.vals.push(v);
+        }
+        t
+    }
+}
+
+/// Split a sparse matrix's entries into train / test by Bernoulli(test_frac).
+/// Deterministic in `seed`; the split keeps matrix dimensions.
+pub fn split_train_test(
+    m: &SparseMatrix,
+    test_frac: f64,
+    seed: u64,
+) -> (SparseMatrix, SparseMatrix) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let mut rng = crate::rng::Rng::from_parts(seed, 0x5917);
+    let mut train = Vec::new();
+    let mut test = Vec::new();
+    for (r, c, v) in m.triplets() {
+        if rng.next_f64() < test_frac {
+            test.push((r, c, v));
+        } else {
+            train.push((r, c, v));
+        }
+    }
+    (
+        SparseMatrix::from_triplets(m.nrows(), m.ncols(), train),
+        SparseMatrix::from_triplets(m.nrows(), m.ncols(), test),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_sparse() -> SparseMatrix {
+        SparseMatrix::from_triplets(3, 3, vec![(0, 0, 1.0), (1, 1, 2.0), (2, 2, 3.0), (0, 2, 4.0)])
+    }
+
+    #[test]
+    fn matrix_config_counts() {
+        let s = sample_sparse();
+        assert_eq!(MatrixConfig::SparseUnknown(s.clone()).nobs(), 4);
+        assert_eq!(MatrixConfig::SparseFull(s.clone()).nobs(), 9);
+        assert!(!MatrixConfig::SparseUnknown(s.clone()).fully_observed());
+        assert!(MatrixConfig::SparseFull(s.clone()).fully_observed());
+        let d = Mat::zeros(2, 5);
+        let mc = MatrixConfig::Dense(d);
+        assert_eq!(mc.nobs(), 10);
+        assert_eq!((mc.nrows(), mc.ncols()), (2, 5));
+    }
+
+    #[test]
+    fn mean_semantics_differ_by_kind() {
+        let s = sample_sparse(); // values 1,2,3,4 over 9 cells
+        let unknown_mean = MatrixConfig::SparseUnknown(s.clone()).mean();
+        let full_mean = MatrixConfig::SparseFull(s).mean();
+        assert!((unknown_mean - 2.5).abs() < 1e-12);
+        assert!((full_mean - 10.0 / 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn side_info_dense_sparse_agree() {
+        let d = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 2.0, 3.0, 4.0]);
+        let s = SparseMatrix::from_triplets(
+            3,
+            2,
+            vec![(0, 0, 1.0), (1, 1, 2.0), (2, 0, 3.0), (2, 1, 4.0)],
+        );
+        let sd = SideInfo::Dense(d);
+        let ss = SideInfo::Sparse(s);
+        let x = [1.0, -1.0];
+        assert_eq!(sd.matvec(&x), ss.matvec(&x));
+        let y = [1.0, 2.0, 3.0];
+        assert_eq!(sd.matvec_t(&y), ss.matvec_t(&y));
+        let mut r1 = [0.0; 2];
+        let mut r2 = [0.0; 2];
+        sd.row_dense(2, &mut r1);
+        ss.row_dense(2, &mut r2);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn split_is_deterministic_and_partitions() {
+        let m = crate::data::movielens_like(50, 40, 600, 0.0, 1).0;
+        let (tr1, te1) = split_train_test(&m, 0.25, 9);
+        let (tr2, te2) = split_train_test(&m, 0.25, 9);
+        assert_eq!(tr1.nnz(), tr2.nnz());
+        assert_eq!(te1.nnz(), te2.nnz());
+        assert_eq!(tr1.nnz() + te1.nnz(), m.nnz());
+        // roughly 25%
+        let frac = te1.nnz() as f64 / m.nnz() as f64;
+        assert!((frac - 0.25).abs() < 0.08, "frac {frac}");
+        // different seeds differ
+        let (tr3, _) = split_train_test(&m, 0.25, 10);
+        assert_ne!(
+            tr1.triplets().collect::<Vec<_>>(),
+            tr3.triplets().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn testset_from_sparse() {
+        let t = TestSet::from_sparse(&sample_sparse());
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.rows.len(), t.cols.len());
+    }
+}

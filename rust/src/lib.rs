@@ -1,0 +1,53 @@
+//! # SMURFF-RS — a high-performance framework for Bayesian Matrix Factorization
+//!
+//! Rust + JAX + Pallas reproduction of *SMURFF: a High-Performance Framework
+//! for Matrix Factorization* (Vander Aa et al., 2019).  See `DESIGN.md` for
+//! the full system inventory and experiment index.
+//!
+//! The crate is organised in layers:
+//!
+//! * substrates: [`util`], [`rng`], [`linalg`], [`sparse`]
+//! * framework:  [`data`], [`noise`], [`priors`], [`model`], [`session`]
+//! * runtime:    [`coordinator`] (work-stealing parallel Gibbs),
+//!               [`runtime`] (PJRT/XLA AOT engine), [`distributed`]
+//! * evaluation: [`baselines`] (PyMC3-like, GraphChi-like, GASPI-like),
+//!               [`hwmodel`] (Xeon / Xeon Phi / ARM roofline+cache model),
+//!               [`bench`] (the harness regenerating every paper figure)
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use smurff::prelude::*;
+//!
+//! let (train, test) = smurff::data::movielens_like(500, 400, 20_000, 0.2, 42);
+//! let cfg = SessionConfig { num_latent: 16, burnin: 20, nsamples: 50, ..Default::default() };
+//! let mut session = TrainSession::bmf(train, Some(test), cfg);
+//! let result = session.run();
+//! println!("RMSE = {:.4}", result.rmse);
+//! ```
+
+pub mod util;
+pub mod rng;
+pub mod linalg;
+pub mod sparse;
+pub mod data;
+pub mod noise;
+pub mod priors;
+pub mod model;
+pub mod session;
+pub mod coordinator;
+pub mod runtime;
+pub mod distributed;
+pub mod baselines;
+pub mod hwmodel;
+pub mod bench;
+
+/// Convenient glob-import surface for examples and downstream users.
+pub mod prelude {
+    pub use crate::data::{MatrixConfig, SideInfo};
+    pub use crate::linalg::Mat;
+    pub use crate::noise::NoiseConfig;
+    pub use crate::priors::PriorKind;
+    pub use crate::session::{SessionConfig, TrainResult, TrainSession};
+    pub use crate::sparse::SparseMatrix;
+}

@@ -1,0 +1,227 @@
+//! Cholesky factorization + triangular solves — the O(K³) core of every
+//! row update (`Λ_u = L Lᵀ`, sample `u = Λ⁻¹b + L⁻ᵀ ε`).
+
+use super::Mat;
+
+/// In-place lower Cholesky of an SPD matrix.  Returns Err on a
+/// non-positive pivot (matrix not SPD within round-off).
+pub fn chol_inplace(a: &mut Mat) -> Result<(), &'static str> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    for j in 0..n {
+        // d = a[j][j] - sum_{k<j} L[j][k]^2
+        let mut d = a[(j, j)];
+        for k in 0..j {
+            let l = a[(j, k)];
+            d -= l * l;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return Err("matrix is not positive definite");
+        }
+        let d = d.sqrt();
+        a[(j, j)] = d;
+        let inv = 1.0 / d;
+        for i in j + 1..n {
+            let mut s = a[(i, j)];
+            // dot of the already-computed parts of rows i and j
+            for k in 0..j {
+                s -= a[(i, k)] * a[(j, k)];
+            }
+            a[(i, j)] = s * inv;
+        }
+        // zero the upper triangle as we go so the result is a clean L
+        for i in 0..j {
+            a[(i, j)] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+/// Owned Cholesky factor with solve helpers.
+pub struct Chol {
+    l: Mat,
+}
+
+impl Chol {
+    pub fn new(mut a: Mat) -> Result<Chol, &'static str> {
+        chol_inplace(&mut a)?;
+        Ok(Chol { l: a })
+    }
+
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve (L Lᵀ) x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = tri_solve_lower(&self.l, b);
+        tri_solve_upper_t(&self.l, &y)
+    }
+
+    /// Solve Lᵀ x = b (used for the `L⁻ᵀ ε` sampling step).
+    pub fn solve_lt(&self, b: &[f64]) -> Vec<f64> {
+        tri_solve_upper_t(&self.l, b)
+    }
+
+    /// log det(A) = 2 Σ log L_ii.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Forward substitution: solve L y = b for lower-triangular L.
+pub fn tri_solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let row = l.row(i);
+        let s = super::dot(&row[..i], &y[..i]);
+        y[i] = (b[i] - s) / row[i];
+    }
+    y
+}
+
+/// Backward substitution: solve Lᵀ x = b for lower-triangular L.
+pub fn tri_solve_upper_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        // (L^T)[i][j] = L[j][i] for j > i
+        for j in i + 1..n {
+            s -= l[(j, i)] * x[j];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// One-shot SPD solve: A x = b via Cholesky (A consumed).
+pub fn chol_solve(a: Mat, b: &[f64]) -> Result<Vec<f64>, &'static str> {
+    Ok(Chol::new(a)?.solve(b))
+}
+
+/// Allocation-free forward substitution into `y` (§Perf hot path).
+pub fn tri_solve_lower_into(l: &Mat, b: &[f64], y: &mut [f64]) {
+    let n = l.rows();
+    debug_assert!(b.len() == n && y.len() == n);
+    for i in 0..n {
+        let row = l.row(i);
+        let s = super::dot(&row[..i], &y[..i]);
+        y[i] = (b[i] - s) / row[i];
+    }
+}
+
+/// Allocation-free backward substitution (solve Lᵀ x = b) into `x`.
+pub fn tri_solve_upper_t_into(l: &Mat, b: &[f64], x: &mut [f64]) {
+    let n = l.rows();
+    debug_assert!(b.len() == n && x.len() == n);
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for j in i + 1..n {
+            s -= l[(j, i)] * x[j];
+        }
+        x[i] = s / l[(i, i)];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, syrk, Backend};
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+        let mut a = Mat::zeros(n + 2, n);
+        rng.fill_normal(a.data_mut());
+        let mut s = syrk(&a, Backend::Blocked);
+        for i in 0..n {
+            s[(i, i)] += n as f64;
+        }
+        s
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let mut rng = Rng::new(1);
+        for n in [1, 2, 5, 16, 33] {
+            let a = random_spd(n, &mut rng);
+            let c = Chol::new(a.clone()).unwrap();
+            let rec = gemm(c.l(), &c.l().transpose());
+            assert!(rec.max_abs_diff(&a) < 1e-8, "n={n}");
+            // strictly lower triangular above the diagonal
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(c.l()[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let mut rng = Rng::new(2);
+        let n = 12;
+        let a = random_spd(n, &mut rng);
+        let mut b = vec![0.0; n];
+        rng.fill_normal(&mut b);
+        let x = chol_solve(a.clone(), &b).unwrap();
+        // check A x = b
+        let ax = crate::linalg::matvec(&a, &x);
+        for i in 0..n {
+            assert!((ax[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn triangular_solves_invert() {
+        let mut rng = Rng::new(3);
+        let a = random_spd(9, &mut rng);
+        let c = Chol::new(a).unwrap();
+        let mut b = vec![0.0; 9];
+        rng.fill_normal(&mut b);
+        let y = tri_solve_lower(c.l(), &b);
+        let ly = crate::linalg::matvec(c.l(), &y);
+        for i in 0..9 {
+            assert!((ly[i] - b[i]).abs() < 1e-9);
+        }
+        let x = tri_solve_upper_t(c.l(), &b);
+        let ltx = crate::linalg::matvec(&c.l().transpose(), &x);
+        for i in 0..9 {
+            assert!((ltx[i] - b[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ones() {
+        let mut rng = Rng::new(6);
+        let a = random_spd(11, &mut rng);
+        let c = Chol::new(a).unwrap();
+        let mut b = vec![0.0; 11];
+        rng.fill_normal(&mut b);
+        let mut y = vec![0.0; 11];
+        tri_solve_lower_into(c.l(), &b, &mut y);
+        assert_eq!(y, tri_solve_lower(c.l(), &b));
+        let mut x = vec![0.0; 11];
+        tri_solve_upper_t_into(c.l(), &b, &mut x);
+        assert_eq!(x, tri_solve_upper_t(c.l(), &b));
+    }
+
+    #[test]
+    fn log_det_matches_known() {
+        // diag(4, 9) -> log det = ln 36
+        let a = Mat::from_vec(2, 2, vec![4.0, 0.0, 0.0, 9.0]);
+        let c = Chol::new(a).unwrap();
+        assert!((c.log_det() - 36f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_non_spd() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(Chol::new(a).is_err());
+        let z = Mat::zeros(2, 2);
+        assert!(Chol::new(z).is_err());
+    }
+}

@@ -1,0 +1,291 @@
+//! Matrix products with a runtime backend switch.
+//!
+//! [`Backend::Blocked`] — cache-tiled with a 4×4-ish unrolled microkernel
+//! the compiler autovectorizes: our stand-in for MKL (which dispatches to
+//! the best vector ISA at runtime, making the Conda-generic binary as fast
+//! as a native build — Figure 5's point).
+//! [`Backend::Naive`] — textbook triple loop: our stand-in for a generic
+//! unoptimized BLAS build.  The Figure-5 bench sweeps this axis.
+
+use super::Mat;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which gemm/syrk implementation to use.  Global default + per-call
+/// override — the bench harness flips the global, the library defaults
+/// to Blocked.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Tiled + unrolled (MKL stand-in, "native/dispatching" build).
+    Blocked,
+    /// Textbook loops (generic OpenBLAS stand-in).
+    Naive,
+}
+
+static GLOBAL_BACKEND: AtomicU8 = AtomicU8::new(0);
+
+impl Backend {
+    pub fn set_global(b: Backend) {
+        GLOBAL_BACKEND.store(b as u8, Ordering::Relaxed);
+    }
+
+    pub fn global() -> Backend {
+        if GLOBAL_BACKEND.load(Ordering::Relaxed) == 0 {
+            Backend::Blocked
+        } else {
+            Backend::Naive
+        }
+    }
+}
+
+const TILE: usize = 64;
+
+/// C = A · B  (alloc-free into `c`; `c` is overwritten).
+pub fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat, backend: Backend) {
+    assert_eq!(a.cols(), b.rows(), "gemm inner dim");
+    assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "gemm out shape");
+    c.data_mut().fill(0.0);
+    match backend {
+        Backend::Naive => {
+            // i-k-j order at least keeps B row-contiguous
+            for i in 0..a.rows() {
+                for k in 0..a.cols() {
+                    let aik = a[(i, k)];
+                    let brow = b.row(k);
+                    let crow = c.row_mut(i);
+                    for j in 0..brow.len() {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+        Backend::Blocked => {
+            let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+            for i0 in (0..m).step_by(TILE) {
+                let i1 = (i0 + TILE).min(m);
+                for k0 in (0..kk).step_by(TILE) {
+                    let k1 = (k0 + TILE).min(kk);
+                    for j0 in (0..n).step_by(TILE) {
+                        let j1 = (j0 + TILE).min(n);
+                        for i in i0..i1 {
+                            // 2-way k unroll over the tile; inner j loop
+                            // is contiguous on both B and C -> vectorizes
+                            let mut k = k0;
+                            while k + 1 < k1 {
+                                let aik0 = a[(i, k)];
+                                let aik1 = a[(i, k + 1)];
+                                let (bk0, bk1) = (b.row(k), b.row(k + 1));
+                                let crow = c.row_mut(i);
+                                for j in j0..j1 {
+                                    crow[j] += aik0 * bk0[j] + aik1 * bk1[j];
+                                }
+                                k += 2;
+                            }
+                            if k < k1 {
+                                let aik = a[(i, k)];
+                                let bk = b.row(k);
+                                let crow = c.row_mut(i);
+                                for j in j0..j1 {
+                                    crow[j] += aik * bk[j];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A · B with the global backend.
+pub fn gemm(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_into(a, b, &mut c, Backend::global());
+    c
+}
+
+/// C = A^T · B (A is m×n -> C is n×p).  Tiled over the m reduction.
+pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "gemm_tn inner dim");
+    let (m, n, p) = (a.rows(), a.cols(), b.cols());
+    let mut c = Mat::zeros(n, p);
+    match Backend::global() {
+        Backend::Naive => {
+            for i in 0..n {
+                for j in 0..p {
+                    let mut s = 0.0;
+                    for k in 0..m {
+                        s += a[(k, i)] * b[(k, j)];
+                    }
+                    c[(i, j)] = s;
+                }
+            }
+        }
+        Backend::Blocked => {
+            // rank-1 accumulation over rows of A/B: contiguous everywhere
+            for k in 0..m {
+                let arow = a.row(k);
+                let brow = b.row(k);
+                for i in 0..n {
+                    let aki = arow[i];
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    let crow = c.row_mut(i);
+                    for j in 0..p {
+                        crow[j] += aki * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// y = A · x.
+pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len());
+    (0..a.rows()).map(|i| super::dot(a.row(i), x)).collect()
+}
+
+/// y = A^T · x.
+pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        super::axpy(&mut y, x[i], a.row(i));
+    }
+    y
+}
+
+/// C = A^T · A (n×n symmetric from m×n A), honouring the backend switch.
+pub fn syrk(a: &Mat, backend: Backend) -> Mat {
+    let (m, n) = (a.rows(), a.cols());
+    let mut c = Mat::zeros(n, n);
+    match backend {
+        Backend::Naive => {
+            for i in 0..n {
+                for j in i..n {
+                    let mut s = 0.0;
+                    for k in 0..m {
+                        s += a[(k, i)] * a[(k, j)];
+                    }
+                    c[(i, j)] = s;
+                    c[(j, i)] = s;
+                }
+            }
+        }
+        Backend::Blocked => {
+            for k in 0..m {
+                let row = a.row(k);
+                for i in 0..n {
+                    let aki = row[i];
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    let crow = c.row_mut(i);
+                    for j in i..n {
+                        crow[j] += aki * row[j];
+                    }
+                }
+            }
+            // mirror the upper triangle
+            for i in 0..n {
+                for j in i + 1..n {
+                    c[(j, i)] = c[(i, j)];
+                }
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_mat(r: usize, c: usize, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(r, c);
+        rng.fill_normal(m.data_mut());
+        m
+    }
+
+    fn gemm_ref(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn backends_agree_with_reference() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 13, 9), (70, 65, 67), (128, 64, 130)] {
+            let a = random_mat(m, k, &mut rng);
+            let b = random_mat(k, n, &mut rng);
+            let want = gemm_ref(&a, &b);
+            for backend in [Backend::Naive, Backend::Blocked] {
+                let mut c = Mat::zeros(m, n);
+                gemm_into(&a, &b, &mut c, backend);
+                assert!(c.max_abs_diff(&want) < 1e-9, "{backend:?} {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        for backend in [Backend::Naive, Backend::Blocked] {
+            Backend::set_global(backend);
+            let a = random_mat(23, 7, &mut rng);
+            let b = random_mat(23, 11, &mut rng);
+            let want = gemm_ref(&a.transpose(), &b);
+            let got = gemm_tn(&a, &b);
+            assert!(got.max_abs_diff(&want) < 1e-9);
+        }
+        Backend::set_global(Backend::Blocked);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(matvec(&a, &[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(matvec_t(&a, &[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn syrk_backends_agree() {
+        let mut rng = Rng::new(3);
+        let a = random_mat(31, 12, &mut rng);
+        let want = gemm_ref(&a.transpose(), &a);
+        for backend in [Backend::Naive, Backend::Blocked] {
+            let got = syrk(&a, backend);
+            assert!(got.max_abs_diff(&want) < 1e-9, "{backend:?}");
+            // symmetric
+            assert!(got.max_abs_diff(&got.transpose()) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn global_backend_switch() {
+        Backend::set_global(Backend::Naive);
+        assert_eq!(Backend::global(), Backend::Naive);
+        Backend::set_global(Backend::Blocked);
+        assert_eq!(Backend::global(), Backend::Blocked);
+    }
+
+    #[test]
+    #[should_panic]
+    fn gemm_checks_shapes() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        gemm(&a, &b);
+    }
+}

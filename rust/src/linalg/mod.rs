@@ -1,0 +1,481 @@
+//! Dense linear-algebra substrate (the paper's Eigen + MKL/OpenBLAS role).
+//!
+//! Everything SMURFF's Gibbs sweeps need: a row-major `f64` matrix type,
+//! matrix/vector products, symmetric rank-k updates, Cholesky,
+//! triangular solves and a conjugate-gradient solver (for the Macau link
+//! matrix).  `gemm` and `syrk` have two implementations behind a runtime
+//! [`Backend`] switch — `Blocked` (tiled, unroll-friendly; stands in for
+//! MKL) and `Naive` (textbook loops; stands in for a generic OpenBLAS
+//! build) — which is the axis swept by the Figure-5 benchmark.
+
+mod cg;
+mod chol;
+mod gemm;
+
+pub use cg::cg_solve;
+pub use chol::{
+    chol_inplace, chol_solve, tri_solve_lower, tri_solve_lower_into, tri_solve_upper_t,
+    tri_solve_upper_t_into, Chol,
+};
+pub use gemm::{gemm, gemm_into, gemm_tn, matvec, matvec_t, syrk, Backend};
+
+use std::fmt;
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Identity scaled by `v`.
+    pub fn eye_scaled(n: usize, v: f64) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Two disjoint mutable rows (for swap-free updates).
+    pub fn rows_mut2(&mut self, i: usize, j: usize) -> (&mut [f64], &mut [f64]) {
+        assert_ne!(i, j);
+        let c = self.cols;
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        let (a, b) = self.data.split_at_mut(hi * c);
+        let ra = &mut a[lo * c..(lo + 1) * c];
+        let rb = &mut b[..c];
+        if i < j {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// self += s * other
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += s * b;
+        }
+    }
+
+    /// Symmetrize in place: (A + A^T) / 2.  Used after accumulating
+    /// near-symmetric sums to kill round-off drift before Cholesky.
+    pub fn symmetrize(&mut self) {
+        assert_eq!(self.rows, self.cols);
+        for i in 0..self.rows {
+            for j in i + 1..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for i in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for j in 0..self.cols.min(8) {
+                write!(f, "{:10.4} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation — autovectorizes well and is more
+    // accurate than a single serial accumulator.
+    let mut s = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        s[0] += a[i] * b[i];
+        s[1] += a[i + 1] * b[i + 1];
+        s[2] += a[i + 2] * b[i + 2];
+        s[3] += a[i + 3] * b[i + 3];
+    }
+    let mut rest = 0.0;
+    for i in chunks * 4..a.len() {
+        rest += a[i] * b[i];
+    }
+    s[0] + s[1] + s[2] + s[3] + rest
+}
+
+/// y += s * x
+#[inline]
+pub fn axpy(y: &mut [f64], s: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += s * xi;
+    }
+}
+
+/// Outer-product accumulate: A += s * x x^T (A is n×n row-major).
+///
+/// This is the innermost operation of the Gibbs sweep (called once per
+/// observed rating), so it honours the [`Backend`] switch: `Blocked`
+/// runs the contiguous row-sliced form the autovectorizer likes (the
+/// MKL-like path of Figure 5); `Naive` runs the strided element-indexed
+/// form a generic unblocked BLAS build degrades to.
+#[inline]
+pub fn ger_sym(a: &mut Mat, s: f64, x: &[f64]) {
+    match Backend::global() {
+        Backend::Blocked => ger_sym_blocked(a, s, x),
+        Backend::Naive => ger_sym_naive(a, s, x),
+    }
+}
+
+#[inline]
+pub fn ger_sym_blocked(a: &mut Mat, s: f64, x: &[f64]) {
+    let n = x.len();
+    debug_assert_eq!(a.rows(), n);
+    for i in 0..n {
+        let sxi = s * x[i];
+        let row = a.row_mut(i);
+        for j in 0..n {
+            row[j] += sxi * x[j];
+        }
+    }
+}
+
+#[inline]
+pub fn ger_sym_naive(a: &mut Mat, s: f64, x: &[f64]) {
+    let n = x.len();
+    debug_assert_eq!(a.rows(), n);
+    // column-major sweep over a row-major matrix: strided writes, no
+    // vectorizable inner loop — the generic-BLAS cost model
+    for j in 0..n {
+        for i in 0..n {
+            a[(i, j)] += s * x[i] * x[j];
+        }
+    }
+}
+
+/// Upper-triangle-only rank-1 update (BLAS `dsyr`): A[i][j..] += s·x_i·x_j
+/// for j ≥ i.  Half the flops of [`ger_sym`]; callers mirror once at the
+/// end via [`mirror_upper_to_lower`].  This is the §Perf hot-path form
+/// used by the row sampler (EXPERIMENTS.md §Perf, change #1).
+#[inline]
+pub fn ger_sym_upper(a: &mut Mat, s: f64, x: &[f64]) {
+    let n = x.len();
+    debug_assert_eq!(a.rows(), n);
+    match Backend::global() {
+        Backend::Blocked => {
+            for i in 0..n {
+                let sxi = s * x[i];
+                let row = &mut a.row_mut(i)[i..];
+                for (rj, &xj) in row.iter_mut().zip(&x[i..]) {
+                    *rj += sxi * xj;
+                }
+            }
+        }
+        Backend::Naive => {
+            for j in 0..n {
+                for i in 0..=j {
+                    a[(i, j)] += s * x[i] * x[j];
+                }
+            }
+        }
+    }
+}
+
+/// Copy the upper triangle onto the lower one (finishing a sequence of
+/// [`ger_sym_upper`] updates so Cholesky can read the lower triangle).
+#[inline]
+pub fn mirror_upper_to_lower(a: &mut Mat) {
+    let n = a.rows();
+    debug_assert_eq!(n, a.cols());
+    for i in 0..n {
+        for j in i + 1..n {
+            a[(j, i)] = a[(i, j)];
+        }
+    }
+}
+
+/// Fused Gram + RHS accumulation over a *gathered* batch of rows — the
+/// Rust analogue of the Layer-1 Pallas kernel and the §Perf hot-path
+/// form (EXPERIMENTS.md §Perf, change #2):
+///
+///   A(upper) += α Σ_t x_t x_tᵀ,     rhs += α Σ_t v_t x_t
+///
+/// `xs` holds `vals.len()` rows of length k contiguously.  Rank-4
+/// blocking keeps 4 source rows live per sweep of A, quadrupling the
+/// arithmetic per cache line of A and lengthening the inner loop the
+/// autovectorizer sees.  Callers mirror A afterwards.
+pub fn gram_rhs_rank4(a: &mut Mat, rhs: &mut [f64], alpha: f64, xs: &[f64], vals: &[f64]) {
+    let k = rhs.len();
+    debug_assert_eq!(a.rows(), k);
+    debug_assert_eq!(xs.len(), vals.len() * k);
+    let nnz = vals.len();
+    let mut t = 0;
+    while t + 4 <= nnz {
+        let x0 = &xs[t * k..(t + 1) * k];
+        let x1 = &xs[(t + 1) * k..(t + 2) * k];
+        let x2 = &xs[(t + 2) * k..(t + 3) * k];
+        let x3 = &xs[(t + 3) * k..(t + 4) * k];
+        for i in 0..k {
+            let a0 = alpha * x0[i];
+            let a1 = alpha * x1[i];
+            let a2 = alpha * x2[i];
+            let a3 = alpha * x3[i];
+            let row = &mut a.row_mut(i)[i..];
+            for (j, rj) in row.iter_mut().enumerate() {
+                *rj += a0 * x0[i + j] + a1 * x1[i + j] + a2 * x2[i + j] + a3 * x3[i + j];
+            }
+        }
+        let (v0, v1, v2, v3) = (vals[t], vals[t + 1], vals[t + 2], vals[t + 3]);
+        for j in 0..k {
+            rhs[j] += alpha * (v0 * x0[j] + v1 * x1[j] + v2 * x2[j] + v3 * x3[j]);
+        }
+        t += 4;
+    }
+    while t < nnz {
+        let x = &xs[t * k..(t + 1) * k];
+        ger_sym_upper(a, alpha, x);
+        axpy(rhs, alpha * vals[t], x);
+        t += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_rows() {
+        let mut m = Mat::zeros(2, 3);
+        m[(1, 2)] = 5.0;
+        assert_eq!(m.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = m.transpose();
+        assert_eq!(t[(0, 1)], 4.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn eye_and_scale() {
+        let mut m = Mat::eye(3);
+        m.scale(2.0);
+        assert_eq!(m, Mat::eye_scaled(3, 2.0));
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..13).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..13).map(|i| (13 - i) as f64).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ger_sym_accumulates_outer_product() {
+        let mut a = Mat::zeros(3, 3);
+        ger_sym(&mut a, 2.0, &[1.0, 2.0, 3.0]);
+        assert_eq!(a[(0, 0)], 2.0);
+        assert_eq!(a[(1, 2)], 12.0);
+        assert_eq!(a[(2, 1)], 12.0);
+    }
+
+    #[test]
+    fn ger_sym_upper_plus_mirror_equals_full() {
+        let x: Vec<f64> = (0..7).map(|i| (i as f64) * 0.4 - 1.0).collect();
+        for backend in [Backend::Blocked, Backend::Naive] {
+            Backend::set_global(backend);
+            let mut full = Mat::eye(7);
+            ger_sym(&mut full, 2.3, &x);
+            ger_sym(&mut full, -0.7, &x);
+            let mut upper = Mat::eye(7);
+            ger_sym_upper(&mut upper, 2.3, &x);
+            ger_sym_upper(&mut upper, -0.7, &x);
+            mirror_upper_to_lower(&mut upper);
+            assert!(full.max_abs_diff(&upper) < 1e-14, "{backend:?}");
+        }
+        Backend::set_global(Backend::Blocked);
+    }
+
+    #[test]
+    fn gram_rhs_rank4_matches_rank1() {
+        let mut rng = crate::rng::Rng::new(9);
+        for (k, nnz) in [(4usize, 1usize), (8, 3), (16, 4), (16, 11), (5, 17)] {
+            let mut xs = vec![0.0; nnz * k];
+            let mut vals = vec![0.0; nnz];
+            rng.fill_normal(&mut xs);
+            rng.fill_normal(&mut vals);
+            let alpha = 1.7;
+            let mut a4 = Mat::eye(k);
+            let mut r4 = vec![0.5; k];
+            gram_rhs_rank4(&mut a4, &mut r4, alpha, &xs, &vals);
+            mirror_upper_to_lower(&mut a4);
+            let mut a1 = Mat::eye(k);
+            let mut r1 = vec![0.5; k];
+            for t in 0..nnz {
+                ger_sym(&mut a1, alpha, &xs[t * k..(t + 1) * k]);
+                axpy(&mut r1, alpha * vals[t], &xs[t * k..(t + 1) * k]);
+            }
+            assert!(a4.max_abs_diff(&a1) < 1e-12, "k={k} nnz={nnz}");
+            for (x, y) in r4.iter().zip(&r1) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn ger_sym_backends_agree() {
+        let x: Vec<f64> = (0..9).map(|i| (i as f64) * 0.3 - 1.0).collect();
+        let mut a = Mat::zeros(9, 9);
+        let mut b = Mat::zeros(9, 9);
+        ger_sym_blocked(&mut a, 1.7, &x);
+        ger_sym_naive(&mut b, 1.7, &x);
+        assert!(a.max_abs_diff(&b) < 1e-14);
+    }
+
+    #[test]
+    fn rows_mut2_disjoint() {
+        let mut m = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let (a, b) = m.rows_mut2(2, 0);
+        a[0] = 50.0;
+        b[1] = 20.0;
+        assert_eq!(m[(2, 0)], 50.0);
+        assert_eq!(m[(0, 1)], 20.0);
+    }
+
+    #[test]
+    fn symmetrize_kills_drift() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 2.0 + 1e-9, 2.0 - 1e-9, 3.0]);
+        m.symmetrize();
+        assert_eq!(m[(0, 1)], m[(1, 0)]);
+        assert!((m[(0, 1)] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_works() {
+        let mut y = vec![1.0, 1.0];
+        axpy(&mut y, 2.0, &[3.0, 4.0]);
+        assert_eq!(y, vec![7.0, 9.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_shape_checked() {
+        Mat::from_vec(2, 2, vec![1.0]);
+    }
+}

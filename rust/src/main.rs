@@ -1,0 +1,300 @@
+//! `smurff` — the command-line launcher (Layer 3 leader entrypoint).
+//!
+//! Subcommands:
+//!   train     train a factorization from a config file or flags
+//!   generate  write a synthetic dataset (ChEMBL-like / MovieLens-like)
+//!   bench     regenerate a paper table/figure (fig3|fig4|fig5|gfa|macau|table1)
+//!   info      show the AOT artifact manifest the runtime would use
+//!
+//! Examples:
+//!   smurff train --synthetic chembl --k 16 --burnin 50 --nsamples 100
+//!   smurff train --config session.toml
+//!   smurff train --data train.mtx --test test.mtx --engine xla
+//!   smurff bench fig3 --quick
+
+use smurff::data::{MatrixConfig, TestSet};
+use smurff::noise::NoiseConfig;
+use smurff::session::{SessionBuilder, SessionConfig};
+use smurff::sparse::io::{read_matrix_market, write_matrix_market};
+use smurff::util::cli::Args;
+use smurff::util::config::Config;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "usage: smurff <train|generate|bench|info> [flags]
+  train    --config <toml> | --data <mtx> [--test <mtx>] | --synthetic <chembl|movielens>
+           [--k N] [--burnin N] [--nsamples N] [--seed N] [--threads N]
+           [--engine native|xla] [--noise fixed|adaptive|probit] [--alpha F]
+           [--prior normal|macau] [--side <mtx>] [--checkpoint <dir>] [--verbose]
+  generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
+           [--side-out <mtx>] [--seed N]
+  bench    <fig3|fig4|fig5|gfa|macau|table1|all> [--quick] [--out <json>]
+  info     [--artifacts <dir>]";
+
+fn main() {
+    smurff::util::logger::init_from_env();
+    let code = match run() {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env(&["verbose", "quick", "help"]).map_err(anyhow::Error::msg)?;
+    if args.get_bool("help") || args.positionals.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positionals[0].as_str() {
+        "train" => cmd_train(&args),
+        "generate" => cmd_generate(&args),
+        "bench" => cmd_bench(&args),
+        "info" => cmd_info(&args),
+        other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn session_config_from_args(args: &Args) -> anyhow::Result<SessionConfig> {
+    Ok(SessionConfig {
+        num_latent: args.get_usize("k", 16).map_err(anyhow::Error::msg)?,
+        burnin: args.get_usize("burnin", 20).map_err(anyhow::Error::msg)?,
+        nsamples: args.get_usize("nsamples", 80).map_err(anyhow::Error::msg)?,
+        seed: args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64,
+        threads: args.get_usize("threads", 0).map_err(anyhow::Error::msg)?,
+        verbose: args.get_bool("verbose"),
+        ..Default::default()
+    })
+}
+
+/// Load a session config file ([session]/[noise]/[prior] sections).
+fn session_config_from_file(path: &Path) -> anyhow::Result<(SessionConfig, Config)> {
+    let cfg = Config::load(path)?;
+    cfg.check_known(&[
+        "session.num_latent",
+        "session.burnin",
+        "session.nsamples",
+        "session.seed",
+        "session.threads",
+        "session.verbose",
+        "session.engine",
+        "data.train",
+        "data.test",
+        "data.side",
+        "noise.kind",
+        "noise.precision",
+        "noise.sn_init",
+        "noise.sn_max",
+        "prior.rows",
+    ])?;
+    let sc = SessionConfig {
+        num_latent: cfg.get_usize("session.num_latent", 16),
+        burnin: cfg.get_usize("session.burnin", 20),
+        nsamples: cfg.get_usize("session.nsamples", 80),
+        seed: cfg.get_usize("session.seed", 42) as u64,
+        threads: cfg.get_usize("session.threads", 0),
+        verbose: cfg.get_bool("session.verbose", false),
+        ..Default::default()
+    };
+    Ok((sc, cfg))
+}
+
+fn noise_from(kind: &str, alpha: f64) -> anyhow::Result<NoiseConfig> {
+    Ok(match kind {
+        "fixed" => NoiseConfig::Fixed { precision: alpha },
+        "adaptive" => NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+        "probit" => NoiseConfig::Probit,
+        other => anyhow::bail!("unknown noise kind '{other}'"),
+    })
+}
+
+fn attach_engine(b: SessionBuilder, engine: &str) -> anyhow::Result<SessionBuilder> {
+    match engine {
+        "native" | "" => Ok(b),
+        "xla" => {
+            let dir = smurff::runtime::default_artifacts_dir();
+            let e = smurff::runtime::XlaEngine::new(&dir)?;
+            Ok(b.engine(Box::new(e)))
+        }
+        other => anyhow::bail!("unknown engine '{other}' (native|xla)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let (cfg, train, test, side) = if let Some(cfile) = args.get("config") {
+        let (cfg, file) = session_config_from_file(Path::new(cfile))?;
+        let train_path = file.get_str("data.train", "");
+        if train_path.is_empty() {
+            anyhow::bail!("config must set data.train");
+        }
+        let train = read_matrix_market(Path::new(&train_path))?;
+        let test = {
+            let p = file.get_str("data.test", "");
+            if p.is_empty() { None } else { Some(read_matrix_market(Path::new(&p))?) }
+        };
+        let side = {
+            let p = file.get_str("data.side", "");
+            if p.is_empty() {
+                None
+            } else {
+                Some(smurff::data::SideInfo::Sparse(read_matrix_market(Path::new(&p))?))
+            }
+        };
+        (cfg, train, test, side)
+    } else if let Some(kind) = args.get("synthetic") {
+        let cfg = session_config_from_args(args)?;
+        match kind {
+            "chembl" => {
+                let spec = smurff::data::ChemblSpec {
+                    compounds: args.get_usize("rows", 2000).map_err(anyhow::Error::msg)?,
+                    proteins: args.get_usize("cols", 200).map_err(anyhow::Error::msg)?,
+                    nnz: args.get_usize("nnz", 40_000).map_err(anyhow::Error::msg)?,
+                    seed: cfg.seed,
+                    ..Default::default()
+                };
+                let d = smurff::data::chembl_synth(&spec);
+                let (train, test) = smurff::data::split_train_test(&d.activity, 0.2, cfg.seed);
+                (cfg, train, Some(test), Some(d.fingerprints_sparse))
+            }
+            "movielens" => {
+                let (train, test) = smurff::data::movielens_like(
+                    args.get_usize("rows", 1000).map_err(anyhow::Error::msg)?,
+                    args.get_usize("cols", 800).map_err(anyhow::Error::msg)?,
+                    args.get_usize("nnz", 50_000).map_err(anyhow::Error::msg)?,
+                    0.2,
+                    cfg.seed,
+                );
+                (cfg, train, Some(test), None)
+            }
+            other => anyhow::bail!("unknown synthetic dataset '{other}'"),
+        }
+    } else if let Some(data) = args.get("data") {
+        let cfg = session_config_from_args(args)?;
+        let train = read_matrix_market(Path::new(data))?;
+        let test = args.get("test").map(|p| read_matrix_market(Path::new(p))).transpose()?;
+        let side = args
+            .get("side")
+            .map(|p| anyhow::Ok(smurff::data::SideInfo::Sparse(read_matrix_market(Path::new(p))?)))
+            .transpose()?;
+        (cfg, train, test, side)
+    } else {
+        anyhow::bail!("train needs --config, --data or --synthetic\n{USAGE}");
+    };
+
+    let noise = noise_from(
+        &args.get_str("noise", "adaptive"),
+        args.get_f64("alpha", 5.0).map_err(anyhow::Error::msg)?,
+    )?;
+    let prior = args.get_str("prior", if side.is_some() { "macau" } else { "normal" });
+    let mut builder = SessionBuilder::new(cfg.clone()).add_view(
+        MatrixConfig::SparseUnknown(train),
+        noise,
+        test.map(|t| TestSet::from_sparse(&t)),
+    );
+    builder = match (prior.as_str(), side) {
+        ("macau", Some(side)) => builder.row_macau(side),
+        ("macau", None) => anyhow::bail!("--prior macau needs --side <mtx>"),
+        ("normal", _) => builder,
+        (other, _) => anyhow::bail!("unknown prior '{other}'"),
+    };
+    builder = attach_engine(builder, &args.get_str("engine", "native"))?;
+
+    let mut session = builder.build();
+    println!(
+        "training: K={} burnin={} nsamples={} threads={} engine={} prior={}",
+        cfg.num_latent,
+        cfg.burnin,
+        cfg.nsamples,
+        session.nthreads(),
+        session.engine_name(),
+        session.row_prior.describe(),
+    );
+    let result = session.run();
+    if let Some(dir) = args.get("checkpoint") {
+        session.checkpoint(Path::new(dir))?;
+        println!("checkpoint written to {dir}");
+    }
+    println!(
+        "done: {} iterations in {:.2}s ({:.1} ms/iter)",
+        result.iterations,
+        result.train_seconds,
+        1e3 * result.train_seconds / result.iterations.max(1) as f64
+    );
+    if result.rmse.is_finite() {
+        println!("test RMSE = {:.4}", result.rmse);
+    }
+    if result.auc.is_finite() {
+        println!("test AUC  = {:.4}", result.auc);
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let out = PathBuf::from(
+        args.get("out").ok_or_else(|| anyhow::anyhow!("generate needs --out <mtx>"))?,
+    );
+    let seed = args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64;
+    match args.get_str("kind", "movielens").as_str() {
+        "chembl" => {
+            let spec = smurff::data::ChemblSpec {
+                compounds: args.get_usize("rows", 2000).map_err(anyhow::Error::msg)?,
+                proteins: args.get_usize("cols", 200).map_err(anyhow::Error::msg)?,
+                nnz: args.get_usize("nnz", 40_000).map_err(anyhow::Error::msg)?,
+                seed,
+                ..Default::default()
+            };
+            let d = smurff::data::chembl_synth(&spec);
+            write_matrix_market(&d.activity, &out)?;
+            println!("wrote {} ({} x {}, {} nnz)", out.display(), d.activity.nrows(), d.activity.ncols(), d.activity.nnz());
+            if let Some(side_out) = args.get("side-out") {
+                if let smurff::data::SideInfo::Sparse(fp) = &d.fingerprints_sparse {
+                    write_matrix_market(fp, Path::new(side_out))?;
+                    println!("wrote side info {side_out} ({} bits/compound avg)", fp.nnz() / fp.nrows());
+                }
+            }
+        }
+        "movielens" => {
+            let (train, _) = smurff::data::movielens_like(
+                args.get_usize("rows", 1000).map_err(anyhow::Error::msg)?,
+                args.get_usize("cols", 800).map_err(anyhow::Error::msg)?,
+                args.get_usize("nnz", 50_000).map_err(anyhow::Error::msg)?,
+                0.0,
+                seed,
+            );
+            write_matrix_market(&train, &out)?;
+            println!("wrote {} ({} x {}, {} nnz)", out.display(), train.nrows(), train.ncols(), train.nnz());
+        }
+        other => anyhow::bail!("unknown kind '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positionals
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow::anyhow!("bench needs a figure name\n{USAGE}"))?;
+    let quick = args.get_bool("quick");
+    let report = smurff::bench::run_by_name(which, quick)?;
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, report.to_json().to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(smurff::runtime::default_artifacts_dir);
+    let manifest = smurff::runtime::Manifest::load(&dir.join("manifest.json"))?;
+    println!("artifacts in {} ({} entries):", dir.display(), manifest.artifacts.len());
+    for a in &manifest.artifacts {
+        println!("  {:45} K={:3} B={:3} D={:3}  {}", a.name, a.k, a.b, a.d, a.file);
+    }
+    Ok(())
+}

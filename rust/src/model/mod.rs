@@ -1,0 +1,179 @@
+//! Model state & evaluation: latent-matrix initialisation, posterior
+//! prediction aggregation and the RMSE / AUC metrics SMURFF reports.
+
+use crate::data::TestSet;
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Initialise a latent matrix with N(0, init_std²) entries.
+pub fn init_latents(nrows: usize, k: usize, init_std: f64, rng: &mut Rng) -> Mat {
+    let mut m = Mat::zeros(nrows, k);
+    rng.fill_normal(m.data_mut());
+    m.scale(init_std);
+    m
+}
+
+/// Running aggregation of posterior predictive samples at the test cells
+/// (SMURFF predicts with the average of per-sample predictions).
+#[derive(Debug, Clone)]
+pub struct PredictionAggregator {
+    sum: Vec<f64>,
+    sum_sq: Vec<f64>,
+    nsamples: usize,
+}
+
+impl PredictionAggregator {
+    pub fn new(ncells: usize) -> PredictionAggregator {
+        PredictionAggregator { sum: vec![0.0; ncells], sum_sq: vec![0.0; ncells], nsamples: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sum.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sum.is_empty()
+    }
+
+    pub fn nsamples(&self) -> usize {
+        self.nsamples
+    }
+
+    /// Add one posterior sample's predictions.
+    pub fn add_sample(&mut self, preds: &[f64]) {
+        assert_eq!(preds.len(), self.sum.len());
+        for (i, p) in preds.iter().enumerate() {
+            self.sum[i] += p;
+            self.sum_sq[i] += p * p;
+        }
+        self.nsamples += 1;
+    }
+
+    /// Posterior-mean predictions.
+    pub fn mean(&self) -> Vec<f64> {
+        let n = self.nsamples.max(1) as f64;
+        self.sum.iter().map(|s| s / n).collect()
+    }
+
+    /// Per-cell posterior predictive variance (0 before 2 samples).
+    pub fn variance(&self) -> Vec<f64> {
+        if self.nsamples < 2 {
+            return vec![0.0; self.sum.len()];
+        }
+        let n = self.nsamples as f64;
+        self.sum
+            .iter()
+            .zip(&self.sum_sq)
+            .map(|(s, ss)| ((ss - s * s / n) / (n - 1.0)).max(0.0))
+            .collect()
+    }
+}
+
+/// Predict the test cells from one (U, V) sample:  pred = u_r · v_c.
+pub fn predict_cells(u: &Mat, v: &Mat, test: &TestSet) -> Vec<f64> {
+    test.rows
+        .iter()
+        .zip(&test.cols)
+        .map(|(&r, &c)| crate::linalg::dot(u.row(r as usize), v.row(c as usize)))
+        .collect()
+}
+
+/// Root-mean-square error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return f64::NAN;
+    }
+    let sse: f64 = pred.iter().zip(truth).map(|(p, t)| (p - t) * (p - t)).sum();
+    (sse / pred.len() as f64).sqrt()
+}
+
+/// Area under the ROC curve for binary labels (±1 or 0/1) — used with
+/// probit noise.  Ties get the midrank treatment.
+pub fn auc(scores: &[f64], labels: &[f64]) -> f64 {
+    assert_eq!(scores.len(), labels.len());
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap());
+    let npos = labels.iter().filter(|&&l| l > 0.0).count();
+    let nneg = labels.len() - npos;
+    if npos == 0 || nneg == 0 {
+        return f64::NAN;
+    }
+    // midranks over the sorted scores
+    let mut rank_sum_pos = 0.0;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let midrank = (i + j) as f64 / 2.0 + 1.0;
+        for &t in &idx[i..=j] {
+            if labels[t] > 0.0 {
+                rank_sum_pos += midrank;
+            }
+        }
+        i = j + 1;
+    }
+    (rank_sum_pos - npos as f64 * (npos as f64 + 1.0) / 2.0) / (npos as f64 * nneg as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_latents_scale() {
+        let mut rng = Rng::new(61);
+        let m = init_latents(1000, 8, 0.3, &mut rng);
+        let var = crate::util::variance(m.data());
+        assert!((var - 0.09).abs() < 0.01, "var {var}");
+    }
+
+    #[test]
+    fn aggregator_mean_and_variance() {
+        let mut a = PredictionAggregator::new(2);
+        a.add_sample(&[1.0, 10.0]);
+        a.add_sample(&[3.0, 10.0]);
+        assert_eq!(a.nsamples(), 2);
+        assert_eq!(a.mean(), vec![2.0, 10.0]);
+        let v = a.variance();
+        assert!((v[0] - 2.0).abs() < 1e-12);
+        assert_eq!(v[1], 0.0);
+    }
+
+    #[test]
+    fn rmse_known_value() {
+        assert!((rmse(&[1.0, 2.0], &[1.0, 4.0]) - 2f64.sqrt()).abs() < 1e-12);
+        assert!(rmse(&[], &[]).is_nan());
+    }
+
+    #[test]
+    fn predict_cells_dots_rows() {
+        let u = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 2.0]);
+        let v = Mat::from_vec(2, 2, vec![3.0, 4.0, 5.0, 6.0]);
+        let t = TestSet { rows: vec![0, 1], cols: vec![0, 1], vals: vec![0.0, 0.0] };
+        assert_eq!(predict_cells(&u, &v, &t), vec![3.0, 12.0]);
+    }
+
+    #[test]
+    fn auc_perfect_and_random() {
+        let labels = [1.0, 1.0, -1.0, -1.0];
+        assert_eq!(auc(&[0.9, 0.8, 0.2, 0.1], &labels), 1.0);
+        assert_eq!(auc(&[0.1, 0.2, 0.8, 0.9], &labels), 0.0);
+        assert!((auc(&[0.5, 0.5, 0.5, 0.5], &labels) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_with_ties_midrank() {
+        // one tie crossing classes: AUC = 0.5 * (1/1) ... compute by hand:
+        // scores: pos=[0.7, 0.5], neg=[0.5]; pairs: (0.7 vs 0.5)=1, (0.5 vs 0.5)=0.5
+        let got = auc(&[0.7, 0.5, 0.5], &[1.0, 1.0, -1.0]);
+        assert!((got - 0.75).abs() < 1e-12, "{got}");
+    }
+
+    #[test]
+    fn auc_degenerate_is_nan() {
+        assert!(auc(&[0.5, 0.7], &[1.0, 1.0]).is_nan());
+    }
+}

@@ -1,0 +1,164 @@
+//! Noise models (Table 1, "Noise Model"): fixed-precision Gaussian,
+//! adaptive-precision Gaussian (precision resampled from its Gamma
+//! conditional each iteration) and probit noise for binary data
+//! (truncated-normal data augmentation, Albert & Chib 1993).
+
+use crate::rng::Rng;
+
+/// User-facing noise configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NoiseConfig {
+    /// Gaussian with fixed precision α.
+    Fixed { precision: f64 },
+    /// Gaussian with precision resampled from Gamma(shape0 + n/2,
+    /// rate0 + SSE/2), capped at `sn_max` × the signal precision.
+    Adaptive { sn_init: f64, sn_max: f64 },
+    /// Probit link for ±1 data via truncated-normal augmentation.
+    Probit,
+}
+
+impl Default for NoiseConfig {
+    fn default() -> Self {
+        NoiseConfig::Fixed { precision: 5.0 }
+    }
+}
+
+/// Runtime state of a noise model for one data view.
+#[derive(Debug, Clone)]
+pub enum NoiseModel {
+    Fixed { alpha: f64 },
+    Adaptive { alpha: f64, sn_max: f64, var_total: f64 },
+    Probit,
+}
+
+impl NoiseModel {
+    pub fn new(cfg: &NoiseConfig, data_variance: f64) -> NoiseModel {
+        match *cfg {
+            NoiseConfig::Fixed { precision } => NoiseModel::Fixed { alpha: precision },
+            NoiseConfig::Adaptive { sn_init, sn_max } => NoiseModel::Adaptive {
+                // α = signal-to-noise  / data variance (SMURFF's init rule)
+                alpha: sn_init.max(1e-3) / data_variance.max(1e-12),
+                sn_max,
+                var_total: data_variance,
+            },
+            NoiseConfig::Probit => NoiseModel::Probit,
+        }
+    }
+
+    /// The current likelihood precision used by the row conditionals.
+    pub fn alpha(&self) -> f64 {
+        match self {
+            NoiseModel::Fixed { alpha } => *alpha,
+            NoiseModel::Adaptive { alpha, .. } => *alpha,
+            // augmented probit model has unit precision by construction
+            NoiseModel::Probit => 1.0,
+        }
+    }
+
+    pub fn is_probit(&self) -> bool {
+        matches!(self, NoiseModel::Probit)
+    }
+
+    /// End-of-iteration update.  `sse` is the sum of squared residuals
+    /// over the `nobs` observed cells.  Fixed/probit are no-ops.
+    pub fn update(&mut self, sse: f64, nobs: usize, rng: &mut Rng) {
+        if let NoiseModel::Adaptive { alpha, sn_max, var_total } = self {
+            // conjugate Gamma posterior with a weak Gamma(2, 2/precision0) prior
+            let prior_shape = 2.0;
+            let prior_rate = 2.0 * *var_total; // rate = shape/mean, mean = 1/var
+            let shape = prior_shape + 0.5 * nobs as f64;
+            let rate = prior_rate + 0.5 * sse;
+            // Gamma(shape, scale = 1/rate)
+            let a = rng.gamma(shape, 1.0 / rate);
+            let cap = *sn_max / var_total.max(1e-12);
+            *alpha = a.min(cap).max(1e-6);
+        }
+    }
+
+    /// Probit augmentation: sample the latent z given the prediction m
+    /// and the binary label (+1 / -1 by sign of the stored value).
+    pub fn augment_probit(pred: f64, label: f64, rng: &mut Rng) -> f64 {
+        if label > 0.0 {
+            pred + rng.truncated_normal_lower(-pred)
+        } else {
+            pred + rng.truncated_normal_upper(-pred)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_alpha_is_constant() {
+        let mut m = NoiseModel::new(&NoiseConfig::Fixed { precision: 3.0 }, 1.0);
+        assert_eq!(m.alpha(), 3.0);
+        let mut rng = Rng::new(0);
+        m.update(100.0, 50, &mut rng);
+        assert_eq!(m.alpha(), 3.0);
+    }
+
+    #[test]
+    fn adaptive_tracks_residuals() {
+        // With a huge SSE the precision must come out small; with a tiny
+        // SSE it must grow (up to the cap).
+        let mut rng = Rng::new(1);
+        let mut hi = NoiseModel::new(&NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 100.0 }, 1.0);
+        let mut lo = hi.clone();
+        hi.update(10_000.0, 1000, &mut rng); // noisy fit -> small alpha
+        lo.update(1.0, 1000, &mut rng); // tight fit -> large alpha
+        assert!(hi.alpha() < 1.0, "hi {}", hi.alpha());
+        assert!(lo.alpha() > 10.0, "lo {}", lo.alpha());
+    }
+
+    #[test]
+    fn adaptive_respects_cap() {
+        let mut rng = Rng::new(2);
+        let mut m = NoiseModel::new(&NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 }, 2.0);
+        m.update(1e-9, 10_000, &mut rng);
+        assert!(m.alpha() <= 10.0 / 2.0 + 1e-9, "alpha {}", m.alpha());
+    }
+
+    #[test]
+    fn adaptive_posterior_mean_is_reasonable() {
+        // SSE = nobs * sigma^2 with sigma^2 = 0.25 -> alpha ≈ 4
+        let mut rng = Rng::new(3);
+        let mut acc = 0.0;
+        let n = 500;
+        for _ in 0..n {
+            let mut m =
+                NoiseModel::new(&NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 1e6 }, 1.0);
+            m.update(0.25 * 10_000.0, 10_000, &mut rng);
+            acc += m.alpha();
+        }
+        let mean = acc / n as f64;
+        assert!((mean - 4.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn probit_alpha_is_one_and_augmentation_respects_sign() {
+        let m = NoiseModel::new(&NoiseConfig::Probit, 1.0);
+        assert_eq!(m.alpha(), 1.0);
+        assert!(m.is_probit());
+        let mut rng = Rng::new(4);
+        for _ in 0..500 {
+            let z = NoiseModel::augment_probit(0.3, 1.0, &mut rng);
+            assert!(z >= 0.0);
+            let z = NoiseModel::augment_probit(0.3, -1.0, &mut rng);
+            assert!(z <= 0.0);
+        }
+    }
+
+    #[test]
+    fn probit_augmentation_mean_shifts_with_prediction() {
+        // For strongly positive prediction and +1 label, z ≈ pred
+        let mut rng = Rng::new(5);
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| NoiseModel::augment_probit(2.5, 1.0, &mut rng))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 2.52).abs() < 0.05, "mean {mean}"); // E[TN(2.5,1,>0)] ≈ 2.52
+    }
+}

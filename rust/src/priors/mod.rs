@@ -1,0 +1,142 @@
+//! Prior distributions over the latent factors (Table 1, "Prior
+//! Distribution" + "Side Information").  Each side (rows / columns, or
+//! each GFA view's loading matrix) owns one [`Prior`]:
+//!
+//! * [`NormalPrior`] — multivariate Normal with a Normal–Wishart
+//!   hyperprior (the BMF prior, Salakhutdinov & Mnih 2008)
+//! * [`MacauPrior`] — NormalPrior + side information through a sampled
+//!   link matrix β (Simm et al. 2017)
+//! * [`SpikeAndSlabPrior`] — Bernoulli–Gaussian with per-component ARD
+//!   precision and inclusion probability (GFA, Virtanen et al. 2012)
+//!
+//! Normal and Macau expose an *MVN row conditional* (`mvn_spec`) that the
+//! coordinator runs through the blocked engines (native or XLA);
+//! spike-and-slab supplies its own per-row component-wise sampler
+//! (`sample_row_custom`).
+
+mod macau;
+mod normal;
+mod spike_and_slab;
+
+pub use macau::MacauPrior;
+pub use normal::NormalPrior;
+pub use spike_and_slab::SpikeAndSlabPrior;
+
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+/// Which prior to attach to a side — mirrors Table 1's rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriorKind {
+    Normal,
+    Macau,
+    SpikeAndSlab,
+}
+
+/// Per-row prior means for the MVN conditional.
+pub enum MeanSpec<'a> {
+    /// same mean vector for every row (Normal prior)
+    Shared(&'a [f64]),
+    /// row i uses `mat.row(i)` (Macau: μ + βᵀ f_i)
+    PerRow(&'a Mat),
+}
+
+impl MeanSpec<'_> {
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        match self {
+            MeanSpec::Shared(m) => m,
+            MeanSpec::PerRow(m) => m.row(i),
+        }
+    }
+}
+
+/// The MVN row-conditional parameters exposed by Normal-family priors.
+pub struct MvnSpec<'a> {
+    /// K×K prior precision Λ₀ (this iteration's Normal–Wishart draw)
+    pub lambda0: &'a Mat,
+    pub means: MeanSpec<'a>,
+}
+
+/// One observed entry of a row, as seen by custom row samplers.
+pub struct RowObs<'a> {
+    /// indices into the *other* side's latent matrix
+    pub idx: &'a [u32],
+    /// observed values (already noise-augmented if probit)
+    pub vals: &'a [f64],
+}
+
+/// A prior over one latent matrix (one side of one view).
+pub trait Prior: Send + Sync {
+    fn kind(&self) -> PriorKind;
+
+    /// Human-readable description for session logs.
+    fn describe(&self) -> String;
+
+    /// Sample hyper-parameters from their conditional given the current
+    /// latents.  Called once per Gibbs iteration, before the row sweep.
+    fn update_hyper(&mut self, latents: &Mat, rng: &mut Rng);
+
+    /// MVN conditional parameters, if this prior's row update is the
+    /// standard Gaussian one (Normal, Macau).  `None` => custom sampler.
+    fn mvn_spec(&self) -> Option<MvnSpec<'_>>;
+
+    /// Custom row conditional (spike-and-slab).  `other` is the opposite
+    /// side's latent matrix; `alpha` the noise precision; `out` the row
+    /// to overwrite.  Only called when `mvn_spec()` is `None`.
+    fn sample_row_custom(
+        &self,
+        _row: usize,
+        _obs: RowObs<'_>,
+        _other: &Mat,
+        _alpha: f64,
+        _rng: &mut Rng,
+        _out: &mut [f64],
+    ) {
+        unreachable!("prior {:?} has no custom row sampler", self.kind());
+    }
+
+    /// Called after the side's latents were resampled (Macau: resample β
+    /// and refresh per-row means; spike-and-slab: no-op).
+    fn post_latents(&mut self, latents: &Mat, rng: &mut Rng);
+}
+
+/// Construct a prior by kind with default hyper-hyper-parameters.
+pub fn make_prior(kind: PriorKind, nrows: usize, k: usize) -> Box<dyn Prior> {
+    match kind {
+        PriorKind::Normal => Box::new(NormalPrior::new(k)),
+        PriorKind::SpikeAndSlab => Box::new(SpikeAndSlabPrior::new(nrows, k)),
+        PriorKind::Macau => panic!("MacauPrior needs side information; use MacauPrior::new"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn make_prior_dispatch() {
+        let p = make_prior(PriorKind::Normal, 10, 4);
+        assert_eq!(p.kind(), PriorKind::Normal);
+        assert!(p.mvn_spec().is_some());
+        let p = make_prior(PriorKind::SpikeAndSlab, 10, 4);
+        assert_eq!(p.kind(), PriorKind::SpikeAndSlab);
+        assert!(p.mvn_spec().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn macau_needs_side_info() {
+        make_prior(PriorKind::Macau, 10, 4);
+    }
+
+    #[test]
+    fn mean_spec_row_access() {
+        let shared = vec![1.0, 2.0];
+        let spec = MeanSpec::Shared(&shared);
+        assert_eq!(spec.row(5), &[1.0, 2.0]);
+        let mat = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let spec = MeanSpec::PerRow(&mat);
+        assert_eq!(spec.row(1), &[3.0, 4.0]);
+    }
+}

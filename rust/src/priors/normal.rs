@@ -1,0 +1,200 @@
+//! Multivariate-Normal prior with Normal–Wishart hyperprior — the BMF
+//! prior of Salakhutdinov & Mnih (2008, eq. 14).
+//!
+//! Row model: u_i ~ N(μ, Λ⁻¹) with
+//!   μ | Λ ~ N(μ₀, (b₀Λ)⁻¹),   Λ ~ Wishart(W₀, ν₀).
+//! `update_hyper` draws (μ, Λ) from the conjugate posterior given the
+//! current latents.
+
+use super::{MeanSpec, MvnSpec, Prior, PriorKind};
+use crate::linalg::{chol_solve, ger_sym, Mat};
+use crate::rng::Rng;
+
+pub struct NormalPrior {
+    k: usize,
+    // hyper-hyper parameters
+    mu0: Vec<f64>,
+    b0: f64,
+    nu0: f64,
+    w0_inv: Mat,
+    // current hyper sample
+    pub mu: Vec<f64>,
+    pub lambda: Mat,
+}
+
+impl NormalPrior {
+    pub fn new(k: usize) -> NormalPrior {
+        NormalPrior {
+            k,
+            mu0: vec![0.0; k],
+            b0: 2.0,
+            nu0: k as f64,
+            w0_inv: Mat::eye(k),
+            mu: vec![0.0; k],
+            lambda: Mat::eye(k),
+        }
+    }
+
+    pub fn num_latent(&self) -> usize {
+        self.k
+    }
+
+    /// The Normal–Wishart conditional update given latent rows, computed
+    /// from (N, Σx, Σxxᵀ) so Macau can reuse it on residual latents.
+    pub fn update_from_stats(&mut self, n: usize, sum: &[f64], sumsq: &Mat, rng: &mut Rng) {
+        let k = self.k;
+        let nf = n as f64;
+        let xbar: Vec<f64> = sum.iter().map(|s| s / nf.max(1.0)).collect();
+        // scatter S = Σ x xᵀ - N x̄ x̄ᵀ
+        let mut s = sumsq.clone();
+        ger_sym(&mut s, -nf, &xbar);
+
+        let b_n = self.b0 + nf;
+        let nu_n = self.nu0 + nf;
+        let mut mu_n = vec![0.0; k];
+        for i in 0..k {
+            mu_n[i] = (self.b0 * self.mu0[i] + nf * xbar[i]) / b_n;
+        }
+        // W_N⁻¹ = W₀⁻¹ + S + (b₀ N / b_N)(x̄-μ₀)(x̄-μ₀)ᵀ
+        let mut wn_inv = self.w0_inv.clone();
+        wn_inv.add_assign(&s);
+        let diff: Vec<f64> = xbar.iter().zip(&self.mu0).map(|(a, b)| a - b).collect();
+        ger_sym(&mut wn_inv, self.b0 * nf / b_n, &diff);
+        wn_inv.symmetrize();
+
+        // invert W_N⁻¹ column by column (K is small)
+        let mut wn = Mat::zeros(k, k);
+        for j in 0..k {
+            let mut e = vec![0.0; k];
+            e[j] = 1.0;
+            let col = chol_solve(wn_inv.clone(), &e).expect("W_N must be SPD");
+            for i in 0..k {
+                wn[(i, j)] = col[i];
+            }
+        }
+        wn.symmetrize();
+
+        self.lambda = rng.wishart(&wn, nu_n);
+        // μ ~ N(μ_N, (b_N Λ)⁻¹)
+        let mut cov = Mat::zeros(k, k);
+        for j in 0..k {
+            let mut e = vec![0.0; k];
+            e[j] = 1.0;
+            let col = chol_solve(self.lambda.clone(), &e).expect("Λ must be SPD");
+            for i in 0..k {
+                cov[(i, j)] = col[i] / b_n;
+            }
+        }
+        cov.symmetrize();
+        self.mu = rng.mvn(&mu_n, &cov);
+    }
+}
+
+impl Prior for NormalPrior {
+    fn kind(&self) -> PriorKind {
+        PriorKind::Normal
+    }
+
+    fn describe(&self) -> String {
+        format!("Normal(K={}, Normal-Wishart hyperprior)", self.k)
+    }
+
+    fn update_hyper(&mut self, latents: &Mat, rng: &mut Rng) {
+        let k = self.k;
+        assert_eq!(latents.cols(), k);
+        let n = latents.rows();
+        let mut sum = vec![0.0; k];
+        let mut sumsq = Mat::zeros(k, k);
+        for i in 0..n {
+            let row = latents.row(i);
+            crate::linalg::axpy(&mut sum, 1.0, row);
+            ger_sym(&mut sumsq, 1.0, row);
+        }
+        self.update_from_stats(n, &sum, &sumsq, rng);
+    }
+
+    fn mvn_spec(&self) -> Option<MvnSpec<'_>> {
+        Some(MvnSpec { lambda0: &self.lambda, means: MeanSpec::Shared(&self.mu) })
+    }
+
+    fn post_latents(&mut self, _latents: &Mat, _rng: &mut Rng) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Generate latents from a known N(mean, cov) and check the sampled
+    /// hyper-parameters concentrate near the truth.
+    #[test]
+    fn recovers_hyper_parameters() {
+        let k = 3;
+        let n = 5000;
+        let mut rng = Rng::new(31);
+        let true_mu = [1.0, -0.5, 2.0];
+        let true_cov = Mat::from_vec(3, 3, vec![0.5, 0.1, 0.0, 0.1, 0.3, 0.05, 0.0, 0.05, 0.4]);
+        let mut lat = Mat::zeros(n, k);
+        for i in 0..n {
+            let x = rng.mvn(&true_mu, &true_cov);
+            lat.row_mut(i).copy_from_slice(&x);
+        }
+        let mut prior = NormalPrior::new(k);
+        // average several hyper draws
+        let mut mu_acc = vec![0.0; k];
+        let draws = 50;
+        for _ in 0..draws {
+            prior.update_hyper(&lat, &mut rng);
+            for i in 0..k {
+                mu_acc[i] += prior.mu[i];
+            }
+        }
+        for i in 0..k {
+            let m = mu_acc[i] / draws as f64;
+            assert!((m - true_mu[i]).abs() < 0.05, "mu[{i}] {m} vs {}", true_mu[i]);
+        }
+        // Λ ≈ cov⁻¹: check Λ · cov ≈ I on the last draw
+        let prod = crate::linalg::gemm(&prior.lambda, &true_cov);
+        for i in 0..k {
+            assert!((prod[(i, i)] - 1.0).abs() < 0.35, "diag {}", prod[(i, i)]);
+        }
+    }
+
+    #[test]
+    fn hyper_draws_vary_but_stay_spd() {
+        let mut rng = Rng::new(32);
+        let mut lat = Mat::zeros(50, 4);
+        rng.fill_normal(lat.data_mut());
+        let mut prior = NormalPrior::new(4);
+        let mut last = Mat::zeros(4, 4);
+        for _ in 0..10 {
+            prior.update_hyper(&lat, &mut rng);
+            assert!(crate::linalg::Chol::new(prior.lambda.clone()).is_ok());
+            assert_ne!(prior.lambda, last, "draws should differ");
+            last = prior.lambda.clone();
+        }
+    }
+
+    #[test]
+    fn mvn_spec_exposes_current_hyper() {
+        let mut rng = Rng::new(33);
+        let mut lat = Mat::zeros(20, 2);
+        rng.fill_normal(lat.data_mut());
+        let mut prior = NormalPrior::new(2);
+        prior.update_hyper(&lat, &mut rng);
+        let spec = prior.mvn_spec().unwrap();
+        assert_eq!(spec.lambda0.rows(), 2);
+        assert_eq!(spec.means.row(7).len(), 2);
+    }
+
+    #[test]
+    fn small_n_does_not_explode() {
+        // hyper update with a single row must stay finite (the b0/nu0
+        // regularization carries it)
+        let mut rng = Rng::new(34);
+        let lat = Mat::from_vec(1, 2, vec![0.5, -0.5]);
+        let mut prior = NormalPrior::new(2);
+        prior.update_hyper(&lat, &mut rng);
+        assert!(prior.mu.iter().all(|m| m.is_finite()));
+        assert!(prior.lambda.data().iter().all(|v| v.is_finite()));
+    }
+}

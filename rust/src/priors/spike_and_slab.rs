@@ -1,0 +1,218 @@
+//! Spike-and-slab prior (GFA, Virtanen et al. 2012; Bunte et al. 2015).
+//!
+//! Element model:  v_jk = s_jk · w_jk,
+//!   s_jk ~ Bernoulli(π_k),  w_jk ~ N(0, τ_k⁻¹),
+//! with per-component ARD precision τ_k and inclusion probability π_k —
+//! this is what lets GFA switch whole factors off per view, separating
+//! shared from view-private structure.
+//!
+//! The row conditional is component-wise Gibbs (each v_jk integrates the
+//! other components through the residual), so this prior supplies
+//! `sample_row_custom` instead of an MVN spec.
+
+use super::{MvnSpec, Prior, PriorKind, RowObs};
+use crate::linalg::Mat;
+use crate::rng::Rng;
+
+pub struct SpikeAndSlabPrior {
+    k: usize,
+    /// ARD precision per component
+    pub tau: Vec<f64>,
+    /// inclusion probability per component
+    pub pi: Vec<f64>,
+    // Gamma(a_tau, b_tau) prior on τ, Beta(a_pi, b_pi) on π
+    a_tau: f64,
+    b_tau: f64,
+    a_pi: f64,
+    b_pi: f64,
+}
+
+impl SpikeAndSlabPrior {
+    pub fn new(_nrows: usize, k: usize) -> SpikeAndSlabPrior {
+        SpikeAndSlabPrior {
+            k,
+            tau: vec![1.0; k],
+            pi: vec![0.5; k],
+            a_tau: 1.0,
+            b_tau: 1.0,
+            a_pi: 1.0,
+            b_pi: 1.0,
+        }
+    }
+}
+
+impl Prior for SpikeAndSlabPrior {
+    fn kind(&self) -> PriorKind {
+        PriorKind::SpikeAndSlab
+    }
+
+    fn describe(&self) -> String {
+        let active = self.pi.iter().filter(|&&p| p > 0.05).count();
+        format!("SpikeAndSlab(K={}, ~{} active components)", self.k, active)
+    }
+
+    fn update_hyper(&mut self, latents: &Mat, rng: &mut Rng) {
+        let n = latents.rows();
+        let k = self.k;
+        for kk in 0..k {
+            let mut n_on = 0usize;
+            let mut ssq = 0.0;
+            for j in 0..n {
+                let v = latents[(j, kk)];
+                if v != 0.0 {
+                    n_on += 1;
+                    ssq += v * v;
+                }
+            }
+            // τ_k | w  ~ Gamma(a + n_on/2, b + ssq/2)
+            let shape = self.a_tau + 0.5 * n_on as f64;
+            let rate = self.b_tau + 0.5 * ssq;
+            self.tau[kk] = rng.gamma(shape, 1.0 / rate).clamp(1e-6, 1e8);
+            // π_k | s ~ Beta(a + n_on, b + n - n_on)
+            self.pi[kk] = rng
+                .beta(self.a_pi + n_on as f64, self.b_pi + (n - n_on) as f64)
+                .clamp(1e-6, 1.0 - 1e-6);
+        }
+    }
+
+    fn mvn_spec(&self) -> Option<MvnSpec<'_>> {
+        None // component-wise custom sampler below
+    }
+
+    fn sample_row_custom(
+        &self,
+        _row: usize,
+        obs: RowObs<'_>,
+        other: &Mat,
+        alpha: f64,
+        rng: &mut Rng,
+        out: &mut [f64],
+    ) {
+        let k = self.k;
+        let nnz = obs.idx.len();
+        // residuals r̃_i = r_i - Σ_k v_k u_ik, maintained incrementally
+        let mut resid: Vec<f64> = Vec::with_capacity(nnz);
+        for (t, &i) in obs.idx.iter().enumerate() {
+            let urow = other.row(i as usize);
+            resid.push(obs.vals[t] - crate::linalg::dot(urow, out));
+        }
+        for kk in 0..k {
+            // remove component kk from the residual
+            let v_old = out[kk];
+            let mut s_uu = 0.0;
+            let mut s_ur = 0.0;
+            for (t, &i) in obs.idx.iter().enumerate() {
+                let u = other.row(i as usize)[kk];
+                let r_wo = resid[t] + v_old * u;
+                s_uu += u * u;
+                s_ur += u * r_wo;
+                resid[t] = r_wo; // store the without-k residual for now
+            }
+            let lam = self.tau[kk] + alpha * s_uu;
+            let m = alpha * s_ur / lam;
+            // inclusion log-odds
+            let logit_pi = (self.pi[kk] / (1.0 - self.pi[kk])).ln();
+            let log_odds = logit_pi + 0.5 * (self.tau[kk] / lam).ln() + 0.5 * m * m * lam;
+            let p_on = 1.0 / (1.0 + (-log_odds).exp());
+            let v_new = if rng.bernoulli(p_on) {
+                m + rng.normal() / lam.sqrt()
+            } else {
+                0.0
+            };
+            out[kk] = v_new;
+            if v_new != 0.0 {
+                for (t, &i) in obs.idx.iter().enumerate() {
+                    resid[t] -= v_new * other.row(i as usize)[kk];
+                }
+            }
+        }
+    }
+
+    fn post_latents(&mut self, _latents: &Mat, _rng: &mut Rng) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::priors::Prior;
+
+    /// Build a tiny fully-observed problem where only component 0 carries
+    /// signal; the sampler must keep component 0 on and push the spurious
+    /// components to (near) zero.
+    #[test]
+    fn shuts_off_inactive_components() {
+        let mut rng = Rng::new(51);
+        let (n_other, k) = (200, 4);
+        let mut u = Mat::zeros(n_other, k);
+        rng.fill_normal(u.data_mut());
+        // observations of one row: r_i = 2.0 * u_i0 + tiny noise
+        let idx: Vec<u32> = (0..n_other as u32).collect();
+        let vals: Vec<f64> = (0..n_other)
+            .map(|i| 2.0 * u[(i, 0)] + 0.01 * rng.normal())
+            .collect();
+
+        let mut prior = SpikeAndSlabPrior::new(1, k);
+        let mut row = vec![0.1; k];
+        // iterate row-conditional + hyper a few times on a 1-row "matrix"
+        for _ in 0..30 {
+            let obs = RowObs { idx: &idx, vals: &vals };
+            prior.sample_row_custom(0, obs, &u, 100.0, &mut rng, &mut row);
+            let lat = Mat::from_vec(1, k, row.clone());
+            prior.update_hyper(&lat, &mut rng);
+        }
+        assert!((row[0] - 2.0).abs() < 0.1, "active component {} ≠ 2.0", row[0]);
+        for kk in 1..k {
+            assert!(row[kk].abs() < 0.15, "component {kk} = {} should be ~0", row[kk]);
+        }
+    }
+
+    #[test]
+    fn hyper_updates_track_sparsity() {
+        let mut rng = Rng::new(52);
+        let k = 3;
+        let mut prior = SpikeAndSlabPrior::new(100, k);
+        // latents: component 0 dense & large, component 1 sparse & small, 2 all zero
+        let mut lat = Mat::zeros(100, k);
+        for j in 0..100 {
+            lat[(j, 0)] = 2.0 + 0.1 * rng.normal();
+            if j % 10 == 0 {
+                lat[(j, 1)] = 0.05 * rng.normal();
+            }
+        }
+        let mut pi_acc = [0.0; 3];
+        let mut tau_acc = [0.0; 3];
+        let rounds = 200;
+        for _ in 0..rounds {
+            prior.update_hyper(&lat, &mut rng);
+            for kk in 0..k {
+                pi_acc[kk] += prior.pi[kk];
+                tau_acc[kk] += prior.tau[kk];
+            }
+        }
+        let pi: Vec<f64> = pi_acc.iter().map(|p| p / rounds as f64).collect();
+        assert!(pi[0] > 0.9, "dense component π {}", pi[0]);
+        assert!(pi[1] < 0.25, "sparse component π {}", pi[1]);
+        assert!(pi[2] < 0.05, "empty component π {}", pi[2]);
+        // τ large for tiny weights, small for big weights
+        assert!(tau_acc[1] / rounds as f64 > tau_acc[0] / rounds as f64);
+    }
+
+    #[test]
+    fn no_observations_samples_from_prior() {
+        let mut rng = Rng::new(53);
+        let prior = SpikeAndSlabPrior::new(1, 2);
+        let u = Mat::zeros(0, 2);
+        let mut row = vec![9.0, 9.0];
+        let mut zeros = 0;
+        let n = 2000;
+        for _ in 0..n {
+            prior.sample_row_custom(0, RowObs { idx: &[], vals: &[] }, &u, 1.0, &mut rng, &mut row);
+            if row[0] == 0.0 {
+                zeros += 1;
+            }
+        }
+        // π = 0.5 default: about half the draws are spikes
+        let frac = zeros as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "spike rate {frac}");
+    }
+}

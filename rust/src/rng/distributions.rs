@@ -1,0 +1,237 @@
+//! Scalar samplers on top of the xoshiro engine.
+//!
+//! * standard normal — Box–Muller (polar form), cached pair
+//! * gamma — Marsaglia & Tsang (2000) squeeze, with the Ahrens–Dieter
+//!   boost for shape < 1
+//! * chi-squared — gamma(k/2, 2)
+//! * truncated normal (one-sided lower) — Robert (1995) exponential
+//!   rejection for far tails, naive rejection near the mean
+//!
+//! These are exactly the distributions the SMURFF priors/noise models
+//! consume: Normal–Wishart hyperpriors, adaptive-noise Gamma, probit
+//! data augmentation.
+
+use super::Rng;
+
+impl Rng {
+    /// Standard normal N(0, 1) — polar Box–Muller with caching.
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.take_cached_normal() {
+            return v;
+        }
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let f = (-2.0 * s.ln() / s).sqrt();
+                self.put_cached_normal(v * f);
+                return u * f;
+            }
+        }
+    }
+
+    /// N(mu, sigma^2).
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Fill a slice with iid standard normals.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        for o in out.iter_mut() {
+            *o = self.normal();
+        }
+    }
+
+    /// Gamma(shape, scale) — Marsaglia & Tsang; shape boost for shape < 1.
+    pub fn gamma(&mut self, shape: f64, scale: f64) -> f64 {
+        assert!(shape > 0.0 && scale > 0.0, "gamma needs positive parameters");
+        if shape < 1.0 {
+            // G(a) = G(a+1) * U^(1/a)
+            let u = self.next_f64().max(f64::MIN_POSITIVE);
+            return self.gamma(shape + 1.0, scale) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = 1.0 + c * x;
+            if v <= 0.0 {
+                continue;
+            }
+            let v3 = v * v * v;
+            let u = self.next_f64();
+            // squeeze then full check
+            if u < 1.0 - 0.0331 * x * x * x * x
+                || u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln())
+            {
+                return d * v3 * scale;
+            }
+        }
+    }
+
+    /// Chi-squared with k degrees of freedom.
+    pub fn chi_squared(&mut self, k: f64) -> f64 {
+        self.gamma(0.5 * k, 2.0)
+    }
+
+    /// Exponential(rate).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -(1.0 - self.next_f64()).ln() / rate
+    }
+
+    /// Beta(a, b) via the gamma ratio.
+    pub fn beta(&mut self, a: f64, b: f64) -> f64 {
+        let x = self.gamma(a, 1.0);
+        let y = self.gamma(b, 1.0);
+        x / (x + y)
+    }
+
+    /// Bernoulli(p).
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Standard normal truncated to [lo, +inf) — Robert (1995).
+    /// Used by the probit noise model's data augmentation.
+    pub fn truncated_normal_lower(&mut self, lo: f64) -> f64 {
+        if lo <= 0.0 {
+            // naive rejection is efficient (accept prob >= 0.5)
+            loop {
+                let x = self.normal();
+                if x >= lo {
+                    return x;
+                }
+            }
+        }
+        // exponential proposal with optimal rate
+        let alpha = 0.5 * (lo + (lo * lo + 4.0).sqrt());
+        loop {
+            let z = lo + self.exponential(alpha);
+            let rho = (-(z - alpha) * (z - alpha) / 2.0).exp();
+            if self.next_f64() <= rho {
+                return z;
+            }
+        }
+    }
+
+    /// Standard normal truncated to (-inf, hi].
+    pub fn truncated_normal_upper(&mut self, hi: f64) -> f64 {
+        -self.truncated_normal_lower(-hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1.0);
+        (m, v)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(11);
+        let xs: Vec<f64> = (0..200_000).map(|_| rng.normal()).collect();
+        let (m, v) = moments(&xs);
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((v - 1.0).abs() < 0.02, "var {v}");
+        // tails exist
+        assert!(xs.iter().any(|&x| x > 3.5) && xs.iter().any(|&x| x < -3.5));
+    }
+
+    #[test]
+    fn normal_with_params() {
+        let mut rng = Rng::new(12);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.normal_with(3.0, 0.5)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 3.0).abs() < 0.01);
+        assert!((v - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Rng::new(13);
+        for &(shape, scale) in &[(0.5, 1.0), (1.0, 2.0), (3.0, 0.5), (10.0, 1.5)] {
+            let xs: Vec<f64> = (0..100_000).map(|_| rng.gamma(shape, scale)).collect();
+            let (m, v) = moments(&xs);
+            let want_m = shape * scale;
+            let want_v = shape * scale * scale;
+            assert!((m - want_m).abs() / want_m < 0.03, "gamma({shape},{scale}) mean {m} want {want_m}");
+            assert!((v - want_v).abs() / want_v < 0.1, "gamma({shape},{scale}) var {v} want {want_v}");
+            assert!(xs.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn chi_squared_mean_is_k() {
+        let mut rng = Rng::new(14);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.chi_squared(5.0)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - 5.0).abs() < 0.05);
+        assert!((v - 10.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::new(15);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.exponential(2.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn truncated_normal_respects_bound() {
+        let mut rng = Rng::new(16);
+        for &lo in &[-1.0, 0.0, 0.5, 3.0, 6.0] {
+            for _ in 0..2000 {
+                let x = rng.truncated_normal_lower(lo);
+                assert!(x >= lo, "x {x} < lo {lo}");
+            }
+        }
+        for &hi in &[-3.0, 0.0, 2.0] {
+            for _ in 0..2000 {
+                let x = rng.truncated_normal_upper(hi);
+                assert!(x <= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_normal_far_tail_mean() {
+        // For lo = 4, E[X | X >= lo] ~ lo + 1/lo - ... ≈ 4.226
+        let mut rng = Rng::new(17);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.truncated_normal_lower(4.0)).collect();
+        let (m, _) = moments(&xs);
+        assert!((m - 4.226).abs() < 0.02, "tail mean {m}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn gamma_rejects_bad_params() {
+        Rng::new(0).gamma(-1.0, 1.0);
+    }
+
+    #[test]
+    fn beta_moments() {
+        let mut rng = Rng::new(18);
+        let (a, b) = (2.0, 5.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| rng.beta(a, b)).collect();
+        let (m, v) = moments(&xs);
+        assert!((m - a / (a + b)).abs() < 0.005, "mean {m}");
+        let want_v = a * b / ((a + b) * (a + b) * (a + b + 1.0));
+        assert!((v - want_v).abs() < 0.005, "var {v}");
+        assert!(xs.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Rng::new(19);
+        let hits = (0..100_000).filter(|_| rng.bernoulli(0.3)).count();
+        let rate = hits as f64 / 100_000.0;
+        assert!((rate - 0.3).abs() < 0.01);
+    }
+}

@@ -1,0 +1,184 @@
+//! RNG substrate: xoshiro256++ engine + the samplers SMURFF's Gibbs
+//! sweeps need (normal, gamma, chi-squared, truncated normal,
+//! multivariate normal, Wishart).
+//!
+//! Determinism policy (DESIGN.md §5): every (seed, stream) pair derives an
+//! independent generator via SplitMix64, so each (iteration, side, row)
+//! triple gets its own stream and results are bit-identical regardless of
+//! thread count, schedule or engine.
+
+mod distributions;
+mod wishart;
+
+// distributions & wishart extend `Rng` via inherent impls (no re-exports)
+
+/// xoshiro256++ (Blackman & Vigna).  Fast, 256-bit state, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box-Muller variate
+    cached_normal: Option<f64>,
+}
+
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed a generator from a single u64 (SplitMix64-expanded, per the
+    /// xoshiro authors' recommendation).
+    pub fn new(seed: u64) -> Rng {
+        Rng::from_parts(seed, 0)
+    }
+
+    /// Derive an independent stream: state = SplitMix64(seed ⊕ golden·stream).
+    /// Used to give every (iteration, side, row) its own generator.
+    pub fn from_parts(seed: u64, stream: u64) -> Rng {
+        let mut sm = seed ^ stream.wrapping_mul(0xA24BAED4963EE407);
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = splitmix64(&mut sm);
+        }
+        // the all-zero state is invalid; SplitMix64 cannot produce 4 zeros
+        // from any input, but belt-and-braces:
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Rng { s, cached_normal: None }
+    }
+
+    /// Derive the canonical per-row stream (see DESIGN.md §5).
+    pub fn for_row(seed: u64, iteration: u64, side: u64, row: u64) -> Rng {
+        // mix the triple into a single stream id with distinct odd constants
+        let stream = iteration
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            ^ side.wrapping_mul(0xC2B2AE3D27D4EB4F)
+            ^ row.wrapping_mul(0x165667B19E3779F9);
+        Rng::from_parts(seed, stream)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0].wrapping_add(s[3]).rotate_left(23).wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift; bias negligible for our n << 2^64
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    pub(crate) fn take_cached_normal(&mut self) -> Option<f64> {
+        self.cached_normal.take()
+    }
+
+    pub(crate) fn put_cached_normal(&mut self, v: f64) {
+        self.cached_normal = Some(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Rng::from_parts(42, 0);
+        let mut b = Rng::from_parts(42, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn row_streams_are_independent_of_each_other() {
+        // adjacent rows / iterations / sides must all give distinct streams
+        let r = |it, side, row| Rng::for_row(7, it, side, row).next_u64();
+        let vals = [r(0, 0, 0), r(0, 0, 1), r(0, 1, 0), r(1, 0, 0)];
+        for i in 0..vals.len() {
+            for j in i + 1..vals.len() {
+                assert_ne!(vals[i], vals[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_moments() {
+        let mut rng = Rng::new(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        let mut min: f64 = 1.0;
+        let mut max: f64 = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+            min = min.min(x);
+            max = max.max(x);
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        assert!(min < 0.01 && max > 0.99);
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let i = rng.next_below(10);
+            assert!(i < 10);
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+}

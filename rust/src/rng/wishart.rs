@@ -1,0 +1,154 @@
+//! Matrix-variate samplers: Wishart (Bartlett decomposition) and
+//! multivariate normal — the two draws of the BMF Normal–Wishart
+//! hyper-parameter step (Salakhutdinov & Mnih 2008, eq. 14).
+
+use super::Rng;
+use crate::linalg::{gemm, tri_solve_lower, tri_solve_upper_t, Chol, Mat};
+
+impl Rng {
+    /// Sample W ~ Wishart(scale, dof) via Bartlett: W = L A Aᵀ Lᵀ with
+    /// scale = L Lᵀ, A lower with χ²-distributed diagonal and standard
+    /// normal subdiagonal.  `dof` must be ≥ dimension.
+    pub fn wishart(&mut self, scale: &Mat, dof: f64) -> Mat {
+        let n = scale.rows();
+        assert!(dof >= n as f64, "wishart dof {dof} < dim {n}");
+        let l = Chol::new(scale.clone()).expect("wishart scale must be SPD");
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            a[(i, i)] = self.chi_squared(dof - i as f64).sqrt();
+            for j in 0..i {
+                a[(i, j)] = self.normal();
+            }
+        }
+        let la = gemm(l.l(), &a);
+        let mut w = gemm(&la, &la.transpose());
+        w.symmetrize();
+        w
+    }
+
+    /// Sample x ~ N(mean, cov) by Cholesky of the covariance.
+    pub fn mvn(&mut self, mean: &[f64], cov: &Mat) -> Vec<f64> {
+        let l = Chol::new(cov.clone()).expect("mvn cov must be SPD");
+        let mut z = vec![0.0; mean.len()];
+        self.fill_normal(&mut z);
+        let lz = crate::linalg::matvec(l.l(), &z);
+        mean.iter().zip(lz).map(|(m, v)| m + v).collect()
+    }
+
+    /// Sample x ~ N(Λ⁻¹ b, Λ⁻¹) given the *precision* Λ — the exact form
+    /// of the per-row conditional in the Gibbs sweep.  One Cholesky, three
+    /// triangular solves, no explicit inverse.
+    pub fn mvn_precision(&mut self, lambda: &Mat, b: &[f64]) -> Vec<f64> {
+        let l = Chol::new(lambda.clone()).expect("precision must be SPD");
+        self.mvn_precision_chol(&l, b)
+    }
+
+    /// Same but with the Cholesky already computed (hot-path variant).
+    pub fn mvn_precision_chol(&mut self, l: &Chol, b: &[f64]) -> Vec<f64> {
+        let n = b.len();
+        let y = tri_solve_lower(l.l(), b);
+        let mean = tri_solve_upper_t(l.l(), &y);
+        let mut eps = vec![0.0; n];
+        self.fill_normal(&mut eps);
+        let noise = l.solve_lt(&eps);
+        mean.iter().zip(noise).map(|(m, v)| m + v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wishart_mean_is_dof_times_scale() {
+        let mut rng = Rng::new(21);
+        let scale = Mat::from_vec(2, 2, vec![1.0, 0.3, 0.3, 0.5]);
+        let dof = 7.0;
+        let n = 20_000;
+        let mut acc = Mat::zeros(2, 2);
+        for _ in 0..n {
+            acc.add_assign(&rng.wishart(&scale, dof));
+        }
+        acc.scale(1.0 / n as f64);
+        let mut want = scale.clone();
+        want.scale(dof);
+        assert!(acc.max_abs_diff(&want) < 0.1, "{acc:?} vs {want:?}");
+    }
+
+    #[test]
+    fn wishart_samples_are_spd() {
+        let mut rng = Rng::new(22);
+        let scale = Mat::eye(4);
+        for _ in 0..50 {
+            let w = rng.wishart(&scale, 6.0);
+            assert!(Chol::new(w).is_ok());
+        }
+    }
+
+    #[test]
+    fn mvn_moments() {
+        let mut rng = Rng::new(23);
+        let mean = [1.0, -2.0];
+        let cov = Mat::from_vec(2, 2, vec![2.0, 0.8, 0.8, 1.0]);
+        let n = 100_000;
+        let (mut m0, mut m1, mut c01) = (0.0, 0.0, 0.0);
+        let mut v0 = 0.0;
+        for _ in 0..n {
+            let x = rng.mvn(&mean, &cov);
+            m0 += x[0];
+            m1 += x[1];
+            c01 += (x[0] - 1.0) * (x[1] + 2.0);
+            v0 += (x[0] - 1.0) * (x[0] - 1.0);
+        }
+        let nf = n as f64;
+        assert!((m0 / nf - 1.0).abs() < 0.02);
+        assert!((m1 / nf + 2.0).abs() < 0.02);
+        assert!((c01 / nf - 0.8).abs() < 0.03);
+        assert!((v0 / nf - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn mvn_precision_matches_cov_form() {
+        // precision Λ -> covariance Λ⁻¹; compare sample moments
+        let mut rng = Rng::new(24);
+        let lambda = Mat::from_vec(2, 2, vec![2.0, -0.5, -0.5, 1.0]);
+        let b = [1.0, 0.5];
+        // analytic mean = Λ⁻¹ b
+        let mean = crate::linalg::chol_solve(lambda.clone(), &b).unwrap();
+        let n = 100_000;
+        let mut acc = [0.0, 0.0];
+        for _ in 0..n {
+            let x = rng.mvn_precision(&lambda, &b);
+            acc[0] += x[0];
+            acc[1] += x[1];
+        }
+        assert!((acc[0] / n as f64 - mean[0]).abs() < 0.02);
+        assert!((acc[1] / n as f64 - mean[1]).abs() < 0.02);
+    }
+
+    #[test]
+    fn mvn_precision_covariance_is_inverse_precision() {
+        let mut rng = Rng::new(25);
+        let lambda = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let b = [0.0, 0.0];
+        let n = 100_000;
+        let (mut v00, mut v01, mut v11) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = rng.mvn_precision(&lambda, &b);
+            v00 += x[0] * x[0];
+            v01 += x[0] * x[1];
+            v11 += x[1] * x[1];
+        }
+        let nf = n as f64;
+        // Λ⁻¹ = 1/11 * [[3, -1], [-1, 4]]
+        assert!((v00 / nf - 3.0 / 11.0).abs() < 0.01);
+        assert!((v01 / nf + 1.0 / 11.0).abs() < 0.01);
+        assert!((v11 / nf - 4.0 / 11.0).abs() < 0.01);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wishart_rejects_low_dof() {
+        Rng::new(0).wishart(&Mat::eye(3), 2.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! `artifacts/manifest.json` parsing — the contract between
+//! `python/compile/aot.py` and the Rust runtime.
+
+use crate::util::JsonValue;
+use std::path::Path;
+
+/// One input tensor of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One AOT-compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub entry: String,
+    pub file: String,
+    pub k: usize,
+    pub b: usize,
+    pub d: usize,
+    pub inputs: Vec<InputSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> anyhow::Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        Manifest::parse(&src)
+    }
+
+    pub fn parse(src: &str) -> anyhow::Result<Manifest> {
+        let v = JsonValue::parse(src).map_err(|e| anyhow::anyhow!("manifest json: {e}"))?;
+        let fmt = v.get("format").and_then(|f| f.as_str()).unwrap_or("");
+        if fmt != "hlo-text" {
+            anyhow::bail!("unsupported manifest format '{fmt}' (want hlo-text)");
+        }
+        let arts = v
+            .get("artifacts")
+            .and_then(|a| a.as_array())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing artifacts[]"))?;
+        let mut artifacts = Vec::new();
+        for a in arts {
+            let get_str = |k: &str| -> anyhow::Result<String> {
+                Ok(a.get(k)
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing '{k}'"))?
+                    .to_string())
+            };
+            let get_num = |k: &str| -> anyhow::Result<usize> {
+                a.get(k)
+                    .and_then(|x| x.as_usize())
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing numeric '{k}'"))
+            };
+            let mut inputs = Vec::new();
+            if let Some(ins) = a.get("inputs").and_then(|x| x.as_array()) {
+                for inp in ins {
+                    let name = inp
+                        .get("name")
+                        .and_then(|x| x.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("input missing name"))?
+                        .to_string();
+                    let dtype = inp.get("dtype").and_then(|x| x.as_str()).unwrap_or("f32");
+                    if dtype != "f32" {
+                        anyhow::bail!("input {name}: only f32 supported, got {dtype}");
+                    }
+                    let shape = inp
+                        .get("shape")
+                        .and_then(|x| x.as_array())
+                        .ok_or_else(|| anyhow::anyhow!("input {name} missing shape"))?
+                        .iter()
+                        .map(|s| s.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                        .collect::<anyhow::Result<Vec<usize>>>()?;
+                    inputs.push(InputSpec { name, shape });
+                }
+            }
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                entry: get_str("entry")?,
+                file: get_str("file")?,
+                k: get_num("k")?,
+                b: get_num("b")?,
+                d: get_num("d")?,
+                inputs,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"format":"hlo-text","version":1,"artifacts":[
+      {"name":"gibbs_block_update_k8_b64_d32","entry":"gibbs_block_update",
+       "file":"gibbs_block_update_k8_b64_d32.hlo.txt","k":8,"b":64,"d":32,
+       "inputs":[{"name":"v_sel","shape":[64,32,8],"dtype":"f32"},
+                 {"name":"alpha","shape":[],"dtype":"f32"}]}]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.entry, "gibbs_block_update");
+        assert_eq!((a.k, a.b, a.d), (8, 64, 32));
+        assert_eq!(a.inputs[0].shape, vec![64, 32, 8]);
+        assert_eq!(a.inputs[1].shape, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        assert!(Manifest::parse(r#"{"format":"proto","artifacts":[]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(r#"{"format":"hlo-text"}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_non_f32() {
+        let bad = SAMPLE.replace("\"dtype\":\"f32\"", "\"dtype\":\"f64\"");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = crate::runtime::default_artifacts_dir().join("manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.artifacts.iter().any(|a| a.entry == "gibbs_block_update"));
+            assert!(m.artifacts.iter().any(|a| a.entry == "gram_block"));
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text + manifest.json) and exposes them as a sampling [`Engine`].
+//!
+//! Flow per artifact: `HloModuleProto::from_text_file` → `XlaComputation::
+//! from_proto` → `PjRtClient::cpu().compile` (once, lazily) → `execute`
+//! on the hot path.  Python never runs at inference/training time — the
+//! Rust binary is self-contained once `make artifacts` has been run.
+
+mod manifest;
+mod xla_engine;
+
+pub use manifest::{ArtifactSpec, Manifest};
+pub use xla_engine::XlaEngine;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Lazily-compiled store of PJRT executables, keyed by artifact name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    compiled: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe (PJRT API contract); the
+// wrapper types are opaque pointers into it.  Compilation is guarded by
+// the mutex; execution is internally synchronized by PJRT.
+unsafe impl Send for XlaRuntime {}
+unsafe impl Sync for XlaRuntime {}
+
+impl XlaRuntime {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn load(dir: &Path) -> anyhow::Result<XlaRuntime> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(XlaRuntime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            compiled: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        {
+            let cache = self.compiled.lock().unwrap();
+            if let Some(e) = cache.get(name) {
+                return Ok(e.clone());
+            }
+        }
+        let spec = self
+            .manifest
+            .artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.dir.join(&spec.file);
+        let t = crate::util::Timer::start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        crate::log_debug!("compiled artifact {name} in {:.1} ms", t.elapsed_ms());
+        let exe = std::sync::Arc::new(exe);
+        self.compiled.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pick the gibbs_block_update artifact for latent dim `k` whose
+    /// depth best covers `want_d` (smallest d ≥ want_d, else largest d).
+    pub fn pick_gibbs(&self, k: usize, want_d: usize) -> Option<&ArtifactSpec> {
+        let mut candidates: Vec<&ArtifactSpec> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.entry == "gibbs_block_update" && a.k == k)
+            .collect();
+        candidates.sort_by_key(|a| a.d);
+        candidates
+            .iter()
+            .find(|a| a.d >= want_d)
+            .copied()
+            .or(candidates.last().copied())
+    }
+
+    /// The companion gram/solve artifacts for a (k, b, d) config.
+    pub fn find(&self, entry: &str, k: usize, b: usize, d: usize) -> Option<&ArtifactSpec> {
+        self.manifest
+            .artifacts
+            .iter()
+            .find(|a| a.entry == entry && a.k == k && a.b == b && a.d == d)
+    }
+}
+
+/// Default artifacts directory: $SMURFF_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SMURFF_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn runtime_loads_and_picks() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = XlaRuntime::load(&default_artifacts_dir()).unwrap();
+        assert!(!rt.manifest().artifacts.is_empty());
+        let g = rt.pick_gibbs(16, 20).expect("k=16 artifact in default build matrix");
+        assert!(g.d >= 20 || g.d == 128);
+        assert_eq!(g.b, 64);
+        // unknown k -> None
+        assert!(rt.pick_gibbs(999, 10).is_none());
+    }
+
+    #[test]
+    fn executes_colstats_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = XlaRuntime::load(&default_artifacts_dir()).unwrap();
+        let spec = rt
+            .manifest()
+            .artifacts
+            .iter()
+            .find(|a| a.entry == "colstats_block")
+            .unwrap()
+            .clone();
+        let exe = rt.executable(&spec.name).unwrap();
+        let (b, k) = (spec.b, spec.k);
+        let data: Vec<f32> = (0..b * k).map(|i| (i % 7) as f32 * 0.5).collect();
+        let lit = xla::Literal::vec1(&data).reshape(&[b as i64, k as i64]).unwrap();
+        let out = exe.execute::<xla::Literal>(&[lit]).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap();
+        let (s, ss) = out.to_tuple2().unwrap();
+        let s = s.to_vec::<f32>().unwrap();
+        let ss = ss.to_vec::<f32>().unwrap();
+        assert_eq!(s.len(), k);
+        assert_eq!(ss.len(), k * k);
+        // check one entry: s[0] = sum of column 0
+        let want: f32 = (0..b).map(|i| data[i * k]).sum();
+        assert!((s[0] - want).abs() < 1e-3);
+    }
+}

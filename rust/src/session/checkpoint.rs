@@ -1,0 +1,139 @@
+//! Session checkpointing: save/restore the latent matrices + iteration
+//! counter so long runs survive restarts (SMURFF's save_freq feature).
+
+use crate::linalg::Mat;
+use crate::sparse::io::{read_dbm, write_dbm};
+use crate::util::JsonValue;
+use std::path::{Path, PathBuf};
+
+/// On-disk checkpoint layout: `<dir>/meta.json`, `<dir>/u.dbm`,
+/// `<dir>/v<i>.dbm`.
+pub struct Checkpoint {
+    pub iteration: usize,
+    pub u: Mat,
+    pub vs: Vec<Mat>,
+}
+
+impl Checkpoint {
+    pub fn save(dir: &Path, iteration: usize, u: &Mat, vs: &[&Mat]) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let meta = JsonValue::obj(vec![
+            ("iteration", JsonValue::num(iteration as f64)),
+            ("nviews", JsonValue::num(vs.len() as f64)),
+            ("k", JsonValue::num(u.cols() as f64)),
+        ]);
+        std::fs::write(dir.join("meta.json"), meta.to_string())?;
+        write_dbm(u, &dir.join("u.dbm"))?;
+        for (i, v) in vs.iter().enumerate() {
+            write_dbm(v, &dir.join(format!("v{i}.dbm")))?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Checkpoint> {
+        let meta = JsonValue::parse(&std::fs::read_to_string(dir.join("meta.json"))?)
+            .map_err(|e| anyhow::anyhow!("bad checkpoint meta: {e}"))?;
+        let iteration = meta
+            .get("iteration")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint meta missing iteration"))?;
+        let nviews = meta
+            .get("nviews")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("checkpoint meta missing nviews"))?;
+        let u = read_dbm(&dir.join("u.dbm"))?;
+        let mut vs = Vec::new();
+        for i in 0..nviews {
+            vs.push(read_dbm(&dir.join(format!("v{i}.dbm")))?);
+        }
+        Ok(Checkpoint { iteration, u, vs })
+    }
+
+    /// Apply a loaded checkpoint to a session (shapes must match).
+    pub fn restore_into(self, session: &mut super::TrainSession) -> anyhow::Result<()> {
+        if self.u.rows() != session.u.rows() || self.u.cols() != session.u.cols() {
+            anyhow::bail!("checkpoint U shape mismatch");
+        }
+        if self.vs.len() != session.views.len() {
+            anyhow::bail!("checkpoint view count mismatch");
+        }
+        for (v, view) in self.vs.iter().zip(&session.views) {
+            if v.rows() != view.col_latents.rows() || v.cols() != view.col_latents.cols() {
+                anyhow::bail!("checkpoint V shape mismatch");
+            }
+        }
+        session.u = self.u;
+        for (v, view) in self.vs.into_iter().zip(session.views.iter_mut()) {
+            view.col_latents = v;
+        }
+        // continue from the recorded iteration
+        session.set_iteration(self.iteration);
+        Ok(())
+    }
+}
+
+impl super::TrainSession {
+    pub(super) fn set_iteration(&mut self, it: usize) {
+        self.iteration = it;
+    }
+
+    /// Write the current state as a checkpoint directory.
+    pub fn checkpoint(&self, dir: &Path) -> anyhow::Result<()> {
+        let vs: Vec<&Mat> = self.views.iter().map(|v| &v.col_latents).collect();
+        Checkpoint::save(dir, self.iteration(), &self.u, &vs)
+    }
+}
+
+/// A scratch directory helper for tests/benches.
+#[allow(dead_code)]
+pub fn scratch_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("smurff_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).expect("create scratch dir");
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{SessionConfig, TrainSession};
+
+    #[test]
+    fn checkpoint_round_trip_resumes() {
+        let (train, test) = crate::data::movielens_like(40, 30, 800, 0.2, 21);
+        let cfg = SessionConfig { num_latent: 4, burnin: 2, nsamples: 4, threads: 1, ..Default::default() };
+        let mut s = TrainSession::bmf(train.clone(), Some(test.clone()), cfg.clone());
+        for _ in 0..3 {
+            s.step();
+        }
+        let dir = scratch_dir("ckpt");
+        s.checkpoint(&dir).unwrap();
+
+        let mut s2 = TrainSession::bmf(train, Some(test), cfg);
+        Checkpoint::load(&dir).unwrap().restore_into(&mut s2).unwrap();
+        assert_eq!(s2.iteration(), 3);
+        assert!(s2.u.max_abs_diff(&s.u) == 0.0);
+        assert!(s2.views[0].col_latents.max_abs_diff(&s.views[0].col_latents) == 0.0);
+        // both continue identically (same seed, same iteration, same state)
+        s.step();
+        s2.step();
+        assert!(s2.u.max_abs_diff(&s.u) == 0.0);
+    }
+
+    #[test]
+    fn restore_rejects_shape_mismatch() {
+        let (train, _) = crate::data::movielens_like(20, 15, 200, 0.0, 22);
+        let cfg = SessionConfig { num_latent: 4, threads: 1, ..Default::default() };
+        let s = TrainSession::bmf(train.clone(), None, cfg.clone());
+        let dir = scratch_dir("ckpt_bad");
+        s.checkpoint(&dir).unwrap();
+        let mut cfg2 = cfg;
+        cfg2.num_latent = 8;
+        let mut s2 = TrainSession::bmf(train, None, cfg2);
+        assert!(Checkpoint::load(&dir).unwrap().restore_into(&mut s2).is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+}

@@ -1,0 +1,666 @@
+//! Training sessions: Algorithm 1 of the paper, composed from the
+//! data / prior / noise choices of Table 1.
+//!
+//! A session owns one shared row-factor matrix U and any number of data
+//! *views*, each with its own column-factor matrix, column prior, noise
+//! model and optional test set:
+//!
+//! * BMF    = 1 sparse view, Normal priors both sides, fixed noise
+//! * Macau  = BMF + `MacauPrior` (side information) on a side
+//! * GFA    = several (usually dense) views sharing U, spike-and-slab
+//!            priors on the per-view loadings
+//!
+//! The Gibbs loop per iteration: sample row hyper → resample U (all views
+//! contribute) → per view: sample column hyper → resample Vᵥ → noise
+//! update → (after burn-in) aggregate test predictions.
+
+mod checkpoint;
+
+pub use checkpoint::Checkpoint;
+
+use crate::coordinator::{
+    access_for, sample_side_custom, Engine, MvnSweep, NativeEngine, ThreadPool, ViewSlice,
+};
+use crate::data::{MatrixConfig, SideInfo, TestSet};
+use crate::linalg::Mat;
+use crate::model::{predict_cells, PredictionAggregator};
+use crate::noise::{NoiseConfig, NoiseModel};
+use crate::priors::{MacauPrior, NormalPrior, Prior, PriorKind, SpikeAndSlabPrior};
+use crate::rng::Rng;
+use crate::sparse::SparseMatrix;
+use crate::util::Timer;
+
+/// Session-level configuration (the `[session]` block of config files).
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub num_latent: usize,
+    pub burnin: usize,
+    pub nsamples: usize,
+    pub seed: u64,
+    /// worker lanes (0 = all available cores)
+    pub threads: usize,
+    pub init_std: f64,
+    pub verbose: bool,
+    /// report/checkpoint every n iterations
+    pub report_freq: usize,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            num_latent: 16,
+            burnin: 20,
+            nsamples: 80,
+            seed: 42,
+            threads: 0,
+            init_std: 0.3,
+            verbose: false,
+            report_freq: 10,
+        }
+    }
+}
+
+/// One data view attached to the session.
+pub struct View {
+    pub data: MatrixConfig,
+    pub col_latents: Mat,
+    pub col_prior: Box<dyn Prior>,
+    pub noise: NoiseModel,
+    pub test: Option<TestSet>,
+    pub aggregator: Option<PredictionAggregator>,
+    /// global mean removed from the data (added back at prediction)
+    pub offset: f64,
+}
+
+/// Final result of a run.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    /// posterior-mean test RMSE of the first view with a test set
+    pub rmse: f64,
+    /// AUC when the first tested view is binary/probit (NaN otherwise)
+    pub auc: f64,
+    /// RMSE trajectory (one entry per sampling iteration)
+    pub rmse_history: Vec<f64>,
+    pub iterations: usize,
+    pub train_seconds: f64,
+    /// per-view posterior-mean RMSE
+    pub view_rmse: Vec<f64>,
+}
+
+/// Builder: the composition surface of Table 1.
+pub struct SessionBuilder {
+    cfg: SessionConfig,
+    row_prior: PriorChoice,
+    views: Vec<(MatrixConfig, PriorChoice, NoiseConfig, Option<TestSet>)>,
+    engine: Option<Box<dyn Engine>>,
+    center: bool,
+}
+
+enum PriorChoice {
+    Normal,
+    Macau(SideInfo),
+    SpikeAndSlab,
+}
+
+impl PriorChoice {
+    fn build(&self, nrows: usize, k: usize) -> Box<dyn Prior> {
+        match self {
+            PriorChoice::Normal => Box::new(NormalPrior::new(k)),
+            PriorChoice::Macau(side) => Box::new(MacauPrior::new(k, nrows, side.clone())),
+            PriorChoice::SpikeAndSlab => Box::new(SpikeAndSlabPrior::new(nrows, k)),
+        }
+    }
+}
+
+impl SessionBuilder {
+    pub fn new(cfg: SessionConfig) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            row_prior: PriorChoice::Normal,
+            views: Vec::new(),
+            engine: None,
+            center: true,
+        }
+    }
+
+    pub fn row_prior(mut self, kind: PriorKind) -> Self {
+        self.row_prior = match kind {
+            PriorKind::Normal => PriorChoice::Normal,
+            PriorKind::SpikeAndSlab => PriorChoice::SpikeAndSlab,
+            PriorKind::Macau => panic!("use row_macau(side) for the Macau prior"),
+        };
+        self
+    }
+
+    pub fn row_macau(mut self, side: SideInfo) -> Self {
+        self.row_prior = PriorChoice::Macau(side);
+        self
+    }
+
+    /// Add a data view with a Normal column prior.
+    pub fn add_view(mut self, data: MatrixConfig, noise: NoiseConfig, test: Option<TestSet>) -> Self {
+        self.views.push((data, PriorChoice::Normal, noise, test));
+        self
+    }
+
+    pub fn add_view_sns(
+        mut self,
+        data: MatrixConfig,
+        noise: NoiseConfig,
+        test: Option<TestSet>,
+    ) -> Self {
+        self.views.push((data, PriorChoice::SpikeAndSlab, noise, test));
+        self
+    }
+
+    pub fn add_view_macau(
+        mut self,
+        data: MatrixConfig,
+        col_side: SideInfo,
+        noise: NoiseConfig,
+        test: Option<TestSet>,
+    ) -> Self {
+        self.views.push((data, PriorChoice::Macau(col_side), noise, test));
+        self
+    }
+
+    /// Override the sampling engine (default: [`NativeEngine`]).
+    pub fn engine(mut self, e: Box<dyn Engine>) -> Self {
+        self.engine = Some(e);
+        self
+    }
+
+    /// Disable global-mean centering (probit data is never centered).
+    pub fn no_centering(mut self) -> Self {
+        self.center = false;
+        self
+    }
+
+    pub fn build(self) -> TrainSession {
+        assert!(!self.views.is_empty(), "a session needs at least one data view");
+        let k = self.cfg.num_latent;
+        let nrows = self.views[0].0.nrows();
+        for (d, _, _, _) in &self.views {
+            assert_eq!(d.nrows(), nrows, "all views must share the row dimension");
+        }
+        let mut rng = Rng::from_parts(self.cfg.seed, 0x1A17);
+        let u = crate::model::init_latents(nrows, k, self.cfg.init_std, &mut rng);
+        let row_prior = self.row_prior.build(nrows, k);
+
+        let mut views = Vec::new();
+        for (data, prior_choice, noise_cfg, test) in self.views {
+            let ncols = data.ncols();
+            let probit = noise_cfg == NoiseConfig::Probit;
+            let (data, offset) = if self.center && !probit {
+                center_data(data)
+            } else {
+                (data, 0.0)
+            };
+            let data_var = data_variance(&data);
+            let noise = NoiseModel::new(&noise_cfg, data_var);
+            let col_latents = crate::model::init_latents(ncols, k, self.cfg.init_std, &mut rng);
+            let col_prior = prior_choice.build(ncols, k);
+            let aggregator = test.as_ref().map(|t| PredictionAggregator::new(t.len()));
+            views.push(View { data, col_latents, col_prior, noise, test, aggregator, offset });
+        }
+
+        let threads = if self.cfg.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.cfg.threads
+        };
+        TrainSession {
+            cfg: self.cfg,
+            u,
+            row_prior,
+            views,
+            pool: ThreadPool::new(threads),
+            engine: self.engine.unwrap_or(Box::new(NativeEngine)),
+            iteration: 0,
+        }
+    }
+}
+
+fn center_data(data: MatrixConfig) -> (MatrixConfig, f64) {
+    let mean = data.mean();
+    let centered = match data {
+        MatrixConfig::SparseUnknown(m) => {
+            let (r, c) = (m.nrows(), m.ncols());
+            MatrixConfig::SparseUnknown(SparseMatrix::from_triplets(
+                r,
+                c,
+                m.triplets().map(|(i, j, v)| (i, j, v - mean)),
+            ))
+        }
+        MatrixConfig::SparseFull(m) => {
+            // centering would densify: keep as-is (documented behaviour)
+            return (MatrixConfig::SparseFull(m), 0.0);
+        }
+        MatrixConfig::Dense(mut m) => {
+            for v in m.data_mut().iter_mut() {
+                *v -= mean;
+            }
+            MatrixConfig::Dense(m)
+        }
+    };
+    (centered, mean)
+}
+
+fn data_variance(data: &MatrixConfig) -> f64 {
+    match data {
+        MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m) => {
+            let vals: Vec<f64> = m.triplets().map(|(_, _, v)| v).collect();
+            crate::util::variance(&vals).max(1e-9)
+        }
+        MatrixConfig::Dense(m) => crate::util::variance(m.data()).max(1e-9),
+    }
+}
+
+/// A running Gibbs training session.
+pub struct TrainSession {
+    pub cfg: SessionConfig,
+    pub u: Mat,
+    pub row_prior: Box<dyn Prior>,
+    pub views: Vec<View>,
+    pool: ThreadPool,
+    engine: Box<dyn Engine>,
+    iteration: usize,
+}
+
+impl TrainSession {
+    /// Classic BMF on one sparse matrix (Normal priors, fixed noise).
+    pub fn bmf(train: SparseMatrix, test: Option<SparseMatrix>, cfg: SessionConfig) -> TrainSession {
+        SessionBuilder::new(cfg)
+            .add_view(
+                MatrixConfig::SparseUnknown(train),
+                NoiseConfig::default(),
+                test.map(|t| TestSet::from_sparse(&t)),
+            )
+            .build()
+    }
+
+    /// Macau: BMF + side information on the rows.
+    pub fn macau(
+        train: SparseMatrix,
+        test: Option<SparseMatrix>,
+        row_side: SideInfo,
+        cfg: SessionConfig,
+    ) -> TrainSession {
+        SessionBuilder::new(cfg)
+            .row_macau(row_side)
+            .add_view(
+                MatrixConfig::SparseUnknown(train),
+                NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+                test.map(|t| TestSet::from_sparse(&t)),
+            )
+            .build()
+    }
+
+    /// GFA: several dense views sharing row factors, spike-and-slab
+    /// priors on the per-view loadings, adaptive noise.
+    pub fn gfa(views: Vec<Mat>, cfg: SessionConfig) -> TrainSession {
+        let mut b = SessionBuilder::new(cfg);
+        for v in views {
+            b = b.add_view_sns(
+                MatrixConfig::Dense(v),
+                NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 20.0 },
+                None,
+            );
+        }
+        b.build()
+    }
+
+    pub fn builder(cfg: SessionConfig) -> SessionBuilder {
+        SessionBuilder::new(cfg)
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    pub fn nthreads(&self) -> usize {
+        self.pool.nthreads()
+    }
+
+    pub fn engine_name(&self) -> &'static str {
+        self.engine.name()
+    }
+
+    /// One full Gibbs iteration (Algorithm 1's outer-loop body).
+    pub fn step(&mut self) {
+        let iter = self.iteration as u64;
+        let seed = self.cfg.seed;
+        let mut hyper_rng = Rng::for_row(seed, iter, u64::MAX, 0);
+
+        // ---- row side: hyper + U sweep (all views contribute)
+        self.row_prior.update_hyper(&self.u, &mut hyper_rng);
+        {
+            let views: Vec<ViewSlice<'_>> = self
+                .views
+                .iter()
+                .map(|v| {
+                    let full = v.data.fully_observed() && !v.noise.is_probit();
+                    ViewSlice {
+                        data: access_for(&v.data, true),
+                        other: &v.col_latents,
+                        alpha: v.noise.alpha(),
+                        probit: v.noise.is_probit(),
+                        full_gram: full
+                            .then(|| ViewSlice::full_gram_for(&v.col_latents, v.noise.alpha())),
+                    }
+                })
+                .collect();
+            let spec = self
+                .row_prior
+                .mvn_spec()
+                .expect("row prior must expose an MVN conditional (Normal or Macau)");
+            let sweep = MvnSweep {
+                lambda0: spec.lambda0,
+                means: spec.means,
+                views,
+                seed,
+                iteration: iter,
+                side_id: 0,
+            };
+            self.engine.sample_mvn_side(&sweep, &mut self.u, &self.pool);
+        }
+        self.row_prior.post_latents(&self.u, &mut hyper_rng);
+
+        // ---- column side of every view
+        for (vi, view) in self.views.iter_mut().enumerate() {
+            let side_id = 1 + vi as u64;
+            view.col_prior.update_hyper(&view.col_latents, &mut hyper_rng);
+            let probit = view.noise.is_probit();
+            if probit {
+                assert!(
+                    matches!(view.data, MatrixConfig::SparseUnknown(_)),
+                    "probit noise requires sparse-with-unknowns data"
+                );
+            }
+            match view.col_prior.mvn_spec() {
+                Some(spec) => {
+                    let full = view.data.fully_observed() && !probit;
+                    let slice = ViewSlice {
+                        data: access_for(&view.data, false),
+                        other: &self.u,
+                        alpha: view.noise.alpha(),
+                        probit,
+                        full_gram: full
+                            .then(|| ViewSlice::full_gram_for(&self.u, view.noise.alpha())),
+                    };
+                    let sweep = MvnSweep {
+                        lambda0: spec.lambda0,
+                        means: spec.means,
+                        views: vec![slice],
+                        seed,
+                        iteration: iter,
+                        side_id,
+                    };
+                    self.engine.sample_mvn_side(&sweep, &mut view.col_latents, &self.pool);
+                }
+                None => {
+                    let slice = ViewSlice {
+                        data: access_for(&view.data, false),
+                        other: &self.u,
+                        alpha: view.noise.alpha(),
+                        probit,
+                        full_gram: None,
+                    };
+                    sample_side_custom(
+                        view.col_prior.as_ref(),
+                        &slice,
+                        &mut view.col_latents,
+                        &self.pool,
+                        seed,
+                        iter,
+                        side_id,
+                    );
+                }
+            }
+            view.col_prior.post_latents(&view.col_latents, &mut hyper_rng);
+
+            // ---- noise update (adaptive only does work)
+            if matches!(view.noise, NoiseModel::Adaptive { .. }) {
+                let acc = access_for(&view.data, true);
+                let (sse, nobs) = crate::coordinator::view_sse(&acc, &self.u, &view.col_latents, &self.pool);
+                view.noise.update(sse, nobs, &mut hyper_rng);
+            }
+        }
+
+        // ---- prediction aggregation after burn-in
+        if self.iteration >= self.cfg.burnin {
+            for view in self.views.iter_mut() {
+                if let (Some(test), Some(agg)) = (&view.test, &mut view.aggregator) {
+                    let mut preds = predict_cells(&self.u, &view.col_latents, test);
+                    for p in preds.iter_mut() {
+                        *p += view.offset;
+                    }
+                    agg.add_sample(&preds);
+                }
+            }
+        }
+        self.iteration += 1;
+    }
+
+    /// Posterior-mean RMSE of view `vi` right now (NaN without test data).
+    pub fn view_rmse(&self, vi: usize) -> f64 {
+        match (&self.views[vi].test, &self.views[vi].aggregator) {
+            (Some(test), Some(agg)) if agg.nsamples() > 0 => {
+                crate::model::rmse(&agg.mean(), &test.vals)
+            }
+            _ => f64::NAN,
+        }
+    }
+
+    /// Run burn-in + sampling to completion.
+    pub fn run(&mut self) -> TrainResult {
+        let timer = Timer::start();
+        let total = self.cfg.burnin + self.cfg.nsamples;
+        let mut rmse_history = Vec::new();
+        while self.iteration < total {
+            self.step();
+            if self.iteration > self.cfg.burnin {
+                let r = self.view_rmse(0);
+                if !r.is_nan() {
+                    rmse_history.push(r);
+                }
+            }
+            if self.cfg.verbose && self.iteration % self.cfg.report_freq.max(1) == 0 {
+                let phase = if self.iteration <= self.cfg.burnin { "burnin" } else { "sample" };
+                crate::log_info!(
+                    "iter {:4}/{} [{phase}] rmse={:.4} noise α={:.3}",
+                    self.iteration,
+                    total,
+                    self.view_rmse(0),
+                    self.views[0].noise.alpha()
+                );
+            }
+        }
+        let view_rmse: Vec<f64> = (0..self.views.len()).map(|i| self.view_rmse(i)).collect();
+        let auc = self.view_auc(0);
+        TrainResult {
+            rmse: view_rmse.first().copied().unwrap_or(f64::NAN),
+            auc,
+            rmse_history,
+            iterations: self.iteration,
+            train_seconds: timer.elapsed_s(),
+            view_rmse,
+        }
+    }
+
+    /// AUC of a probit view's posterior-mean scores (NaN if not binary).
+    pub fn view_auc(&self, vi: usize) -> f64 {
+        let view = &self.views[vi];
+        if !view.noise.is_probit() {
+            return f64::NAN;
+        }
+        match (&view.test, &view.aggregator) {
+            (Some(test), Some(agg)) if agg.nsamples() > 0 => {
+                crate::model::auc(&agg.mean(), &test.vals)
+            }
+            _ => f64::NAN,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(k: usize, burnin: usize, nsamples: usize) -> SessionConfig {
+        SessionConfig {
+            num_latent: k,
+            burnin,
+            nsamples,
+            seed: 42,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn bmf_learns_low_rank_structure() {
+        let (train, test) = crate::data::movielens_like(120, 100, 4000, 0.2, 5);
+        // baseline: predict the global mean
+        let mean = train.mean_value();
+        let base_rmse = crate::model::rmse(
+            &vec![mean; test.nnz()],
+            &test.triplets().map(|t| t.2).collect::<Vec<_>>(),
+        );
+        let mut s = TrainSession::bmf(train, Some(test), quick_cfg(8, 8, 25));
+        let r = s.run();
+        assert!(r.rmse.is_finite());
+        assert!(
+            r.rmse < base_rmse,
+            "BMF rmse {} must beat mean-predictor {base_rmse}",
+            r.rmse
+        );
+        assert_eq!(r.iterations, 33);
+    }
+
+    #[test]
+    fn session_is_deterministic() {
+        let (train, test) = crate::data::movielens_like(60, 50, 1500, 0.2, 6);
+        let run = |threads| {
+            let mut cfg = quick_cfg(4, 4, 8);
+            cfg.threads = threads;
+            let mut s = TrainSession::bmf(train.clone(), Some(test.clone()), cfg);
+            s.run().rmse
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    fn adaptive_noise_moves_alpha() {
+        let (train, _) = crate::data::movielens_like(80, 60, 2000, 0.0, 7);
+        let mut s = SessionBuilder::new(quick_cfg(4, 3, 3))
+            .add_view(
+                MatrixConfig::SparseUnknown(train),
+                NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 50.0 },
+                None,
+            )
+            .build();
+        let a0 = s.views[0].noise.alpha();
+        for _ in 0..6 {
+            s.step();
+        }
+        let a1 = s.views[0].noise.alpha();
+        assert_ne!(a0, a1, "adaptive alpha should be resampled");
+        assert!(a1 > 0.0 && a1.is_finite());
+    }
+
+    #[test]
+    fn gfa_session_runs_on_multiple_views() {
+        let d = crate::data::gfa_study_data(&crate::data::GfaSpec {
+            n: 40,
+            view_cols: vec![20, 15],
+            k: 3,
+            activity: vec![
+                vec![true, true],
+                vec![true, false],
+                vec![false, true],
+            ],
+            noise: 0.2,
+            seed: 8,
+        });
+        let mut s = TrainSession::gfa(d.views, quick_cfg(4, 3, 5));
+        let r = s.run();
+        assert_eq!(r.iterations, 8);
+        assert_eq!(s.views.len(), 2);
+        // latents stay finite through SnS updates
+        assert!(s.u.data().iter().all(|x| x.is_finite()));
+        for v in &s.views {
+            assert!(v.col_latents.data().iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn probit_binary_session() {
+        // binary matrix from a low-rank sign structure
+        let mut rng = Rng::new(9);
+        let (n, m, k) = (60, 40, 4);
+        let u = crate::model::init_latents(n, k, 1.0, &mut rng);
+        let v = crate::model::init_latents(m, k, 1.0, &mut rng);
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..m {
+                if rng.next_f64() < 0.4 {
+                    let s = crate::linalg::dot(u.row(i), v.row(j));
+                    trips.push((i as u32, j as u32, if s > 0.0 { 1.0 } else { -1.0 }));
+                }
+            }
+        }
+        let all = SparseMatrix::from_triplets(n, m, trips);
+        let (train, test) = crate::data::split_train_test(&all, 0.2, 10);
+        let mut s = SessionBuilder::new(quick_cfg(4, 5, 15))
+            .add_view(
+                MatrixConfig::SparseUnknown(train),
+                NoiseConfig::Probit,
+                Some(TestSet::from_sparse(&test)),
+            )
+            .build();
+        let r = s.run();
+        assert!(r.auc > 0.75, "probit AUC {} should recover sign structure", r.auc);
+    }
+
+    #[test]
+    fn macau_constructor_wires_side_info() {
+        let d = crate::data::chembl_synth(&crate::data::ChemblSpec {
+            compounds: 80,
+            proteins: 30,
+            nnz: 1500,
+            ..Default::default()
+        });
+        let (train, test) = crate::data::split_train_test(&d.activity, 0.2, 11);
+        let mut s = TrainSession::macau(train, Some(test), d.fingerprints_sparse, quick_cfg(4, 4, 8));
+        assert_eq!(s.row_prior.kind(), PriorKind::Macau);
+        let r = s.run();
+        assert!(r.rmse.is_finite());
+    }
+
+    #[test]
+    #[should_panic]
+    fn views_must_share_rows() {
+        let a = MatrixConfig::Dense(Mat::zeros(10, 5));
+        let b = MatrixConfig::Dense(Mat::zeros(11, 5));
+        SessionBuilder::new(quick_cfg(2, 1, 1))
+            .add_view(a, NoiseConfig::default(), None)
+            .add_view(b, NoiseConfig::default(), None)
+            .build();
+    }
+
+    #[test]
+    fn centering_is_undone_at_prediction() {
+        // constant-value data: predictions must come back near the offset
+        let trips: Vec<(u32, u32, f64)> = (0..50)
+            .flat_map(|i| (0..10).map(move |j| (i as u32, j as u32, 7.0)))
+            .collect();
+        let all = SparseMatrix::from_triplets(50, 10, trips);
+        let (train, test) = crate::data::split_train_test(&all, 0.2, 12);
+        let mut s = TrainSession::bmf(train, Some(test), quick_cfg(2, 3, 10));
+        let r = s.run();
+        assert!(r.rmse < 0.5, "rmse {} on constant data", r.rmse);
+    }
+}

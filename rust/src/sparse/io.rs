@@ -1,0 +1,234 @@
+//! Sparse / dense matrix I/O: MatrixMarket (`.mtx`) text format and a
+//! compact little-endian binary format (`.sbm`, "smurff binary matrix")
+//! used by checkpoints and the GraphChi-like out-of-core baseline's
+//! shard files.
+
+use super::SparseMatrix;
+use crate::linalg::Mat;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write a sparse matrix as MatrixMarket coordinate format (1-based).
+pub fn write_matrix_market(m: &SparseMatrix, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", m.nrows(), m.ncols(), m.nnz())?;
+    for (r, c, v) in m.triplets() {
+        writeln!(w, "{} {} {}", r + 1, c + 1, v)?;
+    }
+    Ok(())
+}
+
+/// Read a MatrixMarket coordinate file (real, general).
+pub fn read_matrix_market(path: &Path) -> anyhow::Result<SparseMatrix> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open {}: {e}", path.display()))?;
+    let mut lines = BufReader::new(f).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty MatrixMarket file"))??;
+    if !header.starts_with("%%MatrixMarket matrix coordinate real") {
+        anyhow::bail!("unsupported MatrixMarket header: {header}");
+    }
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut trips = Vec::new();
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        match dims {
+            None => {
+                let r: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+                let c: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+                let n: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad size line"))?.parse()?;
+                dims = Some((r, c, n));
+                trips.reserve(n);
+            }
+            Some((nr, nc, _)) => {
+                let r: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry"))?.parse()?;
+                let c: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry"))?.parse()?;
+                let v: f64 = it.next().map(|s| s.parse()).transpose()?.unwrap_or(1.0);
+                if r == 0 || c == 0 || r > nr || c > nc {
+                    anyhow::bail!("entry ({r},{c}) out of bounds {nr}x{nc}");
+                }
+                trips.push((r as u32 - 1, c as u32 - 1, v));
+            }
+        }
+    }
+    let (nr, nc, nnz) = dims.ok_or_else(|| anyhow::anyhow!("missing size line"))?;
+    if trips.len() != nnz {
+        anyhow::bail!("expected {nnz} entries, found {}", trips.len());
+    }
+    Ok(SparseMatrix::from_triplets(nr, nc, trips))
+}
+
+const SBM_MAGIC: &[u8; 4] = b"SBM1";
+const DBM_MAGIC: &[u8; 4] = b"DBM1";
+
+/// Write the compact binary sparse format:
+/// magic, nrows u64, ncols u64, nnz u64, then (u32 row, u32 col, f64 val)*.
+pub fn write_sbm(m: &SparseMatrix, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(SBM_MAGIC)?;
+    w.write_all(&(m.nrows() as u64).to_le_bytes())?;
+    w.write_all(&(m.ncols() as u64).to_le_bytes())?;
+    w.write_all(&(m.nnz() as u64).to_le_bytes())?;
+    for (r, c, v) in m.triplets() {
+        w.write_all(&r.to_le_bytes())?;
+        w.write_all(&c.to_le_bytes())?;
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_sbm(path: &Path) -> anyhow::Result<SparseMatrix> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != SBM_MAGIC {
+        anyhow::bail!("{} is not an SBM file", path.display());
+    }
+    let nrows = read_u64(&mut r)? as usize;
+    let ncols = read_u64(&mut r)? as usize;
+    let nnz = read_u64(&mut r)? as usize;
+    let mut trips = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        let row = read_u32(&mut r)?;
+        let col = read_u32(&mut r)?;
+        let val = read_f64(&mut r)?;
+        trips.push((row, col, val));
+    }
+    Ok(SparseMatrix::from_triplets(nrows, ncols, trips))
+}
+
+/// Dense binary matrix: magic, rows u64, cols u64, f64 row-major data.
+pub fn write_dbm(m: &Mat, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(DBM_MAGIC)?;
+    w.write_all(&(m.rows() as u64).to_le_bytes())?;
+    w.write_all(&(m.cols() as u64).to_le_bytes())?;
+    for v in m.data() {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_dbm(path: &Path) -> anyhow::Result<Mat> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != DBM_MAGIC {
+        anyhow::bail!("{} is not a DBM file", path.display());
+    }
+    let rows = read_u64(&mut r)? as usize;
+    let cols = read_u64(&mut r)? as usize;
+    let mut data = vec![0.0f64; rows * cols];
+    for v in data.iter_mut() {
+        *v = read_f64(&mut r)?;
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f64<R: Read>(r: &mut R) -> anyhow::Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("smurff_io_test_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> SparseMatrix {
+        SparseMatrix::from_triplets(
+            4,
+            3,
+            vec![(0, 1, 2.5), (3, 2, -1.25), (1, 0, 1e-8), (2, 2, 1e10)],
+        )
+    }
+
+    #[test]
+    fn matrix_market_round_trip() {
+        let p = tmpdir().join("m.mtx");
+        let m = sample();
+        write_matrix_market(&m, &p).unwrap();
+        let m2 = read_matrix_market(&p).unwrap();
+        assert_eq!(m2.nrows(), 4);
+        assert_eq!(m2.ncols(), 3);
+        assert_eq!(m.triplets().collect::<Vec<_>>(), m2.triplets().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn matrix_market_with_comments() {
+        let p = tmpdir().join("c.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n% a comment\n2 2 1\n1 2 3.5\n",
+        )
+        .unwrap();
+        let m = read_matrix_market(&p).unwrap();
+        assert_eq!(m.get(0, 1), Some(3.5));
+    }
+
+    #[test]
+    fn matrix_market_rejects_bad() {
+        let p = tmpdir().join("bad.mtx");
+        std::fs::write(&p, "%%MatrixMarket matrix array real general\n2 2\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n").unwrap();
+        assert!(read_matrix_market(&p).is_err());
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n").unwrap();
+        assert!(read_matrix_market(&p).is_err(), "nnz mismatch");
+    }
+
+    #[test]
+    fn sbm_round_trip() {
+        let p = tmpdir().join("m.sbm");
+        let m = sample();
+        write_sbm(&m, &p).unwrap();
+        let m2 = read_sbm(&p).unwrap();
+        assert_eq!(m.triplets().collect::<Vec<_>>(), m2.triplets().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sbm_rejects_wrong_magic() {
+        let p = tmpdir().join("x.sbm");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(read_sbm(&p).is_err());
+    }
+
+    #[test]
+    fn dbm_round_trip() {
+        let p = tmpdir().join("m.dbm");
+        let m = Mat::from_vec(2, 3, vec![1.0, -2.0, 3.5, 0.0, 1e-300, 7.0]);
+        write_dbm(&m, &p).unwrap();
+        let m2 = read_dbm(&p).unwrap();
+        assert_eq!(m, m2);
+    }
+}

@@ -1,0 +1,276 @@
+//! Sparse-matrix substrate: COO / CSR / CSC with conversions, plus
+//! MatrixMarket and a compact binary format in [`io`].
+//!
+//! The Gibbs sweep needs *both* orientations of the rating matrix — CSR
+//! to iterate a row's ratings when updating U, CSC for a column's when
+//! updating V — so [`SparseMatrix`] keeps the triplets plus both
+//! compressed forms, built once.
+
+pub mod io;
+
+/// A (row, col, value) triplet matrix with precomputed CSR and CSC views.
+#[derive(Debug, Clone)]
+pub struct SparseMatrix {
+    nrows: usize,
+    ncols: usize,
+    // CSR
+    row_ptr: Vec<usize>,
+    row_cols: Vec<u32>,
+    row_vals: Vec<f64>,
+    // CSC
+    col_ptr: Vec<usize>,
+    col_rows: Vec<u32>,
+    col_vals: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// Build from triplets.  Duplicate (i, j) entries are summed
+    /// (MatrixMarket semantics).  Panics on out-of-range indices.
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        triplets: impl IntoIterator<Item = (u32, u32, f64)>,
+    ) -> SparseMatrix {
+        let mut trips: Vec<(u32, u32, f64)> = triplets.into_iter().collect();
+        for &(r, c, _) in &trips {
+            assert!(
+                (r as usize) < nrows && (c as usize) < ncols,
+                "triplet ({r},{c}) out of {nrows}x{ncols}"
+            );
+        }
+        trips.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // merge duplicates
+        let mut merged: Vec<(u32, u32, f64)> = Vec::with_capacity(trips.len());
+        for (r, c, v) in trips {
+            match merged.last_mut() {
+                Some(&mut (lr, lc, ref mut lv)) if lr == r && lc == c => *lv += v,
+                _ => merged.push((r, c, v)),
+            }
+        }
+
+        // CSR
+        let mut row_ptr = vec![0usize; nrows + 1];
+        for &(r, _, _) in &merged {
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..nrows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let row_cols: Vec<u32> = merged.iter().map(|&(_, c, _)| c).collect();
+        let row_vals: Vec<f64> = merged.iter().map(|&(_, _, v)| v).collect();
+
+        // CSC from a column-sorted copy
+        let mut by_col = merged;
+        by_col.sort_unstable_by_key(|&(r, c, _)| (c, r));
+        let mut col_ptr = vec![0usize; ncols + 1];
+        for &(_, c, _) in &by_col {
+            col_ptr[c as usize + 1] += 1;
+        }
+        for j in 0..ncols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        let col_rows: Vec<u32> = by_col.iter().map(|&(r, _, _)| r).collect();
+        let col_vals: Vec<f64> = by_col.iter().map(|&(_, _, v)| v).collect();
+
+        SparseMatrix { nrows, ncols, row_ptr, row_cols, row_vals, col_ptr, col_rows, col_vals }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.row_vals.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.nrows as f64 * self.ncols as f64)
+    }
+
+    /// (column indices, values) of row i — the CSR view.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.row_ptr[i], self.row_ptr[i + 1]);
+        (&self.row_cols[a..b], &self.row_vals[a..b])
+    }
+
+    /// (row indices, values) of column j — the CSC view.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.col_rows[a..b], &self.col_vals[a..b])
+    }
+
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Iterate all triplets in CSR order.
+    pub fn triplets(&self) -> impl Iterator<Item = (u32, u32, f64)> + '_ {
+        (0..self.nrows).flat_map(move |i| {
+            let (cols, vals) = self.row(i);
+            cols.iter().zip(vals).map(move |(&c, &v)| (i as u32, c, v))
+        })
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> SparseMatrix {
+        SparseMatrix::from_triplets(
+            self.ncols,
+            self.nrows,
+            self.triplets().map(|(r, c, v)| (c, r, v)),
+        )
+    }
+
+    /// Mean of the stored values (0 when empty).
+    pub fn mean_value(&self) -> f64 {
+        crate::util::mean(&self.row_vals)
+    }
+
+    /// Look up a single cell (None when structurally zero / unknown).
+    pub fn get(&self, i: usize, j: usize) -> Option<f64> {
+        let (cols, vals) = self.row(i);
+        cols.binary_search(&(j as u32)).ok().map(|k| vals[k])
+    }
+
+    /// y = A·x (CSR sweep).
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        (0..self.nrows)
+            .map(|i| {
+                let (cols, vals) = self.row(i);
+                cols.iter().zip(vals).map(|(&c, &v)| v * x[c as usize]).sum()
+            })
+            .collect()
+    }
+
+    /// y = Aᵀ·x (CSC sweep).
+    pub fn spmv_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.nrows);
+        (0..self.ncols)
+            .map(|j| {
+                let (rows, vals) = self.col(j);
+                rows.iter().zip(vals).map(|(&r, &v)| v * x[r as usize]).sum()
+            })
+            .collect()
+    }
+
+    /// Dense copy (tests / tiny matrices only).
+    pub fn to_dense(&self) -> crate::linalg::Mat {
+        let mut m = crate::linalg::Mat::zeros(self.nrows, self.ncols);
+        for (r, c, v) in self.triplets() {
+            m[(r as usize, c as usize)] += v;
+        }
+        m
+    }
+
+    /// Histogram of row nnz — used by the scheduler's task splitter and
+    /// the synthetic-data tests (power-law degrees).
+    pub fn row_nnz_histogram(&self) -> Vec<usize> {
+        (0..self.nrows).map(|i| self.row_nnz(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SparseMatrix {
+        SparseMatrix::from_triplets(
+            3,
+            4,
+            vec![(0, 1, 2.0), (2, 3, -1.0), (0, 0, 1.0), (1, 2, 5.0), (2, 0, 3.0)],
+        )
+    }
+
+    #[test]
+    fn csr_and_csc_agree() {
+        let m = sample();
+        assert_eq!(m.nnz(), 5);
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[0, 1]);
+        assert_eq!(vals, &[1.0, 2.0]);
+        let (rows, vals) = m.col(0);
+        assert_eq!(rows, &[0, 2]);
+        assert_eq!(vals, &[1.0, 3.0]);
+        assert_eq!(m.row_nnz(1), 1);
+        assert_eq!(m.col_nnz(3), 1);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let m = SparseMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5)]);
+        assert_eq!(m.nnz(), 1);
+        assert_eq!(m.get(0, 0), Some(3.5));
+    }
+
+    #[test]
+    fn get_and_missing() {
+        let m = sample();
+        assert_eq!(m.get(1, 2), Some(5.0));
+        assert_eq!(m.get(1, 0), None);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = sample();
+        let t = m.transpose();
+        assert_eq!(t.nrows(), 4);
+        assert_eq!(t.get(3, 2), Some(-1.0));
+        let tt = t.transpose();
+        assert_eq!(
+            m.triplets().collect::<Vec<_>>(),
+            tt.triplets().collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = sample();
+        let d = m.to_dense();
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let got = m.spmv(&x);
+        let want = crate::linalg::matvec(&d, &x);
+        assert_eq!(got, want);
+        let y = [1.0, -1.0, 0.5];
+        assert_eq!(m.spmv_t(&y), crate::linalg::matvec(&d.transpose(), &y));
+    }
+
+    #[test]
+    fn empty_rows_and_cols() {
+        let m = SparseMatrix::from_triplets(3, 3, vec![(0, 0, 1.0)]);
+        assert_eq!(m.row(1).0.len(), 0);
+        assert_eq!(m.col(2).0.len(), 0);
+        assert_eq!(m.mean_value(), 1.0);
+    }
+
+    #[test]
+    fn triplets_iterate_in_row_order() {
+        let m = sample();
+        let t: Vec<_> = m.triplets().collect();
+        assert_eq!(t[0], (0, 0, 1.0));
+        assert_eq!(t.len(), 5);
+        assert!(t.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_triplet_panics() {
+        SparseMatrix::from_triplets(2, 2, vec![(2, 0, 1.0)]);
+    }
+
+    #[test]
+    fn density_and_histogram() {
+        let m = sample();
+        assert!((m.density() - 5.0 / 12.0).abs() < 1e-12);
+        assert_eq!(m.row_nnz_histogram(), vec![2, 1, 2]);
+    }
+}

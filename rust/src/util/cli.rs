@@ -1,0 +1,146 @@
+//! Tiny CLI argument parser (clap replacement, DESIGN.md §7).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` — the
+//! shape used by `smurff` (the main binary), the examples and the bench
+//! harness.  Unknown flags are an error; `--help` is handled by callers.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (e.g. the subcommand).
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw token list (not including argv[0]).
+    /// `bool_flags` lists flags that take no value.
+    pub fn parse(tokens: &[String], bool_flags: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                    a.present.push(k.to_string());
+                } else if bool_flags.contains(&name) {
+                    a.flags.insert(name.to_string(), "true".to_string());
+                    a.present.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = tokens
+                        .get(i)
+                        .ok_or_else(|| format!("flag --{name} expects a value"))?;
+                    a.flags.insert(name.to_string(), v.clone());
+                    a.present.push(name.to_string());
+                }
+            } else {
+                a.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(bool_flags: &[&str]) -> Result<Args, String> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&tokens, bool_flags)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Reject flags outside the allowed set (catches typos).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in &self.present {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k} (known: {})", known.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&toks("train --config x.toml --threads 4 --verbose"), &["verbose"]).unwrap();
+        assert_eq!(a.positionals, vec!["train"]);
+        assert_eq!(a.get("config"), Some("x.toml"));
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 4);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = Args::parse(&toks("--k=16 --alpha=2.5"), &[]).unwrap();
+        assert_eq!(a.get_usize("k", 0).unwrap(), 16);
+        assert_eq!(a.get_f64("alpha", 0.0).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&toks("--config"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&toks("--threads four"), &[]).unwrap();
+        assert!(a.get_usize("threads", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = Args::parse(&toks("--cofnig x"), &[]).unwrap();
+        assert!(a.check_known(&["config"]).is_err());
+        let a = Args::parse(&toks("--config x"), &[]).unwrap();
+        assert!(a.check_known(&["config"]).is_ok());
+    }
+
+    #[test]
+    fn multiple_positionals() {
+        let a = Args::parse(&toks("bench fig3 --quick"), &["quick"]).unwrap();
+        assert_eq!(a.positionals, vec!["bench", "fig3"]);
+        assert!(a.get_bool("quick"));
+    }
+}

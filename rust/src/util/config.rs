@@ -1,0 +1,266 @@
+//! TOML-subset config file parser (serde/toml replacement, DESIGN.md §7).
+//!
+//! Supports what SMURFF session configs need: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! bool / homogeneous-array values, `#` comments.  Produces a flat
+//! `section.key -> ConfigValue` map with typed accessors and
+//! "unknown key" detection so typos in user configs fail loudly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<ConfigValue>),
+}
+
+impl ConfigValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            ConfigValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            ConfigValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            ConfigValue::Float(f) => Some(*f),
+            ConfigValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            ConfigValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("config error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A parsed config file: flat `section.key` -> value map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    map: BTreeMap<String, ConfigValue>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, ConfigError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (ln, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(ConfigError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.' || c == '-') {
+                    return Err(ConfigError { line: ln + 1, msg: format!("bad section name '{name}'") });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or(ConfigError {
+                line: ln + 1,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(ConfigError { line: ln + 1, msg: "empty key".into() });
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let val = parse_value(v.trim()).map_err(|msg| ConfigError { line: ln + 1, msg })?;
+            map.insert(full, val);
+        }
+        Ok(Config { map })
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {}: {e}", path.display()))?;
+        Ok(Config::parse(&src)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ConfigValue> {
+        self.map.get(key)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|i| i as usize).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    /// Error out on keys not in `known` — catches config typos.
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for k in self.map.keys() {
+            if !known.contains(&k.as_str()) {
+                anyhow::bail!("unknown config key '{k}' (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<ConfigValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(ConfigValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(ConfigValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(ConfigValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in trimmed.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(ConfigValue::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(ConfigValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(ConfigValue::Float(f));
+    }
+    Err(format!("cannot parse value '{s}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a SMURFF session config
+[session]
+num_latent = 16
+burnin = 100
+nsamples = 200        # posterior samples
+seed = 42
+save_name = "run1"
+verbose = true
+
+[noise]
+kind = "adaptive"
+sn_init = 1.0
+sn_max = 10.0
+
+[prior.rows]
+kind = "macau"
+betas = [0.5, 1.5, -2]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("session.num_latent", 0), 16);
+        assert_eq!(c.get_str("noise.kind", ""), "adaptive");
+        assert_eq!(c.get_f64("noise.sn_max", 0.0), 10.0);
+        assert!(c.get_bool("session.verbose", false));
+        assert_eq!(c.get_str("session.save_name", ""), "run1");
+        match c.get("prior.rows.betas").unwrap() {
+            ConfigValue::Array(a) => {
+                assert_eq!(a.len(), 3);
+                assert_eq!(a[2], ConfigValue::Int(-2));
+            }
+            _ => panic!("not an array"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_usize("missing", 7), 7);
+        assert_eq!(c.get_str("missing", "x"), "x");
+    }
+
+    #[test]
+    fn int_promotes_to_f64() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.get_f64("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.get_str("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = Config::parse("a = 1\nbad line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = Config::parse("[sec\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let c = Config::parse("[s]\na = 1\nb = 2").unwrap();
+        assert!(c.check_known(&["s.a", "s.b"]).is_ok());
+        assert!(c.check_known(&["s.a"]).is_err());
+    }
+
+    #[test]
+    fn empty_array() {
+        let c = Config::parse("a = []").unwrap();
+        assert_eq!(c.get("a"), Some(&ConfigValue::Array(vec![])));
+    }
+}

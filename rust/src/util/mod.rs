@@ -1,0 +1,48 @@
+//! Infrastructure substrate: JSON, config files, CLI parsing, logging,
+//! timers and a mini property-test runner.
+//!
+//! These exist because the offline crate set of the image has no
+//! serde / clap / env_logger / proptest (DESIGN.md §7); each submodule is a
+//! small, fully-tested replacement covering exactly what the framework
+//! needs.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logger;
+pub mod prop;
+pub mod timer;
+
+pub use json::JsonValue;
+pub use timer::Timer;
+
+/// Mean of a slice (0.0 for empty — callers guard).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample variance (n-1 denominator; 0.0 for n < 2).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_variance() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 1.0).abs() < 1e-12);
+        assert_eq!(variance(&[5.0]), 0.0);
+    }
+}

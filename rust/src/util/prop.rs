@@ -1,0 +1,74 @@
+//! Mini property-based testing runner (proptest replacement, DESIGN.md §7).
+//!
+//! `forall(cases, |rng| { ... })` runs a closure over `cases` independent
+//! seeded RNGs; on panic it re-raises with the failing case index and seed
+//! so the case is reproducible with `forall_seeded`.  Used by the
+//! coordinator-invariant and sparse/linalg property tests.
+
+use crate::rng::Rng;
+
+/// Run `f` for `cases` random cases.  Each case gets an RNG seeded from
+/// (base_seed, case index), so failures are reproducible.
+pub fn forall<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: usize, f: F) {
+    forall_seeded(0xC0FFEE, cases, f)
+}
+
+pub fn forall_seeded<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(base_seed: u64, cases: usize, f: F) {
+    for i in 0..cases {
+        let mut rng = Rng::from_parts(base_seed, i as u64);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = r {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {i} (base_seed {base_seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall(50, |rng| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let r = std::panic::catch_unwind(|| {
+            forall(50, |rng| {
+                // fail when we draw something below 0.2 (happens quickly)
+                assert!(rng.next_f64() >= 0.2, "drew a small one");
+            });
+        });
+        let err = r.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<other>".into());
+        assert!(msg.contains("property failed at case"), "{msg}");
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen = Vec::new();
+        forall_seeded(7, 3, |rng| {
+            let _ = rng; // values checked below
+        });
+        for i in 0..3u64 {
+            let mut rng = crate::rng::Rng::from_parts(7, i);
+            seen.push(rng.next_u64());
+        }
+        let again: Vec<u64> = (0..3u64)
+            .map(|i| crate::rng::Rng::from_parts(7, i).next_u64())
+            .collect();
+        assert_eq!(seen, again);
+    }
+}

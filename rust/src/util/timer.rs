@@ -1,0 +1,116 @@
+//! Wall-clock timers and operation counters used by the session status
+//! reports, the bench harness and the hardware model's instrumentation.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Simple scoped stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Thread-safe accumulating counters: named f64 totals (stored as u64
+/// nanos / op counts).  Used to attribute time and FLOPs/bytes to phases;
+/// the hwmodel consumes the flop/byte counters (DESIGN.md Fig 4).
+#[derive(Default)]
+pub struct Counters {
+    counts: BTreeMap<String, AtomicU64>,
+}
+
+impl Counters {
+    pub fn new(names: &[&str]) -> Counters {
+        let mut counts = BTreeMap::new();
+        for n in names {
+            counts.insert(n.to_string(), AtomicU64::new(0));
+        }
+        Counters { counts }
+    }
+
+    /// Add to a counter; unknown names are ignored in release builds but
+    /// panic in debug so typos get caught by tests.
+    pub fn add(&self, name: &str, v: u64) {
+        match self.counts.get(name) {
+            Some(c) => {
+                c.fetch_add(v, Ordering::Relaxed);
+            }
+            None => debug_assert!(false, "unknown counter {name}"),
+        }
+    }
+
+    pub fn get(&self, name: &str) -> u64 {
+        self.counts.get(name).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
+    }
+
+    pub fn reset(&self) {
+        for c in self.counts.values() {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> BTreeMap<String, u64> {
+        self.counts
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn counters_accumulate_and_reset() {
+        let c = Counters::new(&["flops", "bytes"]);
+        c.add("flops", 10);
+        c.add("flops", 5);
+        c.add("bytes", 3);
+        assert_eq!(c.get("flops"), 15);
+        assert_eq!(c.get("bytes"), 3);
+        let snap = c.snapshot();
+        assert_eq!(snap["flops"], 15);
+        c.reset();
+        assert_eq!(c.get("flops"), 0);
+    }
+
+    #[test]
+    fn counters_thread_safe() {
+        let c = std::sync::Arc::new(Counters::new(&["x"]));
+        let mut hs = vec![];
+        for _ in 0..4 {
+            let c = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.add("x", 1);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get("x"), 4000);
+    }
+}

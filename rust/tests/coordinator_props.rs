@@ -1,0 +1,173 @@
+//! Property-based tests of the coordinator invariants (DESIGN.md §5),
+//! using the in-tree mini property runner (`util::prop` — proptest is
+//! not in the offline crate set).
+//!
+//! The central invariant: **the schedule must not change the samples** —
+//! any thread count, any engine fallback path, any shard order gives
+//! bit-identical latents, because every (iteration, side, row) derives
+//! its own RNG stream.
+
+use smurff::coordinator::{DataAccess, MvnSweep, NativeEngine, ThreadPool, ViewSlice, Engine};
+use smurff::linalg::Mat;
+use smurff::priors::{MeanSpec, NormalPrior, Prior};
+use smurff::rng::Rng;
+use smurff::sparse::SparseMatrix;
+use smurff::util::prop::forall;
+
+fn random_problem(rng: &mut Rng) -> (SparseMatrix, Mat, usize) {
+    let n = 10 + rng.next_below(40);
+    let m = 8 + rng.next_below(30);
+    let k = 2 + rng.next_below(6);
+    let mut v = Mat::zeros(m, k);
+    rng.fill_normal(v.data_mut());
+    let mut trips = Vec::new();
+    for i in 0..n {
+        for j in 0..m {
+            if rng.next_f64() < 0.25 {
+                trips.push((i as u32, j as u32, rng.normal()));
+            }
+        }
+    }
+    (SparseMatrix::from_triplets(n, m, trips), v, k)
+}
+
+#[test]
+fn prop_schedule_invariance() {
+    forall(15, |rng| {
+        let (data, v, k) = random_problem(rng);
+        let n = data.nrows();
+        let mut prior = NormalPrior::new(k);
+        let mut lat0 = smurff::model::init_latents(n, k, 0.2, rng);
+        prior.update_hyper(&lat0, rng);
+        let spec = prior.mvn_spec().unwrap();
+        let seed = rng.next_u64();
+
+        let run = |threads: usize| {
+            let pool = ThreadPool::new(threads);
+            let mut lat = lat0.clone();
+            let sweep = MvnSweep {
+                lambda0: spec.lambda0,
+                means: match &spec.means {
+                    MeanSpec::Shared(s) => MeanSpec::Shared(s),
+                    _ => unreachable!(),
+                },
+                views: vec![ViewSlice {
+                    data: DataAccess::SparseRows(&data),
+                    other: &v,
+                    alpha: 1.5,
+                    probit: false,
+                    full_gram: None,
+                }],
+                seed,
+                iteration: 1,
+                side_id: 0,
+            };
+            NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
+            lat
+        };
+        let a = run(1);
+        let b = run(3);
+        let c = run(8);
+        assert!(a.max_abs_diff(&b) == 0.0);
+        assert!(b.max_abs_diff(&c) == 0.0);
+        lat0 = a;
+        assert!(lat0.data().iter().all(|x| x.is_finite()));
+    });
+}
+
+#[test]
+fn prop_rng_streams_never_collide() {
+    forall(50, |rng| {
+        let seed = rng.next_u64();
+        let it = rng.next_below(1000) as u64;
+        let side = rng.next_below(4) as u64;
+        let row = rng.next_below(10_000) as u64;
+        let base = Rng::for_row(seed, it, side, row).next_u64();
+        // perturb each coordinate: stream must change
+        assert_ne!(base, Rng::for_row(seed, it + 1, side, row).next_u64());
+        assert_ne!(base, Rng::for_row(seed, it, side + 1, row).next_u64());
+        assert_ne!(base, Rng::for_row(seed, it, side, row + 1).next_u64());
+        assert_ne!(base, Rng::for_row(seed ^ 1, it, side, row).next_u64());
+    });
+}
+
+#[test]
+fn prop_threadpool_partition_exactness() {
+    forall(30, |rng| {
+        let n = rng.next_below(5_000);
+        let threads = 1 + rng.next_below(8);
+        let grain = 1 + rng.next_below(64);
+        let pool = ThreadPool::new(threads);
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..n).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        pool.parallel_for(n, grain, |i| {
+            hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(std::sync::atomic::Ordering::Relaxed) == 1));
+    });
+}
+
+#[test]
+fn prop_distributed_partition_covers() {
+    forall(100, |rng| {
+        let n = rng.next_below(10_000);
+        let parts = 1 + rng.next_below(64);
+        let ranges = smurff::distributed::partition(n, parts);
+        let total: usize = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(total, n);
+        // contiguity & monotonicity
+        let mut expect = 0;
+        for r in &ranges {
+            assert_eq!(r.start, expect);
+            expect = r.end;
+        }
+        // balance: sizes differ by at most 1
+        let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+        let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(hi - lo <= 1);
+    });
+}
+
+#[test]
+fn prop_sparse_round_trips() {
+    forall(25, |rng| {
+        let (m, _, _) = random_problem(rng);
+        // transpose twice is identity
+        let tt = m.transpose().transpose();
+        assert_eq!(m.triplets().collect::<Vec<_>>(), tt.triplets().collect::<Vec<_>>());
+        // CSR and CSC agree cell-by-cell
+        for (i, j, v) in m.triplets() {
+            let (rows, vals) = m.col(j as usize);
+            let pos = rows.iter().position(|&r| r == i).expect("csc missing csr entry");
+            assert_eq!(vals[pos], v);
+        }
+        // spmv against dense
+        let x: Vec<f64> = (0..m.ncols()).map(|_| rng.normal()).collect();
+        let want = smurff::linalg::matvec(&m.to_dense(), &x);
+        let got = m.spmv(&x);
+        for (a, b) in want.iter().zip(&got) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_full_gibbs_session_thread_invariance() {
+    forall(5, |rng| {
+        let seed = rng.next_u64();
+        let (train, test) = smurff::data::movielens_like(40, 30, 500 + rng.next_below(500), 0.2, seed);
+        let run = |threads: usize| {
+            let cfg = smurff::session::SessionConfig {
+                num_latent: 4,
+                burnin: 2,
+                nsamples: 4,
+                seed,
+                threads,
+                ..Default::default()
+            };
+            let mut s = smurff::session::TrainSession::bmf(train.clone(), Some(test.clone()), cfg);
+            s.run().rmse
+        };
+        assert_eq!(run(1), run(4));
+    });
+}

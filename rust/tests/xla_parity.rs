@@ -1,0 +1,148 @@
+//! End-to-end parity between the native engine and the XLA AOT engine
+//! (the full three-layer stack: Rust coordinator → HLO artifacts
+//! compiled from the JAX/Pallas layers).
+//!
+//! These tests require `make artifacts`; they self-skip (with a stderr
+//! note) when the manifest is absent so `cargo test` stays green in a
+//! bare checkout.
+
+use smurff::session::{SessionConfig, TrainSession};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let d = smurff::runtime::default_artifacts_dir();
+    d.join("manifest.json").exists().then_some(d)
+}
+
+#[test]
+fn full_bmf_session_native_vs_xla() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let (train, test) = smurff::data::movielens_like(300, 200, 12_000, 0.2, 51);
+    let cfg = SessionConfig {
+        num_latent: 16, // matches an artifact K in the default build matrix
+        burnin: 5,
+        nsamples: 15,
+        seed: 51,
+        threads: 2,
+        ..Default::default()
+    };
+    let mut native = TrainSession::bmf(train.clone(), Some(test.clone()), cfg.clone());
+    let r_native = native.run();
+
+    let engine = smurff::runtime::XlaEngine::new(&dir).unwrap();
+    let mut xla = smurff::session::SessionBuilder::new(cfg)
+        .add_view(
+            smurff::data::MatrixConfig::SparseUnknown(train),
+            smurff::noise::NoiseConfig::default(),
+            Some(smurff::data::TestSet::from_sparse(&test)),
+        )
+        .engine(Box::new(engine))
+        .build();
+    assert_eq!(xla.engine_name(), "xla");
+    let r_xla = xla.run();
+
+    // same RNG streams, f32 vs f64 arithmetic: RMSE trajectories must
+    // stay in a tight band
+    assert!(r_native.rmse.is_finite() && r_xla.rmse.is_finite());
+    assert!(
+        (r_native.rmse - r_xla.rmse).abs() < 0.05,
+        "native {} vs xla {}",
+        r_native.rmse,
+        r_xla.rmse
+    );
+    // and both actually learned
+    let truth: Vec<f64> = test.triplets().map(|t| t.2).collect();
+    let base = smurff::model::rmse(&vec![3.0; truth.len()], &truth);
+    assert!(r_xla.rmse < base);
+}
+
+#[test]
+fn xla_engine_handles_heavy_rows_via_fallback() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    // one row with 300 ratings (exceeds every artifact depth D) among
+    // normal rows: the engine must mix XLA blocks + native fallback
+    let mut trips: Vec<(u32, u32, f64)> = Vec::new();
+    let mut rng = smurff::rng::Rng::new(52);
+    for j in 0..300u32 {
+        trips.push((0, j, rng.normal()));
+    }
+    for i in 1..100u32 {
+        for _ in 0..10 {
+            trips.push((i, rng.next_below(300) as u32, rng.normal()));
+        }
+    }
+    let train = smurff::sparse::SparseMatrix::from_triplets(100, 300, trips);
+    let cfg = SessionConfig { num_latent: 16, burnin: 2, nsamples: 4, seed: 52, threads: 2, ..Default::default() };
+    let engine = smurff::runtime::XlaEngine::new(&dir).unwrap();
+    let mut s = smurff::session::SessionBuilder::new(cfg)
+        .add_view(
+            smurff::data::MatrixConfig::SparseUnknown(train),
+            smurff::noise::NoiseConfig::default(),
+            None,
+        )
+        .engine(Box::new(engine))
+        .build();
+    s.run();
+    assert!(s.u.data().iter().all(|x| x.is_finite()));
+    assert!(s.u.row(0).iter().any(|&x| x != 0.0), "heavy row must be sampled");
+}
+
+#[test]
+fn xla_engine_fallback_for_unsupported_k() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    // K=5 has no artifact: the engine must silently use the native path
+    let (train, test) = smurff::data::movielens_like(60, 50, 1_500, 0.2, 53);
+    let cfg = SessionConfig { num_latent: 5, burnin: 3, nsamples: 6, seed: 53, threads: 2, ..Default::default() };
+    let engine = smurff::runtime::XlaEngine::new(&dir).unwrap();
+    let mut s = smurff::session::SessionBuilder::new(cfg.clone())
+        .add_view(
+            smurff::data::MatrixConfig::SparseUnknown(train.clone()),
+            smurff::noise::NoiseConfig::default(),
+            Some(smurff::data::TestSet::from_sparse(&test)),
+        )
+        .engine(Box::new(engine))
+        .build();
+    let r_xla = s.run();
+    // identical to native because fallback uses identical RNG streams
+    let mut native = TrainSession::bmf(train, Some(test), cfg);
+    let r_native = native.run();
+    assert_eq!(r_xla.rmse, r_native.rmse);
+}
+
+#[test]
+fn macau_session_through_xla_engine() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let d = smurff::data::chembl_synth(&smurff::data::ChemblSpec {
+        compounds: 150,
+        proteins: 60,
+        nnz: 3_000,
+        fp_bits: 128,
+        fp_density: 12,
+        ..Default::default()
+    });
+    let (train, test) = smurff::data::split_train_test(&d.activity, 0.2, 54);
+    let cfg = SessionConfig { num_latent: 16, burnin: 4, nsamples: 8, seed: 54, threads: 2, ..Default::default() };
+    let engine = smurff::runtime::XlaEngine::new(&dir).unwrap();
+    let mut s = smurff::session::SessionBuilder::new(cfg)
+        .row_macau(d.fingerprints_sparse)
+        .add_view(
+            smurff::data::MatrixConfig::SparseUnknown(train),
+            smurff::noise::NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+            Some(smurff::data::TestSet::from_sparse(&test)),
+        )
+        .engine(Box::new(engine))
+        .build();
+    let r = s.run();
+    assert!(r.rmse.is_finite(), "macau through xla must work (per-row means path)");
+}
