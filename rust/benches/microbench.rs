@@ -106,6 +106,52 @@ fn main() {
         println!("{:40} {:>12}", format!("parallel_for dispatch T={threads}"), fmt(t));
     }
 
+    // predict serving: samples × batch sweep over the store-backed
+    // PredictSession (pointwise gather + per-sample GEMM block path)
+    {
+        let store_dir =
+            std::env::temp_dir().join(format!("smurff_microbench_store_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&store_dir);
+        let (train, _) = smurff::data::movielens_like(400, 300, 20_000, 0.0, 9);
+        let cfg = smurff::session::SessionConfig {
+            num_latent: 16,
+            burnin: 2,
+            nsamples: 16,
+            threads: 0,
+            save_freq: 1,
+            save_dir: Some(store_dir.clone()),
+            ..Default::default()
+        };
+        smurff::session::TrainSession::bmf(train, None, cfg).run();
+        for nsamples in [4usize, 16] {
+            let mut ps = smurff::predict::PredictSession::open(&store_dir)
+                .expect("open microbench store");
+            ps.truncate_samples(nsamples);
+            for batch in [64usize, 256] {
+                let rows: Vec<u32> = (0..batch).map(|i| (i % 400) as u32).collect();
+                let cols: Vec<u32> = (0..batch).map(|i| (i * 13 % 300) as u32).collect();
+                let t = median_time(reps.min(15), || {
+                    std::hint::black_box(ps.predict_cells(0, &rows, &cols));
+                });
+                println!(
+                    "{:40} {:>12}",
+                    format!("predict point S={nsamples} batch={batch}"),
+                    fmt(t)
+                );
+                let t = median_time(reps.min(15), || {
+                    std::hint::black_box(ps.predict_block(0, 0..batch, 0..300));
+                });
+                let cells = (batch * 300) as f64;
+                println!(
+                    "{:40} {:>12}  ({:5.1} Mcells/s)",
+                    format!("predict block S={nsamples} {batch}x300"),
+                    fmt(t),
+                    cells / t / 1e6
+                );
+            }
+        }
+    }
+
     // one full BMF Gibbs iteration (the end-to-end hot path)
     let (train, _) = smurff::data::movielens_like(2000, 500, 100_000, 0.0, 5);
     for threads in [1usize, 4] {

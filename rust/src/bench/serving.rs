@@ -1,0 +1,94 @@
+//! Serving-throughput harness: how fast the predict subsystem answers
+//! once a posterior store is on disk — the ROADMAP's "serve heavy
+//! traffic" axis, measured the same way the paper-figure benches are.
+//!
+//! Three tables: pointwise queries/s and top-K recommendations/s as the
+//! number of posterior samples served varies, and dense-block GEMM
+//! throughput (cells/s) over a samples × batch sweep.
+
+use super::{Report, Table};
+use crate::predict::PredictSession;
+use crate::session::{SessionConfig, TrainSession};
+use crate::util::Timer;
+
+fn trained_store(quick: bool) -> std::path::PathBuf {
+    let (rows, cols, nnz, nsamples) =
+        if quick { (300, 200, 10_000, 8) } else { (1_000, 600, 60_000, 32) };
+    let dir = std::env::temp_dir().join(format!("smurff_serving_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (train, _) = crate::data::movielens_like(rows, cols, nnz, 0.0, 77);
+    let cfg = SessionConfig {
+        num_latent: 16,
+        burnin: if quick { 4 } else { 10 },
+        nsamples,
+        seed: 77,
+        threads: 0,
+        save_freq: 1,
+        save_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    TrainSession::bmf(train, None, cfg).run();
+    dir
+}
+
+pub fn run(quick: bool) -> Report {
+    let mut report = Report::new("serving");
+    let dir = trained_store(quick);
+    let full = PredictSession::open(&dir).expect("open serving store");
+    let (nrows, ncols) = (full.nrows(), full.ncols(0));
+    let mut sample_counts: Vec<usize> =
+        [1, 4, full.nsamples()].iter().copied().filter(|&s| s <= full.nsamples()).collect();
+    sample_counts.dedup();
+
+    // ---- pointwise + top-K rate vs. samples served
+    let mut t = Table::new(
+        "pointwise and top-K serving rate",
+        &["samples", "pointwise q/s", "top-10 req/s"],
+    );
+    let nqueries = if quick { 2_000 } else { 20_000 };
+    let nusers = if quick { 20 } else { 100 };
+    for &s in &sample_counts {
+        let mut ps = PredictSession::open(&dir).expect("open serving store");
+        ps.truncate_samples(s);
+        let rows: Vec<u32> = (0..nqueries).map(|i| (i % nrows) as u32).collect();
+        let cols: Vec<u32> = (0..nqueries).map(|i| (i * 7 % ncols) as u32).collect();
+        let timer = Timer::start();
+        let preds = ps.predict_cells(0, &rows, &cols);
+        let point_rate = preds.len() as f64 / timer.elapsed_s();
+
+        let timer = Timer::start();
+        for u in 0..nusers {
+            std::hint::black_box(ps.top_k(0, u % nrows, 10, &[]));
+        }
+        let topk_rate = nusers as f64 / timer.elapsed_s();
+        t.row(vec![format!("{s}"), format!("{point_rate:.0}"), format!("{topk_rate:.1}")]);
+    }
+    report.push(t);
+
+    // ---- dense-block GEMM throughput: samples × batch sweep
+    let mut t = Table::new(
+        "dense-block prediction (GEMM per sample)",
+        &["samples", "batch rows", "cells", "Mcells/s"],
+    );
+    let batches: &[usize] = if quick { &[32, 128] } else { &[64, 256] };
+    for &s in &sample_counts {
+        let mut ps = PredictSession::open(&dir).expect("open serving store");
+        ps.truncate_samples(s);
+        for &b in batches {
+            let br = b.min(nrows);
+            let cells = br * ncols;
+            let timer = Timer::start();
+            let blk = ps.predict_block(0, 0..br, 0..ncols);
+            let rate = cells as f64 / timer.elapsed_s() / 1e6;
+            std::hint::black_box(&blk.mean);
+            t.row(vec![
+                format!("{s}"),
+                format!("{br}"),
+                format!("{cells}"),
+                format!("{rate:.2}"),
+            ]);
+        }
+    }
+    report.push(t);
+    report
+}

@@ -111,6 +111,52 @@ impl ThreadPool {
         slot.1 = None;
     }
 
+    /// Run `f(i)` for every i in 0..n and collect the results into a
+    /// `Vec` in index order — parallel execution, deterministic output.
+    /// Used by the predict layer (one GEMM per posterior sample, reduced
+    /// sequentially so serving results never depend on thread count).
+    /// Lock-free: each slot is written exactly once by exactly one lane
+    /// (the `parallel_for` contract), the same disjoint-write pattern as
+    /// the coordinator's `RowWriter`.
+    ///
+    /// A panic in `f` aborts the process: letting it unwind would either
+    /// hang the fork-join (worker lane never decrements `active`) or
+    /// free the output Vec while other lanes still write through the
+    /// slot pointer (caller lane).  Abort keeps the unsafe block's
+    /// "Vec outlives the call" claim true unconditionally.
+    pub fn parallel_collect<T, F>(&self, n: usize, grain: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        struct SlotWriter<T>(*mut Option<T>);
+        unsafe impl<T: Send> Send for SlotWriter<T> {}
+        unsafe impl<T: Send> Sync for SlotWriter<T> {}
+
+        struct AbortOnUnwind;
+        impl Drop for AbortOnUnwind {
+            fn drop(&mut self) {
+                eprintln!("fatal: panic inside ThreadPool::parallel_collect task");
+                std::process::abort();
+            }
+        }
+
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let slots = SlotWriter(out.as_mut_ptr());
+        self.parallel_for(n, grain, |i| {
+            let guard = AbortOnUnwind;
+            let v = f(i);
+            std::mem::forget(guard);
+            // SAFETY: parallel_for visits each index exactly once, so
+            // writes are disjoint; the Vec outlives the (blocking) call,
+            // guaranteed even on panic by the abort guard above.
+            unsafe { *slots.0.add(i) = Some(v) };
+        });
+        out.into_iter()
+            .map(|t| t.expect("parallel_for visits every index"))
+            .collect()
+    }
+
     /// Map chunks of 0..n through `map` and fold the partial results.
     /// `T` must be combinable in any order (sums, maxima, …).
     pub fn parallel_map_reduce<T, M, R>(&self, n: usize, grain: usize, map: M, init: T, reduce: R) -> T
@@ -229,6 +275,15 @@ mod tests {
     fn empty_range_is_noop() {
         let pool = ThreadPool::new(2);
         pool.parallel_for(0, 1, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_collect_preserves_index_order() {
+        let pool = ThreadPool::new(4);
+        let got = pool.parallel_collect(1000, 8, |i| i * 3);
+        assert_eq!(got, (0..1000).map(|i| i * 3).collect::<Vec<_>>());
+        let empty: Vec<usize> = pool.parallel_collect(0, 1, |i| i);
+        assert!(empty.is_empty());
     }
 
     #[test]

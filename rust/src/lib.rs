@@ -10,20 +10,44 @@
 //! * framework:  [`data`], [`noise`], [`priors`], [`model`], [`session`]
 //! * runtime:    [`coordinator`] (work-stealing parallel Gibbs),
 //!               [`runtime`] (PJRT/XLA AOT engine), [`distributed`]
+//! * serving:    [`store`] (versioned on-disk posterior model store),
+//!               [`predict`] (`PredictSession`: pointwise + batched
+//!               prediction with uncertainty, top-K recommendation,
+//!               out-of-matrix prediction via Macau side info)
 //! * evaluation: [`baselines`] (PyMC3-like, GraphChi-like, GASPI-like),
 //!               [`hwmodel`] (Xeon / Xeon Phi / ARM roofline+cache model),
 //!               [`bench`] (the harness regenerating every paper figure)
 //!
-//! ## Quickstart
+//! ## Quickstart: train, persist, serve
+//!
+//! SMURFF's workflow is two-phase: a Gibbs *train session* persists
+//! posterior samples into a model store, then a *predict session* serves
+//! predictions (with uncertainty) from those samples — no retraining.
 //!
 //! ```no_run
 //! use smurff::prelude::*;
 //!
+//! // phase 1: train BMF, snapshotting every posterior sample
 //! let (train, test) = smurff::data::movielens_like(500, 400, 20_000, 0.2, 42);
-//! let cfg = SessionConfig { num_latent: 16, burnin: 20, nsamples: 50, ..Default::default() };
+//! let cfg = SessionConfig {
+//!     num_latent: 16,
+//!     burnin: 20,
+//!     nsamples: 50,
+//!     save_freq: 1,
+//!     save_dir: Some("ml_store".into()),
+//!     ..Default::default()
+//! };
 //! let mut session = TrainSession::bmf(train, Some(test), cfg);
 //! let result = session.run();
-//! println!("RMSE = {:.4}", result.rmse);
+//! println!("RMSE = {:.4}, {} snapshots saved", result.rmse, result.nsnapshots);
+//!
+//! // phase 2: serve from the store — pointwise with uncertainty, top-K
+//! let serve = PredictSession::open(std::path::Path::new("ml_store")).unwrap();
+//! let p = serve.predict_one(0, 3, 17);
+//! println!("user 3, movie 17: {:.2} ± {:.2}", p.mean, p.std);
+//! for (movie, score) in serve.top_k(0, 3, 10, &[]) {
+//!     println!("  recommend movie {movie} (score {score:.2})");
+//! }
 //! ```
 
 pub mod util;
@@ -38,6 +62,8 @@ pub mod session;
 pub mod coordinator;
 pub mod runtime;
 pub mod distributed;
+pub mod store;
+pub mod predict;
 pub mod baselines;
 pub mod hwmodel;
 pub mod bench;
@@ -47,7 +73,9 @@ pub mod prelude {
     pub use crate::data::{MatrixConfig, SideInfo};
     pub use crate::linalg::Mat;
     pub use crate::noise::NoiseConfig;
+    pub use crate::predict::{BlockPrediction, PredictSession, Prediction};
     pub use crate::priors::PriorKind;
     pub use crate::session::{SessionConfig, TrainResult, TrainSession};
     pub use crate::sparse::SparseMatrix;
+    pub use crate::store::{ModelStore, Snapshot, StoreMeta};
 }

@@ -20,14 +20,18 @@ use smurff::util::cli::Args;
 use smurff::util::config::Config;
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: smurff <train|generate|bench|info> [flags]
+const USAGE: &str = "usage: smurff <train|predict|generate|bench|info> [flags]
   train    --config <toml> | --data <mtx> [--test <mtx>] | --synthetic <chembl|movielens>
            [--k N] [--burnin N] [--nsamples N] [--seed N] [--threads N]
            [--engine native|xla] [--noise fixed|adaptive|probit] [--alpha F]
            [--prior normal|macau] [--side <mtx>] [--checkpoint <dir>] [--verbose]
+           [--save-dir <dir>] [--save-freq N]
+  predict  --store <dir> [--view N] [--threads N]
+           --row N --col N        pointwise prediction with uncertainty
+           --row N --topk K       top-K column recommendations for a row
   generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
            [--side-out <mtx>] [--seed N]
-  bench    <fig3|fig4|fig5|gfa|macau|table1|all> [--quick] [--out <json>]
+  bench    <fig3|fig4|fig5|gfa|macau|table1|serving|all> [--quick] [--out <json>]
   info     [--artifacts <dir>]";
 
 fn main() {
@@ -50,6 +54,7 @@ fn run() -> anyhow::Result<()> {
     }
     match args.positionals[0].as_str() {
         "train" => cmd_train(&args),
+        "predict" => cmd_predict(&args),
         "generate" => cmd_generate(&args),
         "bench" => cmd_bench(&args),
         "info" => cmd_info(&args),
@@ -65,6 +70,8 @@ fn session_config_from_args(args: &Args) -> anyhow::Result<SessionConfig> {
         seed: args.get_usize("seed", 42).map_err(anyhow::Error::msg)? as u64,
         threads: args.get_usize("threads", 0).map_err(anyhow::Error::msg)?,
         verbose: args.get_bool("verbose"),
+        save_freq: args.get_usize("save-freq", 0).map_err(anyhow::Error::msg)?,
+        save_dir: args.get("save-dir").map(PathBuf::from),
         ..Default::default()
     })
 }
@@ -80,6 +87,8 @@ fn session_config_from_file(path: &Path) -> anyhow::Result<(SessionConfig, Confi
         "session.threads",
         "session.verbose",
         "session.engine",
+        "session.save_freq",
+        "session.save_dir",
         "data.train",
         "data.test",
         "data.side",
@@ -89,6 +98,7 @@ fn session_config_from_file(path: &Path) -> anyhow::Result<(SessionConfig, Confi
         "noise.sn_max",
         "prior.rows",
     ])?;
+    let save_dir = cfg.get_str("session.save_dir", "");
     let sc = SessionConfig {
         num_latent: cfg.get_usize("session.num_latent", 16),
         burnin: cfg.get_usize("session.burnin", 20),
@@ -96,6 +106,8 @@ fn session_config_from_file(path: &Path) -> anyhow::Result<(SessionConfig, Confi
         seed: cfg.get_usize("session.seed", 42) as u64,
         threads: cfg.get_usize("session.threads", 0),
         verbose: cfg.get_bool("session.verbose", false),
+        save_freq: cfg.get_usize("session.save_freq", 0),
+        save_dir: if save_dir.is_empty() { None } else { Some(PathBuf::from(save_dir)) },
         ..Default::default()
     };
     Ok((sc, cfg))
@@ -211,10 +223,27 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         session.engine_name(),
         session.row_prior.describe(),
     );
-    let result = session.run();
+    let result = session.try_run()?;
     if let Some(dir) = args.get("checkpoint") {
         session.checkpoint(Path::new(dir))?;
         println!("checkpoint written to {dir}");
+    }
+    if let Some(store) = &result.store_path {
+        if result.nsnapshots > 0 {
+            println!(
+                "model store: {} posterior snapshots in {} (serve with `smurff predict --store {}`)",
+                result.nsnapshots,
+                store.display(),
+                store.display()
+            );
+        } else {
+            println!(
+                "model store: 0 snapshots written to {} — --save-freq {} never fired within {} samples",
+                store.display(),
+                cfg.save_freq,
+                cfg.nsamples
+            );
+        }
     }
     println!(
         "done: {} iterations in {:.2}s ({:.1} ms/iter)",
@@ -227,6 +256,54 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if result.auc.is_finite() {
         println!("test AUC  = {:.4}", result.auc);
+    }
+    Ok(())
+}
+
+/// Serve a trained posterior store from the command line: pointwise
+/// prediction with uncertainty, or top-K recommendation for a row.
+fn cmd_predict(args: &Args) -> anyhow::Result<()> {
+    let store = args
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("predict needs --store <dir>\n{USAGE}"))?;
+    let threads = args.get_usize("threads", 0).map_err(anyhow::Error::msg)?;
+    let view = args.get_usize("view", 0).map_err(anyhow::Error::msg)?;
+    let session = smurff::predict::PredictSession::open_with_threads(Path::new(store), threads)?;
+    if view >= session.nviews() {
+        anyhow::bail!("--view {view} out of range ({} views)", session.nviews());
+    }
+    println!(
+        "store: {} samples, K={}, {} rows x {} cols (view {view})",
+        session.nsamples(),
+        session.num_latent(),
+        session.nrows(),
+        session.ncols(view)
+    );
+    let row = args.get_usize("row", usize::MAX).map_err(anyhow::Error::msg)?;
+    if row != usize::MAX && row >= session.nrows() {
+        anyhow::bail!("--row {row} out of range ({} rows)", session.nrows());
+    }
+    if args.has("topk") {
+        let k = args.get_usize("topk", 10).map_err(anyhow::Error::msg)?;
+        if row == usize::MAX {
+            anyhow::bail!("--topk needs --row N");
+        }
+        for (rank, (col, score)) in session.top_k(view, row, k, &[]).iter().enumerate() {
+            println!("{:3}. col {:6}  score {score:.4}", rank + 1, col);
+        }
+        return Ok(());
+    }
+    match (row, args.get_usize("col", usize::MAX).map_err(anyhow::Error::msg)?) {
+        (usize::MAX, _) | (_, usize::MAX) => {
+            anyhow::bail!("predict needs --row/--col (pointwise) or --row/--topk\n{USAGE}")
+        }
+        (r, c) => {
+            if c >= session.ncols(view) {
+                anyhow::bail!("--col {c} out of range ({} columns)", session.ncols(view));
+            }
+            let p = session.predict_one(view, r, c);
+            println!("({r}, {c}) = {:.4} ± {:.4}", p.mean, p.std);
+        }
     }
     Ok(())
 }

@@ -75,6 +75,14 @@ impl NoiseModel {
         }
     }
 
+    /// Restore a snapshotted precision (store resume).  Fixed and probit
+    /// noise carry no evolving state, so this only touches Adaptive.
+    pub fn restore_alpha(&mut self, a: f64) {
+        if let NoiseModel::Adaptive { alpha, .. } = self {
+            *alpha = a;
+        }
+    }
+
     /// Probit augmentation: sample the latent z given the prediction m
     /// and the binary label (+1 / -1 by sign of the stored value).
     pub fn augment_probit(pred: f64, label: f64, rng: &mut Rng) -> f64 {
@@ -134,6 +142,19 @@ mod tests {
         }
         let mean = acc / n as f64;
         assert!((mean - 4.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn restore_alpha_only_touches_adaptive() {
+        let mut a = NoiseModel::new(&NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 }, 1.0);
+        a.restore_alpha(3.75);
+        assert_eq!(a.alpha(), 3.75);
+        let mut f = NoiseModel::new(&NoiseConfig::Fixed { precision: 2.0 }, 1.0);
+        f.restore_alpha(9.0);
+        assert_eq!(f.alpha(), 2.0);
+        let mut p = NoiseModel::new(&NoiseConfig::Probit, 1.0);
+        p.restore_alpha(9.0);
+        assert_eq!(p.alpha(), 1.0);
     }
 
     #[test]

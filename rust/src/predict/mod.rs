@@ -1,0 +1,608 @@
+//! Predict sessions: serve a trained model from a posterior store
+//! (SMURFF's `PredictSession`, Vander Aa et al. 2019 §3).
+//!
+//! A [`PredictSession`] opens a [`crate::store::ModelStore`] written by a
+//! `TrainSession` with `save_freq > 0` and serves, without touching the
+//! training stack again:
+//!
+//! * **pointwise** predictions averaged over the posterior samples, with
+//!   the per-cell posterior predictive std-dev ([`Prediction`]);
+//! * **dense-block** predictions — one GEMM per posterior sample, fanned
+//!   out over the coordinator [`ThreadPool`] and reduced in sample order
+//!   so results are identical for any thread count;
+//! * **top-K recommendation** per row via a bounded binary heap over the
+//!   candidate columns;
+//! * **out-of-matrix** prediction for rows never seen at training time,
+//!   through the Macau prior's link model (u_new = μ + βᵀ f).
+//!
+//! Serving averages the *same* per-sample predictions the train session
+//! aggregated, so a store saved every sampling iteration reproduces
+//! `TrainResult::rmse` to ~1 ulp (tested below).
+
+use crate::coordinator::ThreadPool;
+use crate::linalg::{dot, gemm, Mat};
+use crate::store::{ModelStore, Snapshot, StoreMeta};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::ops::Range;
+use std::path::Path;
+
+/// A served prediction: posterior mean and predictive std-dev across the
+/// stored samples (std is 0 with fewer than 2 samples, matching
+/// [`crate::model::PredictionAggregator`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Prediction {
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Dense-block prediction result: per-cell means and std-devs for a
+/// `rows × cols` rectangle of one view.
+#[derive(Debug, Clone)]
+pub struct BlockPrediction {
+    pub rows: Range<usize>,
+    pub cols: Range<usize>,
+    pub mean: Mat,
+    pub std: Mat,
+}
+
+/// A serving session over a loaded posterior store.
+pub struct PredictSession {
+    meta: StoreMeta,
+    samples: Vec<Snapshot>,
+    pool: ThreadPool,
+}
+
+impl PredictSession {
+    /// Open a store directory and load every posterior sample into
+    /// memory, with a pool sized from the machine.
+    pub fn open(dir: &Path) -> anyhow::Result<PredictSession> {
+        PredictSession::open_with_threads(dir, 0)
+    }
+
+    /// As [`open`](PredictSession::open) with an explicit worker count
+    /// (0 = all available cores).
+    pub fn open_with_threads(dir: &Path, threads: usize) -> anyhow::Result<PredictSession> {
+        let store = ModelStore::open(dir)?;
+        PredictSession::from_store(&store, threads)
+    }
+
+    /// Build a session from an already-open store handle.
+    pub fn from_store(store: &ModelStore, threads: usize) -> anyhow::Result<PredictSession> {
+        if store.is_empty() {
+            anyhow::bail!("model store {} holds no posterior samples", store.dir().display());
+        }
+        let meta = store.meta().clone();
+        let mut samples = Vec::with_capacity(store.len());
+        for i in 0..store.len() {
+            let snap = store.load_snapshot(i)?;
+            // validate payload shapes against the manifest up front: all
+            // serving paths bounds-check against the manifest only, and a
+            // mismatch surfacing inside a pool worker would hang the call
+            if snap.u.rows() != meta.nrows || snap.u.cols() != meta.num_latent {
+                anyhow::bail!(
+                    "sample {i}: U is {}x{}, manifest says {}x{}",
+                    snap.u.rows(),
+                    snap.u.cols(),
+                    meta.nrows,
+                    meta.num_latent
+                );
+            }
+            if snap.vs.len() != meta.view_ncols.len() {
+                anyhow::bail!("sample {i}: {} views, manifest says {}", snap.vs.len(), meta.view_ncols.len());
+            }
+            for (vi, (v, &nc)) in snap.vs.iter().zip(&meta.view_ncols).enumerate() {
+                if v.rows() != nc || v.cols() != meta.num_latent {
+                    anyhow::bail!(
+                        "sample {i}: V{vi} is {}x{}, manifest says {nc}x{}",
+                        v.rows(),
+                        v.cols(),
+                        meta.num_latent
+                    );
+                }
+            }
+            if let Some(link) = &snap.link {
+                if link.beta.rows() != meta.link_features
+                    || link.beta.cols() != meta.num_latent
+                    || link.mu.len() != meta.num_latent
+                {
+                    anyhow::bail!("sample {i}: link shapes do not match the manifest");
+                }
+            }
+            samples.push(snap);
+        }
+        let pool = if threads == 0 { ThreadPool::default_size() } else { ThreadPool::new(threads) };
+        Ok(PredictSession { meta, samples, pool })
+    }
+
+    pub fn nsamples(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn num_latent(&self) -> usize {
+        self.meta.num_latent
+    }
+
+    pub fn nviews(&self) -> usize {
+        self.meta.view_ncols.len()
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.meta.nrows
+    }
+
+    pub fn ncols(&self, view: usize) -> usize {
+        self.meta.view_ncols[view]
+    }
+
+    /// Whether the store carries a Macau link model (out-of-matrix
+    /// prediction available).
+    pub fn has_link(&self) -> bool {
+        self.meta.link_features > 0
+    }
+
+    /// Serve from only the first `n` posterior samples — the latency /
+    /// fidelity knob (fewer samples = faster, noisier).  No-op when `n`
+    /// is at least the loaded count; keeps at least one sample.
+    pub fn truncate_samples(&mut self, n: usize) {
+        self.samples.truncate(n.max(1));
+    }
+
+    /// Posterior mean + std for one cell of one view.
+    pub fn predict_one(&self, view: usize, row: usize, col: usize) -> Prediction {
+        self.check_cell(view, row, col);
+        let (sum, sumsq) = self.cell_moments(view, row, col);
+        self.finish(sum, sumsq, view)
+    }
+
+    /// Pointwise predictions for an explicit cell list (the serving
+    /// analogue of training's test-set aggregation), parallelized over
+    /// cells.  `rows` and `cols` must have equal length.
+    pub fn predict_cells(&self, view: usize, rows: &[u32], cols: &[u32]) -> Vec<Prediction> {
+        assert_eq!(rows.len(), cols.len(), "rows/cols length mismatch");
+        // validate on the caller thread: a panic inside a pool worker
+        // would hang the fork-join instead of propagating
+        for (&r, &c) in rows.iter().zip(cols) {
+            self.check_cell(view, r as usize, c as usize);
+        }
+        self.pool.parallel_collect(rows.len(), 64, |i| {
+            let (sum, sumsq) = self.cell_moments(view, rows[i] as usize, cols[i] as usize);
+            self.finish(sum, sumsq, view)
+        })
+    }
+
+    /// Dense-block prediction: one GEMM per posterior sample (U_blk ·
+    /// V_blkᵀ), fanned out over the pool, reduced in sample order.
+    pub fn predict_block(&self, view: usize, rows: Range<usize>, cols: Range<usize>) -> BlockPrediction {
+        assert!(view < self.nviews(), "view {view} out of range");
+        assert!(rows.end <= self.meta.nrows, "row range beyond {}", self.meta.nrows);
+        assert!(cols.end <= self.meta.view_ncols[view], "col range beyond {}", self.meta.view_ncols[view]);
+        let (nr, nc, k) = (rows.len(), cols.len(), self.meta.num_latent);
+
+        // per-sample score blocks, computed in parallel
+        let blocks: Vec<Mat> = self.pool.parallel_collect(self.samples.len(), 1, |s| {
+            let snap = &self.samples[s];
+            let mut ublk = Mat::zeros(nr, k);
+            for (bi, i) in rows.clone().enumerate() {
+                ublk.row_mut(bi).copy_from_slice(snap.u.row(i));
+            }
+            // V_blkᵀ laid out K × nc so the product is one plain GEMM
+            let v = &snap.vs[view];
+            let mut vt = Mat::zeros(k, nc);
+            for (bj, j) in cols.clone().enumerate() {
+                for (d, &x) in v.row(j).iter().enumerate() {
+                    vt[(d, bj)] = x;
+                }
+            }
+            gemm(&ublk, &vt)
+        });
+
+        // sequential sample-order reduction => thread-count independent
+        let n = blocks.len() as f64;
+        let mut sum = Mat::zeros(nr, nc);
+        let mut sumsq = Mat::zeros(nr, nc);
+        for b in &blocks {
+            for ((s, ss), &p) in sum.data_mut().iter_mut().zip(sumsq.data_mut()).zip(b.data()) {
+                *s += p;
+                *ss += p * p;
+            }
+        }
+        let offset = self.meta.offsets[view];
+        let mut mean = Mat::zeros(nr, nc);
+        let mut std = Mat::zeros(nr, nc);
+        for i in 0..nr * nc {
+            let s = sum.data()[i];
+            mean.data_mut()[i] = s / n + offset;
+            std.data_mut()[i] = variance(s, sumsq.data()[i], blocks.len()).sqrt();
+        }
+        BlockPrediction { rows, cols, mean, std }
+    }
+
+    /// Top-K recommendation: the K columns of `view` with the highest
+    /// posterior-mean score for `row`, excluding `exclude` (e.g. the
+    /// items the user already rated).  Returns (col, score) sorted by
+    /// descending score; ties break toward the smaller column index so
+    /// output is fully deterministic.
+    pub fn top_k(&self, view: usize, row: usize, k: usize, exclude: &[u32]) -> Vec<(u32, f64)> {
+        assert!(view < self.nviews(), "view {view} out of range");
+        assert!(row < self.meta.nrows, "row {row} out of range");
+        let ncols = self.meta.view_ncols[view];
+        let excluded: std::collections::HashSet<u32> = exclude.iter().copied().collect();
+
+        // scores for every candidate column, computed in parallel with
+        // the exact accumulation predict_one uses (consistency contract)
+        let scores: Vec<f64> = self
+            .pool
+            .parallel_collect(ncols, 128, |j| self.cell_moments(view, row, j).0);
+
+        let n = self.samples.len() as f64;
+        let offset = self.meta.offsets[view];
+        // bounded min-heap of the best K seen so far
+        let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> = BinaryHeap::with_capacity(k + 1);
+        for (j, &s) in scores.iter().enumerate() {
+            let col = j as u32;
+            if excluded.contains(&col) {
+                continue;
+            }
+            let entry = TopEntry { score: s / n + offset, col };
+            if heap.len() < k {
+                heap.push(std::cmp::Reverse(entry));
+            } else if let Some(min) = heap.peek() {
+                if entry > min.0 {
+                    heap.pop();
+                    heap.push(std::cmp::Reverse(entry));
+                }
+            }
+        }
+        let mut out: Vec<(u32, f64)> =
+            heap.into_iter().map(|r| (r.0.col, r.0.score)).collect();
+        out.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then_with(|| a.0.cmp(&b.0))
+        });
+        out
+    }
+
+    /// Out-of-matrix prediction: score `cols` of `view` for a row that
+    /// was *not* part of training, from its side-info feature vector
+    /// (dense, `link_features` long).  Per sample the row's latent is
+    /// reconstructed as u = μ + βᵀ f through the stored Macau link
+    /// model.
+    pub fn predict_new_row(
+        &self,
+        features: &[f64],
+        view: usize,
+        cols: &[u32],
+    ) -> anyhow::Result<Vec<Prediction>> {
+        if self.meta.link_features == 0 {
+            anyhow::bail!("store has no link model: train with a Macau row prior to serve unseen rows");
+        }
+        if features.len() != self.meta.link_features {
+            anyhow::bail!(
+                "feature vector has {} entries, link model expects {}",
+                features.len(),
+                self.meta.link_features
+            );
+        }
+        assert!(view < self.nviews(), "view {view} out of range");
+        let ncols = self.meta.view_ncols[view];
+        for &c in cols {
+            if c as usize >= ncols {
+                anyhow::bail!("column {c} out of range ({ncols} columns)");
+            }
+        }
+        let k = self.meta.num_latent;
+        // per-sample reconstructed latent row u = μ + βᵀ f
+        let mut us: Vec<Vec<f64>> = Vec::with_capacity(self.samples.len());
+        for snap in &self.samples {
+            let link = snap
+                .link
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("snapshot {} lacks link data", snap.iteration))?;
+            let mut u = crate::linalg::matvec_t(&link.beta, features);
+            for (ud, m) in u.iter_mut().zip(&link.mu) {
+                *ud += m;
+            }
+            debug_assert_eq!(u.len(), k);
+            us.push(u);
+        }
+        let preds = self.pool.parallel_collect(cols.len(), 64, |ci| {
+            let j = cols[ci] as usize;
+            let (mut sum, mut sumsq) = (0.0, 0.0);
+            for (snap, u) in self.samples.iter().zip(&us) {
+                let p = dot(u, snap.vs[view].row(j));
+                sum += p;
+                sumsq += p * p;
+            }
+            self.finish(sum, sumsq, view)
+        });
+        Ok(preds)
+    }
+
+    fn check_cell(&self, view: usize, row: usize, col: usize) {
+        assert!(view < self.nviews(), "view {view} out of range");
+        assert!(row < self.meta.nrows, "row {row} out of range");
+        assert!(col < self.meta.view_ncols[view], "col {col} out of range");
+    }
+
+    /// (Σ_s p_s, Σ_s p_s²) over samples for one cell — the single
+    /// accumulation routine every pointwise path shares, so top-K scores
+    /// and `predict_one` means are bit-identical.
+    #[inline]
+    fn cell_moments(&self, view: usize, row: usize, col: usize) -> (f64, f64) {
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for snap in &self.samples {
+            let p = dot(snap.u.row(row), snap.vs[view].row(col));
+            sum += p;
+            sumsq += p * p;
+        }
+        (sum, sumsq)
+    }
+
+    fn finish(&self, sum: f64, sumsq: f64, view: usize) -> Prediction {
+        let n = self.samples.len();
+        Prediction {
+            mean: sum / n as f64 + self.meta.offsets[view],
+            std: variance(sum, sumsq, n).sqrt(),
+        }
+    }
+}
+
+/// Sample variance from running moments (n-1 denominator, clamped at 0;
+/// 0 below 2 samples) — the same estimator as `PredictionAggregator`.
+fn variance(sum: f64, sumsq: f64, n: usize) -> f64 {
+    if n < 2 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    ((sumsq - sum * sum / nf) / (nf - 1.0)).max(0.0)
+}
+
+/// Heap entry ordered by score, ties toward the smaller column index.
+#[derive(PartialEq)]
+struct TopEntry {
+    score: f64,
+    col: u32,
+}
+
+impl Eq for TopEntry {}
+
+impl PartialOrd for TopEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TopEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score
+            .partial_cmp(&other.score)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.col.cmp(&self.col))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{MatrixConfig, TestSet};
+    use crate::noise::NoiseConfig;
+    use crate::session::{SessionBuilder, SessionConfig, TrainSession};
+    use crate::sparse::SparseMatrix;
+    use std::path::PathBuf;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("smurff_predict_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn saved_bmf(tag: &str) -> (crate::session::TrainResult, SparseMatrix, PathBuf) {
+        let (train, test) = crate::data::movielens_like(80, 60, 2_500, 0.25, 51);
+        let dir = scratch(tag);
+        let cfg = SessionConfig {
+            num_latent: 6,
+            burnin: 6,
+            nsamples: 12,
+            seed: 51,
+            threads: 2,
+            save_freq: 1,
+            save_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let mut s = TrainSession::bmf(train, Some(test.clone()), cfg);
+        let r = s.run();
+        (r, test, dir)
+    }
+
+    /// Acceptance (a): a store saved every sampling iteration serves the
+    /// same posterior-mean RMSE the train session reported.
+    #[test]
+    fn served_average_matches_training_rmse() {
+        let (r, test, dir) = saved_bmf("parity");
+        assert_eq!(r.nsnapshots, 12);
+        assert_eq!(r.store_path.as_deref(), Some(dir.as_path()));
+
+        let ps = PredictSession::open(&dir).unwrap();
+        assert_eq!(ps.nsamples(), 12);
+        let t = TestSet::from_sparse(&test);
+        let preds = ps.predict_cells(0, &t.rows, &t.cols);
+        let means: Vec<f64> = preds.iter().map(|p| p.mean).collect();
+        let rmse = crate::model::rmse(&means, &t.vals);
+        assert!(
+            (rmse - r.rmse).abs() < 1e-9,
+            "served rmse {rmse} vs trained {}",
+            r.rmse
+        );
+        // uncertainty is populated and sane
+        assert!(preds.iter().all(|p| p.std.is_finite() && p.std >= 0.0));
+        assert!(preds.iter().any(|p| p.std > 0.0));
+    }
+
+    /// Acceptance (b): top-K agrees with pointwise scoring — same values,
+    /// and genuinely the K best.
+    #[test]
+    fn top_k_is_consistent_with_pointwise_scores() {
+        let (_, _, dir) = saved_bmf("topk");
+        let ps = PredictSession::open(&dir).unwrap();
+        let user = 7;
+        let k = 5;
+        let top = ps.top_k(0, user, k, &[]);
+        assert_eq!(top.len(), k);
+        // scores descend and match predict_one exactly
+        for w in top.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        for &(col, score) in &top {
+            let p = ps.predict_one(0, user, col as usize);
+            assert_eq!(score, p.mean, "top-k score must equal pointwise mean");
+        }
+        // nothing outside the list beats the list's minimum
+        let floor = top.last().unwrap().1;
+        let in_list: std::collections::HashSet<u32> = top.iter().map(|t| t.0).collect();
+        for j in 0..ps.ncols(0) {
+            if !in_list.contains(&(j as u32)) {
+                assert!(ps.predict_one(0, user, j).mean <= floor);
+            }
+        }
+        // exclusion removes items from the candidate set
+        let excl: Vec<u32> = top.iter().map(|t| t.0).collect();
+        let top2 = ps.top_k(0, user, k, &excl);
+        assert!(top2.iter().all(|t| !in_list.contains(&t.0)));
+        assert!(top2.first().unwrap().1 <= floor);
+    }
+
+    #[test]
+    fn block_prediction_matches_pointwise() {
+        let (_, _, dir) = saved_bmf("block");
+        let ps = PredictSession::open_with_threads(&dir, 3).unwrap();
+        let blk = ps.predict_block(0, 5..15, 3..9);
+        assert_eq!((blk.mean.rows(), blk.mean.cols()), (10, 6));
+        for bi in 0..10 {
+            for bj in 0..6 {
+                let p = ps.predict_one(0, 5 + bi, 3 + bj);
+                assert!(
+                    (blk.mean[(bi, bj)] - p.mean).abs() < 1e-9,
+                    "mean mismatch at ({bi},{bj})"
+                );
+                assert!((blk.std[(bi, bj)] - p.std).abs() < 1e-9);
+            }
+        }
+        // thread count must not change block results
+        let ps1 = PredictSession::open_with_threads(&dir, 1).unwrap();
+        let blk1 = ps1.predict_block(0, 5..15, 3..9);
+        assert_eq!(blk.mean.max_abs_diff(&blk1.mean), 0.0);
+        assert_eq!(blk.std.max_abs_diff(&blk1.std), 0.0);
+    }
+
+    /// Acceptance (c): out-of-matrix Macau prediction for rows held out
+    /// of training beats the global-mean baseline.
+    #[test]
+    fn out_of_matrix_beats_global_mean() {
+        let d = crate::data::chembl_synth(&crate::data::ChemblSpec {
+            compounds: 100,
+            proteins: 30,
+            nnz: 3_000,
+            fp_bits: 64,
+            fp_density: 8,
+            seed: 52,
+            ..Default::default()
+        });
+        // hold rows 0..5 out of training entirely
+        const HELD: u32 = 5;
+        let all: Vec<(u32, u32, f64)> = d.activity.triplets().collect();
+        let train: Vec<_> = all.iter().copied().filter(|t| t.0 >= HELD).collect();
+        let held: Vec<_> = all.iter().copied().filter(|t| t.0 < HELD).collect();
+        assert!(held.len() >= 5, "need held-out cells, got {}", held.len());
+        let train_m =
+            SparseMatrix::from_triplets(d.activity.nrows(), d.activity.ncols(), train);
+
+        let dir = scratch("oom");
+        let cfg = SessionConfig {
+            num_latent: 4,
+            burnin: 15,
+            nsamples: 20,
+            seed: 52,
+            threads: 2,
+            save_freq: 2,
+            save_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let mut s = SessionBuilder::new(cfg)
+            .row_macau(d.fingerprints_sparse.clone())
+            .add_view(
+                MatrixConfig::SparseUnknown(train_m.clone()),
+                NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+                None,
+            )
+            .build();
+        let r = s.run();
+        assert_eq!(r.nsnapshots, 10);
+
+        let ps = PredictSession::open(&dir).unwrap();
+        assert!(ps.has_link());
+        let mut feats = vec![0.0; 64];
+        let mut preds = Vec::new();
+        let mut truth = Vec::new();
+        for row in 0..HELD {
+            let cols: Vec<u32> =
+                held.iter().filter(|t| t.0 == row).map(|t| t.1).collect();
+            if cols.is_empty() {
+                continue;
+            }
+            d.fingerprints_sparse.row_dense(row as usize, &mut feats);
+            for p in ps.predict_new_row(&feats, 0, &cols).unwrap() {
+                preds.push(p.mean);
+            }
+            truth.extend(held.iter().filter(|t| t.0 == row).map(|t| t.2));
+        }
+        let rmse_oom = crate::model::rmse(&preds, &truth);
+        let global_mean = train_m.mean_value();
+        let rmse_mean = crate::model::rmse(&vec![global_mean; truth.len()], &truth);
+        assert!(
+            rmse_oom < rmse_mean,
+            "out-of-matrix rmse {rmse_oom} must beat global-mean {rmse_mean}"
+        );
+    }
+
+    #[test]
+    fn new_row_requires_link_and_matching_features() {
+        let (_, _, dir) = saved_bmf("nolink");
+        let ps = PredictSession::open(&dir).unwrap();
+        assert!(!ps.has_link());
+        assert!(ps.predict_new_row(&[0.0; 8], 0, &[1]).is_err());
+    }
+
+    #[test]
+    fn open_rejects_manifest_payload_mismatch() {
+        let (_, _, dir) = saved_bmf("corrupt");
+        // clobber one sample's U with a wrong-shape payload: opening must
+        // error instead of serving out-of-bounds reads later
+        let store = crate::store::ModelStore::open(&dir).unwrap();
+        let sample = dir.join(format!("sample_{:05}", store.iterations()[0]));
+        crate::sparse::io::write_dbm(&Mat::zeros(3, 3), &sample.join("u.dbm")).unwrap();
+        let err = PredictSession::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("manifest says"), "{err}");
+    }
+
+    #[test]
+    fn single_sample_store_has_zero_std() {
+        let (train, _) = crate::data::movielens_like(30, 20, 400, 0.0, 53);
+        let dir = scratch("one");
+        let cfg = SessionConfig {
+            num_latent: 3,
+            burnin: 2,
+            nsamples: 1,
+            threads: 1,
+            save_freq: 1,
+            save_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        let mut s = TrainSession::bmf(train, None, cfg);
+        let r = s.run();
+        assert_eq!(r.nsnapshots, 1);
+        let ps = PredictSession::open(&dir).unwrap();
+        let p = ps.predict_one(0, 0, 0);
+        assert_eq!(p.std, 0.0);
+        assert!(p.mean.is_finite());
+    }
+}

@@ -10,7 +10,7 @@
 //! DESIGN.md §4: exact for diagonal Λ, a close approximation otherwise;
 //! F is never densified or factorized).
 
-use super::{MeanSpec, MvnSpec, Prior, PriorKind};
+use super::{LinkSpec, MeanSpec, MvnSpec, Prior, PriorKind};
 use crate::data::SideInfo;
 use crate::linalg::{cg_solve, ger_sym, Mat};
 use crate::rng::Rng;
@@ -178,6 +178,22 @@ impl Prior for MacauPrior {
         self.sample_beta(latents, rng);
         self.refresh_means();
     }
+
+    fn link_spec(&self) -> Option<LinkSpec<'_>> {
+        Some(LinkSpec { beta: &self.beta, mu: &self.inner.mu, lambda_beta: self.lambda_beta })
+    }
+
+    fn restore_link(&mut self, beta: Mat, lambda_beta: f64) -> bool {
+        assert_eq!(
+            (beta.rows(), beta.cols()),
+            (self.beta.rows(), self.beta.cols()),
+            "restored β shape mismatch"
+        );
+        self.beta = beta;
+        self.lambda_beta = lambda_beta;
+        self.refresh_means();
+        true
+    }
 }
 
 #[cfg(test)]
@@ -289,5 +305,32 @@ mod tests {
     #[should_panic]
     fn mismatched_side_rows_panic() {
         MacauPrior::new(2, 10, SideInfo::Dense(Mat::zeros(11, 3)));
+    }
+
+    #[test]
+    fn link_spec_exposes_beta_and_restore_round_trips() {
+        let mut rng = Rng::new(45);
+        let (n, f, k) = (40, 6, 2);
+        let mut fmat = Mat::zeros(n, f);
+        rng.fill_normal(fmat.data_mut());
+        let mut latents = Mat::zeros(n, k);
+        rng.fill_normal(latents.data_mut());
+        let mut prior = MacauPrior::new(k, n, SideInfo::Dense(fmat));
+        prior.update_hyper(&latents, &mut rng);
+        prior.post_latents(&latents, &mut rng);
+        let (beta, lb) = {
+            let spec = prior.link_spec().unwrap();
+            assert_eq!((spec.beta.rows(), spec.beta.cols()), (f, k));
+            assert_eq!(spec.mu.len(), k);
+            (spec.beta.clone(), spec.lambda_beta)
+        };
+        // restore into a fresh prior: β and λ_β must come back verbatim
+        let mut fmat2 = Mat::zeros(n, f);
+        let mut rng2 = Rng::new(45);
+        rng2.fill_normal(fmat2.data_mut());
+        let mut fresh = MacauPrior::new(k, n, SideInfo::Dense(fmat2));
+        assert!(fresh.restore_link(beta.clone(), lb));
+        assert_eq!(fresh.beta.max_abs_diff(&beta), 0.0);
+        assert_eq!(fresh.lambda_beta, lb);
     }
 }

@@ -58,6 +58,17 @@ pub struct MvnSpec<'a> {
     pub means: MeanSpec<'a>,
 }
 
+/// Link-model parameters a side-information prior exposes for posterior
+/// snapshotting and out-of-matrix prediction (Macau: u_new = μ + βᵀ f).
+pub struct LinkSpec<'a> {
+    /// link matrix β, nfeatures × K
+    pub beta: &'a Mat,
+    /// current latent mean μ, K
+    pub mu: &'a [f64],
+    /// ridge strength λ_β (needed to resume the β sampler bit-exactly)
+    pub lambda_beta: f64,
+}
+
 /// One observed entry of a row, as seen by custom row samplers.
 pub struct RowObs<'a> {
     /// indices into the *other* side's latent matrix
@@ -99,6 +110,19 @@ pub trait Prior: Send + Sync {
     /// Called after the side's latents were resampled (Macau: resample β
     /// and refresh per-row means; spike-and-slab: no-op).
     fn post_latents(&mut self, latents: &Mat, rng: &mut Rng);
+
+    /// Side-information link model, if this prior has one (Macau).  The
+    /// model store snapshots it so `PredictSession` can serve rows that
+    /// were never part of training.
+    fn link_spec(&self) -> Option<LinkSpec<'_>> {
+        None
+    }
+
+    /// Restore a snapshotted link model (store resume).  Returns `false`
+    /// for priors without one.
+    fn restore_link(&mut self, _beta: Mat, _lambda_beta: f64) -> bool {
+        false
+    }
 }
 
 /// Construct a prior by kind with default hyper-hyper-parameters.

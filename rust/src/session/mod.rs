@@ -28,7 +28,9 @@ use crate::noise::{NoiseConfig, NoiseModel};
 use crate::priors::{MacauPrior, NormalPrior, Prior, PriorKind, SpikeAndSlabPrior};
 use crate::rng::Rng;
 use crate::sparse::SparseMatrix;
+use crate::store::{LinkState, ModelStore, Snapshot, StoreMeta};
 use crate::util::Timer;
+use std::path::PathBuf;
 
 /// Session-level configuration (the `[session]` block of config files).
 #[derive(Debug, Clone)]
@@ -43,6 +45,11 @@ pub struct SessionConfig {
     pub verbose: bool,
     /// report/checkpoint every n iterations
     pub report_freq: usize,
+    /// snapshot every n post-burn-in samples into `save_dir`
+    /// (0 = keep nothing; SMURFF's `save_freq`)
+    pub save_freq: usize,
+    /// posterior model-store directory (required when `save_freq > 0`)
+    pub save_dir: Option<PathBuf>,
 }
 
 impl Default for SessionConfig {
@@ -56,6 +63,8 @@ impl Default for SessionConfig {
             init_std: 0.3,
             verbose: false,
             report_freq: 10,
+            save_freq: 0,
+            save_dir: None,
         }
     }
 }
@@ -85,6 +94,11 @@ pub struct TrainResult {
     pub train_seconds: f64,
     /// per-view posterior-mean RMSE
     pub view_rmse: Vec<f64>,
+    /// posterior model store written during the run (None when saving
+    /// was off); open with `predict::PredictSession` to serve it
+    pub store_path: Option<PathBuf>,
+    /// number of posterior snapshots persisted to `store_path`
+    pub nsnapshots: usize,
 }
 
 /// Builder: the composition surface of Table 1.
@@ -452,10 +466,20 @@ impl TrainSession {
         }
     }
 
-    /// Run burn-in + sampling to completion.
+    /// Run burn-in + sampling to completion, panicking on store I/O
+    /// failures (use [`try_run`](TrainSession::try_run) to handle them).
     pub fn run(&mut self) -> TrainResult {
+        self.try_run().expect("training run failed")
+    }
+
+    /// Run burn-in + sampling to completion.  With `save_freq > 0` and a
+    /// `save_dir`, posterior snapshots are written into a
+    /// [`ModelStore`] every `save_freq` sampling iterations — the
+    /// persistence side of the train → predict workflow.
+    pub fn try_run(&mut self) -> anyhow::Result<TrainResult> {
         let timer = Timer::start();
         let total = self.cfg.burnin + self.cfg.nsamples;
+        let mut store = self.open_store()?;
         let mut rmse_history = Vec::new();
         while self.iteration < total {
             self.step();
@@ -463,6 +487,12 @@ impl TrainSession {
                 let r = self.view_rmse(0);
                 if !r.is_nan() {
                     rmse_history.push(r);
+                }
+            }
+            if let Some(st) = store.as_mut() {
+                let sample_no = self.iteration.saturating_sub(self.cfg.burnin);
+                if sample_no > 0 && sample_no % self.cfg.save_freq == 0 {
+                    st.save_snapshot(&self.snapshot_state())?;
                 }
             }
             if self.cfg.verbose && self.iteration % self.cfg.report_freq.max(1) == 0 {
@@ -478,14 +508,136 @@ impl TrainSession {
         }
         let view_rmse: Vec<f64> = (0..self.views.len()).map(|i| self.view_rmse(i)).collect();
         let auc = self.view_auc(0);
-        TrainResult {
+        Ok(TrainResult {
             rmse: view_rmse.first().copied().unwrap_or(f64::NAN),
             auc,
             rmse_history,
             iterations: self.iteration,
             train_seconds: timer.elapsed_s(),
             view_rmse,
+            store_path: store.as_ref().map(|s| s.dir().to_path_buf()),
+            nsnapshots: store.as_ref().map(|s| s.len()).unwrap_or(0),
+        })
+    }
+
+    /// Create (or, when resuming mid-store, reopen) the posterior store
+    /// this run should append to.  `None` when saving is off.
+    fn open_store(&self) -> anyhow::Result<Option<ModelStore>> {
+        let dir = match (&self.cfg.save_dir, self.cfg.save_freq) {
+            (Some(dir), freq) if freq > 0 => dir.clone(),
+            (None, freq) if freq > 0 => {
+                anyhow::bail!("save_freq is set but save_dir is not")
+            }
+            _ => return Ok(None),
+        };
+        if self.cfg.save_freq > self.cfg.nsamples {
+            crate::log_warn!(
+                "save_freq {} exceeds nsamples {}: the store will stay empty",
+                self.cfg.save_freq,
+                self.cfg.nsamples
+            );
         }
+        if self.iteration > 0 && dir.join("manifest.json").exists() {
+            // resumed session: keep appending to the existing store
+            let store = ModelStore::open(&dir)?;
+            let meta = self.store_meta();
+            if *store.meta() != meta {
+                anyhow::bail!("existing store at {} does not match this session", dir.display());
+            }
+            return Ok(Some(store));
+        }
+        Ok(Some(ModelStore::create(&dir, self.store_meta())?))
+    }
+
+    /// The store description for this session's shapes.
+    pub fn store_meta(&self) -> StoreMeta {
+        StoreMeta {
+            num_latent: self.cfg.num_latent,
+            nrows: self.u.rows(),
+            view_ncols: self.views.iter().map(|v| v.col_latents.rows()).collect(),
+            offsets: self.views.iter().map(|v| v.offset).collect(),
+            save_freq: self.cfg.save_freq,
+            link_features: self.row_prior.link_spec().map(|l| l.beta.rows()).unwrap_or(0),
+        }
+    }
+
+    /// Capture the current Gibbs state as a posterior [`Snapshot`].
+    pub fn snapshot_state(&self) -> Snapshot {
+        Snapshot {
+            iteration: self.iteration,
+            u: self.u.clone(),
+            vs: self.views.iter().map(|v| v.col_latents.clone()).collect(),
+            alphas: self.views.iter().map(|v| v.noise.alpha()).collect(),
+            link: self.row_prior.link_spec().map(|l| LinkState {
+                beta: l.beta.clone(),
+                mu: l.mu.to_vec(),
+                lambda_beta: l.lambda_beta,
+            }),
+        }
+    }
+
+    /// Restore the latest snapshot of `store` into this session (shapes
+    /// must match) and continue from its iteration — the full-state
+    /// counterpart of [`Checkpoint`] that also brings back adaptive
+    /// noise precision and the Macau link model, so the *sampled chain*
+    /// (latents, β, α) continues bit-identically to an uninterrupted
+    /// run.  Test-metric aggregators are not persisted: after a resume,
+    /// `TrainResult` metrics average only post-resume samples (a warning
+    /// is logged when test sets are attached).
+    pub fn restore_from_store(&mut self, store: &ModelStore) -> anyhow::Result<()> {
+        let snap = store
+            .load_latest()?
+            .ok_or_else(|| anyhow::anyhow!("store at {} is empty", store.dir().display()))?;
+        self.restore_snapshot(snap)
+    }
+
+    /// Restore one posterior snapshot into this session's live state.
+    pub fn restore_snapshot(&mut self, snap: Snapshot) -> anyhow::Result<()> {
+        if snap.u.rows() != self.u.rows() || snap.u.cols() != self.u.cols() {
+            anyhow::bail!("snapshot U shape mismatch");
+        }
+        if snap.vs.len() != self.views.len() || snap.alphas.len() != self.views.len() {
+            anyhow::bail!("snapshot view count mismatch");
+        }
+        for (v, view) in snap.vs.iter().zip(&self.views) {
+            if v.rows() != view.col_latents.rows() || v.cols() != view.col_latents.cols() {
+                anyhow::bail!("snapshot V shape mismatch");
+            }
+        }
+        match (snap.link, self.row_prior.link_spec().is_some()) {
+            (Some(link), true) => {
+                let want = {
+                    let spec = self.row_prior.link_spec().expect("link presence checked");
+                    (spec.beta.rows(), spec.beta.cols())
+                };
+                if (link.beta.rows(), link.beta.cols()) != want {
+                    anyhow::bail!(
+                        "snapshot link matrix is {}x{}, session expects {}x{}",
+                        link.beta.rows(),
+                        link.beta.cols(),
+                        want.0,
+                        want.1
+                    );
+                }
+                self.row_prior.restore_link(link.beta, link.lambda_beta);
+            }
+            (None, false) => {}
+            (Some(_), false) => anyhow::bail!("snapshot has a link model but the session does not"),
+            (None, true) => anyhow::bail!("session expects a link model the snapshot lacks"),
+        }
+        self.u = snap.u;
+        for ((view, v), &alpha) in self.views.iter_mut().zip(snap.vs).zip(&snap.alphas) {
+            view.col_latents = v;
+            view.noise.restore_alpha(alpha);
+        }
+        if snap.iteration > self.cfg.burnin && self.views.iter().any(|v| v.test.is_some()) {
+            crate::log_warn!(
+                "resuming at iteration {} (> burn-in): test metrics will average only post-resume samples",
+                snap.iteration
+            );
+        }
+        self.iteration = snap.iteration;
+        Ok(())
     }
 
     /// AUC of a probit view's posterior-mean scores (NaN if not binary).
@@ -649,6 +801,111 @@ mod tests {
             .add_view(a, NoiseConfig::default(), None)
             .add_view(b, NoiseConfig::default(), None)
             .build();
+    }
+
+    fn store_scratch(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("smurff_sess_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn train_result_reports_store_path_and_snapshot_count() {
+        let (train, test) = crate::data::movielens_like(50, 40, 1_000, 0.2, 13);
+        let dir = store_scratch("result");
+        let mut cfg = quick_cfg(4, 4, 10);
+        cfg.save_freq = 3;
+        cfg.save_dir = Some(dir.clone());
+        let mut s = TrainSession::bmf(train, Some(test), cfg);
+        let r = s.run();
+        // samples 3, 6 and 9 of 10 hit the save cadence
+        assert_eq!(r.nsnapshots, 3);
+        assert_eq!(r.store_path.as_deref(), Some(dir.as_path()));
+        let store = crate::store::ModelStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.iterations(), vec![7, 10, 13]);
+        assert_eq!(store.meta().num_latent, 4);
+        assert_eq!(store.meta().link_features, 0);
+    }
+
+    #[test]
+    fn save_freq_without_dir_is_an_error() {
+        let (train, _) = crate::data::movielens_like(20, 15, 200, 0.0, 16);
+        let mut cfg = quick_cfg(2, 1, 2);
+        cfg.save_freq = 1;
+        let mut s = TrainSession::bmf(train, None, cfg);
+        assert!(s.try_run().is_err());
+    }
+
+    #[test]
+    fn store_resume_continues_identically_with_adaptive_noise() {
+        let (train, _) = crate::data::movielens_like(50, 40, 1_000, 0.0, 14);
+        let dir = store_scratch("resume");
+        let mut cfg = quick_cfg(4, 2, 6);
+        cfg.seed = 14;
+        let build = |cfg: SessionConfig, train: SparseMatrix| {
+            SessionBuilder::new(cfg)
+                .add_view(
+                    MatrixConfig::SparseUnknown(train),
+                    NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+                    None,
+                )
+                .build()
+        };
+        let mut save_cfg = cfg.clone();
+        save_cfg.save_freq = 3;
+        save_cfg.save_dir = Some(dir.clone());
+        let mut s1 = build(save_cfg, train.clone());
+        let r1 = s1.run();
+        assert_eq!(r1.nsnapshots, 2); // samples 3 and 6 → iterations 5 and 8
+
+        let mut s2 = build(cfg, train);
+        let store = crate::store::ModelStore::open(&dir).unwrap();
+        s2.restore_snapshot(store.load_snapshot(0).unwrap()).unwrap();
+        assert_eq!(s2.iteration(), 5);
+        for _ in 0..3 {
+            s2.step();
+        }
+        assert_eq!(s2.iteration(), 8);
+        assert_eq!(s2.u.max_abs_diff(&s1.u), 0.0, "resumed run must match uninterrupted");
+        assert_eq!(s2.views[0].col_latents.max_abs_diff(&s1.views[0].col_latents), 0.0);
+        assert_eq!(s2.views[0].noise.alpha(), s1.views[0].noise.alpha());
+    }
+
+    #[test]
+    fn store_resume_is_exact_for_macau() {
+        let d = crate::data::chembl_synth(&crate::data::ChemblSpec {
+            compounds: 60,
+            proteins: 20,
+            nnz: 900,
+            fp_bits: 32,
+            fp_density: 6,
+            seed: 15,
+            ..Default::default()
+        });
+        let dir = store_scratch("macau");
+        let mut cfg = quick_cfg(3, 2, 4);
+        cfg.seed = 15;
+        let mut save_cfg = cfg.clone();
+        save_cfg.save_freq = 2;
+        save_cfg.save_dir = Some(dir.clone());
+        let mut s1 =
+            TrainSession::macau(d.activity.clone(), None, d.fingerprints_sparse.clone(), save_cfg);
+        let r1 = s1.run();
+        assert_eq!(r1.nsnapshots, 2); // iterations 4 and 6
+        let store = crate::store::ModelStore::open(&dir).unwrap();
+        assert!(store.meta().link_features > 0);
+
+        let mut s2 = TrainSession::macau(d.activity, None, d.fingerprints_sparse, cfg);
+        s2.restore_snapshot(store.load_snapshot(0).unwrap()).unwrap();
+        for _ in 0..2 {
+            s2.step();
+        }
+        assert_eq!(s2.iteration(), 6);
+        assert_eq!(s2.u.max_abs_diff(&s1.u), 0.0, "Macau resume must be bit-exact");
+        let b1 = s1.row_prior.link_spec().unwrap().beta.clone();
+        let b2 = s2.row_prior.link_spec().unwrap().beta.clone();
+        assert_eq!(b1.max_abs_diff(&b2), 0.0);
     }
 
     #[test]

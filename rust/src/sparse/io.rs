@@ -216,6 +216,39 @@ mod tests {
         assert_eq!(m.triplets().collect::<Vec<_>>(), m2.triplets().collect::<Vec<_>>());
     }
 
+    /// Full write → read → equal contract: values, shape AND nnz survive
+    /// both formats, including trailing empty rows/columns (which the
+    /// triplet stream alone cannot represent).
+    #[test]
+    fn round_trip_preserves_values_shape_and_nnz() {
+        let m = SparseMatrix::from_triplets(
+            7,
+            6,
+            vec![(0, 5, -3.5), (2, 0, 1e-12), (4, 3, 4.25), (4, 4, -0.0)],
+        );
+        for fmt in ["sbm", "mtx"] {
+            let p = tmpdir().join(format!("shape.{fmt}"));
+            let m2 = match fmt {
+                "sbm" => {
+                    write_sbm(&m, &p).unwrap();
+                    read_sbm(&p).unwrap()
+                }
+                _ => {
+                    write_matrix_market(&m, &p).unwrap();
+                    read_matrix_market(&p).unwrap()
+                }
+            };
+            assert_eq!(m2.nrows(), m.nrows(), "{fmt}: nrows");
+            assert_eq!(m2.ncols(), m.ncols(), "{fmt}: ncols");
+            assert_eq!(m2.nnz(), m.nnz(), "{fmt}: nnz");
+            assert_eq!(
+                m2.triplets().collect::<Vec<_>>(),
+                m.triplets().collect::<Vec<_>>(),
+                "{fmt}: values"
+            );
+        }
+    }
+
     #[test]
     fn sbm_rejects_wrong_magic() {
         let p = tmpdir().join("x.sbm");

@@ -1,0 +1,506 @@
+//! Versioned on-disk posterior model store (the persistence half of
+//! SMURFF's two-phase train → predict workflow, Vander Aa et al. 2019 §3).
+//!
+//! A [`ModelStore`] is a directory holding one posterior *sample* per
+//! subdirectory — the U/V factor matrices drawn at a Gibbs iteration,
+//! the per-view noise precision, and (for Macau row priors) the link
+//! matrix β plus the latent mean μ needed for out-of-matrix prediction —
+//! indexed by a human-readable `manifest.json` written with
+//! [`crate::util::json`]:
+//!
+//! ```text
+//! store/
+//!   manifest.json            format, version, dims, offsets, snapshot index
+//!   sample_00021/
+//!     meta.json              iteration, per-view noise α
+//!     u.dbm                  row factors  (N × K, binary dense)
+//!     v0.dbm … v<i>.dbm      column factors per view
+//!     link_beta.dbm          Macau β (F × K)          [optional]
+//!     link_mu.dbm            Macau μ (1 × K)          [optional]
+//! ```
+//!
+//! The store is written incrementally during sampling (the `save_freq`
+//! knob on `SessionConfig`), re-opened by `predict::PredictSession` for
+//! serving, and by `TrainSession::restore_from_store` to resume a run.
+//! Posterior-sample files round-trip bit-exactly (little-endian `f64`),
+//! which is what lets served averages match in-training RMSE to the
+//! last ulp.
+
+use crate::linalg::Mat;
+use crate::sparse::io::{read_dbm, write_dbm};
+use crate::util::JsonValue;
+use std::path::{Path, PathBuf};
+
+/// Manifest `format` tag; guards against pointing the loader at some
+/// other JSON-bearing directory.
+pub const STORE_FORMAT: &str = "smurff-model-store";
+/// Manifest schema version; bump on incompatible layout changes.
+pub const STORE_VERSION: usize = 1;
+
+/// Immutable description of the model a store holds (shapes + the
+/// prediction constants that do not vary per sample).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreMeta {
+    pub num_latent: usize,
+    /// shared row dimension of all views
+    pub nrows: usize,
+    /// per-view column counts
+    pub view_ncols: Vec<usize>,
+    /// per-view global-mean offsets (removed at training, added back at
+    /// prediction)
+    pub offsets: Vec<f64>,
+    /// sampling iterations between snapshots the producer used
+    pub save_freq: usize,
+    /// side-info feature count feeding the row link matrix (0 = no link)
+    pub link_features: usize,
+}
+
+impl StoreMeta {
+    fn to_json(&self, snapshots: &[SnapshotInfo]) -> JsonValue {
+        JsonValue::obj(vec![
+            ("format", JsonValue::str(STORE_FORMAT)),
+            ("version", JsonValue::num(STORE_VERSION as f64)),
+            ("num_latent", JsonValue::num(self.num_latent as f64)),
+            ("nrows", JsonValue::num(self.nrows as f64)),
+            ("view_ncols", JsonValue::arr_usize(&self.view_ncols)),
+            ("offsets", JsonValue::arr_f64(&self.offsets)),
+            ("save_freq", JsonValue::num(self.save_freq as f64)),
+            ("link_features", JsonValue::num(self.link_features as f64)),
+            (
+                "snapshots",
+                JsonValue::Array(
+                    snapshots
+                        .iter()
+                        .map(|s| {
+                            JsonValue::obj(vec![
+                                ("iteration", JsonValue::num(s.iteration as f64)),
+                                ("dir", JsonValue::str(&s.dir)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The Macau row link model captured with each sample: everything needed
+/// both to predict unseen rows (β, μ) and to resume sampling bit-exactly
+/// (λ_β feeds the next β draw).
+#[derive(Debug, Clone)]
+pub struct LinkState {
+    /// link matrix, F × K
+    pub beta: Mat,
+    /// latent mean μ, K
+    pub mu: Vec<f64>,
+    /// ridge strength λ_β at snapshot time
+    pub lambda_beta: f64,
+}
+
+/// One posterior sample of the full model.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// completed Gibbs iterations when this sample was drawn
+    pub iteration: usize,
+    /// row factors, N × K
+    pub u: Mat,
+    /// per-view column factors, ncols_v × K
+    pub vs: Vec<Mat>,
+    /// per-view likelihood precision α at snapshot time
+    pub alphas: Vec<f64>,
+    /// Macau row link model — enables prediction for rows never seen at
+    /// training time
+    pub link: Option<LinkState>,
+}
+
+#[derive(Debug, Clone)]
+struct SnapshotInfo {
+    iteration: usize,
+    dir: String,
+}
+
+/// An open model store (created by training, read by serving).
+pub struct ModelStore {
+    dir: PathBuf,
+    meta: StoreMeta,
+    snapshots: Vec<SnapshotInfo>,
+}
+
+impl ModelStore {
+    /// Create a fresh store directory and write an empty manifest.
+    /// Fails if `dir` already contains a manifest (stores are append-only
+    /// within one run; delete or point elsewhere to start over).
+    pub fn create(dir: &Path, meta: StoreMeta) -> anyhow::Result<ModelStore> {
+        std::fs::create_dir_all(dir)?;
+        if dir.join("manifest.json").exists() {
+            anyhow::bail!("{} already contains a model store", dir.display());
+        }
+        if meta.view_ncols.len() != meta.offsets.len() {
+            anyhow::bail!("store meta: view_ncols and offsets length mismatch");
+        }
+        let store = ModelStore { dir: dir.to_path_buf(), meta, snapshots: Vec::new() };
+        store.write_manifest()?;
+        Ok(store)
+    }
+
+    /// Open an existing store, validating format and version.
+    pub fn open(dir: &Path) -> anyhow::Result<ModelStore> {
+        let manifest_path = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", manifest_path.display()))?;
+        let m = JsonValue::parse(&src)
+            .map_err(|e| anyhow::anyhow!("bad store manifest: {e}"))?;
+        let format = m.get("format").and_then(|v| v.as_str()).unwrap_or("");
+        if format != STORE_FORMAT {
+            anyhow::bail!("{} is not a model store (format '{format}')", dir.display());
+        }
+        let version = m.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != STORE_VERSION {
+            anyhow::bail!("unsupported store version {version} (expected {STORE_VERSION})");
+        }
+        let req_usize = |key: &str| {
+            m.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("store manifest missing '{key}'"))
+        };
+        let view_ncols: Vec<usize> = m
+            .get("view_ncols")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow::anyhow!("store manifest missing 'view_ncols'"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad view_ncols entry")))
+            .collect::<anyhow::Result<_>>()?;
+        let offsets: Vec<f64> = m
+            .get("offsets")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow::anyhow!("store manifest missing 'offsets'"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("bad offsets entry")))
+            .collect::<anyhow::Result<_>>()?;
+        if view_ncols.len() != offsets.len() {
+            anyhow::bail!("store manifest: view_ncols and offsets length mismatch");
+        }
+        let mut snapshots = Vec::new();
+        for s in m
+            .get("snapshots")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow::anyhow!("store manifest missing 'snapshots'"))?
+        {
+            let iteration = s
+                .get("iteration")
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow::anyhow!("snapshot entry missing 'iteration'"))?;
+            let subdir = s
+                .get("dir")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("snapshot entry missing 'dir'"))?;
+            snapshots.push(SnapshotInfo { iteration, dir: subdir.to_string() });
+        }
+        snapshots.sort_by_key(|s| s.iteration);
+        Ok(ModelStore {
+            dir: dir.to_path_buf(),
+            meta: StoreMeta {
+                num_latent: req_usize("num_latent")?,
+                nrows: req_usize("nrows")?,
+                view_ncols,
+                offsets,
+                save_freq: req_usize("save_freq")?,
+                link_features: req_usize("link_features")?,
+            },
+            snapshots,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    /// Number of stored posterior samples.
+    pub fn len(&self) -> usize {
+        self.snapshots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.snapshots.is_empty()
+    }
+
+    /// Iterations at which samples were taken, ascending.
+    pub fn iterations(&self) -> Vec<usize> {
+        self.snapshots.iter().map(|s| s.iteration).collect()
+    }
+
+    fn write_manifest(&self) -> anyhow::Result<()> {
+        // write-then-rename so a crash mid-write never corrupts the index
+        let tmp = self.dir.join("manifest.json.tmp");
+        std::fs::write(&tmp, self.meta.to_json(&self.snapshots).to_string_pretty())?;
+        std::fs::rename(&tmp, self.dir.join("manifest.json"))?;
+        Ok(())
+    }
+
+    /// Append one posterior sample: write its files, then re-index the
+    /// manifest (so readers only ever see fully-written snapshots).
+    /// Iterations must strictly increase — replaying past iterations
+    /// (e.g. after restoring a non-latest snapshot with saving still
+    /// on) would otherwise silently double-count samples at serving.
+    pub fn save_snapshot(&mut self, snap: &Snapshot) -> anyhow::Result<()> {
+        if let Some(last) = self.snapshots.last() {
+            if snap.iteration <= last.iteration {
+                anyhow::bail!(
+                    "snapshot iteration {} not after last stored {} (store is append-only; \
+                     point save_dir at a fresh directory when replaying)",
+                    snap.iteration,
+                    last.iteration
+                );
+            }
+        }
+        let k = self.meta.num_latent;
+        if snap.u.rows() != self.meta.nrows || snap.u.cols() != k {
+            anyhow::bail!(
+                "snapshot U is {}x{}, store expects {}x{k}",
+                snap.u.rows(),
+                snap.u.cols(),
+                self.meta.nrows
+            );
+        }
+        if snap.vs.len() != self.meta.view_ncols.len() {
+            anyhow::bail!(
+                "snapshot has {} views, store expects {}",
+                snap.vs.len(),
+                self.meta.view_ncols.len()
+            );
+        }
+        for (i, (v, &nc)) in snap.vs.iter().zip(&self.meta.view_ncols).enumerate() {
+            if v.rows() != nc || v.cols() != k {
+                anyhow::bail!("snapshot V{i} is {}x{}, store expects {nc}x{k}", v.rows(), v.cols());
+            }
+        }
+        if snap.alphas.len() != snap.vs.len() {
+            anyhow::bail!("snapshot alphas/views length mismatch");
+        }
+        match (&snap.link, self.meta.link_features) {
+            (None, 0) => {}
+            (Some(_), 0) => anyhow::bail!("snapshot has a link model but store meta declares none"),
+            (None, _) => anyhow::bail!("store meta declares a link model but snapshot has none"),
+            (Some(link), f) => {
+                if link.beta.rows() != f || link.beta.cols() != k || link.mu.len() != k {
+                    anyhow::bail!("snapshot link shapes do not match store meta");
+                }
+            }
+        }
+
+        let name = format!("sample_{:05}", snap.iteration);
+        let sdir = self.dir.join(&name);
+        std::fs::create_dir_all(&sdir)?;
+        let mut meta_pairs = vec![
+            ("iteration", JsonValue::num(snap.iteration as f64)),
+            ("alphas", JsonValue::arr_f64(&snap.alphas)),
+        ];
+        if let Some(link) = &snap.link {
+            meta_pairs.push(("lambda_beta", JsonValue::num(link.lambda_beta)));
+        }
+        std::fs::write(sdir.join("meta.json"), JsonValue::obj(meta_pairs).to_string_pretty())?;
+        write_dbm(&snap.u, &sdir.join("u.dbm"))?;
+        for (i, v) in snap.vs.iter().enumerate() {
+            write_dbm(v, &sdir.join(format!("v{i}.dbm")))?;
+        }
+        if let Some(link) = &snap.link {
+            write_dbm(&link.beta, &sdir.join("link_beta.dbm"))?;
+            write_dbm(
+                &Mat::from_vec(1, link.mu.len(), link.mu.clone()),
+                &sdir.join("link_mu.dbm"),
+            )?;
+        }
+        self.snapshots.push(SnapshotInfo { iteration: snap.iteration, dir: name });
+        self.write_manifest()
+    }
+
+    /// Load stored sample `idx` (0-based, chronological order).
+    pub fn load_snapshot(&self, idx: usize) -> anyhow::Result<Snapshot> {
+        let info = self
+            .snapshots
+            .get(idx)
+            .ok_or_else(|| anyhow::anyhow!("snapshot {idx} out of range ({} stored)", self.len()))?;
+        let sdir = self.dir.join(&info.dir);
+        let meta = JsonValue::parse(&std::fs::read_to_string(sdir.join("meta.json"))?)
+            .map_err(|e| anyhow::anyhow!("bad snapshot meta in {}: {e}", sdir.display()))?;
+        let alphas: Vec<f64> = meta
+            .get("alphas")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| anyhow::anyhow!("snapshot meta missing 'alphas'"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("bad alpha entry")))
+            .collect::<anyhow::Result<_>>()?;
+        let u = read_dbm(&sdir.join("u.dbm"))?;
+        let mut vs = Vec::with_capacity(self.meta.view_ncols.len());
+        for i in 0..self.meta.view_ncols.len() {
+            vs.push(read_dbm(&sdir.join(format!("v{i}.dbm")))?);
+        }
+        let link = if self.meta.link_features > 0 {
+            let beta = read_dbm(&sdir.join("link_beta.dbm"))?;
+            let mu = read_dbm(&sdir.join("link_mu.dbm"))?;
+            let lambda_beta = meta
+                .get("lambda_beta")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("snapshot meta missing 'lambda_beta'"))?;
+            Some(LinkState { beta, mu: mu.data().to_vec(), lambda_beta })
+        } else {
+            None
+        };
+        Ok(Snapshot { iteration: info.iteration, u, vs, alphas, link })
+    }
+
+    /// Load the most recent sample (`None` when the store is empty).
+    pub fn load_latest(&self) -> anyhow::Result<Option<Snapshot>> {
+        if self.is_empty() {
+            return Ok(None);
+        }
+        self.load_snapshot(self.len() - 1).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "smurff_store_{tag}_{}_{}",
+            std::process::id(),
+            tag.len()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn meta(nrows: usize, k: usize, ncols: &[usize], link_features: usize) -> StoreMeta {
+        StoreMeta {
+            num_latent: k,
+            nrows,
+            view_ncols: ncols.to_vec(),
+            offsets: vec![0.25; ncols.len()],
+            save_freq: 1,
+            link_features,
+        }
+    }
+
+    fn random_snapshot(rng: &mut Rng, it: usize, nrows: usize, k: usize, ncols: &[usize]) -> Snapshot {
+        let mut u = Mat::zeros(nrows, k);
+        rng.fill_normal(u.data_mut());
+        let vs: Vec<Mat> = ncols
+            .iter()
+            .map(|&nc| {
+                let mut v = Mat::zeros(nc, k);
+                rng.fill_normal(v.data_mut());
+                v
+            })
+            .collect();
+        Snapshot { iteration: it, u, vs, alphas: vec![2.5; ncols.len()], link: None }
+    }
+
+    #[test]
+    fn round_trip_is_bit_exact() {
+        let dir = scratch("rt");
+        let mut rng = Rng::new(81);
+        let mut store = ModelStore::create(&dir, meta(10, 3, &[7, 5], 0)).unwrap();
+        let s1 = random_snapshot(&mut rng, 4, 10, 3, &[7, 5]);
+        let s2 = random_snapshot(&mut rng, 5, 10, 3, &[7, 5]);
+        store.save_snapshot(&s1).unwrap();
+        store.save_snapshot(&s2).unwrap();
+
+        let opened = ModelStore::open(&dir).unwrap();
+        assert_eq!(opened.len(), 2);
+        assert_eq!(opened.iterations(), vec![4, 5]);
+        assert_eq!(opened.meta(), store.meta());
+        let l1 = opened.load_snapshot(0).unwrap();
+        assert_eq!(l1.iteration, 4);
+        assert_eq!(l1.u.max_abs_diff(&s1.u), 0.0);
+        assert_eq!(l1.vs[1].max_abs_diff(&s1.vs[1]), 0.0);
+        assert_eq!(l1.alphas, s1.alphas);
+        let latest = opened.load_latest().unwrap().unwrap();
+        assert_eq!(latest.iteration, 5);
+        assert_eq!(latest.u.max_abs_diff(&s2.u), 0.0);
+    }
+
+    #[test]
+    fn link_model_round_trips() {
+        let dir = scratch("link");
+        let mut rng = Rng::new(82);
+        let (n, k, f) = (6, 2, 9);
+        let mut store = ModelStore::create(&dir, meta(n, k, &[4], f)).unwrap();
+        let mut snap = random_snapshot(&mut rng, 1, n, k, &[4]);
+        let mut beta = Mat::zeros(f, k);
+        rng.fill_normal(beta.data_mut());
+        snap.link = Some(LinkState { beta: beta.clone(), mu: vec![0.5, -1.5], lambda_beta: 3.25 });
+        store.save_snapshot(&snap).unwrap();
+
+        let opened = ModelStore::open(&dir).unwrap();
+        let link = opened.load_snapshot(0).unwrap().link.unwrap();
+        assert_eq!(link.beta.max_abs_diff(&beta), 0.0);
+        assert_eq!(link.mu, vec![0.5, -1.5]);
+        assert_eq!(link.lambda_beta, 3.25);
+    }
+
+    #[test]
+    fn rejects_shape_mismatch_and_missing_link() {
+        let dir = scratch("shape");
+        let mut rng = Rng::new(83);
+        let mut store = ModelStore::create(&dir, meta(10, 3, &[7], 0)).unwrap();
+        // wrong U shape
+        let bad = random_snapshot(&mut rng, 1, 11, 3, &[7]);
+        assert!(store.save_snapshot(&bad).is_err());
+        // wrong view count
+        let bad = random_snapshot(&mut rng, 1, 10, 3, &[7, 7]);
+        assert!(store.save_snapshot(&bad).is_err());
+        // link declared in snapshot but not in meta
+        let mut bad = random_snapshot(&mut rng, 1, 10, 3, &[7]);
+        bad.link = Some(LinkState { beta: Mat::zeros(2, 3), mu: vec![0.0; 3], lambda_beta: 1.0 });
+        assert!(store.save_snapshot(&bad).is_err());
+        // and the store stayed empty through all rejections
+        assert!(ModelStore::open(&dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn open_rejects_wrong_format_and_version() {
+        let dir = scratch("ver");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"format":"other","version":1}"#).unwrap();
+        assert!(ModelStore::open(&dir).is_err());
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(r#"{{"format":"{STORE_FORMAT}","version":99}}"#),
+        )
+        .unwrap();
+        let err = ModelStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn snapshots_must_have_increasing_iterations() {
+        let dir = scratch("mono");
+        let mut rng = Rng::new(84);
+        let mut store = ModelStore::create(&dir, meta(5, 2, &[3], 0)).unwrap();
+        store.save_snapshot(&random_snapshot(&mut rng, 4, 5, 2, &[3])).unwrap();
+        // replaying the same or an earlier iteration is rejected
+        assert!(store.save_snapshot(&random_snapshot(&mut rng, 4, 5, 2, &[3])).is_err());
+        assert!(store.save_snapshot(&random_snapshot(&mut rng, 3, 5, 2, &[3])).is_err());
+        store.save_snapshot(&random_snapshot(&mut rng, 5, 5, 2, &[3])).unwrap();
+        assert_eq!(ModelStore::open(&dir).unwrap().iterations(), vec![4, 5]);
+    }
+
+    #[test]
+    fn create_refuses_to_clobber() {
+        let dir = scratch("clobber");
+        ModelStore::create(&dir, meta(4, 2, &[3], 0)).unwrap();
+        assert!(ModelStore::create(&dir, meta(4, 2, &[3], 0)).is_err());
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(ModelStore::open(Path::new("/nonexistent/store/xyz")).is_err());
+    }
+}

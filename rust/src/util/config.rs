@@ -46,12 +46,19 @@ impl ConfigValue {
     }
 }
 
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("config error at line {line}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct ConfigError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A parsed config file: flat `section.key` -> value map.
 #[derive(Debug, Clone, Default)]

@@ -93,14 +93,78 @@ impl JsonValue {
     pub fn arr_f64(xs: &[f64]) -> JsonValue {
         JsonValue::Array(xs.iter().map(|x| JsonValue::Num(*x)).collect())
     }
+
+    pub fn arr_usize(xs: &[usize]) -> JsonValue {
+        JsonValue::Array(xs.iter().map(|x| JsonValue::Num(*x as f64)).collect())
+    }
+
+    /// Indented (2-space) rendering — used for files a human may inspect
+    /// or hand-edit, like the model-store manifest.  Parses back to the
+    /// same value as the compact form.
+    pub fn to_string_pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, level: usize) {
+        const IND: &str = "  ";
+        match self {
+            JsonValue::Array(a) if !a.is_empty() => {
+                out.push_str("[\n");
+                for (i, v) in a.iter().enumerate() {
+                    for _ in 0..=level {
+                        out.push_str(IND);
+                    }
+                    v.pretty_into(out, level + 1);
+                    if i + 1 < a.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                for _ in 0..level {
+                    out.push_str(IND);
+                }
+                out.push(']');
+            }
+            JsonValue::Object(m) if !m.is_empty() => {
+                out.push_str("{\n");
+                for (i, (k, v)) in m.iter().enumerate() {
+                    for _ in 0..=level {
+                        out.push_str(IND);
+                    }
+                    out.push_str(&JsonValue::Str(k.clone()).to_string());
+                    out.push_str(": ");
+                    v.pretty_into(out, level + 1);
+                    if i + 1 < m.len() {
+                        out.push(',');
+                    }
+                    out.push('\n');
+                }
+                for _ in 0..level {
+                    out.push_str(IND);
+                }
+                out.push('}');
+            }
+            scalar_or_empty => out.push_str(&scalar_or_empty.to_string()),
+        }
+    }
 }
 
-#[derive(Debug, Clone, thiserror::Error)]
-#[error("json error at byte {pos}: {msg}")]
+#[derive(Debug, Clone)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -377,6 +441,23 @@ mod tests {
         let v = JsonValue::Str("a\"b\\c\nd".into());
         assert_eq!(v.to_string(), r#""a\"b\\c\nd""#);
         assert_eq!(JsonValue::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn pretty_round_trips_and_indents() {
+        let src = r#"{"k":16,"name":"store","snapshots":[{"iter":1},{"iter":2}],"dims":[3,4],"empty":[],"none":{}}"#;
+        let v = JsonValue::parse(src).unwrap();
+        let pretty = v.to_string_pretty();
+        assert!(pretty.contains("\n  \"snapshots\": [\n"));
+        assert!(pretty.contains("\"empty\": []"));
+        assert!(pretty.ends_with('\n'));
+        assert_eq!(JsonValue::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn arr_usize_builder() {
+        let v = JsonValue::arr_usize(&[3, 4]);
+        assert_eq!(v.to_string(), "[3,4]");
     }
 
     #[test]

@@ -192,6 +192,52 @@ fn macau_col_side_information() {
     assert!(r.rmse.is_finite());
 }
 
+/// The two-phase workflow through the public API: train with
+/// save-every-N, reopen the store with a PredictSession, and check the
+/// served averages line up with training's aggregation.
+#[test]
+fn train_save_predict_round_trip() {
+    let (train, test) = smurff::data::movielens_like(70, 50, 1_800, 0.25, 37);
+    let dir = scratch("serve");
+    let cfg = SessionConfig {
+        num_latent: 5,
+        burnin: 5,
+        nsamples: 10,
+        seed: 37,
+        threads: 2,
+        save_freq: 1,
+        save_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let mut s = TrainSession::bmf(train, Some(test.clone()), cfg);
+    let r = s.run();
+    assert_eq!(r.nsnapshots, 10);
+    assert_eq!(r.store_path.as_deref(), Some(dir.as_path()));
+
+    let serve = smurff::predict::PredictSession::open(&dir).unwrap();
+    assert_eq!(serve.nsamples(), 10);
+    let t = TestSet::from_sparse(&test);
+    let means: Vec<f64> = serve
+        .predict_cells(0, &t.rows, &t.cols)
+        .iter()
+        .map(|p| p.mean)
+        .collect();
+    let served_rmse = smurff::model::rmse(&means, &t.vals);
+    assert!(
+        (served_rmse - r.rmse).abs() < 1e-9,
+        "served {served_rmse} vs trained {}",
+        r.rmse
+    );
+    // top-1 equals the argmax of pointwise means
+    let top = serve.top_k(0, 3, 1, &[]);
+    let best = (0..serve.ncols(0))
+        .map(|j| (j as u32, serve.predict_one(0, 3, j).mean))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    assert_eq!(top[0].0, best.0);
+    assert_eq!(top[0].1, best.1);
+}
+
 #[test]
 fn empty_test_set_is_fine() {
     let (train, _) = smurff::data::movielens_like(30, 20, 300, 0.0, 36);

@@ -1,0 +1,141 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no network access to crates.io, so this vendored
+//! path crate provides exactly the surface the smurff crate uses:
+//! [`Error`], [`Result`], [`anyhow!`], [`bail!`] and [`Ok`].  Semantics
+//! follow the real crate: `Error` boxes any `std::error::Error + Send +
+//! Sync + 'static` and deliberately does *not* implement
+//! `std::error::Error` itself (that is what makes the blanket `From`
+//! conversion below coherent).
+
+use std::fmt;
+
+/// A type-erased error, convertible from any standard error via `?`.
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a plain message (used by the `anyhow!` macro
+    /// and as `map_err(anyhow::Error::msg)`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Error {
+        Error(Box::new(error))
+    }
+
+    /// The wrapped error's source chain entry point.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.0.source()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // like anyhow: the message, then the source chain
+        write!(f, "{}", self.0)?;
+        let mut src = self.0.source();
+        if src.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = src {
+            write!(f, "\n    {e}")?;
+            src = e.source();
+        }
+        std::result::Result::Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error(Box::new(error))
+    }
+}
+
+/// Equivalent of `Ok::<_, anyhow::Error>(value)` for closures whose
+/// error type would otherwise be ambiguous.
+#[allow(non_snake_case)]
+pub fn Ok<T>(value: T) -> Result<T> {
+    Result::Ok(value)
+}
+
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/nonexistent/anyhow/shim")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format_and_bail() {
+        fn f(x: usize) -> Result<usize> {
+            if x == 0 {
+                bail!("bad x: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(0).unwrap_err().to_string(), "bad x: 0");
+        let e = anyhow!("v={}", 7);
+        assert_eq!(e.to_string(), "v=7");
+    }
+
+    #[test]
+    fn msg_accepts_string_and_str() {
+        assert_eq!(Error::msg("plain").to_string(), "plain");
+        assert_eq!(Error::msg(String::from("owned")).to_string(), "owned");
+    }
+}
