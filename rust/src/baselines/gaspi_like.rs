@@ -1,24 +1,23 @@
-//! GASPI stand-in: multi-node distributed BMF over the message-passing
-//! substrate of [`crate::distributed`] (Vander Aa et al., ICCS 2017).
-//!
-//! Decomposition (as in the GASPI code): node p owns a contiguous block
-//! of U rows and a contiguous block of V columns plus the data touching
-//! them; each iteration it (1) updates its U rows against a full local
-//! copy of V, (2) allgathers the new U blocks, (3) updates its V columns,
-//! (4) allgathers V.  With `NetSpec::cluster()` the allgathers carry the
+//! GASPI stand-in: multi-node distributed BMF (Vander Aa et al., ICCS
+//! 2017), re-implemented on the first-class distributed subsystem — a
+//! [`DistributedSession`](crate::distributed::DistributedSession) with
+//! Normal priors, fixed noise and the synchronous allgather strategy,
+//! which is exactly the decomposition of the original GASPI code: node
+//! p owns a contiguous block of U rows and V columns plus the data
+//! touching them, samples them each iteration and allgathers the new
+//! blocks.  With `NetSpec::cluster()` the exchanges carry the
 //! latency/bandwidth cost that bounds strong scaling.
 
 use super::BaselineResult;
-use crate::coordinator::{DataAccess, MvnSweep, ViewSlice};
-use crate::distributed::{partition, run_cluster, NetSpec};
-use crate::linalg::Mat;
-use crate::priors::MeanSpec;
+use crate::data::{MatrixConfig, TestSet};
+use crate::distributed::{NetSpec, Strategy};
+use crate::noise::NoiseConfig;
+use crate::session::{SessionBuilder, SessionConfig};
 use crate::sparse::SparseMatrix;
-use crate::util::Timer;
-use std::sync::Arc;
 
 /// Distributed BMF run: `nodes` workers, one thread each (the paper's
-/// GASPI experiments scale nodes, not threads-per-node).
+/// GASPI experiments scale nodes, not threads-per-node).  Synchronous
+/// exchange keeps the chain bit-identical for any node count.
 pub fn run_bmf(
     train: &SparseMatrix,
     test: &SparseMatrix,
@@ -28,117 +27,28 @@ pub fn run_bmf(
     net: NetSpec,
     seed: u64,
 ) -> BaselineResult {
-    let mean = train.mean_value();
-    let centered = Arc::new(SparseMatrix::from_triplets(
-        train.nrows(),
-        train.ncols(),
-        train.triplets().map(|(i, j, v)| (i, j, v - mean)),
-    ));
-    let n = centered.nrows();
-    let m = centered.ncols();
-    let row_parts = partition(n, nodes);
-    let col_parts = partition(m, nodes);
-    let timer = Timer::start();
-
-    let data = centered.clone();
-    let row_parts2 = row_parts.clone();
-    let col_parts2 = col_parts.clone();
-    let results = run_cluster(nodes, net, move |mut comm| {
-        let rank = comm.rank;
-        let my_rows = row_parts2[rank].clone();
-        let my_cols = col_parts2[rank].clone();
-        let alpha = 4.0;
-        let lambda0 = Mat::eye_scaled(k, 2.0);
-        let zero_mean = vec![0.0; k];
-        // every node initialises the FULL factors identically (same seed)
-        // so replicated state stays consistent without a bootstrap bcast
-        let mut rng = crate::rng::Rng::from_parts(seed, 0x6A57);
-        let mut u = crate::model::init_latents(n, k, 0.3, &mut rng);
-        let mut v = crate::model::init_latents(m, k, 0.3, &mut rng);
-
-        let sample_block = |target: &mut Mat,
-                            rows: std::ops::Range<usize>,
-                            target_is_rows: bool,
-                            other: &Mat,
-                            iter: u64| {
-            let sweep = MvnSweep {
-                lambda0: &lambda0,
-                means: MeanSpec::Shared(&zero_mean),
-                views: vec![ViewSlice {
-                    data: if target_is_rows {
-                        DataAccess::SparseRows(&data)
-                    } else {
-                        DataAccess::SparseCols(&data)
-                    },
-                    other,
-                    alpha,
-                    probit: false,
-                    full_gram: None,
-                }],
-                seed,
-                iteration: iter,
-                side_id: if target_is_rows { 0 } else { 1 },
-            };
-            for i in rows {
-                let mut rng = crate::rng::Rng::for_row(seed, iter, sweep.side_id, i as u64);
-                let mut row = vec![0.0; k];
-                row.copy_from_slice(target.row(i));
-                crate::coordinator::sample_one_row_mvn(&sweep, i, &mut row, k, &mut rng);
-                target.row_mut(i).copy_from_slice(&row);
-            }
-        };
-
-        let burnin = iterations / 2;
-        let mut snapshots: Vec<(Mat, Mat)> = Vec::new();
-        for it in 0..iterations as u64 {
-            // (1) local U rows
-            sample_block(&mut u, my_rows.clone(), true, &v, it);
-            // (2) allgather U blocks
-            let mine: Vec<f64> = my_rows.clone().flat_map(|i| u.row(i).to_vec()).collect();
-            let blocks = comm.allgather(it * 2, mine);
-            for (p, block) in blocks.iter().enumerate() {
-                let range = row_parts2[p].clone();
-                for (t, i) in range.enumerate() {
-                    u.row_mut(i).copy_from_slice(&block[t * k..(t + 1) * k]);
-                }
-            }
-            // (3) local V cols
-            sample_block(&mut v, my_cols.clone(), false, &u, it);
-            // (4) allgather V blocks
-            let mine: Vec<f64> = my_cols.clone().flat_map(|j| v.row(j).to_vec()).collect();
-            let blocks = comm.allgather(it * 2 + 1, mine);
-            for (p, block) in blocks.iter().enumerate() {
-                let range = col_parts2[p].clone();
-                for (t, j) in range.enumerate() {
-                    v.row_mut(j).copy_from_slice(&block[t * k..(t + 1) * k]);
-                }
-            }
-            // rank 0 keeps post-burn-in snapshots for posterior-mean eval
-            if comm.rank == 0 && it as usize >= burnin {
-                snapshots.push((u.clone(), v.clone()));
-            }
-        }
-        comm.barrier();
-        (snapshots, comm.bytes_sent)
-    });
-
-    let secs = timer.elapsed_s();
-    let test_set = crate::data::TestSet::from_sparse(test);
-    // replicated state must agree across nodes — take rank 0's copy and
-    // average the second half of its per-iteration snapshots
-    let (snapshots, _) = &results[0];
-    let mut agg = crate::model::PredictionAggregator::new(test_set.len());
-    for (u, v) in snapshots {
-        let mut preds = crate::model::predict_cells(u, v, &test_set);
-        for p in preds.iter_mut() {
-            *p += mean;
-        }
-        agg.add_sample(&preds);
-    }
-    let rmse = crate::model::rmse(&agg.mean(), &test_set.vals);
-    let mut r = BaselineResult::new("gaspi_like", rmse, iterations, secs);
-    r.name = format!("gaspi_like(nodes={nodes})");
-    r
+    let burnin = iterations / 2;
+    let cfg = SessionConfig {
+        num_latent: k,
+        burnin,
+        nsamples: iterations - burnin,
+        seed,
+        threads: 1,
+        ..Default::default()
+    };
+    let dist = SessionBuilder::new(cfg)
+        .add_view(
+            MatrixConfig::SparseUnknown(train.clone()),
+            NoiseConfig::Fixed { precision: 4.0 },
+            Some(TestSet::from_sparse(test)),
+        )
+        .distributed(nodes, Strategy::Sync, net)
+        .build_distributed();
+    let r = dist.run().expect("distributed BMF run failed");
+    let mut out =
+        BaselineResult::new("gaspi_like", r.result.rmse, iterations, r.result.train_seconds);
+    out.name = format!("gaspi_like(nodes={nodes})");
+    out
 }
 
 #[cfg(test)]
@@ -156,32 +66,10 @@ mod tests {
 
     #[test]
     fn node_count_does_not_change_samples() {
-        // identical RNG streams per row => replicated factors identical
+        // identical RNG streams per row => synchronous replicas identical
         let (train, test) = crate::data::movielens_like(40, 30, 800, 0.2, 99);
         let a = run_bmf(&train, &test, 4, 4, 1, NetSpec::instant(), 6);
         let b = run_bmf(&train, &test, 4, 4, 4, NetSpec::instant(), 6);
         assert!((a.rmse - b.rmse).abs() < 1e-12, "{} vs {}", a.rmse, b.rmse);
-    }
-
-    #[test]
-    fn replicas_agree_across_nodes() {
-        let (train, _) = crate::data::movielens_like(30, 20, 400, 0.0, 100);
-        let centered = train.clone();
-        // run 2 nodes and compare returned factor copies directly
-        let n = centered.nrows();
-        let k = 4;
-        let data = std::sync::Arc::new(centered);
-        let parts = partition(n, 2);
-        let got = run_cluster(2, NetSpec::instant(), move |mut comm| {
-            let mut u = vec![comm.rank as f64; 8];
-            if comm.rank == 0 {
-                u = vec![1.0; 8];
-            }
-            // trivial allgather smoke inside cluster
-            let all = comm.allgather(1, u);
-            (all[0].clone(), all[1].clone())
-        });
-        assert_eq!(got[0], got[1]);
-        let _ = (data, parts, k);
     }
 }

@@ -10,6 +10,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod gfa;
 pub mod macau;
+pub mod scaling;
 pub mod serving;
 pub mod table1;
 
@@ -112,17 +113,20 @@ pub fn run_by_name(name: &str, quick: bool) -> anyhow::Result<Report> {
         "fig5" => Ok(fig5::run(quick)),
         "gfa" => Ok(gfa::run(quick)),
         "macau" => Ok(macau::run(quick)),
+        "scaling" => Ok(scaling::run(quick)),
         "serving" => Ok(serving::run(quick)),
         "table1" => Ok(table1::run(quick)),
         "all" => {
             let mut all = Report::new("all");
-            for n in ["table1", "fig3", "fig4", "fig5", "gfa", "macau", "serving"] {
+            for n in ["table1", "fig3", "fig4", "fig5", "gfa", "macau", "scaling", "serving"] {
                 let r = run_by_name(n, quick)?;
                 all.tables.extend(r.tables);
             }
             Ok(all)
         }
-        other => anyhow::bail!("unknown bench '{other}' (fig3|fig4|fig5|gfa|macau|serving|table1|all)"),
+        other => anyhow::bail!(
+            "unknown bench '{other}' (fig3|fig4|fig5|gfa|macau|scaling|serving|table1|all)"
+        ),
     }
 }
 

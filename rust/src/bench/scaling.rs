@@ -1,0 +1,92 @@
+//! Strong-scaling harness for the distributed subsystem: nodes ×
+//! communication strategy → posterior-mean RMSE, wall seconds, bytes on
+//! the wire and comm/compute split, on one synthetic BMF workload.
+//!
+//! This is the experiment shape of Vander Aa et al. 2017 (synchronous
+//! GASPI scaling) extended with the 2020 limited-communication
+//! posterior-propagation scheme: the table shows sync paying per-
+//! iteration allgather bytes while pprop ships factors only every R
+//! iterations.
+
+use super::{fmt_s, Report, Table};
+use crate::data::{MatrixConfig, TestSet};
+use crate::distributed::{NetSpec, Strategy};
+use crate::noise::NoiseConfig;
+use crate::session::{SessionBuilder, SessionConfig, TrainSession};
+
+pub fn run(quick: bool) -> Report {
+    let mut report = Report::new("scaling");
+    let (rows, cols, nnz, k, burnin, nsamples) = if quick {
+        (200, 150, 8_000, 8, 6, 10)
+    } else {
+        (800, 600, 80_000, 16, 10, 20)
+    };
+    let (train, test) = crate::data::movielens_like(rows, cols, nnz, 0.2, 42);
+    let cfg = SessionConfig {
+        num_latent: k,
+        burnin,
+        nsamples,
+        seed: 42,
+        threads: 1,
+        ..Default::default()
+    };
+
+    // single-node reference
+    let mut single = TrainSession::bmf(train.clone(), Some(test.clone()), cfg.clone());
+    let r1 = single.run();
+
+    let mut t = Table::new(
+        &format!(
+            "strong scaling: BMF {rows}x{cols} nnz={nnz} K={k}, {} iterations \
+             (single node: rmse {:.4}, {})",
+            burnin + nsamples,
+            r1.rmse,
+            fmt_s(r1.train_seconds),
+        ),
+        &["strategy", "nodes", "rmse", "seconds", "MB sent", "comm s (max)"],
+    );
+    let node_sweep: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4] };
+    let strategies = [
+        Strategy::Sync,
+        Strategy::Async { staleness: 1 },
+        Strategy::PosteriorProp { rounds: 4 },
+    ];
+    for strategy in strategies {
+        for &nodes in node_sweep {
+            let dist = SessionBuilder::new(cfg.clone())
+                .add_view(
+                    MatrixConfig::SparseUnknown(train.clone()),
+                    NoiseConfig::default(),
+                    Some(TestSet::from_sparse(&test)),
+                )
+                .distributed(nodes, strategy, NetSpec::cluster())
+                .build_distributed();
+            let r = dist.run().expect("distributed bench run failed");
+            t.row(vec![
+                r.strategy.clone(),
+                nodes.to_string(),
+                format!("{:.4}", r.result.rmse),
+                fmt_s(r.result.train_seconds),
+                format!("{:.2}", r.total_bytes() as f64 / 1e6),
+                fmt_s(r.max_comm_seconds()),
+            ]);
+        }
+    }
+    report.push(t);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn scaling_bench_quick_produces_full_grid() {
+        let r = super::run(true);
+        assert_eq!(r.tables.len(), 1);
+        // 3 strategies x 2 node counts
+        assert_eq!(r.tables[0].rows.len(), 6);
+        // sync at 2 nodes must report nonzero traffic
+        let sync2 = &r.tables[0].rows[1];
+        assert_eq!(sync2[0], "sync");
+        assert!(sync2[4].parse::<f64>().unwrap() > 0.0);
+    }
+}

@@ -120,6 +120,34 @@ pub struct MvnSweep<'a> {
 pub trait Engine: Send + Sync {
     fn name(&self) -> &'static str;
     fn sample_mvn_side(&self, sweep: &MvnSweep<'_>, latents: &mut Mat, pool: &ThreadPool);
+
+    /// Resample only `rows` (a distributed shard's block).  Must draw
+    /// exactly the values `sample_mvn_side` would draw for those rows —
+    /// guaranteed here because every row i uses `Rng::for_row(seed, t,
+    /// side, i)` regardless of which node (or engine) samples it.  The
+    /// full range delegates to `sample_mvn_side` so engine fast paths
+    /// (XLA blocking) still apply to single-node sweeps.
+    fn sample_mvn_side_range(
+        &self,
+        sweep: &MvnSweep<'_>,
+        latents: &mut Mat,
+        pool: &ThreadPool,
+        rows: std::ops::Range<usize>,
+    ) {
+        if rows.start == 0 && rows.end == latents.rows() {
+            return self.sample_mvn_side(sweep, latents, pool);
+        }
+        let k = latents.cols();
+        let writer = RowWriter::new(latents);
+        let start = rows.start;
+        pool.parallel_for(rows.len(), 1, |t| {
+            let i = start + t;
+            let mut rng = Rng::for_row(sweep.seed, sweep.iteration, sweep.side_id, i as u64);
+            // SAFETY: each i is visited exactly once (threadpool contract)
+            let row = unsafe { writer.row_mut(i) };
+            sample_one_row_mvn(sweep, i, row, k, &mut rng);
+        });
+    }
 }
 
 /// Shared mutable row access for disjoint parallel row writes.
@@ -318,8 +346,27 @@ pub fn sample_side_custom(
     side_id: u64,
 ) {
     let n = latents.rows();
+    sample_side_custom_range(prior, view, latents, pool, seed, iteration, side_id, 0..n);
+}
+
+/// [`sample_side_custom`] restricted to `rows` — the shard-block variant
+/// used by distributed workers.  Values drawn for a row are identical to
+/// the full sweep's (per-row RNG streams).
+#[allow(clippy::too_many_arguments)]
+pub fn sample_side_custom_range(
+    prior: &dyn Prior,
+    view: &ViewSlice<'_>,
+    latents: &mut Mat,
+    pool: &ThreadPool,
+    seed: u64,
+    iteration: u64,
+    side_id: u64,
+    rows: std::ops::Range<usize>,
+) {
     let writer = RowWriter::new(latents);
-    pool.parallel_for(n, 1, |i| {
+    let start = rows.start;
+    pool.parallel_for(rows.len(), 1, |t| {
+        let i = start + t;
         let mut rng = Rng::for_row(seed, iteration, side_id, i as u64);
         let mut idx = Vec::new();
         let mut vals = Vec::new();
@@ -439,6 +486,47 @@ mod tests {
         assert!(b.max_abs_diff(&c) == 0.0);
         lat = a; // silence unused warning chain
         assert!(lat.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn range_sweep_matches_full_sweep_on_owned_rows() {
+        // sampling two disjoint shards must reproduce the full sweep
+        // bit-exactly (the determinism invariant distributed training
+        // relies on)
+        let (data, v) = toy_problem();
+        let mut prior = NormalPrior::new(4);
+        let mut rng = Rng::new(74);
+        let lat0 = crate::model::init_latents(40, 4, 0.1, &mut rng);
+        prior.update_hyper(&lat0, &mut rng);
+        let pool = ThreadPool::new(3);
+        let spec = prior.mvn_spec().unwrap();
+        let make_sweep = || MvnSweep {
+            lambda0: spec.lambda0,
+            means: MeanSpec::Shared(match &spec.means {
+                MeanSpec::Shared(s) => *s,
+                _ => unreachable!(),
+            }),
+            views: vec![ViewSlice {
+                data: DataAccess::SparseRows(&data),
+                other: &v,
+                alpha: 2.0,
+                probit: false,
+                full_gram: None,
+            }],
+            seed: 9,
+            iteration: 5,
+            side_id: 0,
+        };
+        let mut full = lat0.clone();
+        NativeEngine.sample_mvn_side(&make_sweep(), &mut full, &pool);
+        let mut sharded = lat0.clone();
+        NativeEngine.sample_mvn_side_range(&make_sweep(), &mut sharded, &pool, 0..17);
+        NativeEngine.sample_mvn_side_range(&make_sweep(), &mut sharded, &pool, 17..40);
+        assert_eq!(full.max_abs_diff(&sharded), 0.0, "shard sweeps must equal full sweep");
+        // empty range is a no-op
+        let before = sharded.clone();
+        NativeEngine.sample_mvn_side_range(&make_sweep(), &mut sharded, &pool, 7..7);
+        assert_eq!(before.max_abs_diff(&sharded), 0.0);
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! The message-passing substrate — the GASPI/MPI substitute (DESIGN.md
+//! §4) under [`crate::distributed::session::DistributedSession`] and the
+//! `gaspi_like` baseline.
+//!
+//! Workers are threads ("nodes"); communication goes through typed
+//! channels with an optional simulated per-message latency + bandwidth
+//! cost so scaling curves show realistic communication/computation
+//! trade-offs.  The primitives mirror what the GASPI implementation of
+//! [Vander Aa et al. 2017] uses: barrier, point-to-point send/recv,
+//! allgather of factor-row blocks, allreduce, plus sub-communicators
+//! over a subset of ranks.
+//!
+//! Every byte sent and every second spent inside a communication call is
+//! accounted on the [`Comm`] (`bytes_sent`, `comm_seconds`) so sessions
+//! can report per-strategy comm/compute splits.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+use crate::util::Timer;
+
+/// Simulated interconnect properties.
+#[derive(Debug, Clone, Copy)]
+pub struct NetSpec {
+    /// one-way message latency
+    pub latency_us: f64,
+    /// per-byte cost (1/bandwidth)
+    pub gbs: f64,
+}
+
+impl NetSpec {
+    /// Zero-cost interconnect (pure shared-memory behaviour).
+    pub fn instant() -> NetSpec {
+        NetSpec { latency_us: 0.0, gbs: f64::INFINITY }
+    }
+
+    /// Infiniband-ish cluster interconnect.
+    pub fn cluster() -> NetSpec {
+        NetSpec { latency_us: 2.0, gbs: 10.0 }
+    }
+
+    fn delay_for(&self, bytes: usize) -> std::time::Duration {
+        let secs = self.latency_us * 1e-6 + bytes as f64 / (self.gbs * 1e9);
+        std::time::Duration::from_secs_f64(secs)
+    }
+}
+
+/// A message between nodes: a tagged row-block of f64s.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub from: usize,
+    pub tag: u64,
+    pub data: Vec<f64>,
+}
+
+/// Per-node communicator handle.
+pub struct Comm {
+    pub rank: usize,
+    pub size: usize,
+    net: NetSpec,
+    senders: Vec<Sender<Block>>,
+    inbox: Receiver<Block>,
+    barrier: Arc<Barrier>,
+    /// out-of-order messages (a fast peer may already be in the next
+    /// phase while we still collect the current one)
+    stash: Vec<Block>,
+    /// bytes sent by this node (for the comm/compute accounting)
+    pub bytes_sent: u64,
+    /// wall-clock seconds this node spent inside communication calls
+    /// (send/recv/barrier, including the simulated wire cost)
+    pub comm_seconds: f64,
+}
+
+impl Comm {
+    /// Spin up `size` communicators wired all-to-all.
+    pub fn cluster(size: usize, net: NetSpec) -> Vec<Comm> {
+        let mut senders = Vec::new();
+        let mut receivers = Vec::new();
+        for _ in 0..size {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        let barrier = Arc::new(Barrier::new(size));
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, inbox)| Comm {
+                rank,
+                size,
+                net,
+                senders: senders.clone(),
+                inbox,
+                barrier: barrier.clone(),
+                stash: Vec::new(),
+                bytes_sent: 0,
+                comm_seconds: 0.0,
+            })
+            .collect()
+    }
+
+    /// Send a block to `to` (applies the simulated wire cost).
+    pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
+        let t = Timer::start();
+        let bytes = data.len() * 8;
+        self.bytes_sent += bytes as u64;
+        let d = self.net.delay_for(bytes);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+        self.senders[to]
+            .send(Block { from: self.rank, tag, data })
+            .expect("peer hung up");
+        self.comm_seconds += t.elapsed_s();
+    }
+
+    /// Blocking receive of the next block with `tag`.  Messages from
+    /// peers already in a later phase are stashed and delivered when
+    /// their tag is asked for.
+    pub fn recv(&mut self, tag: u64) -> Block {
+        let t = Timer::start();
+        let b = self.recv_inner(tag);
+        self.comm_seconds += t.elapsed_s();
+        b
+    }
+
+    fn recv_inner(&mut self, tag: u64) -> Block {
+        if let Some(pos) = self.stash.iter().position(|b| b.tag == tag) {
+            return self.stash.swap_remove(pos);
+        }
+        loop {
+            let b = self.inbox.recv().expect("peer hung up");
+            if b.tag == tag {
+                return b;
+            }
+            self.stash.push(b);
+        }
+    }
+
+    pub fn barrier(&mut self) {
+        let t = Timer::start();
+        self.barrier.wait();
+        self.comm_seconds += t.elapsed_s();
+    }
+
+    /// Allgather: every node contributes `mine`; returns all blocks
+    /// ordered by rank (one-sided-ish exchange, like GASPI segments).
+    pub fn allgather(&mut self, tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+        for peer in 0..self.size {
+            if peer != self.rank {
+                self.send(peer, tag, mine.clone());
+            }
+        }
+        let mut out: Vec<Option<Vec<f64>>> = vec![None; self.size];
+        out[self.rank] = Some(mine);
+        for _ in 0..self.size - 1 {
+            let b = self.recv(tag);
+            out[b.from] = Some(b.data);
+        }
+        out.into_iter().map(|o| o.expect("missing rank block")).collect()
+    }
+
+    /// Element-wise-sum allreduce: every node contributes a vector of
+    /// the same length and gets back the rank-ordered sum (summation
+    /// order is rank order on every node, so results are identical
+    /// across nodes).
+    pub fn allreduce_sum(&mut self, tag: u64, mine: Vec<f64>) -> Vec<f64> {
+        let n = mine.len();
+        let blocks = self.allgather(tag, mine);
+        let mut out = vec![0.0; n];
+        for b in &blocks {
+            debug_assert_eq!(b.len(), n, "allreduce contributions must agree in length");
+            for (o, x) in out.iter_mut().zip(b) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Sub-communicator over `members` (global ranks; must contain this
+    /// node's rank, and every member must call with the same list).
+    /// Collectives on the subgroup run over the parent's channels, so
+    /// tags must be unique per collective call, as everywhere else.
+    pub fn subgroup(&mut self, members: &[usize]) -> SubComm<'_> {
+        let rank = members
+            .iter()
+            .position(|&g| g == self.rank)
+            .expect("subgroup must contain the calling rank");
+        SubComm { parent: self, members: members.to_vec(), rank }
+    }
+}
+
+/// A communicator restricted to a subset of the cluster's ranks —
+/// the MPI sub-communicator analogue, used e.g. to run per-strategy
+/// replica groups side by side.
+pub struct SubComm<'a> {
+    parent: &'a mut Comm,
+    members: Vec<usize>,
+    /// this node's rank *within* the subgroup
+    rank: usize,
+}
+
+impl SubComm<'_> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Global rank of subgroup member `p`.
+    pub fn global_rank(&self, p: usize) -> usize {
+        self.members[p]
+    }
+
+    /// Allgather over the subgroup only; blocks ordered by subgroup rank.
+    pub fn allgather(&mut self, tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+        for (p, &g) in self.members.iter().enumerate() {
+            if p != self.rank {
+                self.parent.send(g, tag, mine.clone());
+            }
+        }
+        let mut out: Vec<Option<Vec<f64>>> = vec![None; self.members.len()];
+        out[self.rank] = Some(mine);
+        for _ in 0..self.members.len() - 1 {
+            let b = self.parent.recv(tag);
+            let p = self
+                .members
+                .iter()
+                .position(|&g| g == b.from)
+                .expect("subgroup message from a non-member rank");
+            out[p] = Some(b.data);
+        }
+        out.into_iter().map(|o| o.expect("missing member block")).collect()
+    }
+
+    /// Message-based barrier over the subgroup (the shared full-cluster
+    /// barrier cannot be used by a subset): gather-to-root + release.
+    pub fn barrier(&mut self, tag: u64) {
+        if self.members.len() < 2 {
+            return;
+        }
+        let root = self.members[0];
+        if self.rank == 0 {
+            for _ in 0..self.members.len() - 1 {
+                self.parent.recv(tag);
+            }
+            for &g in &self.members[1..] {
+                self.parent.send(g, tag, Vec::new());
+            }
+        } else {
+            self.parent.send(root, tag, Vec::new());
+            self.parent.recv(tag);
+        }
+    }
+}
+
+/// Run `f(comm)` on every node of a `size`-node cluster; returns the
+/// per-node results in rank order.
+pub fn run_cluster<T: Send + 'static, F>(size: usize, net: NetSpec, f: F) -> Vec<T>
+where
+    F: Fn(Comm) -> T + Send + Sync + 'static,
+{
+    run_cluster_parts(vec![(); size], net, move |comm, ()| f(comm))
+}
+
+/// Like [`run_cluster`], but hands each node an owned per-rank value
+/// (its data shard, config, …) in addition to its communicator.
+/// `parts.len()` determines the cluster size.
+pub fn run_cluster_parts<P, T, F>(parts: Vec<P>, net: NetSpec, f: F) -> Vec<T>
+where
+    P: Send + 'static,
+    T: Send + 'static,
+    F: Fn(Comm, P) -> T + Send + Sync + 'static,
+{
+    let comms = Comm::cluster(parts.len(), net);
+    let f = Arc::new(f);
+    let mut handles = Vec::new();
+    for (comm, part) in comms.into_iter().zip(parts) {
+        let f = f.clone();
+        handles.push(std::thread::spawn(move || {
+            let rank = comm.rank;
+            (rank, f(comm, part))
+        }));
+    }
+    let mut v: Vec<(usize, T)> = handles
+        .into_iter()
+        .map(|h| h.join().expect("node panicked"))
+        .collect();
+    v.sort_by_key(|(rank, _)| *rank);
+    v.into_iter().map(|(_, t)| t).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allgather_exchanges_all_blocks() {
+        let got = run_cluster(4, NetSpec::instant(), |mut comm| {
+            let mine = vec![comm.rank as f64; 3];
+            let all = comm.allgather(1, mine);
+            comm.barrier();
+            all
+        });
+        for (rank, all) in got.iter().enumerate() {
+            assert_eq!(all.len(), 4);
+            for (peer, block) in all.iter().enumerate() {
+                assert_eq!(block, &vec![peer as f64; 3], "rank {rank} block {peer}");
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_with_three_ranks_and_unequal_blocks() {
+        // per-rank block sizes differ (ragged shards): every node must
+        // still see every block, correctly attributed
+        let got = run_cluster(3, NetSpec::instant(), |mut comm| {
+            let mine = vec![comm.rank as f64 + 0.5; comm.rank + 1];
+            comm.allgather(9, mine)
+        });
+        for all in &got {
+            for (peer, block) in all.iter().enumerate() {
+                assert_eq!(block, &vec![peer as f64 + 0.5; peer + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn point_to_point_send_recv() {
+        let got = run_cluster(2, NetSpec::instant(), |mut comm| {
+            if comm.rank == 0 {
+                comm.send(1, 7, vec![1.0, 2.0]);
+                0.0
+            } else {
+                let b = comm.recv(7);
+                assert_eq!(b.from, 0);
+                b.data.iter().sum::<f64>()
+            }
+        });
+        assert_eq!(got[1], 3.0);
+    }
+
+    #[test]
+    fn stash_delivers_out_of_order_tags() {
+        // rank 0 sends tag 2 before tag 1; rank 1 asks for tag 1 first.
+        // the tag-2 message must be stashed and delivered later.
+        let got = run_cluster(2, NetSpec::instant(), |mut comm| {
+            if comm.rank == 0 {
+                comm.send(1, 2, vec![20.0]);
+                comm.send(1, 1, vec![10.0]);
+                vec![]
+            } else {
+                let first = comm.recv(1);
+                let second = comm.recv(2);
+                vec![first.data[0], second.data[0]]
+            }
+        });
+        assert_eq!(got[1], vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn barrier_orders_phases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let arrived = Arc::new(AtomicUsize::new(0));
+        let a = arrived.clone();
+        let seen = run_cluster(3, NetSpec::instant(), move |mut comm| {
+            a.fetch_add(1, Ordering::SeqCst);
+            comm.barrier();
+            // after the barrier every node must have checked in
+            a.load(Ordering::SeqCst)
+        });
+        assert_eq!(seen, vec![3, 3, 3]);
+        assert_eq!(arrived.load(std::sync::atomic::Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        let got = run_cluster(3, NetSpec::instant(), |mut comm| {
+            let mine = vec![comm.rank as f64, 1.0];
+            comm.allreduce_sum(4, mine)
+        });
+        // sum of ranks 0+1+2 = 3, counts 1+1+1 = 3, identical on all nodes
+        for all in &got {
+            assert_eq!(all, &vec![3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let got = run_cluster(2, NetSpec::instant(), |mut comm| {
+            if comm.rank == 0 {
+                comm.send(1, 1, vec![0.0; 100]);
+            } else {
+                comm.recv(1);
+            }
+            comm.barrier();
+            comm.bytes_sent
+        });
+        assert_eq!(got[0], 800);
+        assert_eq!(got[1], 0);
+    }
+
+    #[test]
+    fn bytes_accounting_totals_over_collectives() {
+        // 3 ranks allgather 5 doubles each: every node sends its block
+        // to 2 peers -> 2 * 5 * 8 = 80 bytes per node, 240 total
+        let got = run_cluster(3, NetSpec::instant(), |mut comm| {
+            comm.allgather(2, vec![1.0; 5]);
+            comm.barrier();
+            comm.bytes_sent
+        });
+        assert_eq!(got, vec![80, 80, 80]);
+        assert_eq!(got.iter().sum::<u64>(), 240);
+    }
+
+    #[test]
+    fn subgroup_allgather_and_barrier() {
+        // ranks {0, 2} form a subgroup; rank 1 stays out and just waits
+        let got = run_cluster(3, NetSpec::instant(), |mut comm| {
+            let out = if comm.rank != 1 {
+                let mut sub = comm.subgroup(&[0, 2]);
+                assert_eq!(sub.size(), 2);
+                let all = sub.allgather(100, vec![comm.rank as f64]);
+                sub.barrier(101);
+                all.into_iter().flatten().collect::<Vec<f64>>()
+            } else {
+                Vec::new()
+            };
+            comm.barrier();
+            out
+        });
+        assert_eq!(got[0], vec![0.0, 2.0]);
+        assert_eq!(got[2], vec![0.0, 2.0]);
+        assert!(got[1].is_empty());
+    }
+
+    #[test]
+    fn simulated_latency_slows_things_down() {
+        let t = crate::util::Timer::start();
+        let comm_secs = run_cluster(2, NetSpec { latency_us: 3000.0, gbs: 1.0 }, |mut comm| {
+            if comm.rank == 0 {
+                comm.send(1, 1, vec![0.0; 10]);
+            } else {
+                comm.recv(1);
+            }
+            comm.comm_seconds
+        });
+        assert!(t.elapsed_s() > 0.002, "latency not applied");
+        // the sender's comm-time accounting must include the wire cost
+        assert!(comm_secs[0] > 0.002, "comm_seconds not accounted: {comm_secs:?}");
+    }
+
+    #[test]
+    fn run_cluster_parts_hands_out_owned_shards() {
+        let parts = vec![vec![1.0], vec![2.0, 2.0], vec![3.0]];
+        let got = run_cluster_parts(parts, NetSpec::instant(), |mut comm, mine| {
+            let sum: f64 = mine.iter().sum();
+            let all = comm.allreduce_sum(1, vec![sum]);
+            all[0]
+        });
+        assert_eq!(got, vec![8.0, 8.0, 8.0]);
+    }
+}

@@ -1,262 +1,28 @@
-//! Leader/worker message-passing substrate — the GASPI/MPI substitute
-//! (DESIGN.md §4) used by the `gaspi_like` distributed BMF baseline and
-//! by the multi-node mode the paper lists as future work.
+//! Distributed training subsystem (DESIGN.md §4): multi-node sharded
+//! Gibbs sampling in three layers —
 //!
-//! Workers are threads ("nodes"); communication goes through typed
-//! channels with an optional simulated per-message latency + bandwidth
-//! cost so scaling curves show realistic communication/computation
-//! trade-offs.  The primitives mirror what the GASPI implementation of
-//! [Vander Aa et al. 2017] uses: barrier, broadcast and allgather of
-//! factor-row blocks.
+//! * [`comm`] — the GASPI/MPI-substitute message substrate: typed
+//!   channels with simulated latency/bandwidth, barrier, allgather,
+//!   allreduce, sub-communicators, byte + time accounting.
+//! * [`shard`] — block ownership and data scatter: nnz-balanced
+//!   contiguous row/column partitions and the per-node submatrices.
+//! * [`session`] — [`DistributedSession`]: drives any
+//!   [`SessionBuilder`](crate::session::SessionBuilder) composition
+//!   across sharded workers under a selectable communication
+//!   [`Strategy`] (synchronous allgather / bounded-staleness async /
+//!   limited-communication posterior propagation), merging shard
+//!   snapshots into the posterior [`ModelStore`](crate::store::ModelStore)
+//!   so `PredictSession` serves distributed-trained models unchanged.
+//!
+//! References: Vander Aa et al., *Distributed Bayesian Probabilistic
+//! Matrix Factorization* (2017) for the synchronous design; Vander Aa
+//! et al., *A High-Performance Implementation of BMF with Limited
+//! Communication* (2020) for posterior propagation.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier, Mutex};
+pub mod comm;
+pub mod session;
+pub mod shard;
 
-/// Simulated interconnect properties.
-#[derive(Debug, Clone, Copy)]
-pub struct NetSpec {
-    /// one-way message latency
-    pub latency_us: f64,
-    /// per-byte cost (1/bandwidth)
-    pub gbs: f64,
-}
-
-impl NetSpec {
-    /// Zero-cost interconnect (pure shared-memory behaviour).
-    pub fn instant() -> NetSpec {
-        NetSpec { latency_us: 0.0, gbs: f64::INFINITY }
-    }
-
-    /// Infiniband-ish cluster interconnect.
-    pub fn cluster() -> NetSpec {
-        NetSpec { latency_us: 2.0, gbs: 10.0 }
-    }
-
-    fn delay_for(&self, bytes: usize) -> std::time::Duration {
-        let secs = self.latency_us * 1e-6 + bytes as f64 / (self.gbs * 1e9);
-        std::time::Duration::from_secs_f64(secs)
-    }
-}
-
-/// A message between nodes: a tagged row-block of f64s.
-#[derive(Debug, Clone)]
-pub struct Block {
-    pub from: usize,
-    pub tag: u64,
-    pub data: Vec<f64>,
-}
-
-/// Per-node communicator handle.
-pub struct Comm {
-    pub rank: usize,
-    pub size: usize,
-    net: NetSpec,
-    senders: Vec<Sender<Block>>,
-    inbox: Receiver<Block>,
-    barrier: Arc<Barrier>,
-    /// out-of-order messages (a fast peer may already be in the next
-    /// phase while we still collect the current one)
-    stash: Vec<Block>,
-    /// bytes sent by this node (for the comm/compute accounting)
-    pub bytes_sent: u64,
-}
-
-impl Comm {
-    /// Spin up `size` communicators wired all-to-all.
-    pub fn cluster(size: usize, net: NetSpec) -> Vec<Comm> {
-        let mut senders = Vec::new();
-        let mut receivers = Vec::new();
-        for _ in 0..size {
-            let (tx, rx) = channel();
-            senders.push(tx);
-            receivers.push(rx);
-        }
-        let barrier = Arc::new(Barrier::new(size));
-        receivers
-            .into_iter()
-            .enumerate()
-            .map(|(rank, inbox)| Comm {
-                rank,
-                size,
-                net,
-                senders: senders.clone(),
-                inbox,
-                barrier: barrier.clone(),
-                stash: Vec::new(),
-                bytes_sent: 0,
-            })
-            .collect()
-    }
-
-    /// Send a block to `to` (applies the simulated wire cost).
-    pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
-        let bytes = data.len() * 8;
-        self.bytes_sent += bytes as u64;
-        let d = self.net.delay_for(bytes);
-        if !d.is_zero() {
-            std::thread::sleep(d);
-        }
-        self.senders[to]
-            .send(Block { from: self.rank, tag, data })
-            .expect("peer hung up");
-    }
-
-    /// Blocking receive of the next block with `tag`.  Messages from
-    /// peers already in a later phase are stashed and delivered when
-    /// their tag is asked for.
-    pub fn recv(&mut self, tag: u64) -> Block {
-        if let Some(pos) = self.stash.iter().position(|b| b.tag == tag) {
-            return self.stash.swap_remove(pos);
-        }
-        loop {
-            let b = self.inbox.recv().expect("peer hung up");
-            if b.tag == tag {
-                return b;
-            }
-            self.stash.push(b);
-        }
-    }
-
-    pub fn barrier(&self) {
-        self.barrier.wait();
-    }
-
-    /// Allgather: every node contributes `mine`; returns all blocks
-    /// ordered by rank (one-sided-ish exchange, like GASPI segments).
-    pub fn allgather(&mut self, tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
-        for peer in 0..self.size {
-            if peer != self.rank {
-                self.send(peer, tag, mine.clone());
-            }
-        }
-        let mut out: Vec<Option<Vec<f64>>> = vec![None; self.size];
-        out[self.rank] = Some(mine);
-        for _ in 0..self.size - 1 {
-            let b = self.recv(tag);
-            out[b.from] = Some(b.data);
-        }
-        out.into_iter().map(|o| o.expect("missing rank block")).collect()
-    }
-}
-
-/// Partition n items into `parts` near-equal contiguous ranges.
-pub fn partition(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
-    let parts = parts.max(1);
-    let base = n / parts;
-    let extra = n % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut lo = 0;
-    for p in 0..parts {
-        let len = base + usize::from(p < extra);
-        out.push(lo..lo + len);
-        lo += len;
-    }
-    out
-}
-
-/// Run `f(comm)` on every node of a `size`-node cluster; returns the
-/// per-node results in rank order.
-pub fn run_cluster<T: Send + 'static, F>(size: usize, net: NetSpec, f: F) -> Vec<T>
-where
-    F: Fn(Comm) -> T + Send + Sync + 'static,
-{
-    let comms = Comm::cluster(size, net);
-    let f = Arc::new(f);
-    let results = Arc::new(Mutex::new(Vec::<(usize, T)>::new()));
-    let mut handles = Vec::new();
-    for comm in comms {
-        let f = f.clone();
-        let results = results.clone();
-        handles.push(std::thread::spawn(move || {
-            let rank = comm.rank;
-            let r = f(comm);
-            results.lock().unwrap().push((rank, r));
-        }));
-    }
-    for h in handles {
-        h.join().expect("node panicked");
-    }
-    let mut v = Arc::try_unwrap(results).ok().unwrap().into_inner().unwrap();
-    v.sort_by_key(|(rank, _)| *rank);
-    v.into_iter().map(|(_, t)| t).collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn partition_covers_exactly() {
-        for (n, p) in [(10, 3), (7, 7), (5, 8), (100, 1), (0, 4)] {
-            let parts = partition(n, p);
-            assert_eq!(parts.len(), p.max(1));
-            let total: usize = parts.iter().map(|r| r.len()).sum();
-            assert_eq!(total, n);
-            // contiguous
-            let mut expect = 0;
-            for r in &parts {
-                assert_eq!(r.start, expect);
-                expect = r.end;
-            }
-        }
-    }
-
-    #[test]
-    fn allgather_exchanges_all_blocks() {
-        let got = run_cluster(4, NetSpec::instant(), |mut comm| {
-            let mine = vec![comm.rank as f64; 3];
-            let all = comm.allgather(1, mine);
-            comm.barrier();
-            all
-        });
-        for (rank, all) in got.iter().enumerate() {
-            assert_eq!(all.len(), 4);
-            for (peer, block) in all.iter().enumerate() {
-                assert_eq!(block, &vec![peer as f64; 3], "rank {rank} block {peer}");
-            }
-        }
-    }
-
-    #[test]
-    fn point_to_point_send_recv() {
-        let got = run_cluster(2, NetSpec::instant(), |mut comm| {
-            if comm.rank == 0 {
-                comm.send(1, 7, vec![1.0, 2.0]);
-                0.0
-            } else {
-                let b = comm.recv(7);
-                assert_eq!(b.from, 0);
-                b.data.iter().sum::<f64>()
-            }
-        });
-        assert_eq!(got[1], 3.0);
-    }
-
-    #[test]
-    fn bytes_accounting() {
-        let got = run_cluster(2, NetSpec::instant(), |mut comm| {
-            if comm.rank == 0 {
-                comm.send(1, 1, vec![0.0; 100]);
-            } else {
-                comm.recv(1);
-            }
-            comm.barrier();
-            comm.bytes_sent
-        });
-        assert_eq!(got[0], 800);
-        assert_eq!(got[1], 0);
-    }
-
-    #[test]
-    fn simulated_latency_slows_things_down() {
-        let t = crate::util::Timer::start();
-        run_cluster(2, NetSpec { latency_us: 3000.0, gbs: 1.0 }, |mut comm| {
-            if comm.rank == 0 {
-                comm.send(1, 1, vec![0.0; 10]);
-            } else {
-                comm.recv(1);
-            }
-        });
-        assert!(t.elapsed_s() > 0.002, "latency not applied");
-    }
-}
+pub use comm::{run_cluster, run_cluster_parts, Block, Comm, NetSpec, SubComm};
+pub use session::{CommStats, DistResult, DistSpec, DistributedSession, Strategy};
+pub use shard::{partition, partition_by_weight, ShardPlan};

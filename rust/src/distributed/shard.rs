@@ -1,0 +1,309 @@
+//! Shard planning and data scatter for distributed training: which node
+//! owns which block of U rows / V columns, and the per-node submatrices
+//! holding exactly the observations those blocks touch.
+//!
+//! Ownership is by *contiguous* ranges (as in the GASPI implementation
+//! of Vander Aa et al. 2017), but the range boundaries are placed by
+//! cumulative nonzero count, not by row count — a matrix with a few hot
+//! rows would otherwise leave most nodes idle while one node samples all
+//! the data.
+
+use crate::data::MatrixConfig;
+use crate::sparse::SparseMatrix;
+use std::ops::Range;
+
+/// Partition n items into `parts` near-equal contiguous ranges.
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    out
+}
+
+/// Partition `weights.len()` items into `parts` contiguous ranges whose
+/// cumulative weights are as even as the ordering allows: boundary p is
+/// placed where the running weight first reaches p/parts of the total.
+/// Ranges may be empty (more parts than weighted items); together they
+/// always cover `0..weights.len()` exactly, in order.
+pub fn partition_by_weight(weights: &[usize], parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.max(1);
+    let n = weights.len();
+    let total: usize = weights.iter().sum();
+    if total == 0 {
+        return partition(n, parts);
+    }
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0usize;
+    let mut cum = 0usize;
+    for p in 0..parts {
+        if p + 1 == parts {
+            out.push(lo..n);
+            break;
+        }
+        let target = ((total as f64) * (p as f64 + 1.0) / parts as f64).round() as usize;
+        let mut hi = lo;
+        while hi < n && cum < target {
+            cum += weights[hi];
+            hi += 1;
+        }
+        out.push(lo..hi);
+        lo = hi;
+    }
+    out
+}
+
+/// The observations a node needs for the *row* side: all triplets whose
+/// row falls in `rows`, kept at the global shape so global row/column
+/// indices keep working unchanged.
+pub fn shard_sparse_rows(m: &SparseMatrix, rows: &Range<usize>) -> SparseMatrix {
+    SparseMatrix::from_triplets(
+        m.nrows(),
+        m.ncols(),
+        m.triplets().filter(|&(r, _, _)| rows.contains(&(r as usize))),
+    )
+}
+
+/// The observations a node needs for the *column* side: all triplets
+/// whose column falls in `cols`, global shape preserved.
+pub fn shard_sparse_cols(m: &SparseMatrix, cols: &Range<usize>) -> SparseMatrix {
+    SparseMatrix::from_triplets(
+        m.nrows(),
+        m.ncols(),
+        m.triplets().filter(|&(_, c, _)| cols.contains(&(c as usize))),
+    )
+}
+
+/// The block-ownership plan for one distributed session: a row range per
+/// node (shared across views — U is shared), and per view a column range
+/// per node.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub nodes: usize,
+    /// `rows[rank]` = the U rows rank owns
+    pub rows: Vec<Range<usize>>,
+    /// `view_cols[view][rank]` = the V columns rank owns in that view
+    pub view_cols: Vec<Vec<Range<usize>>>,
+}
+
+impl ShardPlan {
+    /// Plan nnz-balanced contiguous ownership over `views` (which must
+    /// share their row dimension).  Dense views weigh every row/column
+    /// by its full length; sparse views by nonzero count (+1 per item so
+    /// fully empty stretches still spread over nodes).
+    pub fn plan(views: &[&MatrixConfig], nodes: usize) -> ShardPlan {
+        assert!(!views.is_empty(), "shard plan needs at least one view");
+        let nodes = nodes.max(1);
+        let nrows = views[0].nrows();
+        let mut row_w = vec![1usize; nrows];
+        for v in views {
+            match v {
+                MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m) => {
+                    for (i, w) in row_w.iter_mut().enumerate() {
+                        *w += m.row_nnz(i);
+                    }
+                }
+                MatrixConfig::Dense(m) => {
+                    for w in row_w.iter_mut() {
+                        *w += m.cols();
+                    }
+                }
+            }
+        }
+        let rows = partition_by_weight(&row_w, nodes);
+        let view_cols = views
+            .iter()
+            .map(|v| match v {
+                MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m) => {
+                    let col_w: Vec<usize> = (0..m.ncols()).map(|j| 1 + m.col_nnz(j)).collect();
+                    partition_by_weight(&col_w, nodes)
+                }
+                MatrixConfig::Dense(m) => partition(m.cols(), nodes),
+            })
+            .collect();
+        ShardPlan { nodes, rows, view_cols }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly() {
+        for (n, p) in [(10, 3), (7, 7), (5, 8), (100, 1), (0, 4)] {
+            let parts = partition(n, p);
+            assert_eq!(parts.len(), p.max(1));
+            let total: usize = parts.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            // contiguous
+            let mut expect = 0;
+            for r in &parts {
+                assert_eq!(r.start, expect);
+                expect = r.end;
+            }
+        }
+    }
+
+    #[test]
+    fn partition_with_fewer_items_than_parts_has_empty_shards() {
+        let parts = partition(3, 5);
+        assert_eq!(parts.len(), 5);
+        let sizes: Vec<usize> = parts.iter().map(|r| r.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 3);
+        assert_eq!(sizes.iter().filter(|&&s| s == 0).count(), 2);
+        assert_eq!(parts.last().unwrap().end, 3);
+    }
+
+    fn check_cover(parts: &[Range<usize>], n: usize) {
+        let mut expect = 0;
+        for r in parts {
+            assert_eq!(r.start, expect, "ranges must be contiguous in order");
+            assert!(r.end >= r.start);
+            expect = r.end;
+        }
+        assert_eq!(expect, n, "ranges must cover 0..{n}");
+    }
+
+    #[test]
+    fn weighted_partition_covers_and_balances() {
+        // hot head: the first row holds half the weight
+        let weights = [50, 5, 5, 5, 5, 5, 5, 5, 5, 10];
+        let parts = partition_by_weight(&weights, 2);
+        check_cover(&parts, weights.len());
+        // the hot row must not drag half the remaining rows with it
+        let w0: usize = weights[parts[0].clone()].iter().sum();
+        let w1: usize = weights[parts[1].clone()].iter().sum();
+        assert!(w0.abs_diff(w1) <= 50, "{w0} vs {w1}");
+        assert!(parts[0].len() < 5, "hot shard should hold few rows, got {:?}", parts[0]);
+    }
+
+    #[test]
+    fn weighted_partition_edge_cases() {
+        // fewer items than parts
+        let parts = partition_by_weight(&[3, 9], 4);
+        assert_eq!(parts.len(), 4);
+        check_cover(&parts, 2);
+        // all-zero weights fall back to equal ranges
+        let parts = partition_by_weight(&[0; 6], 3);
+        assert_eq!(parts, partition(6, 3));
+        // empty input
+        let parts = partition_by_weight(&[], 3);
+        check_cover(&parts, 0);
+        // one part takes everything
+        let parts = partition_by_weight(&[1, 2, 3], 1);
+        assert_eq!(parts, vec![0..3]);
+    }
+
+    #[test]
+    fn weighted_partition_matches_equal_split_on_uniform_weights() {
+        let parts = partition_by_weight(&[7; 12], 4);
+        assert_eq!(parts, partition(12, 4));
+    }
+
+    fn toy_matrix() -> SparseMatrix {
+        // 6x5 with an empty row (3) and an empty column (2)
+        SparseMatrix::from_triplets(
+            6,
+            5,
+            vec![
+                (0, 0, 1.0),
+                (0, 1, 2.0),
+                (1, 3, 3.0),
+                (2, 0, 4.0),
+                (2, 4, 5.0),
+                (4, 1, 6.0),
+                (5, 3, 7.0),
+                (5, 4, 8.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn row_shards_partition_the_observations() {
+        let m = toy_matrix();
+        let parts = partition(m.nrows(), 3);
+        let shards: Vec<SparseMatrix> = parts.iter().map(|r| shard_sparse_rows(&m, r)).collect();
+        // shapes stay global
+        for s in &shards {
+            assert_eq!((s.nrows(), s.ncols()), (m.nrows(), m.ncols()));
+        }
+        // every observation lands in exactly one shard, with global indices
+        let mut all: Vec<(u32, u32, f64)> = shards.iter().flat_map(|s| s.triplets()).collect();
+        all.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let want: Vec<(u32, u32, f64)> = m.triplets().collect();
+        assert_eq!(all, want);
+    }
+
+    #[test]
+    fn col_shards_partition_the_observations() {
+        let m = toy_matrix();
+        let parts = partition(m.ncols(), 2);
+        let shards: Vec<SparseMatrix> = parts.iter().map(|c| shard_sparse_cols(&m, c)).collect();
+        let total: usize = shards.iter().map(|s| s.nnz()).sum();
+        assert_eq!(total, m.nnz());
+        for (s, r) in shards.iter().zip(&parts) {
+            for (_, c, _) in s.triplets() {
+                assert!(r.contains(&(c as usize)));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_plan_balances_by_nnz() {
+        // 8 rows; row 0 carries most of the data
+        let mut trips = Vec::new();
+        for j in 0..20u32 {
+            trips.push((0u32, j, 1.0));
+        }
+        for i in 1..8u32 {
+            trips.push((i, 0, 1.0));
+        }
+        let m = SparseMatrix::from_triplets(8, 20, trips);
+        let mc = MatrixConfig::SparseUnknown(m.clone());
+        let plan = ShardPlan::plan(&[&mc], 2);
+        assert_eq!(plan.nodes, 2);
+        check_cover(&plan.rows, 8);
+        check_cover(&plan.view_cols[0], 20);
+        // nnz of the two row shards must be far closer than an equal
+        // row split (which would put 20+3 vs 4)
+        let nnz_of = |r: &Range<usize>| -> usize { (r.clone()).map(|i| m.row_nnz(i)).sum() };
+        let (a, b) = (nnz_of(&plan.rows[0]), nnz_of(&plan.rows[1]));
+        assert!(a.abs_diff(b) <= 20, "nnz-balanced split too skewed: {a} vs {b}");
+        assert!(plan.rows[0].len() < plan.rows[1].len());
+    }
+
+    #[test]
+    fn shard_plan_handles_more_nodes_than_rows() {
+        let m = SparseMatrix::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, 1.0)]);
+        let mc = MatrixConfig::SparseUnknown(m);
+        let plan = ShardPlan::plan(&[&mc], 5);
+        assert_eq!(plan.rows.len(), 5);
+        check_cover(&plan.rows, 2);
+        let nonempty = plan.rows.iter().filter(|r| !r.is_empty()).count();
+        assert!(nonempty <= 2);
+        // zero-size shards must survive a scatter round trip
+        let empty = plan.rows.iter().find(|r| r.is_empty()).unwrap();
+        let mc_m = match &mc {
+            MatrixConfig::SparseUnknown(m) => m,
+            _ => unreachable!(),
+        };
+        let shard = shard_sparse_rows(mc_m, empty);
+        assert_eq!(shard.nnz(), 0);
+        assert_eq!(shard.nrows(), 2);
+    }
+
+    #[test]
+    fn shard_plan_dense_views_split_evenly() {
+        let d = MatrixConfig::Dense(crate::linalg::Mat::zeros(9, 6));
+        let plan = ShardPlan::plan(&[&d], 3);
+        check_cover(&plan.rows, 9);
+        assert_eq!(plan.view_cols[0], partition(6, 3));
+    }
+}

@@ -9,7 +9,14 @@
 //! * substrates: [`util`], [`rng`], [`linalg`], [`sparse`]
 //! * framework:  [`data`], [`noise`], [`priors`], [`model`], [`session`]
 //! * runtime:    [`coordinator`] (work-stealing parallel Gibbs),
-//!               [`runtime`] (PJRT/XLA AOT engine), [`distributed`]
+//!               [`runtime`] (PJRT/XLA AOT engine)
+//! * distributed: [`distributed`] — `comm` (message substrate with
+//!               allgather/allreduce/sub-communicators and byte + time
+//!               accounting), `shard` (nnz-balanced block ownership and
+//!               data scatter), `session` (`DistributedSession`: any
+//!               builder composition across sharded nodes under sync /
+//!               bounded-staleness async / posterior-propagation
+//!               communication strategies)
 //! * serving:    [`store`] (versioned on-disk posterior model store),
 //!               [`predict`] (`PredictSession`: pointwise + batched
 //!               prediction with uncertainty, top-K recommendation,
@@ -71,11 +78,12 @@ pub mod bench;
 /// Convenient glob-import surface for examples and downstream users.
 pub mod prelude {
     pub use crate::data::{MatrixConfig, SideInfo};
+    pub use crate::distributed::{DistResult, DistributedSession, NetSpec, Strategy};
     pub use crate::linalg::Mat;
     pub use crate::noise::NoiseConfig;
     pub use crate::predict::{BlockPrediction, PredictSession, Prediction};
     pub use crate::priors::PriorKind;
-    pub use crate::session::{SessionConfig, TrainResult, TrainSession};
+    pub use crate::session::{SessionBuilder, SessionConfig, TrainResult, TrainSession};
     pub use crate::sparse::SparseMatrix;
     pub use crate::store::{ModelStore, Snapshot, StoreMeta};
 }

@@ -26,12 +26,14 @@ const USAGE: &str = "usage: smurff <train|predict|generate|bench|info> [flags]
            [--engine native|xla] [--noise fixed|adaptive|probit] [--alpha F]
            [--prior normal|macau] [--side <mtx>] [--checkpoint <dir>] [--verbose]
            [--save-dir <dir>] [--save-freq N]
+           [--nodes N] [--comm sync|async[:S]|pprop[:R]] [--net instant|cluster]
   predict  --store <dir> [--view N] [--threads N]
            --row N --col N        pointwise prediction with uncertainty
            --row N --topk K       top-K column recommendations for a row
   generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
            [--side-out <mtx>] [--seed N]
-  bench    <fig3|fig4|fig5|gfa|macau|table1|serving|all> [--quick] [--out <json>]
+  bench    <fig3|fig4|fig5|gfa|macau|scaling|table1|serving|all> [--quick]
+           [--json <path>]   (writes the report to disk; --out is an alias)
   info     [--artifacts <dir>]";
 
 fn main() {
@@ -211,6 +213,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ("normal", _) => builder,
         (other, _) => anyhow::bail!("unknown prior '{other}'"),
     };
+
+    let nodes = args.get_usize("nodes", 1).map_err(anyhow::Error::msg)?;
+    if nodes > 1 {
+        return run_distributed(builder, &cfg, nodes, args);
+    }
     builder = attach_engine(builder, &args.get_str("engine", "native"))?;
 
     let mut session = builder.build();
@@ -256,6 +263,66 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if result.auc.is_finite() {
         println!("test AUC  = {:.4}", result.auc);
+    }
+    Ok(())
+}
+
+/// Multi-node sharded training: build the same composition as a
+/// `DistributedSession` and report per-node comm/compute accounting.
+fn run_distributed(
+    builder: SessionBuilder,
+    cfg: &SessionConfig,
+    nodes: usize,
+    args: &Args,
+) -> anyhow::Result<()> {
+    let strategy = smurff::distributed::Strategy::parse(&args.get_str("comm", "sync"))?;
+    let net = match args.get_str("net", "instant").as_str() {
+        "instant" => smurff::distributed::NetSpec::instant(),
+        "cluster" => smurff::distributed::NetSpec::cluster(),
+        other => anyhow::bail!("unknown net '{other}' (instant|cluster)"),
+    };
+    if args.has("checkpoint") {
+        anyhow::bail!("--checkpoint is not supported with --nodes; use --save-dir/--save-freq");
+    }
+    let engine = args.get_str("engine", "native");
+    if engine != "native" {
+        anyhow::bail!("--engine {engine} cannot combine with --nodes (workers are native-only)");
+    }
+    let dist = builder.distributed(nodes, strategy, net).build_distributed();
+    println!(
+        "distributed training: K={} burnin={} nsamples={} nodes={nodes} comm={}",
+        cfg.num_latent,
+        cfg.burnin,
+        cfg.nsamples,
+        strategy.name(),
+    );
+    let r = dist.run()?;
+    for c in &r.comm {
+        println!(
+            "  node {}: sent {:.2} MB, {:.2}s comm / {:.2}s total",
+            c.rank,
+            c.bytes_sent as f64 / 1e6,
+            c.comm_seconds,
+            c.seconds
+        );
+    }
+    if let Some(store) = &r.result.store_path {
+        println!(
+            "model store: {} posterior snapshots in {} (serve with `smurff predict --store {}`)",
+            r.result.nsnapshots,
+            store.display(),
+            store.display()
+        );
+    }
+    println!(
+        "done: {} iterations on {} nodes in {:.2}s ({:.2} MB total on the wire)",
+        r.result.iterations,
+        r.nodes,
+        r.result.train_seconds,
+        r.total_bytes() as f64 / 1e6
+    );
+    if r.result.rmse.is_finite() {
+        println!("test RMSE = {:.4}", r.result.rmse);
     }
     Ok(())
 }
@@ -356,9 +423,13 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("bench needs a figure name\n{USAGE}"))?;
     let quick = args.get_bool("quick");
     let report = smurff::bench::run_by_name(which, quick)?;
-    if let Some(out) = args.get("out") {
-        std::fs::write(out, report.to_json().to_string())?;
-        println!("wrote {out}");
+    // `--json` is the documented spelling, `--out` a compat alias: both
+    // write the pretty report (the BENCH_*.json perf-trajectory files)
+    for flag in ["json", "out"] {
+        if let Some(path) = args.get(flag) {
+            std::fs::write(path, report.to_json().to_string_pretty())?;
+            println!("wrote {path}");
+        }
     }
     Ok(())
 }

@@ -18,9 +18,7 @@ mod checkpoint;
 
 pub use checkpoint::Checkpoint;
 
-use crate::coordinator::{
-    access_for, sample_side_custom, Engine, MvnSweep, NativeEngine, ThreadPool, ViewSlice,
-};
+use crate::coordinator::{access_for, Engine, MvnSweep, NativeEngine, ThreadPool, ViewSlice};
 use crate::data::{MatrixConfig, SideInfo, TestSet};
 use crate::linalg::Mat;
 use crate::model::{predict_cells, PredictionAggregator};
@@ -72,6 +70,12 @@ impl Default for SessionConfig {
 /// One data view attached to the session.
 pub struct View {
     pub data: MatrixConfig,
+    /// Column-oriented replica used by the column-side sweep when the
+    /// row-oriented `data` does not hold every observation of this
+    /// node's columns (distributed workers: `data` is the row shard,
+    /// `col_data` the column shard).  `None` = single node: both sweeps
+    /// read `data`.
+    pub col_data: Option<MatrixConfig>,
     pub col_latents: Mat,
     pub col_prior: Box<dyn Prior>,
     pub noise: NoiseModel,
@@ -102,22 +106,27 @@ pub struct TrainResult {
 }
 
 /// Builder: the composition surface of Table 1.
+///
+/// Fields are crate-visible so [`crate::distributed::DistributedSession`]
+/// can shard the exact same composition across worker nodes.
 pub struct SessionBuilder {
-    cfg: SessionConfig,
-    row_prior: PriorChoice,
-    views: Vec<(MatrixConfig, PriorChoice, NoiseConfig, Option<TestSet>)>,
-    engine: Option<Box<dyn Engine>>,
-    center: bool,
+    pub(crate) cfg: SessionConfig,
+    pub(crate) row_prior: PriorChoice,
+    pub(crate) views: Vec<(MatrixConfig, PriorChoice, NoiseConfig, Option<TestSet>)>,
+    pub(crate) engine: Option<Box<dyn Engine>>,
+    pub(crate) center: bool,
+    pub(crate) dist: Option<crate::distributed::DistSpec>,
 }
 
-enum PriorChoice {
+#[derive(Clone)]
+pub(crate) enum PriorChoice {
     Normal,
     Macau(SideInfo),
     SpikeAndSlab,
 }
 
 impl PriorChoice {
-    fn build(&self, nrows: usize, k: usize) -> Box<dyn Prior> {
+    pub(crate) fn build(&self, nrows: usize, k: usize) -> Box<dyn Prior> {
         match self {
             PriorChoice::Normal => Box::new(NormalPrior::new(k)),
             PriorChoice::Macau(side) => Box::new(MacauPrior::new(k, nrows, side.clone())),
@@ -134,6 +143,7 @@ impl SessionBuilder {
             views: Vec::new(),
             engine: None,
             center: true,
+            dist: None,
         }
     }
 
@@ -190,6 +200,29 @@ impl SessionBuilder {
         self
     }
 
+    /// Train this composition across `nodes` sharded workers with the
+    /// given communication [`Strategy`](crate::distributed::Strategy)
+    /// over a (simulated) interconnect.  Finish with
+    /// [`build_distributed`](SessionBuilder::build_distributed) instead
+    /// of [`build`](SessionBuilder::build); a plain `build()` ignores
+    /// this setting.
+    pub fn distributed(
+        mut self,
+        nodes: usize,
+        strategy: crate::distributed::Strategy,
+        net: crate::distributed::NetSpec,
+    ) -> Self {
+        self.dist = Some(crate::distributed::DistSpec { nodes, strategy, net });
+        self
+    }
+
+    /// Build the sharded multi-node session configured with
+    /// [`distributed`](SessionBuilder::distributed) (defaults to a
+    /// single node on an instant interconnect when it was never called).
+    pub fn build_distributed(self) -> crate::distributed::DistributedSession {
+        crate::distributed::DistributedSession::from_builder(self)
+    }
+
     pub fn build(self) -> TrainSession {
         assert!(!self.views.is_empty(), "a session needs at least one data view");
         let k = self.cfg.num_latent;
@@ -215,7 +248,16 @@ impl SessionBuilder {
             let col_latents = crate::model::init_latents(ncols, k, self.cfg.init_std, &mut rng);
             let col_prior = prior_choice.build(ncols, k);
             let aggregator = test.as_ref().map(|t| PredictionAggregator::new(t.len()));
-            views.push(View { data, col_latents, col_prior, noise, test, aggregator, offset });
+            views.push(View {
+                data,
+                col_data: None,
+                col_latents,
+                col_prior,
+                noise,
+                test,
+                aggregator,
+                offset,
+            });
         }
 
         let threads = if self.cfg.threads == 0 {
@@ -235,29 +277,24 @@ impl SessionBuilder {
     }
 }
 
-fn center_data(data: MatrixConfig) -> (MatrixConfig, f64) {
-    let mean = data.mean();
-    let centered = match data {
+pub(crate) fn center_data(data: MatrixConfig) -> (MatrixConfig, f64) {
+    match data {
         MatrixConfig::SparseUnknown(m) => {
-            let (r, c) = (m.nrows(), m.ncols());
-            MatrixConfig::SparseUnknown(SparseMatrix::from_triplets(
-                r,
-                c,
-                m.triplets().map(|(i, j, v)| (i, j, v - mean)),
-            ))
+            let (c, mean) = m.centered();
+            (MatrixConfig::SparseUnknown(c), mean)
         }
         MatrixConfig::SparseFull(m) => {
             // centering would densify: keep as-is (documented behaviour)
-            return (MatrixConfig::SparseFull(m), 0.0);
+            (MatrixConfig::SparseFull(m), 0.0)
         }
         MatrixConfig::Dense(mut m) => {
+            let mean = crate::util::mean(m.data());
             for v in m.data_mut().iter_mut() {
                 *v -= mean;
             }
-            MatrixConfig::Dense(m)
+            (MatrixConfig::Dense(m), mean)
         }
-    };
-    (centered, mean)
+    }
 }
 
 fn data_variance(data: &MatrixConfig) -> f64 {
@@ -340,14 +377,51 @@ impl TrainSession {
         self.engine.name()
     }
 
-    /// One full Gibbs iteration (Algorithm 1's outer-loop body).
+    /// One full Gibbs iteration (Algorithm 1's outer-loop body) —
+    /// composed from the shard-range sub-steps below over full ranges,
+    /// so a single node and a distributed worker run the *same* code.
     pub fn step(&mut self) {
+        let mut hyper_rng = self.hyper_rng();
+        let nrows = self.u.rows();
+        self.sample_row_side(0..nrows, &mut hyper_rng);
+        for vi in 0..self.views.len() {
+            let ncols = self.views[vi].col_latents.rows();
+            self.sample_col_side(vi, 0..ncols, &mut hyper_rng);
+            if self.noise_is_adaptive(vi) {
+                let (sse, nobs) = self.view_sse_local(vi);
+                self.update_view_noise(vi, sse, nobs, &mut hyper_rng);
+            }
+        }
+        self.aggregate_test_predictions();
+        self.iteration += 1;
+    }
+
+    /// The deterministic hyper-parameter RNG stream for the current
+    /// iteration.  Distributed workers each recreate it and consume it
+    /// in the same order over replicated state, so hyper draws agree
+    /// across nodes without communication.
+    pub fn hyper_rng(&self) -> Rng {
+        Rng::for_row(self.cfg.seed, self.iteration as u64, u64::MAX, 0)
+    }
+
+    /// Row side of one iteration restricted to `rows`: row-prior hyper
+    /// update (full replicated U), MVN sweep of `rows` (all views
+    /// contribute), then the prior's post-latents pass.  The full range
+    /// reproduces `step`'s row side exactly.  Distributed workers that
+    /// exchange factor blocks between the sweep and the post-latents
+    /// pass (so the prior sees the *synchronised* U) call
+    /// [`sample_row_side_pre`](TrainSession::sample_row_side_pre) and
+    /// [`finish_row_side`](TrainSession::finish_row_side) separately.
+    pub fn sample_row_side(&mut self, rows: std::ops::Range<usize>, hyper_rng: &mut Rng) {
+        self.sample_row_side_pre(rows, hyper_rng);
+        self.finish_row_side(hyper_rng);
+    }
+
+    /// Hyper update + U sweep of `rows`, without the post-latents pass.
+    pub fn sample_row_side_pre(&mut self, rows: std::ops::Range<usize>, hyper_rng: &mut Rng) {
         let iter = self.iteration as u64;
         let seed = self.cfg.seed;
-        let mut hyper_rng = Rng::for_row(seed, iter, u64::MAX, 0);
-
-        // ---- row side: hyper + U sweep (all views contribute)
-        self.row_prior.update_hyper(&self.u, &mut hyper_rng);
+        self.row_prior.update_hyper(&self.u, hyper_rng);
         {
             let views: Vec<ViewSlice<'_>> = self
                 .views
@@ -376,83 +450,143 @@ impl TrainSession {
                 iteration: iter,
                 side_id: 0,
             };
-            self.engine.sample_mvn_side(&sweep, &mut self.u, &self.pool);
+            self.engine.sample_mvn_side_range(&sweep, &mut self.u, &self.pool, rows);
         }
-        self.row_prior.post_latents(&self.u, &mut hyper_rng);
+    }
 
-        // ---- column side of every view
-        for (vi, view) in self.views.iter_mut().enumerate() {
-            let side_id = 1 + vi as u64;
-            view.col_prior.update_hyper(&view.col_latents, &mut hyper_rng);
-            let probit = view.noise.is_probit();
-            if probit {
-                assert!(
-                    matches!(view.data, MatrixConfig::SparseUnknown(_)),
-                    "probit noise requires sparse-with-unknowns data"
+    /// Row-prior post-latents pass (Macau: resample β from the current —
+    /// on distributed workers, freshly synchronised — U).
+    pub fn finish_row_side(&mut self, hyper_rng: &mut Rng) {
+        self.row_prior.post_latents(&self.u, hyper_rng);
+    }
+
+    /// Column side of view `vi` restricted to `cols`: column-prior hyper
+    /// update, sweep of `cols`, post-latents.  The sweep reads the
+    /// view's `col_data` when present (distributed column shard), else
+    /// `data`.  Does *not* update the noise model — callers supply the
+    /// (possibly allreduced) SSE to [`update_view_noise`] themselves.
+    pub fn sample_col_side(
+        &mut self,
+        vi: usize,
+        cols: std::ops::Range<usize>,
+        hyper_rng: &mut Rng,
+    ) {
+        self.sample_col_side_pre(vi, cols, hyper_rng);
+        self.finish_col_side(vi, hyper_rng);
+    }
+
+    /// Column hyper update + sweep of `cols`, without the post-latents
+    /// pass (distributed workers run it after the block exchange).
+    pub fn sample_col_side_pre(
+        &mut self,
+        vi: usize,
+        cols: std::ops::Range<usize>,
+        hyper_rng: &mut Rng,
+    ) {
+        let iter = self.iteration as u64;
+        let seed = self.cfg.seed;
+        let side_id = 1 + vi as u64;
+        let view = &mut self.views[vi];
+        view.col_prior.update_hyper(&view.col_latents, hyper_rng);
+        let probit = view.noise.is_probit();
+        let col_data = view.col_data.as_ref().unwrap_or(&view.data);
+        if probit {
+            assert!(
+                matches!(col_data, MatrixConfig::SparseUnknown(_)),
+                "probit noise requires sparse-with-unknowns data"
+            );
+        }
+        match view.col_prior.mvn_spec() {
+            Some(spec) => {
+                let full = col_data.fully_observed() && !probit;
+                let slice = ViewSlice {
+                    data: access_for(col_data, false),
+                    other: &self.u,
+                    alpha: view.noise.alpha(),
+                    probit,
+                    full_gram: full.then(|| ViewSlice::full_gram_for(&self.u, view.noise.alpha())),
+                };
+                let sweep = MvnSweep {
+                    lambda0: spec.lambda0,
+                    means: spec.means,
+                    views: vec![slice],
+                    seed,
+                    iteration: iter,
+                    side_id,
+                };
+                self.engine.sample_mvn_side_range(&sweep, &mut view.col_latents, &self.pool, cols);
+            }
+            None => {
+                let slice = ViewSlice {
+                    data: access_for(col_data, false),
+                    other: &self.u,
+                    alpha: view.noise.alpha(),
+                    probit,
+                    full_gram: None,
+                };
+                crate::coordinator::sample_side_custom_range(
+                    view.col_prior.as_ref(),
+                    &slice,
+                    &mut view.col_latents,
+                    &self.pool,
+                    seed,
+                    iter,
+                    side_id,
+                    cols,
                 );
             }
-            match view.col_prior.mvn_spec() {
-                Some(spec) => {
-                    let full = view.data.fully_observed() && !probit;
-                    let slice = ViewSlice {
-                        data: access_for(&view.data, false),
-                        other: &self.u,
-                        alpha: view.noise.alpha(),
-                        probit,
-                        full_gram: full
-                            .then(|| ViewSlice::full_gram_for(&self.u, view.noise.alpha())),
-                    };
-                    let sweep = MvnSweep {
-                        lambda0: spec.lambda0,
-                        means: spec.means,
-                        views: vec![slice],
-                        seed,
-                        iteration: iter,
-                        side_id,
-                    };
-                    self.engine.sample_mvn_side(&sweep, &mut view.col_latents, &self.pool);
-                }
-                None => {
-                    let slice = ViewSlice {
-                        data: access_for(&view.data, false),
-                        other: &self.u,
-                        alpha: view.noise.alpha(),
-                        probit,
-                        full_gram: None,
-                    };
-                    sample_side_custom(
-                        view.col_prior.as_ref(),
-                        &slice,
-                        &mut view.col_latents,
-                        &self.pool,
-                        seed,
-                        iter,
-                        side_id,
-                    );
-                }
-            }
-            view.col_prior.post_latents(&view.col_latents, &mut hyper_rng);
+        }
+    }
 
-            // ---- noise update (adaptive only does work)
-            if matches!(view.noise, NoiseModel::Adaptive { .. }) {
-                let acc = access_for(&view.data, true);
-                let (sse, nobs) = crate::coordinator::view_sse(&acc, &self.u, &view.col_latents, &self.pool);
-                view.noise.update(sse, nobs, &mut hyper_rng);
+    /// Column-prior post-latents pass for view `vi`.
+    pub fn finish_col_side(&mut self, vi: usize, hyper_rng: &mut Rng) {
+        let view = &mut self.views[vi];
+        view.col_prior.post_latents(&view.col_latents, hyper_rng);
+    }
+
+    /// Whether view `vi` carries an adaptive noise model (the only kind
+    /// whose end-of-iteration update does work).
+    pub fn noise_is_adaptive(&self, vi: usize) -> bool {
+        matches!(self.views[vi].noise, NoiseModel::Adaptive { .. })
+    }
+
+    /// Sum of squared residuals over the observations held in this
+    /// session's row data for view `vi` — the whole view on a single
+    /// node, the local shard's contribution on a distributed worker
+    /// (shards partition the observations, so shard SSEs allreduce to
+    /// the global one).
+    pub fn view_sse_local(&self, vi: usize) -> (f64, usize) {
+        let view = &self.views[vi];
+        let acc = access_for(&view.data, true);
+        crate::coordinator::view_sse(&acc, &self.u, &view.col_latents, &self.pool)
+    }
+
+    /// Resample view `vi`'s adaptive noise precision from the given
+    /// residual statistics (no-op for fixed/probit noise).
+    pub fn update_view_noise(&mut self, vi: usize, sse: f64, nobs: usize, hyper_rng: &mut Rng) {
+        self.views[vi].noise.update(sse, nobs, hyper_rng);
+    }
+
+    /// Fold the current factors into each tested view's posterior-mean
+    /// aggregator — only past burn-in, as in `step`.
+    pub fn aggregate_test_predictions(&mut self) {
+        if self.iteration < self.cfg.burnin {
+            return;
+        }
+        for view in self.views.iter_mut() {
+            if let (Some(test), Some(agg)) = (&view.test, &mut view.aggregator) {
+                let mut preds = predict_cells(&self.u, &view.col_latents, test);
+                for p in preds.iter_mut() {
+                    *p += view.offset;
+                }
+                agg.add_sample(&preds);
             }
         }
+    }
 
-        // ---- prediction aggregation after burn-in
-        if self.iteration >= self.cfg.burnin {
-            for view in self.views.iter_mut() {
-                if let (Some(test), Some(agg)) = (&view.test, &mut view.aggregator) {
-                    let mut preds = predict_cells(&self.u, &view.col_latents, test);
-                    for p in preds.iter_mut() {
-                        *p += view.offset;
-                    }
-                    agg.add_sample(&preds);
-                }
-            }
-        }
+    /// Advance the iteration counter — callers composing the sub-steps
+    /// manually (distributed workers) end each iteration with this.
+    pub fn advance_iteration(&mut self) {
         self.iteration += 1;
     }
 
@@ -558,6 +692,7 @@ impl TrainSession {
             offsets: self.views.iter().map(|v| v.offset).collect(),
             save_freq: self.cfg.save_freq,
             link_features: self.row_prior.link_spec().map(|l| l.beta.rows()).unwrap_or(0),
+            producer: None,
         }
     }
 
@@ -702,6 +837,29 @@ mod tests {
         let a = run(1);
         let b = run(4);
         assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    fn manual_substeps_compose_to_full_step() {
+        // the distributed worker path (hyper_rng + range sub-steps +
+        // advance) over full ranges must be bit-identical to step()
+        let (train, _) = crate::data::movielens_like(40, 30, 800, 0.0, 17);
+        let cfg = quick_cfg(4, 2, 4);
+        let mut a = TrainSession::bmf(train.clone(), None, cfg.clone());
+        let mut b = TrainSession::bmf(train, None, cfg);
+        for _ in 0..3 {
+            a.step();
+            let mut hyper = b.hyper_rng();
+            let n = b.u.rows();
+            b.sample_row_side(0..n, &mut hyper);
+            let m = b.views[0].col_latents.rows();
+            b.sample_col_side(0, 0..m, &mut hyper);
+            b.aggregate_test_predictions();
+            b.advance_iteration();
+        }
+        assert_eq!(a.iteration(), b.iteration());
+        assert_eq!(a.u.max_abs_diff(&b.u), 0.0);
+        assert_eq!(a.views[0].col_latents.max_abs_diff(&b.views[0].col_latents), 0.0);
     }
 
     #[test]

@@ -135,6 +135,23 @@ impl SparseMatrix {
         crate::util::mean(&self.row_vals)
     }
 
+    /// Copy with the global mean subtracted from every stored value,
+    /// returned together with that mean — the shared mean-centering step
+    /// of sessions and baselines (predictions add the mean back).
+    /// Rebuilds neither CSR nor CSC: the sparsity structure is shared
+    /// with `self`, only the value arrays change.
+    pub fn centered(&self) -> (SparseMatrix, f64) {
+        let mean = self.mean_value();
+        let mut m = self.clone();
+        for v in m.row_vals.iter_mut() {
+            *v -= mean;
+        }
+        for v in m.col_vals.iter_mut() {
+            *v -= mean;
+        }
+        (m, mean)
+    }
+
     /// Look up a single cell (None when structurally zero / unknown).
     pub fn get(&self, i: usize, j: usize) -> Option<f64> {
         let (cols, vals) = self.row(i);
@@ -189,6 +206,21 @@ mod tests {
             4,
             vec![(0, 1, 2.0), (2, 3, -1.0), (0, 0, 1.0), (1, 2, 5.0), (2, 0, 3.0)],
         )
+    }
+
+    #[test]
+    fn centered_subtracts_mean_in_both_orientations() {
+        let m = sample();
+        let (c, mean) = m.centered();
+        assert_eq!(mean, 2.0); // (2 - 1 + 1 + 5 + 3) / 5
+        assert!(c.mean_value().abs() < 1e-12);
+        assert_eq!((c.nrows(), c.ncols(), c.nnz()), (m.nrows(), m.ncols(), m.nnz()));
+        // CSR and CSC views both carry the centered values
+        for (r, c_idx, v) in c.triplets() {
+            let orig = m.get(r as usize, c_idx as usize).unwrap();
+            assert_eq!(v, orig - mean);
+        }
+        assert_eq!(c.col(0).1, &[1.0 - mean, 3.0 - mean]);
     }
 
     #[test]

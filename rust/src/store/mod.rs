@@ -53,11 +53,15 @@ pub struct StoreMeta {
     pub save_freq: usize,
     /// side-info feature count feeding the row link matrix (0 = no link)
     pub link_features: usize,
+    /// provenance of the training run that wrote the store (e.g.
+    /// `"distributed sync x4"`); `None` for single-node sessions.
+    /// Serving ignores it — snapshots are merged full models either way.
+    pub producer: Option<String>,
 }
 
 impl StoreMeta {
     fn to_json(&self, snapshots: &[SnapshotInfo]) -> JsonValue {
-        JsonValue::obj(vec![
+        let mut pairs = vec![
             ("format", JsonValue::str(STORE_FORMAT)),
             ("version", JsonValue::num(STORE_VERSION as f64)),
             ("num_latent", JsonValue::num(self.num_latent as f64)),
@@ -66,21 +70,25 @@ impl StoreMeta {
             ("offsets", JsonValue::arr_f64(&self.offsets)),
             ("save_freq", JsonValue::num(self.save_freq as f64)),
             ("link_features", JsonValue::num(self.link_features as f64)),
-            (
-                "snapshots",
-                JsonValue::Array(
-                    snapshots
-                        .iter()
-                        .map(|s| {
-                            JsonValue::obj(vec![
-                                ("iteration", JsonValue::num(s.iteration as f64)),
-                                ("dir", JsonValue::str(&s.dir)),
-                            ])
-                        })
-                        .collect(),
-                ),
+        ];
+        if let Some(p) = &self.producer {
+            pairs.push(("producer", JsonValue::str(p)));
+        }
+        pairs.push((
+            "snapshots",
+            JsonValue::Array(
+                snapshots
+                    .iter()
+                    .map(|s| {
+                        JsonValue::obj(vec![
+                            ("iteration", JsonValue::num(s.iteration as f64)),
+                            ("dir", JsonValue::str(&s.dir)),
+                        ])
+                    })
+                    .collect(),
             ),
-        ])
+        ));
+        JsonValue::obj(pairs)
     }
 }
 
@@ -206,6 +214,10 @@ impl ModelStore {
                 offsets,
                 save_freq: req_usize("save_freq")?,
                 link_features: req_usize("link_features")?,
+                producer: m
+                    .get("producer")
+                    .and_then(|v| v.as_str())
+                    .map(|s| s.to_string()),
             },
             snapshots,
         })
@@ -385,7 +397,22 @@ mod tests {
             offsets: vec![0.25; ncols.len()],
             save_freq: 1,
             link_features,
+            producer: None,
         }
+    }
+
+    #[test]
+    fn producer_provenance_round_trips() {
+        let dir = scratch("prod");
+        let mut m = meta(4, 2, &[3], 0);
+        m.producer = Some("distributed pprop:8 x4".to_string());
+        ModelStore::create(&dir, m).unwrap();
+        let opened = ModelStore::open(&dir).unwrap();
+        assert_eq!(opened.meta().producer.as_deref(), Some("distributed pprop:8 x4"));
+        // absent producer stays None
+        let dir2 = scratch("noprod");
+        ModelStore::create(&dir2, meta(4, 2, &[3], 0)).unwrap();
+        assert_eq!(ModelStore::open(&dir2).unwrap().meta().producer, None);
     }
 
     fn random_snapshot(rng: &mut Rng, it: usize, nrows: usize, k: usize, ncols: &[usize]) -> Snapshot {

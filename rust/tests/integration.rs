@@ -246,3 +246,56 @@ fn empty_test_set_is_fine() {
     let r = s.run();
     assert!(r.rmse.is_nan());
 }
+
+#[test]
+fn distributed_train_serves_through_public_api() {
+    // full public-API loop: shard-train under the limited-communication
+    // strategy, then serve the merged store with PredictSession
+    let dir = scratch("dist_serve").join("store");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (train, test) = smurff::data::movielens_like(60, 40, 1500, 0.2, 37);
+    let cfg = SessionConfig {
+        num_latent: 6,
+        burnin: 4,
+        nsamples: 8,
+        seed: 37,
+        threads: 1,
+        save_freq: 1,
+        save_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let dist = SessionBuilder::new(cfg)
+        .add_view(
+            smurff::data::MatrixConfig::SparseUnknown(train.clone()),
+            NoiseConfig::default(),
+            Some(TestSet::from_sparse(&test)),
+        )
+        .distributed(
+            2,
+            smurff::distributed::Strategy::PosteriorProp { rounds: 4 },
+            smurff::distributed::NetSpec::instant(),
+        )
+        .build_distributed();
+    let r = dist.run().unwrap();
+    assert!(r.result.rmse.is_finite());
+    assert!(r.result.nsnapshots > 0);
+    assert!(r.total_bytes() > 0);
+
+    let serve = smurff::predict::PredictSession::open(&dir).unwrap();
+    assert_eq!(serve.nsamples(), r.result.nsnapshots);
+    let t = TestSet::from_sparse(&test);
+    let means: Vec<f64> = serve
+        .predict_cells(0, &t.rows, &t.cols)
+        .iter()
+        .map(|p| p.mean)
+        .collect();
+    let served_rmse = smurff::model::rmse(&means, &t.vals);
+    let base = {
+        let vals: Vec<f64> = test.triplets().map(|x| x.2).collect();
+        smurff::model::rmse(&vec![train.mean_value(); vals.len()], &vals)
+    };
+    assert!(
+        served_rmse < base,
+        "served distributed model must beat the mean predictor: {served_rmse} vs {base}"
+    );
+}
