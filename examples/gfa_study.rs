@@ -49,7 +49,7 @@ fn main() {
     for kk in 0..k {
         let mut row = format!("{kk:>9} |");
         for v in 0..session.views.len() {
-            let w = &session.views[v].col_latents;
+            let w = session.views[v].col_latents();
             let e: f64 = (0..w.rows()).map(|j| w[(j, kk)] * w[(j, kk)]).sum();
             let total: f64 = (0..k)
                 .map(|c| (0..w.rows()).map(|j| w[(j, c)] * w[(j, c)]).sum::<f64>())
@@ -62,7 +62,7 @@ fn main() {
     // reconstruction quality per view
     println!("\nreconstruction relative error per view:");
     for (v, x_true) in d.views.iter().enumerate() {
-        let recon = smurff::linalg::gemm(&session.u, &session.views[v].col_latents.transpose());
+        let recon = smurff::linalg::gemm(&session.u, &session.views[v].col_latents().transpose());
         let mut diff = recon;
         diff.axpy(-1.0, x_true);
         println!("  view{v}: {:.4}", diff.norm() / x_true.norm());

@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
     let mut scores: Vec<(usize, f64)> = (0..movies)
         .filter(|&m| train.get(user, m).is_none())
         .map(|m| {
-            (m, smurff::linalg::dot(session.u.row(user), session.views[0].col_latents.row(m)))
+            (m, smurff::linalg::dot(session.u.row(user), session.views[0].col_latents().row(m)))
         })
         .collect();
     scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());

@@ -1,0 +1,10 @@
+//! `cargo bench` wrapper regenerating the N-mode tensor engine sweep
+//! (modes × K → s/iter / held-out RMSE vs the noise floor).
+//! Pass SMURFF_BENCH_QUICK=1 for a fast smoke run.
+fn main() {
+    let quick = std::env::var("SMURFF_BENCH_QUICK").is_ok();
+    let report = smurff::bench::run_by_name("tensor", quick).expect("bench failed");
+    let out = format!("bench_{}.json", report.name);
+    std::fs::write(&out, report.to_json().to_string()).expect("write report");
+    eprintln!("report written to {out}");
+}

@@ -90,13 +90,7 @@ impl OutOfCoreBmf {
         let sweep = MvnSweep {
             lambda0,
             means: MeanSpec::Shared(&zero_mean),
-            views: vec![ViewSlice {
-                data: access,
-                other,
-                alpha: self.alpha,
-                probit: false,
-                full_gram: None,
-            }],
+            views: vec![ViewSlice::matrix(access, other, self.alpha, false, None)],
             seed,
             iteration: iter,
             side_id: if target_rows { 0 } else { 1 },

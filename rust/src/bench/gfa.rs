@@ -78,7 +78,7 @@ fn activity_recovery(session: &TrainSession, spec: &GfaSpec) -> (usize, usize) {
     let mut correct = 0;
     let mut total = 0;
     for v in 0..nviews {
-        let w = &session.views[v].col_latents;
+        let w = session.views[v].col_latents();
         let energies: Vec<f64> = (0..k)
             .map(|kk| (0..w.rows()).map(|j| w[(j, kk)] * w[(j, kk)]).sum::<f64>())
             .collect();

@@ -13,6 +13,7 @@ pub mod macau;
 pub mod scaling;
 pub mod serving;
 pub mod table1;
+pub mod tensor;
 
 use crate::util::JsonValue;
 
@@ -116,16 +117,17 @@ pub fn run_by_name(name: &str, quick: bool) -> anyhow::Result<Report> {
         "scaling" => Ok(scaling::run(quick)),
         "serving" => Ok(serving::run(quick)),
         "table1" => Ok(table1::run(quick)),
+        "tensor" => Ok(tensor::run(quick)),
         "all" => {
             let mut all = Report::new("all");
-            for n in ["table1", "fig3", "fig4", "fig5", "gfa", "macau", "scaling", "serving"] {
+            for n in ["table1", "fig3", "fig4", "fig5", "gfa", "macau", "scaling", "serving", "tensor"] {
                 let r = run_by_name(n, quick)?;
                 all.tables.extend(r.tables);
             }
             Ok(all)
         }
         other => anyhow::bail!(
-            "unknown bench '{other}' (fig3|fig4|fig5|gfa|macau|scaling|serving|table1|all)"
+            "unknown bench '{other}' (fig3|fig4|fig5|gfa|macau|scaling|serving|table1|tensor|all)"
         ),
     }
 }

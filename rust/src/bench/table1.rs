@@ -9,7 +9,7 @@
 use super::{Report, Table};
 use crate::data::{MatrixConfig, TestSet};
 use crate::noise::NoiseConfig;
-use crate::session::{SessionBuilder, SessionConfig};
+use crate::session::{SessionBuilder, SessionConfig, ViewData};
 
 struct Cell {
     input: &'static str,
@@ -145,7 +145,7 @@ pub fn run(quick: bool) -> Report {
                     )
                     .build();
                 s.run();
-                let recon = crate::linalg::gemm(&s.u, &s.views[0].col_latents.transpose());
+                let recon = crate::linalg::gemm(&s.u, &s.views[0].col_latents().transpose());
                 let mut diff = recon.clone();
                 diff.axpy(-1.0, dense);
                 format!("rel.err {:.3}", diff.norm() / dense.norm())
@@ -162,10 +162,10 @@ pub fn run(quick: bool) -> Report {
                 let mut s = b.build();
                 s.run();
                 // report reconstruction error of view 0
-                let recon = crate::linalg::gemm(&s.u, &s.views[0].col_latents.transpose());
+                let recon = crate::linalg::gemm(&s.u, &s.views[0].col_latents().transpose());
                 let mut diff = recon.clone();
                 diff.axpy(-1.0, match &s.views[0].data {
-                    MatrixConfig::Dense(m) => m,
+                    ViewData::Matrix(MatrixConfig::Dense(m)) => m,
                     _ => unreachable!(),
                 });
                 let denom = gfa.views[0].norm();
@@ -180,10 +180,10 @@ pub fn run(quick: bool) -> Report {
                     )
                     .build();
                 s.run();
-                let recon = crate::linalg::gemm(&s.u, &s.views[0].col_latents.transpose());
+                let recon = crate::linalg::gemm(&s.u, &s.views[0].col_latents().transpose());
                 let mut diff = recon.clone();
                 diff.axpy(-1.0, match &s.views[0].data {
-                    MatrixConfig::Dense(m) => m,
+                    ViewData::Matrix(MatrixConfig::Dense(m)) => m,
                     _ => unreachable!(),
                 });
                 format!("rel.err {:.3}", diff.norm() / gfa.views[0].norm())

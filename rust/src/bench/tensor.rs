@@ -1,0 +1,73 @@
+//! `smurff bench tensor` — the N-mode engine sweep: synthetic CP
+//! tensors across modes × K, reporting Gibbs throughput and held-out
+//! RMSE (the noise floor shows whether the sampler recovers the CP
+//! structure).  Shares the `--json` report plumbing of every other
+//! bench.
+
+use super::{fmt_s, Report, Table};
+use crate::data::{cp_tensor_synth, split_tensor_train_test, CpSpec, TensorTestSet};
+use crate::noise::NoiseConfig;
+use crate::session::{ModePrior, SessionBuilder, SessionConfig};
+use crate::util::Timer;
+
+pub fn run(quick: bool) -> Report {
+    let mut report = Report::new("tensor");
+    let mut t = Table::new(
+        "N-mode tensor factorization: modes x K sweep (synthetic CP)",
+        &["modes", "dims", "K", "nnz", "iters", "s/iter", "rmse", "noise"],
+    );
+    let (burnin, nsamples) = if quick { (5, 10) } else { (15, 30) };
+    let dim_sets: &[&[usize]] = if quick {
+        &[&[60, 40], &[40, 30, 20]]
+    } else {
+        &[&[120, 80], &[60, 45, 30], &[40, 30, 20, 12]]
+    };
+    let ks: &[usize] = if quick { &[8] } else { &[8, 16] };
+    for dims in dim_sets {
+        for &k in ks {
+            let nnz = if quick { 4_000 } else { 20_000 };
+            let d = cp_tensor_synth(&CpSpec {
+                dims: dims.to_vec(),
+                rank: 4,
+                nnz,
+                noise: 0.1,
+                seed: 19,
+            });
+            let (train, test) = split_tensor_train_test(&d.tensor, 0.2, 19);
+            let cfg = SessionConfig {
+                num_latent: k,
+                burnin,
+                nsamples,
+                seed: 19,
+                threads: 0,
+                ..Default::default()
+            };
+            let priors = vec![ModePrior::Normal; dims.len() - 1];
+            let mut s = SessionBuilder::new(cfg)
+                .tensor_view(
+                    train,
+                    priors,
+                    NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 20.0 },
+                    Some(TensorTestSet::from_tensor(&test)),
+                )
+                .build();
+            let timer = Timer::start();
+            let r = s.run();
+            let secs = timer.elapsed_s();
+            let dims_str =
+                dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+            t.row(vec![
+                dims.len().to_string(),
+                dims_str,
+                k.to_string(),
+                nnz.to_string(),
+                r.iterations.to_string(),
+                fmt_s(secs / r.iterations.max(1) as f64),
+                format!("{:.4}", r.rmse),
+                format!("{:.2}", d.noise),
+            ]);
+        }
+    }
+    report.push(t);
+    report
+}

@@ -1,7 +1,15 @@
 //! The coordination layer (Layer 3): the parallel Gibbs sweep over one
-//! side of the model, the engine abstraction that lets the same sweep run
-//! on the native Rust kernels or on the AOT-compiled XLA artifacts, and
-//! the fork-join [`ThreadPool`] standing in for OpenMP.
+//! *mode* of the model (a matrix's rows or columns, or mode m of an
+//! N-mode tensor view), the engine abstraction that lets the same sweep
+//! run on the native Rust kernels or on the AOT-compiled XLA artifacts,
+//! and the fork-join [`ThreadPool`] standing in for OpenMP.
+//!
+//! The MVN row conditional never sees matrices vs tensors: per observed
+//! entry it consumes a *design row* through [`Operand`] — the opposite
+//! side's latent row for matrices, the Hadamard product of the other
+//! modes' latent rows (built in per-thread scratch, no per-row
+//! allocation) for tensors — so [`sample_one_row_mvn`], the engines and
+//! [`view_sse`] are shared by both paths rather than forked.
 //!
 //! Determinism invariant (DESIGN.md §5, property-tested in
 //! `rust/tests/coordinator_props.rs`): every row i of iteration t draws
@@ -13,10 +21,11 @@ pub mod threadpool;
 pub use threadpool::ThreadPool;
 
 use crate::data::MatrixConfig;
-use crate::linalg::{Chol, Mat};
+use crate::linalg::Mat;
 use crate::noise::NoiseModel;
 use crate::priors::{MeanSpec, Prior, RowObs};
 use crate::rng::Rng;
+use crate::sparse::SparseTensor;
 
 /// How the rows of the side being updated see one data view.
 pub enum DataAccess<'a> {
@@ -82,11 +91,104 @@ impl<'a> DataAccess<'a> {
     }
 }
 
-/// One data view as seen from the side being updated.
+/// Mode m of a tensor view as seen from the sweep updating that mode:
+/// the design row of an observation is the Hadamard product of the
+/// *other* modes' latent rows at the observation's coordinates.
+pub struct TensorModeOperand<'a> {
+    pub tensor: &'a SparseTensor,
+    /// the mode being updated
+    pub mode: usize,
+    /// (mode id, factor matrix) for every mode except `mode`, ascending
+    pub others: Vec<(usize, &'a Mat)>,
+}
+
+/// How the target rows of the mode being updated see one data view: per
+/// observed entry the MVN conditional consumes a *design row*.
+pub enum Operand<'a> {
+    /// 2-mode case — design row = `other.row(j)` for observation (i, j)
+    Matrix {
+        data: DataAccess<'a>,
+        /// the opposite side's latents
+        other: &'a Mat,
+    },
+    /// N-mode case — design rows built per observation in caller scratch
+    TensorMode(TensorModeOperand<'a>),
+}
+
+impl<'a> Operand<'a> {
+    /// Number of observed entries for target index i.
+    pub fn nnz(&self, i: usize) -> usize {
+        match self {
+            Operand::Matrix { data, .. } => data.nnz(i),
+            Operand::TensorMode(t) => t.tensor.mode_nnz(t.mode, i),
+        }
+    }
+
+    /// Latent dimension K of the design rows.
+    pub fn k(&self) -> usize {
+        match self {
+            Operand::Matrix { other, .. } => other.cols(),
+            Operand::TensorMode(t) => t.others[0].1.cols(),
+        }
+    }
+
+    /// Visit every observation of target index i as (design row, value).
+    /// `scratch` backs the ≥3-mode Hadamard products; matrices and
+    /// 2-mode tensors hand out factor rows directly without copying, so
+    /// the 2-mode tensor path is bit-identical to the matrix path.
+    #[inline]
+    pub fn for_each_design<F: FnMut(&[f64], f64)>(
+        &self,
+        i: usize,
+        scratch: &mut Vec<f64>,
+        mut f: F,
+    ) {
+        match self {
+            Operand::Matrix { data, other } => {
+                data.for_each_obs(i, |j, v| f(other.row(j), v));
+            }
+            Operand::TensorMode(t) => {
+                let fiber = t.tensor.mode_fiber(t.mode, i);
+                if t.others.len() == 1 {
+                    // exactly one other mode: its latent row IS the design
+                    let (om, fac) = t.others[0];
+                    for &e in fiber {
+                        let e = e as usize;
+                        f(fac.row(t.tensor.coord(om, e) as usize), t.tensor.val(e));
+                    }
+                    return;
+                }
+                let k = self.k();
+                scratch.resize(k, 0.0);
+                let (&(m0, f0), rest) = t.others.split_first().expect("≥2 other modes");
+                for &e in fiber {
+                    let e = e as usize;
+                    scratch.copy_from_slice(f0.row(t.tensor.coord(m0, e) as usize));
+                    for &(m, fac) in rest {
+                        let frow = fac.row(t.tensor.coord(m, e) as usize);
+                        for (s, &x) in scratch.iter_mut().zip(frow) {
+                            *s *= x;
+                        }
+                    }
+                    f(&scratch[..], t.tensor.val(e));
+                }
+            }
+        }
+    }
+
+    /// The matrix parts (data access + opposite-side latents) when this
+    /// is the 2-mode operand — the XLA engine's fast-path gate.
+    pub fn matrix_parts(&self) -> Option<(&DataAccess<'a>, &'a Mat)> {
+        match self {
+            Operand::Matrix { data, other } => Some((data, *other)),
+            Operand::TensorMode(_) => None,
+        }
+    }
+}
+
+/// One data view as seen from the mode being updated.
 pub struct ViewSlice<'a> {
-    pub data: DataAccess<'a>,
-    /// the opposite side's latents
-    pub other: &'a Mat,
+    pub operand: Operand<'a>,
     /// likelihood precision of this view
     pub alpha: f64,
     /// probit augmentation (binary data)?
@@ -97,6 +199,40 @@ pub struct ViewSlice<'a> {
 }
 
 impl<'a> ViewSlice<'a> {
+    /// The 2-mode slice: target rows see `data`, design rows come from
+    /// the opposite side's latents `other`.
+    pub fn matrix(
+        data: DataAccess<'a>,
+        other: &'a Mat,
+        alpha: f64,
+        probit: bool,
+        full_gram: Option<Mat>,
+    ) -> ViewSlice<'a> {
+        ViewSlice { operand: Operand::Matrix { data, other }, alpha, probit, full_gram }
+    }
+
+    /// Mode `mode` of an N-mode tensor view; `others` pairs every other
+    /// mode id with its factor matrix, ascending.
+    pub fn tensor_mode(
+        tensor: &'a SparseTensor,
+        mode: usize,
+        others: Vec<(usize, &'a Mat)>,
+        alpha: f64,
+        probit: bool,
+    ) -> ViewSlice<'a> {
+        assert_eq!(
+            others.len() + 1,
+            tensor.nmodes(),
+            "tensor slice needs one factor per other mode"
+        );
+        ViewSlice {
+            operand: Operand::TensorMode(TensorModeOperand { tensor, mode, others }),
+            alpha,
+            probit,
+            full_gram: None,
+        }
+    }
+
     /// Precompute the full-gram fast path for fully-observed data.
     pub fn full_gram_for(other: &Mat, alpha: f64) -> Mat {
         let mut g = crate::linalg::syrk(other, crate::linalg::Backend::global());
@@ -212,6 +348,8 @@ struct RowWork {
     rhs: Vec<f64>,
     tmp: Vec<f64>,
     eps: Vec<f64>,
+    /// Hadamard scratch for tensor design rows
+    design: Vec<f64>,
 }
 
 impl RowWork {
@@ -226,6 +364,7 @@ impl RowWork {
                 rhs: vec![0.0; k],
                 tmp: vec![0.0; k],
                 eps: vec![0.0; k],
+                design: Vec::new(),
             });
         }
         slot.as_mut().unwrap()
@@ -258,11 +397,10 @@ fn sample_one_row_mvn_with(
     rng: &mut Rng,
     work: &mut RowWork,
 ) {
-    let lambda = &mut work.lambda;
+    let RowWork { lambda, rhs, tmp, eps, design } = work;
     lambda.data_mut().copy_from_slice(sweep.lambda0.data());
     let mean_i = sweep.means.row(i);
     // rhs = Λ₀ μ_i (in place)
-    let rhs = &mut work.rhs;
     for (r, row0) in rhs.iter_mut().zip(0..k) {
         *r = crate::linalg::dot(sweep.lambda0.row(row0), mean_i);
     }
@@ -271,9 +409,9 @@ fn sample_one_row_mvn_with(
         match (&view.full_gram, view.probit) {
             (Some(fg), false) => {
                 lambda.add_assign(fg);
-                view.data.for_each_obs(i, |j, r| {
+                view.operand.for_each_design(i, design, |vrow, r| {
                     if r != 0.0 {
-                        crate::linalg::axpy(rhs, alpha * r, view.other.row(j));
+                        crate::linalg::axpy(rhs, alpha * r, vrow);
                     }
                 });
             }
@@ -287,8 +425,7 @@ fn sample_one_row_mvn_with(
                         let (xs, vals) = &mut *g.borrow_mut();
                         xs.clear();
                         vals.clear();
-                        view.data.for_each_obs(i, |j, r| {
-                            let vrow = view.other.row(j);
+                        view.operand.for_each_design(i, design, |vrow, r| {
                             let val = if view.probit {
                                 let pred = crate::linalg::dot(row_in_out, vrow);
                                 NoiseModel::augment_probit(pred, r, rng)
@@ -301,8 +438,7 @@ fn sample_one_row_mvn_with(
                         crate::linalg::gram_rhs_rank4(lambda, rhs, alpha, xs, vals);
                     });
                 } else {
-                    view.data.for_each_obs(i, |j, r| {
-                        let vrow = view.other.row(j);
+                    view.operand.for_each_design(i, design, |vrow, r| {
                         let val = if view.probit {
                             let pred = crate::linalg::dot(row_in_out, vrow);
                             NoiseModel::augment_probit(pred, r, rng)
@@ -325,13 +461,21 @@ fn sample_one_row_mvn_with(
         return;
     }
     let l = &*lambda;
-    crate::linalg::tri_solve_lower_into(l, rhs, &mut work.tmp);
-    crate::linalg::tri_solve_upper_t_into(l, &work.tmp, rhs); // rhs := mean
-    rng.fill_normal(&mut work.eps);
-    crate::linalg::tri_solve_upper_t_into(l, &work.eps, &mut work.tmp); // tmp := L⁻ᵀε
+    crate::linalg::tri_solve_lower_into(l, rhs, tmp);
+    crate::linalg::tri_solve_upper_t_into(l, tmp, rhs); // rhs := mean
+    rng.fill_normal(eps);
+    crate::linalg::tri_solve_upper_t_into(l, eps, tmp); // tmp := L⁻ᵀε
     for c in 0..k {
-        row_in_out[c] = rhs[c] + work.tmp[c];
+        row_in_out[c] = rhs[c] + tmp[c];
     }
+}
+
+thread_local! {
+    /// per-thread (design rows, values, Hadamard scratch) gather for the
+    /// custom-sampler sweep — hoisted out of the hot loop so no `Vec` is
+    /// allocated per row (§Perf, same pattern as `GATHER`)
+    static CUSTOM_GATHER: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)> =
+        const { std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
 }
 
 /// Sweep for priors with custom row conditionals (spike-and-slab).
@@ -351,7 +495,8 @@ pub fn sample_side_custom(
 
 /// [`sample_side_custom`] restricted to `rows` — the shard-block variant
 /// used by distributed workers.  Values drawn for a row are identical to
-/// the full sweep's (per-row RNG streams).
+/// the full sweep's (per-row RNG streams).  The observations are handed
+/// to the prior as gathered design rows, built in per-thread scratch.
 #[allow(clippy::too_many_arguments)]
 pub fn sample_side_custom_range(
     prior: &dyn Prior,
@@ -365,33 +510,35 @@ pub fn sample_side_custom_range(
 ) {
     let writer = RowWriter::new(latents);
     let start = rows.start;
+    let k = latents.cols();
     pool.parallel_for(rows.len(), 1, |t| {
         let i = start + t;
         let mut rng = Rng::for_row(seed, iteration, side_id, i as u64);
-        let mut idx = Vec::new();
-        let mut vals = Vec::new();
-        view.data.gather(i, &mut idx, &mut vals);
-        // SAFETY: disjoint rows
-        let row = unsafe { writer.row_mut(i) };
-        prior.sample_row_custom(
-            i,
-            RowObs { idx: &idx, vals: &vals },
-            view.other,
-            view.alpha,
-            &mut rng,
-            row,
-        );
+        CUSTOM_GATHER.with(|g| {
+            let (designs, vals, scratch) = &mut *g.borrow_mut();
+            designs.clear();
+            vals.clear();
+            view.operand.for_each_design(i, scratch, |vrow, v| {
+                designs.extend_from_slice(vrow);
+                vals.push(v);
+            });
+            // SAFETY: disjoint rows
+            let row = unsafe { writer.row_mut(i) };
+            prior.sample_row_custom(
+                i,
+                RowObs { designs, vals, k },
+                view.alpha,
+                &mut rng,
+                row,
+            );
+        });
     });
 }
 
 /// Sum of squared residuals over the observed cells of a view — feeds the
-/// adaptive-noise Gamma update.  `target` indexes rows of `access`.
-pub fn view_sse(
-    access: &DataAccess<'_>,
-    target: &Mat,
-    other: &Mat,
-    pool: &ThreadPool,
-) -> (f64, usize) {
+/// adaptive-noise Gamma update.  `target` holds the latents of the mode
+/// whose fibers `operand` iterates.
+pub fn view_sse(operand: &Operand<'_>, target: &Mat, pool: &ThreadPool) -> (f64, usize) {
     let n = target.rows();
     let (sse, cnt) = pool.parallel_map_reduce(
         n,
@@ -399,10 +546,11 @@ pub fn view_sse(
         |range| {
             let mut s = 0.0;
             let mut c = 0usize;
+            let mut scratch = Vec::new();
             for i in range {
                 let trow = target.row(i);
-                access.for_each_obs(i, |j, r| {
-                    let e = r - crate::linalg::dot(trow, other.row(j));
+                operand.for_each_design(i, &mut scratch, |vrow, r| {
+                    let e = r - crate::linalg::dot(trow, vrow);
                     s += e * e;
                     c += 1;
                 });
@@ -465,13 +613,13 @@ mod tests {
             let sweep = MvnSweep {
                 lambda0: spec.lambda0,
                 means: spec.means,
-                views: vec![ViewSlice {
-                    data: DataAccess::SparseRows(&data),
-                    other: &v,
-                    alpha: 2.0,
-                    probit: false,
-                    full_gram: None,
-                }],
+                views: vec![ViewSlice::matrix(
+                    DataAccess::SparseRows(&data),
+                    &v,
+                    2.0,
+                    false,
+                    None,
+                )],
                 seed: 7,
                 iteration: 3,
                 side_id: 0,
@@ -506,13 +654,13 @@ mod tests {
                 MeanSpec::Shared(s) => *s,
                 _ => unreachable!(),
             }),
-            views: vec![ViewSlice {
-                data: DataAccess::SparseRows(&data),
-                other: &v,
-                alpha: 2.0,
-                probit: false,
-                full_gram: None,
-            }],
+            views: vec![ViewSlice::matrix(
+                DataAccess::SparseRows(&data),
+                &v,
+                2.0,
+                false,
+                None,
+            )],
             seed: 9,
             iteration: 5,
             side_id: 0,
@@ -552,13 +700,13 @@ mod tests {
                 MeanSpec::Shared(s) => *s,
                 _ => unreachable!(),
             }),
-            views: vec![ViewSlice {
-                data: DataAccess::DenseRows(&dense),
-                other: &v,
+            views: vec![ViewSlice::matrix(
+                DataAccess::DenseRows(&dense),
+                &v,
                 alpha,
-                probit: false,
-                full_gram: full.then(|| ViewSlice::full_gram_for(&v, alpha)),
-            }],
+                false,
+                full.then(|| ViewSlice::full_gram_for(&v, alpha)),
+            )],
             seed: 11,
             iteration: 0,
             side_id: 0,
@@ -578,10 +726,124 @@ mod tests {
         let (data, v) = toy_problem();
         let lat = Mat::zeros(40, 4); // all-zero latents -> residual = r
         let pool = ThreadPool::new(3);
-        let (sse, cnt) = view_sse(&DataAccess::SparseRows(&data), &lat, &v, &pool);
+        let op = Operand::Matrix { data: DataAccess::SparseRows(&data), other: &v };
+        let (sse, cnt) = view_sse(&op, &lat, &pool);
         let want: f64 = data.triplets().map(|(_, _, r)| r * r).sum();
         assert!((sse - want).abs() < 1e-9);
         assert_eq!(cnt, data.nnz());
+    }
+
+    #[test]
+    fn two_mode_tensor_operand_is_bit_identical_to_matrix_operand() {
+        // the enabling invariant of the N-mode refactor: a 2-mode tensor
+        // slice must replay the matrix slice exactly — same design rows
+        // in the same order, same RNG streams, zero float drift
+        let (data, v) = toy_problem();
+        let tensor = crate::sparse::SparseTensor::from_matrix(&data);
+        let mut prior = NormalPrior::new(4);
+        let mut rng = Rng::new(75);
+        let lat0 = crate::model::init_latents(40, 4, 0.1, &mut rng);
+        prior.update_hyper(&lat0, &mut rng);
+        let spec = prior.mvn_spec().unwrap();
+        let pool = ThreadPool::new(3);
+        let shared = match &spec.means {
+            MeanSpec::Shared(s) => *s,
+            _ => unreachable!(),
+        };
+        let run = |slice: ViewSlice<'_>| {
+            let sweep = MvnSweep {
+                lambda0: spec.lambda0,
+                means: MeanSpec::Shared(shared),
+                views: vec![slice],
+                seed: 13,
+                iteration: 2,
+                side_id: 0,
+            };
+            let mut lat = lat0.clone();
+            NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
+            lat
+        };
+        let a = run(ViewSlice::matrix(DataAccess::SparseRows(&data), &v, 2.0, false, None));
+        let b = run(ViewSlice::tensor_mode(&tensor, 0, vec![(1, &v)], 2.0, false));
+        assert_eq!(a.max_abs_diff(&b), 0.0, "2-mode tensor sweep must equal matrix sweep");
+        // and the SSE path agrees bit-for-bit too
+        let mop = Operand::Matrix { data: DataAccess::SparseRows(&data), other: &v };
+        let top = Operand::TensorMode(TensorModeOperand {
+            tensor: &tensor,
+            mode: 0,
+            others: vec![(1, &v)],
+        });
+        let (s1, c1) = view_sse(&mop, &a, &pool);
+        let (s2, c2) = view_sse(&top, &a, &pool);
+        assert_eq!(s1, s2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn three_mode_sweep_is_thread_invariant_and_finite() {
+        let mut rng = Rng::new(77);
+        let (n0, n1, n2, k) = (20, 15, 10, 3);
+        let mut f1 = Mat::zeros(n1, k);
+        let mut f2 = Mat::zeros(n2, k);
+        rng.fill_normal(f1.data_mut());
+        rng.fill_normal(f2.data_mut());
+        let mut entries = Vec::new();
+        for i in 0..n0 {
+            for j in 0..n1 {
+                for l in 0..n2 {
+                    if rng.next_f64() < 0.1 {
+                        entries.push((vec![i as u32, j as u32, l as u32], rng.normal()));
+                    }
+                }
+            }
+        }
+        let tensor = crate::sparse::SparseTensor::from_entries(vec![n0, n1, n2], entries);
+        let mut prior = NormalPrior::new(k);
+        let lat0 = crate::model::init_latents(n0, k, 0.1, &mut rng);
+        prior.update_hyper(&lat0, &mut rng);
+        let spec = prior.mvn_spec().unwrap();
+        let shared = match &spec.means {
+            MeanSpec::Shared(s) => *s,
+            _ => unreachable!(),
+        };
+        let run = |threads: usize| {
+            let pool = ThreadPool::new(threads);
+            let sweep = MvnSweep {
+                lambda0: spec.lambda0,
+                means: MeanSpec::Shared(shared),
+                views: vec![ViewSlice::tensor_mode(
+                    &tensor,
+                    0,
+                    vec![(1, &f1), (2, &f2)],
+                    1.5,
+                    false,
+                )],
+                seed: 17,
+                iteration: 4,
+                side_id: 0,
+            };
+            let mut lat = lat0.clone();
+            NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
+            lat
+        };
+        let a = run(1);
+        let b = run(5);
+        assert_eq!(a.max_abs_diff(&b), 0.0, "3-mode sweep must be schedule-invariant");
+        assert!(a.data().iter().all(|x| x.is_finite()));
+        // design rows really are Hadamard products: check nnz bookkeeping
+        let op = Operand::TensorMode(TensorModeOperand {
+            tensor: &tensor,
+            mode: 0,
+            others: vec![(1, &f1), (2, &f2)],
+        });
+        let mut seen = 0;
+        let mut scratch = Vec::new();
+        op.for_each_design(0, &mut scratch, |vrow, _| {
+            assert_eq!(vrow.len(), k);
+            seen += 1;
+        });
+        assert_eq!(seen, tensor.mode_nnz(0, 0));
+        assert_eq!(op.k(), k);
     }
 
     #[test]

@@ -270,6 +270,81 @@ pub fn gfa_study_data(spec: &GfaSpec) -> GfaData {
     GfaData { views, z_true: z, w_true }
 }
 
+/// Spec for the synthetic CP/PARAFAC tensor generator.
+#[derive(Debug, Clone)]
+pub struct CpSpec {
+    /// mode sizes (N ≥ 2)
+    pub dims: Vec<usize>,
+    /// ground-truth CP rank
+    pub rank: usize,
+    /// target number of observed cells
+    pub nnz: usize,
+    /// observation noise stddev
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for CpSpec {
+    fn default() -> Self {
+        CpSpec { dims: vec![40, 30, 20], rank: 4, nnz: 6_000, noise: 0.1, seed: 42 }
+    }
+}
+
+/// Output of [`cp_tensor_synth`].
+pub struct CpData {
+    /// observed cells (train + test together)
+    pub tensor: crate::sparse::SparseTensor,
+    /// ground-truth factor matrices, one per mode
+    pub factors_true: Vec<Mat>,
+    pub noise: f64,
+}
+
+/// Generate a synthetic N-mode CP tensor — the stand-in for the
+/// compound × target × assay-condition workload of the upstream system:
+/// per mode a `dim × rank` factor with N(0, 1/⁴√(rank·N)) entries so the
+/// reconstructed signal has roughly unit variance, observed at `nnz`
+/// uniformly random cells with N(0, noise²) measurement error.
+pub fn cp_tensor_synth(spec: &CpSpec) -> CpData {
+    assert!(spec.dims.len() >= 2, "CP tensor needs at least 2 modes");
+    let mut rng = Rng::from_parts(spec.seed, 0xCB7E);
+    let nmodes = spec.dims.len();
+    // scale so Var[Π_m f_m] = (scale²)^N · rank ≈ 1
+    let scale = (1.0 / spec.rank as f64).powf(0.5 / nmodes as f64);
+    let factors: Vec<Mat> = spec
+        .dims
+        .iter()
+        .map(|&d| {
+            let mut f = Mat::zeros(d, spec.rank);
+            rng.fill_normal(f.data_mut());
+            f.scale(scale);
+            f
+        })
+        .collect();
+    let mut flat = Vec::with_capacity(spec.nnz * nmodes);
+    let mut vals = Vec::with_capacity(spec.nnz);
+    let mut coord = vec![0u32; nmodes];
+    for _ in 0..spec.nnz {
+        for (m, c) in coord.iter_mut().enumerate() {
+            *c = rng.next_below(spec.dims[m]) as u32;
+        }
+        let mut v = 0.0;
+        for r in 0..spec.rank {
+            let mut p = 1.0;
+            for (m, f) in factors.iter().enumerate() {
+                p *= f[(coord[m] as usize, r)];
+            }
+            v += p;
+        }
+        flat.extend_from_slice(&coord);
+        vals.push(v + spec.noise * rng.normal());
+    }
+    CpData {
+        tensor: crate::sparse::SparseTensor::from_flat(spec.dims.clone(), &flat, &vals),
+        factors_true: factors,
+        noise: spec.noise,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,6 +361,22 @@ mod tests {
         assert!((4.0..8.0).contains(&m), "mean {m}");
         assert_eq!(d.fingerprints_sparse.nrows(), 300);
         assert_eq!(d.fingerprints_sparse.nfeatures(), 1024);
+    }
+
+    #[test]
+    fn cp_tensor_has_unit_scale_signal_and_reproducible() {
+        let spec = CpSpec { dims: vec![25, 20, 15], rank: 3, nnz: 3_000, noise: 0.1, seed: 7 };
+        let d = cp_tensor_synth(&spec);
+        assert_eq!(d.tensor.nmodes(), 3);
+        assert_eq!(d.tensor.dims(), &[25, 20, 15]);
+        // duplicates merge, so nnz can shrink a little but not much
+        assert!(d.tensor.nnz() > 2_800, "nnz {}", d.tensor.nnz());
+        let var = crate::util::variance(d.tensor.vals());
+        assert!((0.2..5.0).contains(&var), "signal variance {var}");
+        // deterministic in the seed
+        let d2 = cp_tensor_synth(&spec);
+        assert_eq!(d.tensor.vals(), d2.tensor.vals());
+        assert_eq!(d.factors_true.len(), 3);
     }
 
     #[test]

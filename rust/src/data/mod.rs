@@ -4,7 +4,10 @@
 
 pub mod generators;
 
-pub use generators::{chembl_synth, gfa_study_data, movielens_like, ChemblSpec, GfaSpec};
+pub use generators::{
+    chembl_synth, cp_tensor_synth, gfa_study_data, movielens_like, ChemblSpec, CpData, CpSpec,
+    GfaSpec,
+};
 
 use crate::linalg::Mat;
 use crate::sparse::SparseMatrix;
@@ -144,6 +147,74 @@ impl TestSet {
         }
         t
     }
+}
+
+/// Held-out test cells of an N-mode tensor view: explicit coordinate
+/// tuples (one vector per mode) plus values — the tensor analogue of
+/// [`TestSet`].
+#[derive(Debug, Clone, Default)]
+pub struct TensorTestSet {
+    /// `coords[m][cell]` — the cell's coordinate along mode m
+    pub coords: Vec<Vec<u32>>,
+    pub vals: Vec<f64>,
+}
+
+impl TensorTestSet {
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn nmodes(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Every entry of `t` as a test set, in canonical order (for a
+    /// 2-mode tensor this is exactly [`TestSet::from_sparse`]'s order).
+    pub fn from_tensor(t: &crate::sparse::SparseTensor) -> TensorTestSet {
+        let nmodes = t.nmodes();
+        let mut s = TensorTestSet { coords: vec![Vec::with_capacity(t.nnz()); nmodes], vals: Vec::with_capacity(t.nnz()) };
+        for (e, v) in t.entry_ids() {
+            for (m, c) in s.coords.iter_mut().enumerate() {
+                c.push(t.coord(m, e));
+            }
+            s.vals.push(v);
+        }
+        s
+    }
+}
+
+/// Split a sparse tensor's entries into train / test by
+/// Bernoulli(test_frac), deterministic in `seed` — the tensor analogue
+/// of [`split_train_test`].  Dimensions are preserved on both sides.
+pub fn split_tensor_train_test(
+    t: &crate::sparse::SparseTensor,
+    test_frac: f64,
+    seed: u64,
+) -> (crate::sparse::SparseTensor, crate::sparse::SparseTensor) {
+    assert!((0.0..1.0).contains(&test_frac));
+    let nmodes = t.nmodes();
+    let mut rng = crate::rng::Rng::from_parts(seed, 0x5917);
+    let (mut tr_flat, mut tr_vals) = (Vec::new(), Vec::new());
+    let (mut te_flat, mut te_vals) = (Vec::new(), Vec::new());
+    for (e, v) in t.entry_ids() {
+        let (flat, vals) = if rng.next_f64() < test_frac {
+            (&mut te_flat, &mut te_vals)
+        } else {
+            (&mut tr_flat, &mut tr_vals)
+        };
+        for m in 0..nmodes {
+            flat.push(t.coord(m, e));
+        }
+        vals.push(v);
+    }
+    (
+        crate::sparse::SparseTensor::from_flat(t.dims().to_vec(), &tr_flat, &tr_vals),
+        crate::sparse::SparseTensor::from_flat(t.dims().to_vec(), &te_flat, &te_vals),
+    )
 }
 
 /// Split a sparse matrix's entries into train / test by Bernoulli(test_frac).

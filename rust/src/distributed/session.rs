@@ -196,6 +196,10 @@ impl DistributedSession {
         });
         assert!(spec.nodes >= 1, "distributed session needs at least one node");
         assert!(!b.views.is_empty(), "a session needs at least one data view");
+        assert!(
+            b.tensor_views.is_empty(),
+            "tensor views are not supported in distributed sessions yet (matrix views only)"
+        );
         if b.engine.is_some() {
             crate::log_warn!(
                 "distributed sessions always use the native engine; engine override ignored"
@@ -271,7 +275,7 @@ impl DistributedSession {
         crate::store::StoreMeta {
             num_latent: self.cfg.num_latent,
             nrows: w.builder_views[0].0.nrows(),
-            view_ncols: w.builder_views.iter().map(|(d, _, _, _)| d.ncols()).collect(),
+            view_dims: w.builder_views.iter().map(|(d, _, _, _)| vec![d.ncols()]).collect(),
             offsets: w.offsets.clone(),
             save_freq: self.cfg.save_freq,
             link_features: match &w.row_prior {
@@ -545,18 +549,18 @@ fn worker_run(
                     let my_cols = cparts[rank].clone();
                     if stale > 0 && itu >= stale {
                         let old = (itu - stale) * tags_per_iter + slot_v;
-                        recv_apply_blocks(&mut comm, &mut sess.views[vi].col_latents, cparts, old);
+                        recv_apply_blocks(&mut comm, sess.views[vi].col_latents_mut(), cparts, old);
                     }
                     sess.sample_col_side_pre(vi, my_cols.clone(), &mut hyper_rng);
                     if stale == 0 {
                         allgather_blocks(
                             &mut comm,
-                            &mut sess.views[vi].col_latents,
+                            sess.views[vi].col_latents_mut(),
                             cparts,
                             tag0 + slot_v,
                         );
                     } else {
-                        let v = &sess.views[vi].col_latents;
+                        let v = sess.views[vi].col_latents();
                         publish_block(&mut comm, v, &my_cols, tag0 + slot_v);
                     }
                     sess.finish_col_side(vi, &mut hyper_rng);
@@ -595,7 +599,7 @@ fn worker_run(
                 // against the local row shard, no communication
                 sess.sample_row_side(my_rows.clone(), &mut hyper_rng);
                 for vi in 0..nviews {
-                    let ncols = sess.views[vi].col_latents.rows();
+                    let ncols = sess.views[vi].col_latents().rows();
                     sess.sample_col_side(vi, 0..ncols, &mut hyper_rng);
                     if sess.noise_is_adaptive(vi) {
                         let (sse, nobs) = sess.view_sse_local(vi);
@@ -608,7 +612,7 @@ fn worker_run(
                     allgather_blocks(&mut comm, &mut sess.u, &ctx.row_parts, tag0);
                     for vi in 0..nviews {
                         let slot_v = 1 + 2 * vi as u64;
-                        average_matrix(&mut comm, &mut sess.views[vi].col_latents, tag0 + slot_v);
+                        average_matrix(&mut comm, sess.views[vi].col_latents_mut(), tag0 + slot_v);
                     }
                     coherent = true;
                 }

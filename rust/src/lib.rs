@@ -6,10 +6,18 @@
 //!
 //! The crate is organised in layers:
 //!
-//! * substrates: [`util`], [`rng`], [`linalg`], [`sparse`]
+//! * substrates: [`util`], [`rng`], [`linalg`], [`sparse`] (CSR/CSC
+//!               matrices *and* the N-mode [`sparse::SparseTensor`]
+//!               with one compressed fiber index per mode)
 //! * framework:  [`data`], [`noise`], [`priors`], [`model`], [`session`]
-//! * runtime:    [`coordinator`] (work-stealing parallel Gibbs),
-//!               [`runtime`] (PJRT/XLA AOT engine)
+//!               — sessions factorize both matrix views and N-mode
+//!               tensor views (CP/PARAFAC) with per-mode priors; the
+//!               2-mode tensor path is bit-identical to the matrix path
+//! * runtime:    [`coordinator`] (work-stealing parallel Gibbs over an
+//!               *operand* abstraction — per observation the MVN
+//!               conditional consumes a design row: the opposite side's
+//!               latents for matrices, the other modes' Hadamard
+//!               product for tensors), [`runtime`] (PJRT/XLA AOT engine)
 //! * distributed: [`distributed`] — `comm` (message substrate with
 //!               allgather/allreduce/sub-communicators and byte + time
 //!               accounting), `shard` (nnz-balanced block ownership and
@@ -17,10 +25,13 @@
 //!               builder composition across sharded nodes under sync /
 //!               bounded-staleness async / posterior-propagation
 //!               communication strategies)
-//! * serving:    [`store`] (versioned on-disk posterior model store),
-//!               [`predict`] (`PredictSession`: pointwise + batched
-//!               prediction with uncertainty, top-K recommendation,
-//!               out-of-matrix prediction via Macau side info)
+//! * serving:    [`store`] (versioned on-disk posterior model store —
+//!               one factor matrix per mode; version-1 2-mode stores
+//!               still load), [`predict`] (`PredictSession`: pointwise +
+//!               batched prediction with uncertainty, top-K
+//!               recommendation — per coordinate tuple and over one
+//!               free tensor mode — and out-of-matrix prediction via
+//!               Macau side info)
 //! * evaluation: [`baselines`] (PyMC3-like, GraphChi-like, GASPI-like),
 //!               [`hwmodel`] (Xeon / Xeon Phi / ARM roofline+cache model),
 //!               [`bench`] (the harness regenerating every paper figure)
@@ -77,13 +88,15 @@ pub mod bench;
 
 /// Convenient glob-import surface for examples and downstream users.
 pub mod prelude {
-    pub use crate::data::{MatrixConfig, SideInfo};
+    pub use crate::data::{MatrixConfig, SideInfo, TensorTestSet};
     pub use crate::distributed::{DistResult, DistributedSession, NetSpec, Strategy};
     pub use crate::linalg::Mat;
     pub use crate::noise::NoiseConfig;
     pub use crate::predict::{BlockPrediction, PredictSession, Prediction};
     pub use crate::priors::PriorKind;
-    pub use crate::session::{SessionBuilder, SessionConfig, TrainResult, TrainSession};
-    pub use crate::sparse::SparseMatrix;
+    pub use crate::session::{
+        ModePrior, SessionBuilder, SessionConfig, TrainResult, TrainSession,
+    };
+    pub use crate::sparse::{SparseMatrix, SparseTensor};
     pub use crate::store::{ModelStore, Snapshot, StoreMeta};
 }

@@ -21,18 +21,19 @@ use smurff::util::config::Config;
 use std::path::{Path, PathBuf};
 
 const USAGE: &str = "usage: smurff <train|predict|generate|bench|info> [flags]
-  train    --config <toml> | --data <mtx> [--test <mtx>] | --synthetic <chembl|movielens>
+  train    --config <toml> | --data <mtx> [--test <mtx>] | --tensor <tns> [--test <tns>]
+           | --synthetic <chembl|movielens>
            [--k N] [--burnin N] [--nsamples N] [--seed N] [--threads N]
            [--engine native|xla] [--noise fixed|adaptive|probit] [--alpha F]
-           [--prior normal|macau] [--side <mtx>] [--checkpoint <dir>] [--verbose]
-           [--save-dir <dir>] [--save-freq N]
+           [--prior normal|macau | normal,normal,... per tensor mode] [--side <mtx>]
+           [--checkpoint <dir>] [--verbose] [--save-dir <dir>] [--save-freq N]
            [--nodes N] [--comm sync|async[:S]|pprop[:R]] [--net instant|cluster]
   predict  --store <dir> [--view N] [--threads N]
            --row N --col N        pointwise prediction with uncertainty
            --row N --topk K       top-K column recommendations for a row
   generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
            [--side-out <mtx>] [--seed N]
-  bench    <fig3|fig4|fig5|gfa|macau|scaling|table1|serving|all> [--quick]
+  bench    <fig3|fig4|fig5|gfa|macau|scaling|table1|serving|tensor|all> [--quick]
            [--json <path>]   (writes the report to disk; --out is an alias)
   info     [--artifacts <dir>]";
 
@@ -136,7 +137,104 @@ fn attach_engine(b: SessionBuilder, engine: &str) -> anyhow::Result<SessionBuild
     }
 }
 
+/// Tensor training: `--tensor <tns>` with an optional `--test <tns>`
+/// held-out set and a comma-separated per-mode `--prior` list covering
+/// the non-shared modes (mode 0 uses the session's row prior; `normal`
+/// is the default for every mode).
+fn cmd_train_tensor(args: &Args, path: &str) -> anyhow::Result<()> {
+    use smurff::sparse::io::read_tns;
+    if args.has("side") {
+        anyhow::bail!(
+            "--side applies to matrix training; tensor per-mode side info is available \
+             through the library API (ModePrior::Macau)"
+        );
+    }
+    let cfg = session_config_from_args(args)?;
+    let train = read_tns(Path::new(path))?;
+    let test = args
+        .get("test")
+        .map(|p| read_tns(Path::new(p)))
+        .transpose()?
+        .map(|t| smurff::data::TensorTestSet::from_tensor(&t));
+    let nmodes = train.nmodes();
+    let prior_spec = args.get_str("prior", "normal");
+    let mode_priors: Vec<smurff::session::ModePrior> = if prior_spec.contains(',') {
+        let parts: Vec<&str> = prior_spec.split(',').collect();
+        if parts.len() != nmodes - 1 {
+            anyhow::bail!(
+                "--prior lists {} modes, tensor has {} non-shared modes",
+                parts.len(),
+                nmodes - 1
+            );
+        }
+        parts
+            .iter()
+            .map(|p| match p.trim() {
+                "normal" => Ok(smurff::session::ModePrior::Normal),
+                "sns" | "spike-and-slab" => Ok(smurff::session::ModePrior::SpikeAndSlab),
+                other => anyhow::bail!("unknown tensor mode prior '{other}' (normal|sns)"),
+            })
+            .collect::<anyhow::Result<_>>()?
+    } else {
+        match prior_spec.as_str() {
+            "normal" => vec![smurff::session::ModePrior::Normal; nmodes - 1],
+            "sns" | "spike-and-slab" => {
+                vec![smurff::session::ModePrior::SpikeAndSlab; nmodes - 1]
+            }
+            other => anyhow::bail!("unknown tensor prior '{other}' (normal|sns)"),
+        }
+    };
+    if args.get_usize("nodes", 1).map_err(anyhow::Error::msg)? > 1 {
+        anyhow::bail!("--tensor cannot combine with --nodes (tensor sharding is not distributed yet)");
+    }
+    let noise = noise_from(
+        &args.get_str("noise", "adaptive"),
+        args.get_f64("alpha", 5.0).map_err(anyhow::Error::msg)?,
+    )?;
+    if noise == NoiseConfig::Probit {
+        anyhow::bail!("--noise probit is not supported on tensor views");
+    }
+    let mut builder =
+        SessionBuilder::new(cfg.clone()).tensor_view(train, mode_priors, noise, test);
+    builder = attach_engine(builder, &args.get_str("engine", "native"))?;
+    let mut session = builder.build();
+    println!(
+        "tensor training: {nmodes} modes, K={} burnin={} nsamples={} threads={}",
+        cfg.num_latent,
+        cfg.burnin,
+        cfg.nsamples,
+        session.nthreads(),
+    );
+    let result = session.try_run()?;
+    if let Some(dir) = args.get("checkpoint") {
+        session.checkpoint(Path::new(dir))?;
+        println!("checkpoint written to {dir}");
+    }
+    if let Some(store) = &result.store_path {
+        println!(
+            "model store: {} posterior snapshots in {} (serve with `smurff predict --store {}`)",
+            result.nsnapshots,
+            store.display(),
+            store.display()
+        );
+    }
+    println!(
+        "done: {} iterations in {:.2}s ({:.1} ms/iter)",
+        result.iterations,
+        result.train_seconds,
+        1e3 * result.train_seconds / result.iterations.max(1) as f64
+    );
+    if result.rmse.is_finite() {
+        println!("test RMSE = {:.4}", result.rmse);
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    if let Some(tensor_path) = args.get("tensor") {
+        let tensor_path = tensor_path.to_string();
+        return cmd_train_tensor(args, &tensor_path);
+    }
     let (cfg, train, test, side) = if let Some(cfile) = args.get("config") {
         let (cfg, file) = session_config_from_file(Path::new(cfile))?;
         let train_path = file.get_str("data.train", "");
@@ -338,6 +436,16 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
     let session = smurff::predict::PredictSession::open_with_threads(Path::new(store), threads)?;
     if view >= session.nviews() {
         anyhow::bail!("--view {view} out of range ({} views)", session.nviews());
+    }
+    if session.nmodes(view) > 2 {
+        let dims: Vec<String> =
+            session.mode_dims(view).iter().map(|d| d.to_string()).collect();
+        anyhow::bail!(
+            "view {view} is a {}-mode tensor ({}); pointwise/top-K tensor serving is \
+             available through the library API (predict_coords / top_k_mode)",
+            session.nmodes(view),
+            dims.join(" x ")
+        );
     }
     println!(
         "store: {} samples, K={}, {} rows x {} cols (view {view})",

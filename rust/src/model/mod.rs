@@ -78,6 +78,54 @@ pub fn predict_cells(u: &Mat, v: &Mat, test: &TestSet) -> Vec<f64> {
         .collect()
 }
 
+/// One cell of a CP factorization: pred = Σ_k Π_m F_m[i_m, k] — the
+/// per-sample Hadamard-dot.  Multiplications run in ascending-mode
+/// order and the accumulation replays [`crate::linalg::dot`]'s 4-lane
+/// pattern, so for two modes this is bit-identical to
+/// [`predict_cells`]'s `dot`.
+#[inline]
+pub fn hadamard_dot(factors: &[&Mat], coords: &[usize]) -> f64 {
+    debug_assert_eq!(factors.len(), coords.len());
+    let k = factors[0].cols();
+    let first = factors[0].row(coords[0]);
+    let prod = |c: usize| {
+        let mut p = first[c];
+        for (f, &i) in factors[1..].iter().zip(&coords[1..]) {
+            p *= f.row(i)[c];
+        }
+        p
+    };
+    let mut s = [0.0f64; 4];
+    let chunks = k / 4;
+    for ch in 0..chunks {
+        let i = ch * 4;
+        s[0] += prod(i);
+        s[1] += prod(i + 1);
+        s[2] += prod(i + 2);
+        s[3] += prod(i + 3);
+    }
+    let mut rest = 0.0;
+    for i in chunks * 4..k {
+        rest += prod(i);
+    }
+    s[0] + s[1] + s[2] + s[3] + rest
+}
+
+/// Predict the test cells of an N-mode view from one sample's per-mode
+/// factor matrices.
+pub fn predict_tensor_cells(factors: &[&Mat], test: &crate::data::TensorTestSet) -> Vec<f64> {
+    assert_eq!(factors.len(), test.nmodes(), "factor count must match test modes");
+    let mut coords = vec![0usize; factors.len()];
+    (0..test.len())
+        .map(|cell| {
+            for (m, c) in coords.iter_mut().enumerate() {
+                *c = test.coords[m][cell] as usize;
+            }
+            hadamard_dot(factors, &coords)
+        })
+        .collect()
+}
+
 /// Root-mean-square error.
 pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
     assert_eq!(pred.len(), truth.len());
@@ -154,6 +202,33 @@ mod tests {
         let v = Mat::from_vec(2, 2, vec![3.0, 4.0, 5.0, 6.0]);
         let t = TestSet { rows: vec![0, 1], cols: vec![0, 1], vals: vec![0.0, 0.0] };
         assert_eq!(predict_cells(&u, &v, &t), vec![3.0, 12.0]);
+    }
+
+    #[test]
+    fn hadamard_dot_two_modes_equals_dot_bitwise() {
+        let mut rng = Rng::new(62);
+        for k in [1usize, 3, 4, 7, 16] {
+            let mut u = Mat::zeros(2, k);
+            let mut v = Mat::zeros(2, k);
+            rng.fill_normal(u.data_mut());
+            rng.fill_normal(v.data_mut());
+            let a = crate::linalg::dot(u.row(1), v.row(0));
+            let b = hadamard_dot(&[&u, &v], &[1, 0]);
+            assert_eq!(a, b, "k={k}");
+        }
+    }
+
+    #[test]
+    fn predict_tensor_cells_three_modes() {
+        let u = Mat::from_vec(1, 2, vec![2.0, 3.0]);
+        let v = Mat::from_vec(1, 2, vec![5.0, 7.0]);
+        let w = Mat::from_vec(2, 2, vec![1.0, 1.0, -1.0, 2.0]);
+        let t = crate::data::TensorTestSet {
+            coords: vec![vec![0, 0], vec![0, 0], vec![0, 1]],
+            vals: vec![0.0, 0.0],
+        };
+        // cell 0: 2·5·1 + 3·7·1 = 31; cell 1: 2·5·(-1) + 3·7·2 = 32
+        assert_eq!(predict_tensor_cells(&[&u, &v, &w], &t), vec![31.0, 32.0]);
     }
 
     #[test]

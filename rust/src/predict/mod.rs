@@ -12,6 +12,11 @@
 //!   so results are identical for any thread count;
 //! * **top-K recommendation** per row via a bounded binary heap over the
 //!   candidate columns;
+//! * **N-mode tensor serving** — pointwise mean±std at a coordinate
+//!   tuple ([`PredictSession::predict_coords`]) and top-K over one free
+//!   mode with the others fixed ([`PredictSession::top_k_mode`]), both
+//!   via the per-sample Hadamard-dot (bit-identical to the matrix dot
+//!   for 2-mode views);
 //! * **out-of-matrix** prediction for rows never seen at training time,
 //!   through the Macau prior's link model (u_new = μ + βᵀ f).
 //!
@@ -88,10 +93,14 @@ impl PredictSession {
                     meta.num_latent
                 );
             }
-            if snap.vs.len() != meta.view_ncols.len() {
-                anyhow::bail!("sample {i}: {} views, manifest says {}", snap.vs.len(), meta.view_ncols.len());
+            if snap.vs.len() != meta.total_mats() {
+                anyhow::bail!(
+                    "sample {i}: {} factor matrices, manifest says {}",
+                    snap.vs.len(),
+                    meta.total_mats()
+                );
             }
-            for (vi, (v, &nc)) in snap.vs.iter().zip(&meta.view_ncols).enumerate() {
+            for (vi, (v, &nc)) in snap.vs.iter().zip(meta.view_dims.iter().flatten()).enumerate() {
                 if v.rows() != nc || v.cols() != meta.num_latent {
                     anyhow::bail!(
                         "sample {i}: V{vi} is {}x{}, manifest says {nc}x{}",
@@ -124,15 +133,65 @@ impl PredictSession {
     }
 
     pub fn nviews(&self) -> usize {
-        self.meta.view_ncols.len()
+        self.meta.nviews()
     }
 
     pub fn nrows(&self) -> usize {
         self.meta.nrows
     }
 
+    /// Column count of a 2-mode view (its first further mode).
     pub fn ncols(&self, view: usize) -> usize {
-        self.meta.view_ncols[view]
+        self.meta.view_dims[view][0]
+    }
+
+    /// Number of modes of `view`, including the shared mode 0.
+    pub fn nmodes(&self, view: usize) -> usize {
+        1 + self.meta.view_dims[view].len()
+    }
+
+    /// Full per-mode dimensions of `view` (mode 0 first).
+    pub fn mode_dims(&self, view: usize) -> Vec<usize> {
+        let mut d = Vec::with_capacity(self.nmodes(view));
+        d.push(self.meta.nrows);
+        d.extend_from_slice(&self.meta.view_dims[view]);
+        d
+    }
+
+    /// The two-sided serving APIs (`predict_one`, `top_k`, blocks, link
+    /// prediction) address a view by (row, col): they require a 2-mode
+    /// view.  Tensor views serve through [`predict_coords`](Self::predict_coords)
+    /// and [`top_k_mode`](Self::top_k_mode).
+    fn check_two_mode(&self, view: usize) {
+        assert!(view < self.nviews(), "view {view} out of range");
+        assert_eq!(
+            self.meta.view_dims[view].len(),
+            1,
+            "view {view} has {} modes; use predict_coords / top_k_mode",
+            self.nmodes(view)
+        );
+    }
+
+    /// View `view`'s first further-mode factor of sample `s` (2-mode
+    /// views: the classic V).
+    #[inline]
+    fn v2(&self, s: usize, view: usize) -> &Mat {
+        &self.samples[s].vs[self.meta.vs_offset(view)]
+    }
+
+    /// Per-mode factor refs of `view` in every sample (mode 0 = U).
+    fn sample_factors(&self, view: usize) -> Vec<Vec<&Mat>> {
+        let off = self.meta.vs_offset(view);
+        let nm = self.meta.view_dims[view].len();
+        self.samples
+            .iter()
+            .map(|snap| {
+                let mut f: Vec<&Mat> = Vec::with_capacity(1 + nm);
+                f.push(&snap.u);
+                f.extend(snap.vs[off..off + nm].iter());
+                f
+            })
+            .collect()
     }
 
     /// Whether the store carries a Macau link model (out-of-matrix
@@ -174,9 +233,9 @@ impl PredictSession {
     /// Dense-block prediction: one GEMM per posterior sample (U_blk ·
     /// V_blkᵀ), fanned out over the pool, reduced in sample order.
     pub fn predict_block(&self, view: usize, rows: Range<usize>, cols: Range<usize>) -> BlockPrediction {
-        assert!(view < self.nviews(), "view {view} out of range");
+        self.check_two_mode(view);
         assert!(rows.end <= self.meta.nrows, "row range beyond {}", self.meta.nrows);
-        assert!(cols.end <= self.meta.view_ncols[view], "col range beyond {}", self.meta.view_ncols[view]);
+        assert!(cols.end <= self.ncols(view), "col range beyond {}", self.ncols(view));
         let (nr, nc, k) = (rows.len(), cols.len(), self.meta.num_latent);
 
         // per-sample score blocks, computed in parallel
@@ -187,7 +246,7 @@ impl PredictSession {
                 ublk.row_mut(bi).copy_from_slice(snap.u.row(i));
             }
             // V_blkᵀ laid out K × nc so the product is one plain GEMM
-            let v = &snap.vs[view];
+            let v = self.v2(s, view);
             let mut vt = Mat::zeros(k, nc);
             for (bj, j) in cols.clone().enumerate() {
                 for (d, &x) in v.row(j).iter().enumerate() {
@@ -224,9 +283,9 @@ impl PredictSession {
     /// descending score; ties break toward the smaller column index so
     /// output is fully deterministic.
     pub fn top_k(&self, view: usize, row: usize, k: usize, exclude: &[u32]) -> Vec<(u32, f64)> {
-        assert!(view < self.nviews(), "view {view} out of range");
+        self.check_two_mode(view);
         assert!(row < self.meta.nrows, "row {row} out of range");
-        let ncols = self.meta.view_ncols[view];
+        let ncols = self.ncols(view);
         let excluded: std::collections::HashSet<u32> = exclude.iter().copied().collect();
 
         // scores for every candidate column, computed in parallel with
@@ -283,8 +342,8 @@ impl PredictSession {
                 self.meta.link_features
             );
         }
-        assert!(view < self.nviews(), "view {view} out of range");
-        let ncols = self.meta.view_ncols[view];
+        self.check_two_mode(view);
+        let ncols = self.ncols(view);
         for &c in cols {
             if c as usize >= ncols {
                 anyhow::bail!("column {c} out of range ({ncols} columns)");
@@ -305,11 +364,12 @@ impl PredictSession {
             debug_assert_eq!(u.len(), k);
             us.push(u);
         }
+        let off = self.meta.vs_offset(view);
         let preds = self.pool.parallel_collect(cols.len(), 64, |ci| {
             let j = cols[ci] as usize;
             let (mut sum, mut sumsq) = (0.0, 0.0);
             for (snap, u) in self.samples.iter().zip(&us) {
-                let p = dot(u, snap.vs[view].row(j));
+                let p = dot(u, snap.vs[off].row(j));
                 sum += p;
                 sumsq += p * p;
             }
@@ -318,10 +378,100 @@ impl PredictSession {
         Ok(preds)
     }
 
-    fn check_cell(&self, view: usize, row: usize, col: usize) {
+    /// Pointwise tensor serving: posterior mean ± std of one cell of an
+    /// N-mode view addressed by its full coordinate tuple (mode 0
+    /// first).  Per sample the cell is scored with the Hadamard-dot, so
+    /// a 2-mode view gives exactly [`predict_one`](Self::predict_one)'s
+    /// numbers.
+    pub fn predict_coords(&self, view: usize, coords: &[usize]) -> Prediction {
         assert!(view < self.nviews(), "view {view} out of range");
+        let dims = self.mode_dims(view);
+        assert_eq!(coords.len(), dims.len(), "expected {} coordinates", dims.len());
+        for (m, (&c, &d)) in coords.iter().zip(&dims).enumerate() {
+            assert!(c < d, "coordinate {c} out of range for mode {m} (dim {d})");
+        }
+        let sf = self.sample_factors(view);
+        let (mut sum, mut sumsq) = (0.0, 0.0);
+        for f in &sf {
+            let p = crate::model::hadamard_dot(f, coords);
+            sum += p;
+            sumsq += p * p;
+        }
+        self.finish(sum, sumsq, view)
+    }
+
+    /// Top-K over one *free mode* of an N-mode view with every other
+    /// coordinate fixed: the K indices of `free_mode` with the highest
+    /// posterior-mean score (`coords[free_mode]` is ignored).  Scores
+    /// are the exact per-sample Hadamard-dot sums `predict_coords`
+    /// produces, so both APIs agree bitwise; ties break toward the
+    /// smaller index.
+    pub fn top_k_mode(
+        &self,
+        view: usize,
+        coords: &[usize],
+        free_mode: usize,
+        k: usize,
+        exclude: &[u32],
+    ) -> Vec<(u32, f64)> {
+        assert!(view < self.nviews(), "view {view} out of range");
+        let dims = self.mode_dims(view);
+        assert_eq!(coords.len(), dims.len(), "expected {} coordinates", dims.len());
+        assert!(free_mode < dims.len(), "free mode {free_mode} out of range");
+        for (m, (&c, &d)) in coords.iter().zip(&dims).enumerate() {
+            assert!(m == free_mode || c < d, "coordinate {c} out of range for mode {m}");
+        }
+        let ncand = dims[free_mode];
+        let excluded: std::collections::HashSet<u32> = exclude.iter().copied().collect();
+        let sf = self.sample_factors(view);
+        thread_local! {
+            // per-thread candidate-coordinate scratch: no allocation per
+            // candidate in the scoring hot loop
+            static COORDS: std::cell::RefCell<Vec<usize>> =
+                const { std::cell::RefCell::new(Vec::new()) };
+        }
+        let scores: Vec<f64> = self.pool.parallel_collect(ncand, 64, |j| {
+            COORDS.with(|c| {
+                let mut c = c.borrow_mut();
+                c.clear();
+                c.extend_from_slice(coords);
+                c[free_mode] = j;
+                let mut sum = 0.0;
+                for f in &sf {
+                    sum += crate::model::hadamard_dot(f, &c);
+                }
+                sum
+            })
+        });
+        let n = self.samples.len() as f64;
+        let offset = self.meta.offsets[view];
+        let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> = BinaryHeap::with_capacity(k + 1);
+        for (j, &s) in scores.iter().enumerate() {
+            let cand = j as u32;
+            if excluded.contains(&cand) {
+                continue;
+            }
+            let entry = TopEntry { score: s / n + offset, col: cand };
+            if heap.len() < k {
+                heap.push(std::cmp::Reverse(entry));
+            } else if let Some(min) = heap.peek() {
+                if entry > min.0 {
+                    heap.pop();
+                    heap.push(std::cmp::Reverse(entry));
+                }
+            }
+        }
+        let mut out: Vec<(u32, f64)> = heap.into_iter().map(|r| (r.0.col, r.0.score)).collect();
+        out.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then_with(|| a.0.cmp(&b.0))
+        });
+        out
+    }
+
+    fn check_cell(&self, view: usize, row: usize, col: usize) {
+        self.check_two_mode(view);
         assert!(row < self.meta.nrows, "row {row} out of range");
-        assert!(col < self.meta.view_ncols[view], "col {col} out of range");
+        assert!(col < self.ncols(view), "col {col} out of range");
     }
 
     /// (Σ_s p_s, Σ_s p_s²) over samples for one cell — the single
@@ -329,9 +479,10 @@ impl PredictSession {
     /// and `predict_one` means are bit-identical.
     #[inline]
     fn cell_moments(&self, view: usize, row: usize, col: usize) -> (f64, f64) {
+        let off = self.meta.vs_offset(view);
         let (mut sum, mut sumsq) = (0.0, 0.0);
         for snap in &self.samples {
-            let p = dot(snap.u.row(row), snap.vs[view].row(col));
+            let p = dot(snap.u.row(row), snap.vs[off].row(col));
             sum += p;
             sumsq += p * p;
         }
@@ -469,6 +620,25 @@ mod tests {
         let top2 = ps.top_k(0, user, k, &excl);
         assert!(top2.iter().all(|t| !in_list.contains(&t.0)));
         assert!(top2.first().unwrap().1 <= floor);
+    }
+
+    /// The tensor serving APIs collapse to the two-sided ones on 2-mode
+    /// views — bit-for-bit, because the Hadamard-dot replays `dot`.
+    #[test]
+    fn tensor_apis_agree_with_two_sided_on_matrix_stores() {
+        let (_, _, dir) = saved_bmf("tensorapi");
+        let ps = PredictSession::open(&dir).unwrap();
+        assert_eq!(ps.nmodes(0), 2);
+        assert_eq!(ps.mode_dims(0), vec![ps.nrows(), ps.ncols(0)]);
+        let p = ps.predict_one(0, 4, 9);
+        let pc = ps.predict_coords(0, &[4, 9]);
+        assert_eq!(p, pc);
+        let t1 = ps.top_k(0, 4, 5, &[]);
+        let t2 = ps.top_k_mode(0, &[4, 0], 1, 5, &[]);
+        assert_eq!(t1, t2);
+        // exclusion behaves identically too
+        let excl: Vec<u32> = t1.iter().map(|t| t.0).collect();
+        assert_eq!(ps.top_k(0, 4, 3, &excl), ps.top_k_mode(0, &[4, 0], 1, 3, &excl));
     }
 
     #[test]

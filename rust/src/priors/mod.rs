@@ -69,12 +69,30 @@ pub struct LinkSpec<'a> {
     pub lambda_beta: f64,
 }
 
-/// One observed entry of a row, as seen by custom row samplers.
+/// The observations of one target row, as seen by custom row samplers:
+/// one gathered *design row* per observation (the opposite side's latent
+/// row for matrices, the other modes' Hadamard product for tensor
+/// modes), so custom conditionals are mode-agnostic like the MVN one.
 pub struct RowObs<'a> {
-    /// indices into the *other* side's latent matrix
-    pub idx: &'a [u32],
-    /// observed values (already noise-augmented if probit)
+    /// nnz × k design rows, flattened row-major
+    pub designs: &'a [f64],
+    /// observed values
     pub vals: &'a [f64],
+    /// latent dimension (design-row length)
+    pub k: usize,
+}
+
+impl<'a> RowObs<'a> {
+    /// Number of observations.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Design row of observation t.
+    #[inline]
+    pub fn design(&self, t: usize) -> &'a [f64] {
+        &self.designs[t * self.k..(t + 1) * self.k]
+    }
 }
 
 /// A prior over one latent matrix (one side of one view).
@@ -92,14 +110,14 @@ pub trait Prior: Send + Sync {
     /// standard Gaussian one (Normal, Macau).  `None` => custom sampler.
     fn mvn_spec(&self) -> Option<MvnSpec<'_>>;
 
-    /// Custom row conditional (spike-and-slab).  `other` is the opposite
-    /// side's latent matrix; `alpha` the noise precision; `out` the row
-    /// to overwrite.  Only called when `mvn_spec()` is `None`.
+    /// Custom row conditional (spike-and-slab).  `obs` carries the
+    /// observations as gathered design rows; `alpha` is the noise
+    /// precision; `out` the row to overwrite.  Only called when
+    /// `mvn_spec()` is `None`.
     fn sample_row_custom(
         &self,
         _row: usize,
         _obs: RowObs<'_>,
-        _other: &Mat,
         _alpha: f64,
         _rng: &mut Rng,
         _out: &mut [f64],

@@ -83,26 +83,24 @@ impl Prior for SpikeAndSlabPrior {
         &self,
         _row: usize,
         obs: RowObs<'_>,
-        other: &Mat,
         alpha: f64,
         rng: &mut Rng,
         out: &mut [f64],
     ) {
         let k = self.k;
-        let nnz = obs.idx.len();
+        let nnz = obs.nnz();
         // residuals r̃_i = r_i - Σ_k v_k u_ik, maintained incrementally
         let mut resid: Vec<f64> = Vec::with_capacity(nnz);
-        for (t, &i) in obs.idx.iter().enumerate() {
-            let urow = other.row(i as usize);
-            resid.push(obs.vals[t] - crate::linalg::dot(urow, out));
+        for t in 0..nnz {
+            resid.push(obs.vals[t] - crate::linalg::dot(obs.design(t), out));
         }
         for kk in 0..k {
             // remove component kk from the residual
             let v_old = out[kk];
             let mut s_uu = 0.0;
             let mut s_ur = 0.0;
-            for (t, &i) in obs.idx.iter().enumerate() {
-                let u = other.row(i as usize)[kk];
+            for t in 0..nnz {
+                let u = obs.design(t)[kk];
                 let r_wo = resid[t] + v_old * u;
                 s_uu += u * u;
                 s_ur += u * r_wo;
@@ -121,8 +119,8 @@ impl Prior for SpikeAndSlabPrior {
             };
             out[kk] = v_new;
             if v_new != 0.0 {
-                for (t, &i) in obs.idx.iter().enumerate() {
-                    resid[t] -= v_new * other.row(i as usize)[kk];
+                for t in 0..nnz {
+                    resid[t] -= v_new * obs.design(t)[kk];
                 }
             }
         }
@@ -145,8 +143,8 @@ mod tests {
         let (n_other, k) = (200, 4);
         let mut u = Mat::zeros(n_other, k);
         rng.fill_normal(u.data_mut());
-        // observations of one row: r_i = 2.0 * u_i0 + tiny noise
-        let idx: Vec<u32> = (0..n_other as u32).collect();
+        // observations of one row: r_i = 2.0 * u_i0 + tiny noise; every
+        // opposite row observed once, so the design rows ARE u's rows
         let vals: Vec<f64> = (0..n_other)
             .map(|i| 2.0 * u[(i, 0)] + 0.01 * rng.normal())
             .collect();
@@ -155,8 +153,8 @@ mod tests {
         let mut row = vec![0.1; k];
         // iterate row-conditional + hyper a few times on a 1-row "matrix"
         for _ in 0..30 {
-            let obs = RowObs { idx: &idx, vals: &vals };
-            prior.sample_row_custom(0, obs, &u, 100.0, &mut rng, &mut row);
+            let obs = RowObs { designs: u.data(), vals: &vals, k };
+            prior.sample_row_custom(0, obs, 100.0, &mut rng, &mut row);
             let lat = Mat::from_vec(1, k, row.clone());
             prior.update_hyper(&lat, &mut rng);
         }
@@ -201,12 +199,12 @@ mod tests {
     fn no_observations_samples_from_prior() {
         let mut rng = Rng::new(53);
         let prior = SpikeAndSlabPrior::new(1, 2);
-        let u = Mat::zeros(0, 2);
         let mut row = vec![9.0, 9.0];
         let mut zeros = 0;
         let n = 2000;
         for _ in 0..n {
-            prior.sample_row_custom(0, RowObs { idx: &[], vals: &[] }, &u, 1.0, &mut rng, &mut row);
+            let obs = RowObs { designs: &[], vals: &[], k: 2 };
+            prior.sample_row_custom(0, obs, 1.0, &mut rng, &mut row);
             if row[0] == 0.0 {
                 zeros += 1;
             }

@@ -48,8 +48,12 @@ impl XlaEngine {
         let k = latents.cols();
         let n = latents.rows();
         let view = &sweep.views[0];
+        let (data, other) = view
+            .operand
+            .matrix_parts()
+            .expect("xla fast path is gated on a matrix operand");
         // median-ish depth: cover 90% of rows without padding waste
-        let nnzs: Vec<usize> = (0..n).map(|i| view.data.nnz(i)).collect();
+        let nnzs: Vec<usize> = (0..n).map(|i| data.nnz(i)).collect();
         let p90 = {
             let mut s = nnzs.clone();
             s.sort_unstable();
@@ -91,9 +95,9 @@ impl XlaEngine {
                     heavy.push(i);
                     continue; // leave masked out; result for this lane ignored
                 }
-                view.data.gather(i, &mut idx_scratch, &mut val_scratch);
+                data.gather(i, &mut idx_scratch, &mut val_scratch);
                 for (t, (&j, &r)) in idx_scratch.iter().zip(&val_scratch).enumerate() {
-                    let vrow = view.other.row(j as usize);
+                    let vrow = other.row(j as usize);
                     let base = (bi * d + t) * k;
                     for (c, &x) in vrow.iter().enumerate() {
                         v_sel[base + c] = x as f32;
@@ -158,6 +162,7 @@ impl Engine for XlaEngine {
         let fast = sweep.views.len() == 1
             && !sweep.views[0].probit
             && sweep.views[0].full_gram.is_none()
+            && sweep.views[0].operand.matrix_parts().is_some()
             && self.rt.pick_gibbs(latents.cols(), 1).is_some();
         if !fast {
             // artifacts can't express this sweep: correct native fallback
@@ -212,13 +217,13 @@ mod tests {
                 crate::priors::MeanSpec::Shared(s) => crate::priors::MeanSpec::Shared(s),
                 _ => unreachable!(),
             },
-            views: vec![ViewSlice {
-                data: DataAccess::SparseRows(&data),
-                other: &v,
-                alpha: 2.0,
-                probit: false,
-                full_gram: None,
-            }],
+            views: vec![ViewSlice::matrix(
+                DataAccess::SparseRows(&data),
+                &v,
+                2.0,
+                false,
+                None,
+            )],
             seed: 5,
             iteration: 2,
             side_id: 0,

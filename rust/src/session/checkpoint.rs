@@ -49,22 +49,34 @@ impl Checkpoint {
         Ok(Checkpoint { iteration, u, vs })
     }
 
-    /// Apply a loaded checkpoint to a session (shapes must match).
+    /// Apply a loaded checkpoint to a session (shapes must match).  The
+    /// factor list holds one matrix per non-shared mode, grouped by view
+    /// (a matrix view contributes exactly one).
     pub fn restore_into(self, session: &mut super::TrainSession) -> anyhow::Result<()> {
         if self.u.rows() != session.u.rows() || self.u.cols() != session.u.cols() {
             anyhow::bail!("checkpoint U shape mismatch");
         }
-        if self.vs.len() != session.views.len() {
-            anyhow::bail!("checkpoint view count mismatch");
+        let total: usize = session.views.iter().map(|v| v.modes.len()).sum();
+        if self.vs.len() != total {
+            anyhow::bail!("checkpoint factor count mismatch");
         }
-        for (v, view) in self.vs.iter().zip(&session.views) {
-            if v.rows() != view.col_latents.rows() || v.cols() != view.col_latents.cols() {
-                anyhow::bail!("checkpoint V shape mismatch");
+        {
+            let mut it = self.vs.iter();
+            for view in &session.views {
+                for mf in &view.modes {
+                    let v = it.next().expect("length checked");
+                    if v.rows() != mf.latents.rows() || v.cols() != mf.latents.cols() {
+                        anyhow::bail!("checkpoint factor shape mismatch");
+                    }
+                }
             }
         }
         session.u = self.u;
-        for (v, view) in self.vs.into_iter().zip(session.views.iter_mut()) {
-            view.col_latents = v;
+        let mut it = self.vs.into_iter();
+        for view in session.views.iter_mut() {
+            for mf in view.modes.iter_mut() {
+                mf.latents = it.next().expect("length checked");
+            }
         }
         // continue from the recorded iteration
         session.set_iteration(self.iteration);
@@ -77,9 +89,11 @@ impl super::TrainSession {
         self.iteration = it;
     }
 
-    /// Write the current state as a checkpoint directory.
+    /// Write the current state as a checkpoint directory (one factor
+    /// file per non-shared mode, grouped by view).
     pub fn checkpoint(&self, dir: &Path) -> anyhow::Result<()> {
-        let vs: Vec<&Mat> = self.views.iter().map(|v| &v.col_latents).collect();
+        let vs: Vec<&Mat> =
+            self.views.iter().flat_map(|v| v.modes.iter().map(|mf| &mf.latents)).collect();
         Checkpoint::save(dir, self.iteration(), &self.u, &vs)
     }
 }
@@ -112,7 +126,7 @@ mod tests {
         Checkpoint::load(&dir).unwrap().restore_into(&mut s2).unwrap();
         assert_eq!(s2.iteration(), 3);
         assert!(s2.u.max_abs_diff(&s.u) == 0.0);
-        assert!(s2.views[0].col_latents.max_abs_diff(&s.views[0].col_latents) == 0.0);
+        assert!(s2.views[0].col_latents().max_abs_diff(s.views[0].col_latents()) == 0.0);
         // both continue identically (same seed, same iteration, same state)
         s.step();
         s2.step();

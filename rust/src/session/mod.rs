@@ -1,31 +1,42 @@
 //! Training sessions: Algorithm 1 of the paper, composed from the
-//! data / prior / noise choices of Table 1.
+//! data / prior / noise choices of Table 1, generalised from matrices to
+//! N-mode tensor views.
 //!
-//! A session owns one shared row-factor matrix U and any number of data
-//! *views*, each with its own column-factor matrix, column prior, noise
-//! model and optional test set:
+//! A session owns one shared mode-0 factor matrix U and any number of
+//! data *views*.  A matrix view has one further mode (its columns); an
+//! N-mode tensor view has N-1 further modes — each further mode carries
+//! its own factor matrix and prior (Normal, Macau side-info or
+//! spike-and-slab, all per-mode), and the view has one noise model and
+//! optional test set:
 //!
 //! * BMF    = 1 sparse view, Normal priors both sides, fixed noise
 //! * Macau  = BMF + `MacauPrior` (side information) on a side
 //! * GFA    = several (usually dense) views sharing U, spike-and-slab
 //!            priors on the per-view loadings
+//! * CP/PARAFAC tensor factorization = 1 tensor view (e.g. compound ×
+//!   target × assay-condition), Normal priors per mode
 //!
-//! The Gibbs loop per iteration: sample row hyper → resample U (all views
-//! contribute) → per view: sample column hyper → resample Vᵥ → noise
-//! update → (after burn-in) aggregate test predictions.
+//! The Gibbs loop per iteration iterates *modes*: sample mode-0 hyper →
+//! resample U (all views contribute) → per view, per further mode m:
+//! sample mode hyper → resample that mode's factor → noise update →
+//! (after burn-in) aggregate test predictions.  A 2-mode tensor view
+//! replays the matrix path bit-exactly (same design rows, same RNG
+//! streams, same side ids).
 
 mod checkpoint;
 
 pub use checkpoint::Checkpoint;
 
-use crate::coordinator::{access_for, Engine, MvnSweep, NativeEngine, ThreadPool, ViewSlice};
-use crate::data::{MatrixConfig, SideInfo, TestSet};
+use crate::coordinator::{
+    access_for, Engine, MvnSweep, NativeEngine, Operand, TensorModeOperand, ThreadPool, ViewSlice,
+};
+use crate::data::{MatrixConfig, SideInfo, TensorTestSet, TestSet};
 use crate::linalg::Mat;
 use crate::model::{predict_cells, PredictionAggregator};
 use crate::noise::{NoiseConfig, NoiseModel};
 use crate::priors::{MacauPrior, NormalPrior, Prior, PriorKind, SpikeAndSlabPrior};
 use crate::rng::Rng;
-use crate::sparse::SparseMatrix;
+use crate::sparse::{SparseMatrix, SparseTensor};
 use crate::store::{LinkState, ModelStore, Snapshot, StoreMeta};
 use crate::util::Timer;
 use std::path::PathBuf;
@@ -67,22 +78,114 @@ impl Default for SessionConfig {
     }
 }
 
+/// The data payload of one view: a 2-mode matrix in one of Table 1's
+/// three storage kinds, or an N-mode sparse tensor.
+pub enum ViewData {
+    Matrix(MatrixConfig),
+    Tensor(SparseTensor),
+}
+
+impl ViewData {
+    /// Size of the shared mode 0.
+    pub fn nrows(&self) -> usize {
+        match self {
+            ViewData::Matrix(m) => m.nrows(),
+            ViewData::Tensor(t) => t.dims()[0],
+        }
+    }
+
+    /// Number of observed cells.
+    pub fn nobs(&self) -> usize {
+        match self {
+            ViewData::Matrix(m) => m.nobs(),
+            ViewData::Tensor(t) => t.nnz(),
+        }
+    }
+}
+
+/// One non-shared mode of a view: its factor matrix and prior.
+pub struct ModeFactor {
+    pub latents: Mat,
+    pub prior: Box<dyn Prior>,
+}
+
 /// One data view attached to the session.
 pub struct View {
-    pub data: MatrixConfig,
+    pub data: ViewData,
     /// Column-oriented replica used by the column-side sweep when the
     /// row-oriented `data` does not hold every observation of this
     /// node's columns (distributed workers: `data` is the row shard,
     /// `col_data` the column shard).  `None` = single node: both sweeps
-    /// read `data`.
+    /// read `data`.  Matrix views only.
     pub col_data: Option<MatrixConfig>,
-    pub col_latents: Mat,
-    pub col_prior: Box<dyn Prior>,
+    /// Factor matrices + priors for modes 1.. (mode 0 is the session's
+    /// shared U).  A matrix view has exactly one entry: its column side.
+    pub modes: Vec<ModeFactor>,
     pub noise: NoiseModel,
+    /// test cells of a matrix view
     pub test: Option<TestSet>,
+    /// test cells of a tensor view
+    pub tensor_test: Option<TensorTestSet>,
     pub aggregator: Option<PredictionAggregator>,
     /// global mean removed from the data (added back at prediction)
     pub offset: f64,
+}
+
+impl View {
+    /// Total number of modes including the shared mode 0.
+    pub fn nmodes(&self) -> usize {
+        1 + self.modes.len()
+    }
+
+    /// Length of mode `m` (m ≥ 1) — the factor matrix's row count.
+    pub fn mode_len(&self, m: usize) -> usize {
+        self.modes[m - 1].latents.rows()
+    }
+
+    /// The classic "column side" (mode 1) factor matrix.
+    pub fn col_latents(&self) -> &Mat {
+        &self.modes[0].latents
+    }
+
+    pub fn col_latents_mut(&mut self) -> &mut Mat {
+        &mut self.modes[0].latents
+    }
+
+    /// The mode-1 prior (a matrix view's column prior).
+    pub fn col_prior(&self) -> &dyn Prior {
+        self.modes[0].prior.as_ref()
+    }
+
+    /// Test values regardless of view kind.
+    fn test_vals(&self) -> Option<&[f64]> {
+        self.test
+            .as_ref()
+            .map(|t| &t.vals[..])
+            .or_else(|| self.tensor_test.as_ref().map(|t| &t.vals[..]))
+    }
+
+    /// The slice this view contributes to the shared mode-0 sweep.
+    fn slice_for_mode0(&self) -> ViewSlice<'_> {
+        let alpha = self.noise.alpha();
+        let probit = self.noise.is_probit();
+        match &self.data {
+            ViewData::Matrix(mc) => {
+                let full = mc.fully_observed() && !probit;
+                ViewSlice::matrix(
+                    access_for(mc, true),
+                    &self.modes[0].latents,
+                    alpha,
+                    probit,
+                    full.then(|| ViewSlice::full_gram_for(&self.modes[0].latents, alpha)),
+                )
+            }
+            ViewData::Tensor(t) => {
+                let others: Vec<(usize, &Mat)> =
+                    (1..t.nmodes()).map(|m| (m, &self.modes[m - 1].latents)).collect();
+                ViewSlice::tensor_mode(t, 0, others, alpha, probit)
+            }
+        }
+    }
 }
 
 /// Final result of a run.
@@ -105,7 +208,8 @@ pub struct TrainResult {
     pub nsnapshots: usize,
 }
 
-/// Builder: the composition surface of Table 1.
+/// Builder: the composition surface of Table 1, plus N-mode tensor
+/// views.
 ///
 /// Fields are crate-visible so [`crate::distributed::DistributedSession`]
 /// can shard the exact same composition across worker nodes.
@@ -113,6 +217,8 @@ pub struct SessionBuilder {
     pub(crate) cfg: SessionConfig,
     pub(crate) row_prior: PriorChoice,
     pub(crate) views: Vec<(MatrixConfig, PriorChoice, NoiseConfig, Option<TestSet>)>,
+    /// tensor views appended after the matrix views, in call order
+    pub(crate) tensor_views: Vec<(SparseTensor, Vec<ModePrior>, NoiseConfig, Option<TensorTestSet>)>,
     pub(crate) engine: Option<Box<dyn Engine>>,
     pub(crate) center: bool,
     pub(crate) dist: Option<crate::distributed::DistSpec>,
@@ -135,12 +241,31 @@ impl PriorChoice {
     }
 }
 
+/// The prior attached to one non-shared mode of a tensor view.
+#[derive(Clone)]
+pub enum ModePrior {
+    Normal,
+    Macau(SideInfo),
+    SpikeAndSlab,
+}
+
+impl ModePrior {
+    fn choice(&self) -> PriorChoice {
+        match self {
+            ModePrior::Normal => PriorChoice::Normal,
+            ModePrior::Macau(side) => PriorChoice::Macau(side.clone()),
+            ModePrior::SpikeAndSlab => PriorChoice::SpikeAndSlab,
+        }
+    }
+}
+
 impl SessionBuilder {
     pub fn new(cfg: SessionConfig) -> SessionBuilder {
         SessionBuilder {
             cfg,
             row_prior: PriorChoice::Normal,
             views: Vec::new(),
+            tensor_views: Vec::new(),
             engine: None,
             center: true,
             dist: None,
@@ -188,6 +313,32 @@ impl SessionBuilder {
         self
     }
 
+    /// Add an N-mode tensor view factorized CP/PARAFAC-style.  Mode 0
+    /// (size `data.dims()[0]`) shares the session's row factors and row
+    /// prior; `mode_priors` supplies one prior per further mode
+    /// (`data.nmodes() - 1` entries).  Tensor views are appended after
+    /// every matrix view regardless of call order; probit noise is not
+    /// supported on tensors.
+    pub fn tensor_view(
+        mut self,
+        data: SparseTensor,
+        mode_priors: Vec<ModePrior>,
+        noise: NoiseConfig,
+        test: Option<TensorTestSet>,
+    ) -> Self {
+        assert_eq!(
+            mode_priors.len(),
+            data.nmodes() - 1,
+            "tensor view needs one prior per non-shared mode"
+        );
+        assert!(noise != NoiseConfig::Probit, "probit noise is not supported on tensor views");
+        if let Some(t) = &test {
+            assert_eq!(t.nmodes(), data.nmodes(), "test set mode count must match the tensor");
+        }
+        self.tensor_views.push((data, mode_priors, noise, test));
+        self
+    }
+
     /// Override the sampling engine (default: [`NativeEngine`]).
     pub fn engine(mut self, e: Box<dyn Engine>) -> Self {
         self.engine = Some(e);
@@ -224,11 +375,21 @@ impl SessionBuilder {
     }
 
     pub fn build(self) -> TrainSession {
-        assert!(!self.views.is_empty(), "a session needs at least one data view");
+        assert!(
+            !self.views.is_empty() || !self.tensor_views.is_empty(),
+            "a session needs at least one data view"
+        );
         let k = self.cfg.num_latent;
-        let nrows = self.views[0].0.nrows();
+        let nrows = self
+            .views
+            .first()
+            .map(|v| v.0.nrows())
+            .unwrap_or_else(|| self.tensor_views[0].0.dims()[0]);
         for (d, _, _, _) in &self.views {
             assert_eq!(d.nrows(), nrows, "all views must share the row dimension");
+        }
+        for (t, _, _, _) in &self.tensor_views {
+            assert_eq!(t.dims()[0], nrows, "all views must share the mode-0 dimension");
         }
         let mut rng = Rng::from_parts(self.cfg.seed, 0x1A17);
         let u = crate::model::init_latents(nrows, k, self.cfg.init_std, &mut rng);
@@ -249,12 +410,42 @@ impl SessionBuilder {
             let col_prior = prior_choice.build(ncols, k);
             let aggregator = test.as_ref().map(|t| PredictionAggregator::new(t.len()));
             views.push(View {
-                data,
+                data: ViewData::Matrix(data),
                 col_data: None,
-                col_latents,
-                col_prior,
+                modes: vec![ModeFactor { latents: col_latents, prior: col_prior }],
                 noise,
                 test,
+                tensor_test: None,
+                aggregator,
+                offset,
+            });
+        }
+        for (tensor, mode_priors, noise_cfg, test) in self.tensor_views {
+            let (tensor, offset) = if self.center {
+                let (t, mean) = tensor.centered();
+                (t, mean)
+            } else {
+                (tensor, 0.0)
+            };
+            let data_var = crate::util::variance(tensor.vals()).max(1e-9);
+            let noise = NoiseModel::new(&noise_cfg, data_var);
+            let dims: Vec<usize> = tensor.dims().to_vec();
+            let modes: Vec<ModeFactor> = mode_priors
+                .into_iter()
+                .zip(&dims[1..])
+                .map(|(mp, &d)| ModeFactor {
+                    latents: crate::model::init_latents(d, k, self.cfg.init_std, &mut rng),
+                    prior: mp.choice().build(d, k),
+                })
+                .collect();
+            let aggregator = test.as_ref().map(|t| PredictionAggregator::new(t.len()));
+            views.push(View {
+                data: ViewData::Tensor(tensor),
+                col_data: None,
+                modes,
+                noise,
+                test: None,
+                tensor_test: test,
                 aggregator,
                 offset,
             });
@@ -380,13 +571,17 @@ impl TrainSession {
     /// One full Gibbs iteration (Algorithm 1's outer-loop body) —
     /// composed from the shard-range sub-steps below over full ranges,
     /// so a single node and a distributed worker run the *same* code.
+    /// The loop iterates *modes*: the shared mode 0 first, then every
+    /// further mode of every view (a matrix view has exactly one).
     pub fn step(&mut self) {
         let mut hyper_rng = self.hyper_rng();
         let nrows = self.u.rows();
         self.sample_row_side(0..nrows, &mut hyper_rng);
         for vi in 0..self.views.len() {
-            let ncols = self.views[vi].col_latents.rows();
-            self.sample_col_side(vi, 0..ncols, &mut hyper_rng);
+            for m in 1..self.views[vi].nmodes() {
+                let n = self.views[vi].mode_len(m);
+                self.sample_mode_side(vi, m, 0..n, &mut hyper_rng);
+            }
             if self.noise_is_adaptive(vi) {
                 let (sse, nobs) = self.view_sse_local(vi);
                 self.update_view_noise(vi, sse, nobs, &mut hyper_rng);
@@ -423,21 +618,8 @@ impl TrainSession {
         let seed = self.cfg.seed;
         self.row_prior.update_hyper(&self.u, hyper_rng);
         {
-            let views: Vec<ViewSlice<'_>> = self
-                .views
-                .iter()
-                .map(|v| {
-                    let full = v.data.fully_observed() && !v.noise.is_probit();
-                    ViewSlice {
-                        data: access_for(&v.data, true),
-                        other: &v.col_latents,
-                        alpha: v.noise.alpha(),
-                        probit: v.noise.is_probit(),
-                        full_gram: full
-                            .then(|| ViewSlice::full_gram_for(&v.col_latents, v.noise.alpha())),
-                    }
-                })
-                .collect();
+            let views: Vec<ViewSlice<'_>> =
+                self.views.iter().map(|v| v.slice_for_mode0()).collect();
             let spec = self
                 .row_prior
                 .mvn_spec()
@@ -460,88 +642,144 @@ impl TrainSession {
         self.row_prior.post_latents(&self.u, hyper_rng);
     }
 
-    /// Column side of view `vi` restricted to `cols`: column-prior hyper
-    /// update, sweep of `cols`, post-latents.  The sweep reads the
-    /// view's `col_data` when present (distributed column shard), else
-    /// `data`.  Does *not* update the noise model — callers supply the
-    /// (possibly allreduced) SSE to [`update_view_noise`] themselves.
+    /// Mode `m` (m ≥ 1) of view `vi` restricted to `range`: mode-prior
+    /// hyper update, factor sweep, post-latents.  Does *not* update the
+    /// noise model — callers supply the (possibly allreduced) SSE to
+    /// [`update_view_noise`] themselves.
+    pub fn sample_mode_side(
+        &mut self,
+        vi: usize,
+        m: usize,
+        range: std::ops::Range<usize>,
+        hyper_rng: &mut Rng,
+    ) {
+        self.sample_mode_side_pre(vi, m, range, hyper_rng);
+        self.finish_mode_side(vi, m, hyper_rng);
+    }
+
+    /// [`sample_mode_side`] for the classic column side (mode 1) — the
+    /// distributed workers' spelling.
     pub fn sample_col_side(
         &mut self,
         vi: usize,
         cols: std::ops::Range<usize>,
         hyper_rng: &mut Rng,
     ) {
-        self.sample_col_side_pre(vi, cols, hyper_rng);
-        self.finish_col_side(vi, hyper_rng);
+        self.sample_mode_side(vi, 1, cols, hyper_rng);
     }
 
-    /// Column hyper update + sweep of `cols`, without the post-latents
-    /// pass (distributed workers run it after the block exchange).
+    /// Mode hyper update + sweep of `range`, without the post-latents
+    /// pass (distributed workers run it after the block exchange).  The
+    /// matrix sweep reads the view's `col_data` when present
+    /// (distributed column shard), else `data`.
+    pub fn sample_mode_side_pre(
+        &mut self,
+        vi: usize,
+        m: usize,
+        range: std::ops::Range<usize>,
+        hyper_rng: &mut Rng,
+    ) {
+        assert!(m >= 1 && m < self.views[vi].nmodes(), "mode {m} out of range");
+        let iter = self.iteration as u64;
+        let seed = self.cfg.seed;
+        let side_id = self.mode_side_id(vi, m);
+        {
+            let mf = &mut self.views[vi].modes[m - 1];
+            mf.prior.update_hyper(&mf.latents, hyper_rng);
+        }
+        // take the target factor out so the slice can borrow the others
+        let mut target =
+            std::mem::replace(&mut self.views[vi].modes[m - 1].latents, Mat::zeros(0, 0));
+        {
+            let view = &self.views[vi];
+            let probit = view.noise.is_probit();
+            let alpha = view.noise.alpha();
+            let slice = match &view.data {
+                ViewData::Matrix(mc) => {
+                    debug_assert_eq!(m, 1, "matrix views have a single further mode");
+                    let col_data = view.col_data.as_ref().unwrap_or(mc);
+                    if probit {
+                        assert!(
+                            matches!(col_data, MatrixConfig::SparseUnknown(_)),
+                            "probit noise requires sparse-with-unknowns data"
+                        );
+                    }
+                    let full = col_data.fully_observed() && !probit;
+                    ViewSlice::matrix(
+                        access_for(col_data, false),
+                        &self.u,
+                        alpha,
+                        probit,
+                        full.then(|| ViewSlice::full_gram_for(&self.u, alpha)),
+                    )
+                }
+                ViewData::Tensor(t) => {
+                    let others: Vec<(usize, &Mat)> = (0..t.nmodes())
+                        .filter(|&p| p != m)
+                        .map(|p| (p, if p == 0 { &self.u } else { &view.modes[p - 1].latents }))
+                        .collect();
+                    ViewSlice::tensor_mode(t, m, others, alpha, probit)
+                }
+            };
+            match view.modes[m - 1].prior.mvn_spec() {
+                Some(spec) => {
+                    let sweep = MvnSweep {
+                        lambda0: spec.lambda0,
+                        means: spec.means,
+                        views: vec![slice],
+                        seed,
+                        iteration: iter,
+                        side_id,
+                    };
+                    self.engine.sample_mvn_side_range(&sweep, &mut target, &self.pool, range);
+                }
+                None => {
+                    crate::coordinator::sample_side_custom_range(
+                        view.modes[m - 1].prior.as_ref(),
+                        &slice,
+                        &mut target,
+                        &self.pool,
+                        seed,
+                        iter,
+                        side_id,
+                        range,
+                    );
+                }
+            }
+        }
+        self.views[vi].modes[m - 1].latents = target;
+    }
+
+    /// [`sample_mode_side_pre`] for mode 1 — the distributed workers'
+    /// spelling.
     pub fn sample_col_side_pre(
         &mut self,
         vi: usize,
         cols: std::ops::Range<usize>,
         hyper_rng: &mut Rng,
     ) {
-        let iter = self.iteration as u64;
-        let seed = self.cfg.seed;
-        let side_id = 1 + vi as u64;
-        let view = &mut self.views[vi];
-        view.col_prior.update_hyper(&view.col_latents, hyper_rng);
-        let probit = view.noise.is_probit();
-        let col_data = view.col_data.as_ref().unwrap_or(&view.data);
-        if probit {
-            assert!(
-                matches!(col_data, MatrixConfig::SparseUnknown(_)),
-                "probit noise requires sparse-with-unknowns data"
-            );
-        }
-        match view.col_prior.mvn_spec() {
-            Some(spec) => {
-                let full = col_data.fully_observed() && !probit;
-                let slice = ViewSlice {
-                    data: access_for(col_data, false),
-                    other: &self.u,
-                    alpha: view.noise.alpha(),
-                    probit,
-                    full_gram: full.then(|| ViewSlice::full_gram_for(&self.u, view.noise.alpha())),
-                };
-                let sweep = MvnSweep {
-                    lambda0: spec.lambda0,
-                    means: spec.means,
-                    views: vec![slice],
-                    seed,
-                    iteration: iter,
-                    side_id,
-                };
-                self.engine.sample_mvn_side_range(&sweep, &mut view.col_latents, &self.pool, cols);
-            }
-            None => {
-                let slice = ViewSlice {
-                    data: access_for(col_data, false),
-                    other: &self.u,
-                    alpha: view.noise.alpha(),
-                    probit,
-                    full_gram: None,
-                };
-                crate::coordinator::sample_side_custom_range(
-                    view.col_prior.as_ref(),
-                    &slice,
-                    &mut view.col_latents,
-                    &self.pool,
-                    seed,
-                    iter,
-                    side_id,
-                    cols,
-                );
-            }
-        }
+        self.sample_mode_side_pre(vi, 1, cols, hyper_rng);
     }
 
-    /// Column-prior post-latents pass for view `vi`.
+    /// Mode-prior post-latents pass for mode `m` of view `vi`.
+    pub fn finish_mode_side(&mut self, vi: usize, m: usize, hyper_rng: &mut Rng) {
+        let mf = &mut self.views[vi].modes[m - 1];
+        mf.prior.post_latents(&mf.latents, hyper_rng);
+    }
+
+    /// [`finish_mode_side`] for mode 1 — the distributed workers'
+    /// spelling.
     pub fn finish_col_side(&mut self, vi: usize, hyper_rng: &mut Rng) {
-        let view = &mut self.views[vi];
-        view.col_prior.post_latents(&view.col_latents, hyper_rng);
+        self.finish_mode_side(vi, 1, hyper_rng);
+    }
+
+    /// The RNG side id of mode `m` (m ≥ 1) of view `vi` — mode 0 is side
+    /// 0, mode 1 of view v is side `1 + v` (the historical column side,
+    /// so matrix chains replay exactly), further modes extend the space
+    /// collision-free.
+    fn mode_side_id(&self, vi: usize, m: usize) -> u64 {
+        debug_assert!(m >= 1);
+        1 + ((m - 1) * self.views.len() + vi) as u64
     }
 
     /// Whether view `vi` carries an adaptive noise model (the only kind
@@ -557,8 +795,18 @@ impl TrainSession {
     /// the global one).
     pub fn view_sse_local(&self, vi: usize) -> (f64, usize) {
         let view = &self.views[vi];
-        let acc = access_for(&view.data, true);
-        crate::coordinator::view_sse(&acc, &self.u, &view.col_latents, &self.pool)
+        let op = match &view.data {
+            ViewData::Matrix(mc) => Operand::Matrix {
+                data: access_for(mc, true),
+                other: &view.modes[0].latents,
+            },
+            ViewData::Tensor(t) => Operand::TensorMode(TensorModeOperand {
+                tensor: t,
+                mode: 0,
+                others: (1..t.nmodes()).map(|m| (m, &view.modes[m - 1].latents)).collect(),
+            }),
+        };
+        crate::coordinator::view_sse(&op, &self.u, &self.pool)
     }
 
     /// Resample view `vi`'s adaptive noise precision from the given
@@ -568,19 +816,32 @@ impl TrainSession {
     }
 
     /// Fold the current factors into each tested view's posterior-mean
-    /// aggregator — only past burn-in, as in `step`.
+    /// aggregator — only past burn-in, as in `step`.  Tensor views score
+    /// their cells with the per-sample Hadamard-dot, which for two modes
+    /// is bit-identical to the matrix dot.
     pub fn aggregate_test_predictions(&mut self) {
         if self.iteration < self.cfg.burnin {
             return;
         }
+        let u = &self.u;
         for view in self.views.iter_mut() {
-            if let (Some(test), Some(agg)) = (&view.test, &mut view.aggregator) {
-                let mut preds = predict_cells(&self.u, &view.col_latents, test);
-                for p in preds.iter_mut() {
-                    *p += view.offset;
-                }
-                agg.add_sample(&preds);
+            if view.aggregator.is_none() {
+                continue;
             }
+            let mut preds = if let Some(test) = &view.test {
+                predict_cells(u, &view.modes[0].latents, test)
+            } else if let Some(test) = &view.tensor_test {
+                let mut factors: Vec<&Mat> = Vec::with_capacity(view.nmodes());
+                factors.push(u);
+                factors.extend(view.modes.iter().map(|mf| &mf.latents));
+                crate::model::predict_tensor_cells(&factors, test)
+            } else {
+                continue;
+            };
+            for p in preds.iter_mut() {
+                *p += view.offset;
+            }
+            view.aggregator.as_mut().expect("checked above").add_sample(&preds);
         }
     }
 
@@ -592,9 +853,9 @@ impl TrainSession {
 
     /// Posterior-mean RMSE of view `vi` right now (NaN without test data).
     pub fn view_rmse(&self, vi: usize) -> f64 {
-        match (&self.views[vi].test, &self.views[vi].aggregator) {
-            (Some(test), Some(agg)) if agg.nsamples() > 0 => {
-                crate::model::rmse(&agg.mean(), &test.vals)
+        match (self.views[vi].test_vals(), &self.views[vi].aggregator) {
+            (Some(vals), Some(agg)) if agg.nsamples() > 0 => {
+                crate::model::rmse(&agg.mean(), vals)
             }
             _ => f64::NAN,
         }
@@ -688,7 +949,11 @@ impl TrainSession {
         StoreMeta {
             num_latent: self.cfg.num_latent,
             nrows: self.u.rows(),
-            view_ncols: self.views.iter().map(|v| v.col_latents.rows()).collect(),
+            view_dims: self
+                .views
+                .iter()
+                .map(|v| v.modes.iter().map(|mf| mf.latents.rows()).collect())
+                .collect(),
             offsets: self.views.iter().map(|v| v.offset).collect(),
             save_freq: self.cfg.save_freq,
             link_features: self.row_prior.link_spec().map(|l| l.beta.rows()).unwrap_or(0),
@@ -696,12 +961,17 @@ impl TrainSession {
         }
     }
 
-    /// Capture the current Gibbs state as a posterior [`Snapshot`].
+    /// Capture the current Gibbs state as a posterior [`Snapshot`]:
+    /// one factor matrix per non-shared mode, grouped by view.
     pub fn snapshot_state(&self) -> Snapshot {
         Snapshot {
             iteration: self.iteration,
             u: self.u.clone(),
-            vs: self.views.iter().map(|v| v.col_latents.clone()).collect(),
+            vs: self
+                .views
+                .iter()
+                .flat_map(|v| v.modes.iter().map(|mf| mf.latents.clone()))
+                .collect(),
             alphas: self.views.iter().map(|v| v.noise.alpha()).collect(),
             link: self.row_prior.link_spec().map(|l| LinkState {
                 beta: l.beta.clone(),
@@ -728,18 +998,26 @@ impl TrainSession {
 
     /// Restore one posterior snapshot into this session's live state.
     pub fn restore_snapshot(&mut self, snap: Snapshot) -> anyhow::Result<()> {
-        if snap.u.rows() != self.u.rows() || snap.u.cols() != self.u.cols() {
+        let Snapshot { iteration, u, vs, alphas, link } = snap;
+        if u.rows() != self.u.rows() || u.cols() != self.u.cols() {
             anyhow::bail!("snapshot U shape mismatch");
         }
-        if snap.vs.len() != self.views.len() || snap.alphas.len() != self.views.len() {
-            anyhow::bail!("snapshot view count mismatch");
+        let total_mats: usize = self.views.iter().map(|v| v.modes.len()).sum();
+        if vs.len() != total_mats || alphas.len() != self.views.len() {
+            anyhow::bail!("snapshot view/mode count mismatch");
         }
-        for (v, view) in snap.vs.iter().zip(&self.views) {
-            if v.rows() != view.col_latents.rows() || v.cols() != view.col_latents.cols() {
-                anyhow::bail!("snapshot V shape mismatch");
+        {
+            let mut it = vs.iter();
+            for view in &self.views {
+                for mf in &view.modes {
+                    let v = it.next().expect("length checked");
+                    if v.rows() != mf.latents.rows() || v.cols() != mf.latents.cols() {
+                        anyhow::bail!("snapshot factor shape mismatch");
+                    }
+                }
             }
         }
-        match (snap.link, self.row_prior.link_spec().is_some()) {
+        match (link, self.row_prior.link_spec().is_some()) {
             (Some(link), true) => {
                 let want = {
                     let spec = self.row_prior.link_spec().expect("link presence checked");
@@ -760,18 +1038,23 @@ impl TrainSession {
             (Some(_), false) => anyhow::bail!("snapshot has a link model but the session does not"),
             (None, true) => anyhow::bail!("session expects a link model the snapshot lacks"),
         }
-        self.u = snap.u;
-        for ((view, v), &alpha) in self.views.iter_mut().zip(snap.vs).zip(&snap.alphas) {
-            view.col_latents = v;
+        self.u = u;
+        let mut it = vs.into_iter();
+        for (view, &alpha) in self.views.iter_mut().zip(&alphas) {
+            for mf in view.modes.iter_mut() {
+                mf.latents = it.next().expect("length checked");
+            }
             view.noise.restore_alpha(alpha);
         }
-        if snap.iteration > self.cfg.burnin && self.views.iter().any(|v| v.test.is_some()) {
+        if iteration > self.cfg.burnin
+            && self.views.iter().any(|v| v.test.is_some() || v.tensor_test.is_some())
+        {
             crate::log_warn!(
                 "resuming at iteration {} (> burn-in): test metrics will average only post-resume samples",
-                snap.iteration
+                iteration
             );
         }
-        self.iteration = snap.iteration;
+        self.iteration = iteration;
         Ok(())
     }
 
@@ -852,14 +1135,14 @@ mod tests {
             let mut hyper = b.hyper_rng();
             let n = b.u.rows();
             b.sample_row_side(0..n, &mut hyper);
-            let m = b.views[0].col_latents.rows();
+            let m = b.views[0].col_latents().rows();
             b.sample_col_side(0, 0..m, &mut hyper);
             b.aggregate_test_predictions();
             b.advance_iteration();
         }
         assert_eq!(a.iteration(), b.iteration());
         assert_eq!(a.u.max_abs_diff(&b.u), 0.0);
-        assert_eq!(a.views[0].col_latents.max_abs_diff(&b.views[0].col_latents), 0.0);
+        assert_eq!(a.views[0].col_latents().max_abs_diff(b.views[0].col_latents()), 0.0);
     }
 
     #[test]
@@ -902,7 +1185,7 @@ mod tests {
         // latents stay finite through SnS updates
         assert!(s.u.data().iter().all(|x| x.is_finite()));
         for v in &s.views {
-            assert!(v.col_latents.data().iter().all(|x| x.is_finite()));
+            assert!(v.col_latents().data().iter().all(|x| x.is_finite()));
         }
     }
 
@@ -1026,7 +1309,7 @@ mod tests {
         }
         assert_eq!(s2.iteration(), 8);
         assert_eq!(s2.u.max_abs_diff(&s1.u), 0.0, "resumed run must match uninterrupted");
-        assert_eq!(s2.views[0].col_latents.max_abs_diff(&s1.views[0].col_latents), 0.0);
+        assert_eq!(s2.views[0].col_latents().max_abs_diff(s1.views[0].col_latents()), 0.0);
         assert_eq!(s2.views[0].noise.alpha(), s1.views[0].noise.alpha());
     }
 

@@ -1,9 +1,10 @@
-//! Sparse / dense matrix I/O: MatrixMarket (`.mtx`) text format and a
-//! compact little-endian binary format (`.sbm`, "smurff binary matrix")
-//! used by checkpoints and the GraphChi-like out-of-core baseline's
-//! shard files.
+//! Sparse / dense I/O: MatrixMarket (`.mtx`) and FROSTT-style `.tns`
+//! text formats, plus compact little-endian binary formats — `.sbm`
+//! ("smurff binary matrix", used by checkpoints and the GraphChi-like
+//! out-of-core baseline's shard files), `.dbm` (dense) and `.stn`
+//! ("smurff tensor", the N-mode analogue of `.sbm`).
 
-use super::SparseMatrix;
+use super::{SparseMatrix, SparseTensor};
 use crate::linalg::Mat;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
@@ -66,8 +67,160 @@ pub fn read_matrix_market(path: &Path) -> anyhow::Result<SparseMatrix> {
     Ok(SparseMatrix::from_triplets(nr, nc, trips))
 }
 
+/// Write a sparse tensor in `.tns` text format (FROSTT convention:
+/// one `i1 … iN value` line per entry, 1-based indices), preceded by a
+/// `%` dims comment so the reader recovers trailing empty fibers.
+pub fn write_tns(t: &SparseTensor, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let dims: Vec<String> = t.dims().iter().map(|d| d.to_string()).collect();
+    writeln!(w, "% dims: {}", dims.join(" "))?;
+    for (e, v) in t.entry_ids() {
+        for m in 0..t.nmodes() {
+            write!(w, "{} ", t.coord(m, e) + 1)?;
+        }
+        writeln!(w, "{v}")?;
+    }
+    Ok(())
+}
+
+/// Read a `.tns` file.  A `% dims: …` comment fixes the shape; without
+/// one the dims are inferred as the per-mode coordinate maxima.
+pub fn read_tns(path: &Path) -> anyhow::Result<SparseTensor> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open {}: {e}", path.display()))?;
+    let mut dims: Option<Vec<usize>> = None;
+    let mut nmodes: Option<usize> = None;
+    let mut flat: Vec<u32> = Vec::new();
+    let mut vals: Vec<f64> = Vec::new();
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix('%') {
+            if let Some(d) = rest.trim().strip_prefix("dims:") {
+                let parsed: Vec<usize> = d
+                    .split_whitespace()
+                    .map(|s| s.parse())
+                    .collect::<Result<_, _>>()
+                    .map_err(|e| anyhow::anyhow!("bad dims comment: {e}"))?;
+                if parsed.len() < 2 {
+                    anyhow::bail!("dims comment must declare at least 2 modes");
+                }
+                dims = Some(parsed);
+            }
+            continue;
+        }
+        let fields: Vec<&str> = t.split_whitespace().collect();
+        if fields.len() < 3 {
+            anyhow::bail!("tns entry needs at least 2 coords + value: '{t}'");
+        }
+        let n = fields.len() - 1;
+        match nmodes {
+            None => nmodes = Some(n),
+            Some(prev) if prev != n => {
+                anyhow::bail!("inconsistent mode count: {prev} then {n}")
+            }
+            _ => {}
+        }
+        for c in &fields[..n] {
+            let c: u64 = c.parse().map_err(|e| anyhow::anyhow!("bad coordinate '{c}': {e}"))?;
+            if c == 0 {
+                anyhow::bail!("tns coordinates are 1-based, got 0");
+            }
+            flat.push((c - 1) as u32);
+        }
+        vals.push(
+            fields[n]
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad value '{}': {e}", fields[n]))?,
+        );
+    }
+    let nmodes = match (nmodes, &dims) {
+        (Some(n), _) => n,
+        (None, Some(d)) => d.len(),
+        (None, None) => anyhow::bail!("empty tns file and no dims comment"),
+    };
+    let dims = match dims {
+        Some(d) => {
+            if d.len() != nmodes {
+                anyhow::bail!("dims comment has {} modes, entries have {nmodes}", d.len());
+            }
+            d
+        }
+        None => (0..nmodes)
+            .map(|m| {
+                vals.iter()
+                    .enumerate()
+                    .map(|(e, _)| flat[e * nmodes + m] as usize + 1)
+                    .max()
+                    .unwrap_or(0)
+            })
+            .collect(),
+    };
+    for (e, _) in vals.iter().enumerate() {
+        for (m, &d) in dims.iter().enumerate() {
+            if flat[e * nmodes + m] as usize >= d {
+                anyhow::bail!("entry {e} out of declared dims along mode {m}");
+            }
+        }
+    }
+    Ok(SparseTensor::from_flat(dims, &flat, &vals))
+}
+
+/// Write the compact binary tensor format: magic, nmodes u64, dims
+/// u64*, nnz u64, then per entry (u32 coord)×nmodes + f64 value.
+pub fn write_stn(t: &SparseTensor, path: &Path) -> anyhow::Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    w.write_all(STN_MAGIC)?;
+    w.write_all(&(t.nmodes() as u64).to_le_bytes())?;
+    for &d in t.dims() {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    w.write_all(&(t.nnz() as u64).to_le_bytes())?;
+    for (e, v) in t.entry_ids() {
+        for m in 0..t.nmodes() {
+            w.write_all(&t.coord(m, e).to_le_bytes())?;
+        }
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_stn(path: &Path) -> anyhow::Result<SparseTensor> {
+    let f = std::fs::File::open(path)?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != STN_MAGIC {
+        anyhow::bail!("{} is not an STN file", path.display());
+    }
+    let nmodes = read_u64(&mut r)? as usize;
+    if !(2..=16).contains(&nmodes) {
+        anyhow::bail!("implausible mode count {nmodes}");
+    }
+    let mut dims = Vec::with_capacity(nmodes);
+    for _ in 0..nmodes {
+        dims.push(read_u64(&mut r)? as usize);
+    }
+    let nnz = read_u64(&mut r)? as usize;
+    let mut flat = Vec::with_capacity(nnz * nmodes);
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for _ in 0..nmodes {
+            flat.push(read_u32(&mut r)?);
+        }
+        vals.push(read_f64(&mut r)?);
+    }
+    Ok(SparseTensor::from_flat(dims, &flat, &vals))
+}
+
 const SBM_MAGIC: &[u8; 4] = b"SBM1";
 const DBM_MAGIC: &[u8; 4] = b"DBM1";
+const STN_MAGIC: &[u8; 4] = b"STN1";
 
 /// Write the compact binary sparse format:
 /// magic, nrows u64, ncols u64, nnz u64, then (u32 row, u32 col, f64 val)*.
@@ -254,6 +407,78 @@ mod tests {
         let p = tmpdir().join("x.sbm");
         std::fs::write(&p, b"NOPE").unwrap();
         assert!(read_sbm(&p).is_err());
+    }
+
+    fn sample_tensor() -> SparseTensor {
+        SparseTensor::from_entries(
+            vec![4, 3, 5],
+            vec![
+                (vec![0, 1, 4], 2.5),
+                (vec![3, 2, 0], -1.25),
+                (vec![1, 0, 2], 1e-8),
+                (vec![2, 2, 3], 1e10),
+            ],
+        )
+    }
+
+    #[test]
+    fn tns_round_trip_preserves_dims_and_values() {
+        let p = tmpdir().join("t.tns");
+        let t = sample_tensor();
+        write_tns(&t, &p).unwrap();
+        let t2 = read_tns(&p).unwrap();
+        assert_eq!(t2.dims(), t.dims());
+        assert_eq!(t2.nnz(), t.nnz());
+        for (e, v) in t.entry_ids() {
+            assert_eq!(t2.val(e), v);
+            for m in 0..t.nmodes() {
+                assert_eq!(t2.coord(m, e), t.coord(m, e));
+            }
+        }
+    }
+
+    #[test]
+    fn tns_infers_dims_without_comment() {
+        let p = tmpdir().join("nodims.tns");
+        std::fs::write(&p, "1 2 3 1.5\n2 1 1 -0.5\n").unwrap();
+        let t = read_tns(&p).unwrap();
+        assert_eq!(t.dims(), &[2, 2, 3]);
+        assert_eq!(t.get(&[0, 1, 2]), Some(1.5));
+    }
+
+    #[test]
+    fn tns_rejects_bad_input() {
+        let p = tmpdir().join("bad.tns");
+        std::fs::write(&p, "0 1 1.0\n").unwrap();
+        assert!(read_tns(&p).is_err(), "0 coordinate");
+        std::fs::write(&p, "1 1 1.0\n1 1 1 1.0\n").unwrap();
+        assert!(read_tns(&p).is_err(), "ragged modes");
+        std::fs::write(&p, "% dims: 2 2\n3 1 1.0\n").unwrap();
+        assert!(read_tns(&p).is_err(), "beyond declared dims");
+        std::fs::write(&p, "% dims: 5\n").unwrap();
+        assert!(read_tns(&p).is_err(), "single-mode dims comment");
+    }
+
+    #[test]
+    fn stn_round_trip_is_exact() {
+        let p = tmpdir().join("t.stn");
+        let t = sample_tensor();
+        write_stn(&t, &p).unwrap();
+        let t2 = read_stn(&p).unwrap();
+        assert_eq!(t2.dims(), t.dims());
+        assert_eq!(t2.vals(), t.vals());
+        for (e, _) in t.entry_ids() {
+            for m in 0..t.nmodes() {
+                assert_eq!(t2.coord(m, e), t.coord(m, e));
+            }
+        }
+    }
+
+    #[test]
+    fn stn_rejects_wrong_magic() {
+        let p = tmpdir().join("x.stn");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(read_stn(&p).is_err());
     }
 
     #[test]

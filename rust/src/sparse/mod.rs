@@ -1,12 +1,17 @@
-//! Sparse-matrix substrate: COO / CSR / CSC with conversions, plus
-//! MatrixMarket and a compact binary format in [`io`].
+//! Sparse substrate: COO / CSR / CSC matrices with conversions, the
+//! N-mode [`SparseTensor`] generalisation, plus MatrixMarket / `.tns`
+//! text and compact binary formats in [`io`].
 //!
-//! The Gibbs sweep needs *both* orientations of the rating matrix — CSR
-//! to iterate a row's ratings when updating U, CSC for a column's when
-//! updating V — so [`SparseMatrix`] keeps the triplets plus both
-//! compressed forms, built once.
+//! The Gibbs sweep needs *every* orientation of the data — CSR to
+//! iterate a row's ratings when updating U, CSC for a column's when
+//! updating V, and in general one compressed fiber index per tensor
+//! mode — so [`SparseMatrix`] keeps both compressed forms and
+//! [`SparseTensor`] keeps one per mode, built once.
 
 pub mod io;
+pub mod tensor;
+
+pub use tensor::SparseTensor;
 
 /// A (row, col, value) triplet matrix with precomputed CSR and CSC views.
 #[derive(Debug, Clone)]
@@ -38,7 +43,9 @@ impl SparseMatrix {
                 "triplet ({r},{c}) out of {nrows}x{ncols}"
             );
         }
-        trips.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        // stable sort: duplicate cells merge in input order, so the
+        // summation order is reproducible and matches SparseTensor's
+        trips.sort_by_key(|&(r, c, _)| (r, c));
         // merge duplicates
         let mut merged: Vec<(u32, u32, f64)> = Vec::with_capacity(trips.len());
         for (r, c, v) in trips {

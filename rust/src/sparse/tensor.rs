@@ -1,0 +1,337 @@
+//! N-mode sparse tensor substrate: COO storage in canonical
+//! (lexicographic, mode-0-major) order plus a *per-mode compressed
+//! index* — the N-mode generalisation of keeping both CSR and CSC for a
+//! matrix.  The Gibbs sweep over mode m iterates the fiber of every
+//! index i of that mode; `mode_fiber(m, i)` returns the entry ids of
+//! exactly those observations, in the order the 2-mode CSR/CSC views
+//! would visit them (this is what makes the 2-mode tensor path
+//! bit-identical to the [`super::SparseMatrix`] path).
+
+use super::SparseMatrix;
+
+/// One compressed fiber index: for each index i of the mode,
+/// `ids[ptr[i]..ptr[i+1]]` are the entry ids whose coordinate along the
+/// mode equals i, ordered lexicographically by the remaining coordinates.
+#[derive(Debug, Clone)]
+struct ModeIndex {
+    ptr: Vec<usize>,
+    ids: Vec<u32>,
+}
+
+/// An N-mode sparse tensor (N ≥ 2) with duplicate entries summed and a
+/// compressed fiber index per mode.
+#[derive(Debug, Clone)]
+pub struct SparseTensor {
+    dims: Vec<usize>,
+    /// coords[m][e] — coordinate of entry e along mode m, canonical order
+    coords: Vec<Vec<u32>>,
+    vals: Vec<f64>,
+    modes: Vec<ModeIndex>,
+}
+
+impl SparseTensor {
+    /// Build from entry-major flat coordinates: entry e occupies
+    /// `flat[e*nmodes .. (e+1)*nmodes]`.  Duplicate coordinate tuples are
+    /// summed (MatrixMarket semantics).  Panics on out-of-range
+    /// coordinates, fewer than 2 modes, or a ragged `flat` buffer.
+    pub fn from_flat(dims: Vec<usize>, flat: &[u32], vals: &[f64]) -> SparseTensor {
+        let nmodes = dims.len();
+        assert!(nmodes >= 2, "a tensor needs at least 2 modes, got {nmodes}");
+        assert_eq!(flat.len(), vals.len() * nmodes, "flat coords/vals length mismatch");
+        let nnz_in = vals.len();
+        assert!(nnz_in <= u32::MAX as usize, "entry count exceeds u32 index space");
+        for e in 0..nnz_in {
+            for (m, &d) in dims.iter().enumerate() {
+                let c = flat[e * nmodes + m] as usize;
+                assert!(c < d, "entry {e}: coordinate {c} out of range for mode {m} (dim {d})");
+            }
+        }
+        // canonical order: lexicographic over the coordinate tuple.
+        // Stable sort: duplicate tuples keep input order so their sums
+        // accumulate exactly like SparseMatrix::from_triplets' merge.
+        let mut order: Vec<u32> = (0..nnz_in as u32).collect();
+        order.sort_by(|&a, &b| {
+            let (a, b) = (a as usize * nmodes, b as usize * nmodes);
+            flat[a..a + nmodes].cmp(&flat[b..b + nmodes])
+        });
+        // merge duplicates in canonical order (sums accumulate in the
+        // same sequence SparseMatrix::from_triplets uses)
+        let mut coords: Vec<Vec<u32>> = vec![Vec::with_capacity(nnz_in); nmodes];
+        let mut out_vals: Vec<f64> = Vec::with_capacity(nnz_in);
+        for &e in &order {
+            let base = e as usize * nmodes;
+            let dup = !out_vals.is_empty()
+                && (0..nmodes).all(|m| coords[m][out_vals.len() - 1] == flat[base + m]);
+            if dup {
+                *out_vals.last_mut().unwrap() += vals[e as usize];
+            } else {
+                for (m, c) in coords.iter_mut().enumerate() {
+                    c.push(flat[base + m]);
+                }
+                out_vals.push(vals[e as usize]);
+            }
+        }
+        let modes = (0..nmodes)
+            .map(|m| ModeIndex::build(dims[m], &coords[m]))
+            .collect();
+        SparseTensor { dims, coords, vals: out_vals, modes }
+    }
+
+    /// Build from per-entry coordinate tuples.
+    pub fn from_entries(
+        dims: Vec<usize>,
+        entries: impl IntoIterator<Item = (Vec<u32>, f64)>,
+    ) -> SparseTensor {
+        let nmodes = dims.len();
+        let mut flat = Vec::new();
+        let mut vals = Vec::new();
+        for (c, v) in entries {
+            assert_eq!(c.len(), nmodes, "entry has {} coords, tensor has {nmodes} modes", c.len());
+            flat.extend_from_slice(&c);
+            vals.push(v);
+        }
+        SparseTensor::from_flat(dims, &flat, &vals)
+    }
+
+    /// The 2-mode tensor carrying exactly a sparse matrix's entries.
+    pub fn from_matrix(m: &SparseMatrix) -> SparseTensor {
+        let mut flat = Vec::with_capacity(m.nnz() * 2);
+        let mut vals = Vec::with_capacity(m.nnz());
+        for (r, c, v) in m.triplets() {
+            flat.push(r);
+            flat.push(c);
+            vals.push(v);
+        }
+        SparseTensor::from_flat(vec![m.nrows(), m.ncols()], &flat, &vals)
+    }
+
+    /// Collapse a 2-mode tensor back into a sparse matrix.
+    pub fn to_matrix(&self) -> SparseMatrix {
+        assert_eq!(self.nmodes(), 2, "to_matrix needs a 2-mode tensor");
+        SparseMatrix::from_triplets(
+            self.dims[0],
+            self.dims[1],
+            (0..self.nnz()).map(|e| (self.coords[0][e], self.coords[1][e], self.vals[e])),
+        )
+    }
+
+    pub fn nmodes(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / self.dims.iter().map(|&d| d as f64).product::<f64>()
+    }
+
+    /// Coordinate of entry `e` along mode `m` (canonical entry order).
+    #[inline]
+    pub fn coord(&self, m: usize, e: usize) -> u32 {
+        self.coords[m][e]
+    }
+
+    /// Value of entry `e` (canonical entry order).
+    #[inline]
+    pub fn val(&self, e: usize) -> f64 {
+        self.vals[e]
+    }
+
+    pub fn vals(&self) -> &[f64] {
+        &self.vals
+    }
+
+    /// Entry ids of the fiber `coord_m == i`, ordered lexicographically
+    /// by the remaining coordinates (2-mode: exactly CSR/CSC order).
+    #[inline]
+    pub fn mode_fiber(&self, m: usize, i: usize) -> &[u32] {
+        let idx = &self.modes[m];
+        &idx.ids[idx.ptr[i]..idx.ptr[i + 1]]
+    }
+
+    /// Number of observations in the fiber `coord_m == i`.
+    #[inline]
+    pub fn mode_nnz(&self, m: usize, i: usize) -> usize {
+        self.modes[m].ptr[i + 1] - self.modes[m].ptr[i]
+    }
+
+    /// Mean of the stored values (0 when empty).  Summation order equals
+    /// [`SparseMatrix::mean_value`]'s for a 2-mode tensor.
+    pub fn mean_value(&self) -> f64 {
+        crate::util::mean(&self.vals)
+    }
+
+    /// Copy with the global mean subtracted from every value, plus that
+    /// mean — the tensor side of session mean-centering.  Structure
+    /// (coords + mode indexes) is shared; only the values change.
+    pub fn centered(&self) -> (SparseTensor, f64) {
+        let mean = self.mean_value();
+        let mut t = self.clone();
+        for v in t.vals.iter_mut() {
+            *v -= mean;
+        }
+        (t, mean)
+    }
+
+    /// Look up one cell (None when structurally zero / unknown).
+    pub fn get(&self, coords: &[u32]) -> Option<f64> {
+        assert_eq!(coords.len(), self.nmodes());
+        self.mode_fiber(0, coords[0] as usize)
+            .iter()
+            .find(|&&e| (1..self.nmodes()).all(|m| self.coords[m][e as usize] == coords[m]))
+            .map(|&e| self.vals[e as usize])
+    }
+
+    /// Iterate all entries in canonical order as (entry id, value).
+    pub fn entry_ids(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.vals.iter().enumerate().map(|(e, &v)| (e, v))
+    }
+}
+
+impl ModeIndex {
+    /// Stable counting sort of entry ids by their coordinate along one
+    /// mode: canonical order within each fiber is preserved, which for a
+    /// 2-mode tensor reproduces CSR (mode 0) / CSC (mode 1) ordering.
+    fn build(dim: usize, coords: &[u32]) -> ModeIndex {
+        let mut ptr = vec![0usize; dim + 1];
+        for &c in coords {
+            ptr[c as usize + 1] += 1;
+        }
+        for i in 0..dim {
+            ptr[i + 1] += ptr[i];
+        }
+        let mut ids = vec![0u32; coords.len()];
+        let mut next = ptr.clone();
+        for (e, &c) in coords.iter().enumerate() {
+            ids[next[c as usize]] = e as u32;
+            next[c as usize] += 1;
+        }
+        ModeIndex { ptr, ids }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample3() -> SparseTensor {
+        SparseTensor::from_entries(
+            vec![3, 4, 2],
+            vec![
+                (vec![2, 3, 1], -1.0),
+                (vec![0, 1, 0], 2.0),
+                (vec![0, 0, 1], 1.0),
+                (vec![1, 2, 0], 5.0),
+                (vec![2, 0, 1], 3.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn canonical_order_and_fibers() {
+        let t = sample3();
+        assert_eq!(t.nnz(), 5);
+        assert_eq!(t.dims(), &[3, 4, 2]);
+        // canonical order is lexicographic
+        let first: Vec<u32> = (0..3).map(|m| t.coord(m, 0)).collect();
+        assert_eq!(first, vec![0, 0, 1]);
+        // mode-0 fiber of index 2 holds two entries, ordered by (j, k)
+        let fib = t.mode_fiber(0, 2);
+        assert_eq!(fib.len(), 2);
+        assert_eq!(t.coord(1, fib[0] as usize), 0);
+        assert_eq!(t.coord(1, fib[1] as usize), 3);
+        // per-mode fiber nnz totals all equal the COO total
+        for m in 0..3 {
+            let total: usize = (0..t.dims()[m]).map(|i| t.mode_nnz(m, i)).sum();
+            assert_eq!(total, t.nnz(), "mode {m}");
+        }
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let t = SparseTensor::from_entries(
+            vec![2, 2, 2],
+            vec![(vec![1, 0, 1], 1.0), (vec![1, 0, 1], 2.5), (vec![0, 0, 0], 1.0)],
+        );
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.get(&[1, 0, 1]), Some(3.5));
+        assert_eq!(t.get(&[0, 1, 0]), None);
+    }
+
+    #[test]
+    fn matrix_round_trip_preserves_everything() {
+        let m = SparseMatrix::from_triplets(
+            3,
+            4,
+            vec![(0, 1, 2.0), (2, 3, -1.0), (0, 0, 1.0), (1, 2, 5.0), (2, 0, 3.0)],
+        );
+        let t = SparseTensor::from_matrix(&m);
+        assert_eq!(t.nmodes(), 2);
+        assert_eq!(t.mean_value(), m.mean_value());
+        let back = t.to_matrix();
+        assert_eq!(
+            m.triplets().collect::<Vec<_>>(),
+            back.triplets().collect::<Vec<_>>()
+        );
+        // mode fibers replay CSR / CSC exactly
+        for i in 0..m.nrows() {
+            let (cols, vals) = m.row(i);
+            let fib = t.mode_fiber(0, i);
+            assert_eq!(fib.len(), cols.len());
+            for (t_e, (&c, &v)) in fib.iter().zip(cols.iter().zip(vals)) {
+                assert_eq!(t.coord(1, *t_e as usize), c);
+                assert_eq!(t.val(*t_e as usize), v);
+            }
+        }
+        for j in 0..m.ncols() {
+            let (rows, vals) = m.col(j);
+            let fib = t.mode_fiber(1, j);
+            assert_eq!(fib.len(), rows.len());
+            for (t_e, (&r, &v)) in fib.iter().zip(rows.iter().zip(vals)) {
+                assert_eq!(t.coord(0, *t_e as usize), r);
+                assert_eq!(t.val(*t_e as usize), v);
+            }
+        }
+    }
+
+    #[test]
+    fn centered_matches_matrix_centering_bitwise() {
+        let m = SparseMatrix::from_triplets(
+            3,
+            3,
+            vec![(0, 0, 1.25), (1, 2, -3.5), (2, 1, 0.75), (0, 2, 2.0)],
+        );
+        let (cm, mean_m) = m.centered();
+        let (ct, mean_t) = SparseTensor::from_matrix(&m).centered();
+        assert_eq!(mean_m, mean_t);
+        for (e, (_, c, v)) in cm.triplets().enumerate() {
+            assert_eq!(ct.val(e), v, "entry {e} (col {c})");
+        }
+    }
+
+    #[test]
+    fn density_and_empty_fibers() {
+        let t = sample3();
+        assert!((t.density() - 5.0 / 24.0).abs() < 1e-12);
+        assert_eq!(t.mode_nnz(1, 1), 1);
+        assert_eq!(t.mode_fiber(2, 0).len(), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_coordinate_panics() {
+        SparseTensor::from_entries(vec![2, 2], vec![(vec![2, 0], 1.0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn one_mode_tensor_rejected() {
+        SparseTensor::from_flat(vec![4], &[0, 1], &[1.0, 2.0]);
+    }
+}

@@ -2,8 +2,10 @@
 //! SMURFF's two-phase train → predict workflow, Vander Aa et al. 2019 §3).
 //!
 //! A [`ModelStore`] is a directory holding one posterior *sample* per
-//! subdirectory — the U/V factor matrices drawn at a Gibbs iteration,
-//! the per-view noise precision, and (for Macau row priors) the link
+//! subdirectory — the per-mode factor matrices drawn at a Gibbs
+//! iteration (U plus one matrix per non-shared mode of every view: a
+//! matrix view's V, or the N-1 further factors of a tensor view), the
+//! per-view noise precision, and (for Macau row priors) the link
 //! matrix β plus the latent mean μ needed for out-of-matrix prediction —
 //! indexed by a human-readable `manifest.json` written with
 //! [`crate::util::json`]:
@@ -13,8 +15,8 @@
 //!   manifest.json            format, version, dims, offsets, snapshot index
 //!   sample_00021/
 //!     meta.json              iteration, per-view noise α
-//!     u.dbm                  row factors  (N × K, binary dense)
-//!     v0.dbm … v<i>.dbm      column factors per view
+//!     u.dbm                  mode-0 factors  (N × K, binary dense)
+//!     v0.dbm … v<i>.dbm      further-mode factors, grouped by view
 //!     link_beta.dbm          Macau β (F × K)          [optional]
 //!     link_mu.dbm            Macau μ (1 × K)          [optional]
 //! ```
@@ -35,17 +37,22 @@ use std::path::{Path, PathBuf};
 /// other JSON-bearing directory.
 pub const STORE_FORMAT: &str = "smurff-model-store";
 /// Manifest schema version; bump on incompatible layout changes.
-pub const STORE_VERSION: usize = 1;
+/// Version 2 replaced the per-view column counts (`view_ncols`) with
+/// per-view mode dimension lists (`view_dims`) for N-mode tensor views;
+/// version-1 stores still load (every view maps to a single-mode list,
+/// and the flat factor-file numbering is unchanged for them).
+pub const STORE_VERSION: usize = 2;
 
 /// Immutable description of the model a store holds (shapes + the
 /// prediction constants that do not vary per sample).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StoreMeta {
     pub num_latent: usize,
-    /// shared row dimension of all views
+    /// shared mode-0 dimension of all views
     pub nrows: usize,
-    /// per-view column counts
-    pub view_ncols: Vec<usize>,
+    /// per-view factor dimensions for modes 1.. — a matrix view has one
+    /// entry (its column count), an N-mode tensor view has N-1
+    pub view_dims: Vec<Vec<usize>>,
     /// per-view global-mean offsets (removed at training, added back at
     /// prediction)
     pub offsets: Vec<f64>,
@@ -60,13 +67,30 @@ pub struct StoreMeta {
 }
 
 impl StoreMeta {
+    pub fn nviews(&self) -> usize {
+        self.view_dims.len()
+    }
+
+    /// Total factor matrices per snapshot (one per non-shared mode).
+    pub fn total_mats(&self) -> usize {
+        self.view_dims.iter().map(|d| d.len()).sum()
+    }
+
+    /// Flat index of view `v`'s first factor matrix in [`Snapshot::vs`].
+    pub fn vs_offset(&self, v: usize) -> usize {
+        self.view_dims[..v].iter().map(|d| d.len()).sum()
+    }
+
     fn to_json(&self, snapshots: &[SnapshotInfo]) -> JsonValue {
         let mut pairs = vec![
             ("format", JsonValue::str(STORE_FORMAT)),
             ("version", JsonValue::num(STORE_VERSION as f64)),
             ("num_latent", JsonValue::num(self.num_latent as f64)),
             ("nrows", JsonValue::num(self.nrows as f64)),
-            ("view_ncols", JsonValue::arr_usize(&self.view_ncols)),
+            (
+                "view_dims",
+                JsonValue::Array(self.view_dims.iter().map(|d| JsonValue::arr_usize(d)).collect()),
+            ),
             ("offsets", JsonValue::arr_f64(&self.offsets)),
             ("save_freq", JsonValue::num(self.save_freq as f64)),
             ("link_features", JsonValue::num(self.link_features as f64)),
@@ -110,9 +134,10 @@ pub struct LinkState {
 pub struct Snapshot {
     /// completed Gibbs iterations when this sample was drawn
     pub iteration: usize,
-    /// row factors, N × K
+    /// shared mode-0 factors, N × K
     pub u: Mat,
-    /// per-view column factors, ncols_v × K
+    /// one factor matrix per non-shared mode, grouped by view in mode
+    /// order (a matrix view contributes exactly one — its V)
     pub vs: Vec<Mat>,
     /// per-view likelihood precision α at snapshot time
     pub alphas: Vec<f64>,
@@ -143,8 +168,11 @@ impl ModelStore {
         if dir.join("manifest.json").exists() {
             anyhow::bail!("{} already contains a model store", dir.display());
         }
-        if meta.view_ncols.len() != meta.offsets.len() {
-            anyhow::bail!("store meta: view_ncols and offsets length mismatch");
+        if meta.view_dims.len() != meta.offsets.len() {
+            anyhow::bail!("store meta: view_dims and offsets length mismatch");
+        }
+        if meta.view_dims.iter().any(|d| d.is_empty()) {
+            anyhow::bail!("store meta: every view needs at least one non-shared mode");
         }
         let store = ModelStore { dir: dir.to_path_buf(), meta, snapshots: Vec::new() };
         store.write_manifest()?;
@@ -163,21 +191,47 @@ impl ModelStore {
             anyhow::bail!("{} is not a model store (format '{format}')", dir.display());
         }
         let version = m.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
-        if version != STORE_VERSION {
-            anyhow::bail!("unsupported store version {version} (expected {STORE_VERSION})");
+        if version == 0 || version > STORE_VERSION {
+            anyhow::bail!("unsupported store version {version} (expected <= {STORE_VERSION})");
         }
         let req_usize = |key: &str| {
             m.get(key)
                 .and_then(|v| v.as_usize())
                 .ok_or_else(|| anyhow::anyhow!("store manifest missing '{key}'"))
         };
-        let view_ncols: Vec<usize> = m
-            .get("view_ncols")
-            .and_then(|v| v.as_array())
-            .ok_or_else(|| anyhow::anyhow!("store manifest missing 'view_ncols'"))?
-            .iter()
-            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad view_ncols entry")))
-            .collect::<anyhow::Result<_>>()?;
+        // version 1 recorded one column count per (2-mode) view; map it
+        // onto the per-view mode-dims lists of version 2 — the flat
+        // factor-file numbering is identical for such stores
+        let view_dims: Vec<Vec<usize>> = if version == 1 {
+            m.get("view_ncols")
+                .and_then(|v| v.as_array())
+                .ok_or_else(|| anyhow::anyhow!("store manifest missing 'view_ncols'"))?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .map(|n| vec![n])
+                        .ok_or_else(|| anyhow::anyhow!("bad view_ncols entry"))
+                })
+                .collect::<anyhow::Result<_>>()?
+        } else {
+            m.get("view_dims")
+                .and_then(|v| v.as_array())
+                .ok_or_else(|| anyhow::anyhow!("store manifest missing 'view_dims'"))?
+                .iter()
+                .map(|view| {
+                    let dims = view
+                        .as_array()
+                        .ok_or_else(|| anyhow::anyhow!("bad view_dims entry"))?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad view_dims dim")))
+                        .collect::<anyhow::Result<Vec<usize>>>()?;
+                    if dims.is_empty() {
+                        anyhow::bail!("empty view_dims entry");
+                    }
+                    Ok(dims)
+                })
+                .collect::<anyhow::Result<_>>()?
+        };
         let offsets: Vec<f64> = m
             .get("offsets")
             .and_then(|v| v.as_array())
@@ -185,8 +239,8 @@ impl ModelStore {
             .iter()
             .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("bad offsets entry")))
             .collect::<anyhow::Result<_>>()?;
-        if view_ncols.len() != offsets.len() {
-            anyhow::bail!("store manifest: view_ncols and offsets length mismatch");
+        if view_dims.len() != offsets.len() {
+            anyhow::bail!("store manifest: view_dims and offsets length mismatch");
         }
         let mut snapshots = Vec::new();
         for s in m
@@ -210,7 +264,7 @@ impl ModelStore {
             meta: StoreMeta {
                 num_latent: req_usize("num_latent")?,
                 nrows: req_usize("nrows")?,
-                view_ncols,
+                view_dims,
                 offsets,
                 save_freq: req_usize("save_freq")?,
                 link_features: req_usize("link_features")?,
@@ -278,19 +332,20 @@ impl ModelStore {
                 self.meta.nrows
             );
         }
-        if snap.vs.len() != self.meta.view_ncols.len() {
+        if snap.vs.len() != self.meta.total_mats() {
             anyhow::bail!(
-                "snapshot has {} views, store expects {}",
+                "snapshot has {} factor matrices, store expects {}",
                 snap.vs.len(),
-                self.meta.view_ncols.len()
+                self.meta.total_mats()
             );
         }
-        for (i, (v, &nc)) in snap.vs.iter().zip(&self.meta.view_ncols).enumerate() {
+        let flat_dims = self.meta.view_dims.iter().flatten();
+        for (i, (v, &nc)) in snap.vs.iter().zip(flat_dims).enumerate() {
             if v.rows() != nc || v.cols() != k {
                 anyhow::bail!("snapshot V{i} is {}x{}, store expects {nc}x{k}", v.rows(), v.cols());
             }
         }
-        if snap.alphas.len() != snap.vs.len() {
+        if snap.alphas.len() != self.meta.nviews() {
             anyhow::bail!("snapshot alphas/views length mismatch");
         }
         match (&snap.link, self.meta.link_features) {
@@ -347,8 +402,8 @@ impl ModelStore {
             .map(|v| v.as_f64().ok_or_else(|| anyhow::anyhow!("bad alpha entry")))
             .collect::<anyhow::Result<_>>()?;
         let u = read_dbm(&sdir.join("u.dbm"))?;
-        let mut vs = Vec::with_capacity(self.meta.view_ncols.len());
-        for i in 0..self.meta.view_ncols.len() {
+        let mut vs = Vec::with_capacity(self.meta.total_mats());
+        for i in 0..self.meta.total_mats() {
             vs.push(read_dbm(&sdir.join(format!("v{i}.dbm")))?);
         }
         let link = if self.meta.link_features > 0 {
@@ -393,7 +448,7 @@ mod tests {
         StoreMeta {
             num_latent: k,
             nrows,
-            view_ncols: ncols.to_vec(),
+            view_dims: ncols.iter().map(|&n| vec![n]).collect(),
             offsets: vec![0.25; ncols.len()],
             save_freq: 1,
             link_features,
@@ -489,6 +544,90 @@ mod tests {
         assert!(store.save_snapshot(&bad).is_err());
         // and the store stayed empty through all rejections
         assert!(ModelStore::open(&dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn tensor_store_round_trips_multi_mode_views() {
+        // one 2-mode view + one 4-mode tensor view: 1 + 3 factor mats
+        let dir = scratch("tensor");
+        let mut rng = Rng::new(85);
+        let meta = StoreMeta {
+            num_latent: 3,
+            nrows: 6,
+            view_dims: vec![vec![5], vec![4, 3, 2]],
+            offsets: vec![0.0, 1.5],
+            save_freq: 1,
+            link_features: 0,
+            producer: None,
+        };
+        assert_eq!(meta.total_mats(), 4);
+        assert_eq!(meta.vs_offset(0), 0);
+        assert_eq!(meta.vs_offset(1), 1);
+        let mut store = ModelStore::create(&dir, meta).unwrap();
+        let mk = |rng: &mut Rng, r: usize| {
+            let mut m = Mat::zeros(r, 3);
+            rng.fill_normal(m.data_mut());
+            m
+        };
+        let snap = Snapshot {
+            iteration: 2,
+            u: mk(&mut rng, 6),
+            vs: vec![mk(&mut rng, 5), mk(&mut rng, 4), mk(&mut rng, 3), mk(&mut rng, 2)],
+            alphas: vec![2.0, 3.0],
+            link: None,
+        };
+        store.save_snapshot(&snap).unwrap();
+        // wrong factor count is rejected
+        let mut bad = snap.clone();
+        bad.iteration = 3;
+        bad.vs.pop();
+        assert!(store.save_snapshot(&bad).is_err());
+
+        let opened = ModelStore::open(&dir).unwrap();
+        assert_eq!(opened.meta().view_dims, vec![vec![5], vec![4, 3, 2]]);
+        let l = opened.load_snapshot(0).unwrap();
+        assert_eq!(l.vs.len(), 4);
+        for (a, b) in l.vs.iter().zip(&snap.vs) {
+            assert_eq!(a.max_abs_diff(b), 0.0);
+        }
+        assert_eq!(l.alphas, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn version_1_store_still_loads() {
+        // hand-write a version-1 manifest (pre-tensor layout): view_ncols
+        // instead of view_dims, same flat v{i}.dbm payload naming
+        let dir = scratch("v1compat");
+        std::fs::create_dir_all(dir.join("sample_00004")).unwrap();
+        let mut rng = Rng::new(86);
+        let mut u = Mat::zeros(4, 2);
+        let mut v0 = Mat::zeros(3, 2);
+        rng.fill_normal(u.data_mut());
+        rng.fill_normal(v0.data_mut());
+        crate::sparse::io::write_dbm(&u, &dir.join("sample_00004/u.dbm")).unwrap();
+        crate::sparse::io::write_dbm(&v0, &dir.join("sample_00004/v0.dbm")).unwrap();
+        std::fs::write(
+            dir.join("sample_00004/meta.json"),
+            r#"{"iteration": 4, "alphas": [2.5]}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(
+                r#"{{"format":"{STORE_FORMAT}","version":1,"num_latent":2,"nrows":4,
+                    "view_ncols":[3],"offsets":[0.5],"save_freq":1,"link_features":0,
+                    "snapshots":[{{"iteration":4,"dir":"sample_00004"}}]}}"#
+            ),
+        )
+        .unwrap();
+        let store = ModelStore::open(&dir).unwrap();
+        assert_eq!(store.meta().view_dims, vec![vec![3]]);
+        assert_eq!(store.meta().offsets, vec![0.5]);
+        let snap = store.load_snapshot(0).unwrap();
+        assert_eq!(snap.iteration, 4);
+        assert_eq!(snap.u.max_abs_diff(&u), 0.0);
+        assert_eq!(snap.vs.len(), 1);
+        assert_eq!(snap.vs[0].max_abs_diff(&v0), 0.0);
     }
 
     #[test]

@@ -51,13 +51,13 @@ fn prop_schedule_invariance() {
                     MeanSpec::Shared(s) => MeanSpec::Shared(s),
                     _ => unreachable!(),
                 },
-                views: vec![ViewSlice {
-                    data: DataAccess::SparseRows(&data),
-                    other: &v,
-                    alpha: 1.5,
-                    probit: false,
-                    full_gram: None,
-                }],
+                views: vec![ViewSlice::matrix(
+                    DataAccess::SparseRows(&data),
+                    &v,
+                    1.5,
+                    false,
+                    None,
+                )],
                 seed,
                 iteration: 1,
                 side_id: 0,

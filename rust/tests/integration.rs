@@ -158,7 +158,7 @@ fn multi_view_with_shared_rows_and_mixed_priors() {
         .build();
     let r = s.run();
     assert!(r.rmse.is_finite());
-    assert!(s.views[1].col_latents.data().iter().all(|x| x.is_finite()));
+    assert!(s.views[1].col_latents().data().iter().all(|x| x.is_finite()));
 }
 
 #[test]
@@ -232,6 +232,170 @@ fn train_save_predict_round_trip() {
     let top = serve.top_k(0, 3, 1, &[]);
     let best = (0..serve.ncols(0))
         .map(|j| (j as u32, serve.predict_one(0, 3, j).mean))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+    assert_eq!(top[0].0, best.0);
+    assert_eq!(top[0].1, best.1);
+}
+
+/// Acceptance: a 2-mode `SparseTensor` view must reproduce the
+/// `SparseMatrix` path **bit-exactly** — same seed, same chain, same
+/// factors to the last bit and the same reported RMSE — because the
+/// tensor operand hands out identical design rows in identical order
+/// under identical RNG streams.
+#[test]
+fn two_mode_tensor_session_is_bit_exact_with_matrix_session() {
+    let (train, test) = smurff::data::movielens_like(70, 50, 1_800, 0.2, 61);
+    let cfg = SessionConfig {
+        num_latent: 6,
+        burnin: 5,
+        nsamples: 10,
+        seed: 61,
+        threads: 3,
+        ..Default::default()
+    };
+    // adaptive noise exercises centering, data-variance AND the SSE
+    // path on both sides — all must agree bitwise
+    let noise = NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 };
+    let mut mat = SessionBuilder::new(cfg.clone())
+        .add_view(
+            MatrixConfig::SparseUnknown(train.clone()),
+            noise.clone(),
+            Some(TestSet::from_sparse(&test)),
+        )
+        .build();
+    let rm = mat.run();
+
+    let tensor = smurff::sparse::SparseTensor::from_matrix(&train);
+    let ttest = smurff::data::TensorTestSet::from_tensor(
+        &smurff::sparse::SparseTensor::from_matrix(&test),
+    );
+    let mut ten = SessionBuilder::new(cfg)
+        .tensor_view(tensor, vec![smurff::session::ModePrior::Normal], noise, Some(ttest))
+        .build();
+    let rt = ten.run();
+
+    assert_eq!(
+        mat.u.max_abs_diff(&ten.u),
+        0.0,
+        "tensor-path U must equal matrix-path U bit-for-bit"
+    );
+    assert_eq!(
+        mat.views[0].col_latents().max_abs_diff(ten.views[0].col_latents()),
+        0.0,
+        "tensor-path V must equal matrix-path V bit-for-bit"
+    );
+    assert_eq!(rm.rmse, rt.rmse, "reported RMSE must be identical");
+    assert_eq!(
+        mat.views[0].noise.alpha(),
+        ten.views[0].noise.alpha(),
+        "adaptive noise chains must be identical"
+    );
+}
+
+/// Acceptance: 3-mode synthetic-CP recovery — held-out RMSE lands near
+/// the generator's noise floor, far below the mean-predictor baseline.
+#[test]
+fn three_mode_cp_recovery_rmse_below_noise_floor() {
+    let d = smurff::data::cp_tensor_synth(&smurff::data::CpSpec {
+        dims: vec![40, 30, 20],
+        rank: 3,
+        nnz: 8_000,
+        noise: 0.1,
+        seed: 62,
+    });
+    let (train, test) = smurff::data::split_tensor_train_test(&d.tensor, 0.2, 62);
+    let truth: Vec<f64> = test.vals().to_vec();
+    let base = smurff::model::rmse(&vec![train.mean_value(); truth.len()], &truth);
+    let cfg = SessionConfig {
+        num_latent: 5,
+        burnin: 20,
+        nsamples: 30,
+        seed: 62,
+        threads: 2,
+        ..Default::default()
+    };
+    let mut s = SessionBuilder::new(cfg)
+        .tensor_view(
+            train,
+            vec![smurff::session::ModePrior::Normal; 2],
+            NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 20.0 },
+            Some(smurff::data::TensorTestSet::from_tensor(&test)),
+        )
+        .build();
+    let r = s.run();
+    assert!(r.rmse.is_finite());
+    assert!(
+        r.rmse < 0.5 * base,
+        "CP recovery rmse {} must be far below mean-predictor {base}",
+        r.rmse
+    );
+    assert!(
+        r.rmse < 3.0 * d.noise,
+        "CP recovery rmse {} should approach the noise floor {}",
+        r.rmse,
+        d.noise
+    );
+}
+
+/// Tensor train → store → serve round trip through the public API:
+/// the served posterior average reproduces training's aggregation, and
+/// top-K over a free mode agrees with pointwise coordinate scoring.
+#[test]
+fn tensor_train_save_predict_round_trip() {
+    let d = smurff::data::cp_tensor_synth(&smurff::data::CpSpec {
+        dims: vec![30, 25, 15],
+        rank: 3,
+        nnz: 5_000,
+        noise: 0.15,
+        seed: 63,
+    });
+    let (train, test) = smurff::data::split_tensor_train_test(&d.tensor, 0.2, 63);
+    let dir = scratch("tensor_serve").join("store");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = SessionConfig {
+        num_latent: 4,
+        burnin: 6,
+        nsamples: 10,
+        seed: 63,
+        threads: 2,
+        save_freq: 1,
+        save_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let ttest = smurff::data::TensorTestSet::from_tensor(&test);
+    let mut s = SessionBuilder::new(cfg)
+        .tensor_view(
+            train,
+            vec![smurff::session::ModePrior::Normal; 2],
+            NoiseConfig::default(),
+            Some(ttest.clone()),
+        )
+        .build();
+    let r = s.run();
+    assert_eq!(r.nsnapshots, 10);
+
+    let serve = smurff::predict::PredictSession::open(&dir).unwrap();
+    assert_eq!(serve.nsamples(), 10);
+    assert_eq!(serve.nmodes(0), 3);
+    assert_eq!(serve.mode_dims(0), vec![30, 25, 15]);
+    // served posterior means reproduce the training aggregation
+    let mut preds = Vec::with_capacity(ttest.len());
+    for cell in 0..ttest.len() {
+        let coords: Vec<usize> =
+            (0..3).map(|m| ttest.coords[m][cell] as usize).collect();
+        preds.push(serve.predict_coords(0, &coords).mean);
+    }
+    let served_rmse = smurff::model::rmse(&preds, &ttest.vals);
+    assert!(
+        (served_rmse - r.rmse).abs() < 1e-9,
+        "served {served_rmse} vs trained {}",
+        r.rmse
+    );
+    // top-K over the free target mode matches pointwise argmax
+    let top = serve.top_k_mode(0, &[4, 0, 7], 1, 1, &[]);
+    let best = (0..serve.mode_dims(0)[1])
+        .map(|j| (j as u32, serve.predict_coords(0, &[4, j, 7]).mean))
         .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
         .unwrap();
     assert_eq!(top[0].0, best.0);

@@ -1,0 +1,161 @@
+//! Property-based tests of the sparse substrate invariants, extended to
+//! the N-mode tensor index: every compressed orientation of the same
+//! data must agree with the COO ground truth, and the text + binary io
+//! formats must round-trip exactly.  Uses the in-tree mini property
+//! runner (`util::prop`).
+
+use smurff::rng::Rng;
+use smurff::sparse::io::{read_stn, read_tns, write_stn, write_tns};
+use smurff::sparse::{SparseMatrix, SparseTensor};
+use smurff::util::prop::forall;
+
+fn random_tensor(rng: &mut Rng) -> SparseTensor {
+    let nmodes = 2 + rng.next_below(3); // 2..=4 modes
+    let dims: Vec<usize> = (0..nmodes).map(|_| 2 + rng.next_below(12)).collect();
+    let nnz = 1 + rng.next_below(200);
+    let mut flat = Vec::with_capacity(nnz * nmodes);
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for &d in &dims {
+            flat.push(rng.next_below(d) as u32);
+        }
+        vals.push(rng.normal());
+    }
+    SparseTensor::from_flat(dims, &flat, &vals)
+}
+
+/// Per-mode fiber nnz sums all equal the COO total — the N-mode
+/// generalisation of "per-row nnz sums == per-col nnz sums == nnz".
+#[test]
+fn prop_mode_indexes_agree_with_coo_totals() {
+    forall(40, |rng| {
+        let t = random_tensor(rng);
+        for m in 0..t.nmodes() {
+            let total: usize = (0..t.dims()[m]).map(|i| t.mode_nnz(m, i)).sum();
+            assert_eq!(total, t.nnz(), "mode {m} fiber sums must equal nnz");
+            // every fiber entry really has coordinate i along mode m,
+            // and fibers enumerate each entry exactly once
+            let mut seen = vec![false; t.nnz()];
+            for i in 0..t.dims()[m] {
+                for &e in t.mode_fiber(m, i) {
+                    assert_eq!(t.coord(m, e as usize), i as u32);
+                    assert!(!seen[e as usize], "entry {e} appears in two fibers");
+                    seen[e as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+        // values sum identically regardless of the orientation walked
+        let coo_sum: f64 = t.vals().iter().sum();
+        for m in 0..t.nmodes() {
+            let fiber_sum: f64 = (0..t.dims()[m])
+                .flat_map(|i| t.mode_fiber(m, i).iter().map(|&e| t.val(e as usize)))
+                .sum();
+            assert!((fiber_sum - coo_sum).abs() < 1e-9);
+        }
+    });
+}
+
+/// A 2-mode tensor's mode indexes must replay CSR and CSC exactly.
+#[test]
+fn prop_two_mode_tensor_matches_csr_csc() {
+    forall(30, |rng| {
+        let n = 2 + rng.next_below(20);
+        let m = 2 + rng.next_below(20);
+        let mut trips = Vec::new();
+        for i in 0..n {
+            for j in 0..m {
+                if rng.next_f64() < 0.3 {
+                    trips.push((i as u32, j as u32, rng.normal()));
+                }
+            }
+        }
+        let mat = SparseMatrix::from_triplets(n, m, trips);
+        let t = SparseTensor::from_matrix(&mat);
+        for i in 0..n {
+            let (cols, vals) = mat.row(i);
+            let fib = t.mode_fiber(0, i);
+            assert_eq!(fib.len(), mat.row_nnz(i));
+            for (e, (&c, &v)) in fib.iter().zip(cols.iter().zip(vals)) {
+                assert_eq!(t.coord(1, *e as usize), c);
+                assert_eq!(t.val(*e as usize), v);
+            }
+        }
+        for j in 0..m {
+            let (rows, vals) = mat.col(j);
+            let fib = t.mode_fiber(1, j);
+            assert_eq!(fib.len(), mat.col_nnz(j));
+            for (e, (&r, &v)) in fib.iter().zip(rows.iter().zip(vals)) {
+                assert_eq!(t.coord(0, *e as usize), r);
+                assert_eq!(t.val(*e as usize), v);
+            }
+        }
+        // round trip back to a matrix is the identity
+        let back = t.to_matrix();
+        assert_eq!(
+            mat.triplets().collect::<Vec<_>>(),
+            back.triplets().collect::<Vec<_>>()
+        );
+    });
+}
+
+/// Both tensor io formats round-trip dims, coordinates and values; the
+/// binary format is bit-exact.
+#[test]
+fn prop_tensor_io_round_trips() {
+    let dir = std::env::temp_dir().join(format!("smurff_tensor_io_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    forall(15, |rng| {
+        let t = random_tensor(rng);
+        let bp = dir.join("t.stn");
+        write_stn(&t, &bp).unwrap();
+        let tb = read_stn(&bp).unwrap();
+        assert_eq!(tb.dims(), t.dims());
+        assert_eq!(tb.vals(), t.vals(), "binary io must be bit-exact");
+        for (e, _) in t.entry_ids() {
+            for m in 0..t.nmodes() {
+                assert_eq!(tb.coord(m, e), t.coord(m, e));
+            }
+        }
+        let tp = dir.join("t.tns");
+        write_tns(&t, &tp).unwrap();
+        let tt = read_tns(&tp).unwrap();
+        assert_eq!(tt.dims(), t.dims());
+        assert_eq!(tt.nnz(), t.nnz());
+        for (e, v) in t.entry_ids() {
+            assert!((tt.val(e) - v).abs() < 1e-12);
+            for m in 0..t.nmodes() {
+                assert_eq!(tt.coord(m, e), t.coord(m, e));
+            }
+        }
+    });
+}
+
+/// Duplicate coordinates merge by summation, matching
+/// `SparseMatrix::from_triplets` semantics on the 2-mode slice.
+#[test]
+fn prop_duplicate_merge_matches_matrix_semantics() {
+    forall(30, |rng| {
+        let n = 2 + rng.next_below(8);
+        let m = 2 + rng.next_below(8);
+        let nnz = 1 + rng.next_below(60); // dense enough to force dups
+        let mut trips = Vec::with_capacity(nnz);
+        let mut flat = Vec::with_capacity(nnz * 2);
+        let mut vals = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let (i, j, v) = (rng.next_below(n) as u32, rng.next_below(m) as u32, rng.normal());
+            trips.push((i, j, v));
+            flat.push(i);
+            flat.push(j);
+            vals.push(v);
+        }
+        let mat = SparseMatrix::from_triplets(n, m, trips);
+        let t = SparseTensor::from_flat(vec![n, m], &flat, &vals);
+        assert_eq!(t.nnz(), mat.nnz());
+        for (e, (r, c, v)) in mat.triplets().enumerate() {
+            assert_eq!(t.coord(0, e), r);
+            assert_eq!(t.coord(1, e), c);
+            assert_eq!(t.val(e), v, "merged sums must be bit-identical");
+        }
+    });
+}
