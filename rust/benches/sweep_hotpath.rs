@@ -1,0 +1,11 @@
+//! `cargo bench` wrapper for the §Perf PR4 Gibbs hot-path benchmark:
+//! rank-4/unfused baseline vs the tiled+fused+hoisted+LPT sweep on a
+//! power-law synthetic workload (kernel table + full-sweep table).
+//! Pass SMURFF_BENCH_QUICK=1 for a fast smoke run.
+fn main() {
+    let quick = std::env::var("SMURFF_BENCH_QUICK").is_ok();
+    let report = smurff::bench::run_by_name("sweep", quick).expect("bench failed");
+    let out = format!("bench_{}.json", report.name);
+    std::fs::write(&out, report.to_json().to_string()).expect("write report");
+    eprintln!("report written to {out}");
+}

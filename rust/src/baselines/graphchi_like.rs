@@ -94,6 +94,7 @@ impl OutOfCoreBmf {
             seed,
             iteration: iter,
             side_id: if target_rows { 0 } else { 1 },
+            tuning: crate::coordinator::SweepTuning::global(),
         };
         let writer = crate::coordinator::RowWriter::new(target);
         let k = self.k;

@@ -12,6 +12,7 @@ pub mod gfa;
 pub mod macau;
 pub mod scaling;
 pub mod serving;
+pub mod sweep;
 pub mod table1;
 pub mod tensor;
 
@@ -116,18 +117,22 @@ pub fn run_by_name(name: &str, quick: bool) -> anyhow::Result<Report> {
         "macau" => Ok(macau::run(quick)),
         "scaling" => Ok(scaling::run(quick)),
         "serving" => Ok(serving::run(quick)),
+        "sweep" => Ok(sweep::run(quick)),
         "table1" => Ok(table1::run(quick)),
         "tensor" => Ok(tensor::run(quick)),
         "all" => {
             let mut all = Report::new("all");
-            for n in ["table1", "fig3", "fig4", "fig5", "gfa", "macau", "scaling", "serving", "tensor"] {
+            for n in [
+                "table1", "fig3", "fig4", "fig5", "gfa", "macau", "scaling", "serving", "sweep",
+                "tensor",
+            ] {
                 let r = run_by_name(n, quick)?;
                 all.tables.extend(r.tables);
             }
             Ok(all)
         }
         other => anyhow::bail!(
-            "unknown bench '{other}' (fig3|fig4|fig5|gfa|macau|scaling|serving|table1|tensor|all)"
+            "unknown bench '{other}' (fig3|fig4|fig5|gfa|macau|scaling|serving|sweep|table1|tensor|all)"
         ),
     }
 }

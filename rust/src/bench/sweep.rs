@@ -1,0 +1,166 @@
+//! `bench sweep` — the §Perf PR4 Gibbs hot-path benchmark: baseline
+//! (rank-4 gather, standalone SSE pass, natural order, per-row rhs
+//! dots) vs the planned sweep (tiled Gram + fused SSE + shared-rhs
+//! hoisting + LPT scheduling) on a synthetic power-law workload, the
+//! compound-activity row-degree shape of the paper.
+//!
+//! Two tables:
+//!  * kernel-level — `gram_rhs_rank4` vs tile-by-tile `gram_rhs_tile`
+//!    over one high-nnz gather, per K
+//!  * sweep-level — full adaptive-noise Gibbs iterations/sec per K for
+//!    baseline, tiled-only and all-optimisations tunings, plus the
+//!    new/baseline speedup (the acceptance metric: ≥ 1.3× at K ≥ 32)
+//!
+//! Reproduce: `cargo run --release -- bench sweep --json BENCH_sweep.json`
+//! (add `--quick` for the CI-sized run).
+
+use super::{fmt_s, Report, Table};
+use crate::coordinator::SweepTuning;
+use crate::data::MatrixConfig;
+use crate::linalg::{gram_rhs_rank4, gram_rhs_tiled, Mat, GRAM_TILE_ROWS};
+use crate::noise::NoiseConfig;
+use crate::session::{SessionBuilder, SessionConfig, TrainSession};
+use crate::util::Timer;
+
+/// Seconds per Gibbs iteration under `tuning`, best of 3 runs.  The
+/// session pins `tuning` through `SessionBuilder::sweep_tuning`, which
+/// flows into every sweep it runs — no process-global involved, so
+/// concurrent sessions (e.g. other tests in the same binary) are
+/// unaffected.
+fn measure_sweep(train: &crate::sparse::SparseMatrix, k: usize, iters: usize, tuning: SweepTuning) -> f64 {
+    let cfg = SessionConfig {
+        num_latent: k,
+        burnin: 1,
+        nsamples: 1,
+        seed: 5,
+        ..Default::default()
+    };
+    let mut s: TrainSession = SessionBuilder::new(cfg)
+        .add_view(
+            MatrixConfig::SparseUnknown(train.clone()),
+            NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+            None,
+        )
+        .sweep_tuning(tuning)
+        .build();
+    s.step(); // warm caches + adaptive α off its init
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Timer::start();
+        for _ in 0..iters {
+            s.step();
+        }
+        best = best.min(t.elapsed_s() / iters as f64);
+    }
+    best
+}
+
+/// Seconds per call of a fused Gram+RHS kernel over an `nnz`×`k` gather.
+fn measure_kernel(k: usize, nnz: usize, reps: usize, tiled: bool) -> f64 {
+    let mut rng = crate::rng::Rng::new(11);
+    let mut xs = vec![0.0; nnz * k];
+    let mut vals = vec![0.0; nnz];
+    rng.fill_normal(&mut xs);
+    rng.fill_normal(&mut vals);
+    let mut a = Mat::eye(k);
+    let mut rhs = vec![0.0; k];
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Timer::start();
+        for _ in 0..reps {
+            if tiled {
+                gram_rhs_tiled(&mut a, &mut rhs, 1.5, &xs, &vals);
+            } else {
+                gram_rhs_rank4(&mut a, &mut rhs, 1.5, &xs, &vals);
+            }
+        }
+        best = best.min(t.elapsed_s() / reps as f64);
+    }
+    // keep the accumulators alive so the work is not optimised away
+    assert!(a.data().iter().all(|x| x.is_finite()));
+    best
+}
+
+pub fn run(quick: bool) -> Report {
+    let mut report = Report::new("sweep");
+
+    // ---- kernel-level: one high-degree row's Gram accumulation
+    let (knnz, reps) = if quick { (512, 200) } else { (4096, 300) };
+    let kernel_ks: &[usize] = if quick { &[16, 32] } else { &[16, 32, 64] };
+    let mut t = Table::new(
+        &format!("Gram kernel: rank-4 gather vs {GRAM_TILE_ROWS}-row tiles (nnz={knnz})"),
+        &["K", "rank-4 s/row", "tiled s/row", "speedup"],
+    );
+    for &k in kernel_ks {
+        let r4 = measure_kernel(k, knnz, reps, false);
+        let tl = measure_kernel(k, knnz, reps, true);
+        t.row(vec![
+            k.to_string(),
+            fmt_s(r4),
+            fmt_s(tl),
+            format!("{:.2}x", r4 / tl),
+        ]);
+    }
+    report.push(t);
+
+    // ---- sweep-level: full adaptive Gibbs iterations on power-law data.
+    // Wide matrix + steep degree law: the head rows' gathers (thousands
+    // of design rows) dwarf L1/L2, which is exactly where the bounded
+    // tile pays — the compound-activity shape (promiscuous compounds
+    // with thousands of measurements over a long sparse tail).
+    let (rows, cols, nnz, iters) = if quick {
+        (600, 600, 50_000, 2)
+    } else {
+        (3_000, 3_000, 900_000, 3)
+    };
+    let sweep_ks: &[usize] = if quick { &[8, 32] } else { &[16, 32, 64] };
+    let train = crate::data::power_law_matrix(rows, cols, nnz, 1.0, 5);
+    let hist = train.row_nnz_histogram();
+    let max_deg = (0..rows).map(|i| train.row_nnz(i)).max().unwrap_or(0);
+    crate::log_info!(
+        "sweep bench data: {rows}x{cols}, {} nnz, max row degree {max_deg}, {} histogram buckets",
+        train.nnz(),
+        hist.len()
+    );
+
+    let tiled_only = SweepTuning {
+        tiled_gram: true,
+        fused_sse: false,
+        lpt_schedule: false,
+        hoist_rhs: false,
+    };
+    let mut t = Table::new(
+        &format!(
+            "Gibbs sweep: power-law {rows}x{cols} ({} nnz), adaptive noise, sec/iter",
+            train.nnz()
+        ),
+        &["K", "baseline (rank-4, unfused)", "tiled gram", "tiled+fused+hoist+lpt", "speedup"],
+    );
+    for &k in sweep_ks {
+        let base = measure_sweep(&train, k, iters, SweepTuning::baseline());
+        let tiled = measure_sweep(&train, k, iters, tiled_only);
+        let all = measure_sweep(&train, k, iters, SweepTuning::all_on());
+        t.row(vec![
+            k.to_string(),
+            fmt_s(base),
+            fmt_s(tiled),
+            fmt_s(all),
+            format!("{:.2}x", base / all),
+        ]);
+    }
+    report.push(t);
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_bench_runs() {
+        let r = run(true);
+        assert_eq!(r.tables.len(), 2);
+        assert!(r.tables.iter().all(|t| !t.rows.is_empty()));
+    }
+}

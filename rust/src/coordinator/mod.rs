@@ -15,6 +15,18 @@
 //! `rust/tests/coordinator_props.rs`): every row i of iteration t draws
 //! from `Rng::for_row(seed, t, side, i)`, so the sampled latents are
 //! identical for any thread count and any schedule.
+//!
+//! §Perf PR4 — the sweep runs through a per-sweep [`SweepPlan`]: the
+//! shared `Λ₀·μ` rhs base is hoisted out of the row loop, rows are
+//! issued in descending-nnz (LPT) order, every pool lane gets a
+//! preallocated work arena instead of per-row `thread_local` borrows,
+//! high-nnz rows accumulate Λ through the cache-blocked
+//! [`gram_rhs_tile`](crate::linalg::gram_rhs_tile) kernel
+//! (bit-identical to the rank-4 path, so the [`TILE_NNZ_MIN`] threshold
+//! never changes results), and the adaptive-noise SSE pass can be fused
+//! into the sweep ([`Engine::sample_mvn_side_fused`]), bit-identical to
+//! the standalone [`view_sse`].  [`SweepTuning`] switches each
+//! optimisation for the `smurff bench sweep` baseline comparison.
 
 pub mod threadpool;
 
@@ -26,6 +38,78 @@ use crate::noise::NoiseModel;
 use crate::priors::{MeanSpec, Prior, RowObs};
 use crate::rng::Rng;
 use crate::sparse::SparseTensor;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Rows with at least this many observations take the cache-blocked
+/// tiled Gram path; shorter rows keep the single rank-4 gather (the
+/// tile bookkeeping would outweigh the cache win).  Either path gives
+/// bit-identical results (see [`crate::linalg::gram_rhs_tile`]), so the
+/// threshold is purely a performance knob.
+pub const TILE_NNZ_MIN: usize = 2 * crate::linalg::GRAM_TILE_ROWS;
+
+/// Switches for the §Perf PR4 sweep optimisations — all on by default.
+/// Sessions snapshot a value at build time (overridable per session via
+/// `SessionBuilder::sweep_tuning`, which is how `smurff bench sweep`
+/// measures the unoptimised baseline) and stamp it onto every
+/// [`MvnSweep`] they run.  Every switch is *sample-preserving*: the
+/// tiled Gram path is bit-identical to the rank-4 path, the hoisted rhs
+/// base is a bit-identical copy of the per-row dots, and the LPT order
+/// only changes scheduling (per-row RNG streams make samples
+/// schedule-invariant).  `fused_sse` changes which operand orientation
+/// the adaptive-noise SSE is summed over (the final mode instead of
+/// mode 0) — a float-summation-order difference in the noise update
+/// only, never in the sampled latents of a sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SweepTuning {
+    /// cache-blocked tiled Gram for rows with ≥ [`TILE_NNZ_MIN`] obs
+    pub tiled_gram: bool,
+    /// fuse the adaptive-noise SSE pass into the final mode's sweep
+    pub fused_sse: bool,
+    /// issue rows in descending-nnz (LPT) order
+    pub lpt_schedule: bool,
+    /// hoist the shared Λ₀·μ rhs base out of the row loop
+    pub hoist_rhs: bool,
+}
+
+static SWEEP_TUNING: AtomicU8 = AtomicU8::new(0b1111);
+
+impl SweepTuning {
+    /// Every optimisation enabled (the library default).
+    pub fn all_on() -> SweepTuning {
+        SweepTuning { tiled_gram: true, fused_sse: true, lpt_schedule: true, hoist_rhs: true }
+    }
+
+    /// The pre-PR4 baseline: rank-4 gather only, standalone SSE pass,
+    /// natural row order, per-row rhs dots.
+    pub fn baseline() -> SweepTuning {
+        SweepTuning { tiled_gram: false, fused_sse: false, lpt_schedule: false, hoist_rhs: false }
+    }
+
+    /// Set the process-wide *default*.  The global is only consulted
+    /// when a session is built without an explicit
+    /// `SessionBuilder::sweep_tuning` override — the hot path reads the
+    /// sweep's own [`MvnSweep::tuning`] snapshot, never this global —
+    /// so code that needs a specific tuning for one session (tests,
+    /// the bench harness) should pin it on the builder instead of
+    /// flipping this around a build.
+    pub fn set_global(t: SweepTuning) {
+        let bits = t.tiled_gram as u8
+            | (t.fused_sse as u8) << 1
+            | (t.lpt_schedule as u8) << 2
+            | (t.hoist_rhs as u8) << 3;
+        SWEEP_TUNING.store(bits, Ordering::Relaxed);
+    }
+
+    pub fn global() -> SweepTuning {
+        let b = SWEEP_TUNING.load(Ordering::Relaxed);
+        SweepTuning {
+            tiled_gram: b & 1 != 0,
+            fused_sse: b & 2 != 0,
+            lpt_schedule: b & 4 != 0,
+            hoist_rhs: b & 8 != 0,
+        }
+    }
+}
 
 /// How the rows of the side being updated see one data view.
 pub enum DataAccess<'a> {
@@ -250,6 +334,12 @@ pub struct MvnSweep<'a> {
     pub iteration: u64,
     /// 0 = rows side, 1.. = column side of view v-1
     pub side_id: u64,
+    /// §Perf switches for this sweep — sessions pass their build-time
+    /// snapshot, so the engine never reads the process global on the
+    /// hot path (the per-session pin is authoritative).  All switches
+    /// are sample-preserving; `fused_sse` is inert here (the fuse
+    /// decision arrives as the explicit `fuse_sse` argument).
+    pub tuning: SweepTuning,
 }
 
 /// A sampling engine: resamples all rows of `latents` in place.
@@ -284,6 +374,29 @@ pub trait Engine: Send + Sync {
             sample_one_row_mvn(sweep, i, row, k, &mut rng);
         });
     }
+
+    /// [`sample_mvn_side_range`](Engine::sample_mvn_side_range) that can
+    /// additionally *fuse* the adaptive-noise SSE pass into the sweep:
+    /// with `fuse_sse` set (the sweep must then carry exactly one view),
+    /// returns that view's sum of squared residuals and observation
+    /// count over `rows`, computed against the freshly sampled rows.
+    /// Over the full range this is bit-identical to calling
+    /// [`view_sse`] on the same operand and target afterwards (a shard
+    /// range folds only its own rows; callers combine shard sums
+    /// themselves).  Engines without a fused path sample and return
+    /// `None`; callers fall back to the standalone pass.
+    fn sample_mvn_side_fused(
+        &self,
+        sweep: &MvnSweep<'_>,
+        latents: &mut Mat,
+        pool: &ThreadPool,
+        rows: std::ops::Range<usize>,
+        fuse_sse: bool,
+    ) -> Option<(f64, usize)> {
+        let _ = fuse_sse;
+        self.sample_mvn_side_range(sweep, latents, pool, rows);
+        None
+    }
 }
 
 /// Shared mutable row access for disjoint parallel row writes.
@@ -311,8 +424,116 @@ impl RowWriter {
     }
 }
 
+/// The per-sweep execution plan (§Perf PR4): everything the row loop
+/// used to recompute (or `thread_local`-borrow) per row, computed once
+/// per sweep — the hoisted shared-rhs base, the LPT visit order and one
+/// preallocated work area per pool lane.
+pub struct SweepPlan {
+    /// visit order over the sweep's *local* indices (descending total
+    /// nnz, ties by index) — `None` = natural order (uniform weights)
+    order: Option<Vec<u32>>,
+    /// hoisted Λ₀·μ when means are shared: K dot products once per
+    /// sweep instead of once per row; the per-row copy is bit-identical
+    /// to recomputing the dots
+    rhs_base: Option<Vec<f64>>,
+    /// one work area per pool lane — replaces per-row `thread_local`
+    /// `RefCell` borrows
+    arena: LaneArena,
+    tuning: SweepTuning,
+}
+
+impl SweepPlan {
+    pub fn build(
+        sweep: &MvnSweep<'_>,
+        rows: &std::ops::Range<usize>,
+        k: usize,
+        nlanes: usize,
+    ) -> SweepPlan {
+        let tuning = sweep.tuning;
+        let rhs_base = match (&sweep.means, tuning.hoist_rhs) {
+            (MeanSpec::Shared(mu), true) => {
+                let mut base = vec![0.0; k];
+                for (r, row0) in base.iter_mut().zip(0..k) {
+                    *r = crate::linalg::dot(sweep.lambda0.row(row0), mu);
+                }
+                Some(base)
+            }
+            _ => None,
+        };
+        let order = if tuning.lpt_schedule { lpt_order(sweep, rows) } else { None };
+        SweepPlan { order, rhs_base, arena: LaneArena::new(nlanes, k), tuning }
+    }
+
+    /// The LPT visit order, if the row weights warranted one.
+    pub fn order(&self) -> Option<&[u32]> {
+        self.order.as_deref()
+    }
+
+    /// The hoisted shared-rhs base, if means are shared and hoisting on.
+    pub fn rhs_base(&self) -> Option<&[f64]> {
+        self.rhs_base.as_deref()
+    }
+}
+
+/// Descending-nnz (LPT-style) permutation of the sweep's local row
+/// indices, or `None` when the weights are uniform (dense and
+/// fully-observed views) and ordering would buy nothing.  Deterministic:
+/// descending total nnz across views, ascending index on ties.
+fn lpt_order(sweep: &MvnSweep<'_>, rows: &std::ops::Range<usize>) -> Option<Vec<u32>> {
+    let n = rows.len();
+    if n < 2 || n > u32::MAX as usize {
+        return None;
+    }
+    let start = rows.start;
+    let weights: Vec<usize> = (0..n)
+        .map(|t| sweep.views.iter().map(|v| v.operand.nnz(start + t)).sum())
+        .collect();
+    let (lo, hi) = weights.iter().fold((usize::MAX, 0), |(l, h), &w| (l.min(w), h.max(w)));
+    if lo == hi {
+        return None;
+    }
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        weights[b as usize].cmp(&weights[a as usize]).then(a.cmp(&b))
+    });
+    Some(order)
+}
+
+/// One preallocated work area per pool lane.
+struct LaneArena {
+    lanes: Vec<std::cell::UnsafeCell<RowWork>>,
+}
+
+// SAFETY: the ThreadPool lane contract — each lane id is held by exactly
+// one OS thread at a time and a lane's invocations are sequential — so
+// distinct threads never alias one lane's RowWork.
+unsafe impl Sync for LaneArena {}
+
+impl LaneArena {
+    fn new(nlanes: usize, k: usize) -> LaneArena {
+        LaneArena {
+            lanes: (0..nlanes.max(1)).map(|_| std::cell::UnsafeCell::new(RowWork::new(k))).collect(),
+        }
+    }
+
+    /// # Safety
+    /// `lane` must obey the pool's exclusivity contract (one thread per
+    /// lane at a time).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn lane(&self, l: usize) -> &mut RowWork {
+        &mut *self.lanes[l].get()
+    }
+}
+
+/// Disjoint-slot writer for the fused-SSE per-row partials (same
+/// pattern as `RowWriter` / `parallel_collect`).
+struct SsePtr(*mut f64);
+unsafe impl Send for SsePtr {}
+unsafe impl Sync for SsePtr {}
+
 /// The pure-Rust engine: per-row Gram accumulation (the native analogue
-/// of the Layer-1 Pallas kernel) + Cholesky sampling.
+/// of the Layer-1 Pallas kernel) + Cholesky sampling, run through a
+/// per-sweep [`SweepPlan`].
 pub struct NativeEngine;
 
 impl Engine for NativeEngine {
@@ -322,24 +543,98 @@ impl Engine for NativeEngine {
 
     fn sample_mvn_side(&self, sweep: &MvnSweep<'_>, latents: &mut Mat, pool: &ThreadPool) {
         let n = latents.rows();
+        self.planned_sweep(sweep, latents, pool, 0..n, false);
+    }
+
+    fn sample_mvn_side_range(
+        &self,
+        sweep: &MvnSweep<'_>,
+        latents: &mut Mat,
+        pool: &ThreadPool,
+        rows: std::ops::Range<usize>,
+    ) {
+        self.planned_sweep(sweep, latents, pool, rows, false);
+    }
+
+    fn sample_mvn_side_fused(
+        &self,
+        sweep: &MvnSweep<'_>,
+        latents: &mut Mat,
+        pool: &ThreadPool,
+        rows: std::ops::Range<usize>,
+        fuse_sse: bool,
+    ) -> Option<(f64, usize)> {
+        self.planned_sweep(sweep, latents, pool, rows, fuse_sse)
+    }
+}
+
+impl NativeEngine {
+    /// The planned sweep (§Perf PR4): build a [`SweepPlan`] once, then
+    /// sample `rows` through it — LPT issue order, per-lane arenas, the
+    /// hoisted rhs base — optionally writing per-row SSE partials that
+    /// are folded in row order after the join (bit-identical to
+    /// [`view_sse`] over the same operand and the fresh latents).
+    fn planned_sweep(
+        &self,
+        sweep: &MvnSweep<'_>,
+        latents: &mut Mat,
+        pool: &ThreadPool,
+        rows: std::ops::Range<usize>,
+        fuse_sse: bool,
+    ) -> Option<(f64, usize)> {
         let k = latents.cols();
+        let n = rows.len();
+        let start = rows.start;
+        if fuse_sse {
+            assert_eq!(sweep.views.len(), 1, "fused SSE needs a single-view sweep");
+        }
+        if n == 0 {
+            return fuse_sse.then_some((0.0, 0));
+        }
+        let plan = SweepPlan::build(sweep, &rows, k, pool.nthreads());
         let writer = RowWriter::new(latents);
-        pool.parallel_for(n, 1, |i| {
+        let mut sse_rows: Vec<f64> = vec![0.0; if fuse_sse { n } else { 0 }];
+        let sse_ptr = SsePtr(sse_rows.as_mut_ptr());
+        let plan_ref = &plan;
+        pool.parallel_for_lane(n, 1, plan.order(), |lane, t| {
+            let i = start + t;
             let mut rng = Rng::for_row(sweep.seed, sweep.iteration, sweep.side_id, i as u64);
-            // SAFETY: each i is visited exactly once (threadpool contract)
+            // SAFETY: each t is visited exactly once (threadpool contract)
             let row = unsafe { writer.row_mut(i) };
-            sample_one_row_mvn(sweep, i, row, k, &mut rng);
+            // SAFETY: lane exclusivity (threadpool contract)
+            let work = unsafe { plan_ref.arena.lane(lane) };
+            let sse = sample_one_row_mvn_with(
+                sweep,
+                i,
+                row,
+                k,
+                &mut rng,
+                work,
+                plan_ref.rhs_base(),
+                plan_ref.tuning,
+                fuse_sse,
+            );
+            if fuse_sse {
+                // SAFETY: disjoint slots; the Vec outlives the blocking call
+                unsafe { *sse_ptr.0.add(t) = sse };
+            }
         });
+        fuse_sse.then(|| {
+            // fold per-row partials with view_sse's chunk grouping so
+            // the two are bit-identical
+            let sse = fold_sse_rows(&sse_rows);
+            let op = &sweep.views[0].operand;
+            let cnt: usize = (start..start + n).map(|i| op.nnz(i)).sum();
+            (sse, cnt)
+        })
     }
 }
 
 thread_local! {
-    /// per-thread gather scratch for the rank-4 Gram path (no per-row
-    /// allocation on the hot loop — §Perf)
-    static GATHER: std::cell::RefCell<(Vec<f64>, Vec<f64>)> =
-        const { std::cell::RefCell::new((Vec::new(), Vec::new())) };
-    /// per-thread K-sized work area for the solve/sample phase (§Perf
-    /// change #3: zero allocations per row)
+    /// per-thread work area for engine-external callers of
+    /// [`sample_one_row_mvn`] (the XLA engine's heavy-row remainder,
+    /// baselines); the native engine itself uses the [`SweepPlan`]
+    /// lane arena instead
     static ROW_WORK: std::cell::RefCell<Option<RowWork>> = const { std::cell::RefCell::new(None) };
 }
 
@@ -350,22 +645,33 @@ struct RowWork {
     eps: Vec<f64>,
     /// Hadamard scratch for tensor design rows
     design: Vec<f64>,
+    /// gathered design rows: the whole row for the rank-4 path, one
+    /// bounded tile for the tiled path
+    xs: Vec<f64>,
+    /// gathered (probit: augmented) observation values
+    vals: Vec<f64>,
 }
 
 impl RowWork {
+    fn new(k: usize) -> RowWork {
+        RowWork {
+            lambda: Mat::zeros(k, k),
+            rhs: vec![0.0; k],
+            tmp: vec![0.0; k],
+            eps: vec![0.0; k],
+            design: Vec::new(),
+            xs: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
     fn ensure(slot: &mut Option<RowWork>, k: usize) -> &mut RowWork {
         let fresh = match slot {
             Some(w) => w.rhs.len() != k,
             None => true,
         };
         if fresh {
-            *slot = Some(RowWork {
-                lambda: Mat::zeros(k, k),
-                rhs: vec![0.0; k],
-                tmp: vec![0.0; k],
-                eps: vec![0.0; k],
-                design: Vec::new(),
-            });
+            *slot = Some(RowWork::new(k));
         }
         slot.as_mut().unwrap()
     }
@@ -375,6 +681,9 @@ impl RowWork {
 /// chunked path) the XLA engine's remainder handling:
 ///   Λ = Λ₀ + Σ_views α O_selᵀ O_sel,   b = Λ₀ μ_i + Σ_views α O_selᵀ r
 ///   u_i ~ N(Λ⁻¹ b, Λ⁻¹)
+/// Bit-identical to the [`SweepPlan`] path (same kernels, same
+/// threshold, and the hoisted rhs base is a copy of the dots computed
+/// here), so engine fallbacks never perturb the chain.
 pub fn sample_one_row_mvn(
     sweep: &MvnSweep<'_>,
     i: usize,
@@ -385,10 +694,15 @@ pub fn sample_one_row_mvn(
     ROW_WORK.with(|w| {
         let mut slot = w.borrow_mut();
         let work = RowWork::ensure(&mut slot, k);
-        sample_one_row_mvn_with(sweep, i, row_in_out, k, rng, work);
+        sample_one_row_mvn_with(sweep, i, row_in_out, k, rng, work, None, sweep.tuning, false);
     });
 }
 
+/// The row conditional over an explicit work area.  Returns the row's
+/// fused-SSE partial when `fuse_sse` is set (0.0 otherwise): residuals
+/// against the freshly sampled row, summed sequentially in observation
+/// order — identical to [`row_sse`] on the same operand.
+#[allow(clippy::too_many_arguments)]
 fn sample_one_row_mvn_with(
     sweep: &MvnSweep<'_>,
     i: usize,
@@ -396,14 +710,27 @@ fn sample_one_row_mvn_with(
     k: usize,
     rng: &mut Rng,
     work: &mut RowWork,
-) {
-    let RowWork { lambda, rhs, tmp, eps, design } = work;
+    rhs_base: Option<&[f64]>,
+    tuning: SweepTuning,
+    fuse_sse: bool,
+) -> f64 {
+    let RowWork { lambda, rhs, tmp, eps, design, xs, vals } = work;
     lambda.data_mut().copy_from_slice(sweep.lambda0.data());
     let mean_i = sweep.means.row(i);
-    // rhs = Λ₀ μ_i (in place)
-    for (r, row0) in rhs.iter_mut().zip(0..k) {
-        *r = crate::linalg::dot(sweep.lambda0.row(row0), mean_i);
+    match (rhs_base, &sweep.means) {
+        // §Perf PR4 change #3: the shared Λ₀·μ base is hoisted out of
+        // the row loop — this copy is bit-identical to the dots below
+        (Some(base), MeanSpec::Shared(_)) => rhs.copy_from_slice(base),
+        _ => {
+            // rhs = Λ₀ μ_i (in place)
+            for (r, row0) in rhs.iter_mut().zip(0..k) {
+                *r = crate::linalg::dot(sweep.lambda0.row(row0), mean_i);
+            }
+        }
     }
+    // does `xs`/`vals` hold the row's complete gather with raw values
+    // when the solve finishes?  (drives the fused-SSE fast path)
+    let mut gathered_full = false;
     for view in &sweep.views {
         let alpha = view.alpha;
         match (&view.full_gram, view.probit) {
@@ -417,12 +744,53 @@ fn sample_one_row_mvn_with(
             }
             _ => {
                 // §Perf changes #1+#2: upper-triangle-only accumulation,
-                // and (Blocked backend) gather-then-rank-4 so the inner
+                // and (Blocked backend) gather-then-kernel so the inner
                 // loops are long enough to vectorize; mirrored once
                 // below before the Cholesky.
                 if crate::linalg::Backend::global() == crate::linalg::Backend::Blocked {
-                    GATHER.with(|g| {
-                        let (xs, vals) = &mut *g.borrow_mut();
+                    let nnz = view.operand.nnz(i);
+                    if tuning.tiled_gram && nnz >= TILE_NNZ_MIN {
+                        // §Perf PR4 change #1: high-nnz rows stream
+                        // through a bounded B×K tile — gather and syrk
+                        // kernel alternate on L1-hot data instead of one
+                        // unbounded gather.  Bit-identical to the rank-4
+                        // path (GRAM_TILE_ROWS is a multiple of 4, so
+                        // the 4-row groups align).
+                        let cap = crate::linalg::GRAM_TILE_ROWS;
+                        xs.resize(cap * k, 0.0);
+                        vals.resize(cap, 0.0);
+                        let mut fill = 0usize;
+                        view.operand.for_each_design(i, design, |vrow, r| {
+                            let val = if view.probit {
+                                let pred = crate::linalg::dot(row_in_out, vrow);
+                                NoiseModel::augment_probit(pred, r, rng)
+                            } else {
+                                r
+                            };
+                            if fill == cap {
+                                crate::linalg::gram_rhs_tile(
+                                    lambda,
+                                    rhs,
+                                    alpha,
+                                    &xs[..cap * k],
+                                    &vals[..cap],
+                                );
+                                fill = 0;
+                            }
+                            xs[fill * k..(fill + 1) * k].copy_from_slice(vrow);
+                            vals[fill] = val;
+                            fill += 1;
+                        });
+                        if fill > 0 {
+                            crate::linalg::gram_rhs_tile(
+                                lambda,
+                                rhs,
+                                alpha,
+                                &xs[..fill * k],
+                                &vals[..fill],
+                            );
+                        }
+                    } else {
                         xs.clear();
                         vals.clear();
                         view.operand.for_each_design(i, design, |vrow, r| {
@@ -436,7 +804,8 @@ fn sample_one_row_mvn_with(
                             vals.push(val);
                         });
                         crate::linalg::gram_rhs_rank4(lambda, rhs, alpha, xs, vals);
-                    });
+                        gathered_full = !view.probit;
+                    }
                 } else {
                     view.operand.for_each_design(i, design, |vrow, r| {
                         let val = if view.probit {
@@ -458,22 +827,40 @@ fn sample_one_row_mvn_with(
     if crate::linalg::chol_inplace(lambda).is_err() {
         // numerically degenerate row: fall back to the prior mean
         row_in_out.copy_from_slice(mean_i);
-        return;
+    } else {
+        let l = &*lambda;
+        crate::linalg::tri_solve_lower_into(l, rhs, tmp);
+        crate::linalg::tri_solve_upper_t_into(l, tmp, rhs); // rhs := mean
+        rng.fill_normal(eps);
+        crate::linalg::tri_solve_upper_t_into(l, eps, tmp); // tmp := L⁻ᵀε
+        for c in 0..k {
+            row_in_out[c] = rhs[c] + tmp[c];
+        }
     }
-    let l = &*lambda;
-    crate::linalg::tri_solve_lower_into(l, rhs, tmp);
-    crate::linalg::tri_solve_upper_t_into(l, tmp, rhs); // rhs := mean
-    rng.fill_normal(eps);
-    crate::linalg::tri_solve_upper_t_into(l, eps, tmp); // tmp := L⁻ᵀε
-    for c in 0..k {
-        row_in_out[c] = rhs[c] + tmp[c];
+    if !fuse_sse {
+        return 0.0;
+    }
+    // §Perf PR4 change #2: fused SSE — residuals against the freshly
+    // sampled row.  Reuse the in-cache gather when it is complete,
+    // otherwise re-walk the fiber; both sum in observation order, so
+    // the partial is bit-identical to `row_sse`.
+    let view = &sweep.views[0];
+    if gathered_full {
+        let mut s = 0.0;
+        for (t, &v) in vals.iter().enumerate() {
+            let e = v - crate::linalg::dot(row_in_out, &xs[t * k..(t + 1) * k]);
+            s += e * e;
+        }
+        s
+    } else {
+        row_sse(&view.operand, row_in_out, i, design)
     }
 }
 
 thread_local! {
     /// per-thread (design rows, values, Hadamard scratch) gather for the
     /// custom-sampler sweep — hoisted out of the hot loop so no `Vec` is
-    /// allocated per row (§Perf, same pattern as `GATHER`)
+    /// allocated per row (§Perf, same pattern as `RowWork`'s gather)
     static CUSTOM_GATHER: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)> =
         const { std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new())) };
 }
@@ -508,10 +895,35 @@ pub fn sample_side_custom_range(
     side_id: u64,
     rows: std::ops::Range<usize>,
 ) {
+    sample_side_custom_fused(prior, view, latents, pool, seed, iteration, side_id, rows, false);
+}
+
+/// [`sample_side_custom_range`] with the optional fused adaptive-noise
+/// SSE pass — the custom-prior twin of
+/// [`Engine::sample_mvn_side_fused`].  With `fuse_sse` set, per-row
+/// residual partials (against the freshly sampled rows, reusing the
+/// already-gathered designs) are written into index-ordered slots during
+/// the sweep and folded in row order, bit-identical to a standalone
+/// [`view_sse`] over the same operand and latents.
+#[allow(clippy::too_many_arguments)]
+pub fn sample_side_custom_fused(
+    prior: &dyn Prior,
+    view: &ViewSlice<'_>,
+    latents: &mut Mat,
+    pool: &ThreadPool,
+    seed: u64,
+    iteration: u64,
+    side_id: u64,
+    rows: std::ops::Range<usize>,
+    fuse_sse: bool,
+) -> Option<(f64, usize)> {
     let writer = RowWriter::new(latents);
     let start = rows.start;
+    let n = rows.len();
     let k = latents.cols();
-    pool.parallel_for(rows.len(), 1, |t| {
+    let mut sse_rows: Vec<f64> = vec![0.0; if fuse_sse { n } else { 0 }];
+    let sse_ptr = SsePtr(sse_rows.as_mut_ptr());
+    pool.parallel_for(n, 1, |t| {
         let i = start + t;
         let mut rng = Rng::for_row(seed, iteration, side_id, i as u64);
         CUSTOM_GATHER.with(|g| {
@@ -531,36 +943,98 @@ pub fn sample_side_custom_range(
                 &mut rng,
                 row,
             );
+            if fuse_sse {
+                // residuals against the freshly sampled row over the
+                // in-cache gather — same values, same observation order
+                // as `row_sse`
+                let mut s = 0.0;
+                for (o, &v) in vals.iter().enumerate() {
+                    let e = v - crate::linalg::dot(row, &designs[o * k..(o + 1) * k]);
+                    s += e * e;
+                }
+                // SAFETY: disjoint slots; the Vec outlives the call
+                unsafe { *sse_ptr.0.add(t) = s };
+            }
         });
     });
+    fuse_sse.then(|| {
+        let sse = fold_sse_rows(&sse_rows);
+        let cnt: usize = (start..start + n).map(|i| view.operand.nnz(i)).sum();
+        (sse, cnt)
+    })
+}
+
+/// Grain of the SSE reduction — shared by [`view_sse`]'s
+/// `parallel_map_reduce` call and [`fold_sse_rows`] so the standalone
+/// and fused paths replay the *same* chunk grouping.
+const SSE_GRAIN: usize = 8;
+
+/// One target row's residual sum of squares: Σ (r − ⟨target row, design⟩)²
+/// over the row's observations, accumulated sequentially in observation
+/// order — the shared unit of the standalone [`view_sse`] and the
+/// engines' fused pass, which is what makes the two bit-identical.
+pub fn row_sse(operand: &Operand<'_>, trow: &[f64], i: usize, scratch: &mut Vec<f64>) -> f64 {
+    let mut s = 0.0;
+    operand.for_each_design(i, scratch, |vrow, r| {
+        let e = r - crate::linalg::dot(trow, vrow);
+        s += e * e;
+    });
+    s
+}
+
+/// Fold per-row SSE partials exactly the way
+/// `parallel_map_reduce(n, SSE_GRAIN, ..)` folds its chunk partials —
+/// row order within chunks of [`threadpool::reduce_chunk_len`], chunks
+/// in index order — so the fused-SSE total is bit-identical to
+/// [`view_sse`]'s.  (Partials are all ≥ +0.0, so the 0.0 fold seeds
+/// cannot flip a sign bit.)
+fn fold_sse_rows(slots: &[f64]) -> f64 {
+    let n = slots.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let chunk = threadpool::reduce_chunk_len(n, SSE_GRAIN);
+    slots
+        .chunks(chunk)
+        .map(|c| {
+            let mut s = 0.0;
+            for &x in c {
+                s += x;
+            }
+            s
+        })
+        .fold(0.0, |a, b| a + b)
 }
 
 /// Sum of squared residuals over the observed cells of a view — feeds the
 /// adaptive-noise Gamma update.  `target` holds the latents of the mode
 /// whose fibers `operand` iterates.
+///
+/// Runs on [`ThreadPool::parallel_map_reduce`], whose chunking depends
+/// only on `n` and whose partials fold in chunk order (satellite fix:
+/// the old Mutex-push reduction folded in completion order), so the
+/// result is bit-identical across runs, thread counts and schedules —
+/// and to the engines' fused-SSE pass over the same operand/target,
+/// whose per-row slots are folded with the same grouping by
+/// [`fold_sse_rows`].
 pub fn view_sse(operand: &Operand<'_>, target: &Mat, pool: &ThreadPool) -> (f64, usize) {
     let n = target.rows();
-    let (sse, cnt) = pool.parallel_map_reduce(
+    pool.parallel_map_reduce(
         n,
-        8,
+        SSE_GRAIN,
         |range| {
             let mut s = 0.0;
             let mut c = 0usize;
             let mut scratch = Vec::new();
             for i in range {
-                let trow = target.row(i);
-                operand.for_each_design(i, &mut scratch, |vrow, r| {
-                    let e = r - crate::linalg::dot(trow, vrow);
-                    s += e * e;
-                    c += 1;
-                });
+                s += row_sse(operand, target.row(i), i, &mut scratch);
+                c += operand.nnz(i);
             }
             (s, c)
         },
         (0.0, 0usize),
         |a, b| (a.0 + b.0, a.1 + b.1),
-    );
-    (sse, cnt)
+    )
 }
 
 /// Build the `DataAccess` for a side of a view.
@@ -623,6 +1097,7 @@ mod tests {
                 seed: 7,
                 iteration: 3,
                 side_id: 0,
+                tuning: SweepTuning::all_on(),
             };
             NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
             lat
@@ -664,6 +1139,7 @@ mod tests {
             seed: 9,
             iteration: 5,
             side_id: 0,
+            tuning: SweepTuning::all_on(),
         };
         let mut full = lat0.clone();
         NativeEngine.sample_mvn_side(&make_sweep(), &mut full, &pool);
@@ -710,6 +1186,7 @@ mod tests {
             seed: 11,
             iteration: 0,
             side_id: 0,
+            tuning: SweepTuning::all_on(),
         };
         let mut lat_fast = lat.clone();
         NativeEngine.sample_mvn_side(&make_sweep(true), &mut lat_fast, &pool);
@@ -758,6 +1235,7 @@ mod tests {
                 seed: 13,
                 iteration: 2,
                 side_id: 0,
+                tuning: SweepTuning::all_on(),
             };
             let mut lat = lat0.clone();
             NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
@@ -821,6 +1299,7 @@ mod tests {
                 seed: 17,
                 iteration: 4,
                 side_id: 0,
+                tuning: SweepTuning::all_on(),
             };
             let mut lat = lat0.clone();
             NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
@@ -844,6 +1323,116 @@ mod tests {
         });
         assert_eq!(seen, tensor.mode_nnz(0, 0));
         assert_eq!(op.k(), k);
+    }
+
+    /// A problem with a heavily skewed row-degree distribution: a few
+    /// rows above [`TILE_NNZ_MIN`] (tiled Gram path) and a long sparse
+    /// tail (rank-4 path) — exercises the threshold split and the LPT
+    /// order at once.
+    fn skewed_problem() -> (crate::sparse::SparseMatrix, Mat) {
+        let mut rng = Rng::new(91);
+        let (n, m, k) = (36, 220, 5);
+        let mut v = Mat::zeros(m, k);
+        rng.fill_normal(v.data_mut());
+        let mut trips = Vec::new();
+        for i in 0..n {
+            let p = if i % 9 == 0 { 0.8 } else { 0.05 };
+            for j in 0..m {
+                if rng.next_f64() < p {
+                    trips.push((i as u32, j as u32, rng.normal()));
+                }
+            }
+        }
+        let data = crate::sparse::SparseMatrix::from_triplets(n, m, trips);
+        assert!((0..n).any(|i| data.row_nnz(i) >= TILE_NNZ_MIN), "need tiled rows");
+        assert!((0..n).any(|i| data.row_nnz(i) < TILE_NNZ_MIN), "need rank-4 rows");
+        (data, v)
+    }
+
+    #[test]
+    fn sweep_tuning_never_changes_samples() {
+        // every §Perf PR4 switch is sample-preserving: baseline vs
+        // all-on must produce bit-identical latents, across the tiled /
+        // rank-4 threshold split and the LPT reorder
+        let (data, v) = skewed_problem();
+        let mut prior = NormalPrior::new(5);
+        let mut rng = Rng::new(92);
+        let lat0 = crate::model::init_latents(36, 5, 0.1, &mut rng);
+        prior.update_hyper(&lat0, &mut rng);
+        let spec = prior.mvn_spec().unwrap();
+        let shared = match &spec.means {
+            MeanSpec::Shared(s) => *s,
+            _ => unreachable!(),
+        };
+        // tuning rides on the sweep itself — no process-global involved,
+        // so this test cannot race with concurrently-building sessions
+        let run = |tuning: SweepTuning, threads: usize| {
+            let pool = ThreadPool::new(threads);
+            let sweep = MvnSweep {
+                lambda0: spec.lambda0,
+                means: MeanSpec::Shared(shared),
+                views: vec![ViewSlice::matrix(
+                    DataAccess::SparseRows(&data),
+                    &v,
+                    1.7,
+                    false,
+                    None,
+                )],
+                seed: 23,
+                iteration: 6,
+                side_id: 0,
+                tuning,
+            };
+            let mut lat = lat0.clone();
+            NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
+            lat
+        };
+        let base = run(SweepTuning::baseline(), 3);
+        let opt = run(SweepTuning::all_on(), 3);
+        let opt1 = run(SweepTuning::all_on(), 1);
+        assert_eq!(base.max_abs_diff(&opt), 0.0, "tuning must be sample-preserving");
+        assert_eq!(opt.max_abs_diff(&opt1), 0.0, "planned sweep must be thread-invariant");
+    }
+
+    #[test]
+    fn lpt_order_is_deterministic_and_heaviest_first() {
+        let (data, v) = skewed_problem();
+        let lam = Mat::eye(5);
+        let mu = [0.0; 5];
+        let sweep = MvnSweep {
+            lambda0: &lam,
+            means: MeanSpec::Shared(&mu),
+            views: vec![ViewSlice::matrix(DataAccess::SparseRows(&data), &v, 1.0, false, None)],
+            seed: 0,
+            iteration: 0,
+            side_id: 0,
+            tuning: SweepTuning::all_on(),
+        };
+        let order = lpt_order(&sweep, &(0..36)).expect("skewed weights need an order");
+        let o2 = lpt_order(&sweep, &(0..36)).unwrap();
+        assert_eq!(order, o2, "order must be deterministic");
+        // it is a permutation with non-increasing weights
+        let mut seen = vec![false; 36];
+        let mut prev = usize::MAX;
+        for &t in &order {
+            assert!(!std::mem::replace(&mut seen[t as usize], true));
+            let w = data.row_nnz(t as usize);
+            assert!(w <= prev, "weights must be non-increasing");
+            prev = w;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // uniform weights: no order
+        let dense = Mat::zeros(6, 4);
+        let sweep_u = MvnSweep {
+            lambda0: &lam,
+            means: MeanSpec::Shared(&mu),
+            views: vec![ViewSlice::matrix(DataAccess::DenseRows(&dense), &v, 1.0, false, None)],
+            seed: 0,
+            iteration: 0,
+            side_id: 0,
+            tuning: SweepTuning::all_on(),
+        };
+        assert!(lpt_order(&sweep_u, &(0..6)).is_none());
     }
 
     #[test]

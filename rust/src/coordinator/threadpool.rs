@@ -7,21 +7,34 @@
 //! participates, so a pool of T threads gives T-way parallelism with
 //! T-1 workers.
 //!
+//! `parallel_for_lane` additionally hands each invocation its *lane id*
+//! (a stable per-thread slot in 0..nthreads) — the hook the Gibbs sweep
+//! uses to give every lane a preallocated work area without per-row
+//! `thread_local` borrows — and an optional *visit order*, which the
+//! sweep planner fills with a descending-nnz (LPT-style) permutation so
+//! the heaviest power-law rows are issued first and never strand a lane
+//! at the tail of the sweep.
+//!
 //! Correctness contract: `f` must be safe to call concurrently for
-//! distinct `i` (rows are disjoint in all our uses).
+//! distinct `i` (rows are disjoint in all our uses).  Lane ids satisfy:
+//! at any instant each lane id is held by at most one OS thread, and a
+//! lane's invocations are sequential.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
-/// Type-erased job shared with the workers.  The `func` pointer's
-/// lifetime is erased; safety is upheld because `parallel_for` does not
-/// return until every worker has finished the job (`active == 0`).
+/// Type-erased job shared with the workers.  The `func` and `order`
+/// pointers' lifetimes are erased; safety is upheld because
+/// `parallel_for_lane` does not return until every worker has finished
+/// the job (`active == 0`).
 struct Job {
     cursor: AtomicUsize,
     n: usize,
     chunk: usize,
     active: AtomicUsize,
-    func: *const (dyn Fn(usize) + Sync),
+    /// optional visit order (length n); null = identity order
+    order: *const u32,
+    func: *const (dyn Fn(usize, usize) + Sync),
 }
 
 unsafe impl Send for Job {}
@@ -49,9 +62,10 @@ impl ThreadPool {
             done: Condvar::new(),
         });
         let mut handles = Vec::new();
-        for _ in 0..nthreads - 1 {
+        for w in 0..nthreads - 1 {
             let sh = shared.clone();
-            handles.push(std::thread::spawn(move || worker_loop(sh)));
+            // worker w owns lane w + 1; the caller is lane 0
+            handles.push(std::thread::spawn(move || worker_loop(sh, w + 1)));
         }
         ThreadPool { shared, handles, nthreads }
     }
@@ -69,29 +83,58 @@ impl ThreadPool {
     /// Run `f(i)` for every i in 0..n.  `grain` is the smallest chunk a
     /// worker grabs at once (use ~1 for heavy items, larger for light).
     pub fn parallel_for<F: Fn(usize) + Sync>(&self, n: usize, grain: usize, f: F) {
+        self.parallel_for_lane(n, grain, None, |_, i| f(i));
+    }
+
+    /// [`parallel_for`](ThreadPool::parallel_for) with lane ids and an
+    /// optional visit order.  `f(lane, i)` runs once for every i in
+    /// 0..n; when `order` is given it must be a permutation of 0..n and
+    /// items are *issued* in that sequence (an LPT-style schedule when
+    /// sorted by descending cost).  `lane` is in 0..nthreads, held by
+    /// exactly one OS thread at a time — safe to index per-lane scratch.
+    pub fn parallel_for_lane<F: Fn(usize, usize) + Sync>(
+        &self,
+        n: usize,
+        grain: usize,
+        order: Option<&[u32]>,
+        f: F,
+    ) {
         if n == 0 {
             return;
         }
+        if let Some(ord) = order {
+            assert_eq!(ord.len(), n, "visit order must cover 0..n");
+        }
         if self.nthreads == 1 || n <= grain {
-            for i in 0..n {
-                f(i);
+            match order {
+                Some(ord) => {
+                    for &i in ord {
+                        f(0, i as usize);
+                    }
+                }
+                None => {
+                    for i in 0..n {
+                        f(0, i);
+                    }
+                }
             }
             return;
         }
         // aim for ~8 chunks per lane to absorb imbalance
         let chunk = grain.max(n / (self.nthreads * 8)).max(1);
-        let fref: &(dyn Fn(usize) + Sync) = &f;
+        let fref: &(dyn Fn(usize, usize) + Sync) = &f;
         let job = Arc::new(Job {
             cursor: AtomicUsize::new(0),
             n,
             chunk,
             active: AtomicUsize::new(self.nthreads - 1),
-            // SAFETY: lifetime erased; we block below until active == 0,
-            // so no worker touches `f` after this frame ends.
+            order: order.map(|o| o.as_ptr()).unwrap_or(std::ptr::null()),
+            // SAFETY: lifetimes erased; we block below until active == 0,
+            // so no worker touches `f` or `order` after this frame ends.
             func: unsafe {
                 std::mem::transmute::<
-                    *const (dyn Fn(usize) + Sync),
-                    *const (dyn Fn(usize) + Sync),
+                    *const (dyn Fn(usize, usize) + Sync),
+                    *const (dyn Fn(usize, usize) + Sync),
                 >(fref as *const _)
             },
         });
@@ -101,8 +144,8 @@ impl ThreadPool {
             slot.1 = Some(job.clone());
         }
         self.shared.start.notify_all();
-        // caller participates
-        run_chunks(&job);
+        // caller participates as lane 0
+        run_chunks(&job, 0);
         // wait for all workers to leave the job
         let mut slot = self.shared.slot.lock().unwrap();
         while job.active.load(Ordering::Acquire) != 0 {
@@ -114,7 +157,8 @@ impl ThreadPool {
     /// Run `f(i)` for every i in 0..n and collect the results into a
     /// `Vec` in index order — parallel execution, deterministic output.
     /// Used by the predict layer (one GEMM per posterior sample, reduced
-    /// sequentially so serving results never depend on thread count).
+    /// sequentially so serving results never depend on thread count) and
+    /// by [`view_sse`](crate::coordinator::view_sse)'s per-row partials.
     /// Lock-free: each slot is written exactly once by exactly one lane
     /// (the `parallel_for` contract), the same disjoint-write pattern as
     /// the coordinator's `RowWriter`.
@@ -157,8 +201,12 @@ impl ThreadPool {
             .collect()
     }
 
-    /// Map chunks of 0..n through `map` and fold the partial results.
-    /// `T` must be combinable in any order (sums, maxima, …).
+    /// Map chunks of 0..n through `map` and fold the partial results
+    /// **in chunk order**.  The chunking depends only on `n` and
+    /// `grain` — never on the thread count — and the partials land in
+    /// chunk-indexed slots before a sequential fold, so for a
+    /// deterministic `map` the result is bit-identical across runs and
+    /// across pool sizes (the `view_sse` reproducibility contract).
     pub fn parallel_map_reduce<T, M, R>(&self, n: usize, grain: usize, map: M, init: T, reduce: R) -> T
     where
         T: Send,
@@ -168,20 +216,29 @@ impl ThreadPool {
         if n == 0 {
             return init;
         }
-        let parts = Mutex::new(Vec::new());
-        let chunk = grain.max(n / (self.nthreads * 4)).max(1);
+        let chunk = reduce_chunk_len(n, grain);
         let nchunks = n.div_ceil(chunk);
-        self.parallel_for(nchunks, 1, |c| {
+        let parts = self.parallel_collect(nchunks, 1, |c| {
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(n);
-            let t = map(lo..hi);
-            parts.lock().unwrap().push(t);
+            map(lo..hi)
         });
-        parts.into_inner().unwrap().into_iter().fold(init, |a, b| reduce(a, b))
+        parts.into_iter().fold(init, reduce)
     }
 }
 
-fn run_chunks(job: &Job) {
+/// Chunk length of [`ThreadPool::parallel_map_reduce`]'s deterministic
+/// reduction: depends only on `n` and `grain` (never the pool size), so
+/// the chunk grouping — and therefore any float fold over the chunk
+/// partials — is identical across thread counts.  ~256 chunks for large
+/// `n` (plenty for any realistic lane count).  The coordinator's
+/// fused-SSE fold calls this too, which is what keeps the fused and
+/// standalone SSE sums structurally bit-identical.
+pub(crate) fn reduce_chunk_len(n: usize, grain: usize) -> usize {
+    grain.max(n / 256).max(1)
+}
+
+fn run_chunks(job: &Job, lane: usize) {
     let f = unsafe { &*job.func };
     loop {
         let lo = job.cursor.fetch_add(job.chunk, Ordering::Relaxed);
@@ -189,13 +246,22 @@ fn run_chunks(job: &Job) {
             break;
         }
         let hi = (lo + job.chunk).min(job.n);
-        for i in lo..hi {
-            f(i);
+        if job.order.is_null() {
+            for i in lo..hi {
+                f(lane, i);
+            }
+        } else {
+            for p in lo..hi {
+                // SAFETY: order has length n (checked at submit) and
+                // outlives the job (parallel_for_lane blocks until done)
+                let i = unsafe { *job.order.add(p) } as usize;
+                f(lane, i);
+            }
         }
     }
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: Arc<Shared>, lane: usize) {
     let mut seen_gen = 0u64;
     loop {
         let job = {
@@ -211,7 +277,7 @@ fn worker_loop(shared: Arc<Shared>) {
                 slot = shared.start.wait(slot).unwrap();
             }
         };
-        run_chunks(&job);
+        run_chunks(&job, lane);
         if job.active.fetch_sub(1, Ordering::AcqRel) == 1 {
             let _guard = shared.slot.lock().unwrap();
             shared.done.notify_all();
@@ -278,6 +344,43 @@ mod tests {
     }
 
     #[test]
+    fn ordered_lane_for_covers_exactly_once() {
+        for threads in [1, 4] {
+            let pool = ThreadPool::new(threads);
+            let n = 3000;
+            // reversed visit order: every index still hit exactly once
+            let order: Vec<u32> = (0..n as u32).rev().collect();
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            pool.parallel_for_lane(n, 4, Some(&order), |lane, i| {
+                assert!(lane < pool.nthreads());
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn lane_ids_are_exclusive_while_running() {
+        // each lane id is held by at most one thread at a time: a flag
+        // per lane must never be observed already set on entry
+        let pool = ThreadPool::new(4);
+        let busy: Vec<AtomicU64> = (0..pool.nthreads()).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for_lane(5000, 1, None, |lane, _i| {
+            assert_eq!(busy[lane].swap(1, Ordering::SeqCst), 0, "lane {lane} aliased");
+            std::hint::spin_loop();
+            busy[lane].store(0, Ordering::SeqCst);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn ordered_for_checks_length() {
+        let pool = ThreadPool::new(2);
+        let order = vec![0u32, 1];
+        pool.parallel_for_lane(3, 1, Some(&order), |_, _| {});
+    }
+
+    #[test]
     fn parallel_collect_preserves_index_order() {
         let pool = ThreadPool::new(4);
         let got = pool.parallel_collect(1000, 8, |i| i * 3);
@@ -297,6 +400,28 @@ mod tests {
             |a, b| a + b,
         );
         assert_eq!(s, 499_500);
+    }
+
+    #[test]
+    fn map_reduce_is_bit_identical_across_thread_counts() {
+        // float partial sums: chunking and fold order must not depend on
+        // the pool size (satellite fix: chunk-indexed slots, ordered fold)
+        let xs: Vec<f64> = (0..10_007).map(|i| ((i * 37 + 11) % 101) as f64 * 0.001 + 1e-9).collect();
+        let run = |threads: usize| {
+            let pool = ThreadPool::new(threads);
+            pool.parallel_map_reduce(
+                xs.len(),
+                8,
+                |r| r.map(|i| xs[i] * xs[i]).sum::<f64>(),
+                0.0f64,
+                |a, b| a + b,
+            )
+        };
+        let a = run(1);
+        let b = run(4);
+        let c = run(7);
+        assert_eq!(a.to_bits(), b.to_bits(), "1 vs 4 threads");
+        assert_eq!(b.to_bits(), c.to_bits(), "4 vs 7 threads");
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //!   latent structure* so Macau's link matrix genuinely helps, as in the
 //!   paper's compound-activity use case.
 //! * [`movielens_like`] — small ratings matrix for quickstarts/tests.
+//! * [`power_law_matrix`] — Zipf row-degree sparse matrix, the workload
+//!   shape behind the nnz-weighted sweep schedule (`bench sweep`).
 //! * [`gfa_study_data`] — the Bunte et al. (2015) *simulated study*:
 //!   multiple views sharing row factors, with group-sparse structure
 //!   (each factor active in a known subset of views).
@@ -188,6 +190,48 @@ pub fn movielens_like(
     } else {
         (all, SparseMatrix::from_triplets(users, movies, Vec::<(u32, u32, f64)>::new()))
     }
+}
+
+/// Sparse matrix whose **row degrees follow a power law** — the
+/// compound-activity shape (a few promiscuous compounds with thousands
+/// of measurements, a long tail with a handful) that the nnz-weighted
+/// sweep schedule exists for.  Row i (after a deterministic shuffle so
+/// heavy rows are spread over the index space) gets an expected degree
+/// ∝ (rank+1)^-exponent; values come from a rank-8 ground truth plus
+/// noise.  Duplicate (i, j) draws merge in `from_triplets`, so the
+/// realised nnz can land slightly under `nnz`.
+pub fn power_law_matrix(
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    exponent: f64,
+    seed: u64,
+) -> SparseMatrix {
+    assert!(rows > 0 && cols > 0);
+    let mut rng = Rng::from_parts(seed, 0x90_17);
+    let k = 8;
+    let mut u = Mat::zeros(rows, k);
+    let mut v = Mat::zeros(cols, k);
+    rng.fill_normal(u.data_mut());
+    rng.fill_normal(v.data_mut());
+    let scale = 1.0 / (k as f64).sqrt();
+
+    // Zipf weights over degree ranks, then shuffle the rank→row map
+    let weights: Vec<f64> = (0..rows).map(|r| 1.0 / ((r + 1) as f64).powf(exponent)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut row_of_rank: Vec<usize> = (0..rows).collect();
+    rng.shuffle(&mut row_of_rank);
+
+    let mut trips = Vec::with_capacity(nnz);
+    for (rank, &i) in row_of_rank.iter().enumerate() {
+        let want = ((nnz as f64 * weights[rank] / total).round() as usize).clamp(1, cols);
+        for _ in 0..want {
+            let j = rng.next_below(cols);
+            let val = scale * crate::linalg::dot(u.row(i), v.row(j)) + 0.3 * rng.normal();
+            trips.push((i as u32, j as u32, val));
+        }
+    }
+    SparseMatrix::from_triplets(rows, cols, trips)
 }
 
 /// Spec for the GFA simulated study (Bunte et al. 2015, §"Simulated study").

@@ -5,8 +5,8 @@
 pub mod generators;
 
 pub use generators::{
-    chembl_synth, cp_tensor_synth, gfa_study_data, movielens_like, ChemblSpec, CpData, CpSpec,
-    GfaSpec,
+    chembl_synth, cp_tensor_synth, gfa_study_data, movielens_like, power_law_matrix, ChemblSpec,
+    CpData, CpSpec, GfaSpec,
 };
 
 use crate::linalg::Mat;

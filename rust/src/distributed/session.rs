@@ -138,6 +138,9 @@ struct WorkerParts {
     builder_views: Vec<(MatrixConfig, PriorChoice, NoiseConfig, Option<TestSet>)>,
     col_data: Vec<Option<MatrixConfig>>,
     offsets: Vec<f64>,
+    /// the leading builder's sweep-tuning override, replicated so every
+    /// worker chain makes the same fuse decision
+    tuning: Option<crate::coordinator::SweepTuning>,
 }
 
 /// Run-wide constants cloned to every worker.
@@ -250,6 +253,7 @@ impl DistributedSession {
                 builder_views,
                 col_data,
                 offsets,
+                tuning: b.tuning,
             });
         }
         DistributedSession { cfg: b.cfg, spec, plan, workers }
@@ -418,11 +422,12 @@ fn shard_view(
 
 /// Build the local session of one worker from its sharded parts.
 fn build_worker_session(parts: WorkerParts) -> TrainSession {
-    let WorkerParts { cfg, row_prior, builder_views, col_data, offsets } = parts;
+    let WorkerParts { cfg, row_prior, builder_views, col_data, offsets, tuning } = parts;
     let mut b = SessionBuilder::new(cfg);
     b.row_prior = row_prior;
     b.center = false; // centering already happened globally, pre-scatter
     b.views = builder_views;
+    b.tuning = tuning;
     let mut sess = b.build();
     for ((view, cd), off) in sess.views.iter_mut().zip(col_data).zip(offsets) {
         view.col_data = cd;
@@ -600,10 +605,20 @@ fn worker_run(
                 sess.sample_row_side(my_rows.clone(), &mut hyper_rng);
                 for vi in 0..nviews {
                     let ncols = sess.views[vi].col_latents().rows();
-                    sess.sample_col_side(vi, 0..ncols, &mut hyper_rng);
+                    // pprop's V sweep walks the local row shard's column
+                    // fibers — exactly the shard's observation set — so
+                    // the adaptive-noise SSE pass fuses into it (§Perf
+                    // PR4 sub-step plumbing); the sync/async strategies
+                    // keep the standalone `view_sse_local` below because
+                    // their SSE is allreduced over *row*-shard partials.
                     if sess.noise_is_adaptive(vi) {
-                        let (sse, nobs) = sess.view_sse_local(vi);
+                        let fuse = sess.tuning().fused_sse;
+                        let fused =
+                            sess.sample_mode_side_fused(vi, 1, 0..ncols, &mut hyper_rng, fuse);
+                        let (sse, nobs) = fused.unwrap_or_else(|| sess.view_sse_local(vi));
                         sess.update_view_noise(vi, sse, nobs, &mut hyper_rng);
+                    } else {
+                        sess.sample_col_side(vi, 0..ncols, &mut hyper_rng);
                     }
                 }
                 // every `rounds` iterations (and at the end): merge the
@@ -853,6 +868,35 @@ mod tests {
         let store = crate::store::ModelStore::open(&dir).unwrap();
         assert_eq!(store.iterations(), vec![8, 12]);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pprop_with_adaptive_noise_uses_fused_sse_and_converges() {
+        // the §Perf PR4 sub-step plumbing: pprop workers fuse the
+        // adaptive-noise SSE into their full-V sweep (their V sweep
+        // walks exactly the local shard's observations)
+        let (train, test) = crate::data::movielens_like(60, 45, 1800, 0.2, 61);
+        let c = cfg(6, 8, 12, 61);
+        let mut single = crate::session::TrainSession::bmf(train.clone(), Some(test.clone()), c.clone());
+        let r1 = single.run();
+        let dist = SessionBuilder::new(c)
+            .add_view(
+                MatrixConfig::SparseUnknown(train),
+                NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+                Some(TestSet::from_sparse(&test)),
+            )
+            .distributed(2, Strategy::PosteriorProp { rounds: 3 }, NetSpec::instant())
+            .build_distributed();
+        let r = dist.run().unwrap();
+        assert!(r.result.rmse.is_finite());
+        // independent adaptive chains merged every 3 iters still land in
+        // the same quality band as a fixed-noise single-node run
+        assert!(
+            r.result.rmse < r1.rmse * 1.5,
+            "pprop+adaptive rmse {} vs single fixed {}",
+            r.result.rmse,
+            r1.rmse
+        );
     }
 
     #[test]

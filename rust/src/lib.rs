@@ -17,7 +17,13 @@
 //!               *operand* abstraction — per observation the MVN
 //!               conditional consumes a design row: the opposite side's
 //!               latents for matrices, the other modes' Hadamard
-//!               product for tensors), [`runtime`] (PJRT/XLA AOT engine)
+//!               product for tensors — executed through a per-sweep
+//!               `SweepPlan`: cache-blocked tiled Gram above an nnz
+//!               threshold, adaptive-noise SSE fused into the final
+//!               mode's sweep, hoisted shared-rhs base, descending-nnz
+//!               LPT scheduling and per-lane work arenas, every switch
+//!               bit-exactness-preserving — see README §Performance and
+//!               `bench sweep`), [`runtime`] (PJRT/XLA AOT engine)
 //! * distributed: [`distributed`] — `comm` (message substrate with
 //!               allgather/allreduce/sub-communicators and byte + time
 //!               accounting), `shard` (nnz-balanced block ownership and

@@ -349,6 +349,92 @@ pub fn gram_rhs_rank4(a: &mut Mat, rhs: &mut [f64], alpha: f64, xs: &[f64], vals
     }
 }
 
+/// Design rows per tile of the cache-blocked Gram path (§Perf PR4).  A
+/// tile of `GRAM_TILE_ROWS` × K f64 stays inside L1 for every K we run
+/// (32 × 64 × 8 B = 16 KB), so the gather and the syrk both hit hot
+/// lines.  **Must stay a multiple of 4**: 4-row groups then align
+/// between [`gram_rhs_tile`] called tile-by-tile and
+/// [`gram_rhs_rank4`] called on one full gather, which is what makes
+/// the two paths bit-identical (property-tested).
+pub const GRAM_TILE_ROWS: usize = 32;
+
+/// Tiled syrk-style fused Gram + RHS over one gathered tile — the
+/// cache-blocked sibling of [`gram_rhs_rank4`] (§Perf PR4):
+///
+///   A(upper) += α Σ_t x_t x_tᵀ,     rhs += α Σ_t v_t x_t
+///
+/// Loop order is i-outer / 4-row-group-middle / j-inner: each output
+/// row of A stays register/L1-hot while the whole tile streams past it
+/// (a K² × B flop burst over B·K + K² data), instead of re-touching all
+/// of A per 4-row group.  Per element the accumulation *order* is
+/// identical to [`gram_rhs_rank4`]'s — 4-row group sums in ascending t,
+/// then the < 4 tail rows singly — so calling this tile-by-tile with a
+/// tile size that is a multiple of 4 produces bit-identical results to
+/// one `gram_rhs_rank4` call over the concatenated gather.  Callers
+/// mirror A afterwards.
+pub fn gram_rhs_tile(a: &mut Mat, rhs: &mut [f64], alpha: f64, xs: &[f64], vals: &[f64]) {
+    let k = rhs.len();
+    debug_assert_eq!(a.rows(), k);
+    debug_assert_eq!(xs.len(), vals.len() * k);
+    let nnz = vals.len();
+    let groups = nnz / 4;
+    for i in 0..k {
+        let row = a.row_mut(i);
+        for g in 0..groups {
+            let t = g * 4;
+            let x0 = &xs[t * k..(t + 1) * k];
+            let x1 = &xs[(t + 1) * k..(t + 2) * k];
+            let x2 = &xs[(t + 2) * k..(t + 3) * k];
+            let x3 = &xs[(t + 3) * k..(t + 4) * k];
+            let a0 = alpha * x0[i];
+            let a1 = alpha * x1[i];
+            let a2 = alpha * x2[i];
+            let a3 = alpha * x3[i];
+            for (j, rj) in row[i..].iter_mut().enumerate() {
+                *rj += a0 * x0[i + j] + a1 * x1[i + j] + a2 * x2[i + j] + a3 * x3[i + j];
+            }
+        }
+        for t in groups * 4..nnz {
+            let x = &xs[t * k..(t + 1) * k];
+            // same expression shape as ger_sym_upper's Blocked arm
+            let sxi = alpha * x[i];
+            for (rj, &xj) in row[i..].iter_mut().zip(&x[i..]) {
+                *rj += sxi * xj;
+            }
+        }
+    }
+    for g in 0..groups {
+        let t = g * 4;
+        let x0 = &xs[t * k..(t + 1) * k];
+        let x1 = &xs[(t + 1) * k..(t + 2) * k];
+        let x2 = &xs[(t + 2) * k..(t + 3) * k];
+        let x3 = &xs[(t + 3) * k..(t + 4) * k];
+        let (v0, v1, v2, v3) = (vals[t], vals[t + 1], vals[t + 2], vals[t + 3]);
+        for j in 0..k {
+            rhs[j] += alpha * (v0 * x0[j] + v1 * x1[j] + v2 * x2[j] + v3 * x3[j]);
+        }
+    }
+    for t in groups * 4..nnz {
+        axpy(rhs, alpha * vals[t], &xs[t * k..(t + 1) * k]);
+    }
+}
+
+/// [`gram_rhs_tile`] driven over a full gather in [`GRAM_TILE_ROWS`]
+/// strides — the canonical tile chunking, bit-identical to one
+/// [`gram_rhs_rank4`] call over the same gather.  The sweep's hot path
+/// streams tiles as it gathers instead of calling this, but tests and
+/// benches use it so the chunking convention lives in one place.
+pub fn gram_rhs_tiled(a: &mut Mat, rhs: &mut [f64], alpha: f64, xs: &[f64], vals: &[f64]) {
+    let k = rhs.len();
+    let nnz = vals.len();
+    let mut t0 = 0;
+    while t0 < nnz {
+        let t1 = (t0 + GRAM_TILE_ROWS).min(nnz);
+        gram_rhs_tile(a, rhs, alpha, &xs[t0 * k..t1 * k], &vals[t0..t1]);
+        t0 = t1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -436,6 +522,51 @@ mod tests {
                 assert!((x - y).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn gram_rhs_tile_is_bit_identical_to_rank4() {
+        // the §Perf PR4 contract: tile-by-tile accumulation (tile size a
+        // multiple of 4) replays gram_rhs_rank4's per-element order, so
+        // results match to the last bit — which is what lets the sweep's
+        // nnz threshold pick either path without breaking determinism
+        let mut rng = crate::rng::Rng::new(19);
+        for (k, nnz) in [(3usize, 1usize), (8, 31), (16, 32), (16, 70), (33, 129), (5, 200)] {
+            let mut xs = vec![0.0; nnz * k];
+            let mut vals = vec![0.0; nnz];
+            rng.fill_normal(&mut xs);
+            rng.fill_normal(&mut vals);
+            let alpha = 0.9;
+            let mut a4 = Mat::eye(k);
+            let mut r4 = vec![0.25; k];
+            gram_rhs_rank4(&mut a4, &mut r4, alpha, &xs, &vals);
+            let mut at = Mat::eye(k);
+            let mut rt = vec![0.25; k];
+            gram_rhs_tiled(&mut at, &mut rt, alpha, &xs, &vals);
+            assert_eq!(a4.max_abs_diff(&at), 0.0, "Λ k={k} nnz={nnz}");
+            for (x, y) in r4.iter().zip(&rt) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rhs k={k} nnz={nnz}");
+            }
+            // and both agree with the naive rank-1 accumulation
+            let mut a1 = Mat::eye(k);
+            let mut r1 = vec![0.25; k];
+            for t in 0..nnz {
+                ger_sym(&mut a1, alpha, &xs[t * k..(t + 1) * k]);
+                axpy(&mut r1, alpha * vals[t], &xs[t * k..(t + 1) * k]);
+            }
+            mirror_upper_to_lower(&mut at);
+            assert!(at.max_abs_diff(&a1) < 1e-12, "vs rank-1 k={k} nnz={nnz}");
+            for (x, y) in rt.iter().zip(&r1) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_tile_rows_is_a_multiple_of_four() {
+        // the bit-compatibility argument above depends on this
+        assert_eq!(GRAM_TILE_ROWS % 4, 0);
+        assert!(GRAM_TILE_ROWS >= 4);
     }
 
     #[test]

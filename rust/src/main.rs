@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   train     train a factorization from a config file or flags
 //!   generate  write a synthetic dataset (ChEMBL-like / MovieLens-like)
-//!   bench     regenerate a paper table/figure (fig3|fig4|fig5|gfa|macau|table1)
+//!   bench     regenerate a paper table/figure or perf table
+//!             (fig3|fig4|fig5|gfa|macau|scaling|serving|sweep|table1|tensor)
 //!   info      show the AOT artifact manifest the runtime would use
 //!
 //! Examples:
@@ -33,7 +34,7 @@ const USAGE: &str = "usage: smurff <train|predict|generate|bench|info> [flags]
            --row N --topk K       top-K column recommendations for a row
   generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
            [--side-out <mtx>] [--seed N]
-  bench    <fig3|fig4|fig5|gfa|macau|scaling|table1|serving|tensor|all> [--quick]
+  bench    <fig3|fig4|fig5|gfa|macau|scaling|serving|sweep|table1|tensor|all> [--quick]
            [--json <path>]   (writes the report to disk; --out is an alias)
   info     [--artifacts <dir>]";
 

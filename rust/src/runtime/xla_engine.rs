@@ -227,6 +227,7 @@ mod tests {
             seed: 5,
             iteration: 2,
             side_id: 0,
+            tuning: crate::coordinator::SweepTuning::all_on(),
         };
 
         let mut lat_native = lat0.clone();

@@ -28,7 +28,8 @@ mod checkpoint;
 pub use checkpoint::Checkpoint;
 
 use crate::coordinator::{
-    access_for, Engine, MvnSweep, NativeEngine, Operand, TensorModeOperand, ThreadPool, ViewSlice,
+    access_for, DataAccess, Engine, MvnSweep, NativeEngine, Operand, SweepTuning,
+    TensorModeOperand, ThreadPool, ViewSlice,
 };
 use crate::data::{MatrixConfig, SideInfo, TensorTestSet, TestSet};
 use crate::linalg::Mat;
@@ -118,6 +119,12 @@ pub struct View {
     /// `col_data` the column shard).  `None` = single node: both sweeps
     /// read `data`.  Matrix views only.
     pub col_data: Option<MatrixConfig>,
+    /// Transpose of fully-observed dense matrix data, built once at
+    /// session setup, so the column-side sweep and its gathers walk
+    /// contiguous rows instead of the cache-hostile `DenseCols` stride
+    /// (§Perf PR4 satellite).  Values and iteration order are identical
+    /// to the strided walk, so results are bit-exact either way.
+    pub dense_t: Option<Mat>,
     /// Factor matrices + priors for modes 1.. (mode 0 is the session's
     /// shared U).  A matrix view has exactly one entry: its column side.
     pub modes: Vec<ModeFactor>,
@@ -222,6 +229,9 @@ pub struct SessionBuilder {
     pub(crate) engine: Option<Box<dyn Engine>>,
     pub(crate) center: bool,
     pub(crate) dist: Option<crate::distributed::DistSpec>,
+    /// explicit sweep-tuning override; `None` = snapshot the global at
+    /// build time
+    pub(crate) tuning: Option<SweepTuning>,
 }
 
 #[derive(Clone)]
@@ -269,7 +279,20 @@ impl SessionBuilder {
             engine: None,
             center: true,
             dist: None,
+            tuning: None,
         }
+    }
+
+    /// Pin this session's [`SweepTuning`] instead of snapshotting the
+    /// process-wide default at build time.  This is the race-free way
+    /// to build sessions with different `fused_sse` settings (the bench
+    /// harness' baseline-vs-optimised comparison): the global's
+    /// engine-side switches are sample-preserving, but the fused flag
+    /// changes the adaptive-noise summation order, so it must be fixed
+    /// per session, not flipped globally around a build.
+    pub fn sweep_tuning(mut self, t: SweepTuning) -> Self {
+        self.tuning = Some(t);
+        self
     }
 
     pub fn row_prior(mut self, kind: PriorKind) -> Self {
@@ -409,9 +432,16 @@ impl SessionBuilder {
             let col_latents = crate::model::init_latents(ncols, k, self.cfg.init_std, &mut rng);
             let col_prior = prior_choice.build(ncols, k);
             let aggregator = test.as_ref().map(|t| PredictionAggregator::new(t.len()));
+            // §Perf PR4 satellite: transpose dense data once so the
+            // column sweep reads contiguous rows
+            let dense_t = match &data {
+                MatrixConfig::Dense(m) => Some(m.transpose()),
+                _ => None,
+            };
             views.push(View {
                 data: ViewData::Matrix(data),
                 col_data: None,
+                dense_t,
                 modes: vec![ModeFactor { latents: col_latents, prior: col_prior }],
                 noise,
                 test,
@@ -442,6 +472,7 @@ impl SessionBuilder {
             views.push(View {
                 data: ViewData::Tensor(tensor),
                 col_data: None,
+                dense_t: None,
                 modes,
                 noise,
                 test: None,
@@ -464,6 +495,9 @@ impl SessionBuilder {
             pool: ThreadPool::new(threads),
             engine: self.engine.unwrap_or(Box::new(NativeEngine)),
             iteration: 0,
+            // snapshot the sweep tuning once: a session's fuse decision
+            // must not change mid-chain
+            tuning: self.tuning.unwrap_or_else(SweepTuning::global),
         }
     }
 }
@@ -507,6 +541,8 @@ pub struct TrainSession {
     pool: ThreadPool,
     engine: Box<dyn Engine>,
     iteration: usize,
+    /// sweep tuning snapshotted at build time (see [`SweepTuning`])
+    tuning: SweepTuning,
 }
 
 impl TrainSession {
@@ -568,22 +604,45 @@ impl TrainSession {
         self.engine.name()
     }
 
+    /// The sweep tuning this session was built with (snapshotted from
+    /// [`SweepTuning::global`] at build time).
+    pub fn tuning(&self) -> SweepTuning {
+        self.tuning
+    }
+
     /// One full Gibbs iteration (Algorithm 1's outer-loop body) —
     /// composed from the shard-range sub-steps below over full ranges,
     /// so a single node and a distributed worker run the *same* code.
     /// The loop iterates *modes*: the shared mode 0 first, then every
     /// further mode of every view (a matrix view has exactly one).
+    ///
+    /// §Perf PR4: for adaptive-noise views the SSE pass is *fused* into
+    /// the final mode's sweep (residuals against the freshly sampled
+    /// rows, per-row partials folded in row order) — one full O(nnz·K)
+    /// pass per iteration instead of two.  The fused sum traverses the
+    /// final mode's fibers, so its float summation order differs from
+    /// the mode-0-oriented [`view_sse_local`](TrainSession::view_sse_local)
+    /// (same observations, same math); the fallback is used whenever
+    /// the engine declines to fuse or `SweepTuning::fused_sse` was off
+    /// at build time.
     pub fn step(&mut self) {
         let mut hyper_rng = self.hyper_rng();
         let nrows = self.u.rows();
         self.sample_row_side(0..nrows, &mut hyper_rng);
         for vi in 0..self.views.len() {
-            for m in 1..self.views[vi].nmodes() {
+            let adaptive = self.noise_is_adaptive(vi);
+            let last = self.views[vi].nmodes() - 1;
+            let mut fused = None;
+            for m in 1..=last {
                 let n = self.views[vi].mode_len(m);
-                self.sample_mode_side(vi, m, 0..n, &mut hyper_rng);
+                let fuse = adaptive && self.tuning.fused_sse && m == last;
+                fused = self.sample_mode_side_fused(vi, m, 0..n, &mut hyper_rng, fuse);
             }
-            if self.noise_is_adaptive(vi) {
-                let (sse, nobs) = self.view_sse_local(vi);
+            if adaptive {
+                let (sse, nobs) = match fused {
+                    Some(x) => x,
+                    None => self.view_sse_local(vi),
+                };
                 self.update_view_noise(vi, sse, nobs, &mut hyper_rng);
             }
         }
@@ -631,6 +690,7 @@ impl TrainSession {
                 seed,
                 iteration: iter,
                 side_id: 0,
+                tuning: self.tuning,
             };
             self.engine.sample_mvn_side_range(&sweep, &mut self.u, &self.pool, rows);
         }
@@ -657,6 +717,26 @@ impl TrainSession {
         self.finish_mode_side(vi, m, hyper_rng);
     }
 
+    /// [`sample_mode_side`] that additionally fuses the adaptive-noise
+    /// SSE pass into the sweep when `fuse` is set: returns the view's
+    /// residual sum of squares + observation count over `range`'s
+    /// fibers, computed against the freshly sampled factor rows.
+    /// `None` when not fusing (or the engine declined) — callers fall
+    /// back to [`view_sse_local`](TrainSession::view_sse_local).  The
+    /// hyper-RNG consumption is identical either way.
+    pub fn sample_mode_side_fused(
+        &mut self,
+        vi: usize,
+        m: usize,
+        range: std::ops::Range<usize>,
+        hyper_rng: &mut Rng,
+        fuse: bool,
+    ) -> Option<(f64, usize)> {
+        let fused = self.sample_mode_side_pre_fused(vi, m, range, hyper_rng, fuse);
+        self.finish_mode_side(vi, m, hyper_rng);
+        fused
+    }
+
     /// [`sample_mode_side`] for the classic column side (mode 1) — the
     /// distributed workers' spelling.
     pub fn sample_col_side(
@@ -671,7 +751,9 @@ impl TrainSession {
     /// Mode hyper update + sweep of `range`, without the post-latents
     /// pass (distributed workers run it after the block exchange).  The
     /// matrix sweep reads the view's `col_data` when present
-    /// (distributed column shard), else `data`.
+    /// (distributed column shard), else `data` — and walks the
+    /// transposed replica of dense data (`dense_t`) so the column sweep
+    /// is contiguous.
     pub fn sample_mode_side_pre(
         &mut self,
         vi: usize,
@@ -679,6 +761,19 @@ impl TrainSession {
         range: std::ops::Range<usize>,
         hyper_rng: &mut Rng,
     ) {
+        self.sample_mode_side_pre_fused(vi, m, range, hyper_rng, false);
+    }
+
+    /// [`sample_mode_side_pre`] with the optional fused SSE pass — see
+    /// [`sample_mode_side_fused`](TrainSession::sample_mode_side_fused).
+    pub fn sample_mode_side_pre_fused(
+        &mut self,
+        vi: usize,
+        m: usize,
+        range: std::ops::Range<usize>,
+        hyper_rng: &mut Rng,
+        fuse: bool,
+    ) -> Option<(f64, usize)> {
         assert!(m >= 1 && m < self.views[vi].nmodes(), "mode {m} out of range");
         let iter = self.iteration as u64;
         let seed = self.cfg.seed;
@@ -690,6 +785,7 @@ impl TrainSession {
         // take the target factor out so the slice can borrow the others
         let mut target =
             std::mem::replace(&mut self.views[vi].modes[m - 1].latents, Mat::zeros(0, 0));
+        let fused;
         {
             let view = &self.views[vi];
             let probit = view.noise.is_probit();
@@ -705,8 +801,17 @@ impl TrainSession {
                         );
                     }
                     let full = col_data.fully_observed() && !probit;
+                    // §Perf PR4 satellite: dense column sweeps read the
+                    // pre-transposed replica (contiguous rows) instead
+                    // of striding columns — same values, same order
+                    let access = match (col_data, &view.dense_t) {
+                        (MatrixConfig::Dense(_), Some(t)) if view.col_data.is_none() => {
+                            DataAccess::DenseRows(t)
+                        }
+                        _ => access_for(col_data, false),
+                    };
                     ViewSlice::matrix(
-                        access_for(col_data, false),
+                        access,
                         &self.u,
                         alpha,
                         probit,
@@ -721,7 +826,7 @@ impl TrainSession {
                     ViewSlice::tensor_mode(t, m, others, alpha, probit)
                 }
             };
-            match view.modes[m - 1].prior.mvn_spec() {
+            fused = match view.modes[m - 1].prior.mvn_spec() {
                 Some(spec) => {
                     let sweep = MvnSweep {
                         lambda0: spec.lambda0,
@@ -730,24 +835,25 @@ impl TrainSession {
                         seed,
                         iteration: iter,
                         side_id,
+                        tuning: self.tuning,
                     };
-                    self.engine.sample_mvn_side_range(&sweep, &mut target, &self.pool, range);
+                    self.engine.sample_mvn_side_fused(&sweep, &mut target, &self.pool, range, fuse)
                 }
-                None => {
-                    crate::coordinator::sample_side_custom_range(
-                        view.modes[m - 1].prior.as_ref(),
-                        &slice,
-                        &mut target,
-                        &self.pool,
-                        seed,
-                        iter,
-                        side_id,
-                        range,
-                    );
-                }
-            }
+                None => crate::coordinator::sample_side_custom_fused(
+                    view.modes[m - 1].prior.as_ref(),
+                    &slice,
+                    &mut target,
+                    &self.pool,
+                    seed,
+                    iter,
+                    side_id,
+                    range,
+                    fuse,
+                ),
+            };
         }
         self.views[vi].modes[m - 1].latents = target;
+        fused
     }
 
     /// [`sample_mode_side_pre`] for mode 1 — the distributed workers'
@@ -1162,6 +1268,70 @@ mod tests {
         let a1 = s.views[0].noise.alpha();
         assert_ne!(a0, a1, "adaptive alpha should be resampled");
         assert!(a1 > 0.0 && a1.is_finite());
+    }
+
+    #[test]
+    fn adaptive_fused_session_is_thread_count_invariant() {
+        // the fused SSE pass feeds the adaptive noise update from
+        // per-row partials folded in row order: the whole chain must
+        // stay bit-identical across pool sizes
+        let (train, test) = crate::data::movielens_like(70, 50, 1800, 0.2, 19);
+        let run = |threads| {
+            let mut cfg = quick_cfg(4, 3, 6);
+            cfg.threads = threads;
+            let mut s = SessionBuilder::new(cfg)
+                .add_view(
+                    MatrixConfig::SparseUnknown(train.clone()),
+                    NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 20.0 },
+                    Some(TestSet::from_sparse(&test)),
+                )
+                .build();
+            let r = s.run();
+            (r.rmse, s.views[0].noise.alpha())
+        };
+        let (r1, a1) = run(1);
+        let (r4, a4) = run(4);
+        let (r7, a7) = run(7);
+        assert_eq!(r1, r4, "fused adaptive chain must be thread-invariant");
+        assert_eq!(r4, r7);
+        assert_eq!(a1, a4);
+        assert_eq!(a4, a7);
+    }
+
+    #[test]
+    fn fused_step_matches_manual_substeps_with_adaptive_noise() {
+        // step()'s fused SSE equals composing the fused sub-steps by
+        // hand — and the fused value is exactly view_sse over the final
+        // mode's operand and fresh factors
+        let (train, _) = crate::data::movielens_like(40, 30, 900, 0.0, 23);
+        let build = || {
+            SessionBuilder::new(quick_cfg(4, 2, 4))
+                .add_view(
+                    MatrixConfig::SparseUnknown(train.clone()),
+                    NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+                    None,
+                )
+                .build()
+        };
+        let mut a = build();
+        let mut b = build();
+        for _ in 0..3 {
+            a.step();
+            let mut hyper = b.hyper_rng();
+            let n = b.u.rows();
+            b.sample_row_side(0..n, &mut hyper);
+            let m = b.views[0].col_latents().rows();
+            let fuse = b.tuning().fused_sse;
+            let (sse, nobs) = b
+                .sample_mode_side_fused(0, 1, 0..m, &mut hyper, fuse)
+                .unwrap_or_else(|| b.view_sse_local(0));
+            b.update_view_noise(0, sse, nobs, &mut hyper);
+            b.aggregate_test_predictions();
+            b.advance_iteration();
+        }
+        assert_eq!(a.u.max_abs_diff(&b.u), 0.0);
+        assert_eq!(a.views[0].col_latents().max_abs_diff(b.views[0].col_latents()), 0.0);
+        assert_eq!(a.views[0].noise.alpha(), b.views[0].noise.alpha());
     }
 
     #[test]

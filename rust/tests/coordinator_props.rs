@@ -7,7 +7,10 @@
 //! bit-identical latents, because every (iteration, side, row) derives
 //! its own RNG stream.
 
-use smurff::coordinator::{DataAccess, MvnSweep, NativeEngine, ThreadPool, ViewSlice, Engine};
+use smurff::coordinator::{
+    view_sse, DataAccess, Engine, MvnSweep, NativeEngine, Operand, SweepTuning, ThreadPool,
+    ViewSlice, TILE_NNZ_MIN,
+};
 use smurff::linalg::Mat;
 use smurff::priors::{MeanSpec, NormalPrior, Prior};
 use smurff::rng::Rng;
@@ -24,6 +27,26 @@ fn random_problem(rng: &mut Rng) -> (SparseMatrix, Mat, usize) {
     for i in 0..n {
         for j in 0..m {
             if rng.next_f64() < 0.25 {
+                trips.push((i as u32, j as u32, rng.normal()));
+            }
+        }
+    }
+    (SparseMatrix::from_triplets(n, m, trips), v, k)
+}
+
+/// A power-law-ish problem wide enough that some rows cross the tiled
+/// Gram threshold while the tail stays on the rank-4 path.
+fn skewed_problem(rng: &mut Rng) -> (SparseMatrix, Mat, usize) {
+    let n = 12 + rng.next_below(24);
+    let m = TILE_NNZ_MIN * 2 + rng.next_below(120);
+    let k = 2 + rng.next_below(6);
+    let mut v = Mat::zeros(m, k);
+    rng.fill_normal(v.data_mut());
+    let mut trips = Vec::new();
+    for i in 0..n {
+        let p = if i % 7 == 0 { 0.8 } else { 0.06 };
+        for j in 0..m {
+            if rng.next_f64() < p {
                 trips.push((i as u32, j as u32, rng.normal()));
             }
         }
@@ -61,6 +84,7 @@ fn prop_schedule_invariance() {
                 seed,
                 iteration: 1,
                 side_id: 0,
+                tuning: SweepTuning::all_on(),
             };
             NativeEngine.sample_mvn_side(&sweep, &mut lat, &pool);
             lat
@@ -72,6 +96,150 @@ fn prop_schedule_invariance() {
         assert!(b.max_abs_diff(&c) == 0.0);
         lat0 = a;
         assert!(lat0.data().iter().all(|x| x.is_finite()));
+    });
+}
+
+#[test]
+fn prop_tiled_gram_rank4_and_rank1_agree() {
+    // §Perf PR4: tile-by-tile gram_rhs_tile == one-shot gram_rhs_rank4
+    // to the last bit, and both == the naive rank-1 accumulation within
+    // 1e-12 — for random K and nnz straddling the tile size
+    use smurff::linalg::{
+        axpy, ger_sym, gram_rhs_rank4, gram_rhs_tiled, mirror_upper_to_lower, GRAM_TILE_ROWS,
+    };
+    forall(25, |rng| {
+        let k = 2 + rng.next_below(40);
+        let nnz = 1 + rng.next_below(3 * GRAM_TILE_ROWS + 5);
+        let mut xs = vec![0.0; nnz * k];
+        let mut vals = vec![0.0; nnz];
+        rng.fill_normal(&mut xs);
+        rng.fill_normal(&mut vals);
+        let alpha = 0.5 + rng.next_f64();
+
+        let mut a4 = Mat::eye(k);
+        let mut r4 = vec![0.1; k];
+        gram_rhs_rank4(&mut a4, &mut r4, alpha, &xs, &vals);
+
+        let mut at = Mat::eye(k);
+        let mut rt = vec![0.1; k];
+        gram_rhs_tiled(&mut at, &mut rt, alpha, &xs, &vals);
+        assert_eq!(a4.max_abs_diff(&at), 0.0, "tiled Λ must equal rank-4 Λ (k={k} nnz={nnz})");
+        for (x, y) in r4.iter().zip(&rt) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+
+        let mut a1 = Mat::eye(k);
+        let mut r1 = vec![0.1; k];
+        for t in 0..nnz {
+            ger_sym(&mut a1, alpha, &xs[t * k..(t + 1) * k]);
+            axpy(&mut r1, alpha * vals[t], &xs[t * k..(t + 1) * k]);
+        }
+        mirror_upper_to_lower(&mut at);
+        assert!(at.max_abs_diff(&a1) < 1e-12, "vs naive rank-1 (k={k} nnz={nnz})");
+        for (x, y) in rt.iter().zip(&r1) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    });
+}
+
+#[test]
+fn prop_fused_sse_bit_identical_to_standalone_at_any_thread_count() {
+    // the fused pass sums per-row residual partials in row order — it
+    // must equal the standalone view_sse to the last bit at 1/4/7
+    // threads, on problems exercising both the tiled and rank-4 paths
+    forall(8, |rng| {
+        let (data, v, k) = skewed_problem(rng);
+        let n = data.nrows();
+        let mut prior = NormalPrior::new(k);
+        let lat0 = smurff::model::init_latents(n, k, 0.2, rng);
+        prior.update_hyper(&lat0, rng);
+        let spec = prior.mvn_spec().unwrap();
+        let seed = rng.next_u64();
+        let run = |threads: usize| {
+            let pool = ThreadPool::new(threads);
+            let sweep = MvnSweep {
+                lambda0: spec.lambda0,
+                means: match &spec.means {
+                    MeanSpec::Shared(s) => MeanSpec::Shared(s),
+                    _ => unreachable!(),
+                },
+                views: vec![ViewSlice::matrix(
+                    DataAccess::SparseRows(&data),
+                    &v,
+                    1.8,
+                    false,
+                    None,
+                )],
+                seed,
+                iteration: 2,
+                side_id: 0,
+                tuning: SweepTuning::all_on(),
+            };
+            let mut lat = lat0.clone();
+            let fused = NativeEngine
+                .sample_mvn_side_fused(&sweep, &mut lat, &pool, 0..n, true)
+                .expect("native engine fuses");
+            let op = Operand::Matrix { data: DataAccess::SparseRows(&data), other: &v };
+            let standalone = view_sse(&op, &lat, &pool);
+            (fused, standalone, lat)
+        };
+        let (f1, s1, l1) = run(1);
+        let (f4, s4, l4) = run(4);
+        let (f7, s7, l7) = run(7);
+        for ((f, s), t) in [(f1, s1), (f4, s4), (f7, s7)].into_iter().zip([1, 4, 7]) {
+            assert_eq!(f.0.to_bits(), s.0.to_bits(), "fused vs standalone at {t} threads");
+            assert_eq!(f.1, s.1);
+        }
+        assert_eq!(f1.0.to_bits(), f4.0.to_bits(), "fused SSE must be thread-invariant");
+        assert_eq!(f4.0.to_bits(), f7.0.to_bits());
+        assert_eq!(l1.max_abs_diff(&l4), 0.0);
+        assert_eq!(l4.max_abs_diff(&l7), 0.0);
+    });
+}
+
+#[test]
+fn prop_weighted_schedule_preserves_shard_determinism() {
+    // the LPT (descending-nnz) issue order reorders only the schedule:
+    // a full sweep and any two-shard split of it must stay bit-equal,
+    // including across the tiled/rank-4 threshold
+    forall(8, |rng| {
+        let (data, v, k) = skewed_problem(rng);
+        let n = data.nrows();
+        let mut prior = NormalPrior::new(k);
+        let lat0 = smurff::model::init_latents(n, k, 0.2, rng);
+        prior.update_hyper(&lat0, rng);
+        let spec = prior.mvn_spec().unwrap();
+        let seed = rng.next_u64();
+        let split = 1 + rng.next_below(n - 1);
+        let pool = ThreadPool::new(3);
+        let make_sweep = || MvnSweep {
+            lambda0: spec.lambda0,
+            means: match &spec.means {
+                MeanSpec::Shared(s) => MeanSpec::Shared(s),
+                _ => unreachable!(),
+            },
+            views: vec![ViewSlice::matrix(
+                DataAccess::SparseRows(&data),
+                &v,
+                2.0,
+                false,
+                None,
+            )],
+            seed,
+            iteration: 4,
+            side_id: 0,
+            tuning: SweepTuning::all_on(),
+        };
+        let mut full = lat0.clone();
+        NativeEngine.sample_mvn_side(&make_sweep(), &mut full, &pool);
+        let mut sharded = lat0.clone();
+        NativeEngine.sample_mvn_side_range(&make_sweep(), &mut sharded, &pool, 0..split);
+        NativeEngine.sample_mvn_side_range(&make_sweep(), &mut sharded, &pool, split..n);
+        assert_eq!(
+            full.max_abs_diff(&sharded),
+            0.0,
+            "shard sweeps must equal the full LPT-scheduled sweep (split {split})"
+        );
     });
 }
 
