@@ -36,8 +36,11 @@ fn main() {
         store_dir.display()
     );
 
-    // ---- phase 2: serve from the store
+    // ---- phase 2: serve from the store.  Training finished by packing
+    // the store into the v3 serving artifact, so the session maps the
+    // factor panels zero-copy (on unix) instead of deserializing them.
     let serve = PredictSession::open(&store_dir).expect("open model store");
+    println!("serving zero-copy from the packed artifact: {}", serve.zero_copy());
     let p = serve.predict_one(0, 0, 5);
     println!("user 0, movie 5: {:.2} ± {:.2} (posterior std over {} samples)", p.mean, p.std, serve.nsamples());
     println!("top-5 unseen movies for user 0:");

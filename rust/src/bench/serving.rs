@@ -2,13 +2,22 @@
 //! once a posterior store is on disk — the ROADMAP's "serve heavy
 //! traffic" axis, measured the same way the paper-figure benches are.
 //!
-//! Three tables: pointwise queries/s and top-K recommendations/s as the
-//! number of posterior samples served varies, and dense-block GEMM
-//! throughput (cells/s) over a samples × batch sweep.
+//! Four tables:
+//! * pointwise QPS with p50/p99 per-request latency vs. samples served
+//!   (the numbers a serving SLO is written against);
+//! * the **batched vs. seed-scalar sweep** over samples × batch — the
+//!   tentpole acceptance table: the batched panel engine
+//!   (`predict_cells` over the packed artifact) against the seed path
+//!   (owned per-snapshot `Mat`s, one scalar `dot` per (sample, cell));
+//! * top-K recommendations/s (one `dots_into` panel pass per sample vs.
+//!   the seed per-candidate loop);
+//! * dense-block GEMM throughput (cells/s) over a samples × batch sweep.
 
 use super::{Report, Table};
+use crate::linalg::dot;
 use crate::predict::PredictSession;
 use crate::session::{SessionConfig, TrainSession};
+use crate::store::{ModelStore, Snapshot};
 use crate::util::Timer;
 
 fn trained_store(quick: bool) -> std::path::PathBuf {
@@ -31,37 +40,168 @@ fn trained_store(quick: bool) -> std::path::PathBuf {
     dir
 }
 
+/// The seed implementation's serving state: every snapshot deserialized
+/// into owned `Mat`s, scored cell-by-cell in per-sample scalar loops —
+/// the baseline the packed batched engine is measured against.
+struct ScalarBaseline {
+    samples: Vec<Snapshot>,
+    offset: f64,
+}
+
+impl ScalarBaseline {
+    fn load(store: &ModelStore, nserve: usize) -> ScalarBaseline {
+        let samples = (0..nserve.min(store.len()))
+            .map(|i| store.load_snapshot(i).expect("load snapshot"))
+            .collect();
+        ScalarBaseline { samples, offset: store.meta().offsets[0] }
+    }
+
+    fn predict_cells(&self, rows: &[u32], cols: &[u32]) -> Vec<f64> {
+        let n = self.samples.len() as f64;
+        rows.iter()
+            .zip(cols)
+            .map(|(&r, &c)| {
+                let mut sum = 0.0;
+                for snap in &self.samples {
+                    sum += dot(snap.u.row(r as usize), snap.vs[0].row(c as usize));
+                }
+                sum / n + self.offset
+            })
+            .collect()
+    }
+
+    fn top_k(&self, row: usize, k: usize) -> Vec<(u32, f64)> {
+        let ncols = self.samples[0].vs[0].rows();
+        let n = self.samples.len() as f64;
+        let mut scored: Vec<(u32, f64)> = (0..ncols)
+            .map(|j| {
+                let mut sum = 0.0;
+                for snap in &self.samples {
+                    sum += dot(snap.u.row(row), snap.vs[0].row(j));
+                }
+                (j as u32, sum / n + self.offset)
+            })
+            .collect();
+        scored.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then_with(|| a.0.cmp(&b.0))
+        });
+        scored.truncate(k);
+        scored
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
 pub fn run(quick: bool) -> Report {
     let mut report = Report::new("serving");
     let dir = trained_store(quick);
-    let full = PredictSession::open(&dir).expect("open serving store");
-    let (nrows, ncols) = (full.nrows(), full.ncols(0));
+    let store = ModelStore::open(&dir).expect("open serving store");
+    assert!(store.is_packed(), "training must emit the packed v3 artifact");
+    // one session reused across every table: truncate_samples is just a
+    // serve-count clamp now (it can shrink and grow), so per-row model
+    // rebuilds and thread-pool respawns would only pollute the timings
+    let mut ps = PredictSession::from_store(&store, 0).expect("open serving session");
+    let nsamples_total = ps.nsamples();
+    let (nrows, ncols) = (ps.nrows(), ps.ncols(0));
     let mut sample_counts: Vec<usize> =
-        [1, 4, full.nsamples()].iter().copied().filter(|&s| s <= full.nsamples()).collect();
+        [1, 4, nsamples_total].iter().copied().filter(|&s| s <= nsamples_total).collect();
     sample_counts.dedup();
 
-    // ---- pointwise + top-K rate vs. samples served
+    // ---- pointwise QPS + latency percentiles vs. samples served
     let mut t = Table::new(
-        "pointwise and top-K serving rate",
-        &["samples", "pointwise q/s", "top-10 req/s"],
+        &format!(
+            "pointwise serving: QPS and per-request latency (zero_copy={})",
+            ps.zero_copy()
+        ),
+        &["samples", "QPS", "p50", "p99"],
     );
     let nqueries = if quick { 2_000 } else { 20_000 };
+    for &s in &sample_counts {
+        ps.truncate_samples(s);
+        let mut lat: Vec<f64> = Vec::with_capacity(nqueries);
+        let timer = Timer::start();
+        for i in 0..nqueries {
+            let row = (i % nrows) as u32;
+            let col = (i * 7 % ncols) as u32;
+            let t0 = Timer::start();
+            std::hint::black_box(ps.predict_one(0, row as usize, col as usize));
+            lat.push(t0.elapsed_s());
+        }
+        let qps = nqueries as f64 / timer.elapsed_s();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(vec![
+            format!("{s}"),
+            format!("{qps:.0}"),
+            super::fmt_s(percentile(&lat, 0.50)),
+            super::fmt_s(percentile(&lat, 0.99)),
+        ]);
+    }
+    report.push(t);
+
+    // ---- the acceptance sweep: batched panel engine vs. seed scalar
+    // path, samples × batch (same cells, answers asserted equal)
+    let mut t = Table::new(
+        "batched vs seed-scalar predict_cells (Mcells/s), samples x batch",
+        &["samples", "batch", "scalar", "batched", "speedup"],
+    );
+    let batches: &[usize] = if quick { &[256, 2_048] } else { &[1_024, 16_384] };
+    for &s in &sample_counts {
+        let baseline = ScalarBaseline::load(&store, s);
+        ps.truncate_samples(s);
+        for &b in batches {
+            let rows: Vec<u32> = (0..b).map(|i| (i * 13 % nrows) as u32).collect();
+            let cols: Vec<u32> = (0..b).map(|i| (i * 7 % ncols) as u32).collect();
+            let timer = Timer::start();
+            let scalar = baseline.predict_cells(&rows, &cols);
+            let scalar_rate = b as f64 / timer.elapsed_s() / 1e6;
+            let timer = Timer::start();
+            let batched = ps.predict_cells_mean(0, &rows, &cols);
+            let batched_rate = b as f64 / timer.elapsed_s() / 1e6;
+            assert_eq!(scalar.len(), batched.len());
+            for (a, g) in scalar.iter().zip(&batched) {
+                assert_eq!(a.to_bits(), g.to_bits(), "batched path must match the seed path");
+            }
+            t.row(vec![
+                format!("{s}"),
+                format!("{b}"),
+                format!("{scalar_rate:.2}"),
+                format!("{batched_rate:.2}"),
+                format!("{:.2}x", batched_rate / scalar_rate),
+            ]);
+        }
+    }
+    report.push(t);
+
+    // ---- top-K: panel pass vs seed per-candidate loop
+    let mut t = Table::new(
+        "top-10 recommendations/s: seed scalar vs batched panel",
+        &["samples", "scalar req/s", "batched req/s"],
+    );
     let nusers = if quick { 20 } else { 100 };
     for &s in &sample_counts {
-        let mut ps = PredictSession::open(&dir).expect("open serving store");
+        let baseline = ScalarBaseline::load(&store, s);
         ps.truncate_samples(s);
-        let rows: Vec<u32> = (0..nqueries).map(|i| (i % nrows) as u32).collect();
-        let cols: Vec<u32> = (0..nqueries).map(|i| (i * 7 % ncols) as u32).collect();
         let timer = Timer::start();
-        let preds = ps.predict_cells(0, &rows, &cols);
-        let point_rate = preds.len() as f64 / timer.elapsed_s();
-
+        for u in 0..nusers {
+            std::hint::black_box(baseline.top_k(u % nrows, 10));
+        }
+        let scalar_rate = nusers as f64 / timer.elapsed_s();
         let timer = Timer::start();
         for u in 0..nusers {
             std::hint::black_box(ps.top_k(0, u % nrows, 10, &[]));
         }
-        let topk_rate = nusers as f64 / timer.elapsed_s();
-        t.row(vec![format!("{s}"), format!("{point_rate:.0}"), format!("{topk_rate:.1}")]);
+        let batched_rate = nusers as f64 / timer.elapsed_s();
+        t.row(vec![
+            format!("{s}"),
+            format!("{scalar_rate:.1}"),
+            format!("{batched_rate:.1}"),
+        ]);
     }
     report.push(t);
 
@@ -70,11 +210,10 @@ pub fn run(quick: bool) -> Report {
         "dense-block prediction (GEMM per sample)",
         &["samples", "batch rows", "cells", "Mcells/s"],
     );
-    let batches: &[usize] = if quick { &[32, 128] } else { &[64, 256] };
+    let blk_batches: &[usize] = if quick { &[32, 128] } else { &[64, 256] };
     for &s in &sample_counts {
-        let mut ps = PredictSession::open(&dir).expect("open serving store");
         ps.truncate_samples(s);
-        for &b in batches {
+        for &b in blk_batches {
             let br = b.min(nrows);
             let cells = br * ncols;
             let timer = Timer::start();

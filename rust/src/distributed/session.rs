@@ -668,6 +668,13 @@ fn worker_run(
     if let Some(e) = save_err {
         return Err(e);
     }
+    // rank 0 packs the merged store into the v3 serving artifact, same
+    // as a single-node session's save path
+    if let Some(st) = store.as_mut() {
+        if !st.is_empty() {
+            st.compact()?;
+        }
+    }
     let lead = (rank == 0).then(|| LeadOut {
         view_rmse: (0..nviews).map(|i| sess.view_rmse(i)).collect(),
         auc: sess.view_auc(0),

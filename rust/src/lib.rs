@@ -32,12 +32,23 @@
 //!               bounded-staleness async / posterior-propagation
 //!               communication strategies)
 //! * serving:    [`store`] (versioned on-disk posterior model store —
-//!               one factor matrix per mode; version-1 2-mode stores
-//!               still load), [`predict`] (`PredictSession`: pointwise +
-//!               batched prediction with uncertainty, top-K
-//!               recommendation — per coordinate tuple and over one
-//!               free tensor mode — and out-of-matrix prediction via
-//!               Macau side info)
+//!               one factor matrix per mode; version-1/2 stores still
+//!               load, and `ModelStore::compact()` migrates any of them
+//!               into the **packed v3 artifact**: one page-aligned
+//!               binary file per view with all samples' factors in
+//!               sample-major blocks, mmap'd zero-copy on unix),
+//!               [`predict`] (an immutable `Arc<ServingModel>` of
+//!               borrowed sample-major factor panels under
+//!               `PredictSession`: row-grouped batched pointwise
+//!               prediction with a posterior-mean fast path, panel-dot
+//!               top-K, per-sample-GEMM dense blocks — every batched
+//!               path bit-identical to the scalar path — plus tensor
+//!               coordinate serving and out-of-matrix prediction via
+//!               Macau side info), [`serve`] (`smurff serve`: a TCP
+//!               front-end speaking newline-delimited JSON with a
+//!               bounded micro-batching queue over the coordinator
+//!               pool, and a snapshot watcher that hot-swaps the model
+//!               `Arc` when training appends snapshots)
 //! * evaluation: [`baselines`] (PyMC3-like, GraphChi-like, GASPI-like),
 //!               [`hwmodel`] (Xeon / Xeon Phi / ARM roofline+cache model),
 //!               [`bench`] (the harness regenerating every paper figure)
@@ -88,6 +99,7 @@ pub mod runtime;
 pub mod distributed;
 pub mod store;
 pub mod predict;
+pub mod serve;
 pub mod baselines;
 pub mod hwmodel;
 pub mod bench;
@@ -98,8 +110,9 @@ pub mod prelude {
     pub use crate::distributed::{DistResult, DistributedSession, NetSpec, Strategy};
     pub use crate::linalg::Mat;
     pub use crate::noise::NoiseConfig;
-    pub use crate::predict::{BlockPrediction, PredictSession, Prediction};
+    pub use crate::predict::{BlockPrediction, PredictSession, Prediction, ServingModel};
     pub use crate::priors::PriorKind;
+    pub use crate::serve::{serve, ServeConfig, ServerHandle};
     pub use crate::session::{
         ModePrior, SessionBuilder, SessionConfig, TrainResult, TrainSession,
     };

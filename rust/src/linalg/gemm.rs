@@ -7,7 +7,7 @@
 //! [`Backend::Naive`] — textbook triple loop: our stand-in for a generic
 //! unoptimized BLAS build.  The Figure-5 bench sweeps this axis.
 
-use super::Mat;
+use super::{Mat, MatRef};
 use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Which gemm/syrk implementation to use.  Global default + per-call
@@ -41,6 +41,14 @@ const TILE: usize = 64;
 
 /// C = A · B  (alloc-free into `c`; `c` is overwritten).
 pub fn gemm_into(a: &Mat, b: &Mat, c: &mut Mat, backend: Backend) {
+    gemm_ref_into(a.view(), b.view(), c, backend);
+}
+
+/// [`gemm_into`] over borrowed views — the actual kernel.  The serving
+/// engine calls this directly on `MatRef`s over the packed artifact's
+/// mmap'd factor panels; the `Mat` entry points wrap it, so both paths
+/// run the identical arithmetic sequence.
+pub fn gemm_ref_into(a: MatRef<'_>, b: MatRef<'_>, c: &mut Mat, backend: Backend) {
     assert_eq!(a.cols(), b.rows(), "gemm inner dim");
     assert_eq!((c.rows(), c.cols()), (a.rows(), b.cols()), "gemm out shape");
     c.data_mut().fill(0.0);
@@ -141,6 +149,13 @@ pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// C = A · B over borrowed views, with the global backend.
+pub fn gemm_ref(a: MatRef<'_>, b: MatRef<'_>) -> Mat {
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    gemm_ref_into(a, b, &mut c, Backend::global());
+    c
+}
+
 /// y = A · x.
 pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.cols(), x.len());
@@ -149,6 +164,16 @@ pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
 
 /// y = A^T · x.
 pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len());
+    let mut y = vec![0.0; a.cols()];
+    for i in 0..a.rows() {
+        super::axpy(&mut y, x[i], a.row(i));
+    }
+    y
+}
+
+/// y = A^T · x over a borrowed view — same accumulation as [`matvec_t`].
+pub fn matvec_t_ref(a: MatRef<'_>, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows(), x.len());
     let mut y = vec![0.0; a.cols()];
     for i in 0..a.rows() {
@@ -210,7 +235,7 @@ mod tests {
         m
     }
 
-    fn gemm_ref(a: &Mat, b: &Mat) -> Mat {
+    fn gemm_naive(a: &Mat, b: &Mat) -> Mat {
         let mut c = Mat::zeros(a.rows(), b.cols());
         for i in 0..a.rows() {
             for j in 0..b.cols() {
@@ -230,7 +255,7 @@ mod tests {
         for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 13, 9), (70, 65, 67), (128, 64, 130)] {
             let a = random_mat(m, k, &mut rng);
             let b = random_mat(k, n, &mut rng);
-            let want = gemm_ref(&a, &b);
+            let want = gemm_naive(&a, &b);
             for backend in [Backend::Naive, Backend::Blocked] {
                 let mut c = Mat::zeros(m, n);
                 gemm_into(&a, &b, &mut c, backend);
@@ -246,7 +271,7 @@ mod tests {
             Backend::set_global(backend);
             let a = random_mat(23, 7, &mut rng);
             let b = random_mat(23, 11, &mut rng);
-            let want = gemm_ref(&a.transpose(), &b);
+            let want = gemm_naive(&a.transpose(), &b);
             let got = gemm_tn(&a, &b);
             assert!(got.max_abs_diff(&want) < 1e-9);
         }
@@ -264,7 +289,7 @@ mod tests {
     fn syrk_backends_agree() {
         let mut rng = Rng::new(3);
         let a = random_mat(31, 12, &mut rng);
-        let want = gemm_ref(&a.transpose(), &a);
+        let want = gemm_naive(&a.transpose(), &a);
         for backend in [Backend::Naive, Backend::Blocked] {
             let got = syrk(&a, backend);
             assert!(got.max_abs_diff(&want) < 1e-9, "{backend:?}");

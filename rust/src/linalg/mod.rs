@@ -17,7 +17,10 @@ pub use chol::{
     chol_inplace, chol_solve, tri_solve_lower, tri_solve_lower_into, tri_solve_upper_t,
     tri_solve_upper_t_into, Chol,
 };
-pub use gemm::{gemm, gemm_into, gemm_tn, matvec, matvec_t, syrk, Backend};
+pub use gemm::{
+    gemm, gemm_into, gemm_ref, gemm_ref_into, gemm_tn, matvec, matvec_t, matvec_t_ref, syrk,
+    Backend,
+};
 
 use std::fmt;
 
@@ -157,6 +160,67 @@ impl Mat {
     }
 }
 
+/// Borrowed row-major matrix view over a contiguous `f64` slice — the
+/// zero-copy sibling of [`Mat`].  The packed serving artifact hands out
+/// `MatRef`s over its mmap'd sample-major factor blocks, and the gemm /
+/// batched-dot kernels accept them directly, so prediction never clones
+/// a factor matrix (ISSUE 5 tentpole).  Bit-compatibility: every kernel
+/// taking a `MatRef` runs the exact arithmetic of its `Mat` twin (the
+/// `Mat` entry points are thin wrappers over the `MatRef` ones).
+#[derive(Clone, Copy, Debug)]
+pub struct MatRef<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a [f64],
+}
+
+impl<'a> MatRef<'a> {
+    pub fn new(rows: usize, cols: usize, data: &'a [f64]) -> MatRef<'a> {
+        assert_eq!(data.len(), rows * cols, "MatRef shape mismatch");
+        MatRef { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &'a [f64] {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Owned copy (materializes the view; used by the store migration
+    /// path, never by the serving hot loops).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.to_vec())
+    }
+}
+
+impl Mat {
+    /// Borrow this matrix as a [`MatRef`].
+    #[inline]
+    pub fn view(&self) -> MatRef<'_> {
+        MatRef { rows: self.rows, cols: self.cols, data: &self.data }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatRef<'_> {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]
@@ -211,6 +275,56 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         rest += a[i] * b[i];
     }
     s[0] + s[1] + s[2] + s[3] + rest
+}
+
+/// Batched dot kernel of the serving engine: `out[j] += dot(x, a.row(j))`
+/// for every row `j` of `a` — one contiguous pass over a sample-major
+/// factor panel instead of a scalar `dot` call per (sample, cell).
+///
+/// Register-blocks 4 panel rows per sweep (x stays live across the four
+/// outputs), but each output keeps its own 4-lane accumulator set walked
+/// in [`dot`]'s exact chunk order, so every `out[j]` is **bit-identical**
+/// to `dot(x, a.row(j))` — the contract that lets the batched
+/// `PredictSession` paths reproduce the per-sample scalar path to the
+/// last ulp (property-tested below).
+pub fn dots_into(x: &[f64], a: MatRef<'_>, out: &mut [f64]) {
+    let k = x.len();
+    debug_assert_eq!(a.cols(), k);
+    debug_assert_eq!(a.rows(), out.len());
+    let chunks = k / 4;
+    let mut j = 0;
+    while j + 4 <= a.rows() {
+        let (r0, r1, r2, r3) = (a.row(j), a.row(j + 1), a.row(j + 2), a.row(j + 3));
+        let mut s0 = [0.0f64; 4];
+        let mut s1 = [0.0f64; 4];
+        let mut s2 = [0.0f64; 4];
+        let mut s3 = [0.0f64; 4];
+        for c in 0..chunks {
+            let i = c * 4;
+            for l in 0..4 {
+                s0[l] += x[i + l] * r0[i + l];
+                s1[l] += x[i + l] * r1[i + l];
+                s2[l] += x[i + l] * r2[i + l];
+                s3[l] += x[i + l] * r3[i + l];
+            }
+        }
+        let (mut t0, mut t1, mut t2, mut t3) = (0.0, 0.0, 0.0, 0.0);
+        for i in chunks * 4..k {
+            t0 += x[i] * r0[i];
+            t1 += x[i] * r1[i];
+            t2 += x[i] * r2[i];
+            t3 += x[i] * r3[i];
+        }
+        out[j] += s0[0] + s0[1] + s0[2] + s0[3] + t0;
+        out[j + 1] += s1[0] + s1[1] + s1[2] + s1[3] + t1;
+        out[j + 2] += s2[0] + s2[1] + s2[2] + s2[3] + t2;
+        out[j + 3] += s3[0] + s3[1] + s3[2] + s3[3] + t3;
+        j += 4;
+    }
+    while j < a.rows() {
+        out[j] += dot(x, a.row(j));
+        j += 1;
+    }
 }
 
 /// y += s * x
@@ -470,6 +584,56 @@ mod tests {
         let b: Vec<f64> = (0..13).map(|i| (13 - i) as f64).collect();
         let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mat_ref_views_share_data() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let v = m.view();
+        assert_eq!((v.rows(), v.cols()), (2, 3));
+        assert_eq!(v.row(1), m.row(1));
+        assert_eq!(v[(0, 2)], 3.0);
+        assert_eq!(v.to_mat(), m);
+        // a view over a sub-slice (one "sample block" of a packed panel)
+        let blk = MatRef::new(1, 3, &m.data()[3..6]);
+        assert_eq!(blk.row(0), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn dots_into_is_bit_identical_to_dot_per_row() {
+        // the batched-serving contract: every out[j] must equal
+        // dot(x, row_j) to the last bit, for all k chunk shapes and for
+        // panel heights exercising both the 4-row blocks and the tail
+        let mut rng = crate::rng::Rng::new(29);
+        for (rows, k) in [(1usize, 3usize), (4, 8), (5, 16), (7, 5), (12, 17), (33, 64)] {
+            let mut panel = Mat::zeros(rows, k);
+            let mut x = vec![0.0; k];
+            rng.fill_normal(panel.data_mut());
+            rng.fill_normal(&mut x);
+            let mut out = vec![0.25; rows];
+            dots_into(&x, panel.view(), &mut out);
+            for j in 0..rows {
+                let want = 0.25 + dot(&x, panel.row(j));
+                assert_eq!(out[j].to_bits(), want.to_bits(), "rows={rows} k={k} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_ref_matches_gemm_bitwise() {
+        let mut rng = crate::rng::Rng::new(31);
+        for backend in [Backend::Blocked, Backend::Naive] {
+            Backend::set_global(backend);
+            let mut a = Mat::zeros(9, 6);
+            let mut b = Mat::zeros(6, 11);
+            rng.fill_normal(a.data_mut());
+            rng.fill_normal(b.data_mut());
+            let owned = gemm(&a, &b);
+            let borrowed = gemm_ref(a.view(), b.view());
+            assert_eq!(owned.max_abs_diff(&borrowed), 0.0, "{backend:?}");
+            assert_eq!(matvec_t(&a, &[1.0; 9]), matvec_t_ref(a.view(), &[1.0; 9]));
+        }
+        Backend::set_global(Backend::Blocked);
     }
 
     #[test]

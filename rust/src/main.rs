@@ -21,7 +21,7 @@ use smurff::util::cli::Args;
 use smurff::util::config::Config;
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: smurff <train|predict|generate|bench|info> [flags]
+const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|bench|info> [flags]
   train    --config <toml> | --data <mtx> [--test <mtx>] | --tensor <tns> [--test <tns>]
            | --synthetic <chembl|movielens>
            [--k N] [--burnin N] [--nsamples N] [--seed N] [--threads N]
@@ -32,6 +32,14 @@ const USAGE: &str = "usage: smurff <train|predict|generate|bench|info> [flags]
   predict  --store <dir> [--view N] [--threads N]
            --row N --col N        pointwise prediction with uncertainty
            --row N --topk K       top-K column recommendations for a row
+  serve    --store <dir> [--addr host:port] [--threads N] [--batch N]
+           [--batch-wait-ms N] [--queue-cap N] [--poll-ms N] [--allow-shutdown]
+           (newline-delimited JSON over TCP; hot-reloads when the store grows)
+  query    --addr host:port  --status | --shutdown-server
+           | --row N --col N [--view N] | --row N --topk K [--view N]
+           (one-shot client for `smurff serve`; prints the raw JSON reply)
+  compact  --store <dir>     pack a snapshot-dir store into the v3 serving
+           artifact (page-aligned, mmap'd zero-copy by predict/serve)
   generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
            [--side-out <mtx>] [--seed N]
   bench    <fig3|fig4|fig5|gfa|macau|scaling|serving|sweep|table1|tensor|all> [--quick]
@@ -51,7 +59,15 @@ fn main() {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args = Args::from_env(&["verbose", "quick", "help"]).map_err(anyhow::Error::msg)?;
+    let args = Args::from_env(&[
+        "verbose",
+        "quick",
+        "help",
+        "allow-shutdown",
+        "status",
+        "shutdown-server",
+    ])
+    .map_err(anyhow::Error::msg)?;
     if args.get_bool("help") || args.positionals.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -59,6 +75,9 @@ fn run() -> anyhow::Result<()> {
     match args.positionals[0].as_str() {
         "train" => cmd_train(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
+        "query" => cmd_query(&args),
+        "compact" => cmd_compact(&args),
         "generate" => cmd_generate(&args),
         "bench" => cmd_bench(&args),
         "info" => cmd_info(&args),
@@ -481,6 +500,99 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
             println!("({r}, {c}) = {:.4} ± {:.4}", p.mean, p.std);
         }
     }
+    Ok(())
+}
+
+/// Run the TCP serving front-end over a posterior store: newline-
+/// delimited JSON requests, micro-batched scoring, hot reload when the
+/// training store gains snapshots.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use std::time::Duration;
+    let store = args
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("serve needs --store <dir>\n{USAGE}"))?;
+    let cfg = smurff::serve::ServeConfig {
+        addr: args.get_str("addr", "127.0.0.1:7799"),
+        threads: args.get_usize("threads", 0).map_err(anyhow::Error::msg)?,
+        batch_max: args.get_usize("batch", 256).map_err(anyhow::Error::msg)?,
+        batch_wait: Duration::from_millis(
+            args.get_usize("batch-wait-ms", 1).map_err(anyhow::Error::msg)? as u64,
+        ),
+        queue_cap: args.get_usize("queue-cap", 1024).map_err(anyhow::Error::msg)?,
+        poll: Duration::from_millis(
+            args.get_usize("poll-ms", 500).map_err(anyhow::Error::msg)? as u64,
+        ),
+        allow_shutdown: args.get_bool("allow-shutdown"),
+    };
+    let handle = smurff::serve::serve(Path::new(store), cfg)?;
+    println!(
+        "serving {store} on {} (try `smurff query --addr {} --status`)",
+        handle.addr(),
+        handle.addr()
+    );
+    handle.wait();
+    println!("server stopped");
+    Ok(())
+}
+
+/// One-shot client for `smurff serve`: send a single request, print the
+/// raw JSON reply (scriptable — the CI smoke job greps it).
+fn cmd_query(args: &Args) -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get_str("addr", "127.0.0.1:7799");
+    let request = if args.get_bool("status") {
+        r#"{"op":"status"}"#.to_string()
+    } else if args.get_bool("shutdown-server") {
+        r#"{"op":"shutdown"}"#.to_string()
+    } else {
+        let view = args.get_usize("view", 0).map_err(anyhow::Error::msg)?;
+        let row = args.get_usize("row", usize::MAX).map_err(anyhow::Error::msg)?;
+        if row == usize::MAX {
+            anyhow::bail!(
+                "query needs --status, --shutdown-server, --row/--col or --row/--topk\n{USAGE}"
+            );
+        }
+        if args.has("topk") {
+            let k = args.get_usize("topk", 10).map_err(anyhow::Error::msg)?;
+            format!(r#"{{"op":"topk","view":{view},"row":{row},"k":{k}}}"#)
+        } else {
+            let col = args.get_usize("col", usize::MAX).map_err(anyhow::Error::msg)?;
+            if col == usize::MAX {
+                anyhow::bail!("query needs --col N (or --topk K) with --row\n{USAGE}");
+            }
+            format!(r#"{{"op":"predict","view":{view},"row":{row},"col":{col}}}"#)
+        }
+    };
+    let stream = std::net::TcpStream::connect(&addr)
+        .map_err(|e| anyhow::anyhow!("cannot connect to {addr}: {e}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30)))?;
+    let mut writer = stream.try_clone()?;
+    writeln!(writer, "{request}")?;
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line)?;
+    if line.trim().is_empty() {
+        anyhow::bail!("server closed the connection without replying");
+    }
+    println!("{}", line.trim());
+    Ok(())
+}
+
+/// Pack a snapshot-dir store (any version) into the v3 serving artifact.
+fn cmd_compact(args: &Args) -> anyhow::Result<()> {
+    let store = args
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("compact needs --store <dir>\n{USAGE}"))?;
+    let mut s = smurff::store::ModelStore::open(Path::new(store))?;
+    if s.is_packed() {
+        println!("{store} is already packed ({} snapshots); re-packing", s.len());
+    }
+    s.compact()?;
+    println!(
+        "packed {} posterior snapshots into {store}/packed (store layout v{}) — \
+         predict/serve now map the factors zero-copy",
+        s.len(),
+        smurff::store::STORE_VERSION
+    );
     Ok(())
 }
 

@@ -78,20 +78,54 @@ pub fn predict_cells(u: &Mat, v: &Mat, test: &TestSet) -> Vec<f64> {
         .collect()
 }
 
+/// Row access shared by owned (`&Mat`) and borrowed
+/// ([`crate::linalg::MatRef`], the packed serving panels) factor
+/// matrices, so [`hadamard_dot`] has a single generic body — which is
+/// what makes the borrowed serving path bit-identical to the owned
+/// training path by construction.
+pub trait FactorRows {
+    fn factor_row(&self, i: usize) -> &[f64];
+    fn factor_cols(&self) -> usize;
+}
+
+impl FactorRows for &Mat {
+    #[inline]
+    fn factor_row(&self, i: usize) -> &[f64] {
+        self.row(i)
+    }
+
+    #[inline]
+    fn factor_cols(&self) -> usize {
+        self.cols()
+    }
+}
+
+impl FactorRows for crate::linalg::MatRef<'_> {
+    #[inline]
+    fn factor_row(&self, i: usize) -> &[f64] {
+        self.row(i)
+    }
+
+    #[inline]
+    fn factor_cols(&self) -> usize {
+        self.cols()
+    }
+}
+
 /// One cell of a CP factorization: pred = Σ_k Π_m F_m[i_m, k] — the
 /// per-sample Hadamard-dot.  Multiplications run in ascending-mode
 /// order and the accumulation replays [`crate::linalg::dot`]'s 4-lane
 /// pattern, so for two modes this is bit-identical to
 /// [`predict_cells`]'s `dot`.
 #[inline]
-pub fn hadamard_dot(factors: &[&Mat], coords: &[usize]) -> f64 {
+pub fn hadamard_dot<F: FactorRows>(factors: &[F], coords: &[usize]) -> f64 {
     debug_assert_eq!(factors.len(), coords.len());
-    let k = factors[0].cols();
-    let first = factors[0].row(coords[0]);
+    let k = factors[0].factor_cols();
+    let first = factors[0].factor_row(coords[0]);
     let prod = |c: usize| {
         let mut p = first[c];
         for (f, &i) in factors[1..].iter().zip(&coords[1..]) {
-            p *= f.row(i)[c];
+            p *= f.factor_row(i)[c];
         }
         p
     };

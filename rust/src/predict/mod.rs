@@ -1,36 +1,53 @@
 //! Predict sessions: serve a trained model from a posterior store
 //! (SMURFF's `PredictSession`, Vander Aa et al. 2019 §3).
 //!
-//! A [`PredictSession`] opens a [`crate::store::ModelStore`] written by a
-//! `TrainSession` with `save_freq > 0` and serves, without touching the
-//! training stack again:
+//! A [`PredictSession`] wraps an immutable [`Arc<ServingModel>`] — the
+//! contiguous sample-major factor panels built from a
+//! [`crate::store::ModelStore`] (zero-copy mmap panels on a packed v3
+//! store) — and serves, without touching the training stack again:
 //!
 //! * **pointwise** predictions averaged over the posterior samples, with
-//!   the per-cell posterior predictive std-dev ([`Prediction`]);
-//! * **dense-block** predictions — one GEMM per posterior sample, fanned
-//!   out over the coordinator [`ThreadPool`] and reduced in sample order
-//!   so results are identical for any thread count;
-//! * **top-K recommendation** per row via a bounded binary heap over the
-//!   candidate columns;
+//!   the per-cell posterior predictive std-dev ([`Prediction`]) —
+//!   batched: queries are grouped by row so each (sample, row) latent
+//!   loads once, with a posterior-mean-only fast path
+//!   ([`PredictSession::predict_cells_mean`]) next to the full
+//!   mean±std path;
+//! * **top-K recommendation** per row: per sample one batched-dot pass
+//!   over the contiguous candidate panel ([`crate::linalg::dots_into`])
+//!   instead of a scalar loop per (sample, candidate), then a bounded
+//!   binary heap with deterministic index tie-breaking;
+//! * **dense-block** predictions — one GEMM per posterior sample
+//!   straight off the borrowed row panel, fanned out over the
+//!   coordinator [`ThreadPool`] and reduced in sample order so results
+//!   are identical for any thread count;
 //! * **N-mode tensor serving** — pointwise mean±std at a coordinate
 //!   tuple ([`PredictSession::predict_coords`]) and top-K over one free
-//!   mode with the others fixed ([`PredictSession::top_k_mode`]), both
-//!   via the per-sample Hadamard-dot (bit-identical to the matrix dot
-//!   for 2-mode views);
+//!   mode with the others fixed ([`PredictSession::top_k_mode`]);
 //! * **out-of-matrix** prediction for rows never seen at training time,
 //!   through the Macau prior's link model (u_new = μ + βᵀ f).
 //!
-//! Serving averages the *same* per-sample predictions the train session
-//! aggregated, so a store saved every sampling iteration reproduces
-//! `TrainResult::rmse` to ~1 ulp (tested below).
+//! Every batched path accumulates per cell in posterior-sample order
+//! with [`crate::linalg::dot`]'s exact arithmetic, so results are
+//! **bit-identical** to the per-sample scalar path of the seed
+//! implementation (asserted in tests) — the batching only changes the
+//! memory walk, not the numbers.  Serving averages the *same*
+//! per-sample predictions the train session aggregated, so a store
+//! saved every sampling iteration reproduces `TrainResult::rmse` to
+//! ~1 ulp (tested below).
+
+mod serving_model;
+
+pub use serving_model::{FactorPanel, ServingModel};
 
 use crate::coordinator::ThreadPool;
-use crate::linalg::{dot, gemm, Mat};
-use crate::store::{ModelStore, Snapshot, StoreMeta};
+use crate::linalg::{dot, dots_into, gemm_ref_into, Backend, Mat, MatRef};
+use crate::model::hadamard_dot;
+use crate::store::{ModelStore, StoreMeta};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::ops::Range;
 use std::path::Path;
+use std::sync::Arc;
 
 /// A served prediction: posterior mean and predictive std-dev across the
 /// stored samples (std is 0 with fewer than 2 samples, matching
@@ -51,16 +68,28 @@ pub struct BlockPrediction {
     pub std: Mat,
 }
 
-/// A serving session over a loaded posterior store.
+/// Candidate panel rows scored per parallel chunk by the batched top-K
+/// path (columns are chunked, samples stream inside each chunk).
+const TOPK_CHUNK: usize = 256;
+
+/// Cells per parallel work item of the batched pointwise engine: row
+/// groups larger than this split into chunks so a single-row batch (one
+/// user, many candidates) still fans out across the pool.  Per-cell
+/// accumulation order is unchanged by the split.
+const GROUP_CELLS: usize = 256;
+
+/// A serving session over an immutable, shareable posterior model.
 pub struct PredictSession {
-    meta: StoreMeta,
-    samples: Vec<Snapshot>,
-    pool: ThreadPool,
+    model: Arc<ServingModel>,
+    /// samples actually served (the latency/fidelity knob); the first
+    /// `nserve` of the model's samples, never 0
+    nserve: usize,
+    pool: Arc<ThreadPool>,
 }
 
 impl PredictSession {
-    /// Open a store directory and load every posterior sample into
-    /// memory, with a pool sized from the machine.
+    /// Open a store directory and build the serving model (zero-copy on
+    /// a packed store), with a pool sized from the machine.
     pub fn open(dir: &Path) -> anyhow::Result<PredictSession> {
         PredictSession::open_with_threads(dir, 0)
     }
@@ -74,87 +103,69 @@ impl PredictSession {
 
     /// Build a session from an already-open store handle.
     pub fn from_store(store: &ModelStore, threads: usize) -> anyhow::Result<PredictSession> {
-        if store.is_empty() {
-            anyhow::bail!("model store {} holds no posterior samples", store.dir().display());
-        }
-        let meta = store.meta().clone();
-        let mut samples = Vec::with_capacity(store.len());
-        for i in 0..store.len() {
-            let snap = store.load_snapshot(i)?;
-            // validate payload shapes against the manifest up front: all
-            // serving paths bounds-check against the manifest only, and a
-            // mismatch surfacing inside a pool worker would hang the call
-            if snap.u.rows() != meta.nrows || snap.u.cols() != meta.num_latent {
-                anyhow::bail!(
-                    "sample {i}: U is {}x{}, manifest says {}x{}",
-                    snap.u.rows(),
-                    snap.u.cols(),
-                    meta.nrows,
-                    meta.num_latent
-                );
-            }
-            if snap.vs.len() != meta.total_mats() {
-                anyhow::bail!(
-                    "sample {i}: {} factor matrices, manifest says {}",
-                    snap.vs.len(),
-                    meta.total_mats()
-                );
-            }
-            for (vi, (v, &nc)) in snap.vs.iter().zip(meta.view_dims.iter().flatten()).enumerate() {
-                if v.rows() != nc || v.cols() != meta.num_latent {
-                    anyhow::bail!(
-                        "sample {i}: V{vi} is {}x{}, manifest says {nc}x{}",
-                        v.rows(),
-                        v.cols(),
-                        meta.num_latent
-                    );
-                }
-            }
-            if let Some(link) = &snap.link {
-                if link.beta.rows() != meta.link_features
-                    || link.beta.cols() != meta.num_latent
-                    || link.mu.len() != meta.num_latent
-                {
-                    anyhow::bail!("sample {i}: link shapes do not match the manifest");
-                }
-            }
-            samples.push(snap);
-        }
+        PredictSession::from_model(Arc::new(ServingModel::from_store(store)?), threads)
+    }
+
+    /// Build a session over an already-built model (the serve engine's
+    /// entry point: models are shared and hot-swapped as `Arc`s).
+    pub fn from_model(model: Arc<ServingModel>, threads: usize) -> anyhow::Result<PredictSession> {
         let pool = if threads == 0 { ThreadPool::default_size() } else { ThreadPool::new(threads) };
-        Ok(PredictSession { meta, samples, pool })
+        Ok(PredictSession { nserve: model.nsamples(), model, pool: Arc::new(pool) })
+    }
+
+    /// A new session over `model` sharing this session's thread pool —
+    /// the hot-reload primitive: the serve engine swaps the returned
+    /// session in atomically while in-flight requests finish on the old
+    /// one.  Serves every sample of the new model.
+    pub fn with_model(&self, model: Arc<ServingModel>) -> PredictSession {
+        PredictSession { nserve: model.nsamples(), model, pool: self.pool.clone() }
+    }
+
+    /// The shared, immutable model this session serves.
+    pub fn model(&self) -> Arc<ServingModel> {
+        self.model.clone()
+    }
+
+    /// Whether factors are served zero-copy out of a packed artifact.
+    pub fn zero_copy(&self) -> bool {
+        self.model.zero_copy()
+    }
+
+    fn meta(&self) -> &StoreMeta {
+        self.model.meta()
     }
 
     pub fn nsamples(&self) -> usize {
-        self.samples.len()
+        self.nserve
     }
 
     pub fn num_latent(&self) -> usize {
-        self.meta.num_latent
+        self.meta().num_latent
     }
 
     pub fn nviews(&self) -> usize {
-        self.meta.nviews()
+        self.meta().nviews()
     }
 
     pub fn nrows(&self) -> usize {
-        self.meta.nrows
+        self.meta().nrows
     }
 
     /// Column count of a 2-mode view (its first further mode).
     pub fn ncols(&self, view: usize) -> usize {
-        self.meta.view_dims[view][0]
+        self.meta().view_dims[view][0]
     }
 
     /// Number of modes of `view`, including the shared mode 0.
     pub fn nmodes(&self, view: usize) -> usize {
-        1 + self.meta.view_dims[view].len()
+        1 + self.meta().view_dims[view].len()
     }
 
     /// Full per-mode dimensions of `view` (mode 0 first).
     pub fn mode_dims(&self, view: usize) -> Vec<usize> {
         let mut d = Vec::with_capacity(self.nmodes(view));
-        d.push(self.meta.nrows);
-        d.extend_from_slice(&self.meta.view_dims[view]);
+        d.push(self.meta().nrows);
+        d.extend_from_slice(&self.meta().view_dims[view]);
         d
     }
 
@@ -165,30 +176,23 @@ impl PredictSession {
     fn check_two_mode(&self, view: usize) {
         assert!(view < self.nviews(), "view {view} out of range");
         assert_eq!(
-            self.meta.view_dims[view].len(),
+            self.meta().view_dims[view].len(),
             1,
             "view {view} has {} modes; use predict_coords / top_k_mode",
             self.nmodes(view)
         );
     }
 
-    /// View `view`'s first further-mode factor of sample `s` (2-mode
-    /// views: the classic V).
-    #[inline]
-    fn v2(&self, s: usize, view: usize) -> &Mat {
-        &self.samples[s].vs[self.meta.vs_offset(view)]
-    }
-
-    /// Per-mode factor refs of `view` in every sample (mode 0 = U).
-    fn sample_factors(&self, view: usize) -> Vec<Vec<&Mat>> {
-        let off = self.meta.vs_offset(view);
-        let nm = self.meta.view_dims[view].len();
-        self.samples
-            .iter()
-            .map(|snap| {
-                let mut f: Vec<&Mat> = Vec::with_capacity(1 + nm);
-                f.push(&snap.u);
-                f.extend(snap.vs[off..off + nm].iter());
+    /// Per-mode factor views of `view` for every served sample (mode 0
+    /// = U) — the tensor APIs' access pattern.
+    fn sample_factors(&self, view: usize) -> Vec<Vec<MatRef<'_>>> {
+        let off = self.meta().vs_offset(view);
+        let nm = self.meta().view_dims[view].len();
+        (0..self.nserve)
+            .map(|s| {
+                let mut f: Vec<MatRef<'_>> = Vec::with_capacity(1 + nm);
+                f.push(self.model.u(s));
+                f.extend((0..nm).map(|m| self.model.factor(off + m, s)));
                 f
             })
             .collect()
@@ -197,14 +201,14 @@ impl PredictSession {
     /// Whether the store carries a Macau link model (out-of-matrix
     /// prediction available).
     pub fn has_link(&self) -> bool {
-        self.meta.link_features > 0
+        self.meta().link_features > 0
     }
 
     /// Serve from only the first `n` posterior samples — the latency /
     /// fidelity knob (fewer samples = faster, noisier).  No-op when `n`
     /// is at least the loaded count; keeps at least one sample.
     pub fn truncate_samples(&mut self, n: usize) {
-        self.samples.truncate(n.max(1));
+        self.nserve = n.clamp(1, self.model.nsamples());
     }
 
     /// Posterior mean + std for one cell of one view.
@@ -215,45 +219,129 @@ impl PredictSession {
     }
 
     /// Pointwise predictions for an explicit cell list (the serving
-    /// analogue of training's test-set aggregation), parallelized over
-    /// cells.  `rows` and `cols` must have equal length.
+    /// analogue of training's test-set aggregation).  Queries are
+    /// grouped by row and parallelized over the groups: per (group,
+    /// sample) the row's latent vector loads once and the group's
+    /// candidate columns stream through the contiguous factor panel —
+    /// bit-identical to scoring each cell alone.  `rows` and `cols`
+    /// must have equal length.
     pub fn predict_cells(&self, view: usize, rows: &[u32], cols: &[u32]) -> Vec<Prediction> {
+        let (sums, sqs) = self.batched_moments(view, rows, cols, true);
+        sums.iter()
+            .zip(&sqs)
+            .map(|(&s, &ss)| self.finish(s, ss, view))
+            .collect()
+    }
+
+    /// The posterior-mean fast path of [`predict_cells`](Self::predict_cells):
+    /// same batched engine and bit-identical means, but skips the
+    /// second-moment accumulation entirely — for traffic that does not
+    /// ask for uncertainty.
+    pub fn predict_cells_mean(&self, view: usize, rows: &[u32], cols: &[u32]) -> Vec<f64> {
+        let n = self.nserve as f64;
+        let offset = self.meta().offsets[view];
+        let (sums, _) = self.batched_moments(view, rows, cols, false);
+        sums.iter().map(|s| s / n + offset).collect()
+    }
+
+    /// Shared batched accumulator: per query cell (Σ_s p_s, and with
+    /// `want_sq` Σ_s p_s²) in posterior-sample order — the exact
+    /// arithmetic of [`cell_moments`](Self::cell_moments), restructured
+    /// as row-grouped panel walks.
+    fn batched_moments(
+        &self,
+        view: usize,
+        rows: &[u32],
+        cols: &[u32],
+        want_sq: bool,
+    ) -> (Vec<f64>, Vec<f64>) {
         assert_eq!(rows.len(), cols.len(), "rows/cols length mismatch");
+        let nq = rows.len();
         // validate on the caller thread: a panic inside a pool worker
         // would hang the fork-join instead of propagating
         for (&r, &c) in rows.iter().zip(cols) {
             self.check_cell(view, r as usize, c as usize);
         }
-        self.pool.parallel_collect(rows.len(), 64, |i| {
-            let (sum, sumsq) = self.cell_moments(view, rows[i] as usize, cols[i] as usize);
-            self.finish(sum, sumsq, view)
-        })
+        if nq == 0 {
+            return (Vec::new(), Vec::new());
+        }
+        // group query indices by row (then column, for a monotone walk
+        // over the factor panel); the sort is total, so grouping is
+        // deterministic
+        let mut order: Vec<u32> = (0..nq as u32).collect();
+        order.sort_by_key(|&i| (rows[i as usize], cols[i as usize], i));
+        let mut groups: Vec<Range<usize>> = Vec::new();
+        let mut g0 = 0;
+        for i in 1..=nq {
+            if i == nq || rows[order[i] as usize] != rows[order[g0] as usize] {
+                // split oversized row groups so one hot row cannot
+                // serialize the whole batch onto a single lane
+                let mut c = g0;
+                while c < i {
+                    groups.push(c..(c + GROUP_CELLS).min(i));
+                    c += GROUP_CELLS;
+                }
+                g0 = i;
+            }
+        }
+        let off = self.meta().vs_offset(view);
+        let parts: Vec<(Vec<f64>, Vec<f64>)> = self.pool.parallel_collect(groups.len(), 1, |g| {
+            let idxs = &order[groups[g].clone()];
+            let row = rows[idxs[0] as usize] as usize;
+            let mut sums = vec![0.0; idxs.len()];
+            let mut sqs = vec![0.0; if want_sq { idxs.len() } else { 0 }];
+            for s in 0..self.nserve {
+                let u_row = self.model.u(s).row(row);
+                let v = self.model.factor(off, s);
+                for (qi, &q) in idxs.iter().enumerate() {
+                    let p = dot(u_row, v.row(cols[q as usize] as usize));
+                    sums[qi] += p;
+                    if want_sq {
+                        sqs[qi] += p * p;
+                    }
+                }
+            }
+            (sums, sqs)
+        });
+        // scatter back to the input query order
+        let mut sums = vec![0.0; nq];
+        let mut sqs = vec![0.0; if want_sq { nq } else { 0 }];
+        for (range, (gsums, gsqs)) in groups.iter().zip(parts) {
+            for (qi, &q) in order[range.clone()].iter().enumerate() {
+                sums[q as usize] = gsums[qi];
+                if want_sq {
+                    sqs[q as usize] = gsqs[qi];
+                }
+            }
+        }
+        (sums, sqs)
     }
 
-    /// Dense-block prediction: one GEMM per posterior sample (U_blk ·
-    /// V_blkᵀ), fanned out over the pool, reduced in sample order.
+    /// Dense-block prediction: one GEMM per posterior sample, straight
+    /// off the borrowed sample-major row panel (no U gather, no clone),
+    /// fanned out over the pool, reduced in sample order.
     pub fn predict_block(&self, view: usize, rows: Range<usize>, cols: Range<usize>) -> BlockPrediction {
         self.check_two_mode(view);
-        assert!(rows.end <= self.meta.nrows, "row range beyond {}", self.meta.nrows);
+        assert!(rows.end <= self.meta().nrows, "row range beyond {}", self.meta().nrows);
         assert!(cols.end <= self.ncols(view), "col range beyond {}", self.ncols(view));
-        let (nr, nc, k) = (rows.len(), cols.len(), self.meta.num_latent);
+        let (nr, nc, k) = (rows.len(), cols.len(), self.meta().num_latent);
 
         // per-sample score blocks, computed in parallel
-        let blocks: Vec<Mat> = self.pool.parallel_collect(self.samples.len(), 1, |s| {
-            let snap = &self.samples[s];
-            let mut ublk = Mat::zeros(nr, k);
-            for (bi, i) in rows.clone().enumerate() {
-                ublk.row_mut(bi).copy_from_slice(snap.u.row(i));
-            }
+        let blocks: Vec<Mat> = self.pool.parallel_collect(self.nserve, 1, |s| {
+            // the row range is contiguous in the panel: borrow it as-is
+            let u = self.model.u(s);
+            let ublk = MatRef::new(nr, k, &u.data()[rows.start * k..rows.end * k]);
             // V_blkᵀ laid out K × nc so the product is one plain GEMM
-            let v = self.v2(s, view);
+            let v = self.model.v2(view, s);
             let mut vt = Mat::zeros(k, nc);
             for (bj, j) in cols.clone().enumerate() {
                 for (d, &x) in v.row(j).iter().enumerate() {
                     vt[(d, bj)] = x;
                 }
             }
-            gemm(&ublk, &vt)
+            let mut c = Mat::zeros(nr, nc);
+            gemm_ref_into(ublk, vt.view(), &mut c, Backend::global());
+            c
         });
 
         // sequential sample-order reduction => thread-count independent
@@ -266,7 +354,7 @@ impl PredictSession {
                 *ss += p * p;
             }
         }
-        let offset = self.meta.offsets[view];
+        let offset = self.meta().offsets[view];
         let mut mean = Mat::zeros(nr, nc);
         let mut std = Mat::zeros(nr, nc);
         for i in 0..nr * nc {
@@ -277,27 +365,65 @@ impl PredictSession {
         BlockPrediction { rows, cols, mean, std }
     }
 
+    /// Raw posterior score sums (Σ_s p_s) for every candidate column of
+    /// `row` — the batched engine under [`top_k`](Self::top_k):
+    /// candidates are chunked across the pool and, inside each chunk,
+    /// the samples stream one [`dots_into`] pass over the contiguous
+    /// candidate panel.  Per candidate the accumulation is in sample
+    /// order with `dot`'s arithmetic — bit-identical to
+    /// [`cell_moments`](Self::cell_moments)'s sum.
+    fn row_scores(&self, view: usize, row: usize) -> Vec<f64> {
+        let ncols = self.ncols(view);
+        let k = self.meta().num_latent;
+        let off = self.meta().vs_offset(view);
+        let nchunks = ncols.div_ceil(TOPK_CHUNK);
+        let parts: Vec<Vec<f64>> = self.pool.parallel_collect(nchunks, 1, |c| {
+            let j0 = c * TOPK_CHUNK;
+            let j1 = (j0 + TOPK_CHUNK).min(ncols);
+            let mut out = vec![0.0; j1 - j0];
+            for s in 0..self.nserve {
+                let u_row = self.model.u(s).row(row);
+                let v = self.model.factor(off, s);
+                let panel = MatRef::new(j1 - j0, k, &v.data()[j0 * k..j1 * k]);
+                dots_into(u_row, panel, &mut out);
+            }
+            out
+        });
+        let mut scores = Vec::with_capacity(ncols);
+        for p in parts {
+            scores.extend(p);
+        }
+        scores
+    }
+
     /// Top-K recommendation: the K columns of `view` with the highest
     /// posterior-mean score for `row`, excluding `exclude` (e.g. the
     /// items the user already rated).  Returns (col, score) sorted by
-    /// descending score; ties break toward the smaller column index so
-    /// output is fully deterministic.
+    /// descending score; equal scores order deterministically by
+    /// ascending column index — both within the returned list and at
+    /// the K boundary (the kept set prefers smaller indices), so output
+    /// never depends on heap iteration order.
     pub fn top_k(&self, view: usize, row: usize, k: usize, exclude: &[u32]) -> Vec<(u32, f64)> {
         self.check_two_mode(view);
-        assert!(row < self.meta.nrows, "row {row} out of range");
-        let ncols = self.ncols(view);
+        assert!(row < self.meta().nrows, "row {row} out of range");
+        let scores = self.row_scores(view, row);
+        self.select_top_k(&scores, k, exclude, self.meta().offsets[view])
+    }
+
+    /// Bounded-heap selection shared by [`top_k`](Self::top_k) and
+    /// [`top_k_mode`](Self::top_k_mode): scores are raw per-sample sums;
+    /// ties break toward the smaller index everywhere.
+    fn select_top_k(&self, scores: &[f64], k: usize, exclude: &[u32], offset: f64) -> Vec<(u32, f64)> {
+        let n = self.nserve as f64;
         let excluded: std::collections::HashSet<u32> = exclude.iter().copied().collect();
-
-        // scores for every candidate column, computed in parallel with
-        // the exact accumulation predict_one uses (consistency contract)
-        let scores: Vec<f64> = self
-            .pool
-            .parallel_collect(ncols, 128, |j| self.cell_moments(view, row, j).0);
-
-        let n = self.samples.len() as f64;
-        let offset = self.meta.offsets[view];
-        // bounded min-heap of the best K seen so far
-        let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> = BinaryHeap::with_capacity(k + 1);
+        // bounded min-heap of the best K seen so far; TopEntry's order
+        // makes the heap minimum the (lowest-score, largest-index)
+        // entry, so on a tie the larger index is evicted first.  The
+        // heap can never hold more than the candidate count, so the
+        // preallocation is capped there — a huge k must not translate
+        // into a huge allocation
+        let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> =
+            BinaryHeap::with_capacity(k.min(scores.len()) + 1);
         for (j, &s) in scores.iter().enumerate() {
             let col = j as u32;
             if excluded.contains(&col) {
@@ -313,8 +439,7 @@ impl PredictSession {
                 }
             }
         }
-        let mut out: Vec<(u32, f64)> =
-            heap.into_iter().map(|r| (r.0.col, r.0.score)).collect();
+        let mut out: Vec<(u32, f64)> = heap.into_iter().map(|r| (r.0.col, r.0.score)).collect();
         out.sort_by(|a, b| {
             b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then_with(|| a.0.cmp(&b.0))
         });
@@ -332,14 +457,14 @@ impl PredictSession {
         view: usize,
         cols: &[u32],
     ) -> anyhow::Result<Vec<Prediction>> {
-        if self.meta.link_features == 0 {
+        if self.meta().link_features == 0 {
             anyhow::bail!("store has no link model: train with a Macau row prior to serve unseen rows");
         }
-        if features.len() != self.meta.link_features {
+        if features.len() != self.meta().link_features {
             anyhow::bail!(
                 "feature vector has {} entries, link model expects {}",
                 features.len(),
-                self.meta.link_features
+                self.meta().link_features
             );
         }
         self.check_two_mode(view);
@@ -349,27 +474,24 @@ impl PredictSession {
                 anyhow::bail!("column {c} out of range ({ncols} columns)");
             }
         }
-        let k = self.meta.num_latent;
+        let k = self.meta().num_latent;
         // per-sample reconstructed latent row u = μ + βᵀ f
-        let mut us: Vec<Vec<f64>> = Vec::with_capacity(self.samples.len());
-        for snap in &self.samples {
-            let link = snap
-                .link
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("snapshot {} lacks link data", snap.iteration))?;
-            let mut u = crate::linalg::matvec_t(&link.beta, features);
-            for (ud, m) in u.iter_mut().zip(&link.mu) {
+        let mut us: Vec<Vec<f64>> = Vec::with_capacity(self.nserve);
+        for s in 0..self.nserve {
+            let beta = self.model.link_beta(s).expect("link presence checked");
+            let mut u = crate::linalg::matvec_t_ref(beta, features);
+            for (ud, m) in u.iter_mut().zip(self.model.link_mu(s).expect("link presence checked")) {
                 *ud += m;
             }
             debug_assert_eq!(u.len(), k);
             us.push(u);
         }
-        let off = self.meta.vs_offset(view);
+        let off = self.meta().vs_offset(view);
         let preds = self.pool.parallel_collect(cols.len(), 64, |ci| {
             let j = cols[ci] as usize;
             let (mut sum, mut sumsq) = (0.0, 0.0);
-            for (snap, u) in self.samples.iter().zip(&us) {
-                let p = dot(u, snap.vs[off].row(j));
+            for (s, u) in us.iter().enumerate() {
+                let p = dot(u, self.model.factor(off, s).row(j));
                 sum += p;
                 sumsq += p * p;
             }
@@ -393,7 +515,7 @@ impl PredictSession {
         let sf = self.sample_factors(view);
         let (mut sum, mut sumsq) = (0.0, 0.0);
         for f in &sf {
-            let p = crate::model::hadamard_dot(f, coords);
+            let p = hadamard_dot(f, coords);
             sum += p;
             sumsq += p * p;
         }
@@ -404,8 +526,8 @@ impl PredictSession {
     /// coordinate fixed: the K indices of `free_mode` with the highest
     /// posterior-mean score (`coords[free_mode]` is ignored).  Scores
     /// are the exact per-sample Hadamard-dot sums `predict_coords`
-    /// produces, so both APIs agree bitwise; ties break toward the
-    /// smaller index.
+    /// produces, so both APIs agree bitwise; equal scores order
+    /// deterministically by ascending index, as in [`top_k`](Self::top_k).
     pub fn top_k_mode(
         &self,
         view: usize,
@@ -422,7 +544,6 @@ impl PredictSession {
             assert!(m == free_mode || c < d, "coordinate {c} out of range for mode {m}");
         }
         let ncand = dims[free_mode];
-        let excluded: std::collections::HashSet<u32> = exclude.iter().copied().collect();
         let sf = self.sample_factors(view);
         thread_local! {
             // per-thread candidate-coordinate scratch: no allocation per
@@ -438,51 +559,29 @@ impl PredictSession {
                 c[free_mode] = j;
                 let mut sum = 0.0;
                 for f in &sf {
-                    sum += crate::model::hadamard_dot(f, &c);
+                    sum += hadamard_dot(f, &c);
                 }
                 sum
             })
         });
-        let n = self.samples.len() as f64;
-        let offset = self.meta.offsets[view];
-        let mut heap: BinaryHeap<std::cmp::Reverse<TopEntry>> = BinaryHeap::with_capacity(k + 1);
-        for (j, &s) in scores.iter().enumerate() {
-            let cand = j as u32;
-            if excluded.contains(&cand) {
-                continue;
-            }
-            let entry = TopEntry { score: s / n + offset, col: cand };
-            if heap.len() < k {
-                heap.push(std::cmp::Reverse(entry));
-            } else if let Some(min) = heap.peek() {
-                if entry > min.0 {
-                    heap.pop();
-                    heap.push(std::cmp::Reverse(entry));
-                }
-            }
-        }
-        let mut out: Vec<(u32, f64)> = heap.into_iter().map(|r| (r.0.col, r.0.score)).collect();
-        out.sort_by(|a, b| {
-            b.1.partial_cmp(&a.1).unwrap_or(Ordering::Equal).then_with(|| a.0.cmp(&b.0))
-        });
-        out
+        self.select_top_k(&scores, k, exclude, self.meta().offsets[view])
     }
 
     fn check_cell(&self, view: usize, row: usize, col: usize) {
         self.check_two_mode(view);
-        assert!(row < self.meta.nrows, "row {row} out of range");
+        assert!(row < self.meta().nrows, "row {row} out of range");
         assert!(col < self.ncols(view), "col {col} out of range");
     }
 
-    /// (Σ_s p_s, Σ_s p_s²) over samples for one cell — the single
-    /// accumulation routine every pointwise path shares, so top-K scores
-    /// and `predict_one` means are bit-identical.
+    /// (Σ_s p_s, Σ_s p_s²) over samples for one cell — the reference
+    /// accumulation every batched path reproduces bit-exactly, so top-K
+    /// scores and `predict_one` means are interchangeable.
     #[inline]
     fn cell_moments(&self, view: usize, row: usize, col: usize) -> (f64, f64) {
-        let off = self.meta.vs_offset(view);
+        let off = self.meta().vs_offset(view);
         let (mut sum, mut sumsq) = (0.0, 0.0);
-        for snap in &self.samples {
-            let p = dot(snap.u.row(row), snap.vs[off].row(col));
+        for s in 0..self.nserve {
+            let p = dot(self.model.u(s).row(row), self.model.factor(off, s).row(col));
             sum += p;
             sumsq += p * p;
         }
@@ -490,9 +589,9 @@ impl PredictSession {
     }
 
     fn finish(&self, sum: f64, sumsq: f64, view: usize) -> Prediction {
-        let n = self.samples.len();
+        let n = self.nserve;
         Prediction {
-            mean: sum / n as f64 + self.meta.offsets[view],
+            mean: sum / n as f64 + self.meta().offsets[view],
             std: variance(sum, sumsq, n).sqrt(),
         }
     }
@@ -539,6 +638,7 @@ mod tests {
     use crate::noise::NoiseConfig;
     use crate::session::{SessionBuilder, SessionConfig, TrainSession};
     use crate::sparse::SparseMatrix;
+    use crate::store::Snapshot;
     use std::path::PathBuf;
 
     fn scratch(tag: &str) -> PathBuf {
@@ -565,6 +665,37 @@ mod tests {
         (r, test, dir)
     }
 
+    /// The seed implementation's scalar serving path, replicated from
+    /// owned snapshot `Mat`s: per cell, per sample, one `dot` — the
+    /// reference the batched engine must reproduce bit-for-bit.
+    fn scalar_reference(
+        store: &ModelStore,
+        view: usize,
+        rows: &[u32],
+        cols: &[u32],
+    ) -> Vec<Prediction> {
+        let samples: Vec<Snapshot> =
+            (0..store.len()).map(|i| store.load_snapshot(i).unwrap()).collect();
+        let off = store.meta().vs_offset(view);
+        let offset = store.meta().offsets[view];
+        let n = samples.len();
+        rows.iter()
+            .zip(cols)
+            .map(|(&r, &c)| {
+                let (mut sum, mut sumsq) = (0.0, 0.0);
+                for snap in &samples {
+                    let p = dot(snap.u.row(r as usize), snap.vs[off].row(c as usize));
+                    sum += p;
+                    sumsq += p * p;
+                }
+                Prediction {
+                    mean: sum / n as f64 + offset,
+                    std: variance(sum, sumsq, n).sqrt(),
+                }
+            })
+            .collect()
+    }
+
     /// Acceptance (a): a store saved every sampling iteration serves the
     /// same posterior-mean RMSE the train session reported.
     #[test]
@@ -587,6 +718,135 @@ mod tests {
         // uncertainty is populated and sane
         assert!(preds.iter().all(|p| p.std.is_finite() && p.std >= 0.0));
         assert!(preds.iter().any(|p| p.std > 0.0));
+    }
+
+    /// Tentpole acceptance: on a packed v3 store the batched
+    /// `predict_cells` / `predict_cells_mean` / `top_k` return results
+    /// bit-identical to the seed per-sample scalar path.
+    #[test]
+    fn batched_paths_bit_identical_to_scalar_path_on_packed_store() {
+        let (_, test, dir) = saved_bmf("batchedbits");
+        let mut store = ModelStore::open(&dir).unwrap();
+        if !store.is_packed() {
+            store.compact().unwrap();
+        }
+        let store = ModelStore::open(&dir).unwrap();
+        assert!(store.is_packed());
+        let ps = PredictSession::from_store(&store, 3).unwrap();
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        assert!(ps.zero_copy(), "packed store must serve zero-copy on unix");
+
+        let t = TestSet::from_sparse(&test);
+        let want = scalar_reference(&store, 0, &t.rows, &t.cols);
+        let got = ps.predict_cells(0, &t.rows, &t.cols);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.mean.to_bits(), w.mean.to_bits(), "batched mean differs");
+            assert_eq!(g.std.to_bits(), w.std.to_bits(), "batched std differs");
+        }
+        let means = ps.predict_cells_mean(0, &t.rows, &t.cols);
+        for (m, w) in means.iter().zip(&want) {
+            assert_eq!(m.to_bits(), w.mean.to_bits(), "fast-path mean differs");
+        }
+        // top_k scores equal the scalar pointwise means, candidates and all
+        for row in [0usize, 7, 79] {
+            for (col, score) in ps.top_k(0, row, 7, &[]) {
+                let w = scalar_reference(&store, 0, &[row as u32], &[col]);
+                assert_eq!(score.to_bits(), w[0].mean.to_bits(), "top-k score row {row}");
+            }
+        }
+        // and thread count never changes batched answers
+        let ps1 = PredictSession::from_store(&store, 1).unwrap();
+        let got1 = ps1.predict_cells(0, &t.rows, &t.cols);
+        assert_eq!(got, got1);
+        assert_eq!(ps.top_k(0, 5, 10, &[]), ps1.top_k(0, 5, 10, &[]));
+    }
+
+    /// Migration invariant: the same store serves bit-identical results
+    /// through the snapshot-dir panels and the packed mmap panels.
+    #[test]
+    fn packed_and_snapshot_dir_models_serve_identically() {
+        let dir = scratch("pathpair");
+        let mut rng = crate::rng::Rng::new(95);
+        let meta = crate::store::StoreMeta {
+            num_latent: 5,
+            nrows: 12,
+            view_dims: vec![vec![9]],
+            offsets: vec![0.75],
+            save_freq: 1,
+            link_features: 0,
+            producer: None,
+        };
+        let mut store = ModelStore::create(&dir, meta).unwrap();
+        for it in 1..=4 {
+            let mut u = Mat::zeros(12, 5);
+            let mut v = Mat::zeros(9, 5);
+            rng.fill_normal(u.data_mut());
+            rng.fill_normal(v.data_mut());
+            store
+                .save_snapshot(&Snapshot { iteration: it, u, vs: vec![v], alphas: vec![2.0], link: None })
+                .unwrap();
+        }
+        let unpacked = PredictSession::from_store(&ModelStore::open(&dir).unwrap(), 2).unwrap();
+        assert!(!unpacked.zero_copy());
+        let mut store = ModelStore::open(&dir).unwrap();
+        store.compact().unwrap();
+        let packed = PredictSession::from_store(&ModelStore::open(&dir).unwrap(), 2).unwrap();
+
+        let rows: Vec<u32> = (0..40).map(|i| i % 12).collect();
+        let cols: Vec<u32> = (0..40).map(|i| (i * 5) % 9).collect();
+        assert_eq!(unpacked.predict_cells(0, &rows, &cols), packed.predict_cells(0, &rows, &cols));
+        assert_eq!(unpacked.top_k(0, 3, 5, &[]), packed.top_k(0, 3, 5, &[]));
+        let (bu, bp) = (unpacked.predict_block(0, 2..9, 1..8), packed.predict_block(0, 2..9, 1..8));
+        assert_eq!(bu.mean.max_abs_diff(&bp.mean), 0.0);
+        assert_eq!(bu.std.max_abs_diff(&bp.std), 0.0);
+        assert_eq!(
+            unpacked.predict_coords(0, &[4, 2]),
+            packed.predict_coords(0, &[4, 2])
+        );
+    }
+
+    /// Satellite regression: equal scores must order deterministically
+    /// by ascending column index — inside the list and at the K
+    /// boundary (never heap iteration order).
+    #[test]
+    fn top_k_breaks_score_ties_by_column_index() {
+        let dir = scratch("ties");
+        let meta = crate::store::StoreMeta {
+            num_latent: 2,
+            nrows: 1,
+            view_dims: vec![vec![6]],
+            offsets: vec![0.0],
+            save_freq: 1,
+            link_features: 0,
+            producer: None,
+        };
+        let mut store = ModelStore::create(&dir, meta).unwrap();
+        // u = [1, 0]; column scores: 1, 2, 1, 2, 0.5, 2  (deliberate ties)
+        let u = Mat::from_vec(1, 2, vec![1.0, 0.0]);
+        let v = Mat::from_vec(
+            6,
+            2,
+            vec![1.0, 9.0, 2.0, 9.0, 1.0, 9.0, 2.0, 9.0, 0.5, 9.0, 2.0, 9.0],
+        );
+        store
+            .save_snapshot(&Snapshot { iteration: 1, u, vs: vec![v], alphas: vec![1.0], link: None })
+            .unwrap();
+        store.compact().unwrap();
+        let ps = PredictSession::from_store(&store, 1).unwrap();
+        // ties at 2.0 (cols 1, 3, 5) list in ascending column order
+        assert_eq!(ps.top_k(0, 0, 4, &[]), vec![(1, 2.0), (3, 2.0), (5, 2.0), (0, 1.0)]);
+        // K boundary inside a tie group keeps the smaller columns
+        assert_eq!(ps.top_k(0, 0, 2, &[]), vec![(1, 2.0), (3, 2.0)]);
+        // boundary tie across the second group: cols 0 and 2 tie at 1.0
+        assert_eq!(ps.top_k(0, 0, 5, &[]), vec![(1, 2.0), (3, 2.0), (5, 2.0), (0, 1.0), (2, 1.0)]);
+        assert_eq!(
+            ps.top_k(0, 0, 4, &[1]),
+            vec![(3, 2.0), (5, 2.0), (0, 1.0), (2, 1.0)],
+            "exclusion keeps deterministic tie order"
+        );
+        // the tensor-mode selector shares the tie rules
+        assert_eq!(ps.top_k_mode(0, &[0, 0], 1, 4, &[]), ps.top_k(0, 0, 4, &[]));
     }
 
     /// Acceptance (b): top-K agrees with pointwise scoring — same values,
@@ -744,14 +1004,65 @@ mod tests {
 
     #[test]
     fn open_rejects_manifest_payload_mismatch() {
-        let (_, _, dir) = saved_bmf("corrupt");
-        // clobber one sample's U with a wrong-shape payload: opening must
-        // error instead of serving out-of-bounds reads later
-        let store = crate::store::ModelStore::open(&dir).unwrap();
-        let sample = dir.join(format!("sample_{:05}", store.iterations()[0]));
-        crate::sparse::io::write_dbm(&Mat::zeros(3, 3), &sample.join("u.dbm")).unwrap();
+        // a hand-built (never compacted) store with one sample's U
+        // clobbered by a wrong-shape payload: opening must error instead
+        // of serving out-of-bounds reads later
+        let dir = scratch("corrupt");
+        let meta = crate::store::StoreMeta {
+            num_latent: 3,
+            nrows: 6,
+            view_dims: vec![vec![4]],
+            offsets: vec![0.0],
+            save_freq: 1,
+            link_features: 0,
+            producer: None,
+        };
+        let mut store = ModelStore::create(&dir, meta).unwrap();
+        let mut rng = crate::rng::Rng::new(96);
+        let mut u = Mat::zeros(6, 3);
+        let mut v = Mat::zeros(4, 3);
+        rng.fill_normal(u.data_mut());
+        rng.fill_normal(v.data_mut());
+        store
+            .save_snapshot(&Snapshot { iteration: 1, u, vs: vec![v], alphas: vec![1.0], link: None })
+            .unwrap();
+        crate::sparse::io::write_dbm(&Mat::zeros(3, 3), &dir.join("sample_00001/u.dbm")).unwrap();
         let err = PredictSession::open(&dir).unwrap_err().to_string();
         assert!(err.contains("manifest says"), "{err}");
+    }
+
+    #[test]
+    fn manifest_claiming_missing_packs_falls_back_to_snapshot_dirs() {
+        // crash-window recovery: save_snapshot deletes packed/ before
+        // the manifest rename lands; a manifest still claiming the
+        // artifact over intact sample dirs must serve, not brick
+        let (_, _, dir) = saved_bmf("packgone");
+        let store = ModelStore::open(&dir).unwrap();
+        assert!(store.is_packed());
+        let want = {
+            let ps = PredictSession::from_store(&store, 1).unwrap();
+            ps.predict_one(0, 2, 3)
+        };
+        std::fs::remove_dir_all(dir.join("packed")).unwrap();
+        let ps = PredictSession::open_with_threads(&dir, 1).unwrap();
+        assert!(!ps.zero_copy(), "must have served from the snapshot dirs");
+        assert_eq!(ps.predict_one(0, 2, 3), want);
+    }
+
+    #[test]
+    fn open_rejects_corrupted_pack_payload() {
+        let (_, _, dir) = saved_bmf("packcorrupt");
+        let mut store = ModelStore::open(&dir).unwrap();
+        if !store.is_packed() {
+            store.compact().unwrap();
+        }
+        // truncate the packed U payload: open must fail loudly, not fall
+        // back silently or read out of bounds
+        let upath = crate::store::packed::u_pack_path(&dir);
+        let bytes = std::fs::read(&upath).unwrap();
+        std::fs::write(&upath, &bytes[..bytes.len() - 16]).unwrap();
+        let err = PredictSession::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("truncated or size-mismatched"), "{err}");
     }
 
     #[test]
@@ -774,5 +1085,22 @@ mod tests {
         let p = ps.predict_one(0, 0, 0);
         assert_eq!(p.std, 0.0);
         assert!(p.mean.is_finite());
+    }
+
+    #[test]
+    fn truncate_and_hot_swap_share_the_pool() {
+        let (_, _, dir) = saved_bmf("swap");
+        let mut ps = PredictSession::open_with_threads(&dir, 2).unwrap();
+        ps.truncate_samples(3);
+        assert_eq!(ps.nsamples(), 3);
+        ps.truncate_samples(0);
+        assert_eq!(ps.nsamples(), 1, "always keeps one sample");
+        ps.truncate_samples(10_000);
+        assert_eq!(ps.nsamples(), 12);
+        // hot swap: a new model over the same store serves all samples
+        // and identical answers through the shared pool
+        let swapped = ps.with_model(Arc::new(ServingModel::load(&dir).unwrap()));
+        assert_eq!(swapped.nsamples(), 12);
+        assert_eq!(swapped.predict_one(0, 2, 3), ps.predict_one(0, 2, 3));
     }
 }

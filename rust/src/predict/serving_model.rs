@@ -1,0 +1,292 @@
+//! The immutable in-memory model behind serving (ISSUE 5 tentpole).
+//!
+//! A [`ServingModel`] presents every posterior sample's factors as
+//! contiguous sample-major *panels* ([`FactorPanel`]) handing out
+//! borrowed [`MatRef`]s:
+//!
+//! * on a **packed** store (layout v3) the panels are zero-copy windows
+//!   into the mmap'd `packed/*.pack` files — opening the model reads no
+//!   factor data at all;
+//! * on a snapshot-dir store the samples are loaded once into owned
+//!   buffers with the identical sample-major layout.
+//!
+//! Either way the scoring engine in [`crate::predict`] sees the same
+//! borrowed panels, so both representations serve bit-identical
+//! predictions (tested), and the model is shared across threads as an
+//! `Arc<ServingModel>` that a hot-reload watcher can atomically swap
+//! while in-flight requests finish on the old sample set.
+
+use crate::linalg::MatRef;
+use crate::store::packed::PackFile;
+use crate::store::{ModelStore, StoreMeta};
+use std::path::Path;
+use std::sync::Arc;
+
+enum PanelStorage {
+    /// Borrowed zero-copy window into a pack file's sample blocks
+    /// (`offset` = f64 position of this factor inside each block).
+    Packed { file: Arc<PackFile>, offset: usize },
+    /// Owned sample-major buffer built from a snapshot-dir store.
+    Owned(Vec<f64>),
+}
+
+/// One factor matrix (`rows × cols`) across every posterior sample,
+/// sample-major and contiguous per sample.
+pub struct FactorPanel {
+    rows: usize,
+    cols: usize,
+    storage: PanelStorage,
+}
+
+impl FactorPanel {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Sample `s`'s factor matrix as a borrowed view.
+    #[inline]
+    pub fn sample(&self, s: usize) -> MatRef<'_> {
+        let len = self.rows * self.cols;
+        let data = match &self.storage {
+            PanelStorage::Packed { file, offset } => &file.block(s)[*offset..*offset + len],
+            PanelStorage::Owned(buf) => &buf[s * len..(s + 1) * len],
+        };
+        MatRef::new(self.rows, self.cols, data)
+    }
+}
+
+struct LinkPanels {
+    /// β, F × K per sample
+    beta: FactorPanel,
+    /// μ, 1 × K per sample
+    mu: FactorPanel,
+}
+
+/// Immutable posterior model ready to serve: manifest metadata plus one
+/// [`FactorPanel`] per factor matrix (shared mode-0 `u`, the flat `vs`
+/// list in `Snapshot::vs` order, and the optional Macau link model).
+pub struct ServingModel {
+    meta: StoreMeta,
+    nsamples: usize,
+    iterations: Vec<usize>,
+    u: FactorPanel,
+    vs: Vec<FactorPanel>,
+    link: Option<LinkPanels>,
+    zero_copy: bool,
+}
+
+impl ServingModel {
+    /// Open a store directory and build the model (zero-copy when the
+    /// store is packed).
+    pub fn load(dir: &Path) -> anyhow::Result<ServingModel> {
+        ServingModel::from_store(&ModelStore::open(dir)?)
+    }
+
+    /// Build from an already-open store handle.
+    pub fn from_store(store: &ModelStore) -> anyhow::Result<ServingModel> {
+        if store.is_empty() {
+            anyhow::bail!("model store {} holds no posterior samples", store.dir().display());
+        }
+        if store.is_packed() {
+            // crash-window recovery: save_snapshot deletes packed/
+            // before the manifest rename lands, so a manifest can claim
+            // an artifact whose files are gone while every snapshot dir
+            // is intact — serve from the dirs rather than brick the
+            // store.  Packs that are *present* but invalid stay a loud
+            // error (corruption must never silently fall back).
+            if !crate::store::packed::u_pack_path(store.dir()).exists() {
+                return ServingModel::from_snapshot_dirs(store);
+            }
+            ServingModel::from_packed(store)
+        } else {
+            ServingModel::from_snapshot_dirs(store)
+        }
+    }
+
+    fn from_packed(store: &ModelStore) -> anyhow::Result<ServingModel> {
+        let meta = store.meta().clone();
+        let packed = store.open_packed()?;
+        let k = meta.num_latent;
+        let zero_copy = packed.zero_copy();
+        let u_file = Arc::new(packed.u);
+        let u = FactorPanel {
+            rows: meta.nrows,
+            cols: k,
+            storage: PanelStorage::Packed { file: u_file, offset: 0 },
+        };
+        let mut vs = Vec::with_capacity(meta.total_mats());
+        for (v, pf) in packed.views.into_iter().enumerate() {
+            let file = Arc::new(pf);
+            let mut offset = 0;
+            for &d in &meta.view_dims[v] {
+                vs.push(FactorPanel {
+                    rows: d,
+                    cols: k,
+                    storage: PanelStorage::Packed { file: file.clone(), offset },
+                });
+                offset += d * k;
+            }
+        }
+        let link = packed.link.map(|pf| {
+            let file = Arc::new(pf);
+            LinkPanels {
+                beta: FactorPanel {
+                    rows: meta.link_features,
+                    cols: k,
+                    storage: PanelStorage::Packed { file: file.clone(), offset: 0 },
+                },
+                mu: FactorPanel {
+                    rows: 1,
+                    cols: k,
+                    storage: PanelStorage::Packed { file, offset: meta.link_features * k },
+                },
+            }
+        });
+        Ok(ServingModel {
+            nsamples: store.len(),
+            iterations: store.iterations(),
+            meta,
+            u,
+            vs,
+            link,
+            zero_copy,
+        })
+    }
+
+    fn from_snapshot_dirs(store: &ModelStore) -> anyhow::Result<ServingModel> {
+        let meta = store.meta().clone();
+        let k = meta.num_latent;
+        let n = store.len();
+        let mut u_buf = Vec::with_capacity(n * meta.nrows * k);
+        let flat_dims: Vec<usize> = meta.view_dims.iter().flatten().copied().collect();
+        let mut vs_bufs: Vec<Vec<f64>> =
+            flat_dims.iter().map(|&d| Vec::with_capacity(n * d * k)).collect();
+        let mut beta_buf = Vec::with_capacity(n * meta.link_features * k);
+        let mut mu_buf = Vec::with_capacity(n * k);
+        for i in 0..n {
+            let snap = store.load_snapshot(i)?;
+            // validate payload shapes against the manifest up front: all
+            // serving paths bounds-check against the manifest only, and
+            // a mismatch surfacing inside a pool worker would hang the
+            // fork-join instead of propagating
+            if snap.u.rows() != meta.nrows || snap.u.cols() != k {
+                anyhow::bail!(
+                    "sample {i}: U is {}x{}, manifest says {}x{k}",
+                    snap.u.rows(),
+                    snap.u.cols(),
+                    meta.nrows,
+                );
+            }
+            if snap.vs.len() != meta.total_mats() {
+                anyhow::bail!(
+                    "sample {i}: {} factor matrices, manifest says {}",
+                    snap.vs.len(),
+                    meta.total_mats()
+                );
+            }
+            for (vi, (v, &nc)) in snap.vs.iter().zip(&flat_dims).enumerate() {
+                if v.rows() != nc || v.cols() != k {
+                    anyhow::bail!(
+                        "sample {i}: V{vi} is {}x{}, manifest says {nc}x{k}",
+                        v.rows(),
+                        v.cols(),
+                    );
+                }
+            }
+            u_buf.extend_from_slice(snap.u.data());
+            for (buf, v) in vs_bufs.iter_mut().zip(&snap.vs) {
+                buf.extend_from_slice(v.data());
+            }
+            match (&snap.link, meta.link_features) {
+                (Some(link), f) if f > 0 => {
+                    if link.beta.rows() != f || link.beta.cols() != k || link.mu.len() != k {
+                        anyhow::bail!("sample {i}: link shapes do not match the manifest");
+                    }
+                    beta_buf.extend_from_slice(link.beta.data());
+                    mu_buf.extend_from_slice(&link.mu);
+                }
+                (None, 0) => {}
+                _ => anyhow::bail!("sample {i}: link presence does not match the manifest"),
+            }
+        }
+        let u = FactorPanel { rows: meta.nrows, cols: k, storage: PanelStorage::Owned(u_buf) };
+        let vs = flat_dims
+            .iter()
+            .zip(vs_bufs)
+            .map(|(&d, buf)| FactorPanel { rows: d, cols: k, storage: PanelStorage::Owned(buf) })
+            .collect();
+        let link = (meta.link_features > 0).then(|| LinkPanels {
+            beta: FactorPanel {
+                rows: meta.link_features,
+                cols: k,
+                storage: PanelStorage::Owned(beta_buf),
+            },
+            mu: FactorPanel { rows: 1, cols: k, storage: PanelStorage::Owned(mu_buf) },
+        });
+        Ok(ServingModel {
+            nsamples: n,
+            iterations: store.iterations(),
+            meta,
+            u,
+            vs,
+            link,
+            zero_copy: false,
+        })
+    }
+
+    pub fn meta(&self) -> &StoreMeta {
+        &self.meta
+    }
+
+    /// Posterior samples held by the model.
+    pub fn nsamples(&self) -> usize {
+        self.nsamples
+    }
+
+    /// Training iterations the samples were drawn at, ascending.
+    pub fn iterations(&self) -> &[usize] {
+        &self.iterations
+    }
+
+    /// Whether every panel is served zero-copy out of mmap'd pack files.
+    pub fn zero_copy(&self) -> bool {
+        self.zero_copy
+    }
+
+    pub fn has_link(&self) -> bool {
+        self.link.is_some()
+    }
+
+    /// Shared mode-0 factors of sample `s`.
+    #[inline]
+    pub fn u(&self, s: usize) -> MatRef<'_> {
+        self.u.sample(s)
+    }
+
+    /// Flat factor matrix `fi` (in `Snapshot::vs` order) of sample `s`.
+    #[inline]
+    pub fn factor(&self, fi: usize, s: usize) -> MatRef<'_> {
+        self.vs[fi].sample(s)
+    }
+
+    /// View `view`'s first further-mode factor of sample `s` (2-mode
+    /// views: the classic V).
+    #[inline]
+    pub fn v2(&self, view: usize, s: usize) -> MatRef<'_> {
+        self.vs[self.meta.vs_offset(view)].sample(s)
+    }
+
+    /// Macau link β (F × K) of sample `s`.
+    pub fn link_beta(&self, s: usize) -> Option<MatRef<'_>> {
+        self.link.as_ref().map(|l| l.beta.sample(s))
+    }
+
+    /// Macau link μ (length K) of sample `s`.
+    pub fn link_mu(&self, s: usize) -> Option<&[f64]> {
+        self.link.as_ref().map(|l| l.mu.sample(s).data())
+    }
+}

@@ -1,0 +1,954 @@
+//! `smurff serve` — a concurrent TCP front-end over the batched
+//! serving engine (ISSUE 5 tentpole, the ROADMAP's "serves heavy
+//! traffic" axis).
+//!
+//! ## Protocol
+//!
+//! Newline-delimited JSON over plain TCP (`std::net`, parsed with
+//! [`crate::util::json`] — no new dependencies).  One request object per
+//! line, one response object per line, in order:
+//!
+//! ```text
+//! → {"op":"predict","view":0,"row":3,"col":17}
+//! ← {"ok":true,"mean":3.82,"std":0.41}
+//! → {"op":"predict_batch","view":0,"cells":[[3,17],[4,2]],"mean_only":true}
+//! ← {"ok":true,"means":[3.82,2.11]}
+//! → {"op":"topk","view":0,"row":3,"k":10,"exclude":[5,9]}
+//! ← {"ok":true,"items":[[12,4.4],[7,4.1], …]}
+//! → {"op":"status"}
+//! ← {"ok":true,"samples":32,"served":12045,"reloads":2,"zero_copy":true, …}
+//! → {"op":"shutdown"}                   (only with allow_shutdown)
+//! ← {"ok":true,"bye":true}
+//! ```
+//!
+//! Failures answer `{"ok":false,"error":"…"}` and keep the connection
+//! open; protocol-level junk (unparseable line) also answers an error.
+//!
+//! ## Micro-batching
+//!
+//! Connection handlers never touch the scoring pool: every scoring
+//! request is pushed onto a **bounded queue** (back-pressure: producers
+//! block when it fills) and a single batcher thread drains up to
+//! `batch_max` requests per round — waiting `batch_wait` after the
+//! first arrival so concurrent pointwise queries coalesce — then runs
+//! *one* batched [`PredictSession::predict_cells`] /
+//! [`predict_cells_mean`](PredictSession::predict_cells_mean) call per
+//! (view, uncertainty) group and scatters the answers back to the
+//! waiting handlers.  This keeps the fork-join pool single-submitter
+//! (its contract) and turns N scalar requests into one panel sweep.
+//!
+//! ## Hot reload
+//!
+//! A watcher thread polls the store manifest; when the training run
+//! appends snapshots, it rebuilds an [`Arc<ServingModel>`] and
+//! atomically swaps the serving session (sharing the thread pool).
+//! In-flight batches finish on the model they started with — the swap
+//! is wait-free for readers.
+
+use crate::predict::{PredictSession, Prediction, ServingModel};
+use crate::util::JsonValue;
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Upper bound on cells in one `predict_batch` request (keeps a hostile
+/// line from ballooning memory).
+const MAX_CELLS_PER_REQUEST: usize = 1 << 16;
+
+/// Serving front-end configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// listen address, e.g. `127.0.0.1:7799` (port 0 = ephemeral)
+    pub addr: String,
+    /// scoring pool size (0 = all cores)
+    pub threads: usize,
+    /// max scoring requests drained per batch round
+    pub batch_max: usize,
+    /// micro-batch window after the first request of a round
+    pub batch_wait: Duration,
+    /// bounded queue capacity (producers block beyond this)
+    pub queue_cap: usize,
+    /// store-manifest poll interval for hot reload
+    pub poll: Duration,
+    /// whether the `shutdown` op is honoured (CI smoke / tests)
+    pub allow_shutdown: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7799".to_string(),
+            threads: 0,
+            batch_max: 256,
+            batch_wait: Duration::from_millis(1),
+            queue_cap: 1024,
+            poll: Duration::from_millis(500),
+            allow_shutdown: false,
+        }
+    }
+}
+
+// ------------------------------------------------------------ requests
+
+/// A scoring operation routed through the micro-batch queue.
+enum Op {
+    /// pointwise cells of one view; answered as means or mean±std
+    Cells { view: usize, rows: Vec<u32>, cols: Vec<u32>, want_std: bool },
+    /// top-K candidates for one row
+    TopK { view: usize, row: usize, k: usize, exclude: Vec<u32> },
+}
+
+enum Reply {
+    Preds(Vec<Prediction>),
+    Means(Vec<f64>),
+    TopK(Vec<(u32, f64)>),
+    Err(String),
+}
+
+struct Job {
+    op: Op,
+    tx: mpsc::Sender<Reply>,
+}
+
+// --------------------------------------------------------------- queue
+
+/// Bounded MPSC queue with a micro-batching consumer: `push` blocks on
+/// a full queue (back-pressure), `pop_batch` waits for the first job,
+/// then keeps the round open `wait` longer so concurrent requests
+/// coalesce into one panel sweep.
+struct BatchQueue {
+    inner: Mutex<VecDeque<Job>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl BatchQueue {
+    fn new(cap: usize) -> BatchQueue {
+        BatchQueue {
+            inner: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Returns false when the server is stopping (job dropped, sender's
+    /// recv will error out).
+    fn push(&self, job: Job, stop: &AtomicBool) -> bool {
+        if stop.load(Ordering::Acquire) {
+            return false;
+        }
+        let mut q = self.inner.lock().unwrap();
+        while q.len() >= self.cap {
+            if stop.load(Ordering::Acquire) {
+                return false;
+            }
+            q = self.not_full.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        }
+        q.push_back(job);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Drain up to `max` jobs; empty result means the server stopped.
+    fn pop_batch(&self, max: usize, wait: Duration, stop: &AtomicBool) -> Vec<Job> {
+        let mut q = self.inner.lock().unwrap();
+        while q.is_empty() {
+            if stop.load(Ordering::Acquire) {
+                return Vec::new();
+            }
+            q = self.not_empty.wait_timeout(q, Duration::from_millis(100)).unwrap().0;
+        }
+        // micro-batch window: give concurrent producers `wait` to join
+        // this round (bounded — the whole point of micro-batching)
+        let deadline = Instant::now() + wait;
+        while q.len() < max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (qq, timeout) = self.not_empty.wait_timeout(q, deadline - now).unwrap();
+            q = qq;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = q.len().min(max);
+        let batch: Vec<Job> = q.drain(..n).collect();
+        self.not_full.notify_all();
+        batch
+    }
+
+    fn wake_all(&self) {
+        let _q = self.inner.lock().unwrap();
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Take everything still queued (shutdown drain).
+    fn drain_all(&self) -> Vec<Job> {
+        let mut q = self.inner.lock().unwrap();
+        let jobs = q.drain(..).collect();
+        self.not_full.notify_all();
+        jobs
+    }
+}
+
+// -------------------------------------------------------------- engine
+
+/// The shared serving state: the hot-swappable session, the queue, and
+/// the counters `status` reports.
+struct Engine {
+    store_dir: PathBuf,
+    session: Mutex<Arc<PredictSession>>,
+    queue: BatchQueue,
+    stop: AtomicBool,
+    served: AtomicU64,
+    reloads: AtomicU64,
+    cfg: ServeConfig,
+}
+
+impl Engine {
+    fn current(&self) -> Arc<PredictSession> {
+        self.session.lock().unwrap().clone()
+    }
+
+    /// Rebuild the serving model iff the store gained (or changed)
+    /// snapshots since the current one was built.  Returns whether a
+    /// swap happened.
+    fn reload_if_changed(&self) -> anyhow::Result<bool> {
+        let store = crate::store::ModelStore::open(&self.store_dir)?;
+        let current = self.current();
+        if store.iterations() == current.model().iterations() {
+            return Ok(false);
+        }
+        let model = Arc::new(ServingModel::from_store(&store)?);
+        let swapped = current.with_model(model);
+        *self.session.lock().unwrap() = Arc::new(swapped);
+        self.reloads.fetch_add(1, Ordering::Relaxed);
+        crate::log_info!(
+            "serve: hot-reloaded model from {} ({} samples)",
+            self.store_dir.display(),
+            store.len()
+        );
+        Ok(true)
+    }
+
+    /// One batcher round: group the drained jobs' pointwise cells by
+    /// (view, want_std), run one batched call per group on a single
+    /// model snapshot, scatter the answers; top-K jobs run individually
+    /// on the same snapshot.
+    fn execute_batch(&self, jobs: Vec<Job>) {
+        let session = self.current();
+        self.served.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        // (view, want_std) -> (job indices, per-job cell counts, rows, cols)
+        let mut groups: std::collections::BTreeMap<(usize, bool), Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (ji, job) in jobs.iter().enumerate() {
+            match &job.op {
+                Op::Cells { view, rows, cols, want_std } => {
+                    if let Err(e) = validate_cells(&session, *view, rows, cols) {
+                        let _ = job.tx.send(Reply::Err(e));
+                        continue;
+                    }
+                    groups.entry((*view, *want_std)).or_default().push(ji);
+                }
+                Op::TopK { view, row, k, exclude } => {
+                    let reply = match validate_two_mode(&session, *view)
+                        .and_then(|()| validate_row(&session, *row))
+                    {
+                        Err(e) => Reply::Err(e),
+                        Ok(()) if *k == 0 => Reply::TopK(Vec::new()),
+                        // clamp k to the candidate count: top_k can never
+                        // return more, and an unchecked huge k would let
+                        // one request allocate k+1 heap slots on the
+                        // batcher thread
+                        Ok(()) => {
+                            let k = (*k).min(session.ncols(*view));
+                            Reply::TopK(session.top_k(*view, *row, k, exclude))
+                        }
+                    };
+                    let _ = jobs[ji].tx.send(reply);
+                }
+            }
+        }
+        for ((view, want_std), members) in groups {
+            let mut rows: Vec<u32> = Vec::new();
+            let mut cols: Vec<u32> = Vec::new();
+            let mut extents: Vec<usize> = Vec::with_capacity(members.len());
+            for &ji in &members {
+                if let Op::Cells { rows: r, cols: c, .. } = &jobs[ji].op {
+                    rows.extend_from_slice(r);
+                    cols.extend_from_slice(c);
+                    extents.push(r.len());
+                }
+            }
+            // one batched engine call for the whole group
+            if want_std {
+                let preds = session.predict_cells(view, &rows, &cols);
+                let mut at = 0;
+                for (&ji, &n) in members.iter().zip(&extents) {
+                    let _ = jobs[ji].tx.send(Reply::Preds(preds[at..at + n].to_vec()));
+                    at += n;
+                }
+            } else {
+                let means = session.predict_cells_mean(view, &rows, &cols);
+                let mut at = 0;
+                for (&ji, &n) in members.iter().zip(&extents) {
+                    let _ = jobs[ji].tx.send(Reply::Means(means[at..at + n].to_vec()));
+                    at += n;
+                }
+            }
+        }
+    }
+
+    fn status_json(&self) -> JsonValue {
+        let s = self.current();
+        let mut pairs = vec![
+            ("ok", JsonValue::Bool(true)),
+            ("samples", JsonValue::num(s.nsamples() as f64)),
+            ("num_latent", JsonValue::num(s.num_latent() as f64)),
+            ("nrows", JsonValue::num(s.nrows() as f64)),
+            ("nviews", JsonValue::num(s.nviews() as f64)),
+            ("zero_copy", JsonValue::Bool(s.zero_copy())),
+            ("served", JsonValue::num(self.served.load(Ordering::Relaxed) as f64)),
+            ("reloads", JsonValue::num(self.reloads.load(Ordering::Relaxed) as f64)),
+            (
+                "iterations",
+                JsonValue::arr_usize(s.model().iterations()),
+            ),
+        ];
+        if s.nviews() > 0 && s.nmodes(0) == 2 {
+            pairs.push(("ncols", JsonValue::num(s.ncols(0) as f64)));
+        }
+        JsonValue::obj(pairs)
+    }
+}
+
+fn validate_two_mode(s: &PredictSession, view: usize) -> Result<(), String> {
+    if view >= s.nviews() {
+        return Err(format!("view {view} out of range ({} views)", s.nviews()));
+    }
+    if s.nmodes(view) != 2 {
+        return Err(format!(
+            "view {view} is a {}-mode tensor; the wire protocol serves 2-mode views",
+            s.nmodes(view)
+        ));
+    }
+    Ok(())
+}
+
+fn validate_row(s: &PredictSession, row: usize) -> Result<(), String> {
+    if row >= s.nrows() {
+        return Err(format!("row {row} out of range ({} rows)", s.nrows()));
+    }
+    Ok(())
+}
+
+fn validate_cells(
+    s: &PredictSession,
+    view: usize,
+    rows: &[u32],
+    cols: &[u32],
+) -> Result<(), String> {
+    validate_two_mode(s, view)?;
+    let (nr, nc) = (s.nrows(), s.ncols(view));
+    for (&r, &c) in rows.iter().zip(cols) {
+        if r as usize >= nr {
+            return Err(format!("row {r} out of range ({nr} rows)"));
+        }
+        if c as usize >= nc {
+            return Err(format!("col {c} out of range ({nc} columns)"));
+        }
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- protocol
+
+fn err_json(msg: &str) -> String {
+    JsonValue::obj(vec![("ok", JsonValue::Bool(false)), ("error", JsonValue::str(msg))])
+        .to_string()
+}
+
+fn reply_json(reply: Reply) -> String {
+    match reply {
+        Reply::Err(e) => err_json(&e),
+        Reply::Preds(preds) => JsonValue::obj(vec![
+            ("ok", JsonValue::Bool(true)),
+            (
+                "means",
+                JsonValue::arr_f64(&preds.iter().map(|p| p.mean).collect::<Vec<f64>>()),
+            ),
+            (
+                "stds",
+                JsonValue::arr_f64(&preds.iter().map(|p| p.std).collect::<Vec<f64>>()),
+            ),
+        ])
+        .to_string(),
+        Reply::Means(means) => JsonValue::obj(vec![
+            ("ok", JsonValue::Bool(true)),
+            ("means", JsonValue::arr_f64(&means)),
+        ])
+        .to_string(),
+        Reply::TopK(items) => JsonValue::obj(vec![
+            ("ok", JsonValue::Bool(true)),
+            (
+                "items",
+                JsonValue::Array(
+                    items
+                        .iter()
+                        .map(|(c, s)| {
+                            JsonValue::Array(vec![JsonValue::num(*c as f64), JsonValue::num(*s)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .to_string(),
+    }
+}
+
+/// Parse one request line into a queueable op, or answer it directly
+/// (`status` / `shutdown` / errors).  Returns `Err(response)` for
+/// direct answers, `Ok(op)` for ops that go through the queue.
+enum Parsed {
+    Queue(Op, bool /* single-cell predict: unwrap reply */),
+    Direct(String),
+    Shutdown,
+}
+
+fn parse_request(line: &str, engine: &Engine) -> Parsed {
+    let v = match JsonValue::parse(line) {
+        Ok(v) => v,
+        Err(e) => return Parsed::Direct(err_json(&format!("bad request json: {e}"))),
+    };
+    let op = v.get("op").and_then(|o| o.as_str()).unwrap_or("");
+    // absent keys take the default, but a present key that is not a
+    // non-negative integer is an error — a typo must never be silently
+    // coerced into serving a different view / K
+    let get_usize = |key: &str, default: usize| -> Result<usize, String> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(x) => x
+                .as_usize()
+                .ok_or_else(|| format!("'{key}' must be a non-negative integer")),
+        }
+    };
+    macro_rules! req {
+        ($e:expr) => {
+            match $e {
+                Ok(x) => x,
+                Err(e) => return Parsed::Direct(err_json(&e)),
+            }
+        };
+    }
+    match op {
+        "predict" => {
+            let (row, col) = match (v.get("row").and_then(|x| x.as_usize()), v.get("col").and_then(|x| x.as_usize())) {
+                (Some(r), Some(c)) => (r, c),
+                _ => return Parsed::Direct(err_json("predict needs integer 'row' and 'col'")),
+            };
+            if row > u32::MAX as usize || col > u32::MAX as usize {
+                return Parsed::Direct(err_json("row/col out of addressable range"));
+            }
+            Parsed::Queue(
+                Op::Cells {
+                    view: req!(get_usize("view", 0)),
+                    rows: vec![row as u32],
+                    cols: vec![col as u32],
+                    want_std: true,
+                },
+                true,
+            )
+        }
+        "predict_batch" => {
+            let cells = match v.get("cells").and_then(|c| c.as_array()) {
+                Some(c) => c,
+                None => return Parsed::Direct(err_json("predict_batch needs 'cells': [[row,col],…]")),
+            };
+            if cells.len() > MAX_CELLS_PER_REQUEST {
+                return Parsed::Direct(err_json(&format!(
+                    "too many cells in one request ({} > {MAX_CELLS_PER_REQUEST})",
+                    cells.len()
+                )));
+            }
+            let mut rows = Vec::with_capacity(cells.len());
+            let mut cols = Vec::with_capacity(cells.len());
+            for cell in cells {
+                match cell.as_array() {
+                    Some([r, c]) => match (r.as_usize(), c.as_usize()) {
+                        (Some(r), Some(c)) if r <= u32::MAX as usize && c <= u32::MAX as usize => {
+                            rows.push(r as u32);
+                            cols.push(c as u32);
+                        }
+                        _ => return Parsed::Direct(err_json("cells entries must be [row, col]")),
+                    },
+                    _ => return Parsed::Direct(err_json("cells entries must be [row, col]")),
+                }
+            }
+            let mean_only = v.get("mean_only").and_then(|b| b.as_bool()).unwrap_or(false);
+            Parsed::Queue(
+                Op::Cells { view: req!(get_usize("view", 0)), rows, cols, want_std: !mean_only },
+                false,
+            )
+        }
+        "topk" => {
+            let row = match v.get("row").and_then(|x| x.as_usize()) {
+                Some(r) => r,
+                None => return Parsed::Direct(err_json("topk needs integer 'row'")),
+            };
+            let mut exclude: Vec<u32> = Vec::new();
+            if let Some(list) = v.get("exclude").and_then(|e| e.as_array()) {
+                for x in list {
+                    // strict like predict's row/col: a non-integer or
+                    // out-of-range entry is an error, never silently
+                    // truncated into excluding some other column
+                    match x.as_usize() {
+                        Some(c) if c <= u32::MAX as usize => exclude.push(c as u32),
+                        _ => {
+                            return Parsed::Direct(err_json(
+                                "exclude entries must be integers in u32 range",
+                            ))
+                        }
+                    }
+                }
+            }
+            Parsed::Queue(
+                Op::TopK {
+                    view: req!(get_usize("view", 0)),
+                    row,
+                    k: req!(get_usize("k", 10)),
+                    exclude,
+                },
+                false,
+            )
+        }
+        "status" => Parsed::Direct(engine.status_json().to_string()),
+        "shutdown" => {
+            if engine.cfg.allow_shutdown {
+                Parsed::Shutdown
+            } else {
+                Parsed::Direct(err_json("shutdown is disabled (start with --allow-shutdown)"))
+            }
+        }
+        other => Parsed::Direct(err_json(&format!(
+            "unknown op '{other}' (predict|predict_batch|topk|status|shutdown)"
+        ))),
+    }
+}
+
+// --------------------------------------------------------------- server
+
+/// A running server: its bound address plus the stop/join plumbing.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    engine: Arc<Engine>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request a stop and join the server threads.
+    pub fn stop(mut self) {
+        stop_engine(&self.engine, self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Block until the server stops (a `shutdown` request or `stop()`).
+    pub fn wait(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+fn stop_engine(engine: &Engine, addr: SocketAddr) {
+    engine.stop.store(true, Ordering::Release);
+    engine.queue.wake_all();
+    // unblock the accept loop
+    let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
+}
+
+/// Bind `cfg.addr`, load the store, and spawn the accept loop, the
+/// batcher and the hot-reload watcher.  Returns once the socket is
+/// listening; callers `wait()` (CLI) or `stop()` (tests) the handle.
+pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle> {
+    // batch_max = 0 would make pop_batch return empty batches forever
+    // (requests never served, batcher spinning); clamp like queue_cap
+    let cfg = ServeConfig { batch_max: cfg.batch_max.max(1), ..cfg };
+    let session = PredictSession::open_with_threads(store_dir, cfg.threads)?;
+    crate::log_info!(
+        "serve: {} samples, K={}, zero_copy={} on {}",
+        session.nsamples(),
+        session.num_latent(),
+        session.zero_copy(),
+        cfg.addr
+    );
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let engine = Arc::new(Engine {
+        store_dir: store_dir.to_path_buf(),
+        session: Mutex::new(Arc::new(session)),
+        queue: BatchQueue::new(cfg.queue_cap),
+        stop: AtomicBool::new(false),
+        served: AtomicU64::new(0),
+        reloads: AtomicU64::new(0),
+        cfg: cfg.clone(),
+    });
+    let mut threads = Vec::new();
+
+    // the single batcher: the only thread that submits scoring work
+    {
+        let engine = engine.clone();
+        threads.push(std::thread::spawn(move || {
+            while !engine.stop.load(Ordering::Acquire) {
+                let batch = engine.queue.pop_batch(
+                    engine.cfg.batch_max,
+                    engine.cfg.batch_wait,
+                    &engine.stop,
+                );
+                if !batch.is_empty() {
+                    engine.execute_batch(batch);
+                }
+            }
+            // fail any straggler that raced the stop flag, so its
+            // handler's recv() errors out instead of blocking forever
+            for job in engine.queue.drain_all() {
+                let _ = job.tx.send(Reply::Err("server is shutting down".to_string()));
+            }
+        }));
+    }
+
+    // the snapshot watcher (hot reload)
+    {
+        let engine = engine.clone();
+        threads.push(std::thread::spawn(move || {
+            while !engine.stop.load(Ordering::Acquire) {
+                std::thread::sleep(engine.cfg.poll);
+                if engine.stop.load(Ordering::Acquire) {
+                    break;
+                }
+                if let Err(e) = engine.reload_if_changed() {
+                    crate::log_warn!("serve: reload failed: {e}");
+                }
+            }
+        }));
+    }
+
+    // the accept loop; connection handlers are detached (they exit on
+    // client EOF or server stop)
+    {
+        let engine = engine.clone();
+        threads.push(std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if engine.stop.load(Ordering::Acquire) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        let engine = engine.clone();
+                        std::thread::spawn(move || handle_connection(stream, engine, addr));
+                    }
+                    Err(e) => {
+                        // transient accept failures (EMFILE under load,
+                        // ECONNABORTED from a client RST) must not end
+                        // the accept loop; back off briefly and retry
+                        crate::log_warn!("serve: accept failed: {e}");
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+        }));
+    }
+
+    Ok(ServerHandle { addr, engine, threads })
+}
+
+fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if engine.stop.load(Ordering::Acquire) {
+            let _ = writeln!(writer, "{}", err_json("server is shutting down"));
+            break;
+        }
+        let response = match parse_request(line.trim(), &engine) {
+            Parsed::Direct(resp) => resp,
+            Parsed::Shutdown => {
+                let _ = writeln!(
+                    writer,
+                    "{}",
+                    JsonValue::obj(vec![
+                        ("ok", JsonValue::Bool(true)),
+                        ("bye", JsonValue::Bool(true)),
+                    ])
+                );
+                stop_engine(&engine, addr);
+                break;
+            }
+            Parsed::Queue(op, unwrap_single) => {
+                let (tx, rx) = mpsc::channel();
+                if !engine.queue.push(Job { op, tx }, &engine.stop) {
+                    err_json("server is shutting down")
+                } else {
+                    // stop-aware receive: a job that raced the shutdown
+                    // drain (pushed after the batcher emptied the queue)
+                    // must not strand this handler on a forever-recv
+                    let received = loop {
+                        match rx.recv_timeout(Duration::from_millis(200)) {
+                            Ok(r) => break Some(r),
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break None,
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                if engine.stop.load(Ordering::Acquire) {
+                                    break None;
+                                }
+                            }
+                        }
+                    };
+                    match received {
+                        None => err_json("server dropped the request (shutting down?)"),
+                        Some(Reply::Preds(preds)) if unwrap_single && preds.len() == 1 => {
+                            JsonValue::obj(vec![
+                                ("ok", JsonValue::Bool(true)),
+                                ("mean", JsonValue::num(preds[0].mean)),
+                                ("std", JsonValue::num(preds[0].std)),
+                            ])
+                            .to_string()
+                        }
+                        Some(reply) => reply_json(reply),
+                    }
+                }
+            }
+        };
+        if writeln!(writer, "{response}").is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{SessionConfig, TrainSession};
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("smurff_serve_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn tiny_store(tag: &str, nsamples: usize) -> PathBuf {
+        let (train, _) = crate::data::movielens_like(40, 30, 1_200, 0.0, 61);
+        let dir = scratch(tag);
+        let cfg = SessionConfig {
+            num_latent: 4,
+            burnin: 3,
+            nsamples,
+            seed: 61,
+            threads: 1,
+            save_freq: 1,
+            save_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        TrainSession::bmf(train, None, cfg).run();
+        dir
+    }
+
+    fn test_cfg() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 2,
+            batch_wait: Duration::from_millis(1),
+            poll: Duration::from_millis(20),
+            allow_shutdown: true,
+            ..Default::default()
+        }
+    }
+
+    struct Client {
+        reader: BufReader<TcpStream>,
+        writer: TcpStream,
+    }
+
+    impl Client {
+        fn connect(addr: SocketAddr) -> Client {
+            let stream = TcpStream::connect(addr).unwrap();
+            stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
+        }
+
+        fn roundtrip(&mut self, req: &str) -> JsonValue {
+            writeln!(self.writer, "{req}").unwrap();
+            let mut line = String::new();
+            self.reader.read_line(&mut line).unwrap();
+            JsonValue::parse(line.trim()).unwrap()
+        }
+    }
+
+    #[test]
+    fn tcp_round_trip_matches_direct_session() {
+        let dir = tiny_store("rt", 5);
+        let handle = serve(&dir, test_cfg()).unwrap();
+        let direct = PredictSession::open_with_threads(&dir, 1).unwrap();
+        let mut c = Client::connect(handle.addr());
+
+        // status
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(st.get("samples").unwrap().as_usize(), Some(5));
+        assert_eq!(st.get("nrows").unwrap().as_usize(), Some(40));
+
+        // pointwise: identical to the in-process engine
+        let p = c.roundtrip(r#"{"op":"predict","view":0,"row":3,"col":7}"#);
+        assert_eq!(p.get("ok").unwrap().as_bool(), Some(true));
+        let want = direct.predict_one(0, 3, 7);
+        assert_eq!(p.get("mean").unwrap().as_f64(), Some(want.mean));
+        assert_eq!(p.get("std").unwrap().as_f64(), Some(want.std));
+
+        // batched cells, mean-only fast path
+        let b = c.roundtrip(r#"{"op":"predict_batch","view":0,"cells":[[3,7],[0,0],[39,29]],"mean_only":true}"#);
+        let means = b.get("means").unwrap().as_array().unwrap();
+        let want = direct.predict_cells_mean(0, &[3, 0, 39], &[7, 0, 29]);
+        for (m, w) in means.iter().zip(&want) {
+            assert_eq!(m.as_f64(), Some(*w));
+        }
+        // full path carries stds
+        let b = c.roundtrip(r#"{"op":"predict_batch","view":0,"cells":[[3,7]]}"#);
+        assert!(b.get("stds").is_some());
+
+        // top-K
+        let t = c.roundtrip(r#"{"op":"topk","view":0,"row":3,"k":4,"exclude":[0,1]}"#);
+        let items = t.get("items").unwrap().as_array().unwrap();
+        let want = direct.top_k(0, 3, 4, &[0, 1]);
+        assert_eq!(items.len(), want.len());
+        for (it, (wc, ws)) in items.iter().zip(&want) {
+            let pair = it.as_array().unwrap();
+            assert_eq!(pair[0].as_usize(), Some(*wc as usize));
+            assert_eq!(pair[1].as_f64(), Some(*ws));
+        }
+
+        // errors keep the connection usable
+        let e = c.roundtrip(r#"{"op":"predict","view":0,"row":999,"col":0}"#);
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("out of range"));
+        let e = c.roundtrip("this is not json");
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        let e = c.roundtrip(r#"{"op":"nope"}"#);
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+        // a present-but-malformed view/k is an error, never coerced to
+        // the default
+        let e = c.roundtrip(r#"{"op":"predict","view":"1","row":0,"col":0}"#);
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("non-negative integer"));
+        let e = c.roundtrip(r#"{"op":"topk","row":0,"k":1.5}"#);
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+
+        // served counter moved
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        assert!(st.get("served").unwrap().as_usize().unwrap() >= 4);
+
+        // clean shutdown over the wire
+        let bye = c.roundtrip(r#"{"op":"shutdown"}"#);
+        assert_eq!(bye.get("bye").unwrap().as_bool(), Some(true));
+        handle.wait();
+    }
+
+    #[test]
+    fn concurrent_clients_get_consistent_answers() {
+        let dir = tiny_store("conc", 4);
+        let handle = serve(&dir, test_cfg()).unwrap();
+        let direct = PredictSession::open_with_threads(&dir, 1).unwrap();
+        let addr = handle.addr();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                let mut out = Vec::new();
+                for i in 0..25 {
+                    let row = (t * 7 + i) % 40;
+                    let col = (t + i * 3) % 30;
+                    let p = c.roundtrip(&format!(
+                        r#"{{"op":"predict","view":0,"row":{row},"col":{col}}}"#
+                    ));
+                    out.push((row, col, p.get("mean").unwrap().as_f64().unwrap()));
+                }
+                out
+            }));
+        }
+        for j in joins {
+            for (row, col, mean) in j.join().unwrap() {
+                assert_eq!(mean, direct.predict_one(0, row, col).mean, "({row},{col})");
+            }
+        }
+        handle.stop();
+    }
+
+    #[test]
+    fn hot_reload_swaps_in_new_snapshots() {
+        let dir = tiny_store("reload", 3);
+        let handle = serve(&dir, test_cfg()).unwrap();
+        let mut c = Client::connect(handle.addr());
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        assert_eq!(st.get("samples").unwrap().as_usize(), Some(3));
+
+        // the training side appends a snapshot (iterations move on)
+        let mut store = crate::store::ModelStore::open(&dir).unwrap();
+        let mut snap = store.load_snapshot(store.len() - 1).unwrap();
+        snap.iteration += 1;
+        store.save_snapshot(&snap).unwrap();
+
+        // the watcher (20ms poll) picks it up
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            std::thread::sleep(Duration::from_millis(25));
+            let st = c.roundtrip(r#"{"op":"status"}"#);
+            if st.get("samples").unwrap().as_usize() == Some(4) {
+                assert!(st.get("reloads").unwrap().as_usize().unwrap() >= 1);
+                break;
+            }
+            assert!(Instant::now() < deadline, "hot reload never happened");
+        }
+        // and the swapped model still answers
+        let p = c.roundtrip(r#"{"op":"predict","view":0,"row":0,"col":0}"#);
+        assert_eq!(p.get("ok").unwrap().as_bool(), Some(true));
+        handle.stop();
+    }
+
+    #[test]
+    fn shutdown_is_gated() {
+        let dir = tiny_store("gate", 2);
+        let mut cfg = test_cfg();
+        cfg.allow_shutdown = false;
+        let handle = serve(&dir, cfg).unwrap();
+        let mut c = Client::connect(handle.addr());
+        let e = c.roundtrip(r#"{"op":"shutdown"}"#);
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        // server is still alive
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+        handle.stop();
+    }
+}

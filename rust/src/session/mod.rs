@@ -1007,6 +1007,14 @@ impl TrainSession {
                 );
             }
         }
+        // the save path emits store layout v3: pack the finished store
+        // into the page-aligned serving artifact so `smurff predict` /
+        // `smurff serve` map the posterior zero-copy
+        if let Some(st) = store.as_mut() {
+            if !st.is_empty() {
+                st.compact()?;
+            }
+        }
         let view_rmse: Vec<f64> = (0..self.views.len()).map(|i| self.view_rmse(i)).collect();
         let auc = self.view_auc(0);
         Ok(TrainResult {

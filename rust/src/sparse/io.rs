@@ -275,14 +275,36 @@ pub fn write_dbm(m: &Mat, path: &Path) -> anyhow::Result<()> {
 
 pub fn read_dbm(path: &Path) -> anyhow::Result<Mat> {
     let f = std::fs::File::open(path)?;
+    // validate the declared shape against the actual file size BEFORE
+    // allocating: a truncated or corrupted header would otherwise turn
+    // into a huge allocation / arithmetic-overflow panic, or a read_exact
+    // error with no hint of which payload was bad (store hardening,
+    // ISSUE 5 satellite)
+    let file_len = f.metadata()?.len();
+    let want_len = |rows: u64, cols: u64| -> Option<u64> {
+        rows.checked_mul(cols)?.checked_mul(8)?.checked_add(20)
+    };
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 4];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic)
+        .map_err(|_| anyhow::anyhow!("{}: truncated DBM file (no header)", path.display()))?;
     if &magic != DBM_MAGIC {
         anyhow::bail!("{} is not a DBM file", path.display());
     }
-    let rows = read_u64(&mut r)? as usize;
-    let cols = read_u64(&mut r)? as usize;
+    let rows = read_u64(&mut r)
+        .map_err(|_| anyhow::anyhow!("{}: truncated DBM header", path.display()))?;
+    let cols = read_u64(&mut r)
+        .map_err(|_| anyhow::anyhow!("{}: truncated DBM header", path.display()))?;
+    match want_len(rows, cols) {
+        Some(want) if want == file_len => {}
+        want => anyhow::bail!(
+            "{}: truncated or size-mismatched DBM payload — header declares {rows}x{cols} \
+             ({} bytes expected) but the file holds {file_len} bytes",
+            path.display(),
+            want.map(|w| w.to_string()).unwrap_or_else(|| "overflowing".to_string()),
+        ),
+    }
+    let (rows, cols) = (rows as usize, cols as usize);
     let mut data = vec![0.0f64; rows * cols];
     for v in data.iter_mut() {
         *v = read_f64(&mut r)?;
@@ -479,6 +501,46 @@ mod tests {
         let p = tmpdir().join("x.stn");
         std::fs::write(&p, b"NOPE").unwrap();
         assert!(read_stn(&p).is_err());
+    }
+
+    #[test]
+    fn dbm_rejects_truncated_and_size_mismatched_payloads() {
+        let dir = tmpdir();
+        let m = Mat::from_vec(4, 3, (0..12).map(|i| i as f64).collect());
+        let full = dir.join("full.dbm");
+        write_dbm(&m, &full).unwrap();
+        let bytes = std::fs::read(&full).unwrap();
+
+        // hand-truncated payload: cut the file mid-data
+        let cut = dir.join("cut.dbm");
+        std::fs::write(&cut, &bytes[..bytes.len() - 13]).unwrap();
+        let err = read_dbm(&cut).unwrap_err().to_string();
+        assert!(err.contains("truncated or size-mismatched"), "{err}");
+        assert!(err.contains("4x3"), "{err}");
+
+        // truncated inside the header
+        let hdr = dir.join("hdr.dbm");
+        std::fs::write(&hdr, &bytes[..9]).unwrap();
+        assert!(read_dbm(&hdr).unwrap_err().to_string().contains("truncated"), "header cut");
+
+        // header claims more data than the file holds (size mismatch the
+        // other way round: extra trailing bytes are rejected too)
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 8]);
+        let pad = dir.join("pad.dbm");
+        std::fs::write(&pad, &padded).unwrap();
+        assert!(read_dbm(&pad).is_err(), "trailing bytes");
+
+        // absurd header dims must not allocate: craft rows = u64::MAX
+        let mut evil = bytes.clone();
+        evil[4..12].copy_from_slice(&u64::MAX.to_le_bytes());
+        let ev = dir.join("evil.dbm");
+        std::fs::write(&ev, &evil).unwrap();
+        let err = read_dbm(&ev).unwrap_err().to_string();
+        assert!(err.contains("overflowing") || err.contains("size-mismatched"), "{err}");
+
+        // and the intact file still loads
+        assert_eq!(read_dbm(&full).unwrap(), m);
     }
 
     #[test]

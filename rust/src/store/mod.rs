@@ -27,10 +27,26 @@
 //! Posterior-sample files round-trip bit-exactly (little-endian `f64`),
 //! which is what lets served averages match in-training RMSE to the
 //! last ulp.
+//!
+//! ## Packed serving artifact (layout v3)
+//!
+//! [`ModelStore::compact`] condenses the per-sample subdirectories into
+//! the page-aligned, sample-major [`packed`] artifact (`packed/u.pack`,
+//! `packed/view{v}.pack`, `packed/link.pack`) that the serving engine
+//! maps zero-copy, and records it in a version-3 manifest together with
+//! the per-sample scalars (α, λ_β) so a packed artifact is
+//! self-contained even without the sample dirs.  Appending a snapshot
+//! to a compacted store invalidates (and removes) the packed artifact;
+//! `TrainSession::try_run` re-compacts when training finishes.
+//! Version-1 and version-2 snapshot-dir stores still load — and are
+//! exactly what `compact()` migrates forward.
+
+pub mod packed;
 
 use crate::linalg::Mat;
 use crate::sparse::io::{read_dbm, write_dbm};
 use crate::util::JsonValue;
+use packed::{link_block_len, view_block_len, PackWriter, PackedStore};
 use std::path::{Path, PathBuf};
 
 /// Manifest `format` tag; guards against pointing the loader at some
@@ -38,10 +54,13 @@ use std::path::{Path, PathBuf};
 pub const STORE_FORMAT: &str = "smurff-model-store";
 /// Manifest schema version; bump on incompatible layout changes.
 /// Version 2 replaced the per-view column counts (`view_ncols`) with
-/// per-view mode dimension lists (`view_dims`) for N-mode tensor views;
-/// version-1 stores still load (every view maps to a single-mode list,
-/// and the flat factor-file numbering is unchanged for them).
-pub const STORE_VERSION: usize = 2;
+/// per-view mode dimension lists (`view_dims`) for N-mode tensor views.
+/// Version 3 added the optional packed serving artifact (a `packed`
+/// manifest section + page-aligned `packed/*.pack` files written by
+/// [`ModelStore::compact`]) and per-snapshot scalars in the manifest.
+/// Version-1 and version-2 stores still load (every v1 view maps to a
+/// single-mode list, and the flat factor-file numbering is unchanged).
+pub const STORE_VERSION: usize = 3;
 
 /// Immutable description of the model a store holds (shapes + the
 /// prediction constants that do not vary per sample).
@@ -81,7 +100,7 @@ impl StoreMeta {
         self.view_dims[..v].iter().map(|d| d.len()).sum()
     }
 
-    fn to_json(&self, snapshots: &[SnapshotInfo]) -> JsonValue {
+    fn to_json(&self, snapshots: &[SnapshotInfo], packed_nsamples: Option<usize>) -> JsonValue {
         let mut pairs = vec![
             ("format", JsonValue::str(STORE_FORMAT)),
             ("version", JsonValue::num(STORE_VERSION as f64)),
@@ -98,16 +117,29 @@ impl StoreMeta {
         if let Some(p) = &self.producer {
             pairs.push(("producer", JsonValue::str(p)));
         }
+        if let Some(n) = packed_nsamples {
+            pairs.push((
+                "packed",
+                JsonValue::obj(vec![("nsamples", JsonValue::num(n as f64))]),
+            ));
+        }
         pairs.push((
             "snapshots",
             JsonValue::Array(
                 snapshots
                     .iter()
                     .map(|s| {
-                        JsonValue::obj(vec![
+                        let mut entry = vec![
                             ("iteration", JsonValue::num(s.iteration as f64)),
                             ("dir", JsonValue::str(&s.dir)),
-                        ])
+                        ];
+                        if let Some(a) = &s.alphas {
+                            entry.push(("alphas", JsonValue::arr_f64(a)));
+                        }
+                        if let Some(l) = s.lambda_beta {
+                            entry.push(("lambda_beta", JsonValue::num(l)));
+                        }
+                        JsonValue::obj(entry)
                     })
                     .collect(),
             ),
@@ -150,6 +182,12 @@ pub struct Snapshot {
 struct SnapshotInfo {
     iteration: usize,
     dir: String,
+    /// per-view noise α, mirrored into the manifest (always by
+    /// `save_snapshot`, backfilled by `compact()` for migrated v1/v2
+    /// stores) so a packed artifact is self-contained without the
+    /// per-sample `meta.json` files
+    alphas: Option<Vec<f64>>,
+    lambda_beta: Option<f64>,
 }
 
 /// An open model store (created by training, read by serving).
@@ -157,6 +195,13 @@ pub struct ModelStore {
     dir: PathBuf,
     meta: StoreMeta,
     snapshots: Vec<SnapshotInfo>,
+    /// sample count of the packed artifact recorded in the manifest
+    /// (`None` = not compacted; stale counts are dropped at open)
+    packed_nsamples: Option<usize>,
+    /// lazily-opened pack files for `load_snapshot`'s packed fallback
+    /// (one open + validation, not one per snapshot); reset whenever the
+    /// artifact changes (append / re-compact)
+    packed_cache: std::sync::OnceLock<PackedStore>,
 }
 
 impl ModelStore {
@@ -174,7 +219,13 @@ impl ModelStore {
         if meta.view_dims.iter().any(|d| d.is_empty()) {
             anyhow::bail!("store meta: every view needs at least one non-shared mode");
         }
-        let store = ModelStore { dir: dir.to_path_buf(), meta, snapshots: Vec::new() };
+        let store = ModelStore {
+            dir: dir.to_path_buf(),
+            meta,
+            snapshots: Vec::new(),
+            packed_nsamples: None,
+            packed_cache: std::sync::OnceLock::new(),
+        };
         store.write_manifest()?;
         Ok(store)
     }
@@ -256,9 +307,30 @@ impl ModelStore {
                 .get("dir")
                 .and_then(|v| v.as_str())
                 .ok_or_else(|| anyhow::anyhow!("snapshot entry missing 'dir'"))?;
-            snapshots.push(SnapshotInfo { iteration, dir: subdir.to_string() });
+            let alphas = s
+                .get("alphas")
+                .and_then(|v| v.as_array())
+                .map(|a| {
+                    a.iter()
+                        .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("bad alpha entry")))
+                        .collect::<anyhow::Result<Vec<f64>>>()
+                })
+                .transpose()?;
+            snapshots.push(SnapshotInfo {
+                iteration,
+                dir: subdir.to_string(),
+                alphas,
+                lambda_beta: s.get("lambda_beta").and_then(|v| v.as_f64()),
+            });
         }
         snapshots.sort_by_key(|s| s.iteration);
+        // a packed artifact is only trusted when it covers exactly the
+        // indexed snapshots (anything else is a stale leftover)
+        let packed_nsamples = m
+            .get("packed")
+            .and_then(|p| p.get("nsamples"))
+            .and_then(|v| v.as_usize())
+            .filter(|&n| n == snapshots.len() && n > 0);
         Ok(ModelStore {
             dir: dir.to_path_buf(),
             meta: StoreMeta {
@@ -274,6 +346,8 @@ impl ModelStore {
                     .map(|s| s.to_string()),
             },
             snapshots,
+            packed_nsamples,
+            packed_cache: std::sync::OnceLock::new(),
         })
     }
 
@@ -302,7 +376,10 @@ impl ModelStore {
     fn write_manifest(&self) -> anyhow::Result<()> {
         // write-then-rename so a crash mid-write never corrupts the index
         let tmp = self.dir.join("manifest.json.tmp");
-        std::fs::write(&tmp, self.meta.to_json(&self.snapshots).to_string_pretty())?;
+        std::fs::write(
+            &tmp,
+            self.meta.to_json(&self.snapshots, self.packed_nsamples).to_string_pretty(),
+        )?;
         std::fs::rename(&tmp, self.dir.join("manifest.json"))?;
         Ok(())
     }
@@ -320,6 +397,22 @@ impl ModelStore {
                      point save_dir at a fresh directory when replaying)",
                     snap.iteration,
                     last.iteration
+                );
+            }
+        }
+        // appending will invalidate (and delete) any packed artifact; on
+        // a packs-only store — sample dirs removed, packs the only copy
+        // of the posterior — that would silently destroy every prior
+        // sample, so refuse up front
+        if self.packed_nsamples.is_some() {
+            if let Some(missing) = self.snapshots.iter().find(|s| !self.dir.join(&s.dir).exists())
+            {
+                anyhow::bail!(
+                    "cannot append to {}: snapshot dir {} is gone and the packed artifact \
+                     holds its only copy — appending would delete it; point save_dir at a \
+                     fresh directory (or restore the sample dirs) instead",
+                    self.dir.display(),
+                    missing.dir
                 );
             }
         }
@@ -381,17 +474,36 @@ impl ModelStore {
                 &sdir.join("link_mu.dbm"),
             )?;
         }
-        self.snapshots.push(SnapshotInfo { iteration: snap.iteration, dir: name });
+        // appending invalidates any packed artifact (it no longer covers
+        // every sample); drop it from the index and best-effort delete
+        // the files — readers holding an mmap keep working off the
+        // unlinked inodes
+        if self.packed_nsamples.take().is_some() {
+            let _ = std::fs::remove_dir_all(self.dir.join(packed::PACKED_SUBDIR));
+            self.packed_cache = std::sync::OnceLock::new();
+        }
+        self.snapshots.push(SnapshotInfo {
+            iteration: snap.iteration,
+            dir: name,
+            alphas: Some(snap.alphas.clone()),
+            lambda_beta: snap.link.as_ref().map(|l| l.lambda_beta),
+        });
         self.write_manifest()
     }
 
-    /// Load stored sample `idx` (0-based, chronological order).
+    /// Load stored sample `idx` (0-based, chronological order).  Reads
+    /// the per-sample snapshot directory when present, else falls back
+    /// to slicing the packed artifact (a compacted store stays loadable
+    /// after its sample dirs are deleted or left behind by a copy).
     pub fn load_snapshot(&self, idx: usize) -> anyhow::Result<Snapshot> {
         let info = self
             .snapshots
             .get(idx)
             .ok_or_else(|| anyhow::anyhow!("snapshot {idx} out of range ({} stored)", self.len()))?;
         let sdir = self.dir.join(&info.dir);
+        if !sdir.exists() && self.is_packed() {
+            return self.load_snapshot_packed(idx);
+        }
         let meta = JsonValue::parse(&std::fs::read_to_string(sdir.join("meta.json"))?)
             .map_err(|e| anyhow::anyhow!("bad snapshot meta in {}: {e}", sdir.display()))?;
         let alphas: Vec<f64> = meta
@@ -426,6 +538,158 @@ impl ModelStore {
             return Ok(None);
         }
         self.load_snapshot(self.len() - 1).map(Some)
+    }
+
+    /// Whether this store carries a packed artifact covering every
+    /// indexed snapshot (written by [`compact`](ModelStore::compact)).
+    pub fn is_packed(&self) -> bool {
+        self.packed_nsamples == Some(self.len()) && !self.is_empty()
+    }
+
+    /// Open the packed artifact's pack files, shape-validated against
+    /// the manifest.  Errors when the store was never compacted.
+    pub fn open_packed(&self) -> anyhow::Result<PackedStore> {
+        if !self.is_packed() {
+            anyhow::bail!(
+                "store at {} has no packed artifact covering its {} snapshots \
+                 (run ModelStore::compact() / `smurff compact`)",
+                self.dir.display(),
+                self.len()
+            );
+        }
+        PackedStore::open(&self.dir, &self.meta, self.len())
+    }
+
+    /// Condense every snapshot into the packed serving artifact (layout
+    /// v3): one page-aligned `packed/*.pack` file per view (plus
+    /// `u.pack` and, for Macau stores, `link.pack`) holding all samples'
+    /// factors contiguously in sample-major blocks, and a version-3
+    /// manifest that records the artifact plus the per-sample scalars.
+    /// Works on any loadable store — including version-1/2 snapshot-dir
+    /// stores, which this is the migration path for.  Snapshot dirs are
+    /// left in place; both representations load and serve bit-identical
+    /// predictions (tested).  Re-running overwrites the artifact.
+    pub fn compact(&mut self) -> anyhow::Result<()> {
+        if self.is_empty() {
+            anyhow::bail!("cannot compact an empty store ({})", self.dir.display());
+        }
+        let n = self.len();
+        let k = self.meta.num_latent;
+        // stage into packed.tmp/ and rename into place at the end: an
+        // existing artifact is replaced atomically per file — live
+        // readers keep serving off the old inodes' mmaps instead of
+        // seeing their mapping truncated under them — and a crash
+        // mid-compact never leaves the manifest pointing at a partial
+        // artifact (the manifest is written last)
+        let tmp = self.dir.join("packed.tmp");
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp)?;
+        let mut uw = PackWriter::create(&tmp.join("u.pack"), n, self.meta.nrows * k)?;
+        let mut vws = Vec::with_capacity(self.meta.nviews());
+        for v in 0..self.meta.nviews() {
+            vws.push(PackWriter::create(
+                &tmp.join(format!("view{v}.pack")),
+                n,
+                view_block_len(&self.meta, v),
+            )?);
+        }
+        let mut lw = if self.meta.link_features > 0 {
+            Some(PackWriter::create(&tmp.join("link.pack"), n, link_block_len(&self.meta))?)
+        } else {
+            None
+        };
+        for s in 0..n {
+            let snap = self.load_snapshot(s)?;
+            uw.write_slice(snap.u.data())?;
+            for (v, w) in vws.iter_mut().enumerate() {
+                let off = self.meta.vs_offset(v);
+                for m in 0..self.meta.view_dims[v].len() {
+                    w.write_slice(snap.vs[off + m].data())?;
+                }
+            }
+            if let Some(w) = lw.as_mut() {
+                let link = snap
+                    .link
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("snapshot {s} lacks the declared link model"))?;
+                w.write_slice(link.beta.data())?;
+                w.write_slice(&link.mu)?;
+                w.write_slice(&[link.lambda_beta])?;
+            }
+            // backfill the manifest scalars (v1/v2 stores keep them only
+            // in per-sample meta.json files)
+            self.snapshots[s].alphas = Some(snap.alphas.clone());
+            self.snapshots[s].lambda_beta = snap.link.as_ref().map(|l| l.lambda_beta);
+        }
+        uw.finish()?;
+        for w in vws {
+            w.finish()?;
+        }
+        if let Some(w) = lw {
+            w.finish()?;
+        }
+        // move the finished files into packed/ (atomic per-file rename),
+        // then — and only then — record the artifact in the manifest
+        let final_dir = self.dir.join(packed::PACKED_SUBDIR);
+        std::fs::create_dir_all(&final_dir)?;
+        let mut names = vec!["u.pack".to_string()];
+        names.extend((0..self.meta.nviews()).map(|v| format!("view{v}.pack")));
+        if self.meta.link_features > 0 {
+            names.push("link.pack".to_string());
+        }
+        for name in &names {
+            std::fs::rename(tmp.join(name), final_dir.join(name))?;
+        }
+        let _ = std::fs::remove_dir_all(&tmp);
+        self.packed_nsamples = Some(n);
+        self.packed_cache = std::sync::OnceLock::new();
+        self.write_manifest()
+    }
+
+    /// The cached pack-file handle behind the packed `load_snapshot`
+    /// fallback: the artifact is opened and validated once per
+    /// `ModelStore`, not once per snapshot.
+    fn packed_handle(&self) -> anyhow::Result<&PackedStore> {
+        if self.packed_cache.get().is_none() {
+            let ps = self.open_packed()?;
+            let _ = self.packed_cache.set(ps);
+        }
+        Ok(self.packed_cache.get().expect("just initialized"))
+    }
+
+    /// [`load_snapshot`](ModelStore::load_snapshot) out of the packed
+    /// artifact (materializes owned `Mat`s — the resume path; serving
+    /// reads the blocks zero-copy through `predict::ServingModel`).
+    fn load_snapshot_packed(&self, idx: usize) -> anyhow::Result<Snapshot> {
+        let ps = self.packed_handle()?;
+        let info = &self.snapshots[idx];
+        let alphas = info.alphas.clone().ok_or_else(|| {
+            anyhow::anyhow!("manifest lacks per-snapshot alphas; re-run compact()")
+        })?;
+        let k = self.meta.num_latent;
+        let u = Mat::from_vec(self.meta.nrows, k, ps.u.block(idx).to_vec());
+        let mut vs = Vec::with_capacity(self.meta.total_mats());
+        for (v, dims) in self.meta.view_dims.iter().enumerate() {
+            let block = ps.views[v].block(idx);
+            let mut at = 0;
+            for &d in dims {
+                vs.push(Mat::from_vec(d, k, block[at..at + d * k].to_vec()));
+                at += d * k;
+            }
+        }
+        let link = match &ps.link {
+            Some(lp) => {
+                let block = lp.block(idx);
+                let f = self.meta.link_features;
+                Some(LinkState {
+                    beta: Mat::from_vec(f, k, block[..f * k].to_vec()),
+                    mu: block[f * k..f * k + k].to_vec(),
+                    lambda_beta: block[f * k + k],
+                })
+            }
+            None => None,
+        };
+        Ok(Snapshot { iteration: info.iteration, u, vs, alphas, link })
     }
 }
 
@@ -628,6 +892,133 @@ mod tests {
         assert_eq!(snap.u.max_abs_diff(&u), 0.0);
         assert_eq!(snap.vs.len(), 1);
         assert_eq!(snap.vs[0].max_abs_diff(&v0), 0.0);
+    }
+
+    #[test]
+    fn load_snapshot_errors_on_truncated_payload() {
+        // satellite hardening: a truncated or size-mismatched .dbm in a
+        // snapshot dir must surface as a descriptive Err from
+        // load_snapshot, never a panic or a huge allocation
+        let dir = scratch("trunc");
+        let mut rng = Rng::new(90);
+        let mut store = ModelStore::create(&dir, meta(6, 3, &[4], 0)).unwrap();
+        store.save_snapshot(&random_snapshot(&mut rng, 1, 6, 3, &[4])).unwrap();
+        let vpath = dir.join("sample_00001/v0.dbm");
+        let bytes = std::fs::read(&vpath).unwrap();
+        std::fs::write(&vpath, &bytes[..bytes.len() - 11]).unwrap();
+        let opened = ModelStore::open(&dir).unwrap();
+        let err = opened.load_snapshot(0).unwrap_err().to_string();
+        assert!(err.contains("truncated or size-mismatched"), "{err}");
+        // and compact() refuses to build an artifact from it
+        let mut opened = ModelStore::open(&dir).unwrap();
+        assert!(opened.compact().is_err());
+    }
+
+    #[test]
+    fn compact_packs_and_snapshots_reload_bit_exactly() {
+        let dir = scratch("compact");
+        let mut rng = Rng::new(91);
+        let mut store = ModelStore::create(&dir, meta(8, 4, &[6, 5], 0)).unwrap();
+        let s1 = random_snapshot(&mut rng, 1, 8, 4, &[6, 5]);
+        let s2 = random_snapshot(&mut rng, 2, 8, 4, &[6, 5]);
+        store.save_snapshot(&s1).unwrap();
+        store.save_snapshot(&s2).unwrap();
+        assert!(!store.is_packed());
+        assert!(store.open_packed().is_err());
+        store.compact().unwrap();
+        assert!(store.is_packed());
+
+        // fresh open sees the artifact; pack blocks carry the payload
+        let opened = ModelStore::open(&dir).unwrap();
+        assert!(opened.is_packed());
+        let ps = opened.open_packed().unwrap();
+        assert_eq!(ps.u.nblocks(), 2);
+        assert_eq!(ps.u.block(1), s2.u.data());
+        assert_eq!(&ps.views[1].block(0)[..], s1.vs[1].data());
+
+        // delete the sample dirs: load_snapshot falls back to the packs
+        for it in opened.iterations() {
+            std::fs::remove_dir_all(dir.join(format!("sample_{it:05}"))).unwrap();
+        }
+        let reopened = ModelStore::open(&dir).unwrap();
+        let l1 = reopened.load_snapshot(0).unwrap();
+        assert_eq!(l1.iteration, 1);
+        assert_eq!(l1.u.max_abs_diff(&s1.u), 0.0);
+        assert_eq!(l1.vs[0].max_abs_diff(&s1.vs[0]), 0.0);
+        assert_eq!(l1.vs[1].max_abs_diff(&s1.vs[1]), 0.0);
+        assert_eq!(l1.alphas, s1.alphas);
+    }
+
+    #[test]
+    fn compact_preserves_link_model() {
+        let dir = scratch("packlink");
+        let mut rng = Rng::new(92);
+        let (n, k, f) = (5, 3, 7);
+        let mut store = ModelStore::create(&dir, meta(n, k, &[4], f)).unwrap();
+        let mut snap = random_snapshot(&mut rng, 1, n, k, &[4]);
+        let mut beta = Mat::zeros(f, k);
+        rng.fill_normal(beta.data_mut());
+        snap.link =
+            Some(LinkState { beta: beta.clone(), mu: vec![0.5, -1.5, 2.0], lambda_beta: 3.25 });
+        store.save_snapshot(&snap).unwrap();
+        store.compact().unwrap();
+        std::fs::remove_dir_all(dir.join("sample_00001")).unwrap();
+        let link = ModelStore::open(&dir).unwrap().load_snapshot(0).unwrap().link.unwrap();
+        assert_eq!(link.beta.max_abs_diff(&beta), 0.0);
+        assert_eq!(link.mu, vec![0.5, -1.5, 2.0]);
+        assert_eq!(link.lambda_beta, 3.25);
+    }
+
+    #[test]
+    fn appending_invalidates_the_packed_artifact() {
+        let dir = scratch("stale");
+        let mut rng = Rng::new(93);
+        let mut store = ModelStore::create(&dir, meta(5, 2, &[3], 0)).unwrap();
+        store.save_snapshot(&random_snapshot(&mut rng, 1, 5, 2, &[3])).unwrap();
+        store.compact().unwrap();
+        assert!(store.is_packed());
+        // appending drops the artifact from the manifest and the disk
+        store.save_snapshot(&random_snapshot(&mut rng, 2, 5, 2, &[3])).unwrap();
+        assert!(!store.is_packed());
+        assert!(!packed::u_pack_path(&dir).exists());
+        let reopened = ModelStore::open(&dir).unwrap();
+        assert!(!reopened.is_packed());
+        assert_eq!(reopened.len(), 2);
+        // a hand-edited manifest claiming a wrong packed count is ignored
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let tweaked =
+            manifest.replace("\"snapshots\":", "\"packed\": {\"nsamples\": 1},\n  \"snapshots\":");
+        std::fs::write(dir.join("manifest.json"), tweaked).unwrap();
+        assert!(!ModelStore::open(&dir).unwrap().is_packed(), "stale packed count trusted");
+        // and re-compacting brings it back covering both samples
+        let mut store = ModelStore::open(&dir).unwrap();
+        store.compact().unwrap();
+        assert_eq!(ModelStore::open(&dir).unwrap().open_packed().unwrap().u.nblocks(), 2);
+    }
+
+    #[test]
+    fn append_to_packs_only_store_is_refused_not_destructive() {
+        // packs-only store (sample dirs deleted): appending would delete
+        // the packed artifact — the only copy of the posterior — so
+        // save_snapshot must refuse and leave everything loadable
+        let dir = scratch("packsonly");
+        let mut rng = Rng::new(94);
+        let mut store = ModelStore::create(&dir, meta(5, 2, &[3], 0)).unwrap();
+        let s1 = random_snapshot(&mut rng, 1, 5, 2, &[3]);
+        store.save_snapshot(&s1).unwrap();
+        store.compact().unwrap();
+        std::fs::remove_dir_all(dir.join("sample_00001")).unwrap();
+
+        let mut reopened = ModelStore::open(&dir).unwrap();
+        let err = reopened
+            .save_snapshot(&random_snapshot(&mut rng, 2, 5, 2, &[3]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("only copy"), "{err}");
+        // the old sample is still fully loadable from the packs
+        let again = ModelStore::open(&dir).unwrap();
+        assert!(again.is_packed());
+        assert_eq!(again.load_snapshot(0).unwrap().u.max_abs_diff(&s1.u), 0.0);
     }
 
     #[test]

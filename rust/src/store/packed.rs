@@ -1,0 +1,548 @@
+//! The packed model artifact (store layout v3, ISSUE 5 tentpole).
+//!
+//! A snapshot-dir store spreads every posterior sample over its own
+//! subdirectory of small `.dbm` files; serving then deserializes each
+//! into owned `Mat`s.  The packed artifact instead lays **all samples'
+//! factors for one view contiguously in a single page-aligned binary
+//! file**, in sample-major blocks, so the serving engine can map the
+//! file once and hand out borrowed [`crate::linalg::MatRef`] panels —
+//! zero copies, zero per-sample allocations, and sample loops that walk
+//! sequential memory (the "compute the posterior once, consume it many
+//! times" reading of the limited-communication line of work,
+//! arXiv:2004.02561).
+//!
+//! ## File format (`*.pack`)
+//!
+//! ```text
+//! offset  0   magic  "SMPK"
+//! offset  4   u32    version (= 3, matching the manifest version)
+//! offset  8   u64    nblocks    (posterior samples)
+//! offset 16   u64    block_len  (f64 count per sample block)
+//! offset 24   u64    data_off   (byte offset of block 0; page multiple)
+//! offset 32   u64[nblocks]      offset index: byte offset of each block
+//! ...         zero padding up to data_off
+//! data_off    f64[nblocks * block_len]   little-endian payload
+//! ```
+//!
+//! `data_off` is aligned to [`PACK_ALIGN`] (4096), so with the whole
+//! file mapped at a page boundary every block is 8-byte aligned and the
+//! payload reinterprets in place as `&[f64]`.  The offset index is
+//! validated on open (alignment, bounds, block extent), which is what
+//! makes truncated or hand-edited artifacts a descriptive `Err` instead
+//! of an out-of-bounds read.
+//!
+//! ## Readers
+//!
+//! On 64-bit unix little-endian targets the payload is mapped
+//! zero-copy through a minimal `mmap`/`munmap` FFI shim (no libc crate
+//! — the two symbols come from the platform C library that is linked
+//! anyway; the gate excludes 32-bit unix, where the hand-declared
+//! `off_t`/length types would mismatch the C ABI).  Everywhere else,
+//! and whenever `mmap` fails, [`PackFile::open`] falls back to one
+//! buffered read of the payload into an owned buffer; the `block()`
+//! accessor is identical either way.
+//!
+//! One artifact = one pack file per view plus `u.pack` for the shared
+//! mode-0 factors and optionally `link.pack` for the Macau link model —
+//! see [`PackedStore`].  `ModelStore::compact()` writes it from any
+//! v1/v2/v3 snapshot-dir store.
+
+use crate::store::StoreMeta;
+use std::io::{BufWriter, Read, Seek, Write};
+use std::path::{Path, PathBuf};
+
+/// Magic prefix of every pack file.
+pub const PACK_MAGIC: &[u8; 4] = b"SMPK";
+/// Pack-file format version (in lockstep with the manifest version).
+pub const PACK_VERSION: u32 = 3;
+/// Alignment of the payload region: one page, so a page-aligned mapping
+/// makes every `f64` block naturally aligned.
+pub const PACK_ALIGN: usize = 4096;
+
+fn header_len(nblocks: usize) -> usize {
+    32 + 8 * nblocks
+}
+
+fn data_offset(nblocks: usize) -> usize {
+    header_len(nblocks).div_ceil(PACK_ALIGN) * PACK_ALIGN
+}
+
+// ---------------------------------------------------------------- writer
+
+/// Streaming writer for one pack file: header and offset index are laid
+/// down up front (block offsets are deterministic), then `write_slice`
+/// appends payload f64s; [`finish`](PackWriter::finish) verifies the
+/// promised block count was delivered.
+pub struct PackWriter {
+    w: BufWriter<std::fs::File>,
+    path: PathBuf,
+    nblocks: usize,
+    block_len: usize,
+    written: usize, // f64s written so far
+}
+
+impl PackWriter {
+    pub fn create(path: &Path, nblocks: usize, block_len: usize) -> anyhow::Result<PackWriter> {
+        if nblocks == 0 || block_len == 0 {
+            anyhow::bail!("pack file needs at least one non-empty block");
+        }
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(PACK_MAGIC)?;
+        w.write_all(&PACK_VERSION.to_le_bytes())?;
+        w.write_all(&(nblocks as u64).to_le_bytes())?;
+        w.write_all(&(block_len as u64).to_le_bytes())?;
+        let data_off = data_offset(nblocks);
+        w.write_all(&(data_off as u64).to_le_bytes())?;
+        for s in 0..nblocks {
+            let off = data_off as u64 + (s * block_len * 8) as u64;
+            w.write_all(&off.to_le_bytes())?;
+        }
+        // zero padding up to the page-aligned payload start
+        let pad = data_off - header_len(nblocks);
+        w.write_all(&vec![0u8; pad])?;
+        Ok(PackWriter { w, path: path.to_path_buf(), nblocks, block_len, written: 0 })
+    }
+
+    /// Append payload values (need not be whole blocks; the writer only
+    /// tracks the running total).
+    pub fn write_slice(&mut self, xs: &[f64]) -> anyhow::Result<()> {
+        self.written += xs.len();
+        if self.written > self.nblocks * self.block_len {
+            anyhow::bail!(
+                "pack writer for {} overflowed: {} f64s into {} blocks of {}",
+                self.path.display(),
+                self.written,
+                self.nblocks,
+                self.block_len
+            );
+        }
+        for v in xs {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Flush and verify every promised block was written.
+    pub fn finish(mut self) -> anyhow::Result<()> {
+        if self.written != self.nblocks * self.block_len {
+            anyhow::bail!(
+                "pack writer for {} finished short: {} of {} f64s",
+                self.path.display(),
+                self.written,
+                self.nblocks * self.block_len
+            );
+        }
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------- mmap FFI shim
+
+#[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+mod mmap_shim {
+    //! Minimal read-only `mmap`/`munmap` wrapper.  The two symbols are
+    //! declared directly (the platform libc is linked into every unix
+    //! binary), so no external crate is needed.  Kept to the absolute
+    //! minimum the packed reader requires: map a whole file read-only,
+    //! expose the bytes, unmap on drop.
+
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut core::ffi::c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut core::ffi::c_void;
+        fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+    }
+
+    pub struct Mapping {
+        ptr: *mut core::ffi::c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is read-only and immutable for its lifetime;
+    // concurrent reads from any thread are fine, and `Drop` (munmap)
+    // requires no thread affinity.
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Mapping {
+        /// Map `len` bytes of `file` read-only (fails on len == 0 or on
+        /// any mmap error; callers fall back to buffered reads).
+        pub fn map(file: &std::fs::File, len: usize) -> std::io::Result<Mapping> {
+            if len == 0 {
+                return Err(std::io::Error::other("cannot map an empty file"));
+            }
+            // SAFETY: fd is valid for the borrow of `file`; mmap keeps
+            // the mapping valid past close, and we only request read
+            // access to a private mapping.
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            if ptr as isize == -1 {
+                return Err(std::io::Error::last_os_error());
+            }
+            Ok(Mapping { ptr, len })
+        }
+
+        pub fn as_bytes(&self) -> &[u8] {
+            // SAFETY: ptr..ptr+len is a live read-only mapping for the
+            // lifetime of self.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            // SAFETY: exactly the region returned by mmap.
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+enum Storage {
+    /// Zero-copy: the whole file stays mapped; block slices
+    /// reinterpret the payload bytes in place.
+    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+    Mapped(mmap_shim::Mapping),
+    /// Portable fallback: payload decoded once into an owned buffer.
+    Owned(Vec<f64>),
+}
+
+/// One open pack file: validated header + offset index, with `block()`
+/// returning the `s`-th sample's payload as a borrowed `&[f64]`.
+pub struct PackFile {
+    nblocks: usize,
+    block_len: usize,
+    data_off: usize,
+    /// validated byte offset of each block (from file start)
+    index: Vec<u64>,
+    storage: Storage,
+}
+
+impl PackFile {
+    pub fn open(path: &Path) -> anyhow::Result<PackFile> {
+        let mut f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("cannot open {}: {e}", path.display()))?;
+        let file_len = f.metadata()?.len();
+        let bad = |what: &str| anyhow::anyhow!("{}: {what}", path.display());
+        let mut head = [0u8; 32];
+        f.read_exact(&mut head).map_err(|_| bad("truncated pack header"))?;
+        if &head[0..4] != PACK_MAGIC {
+            anyhow::bail!("{} is not a packed model file", path.display());
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != PACK_VERSION {
+            anyhow::bail!("{}: unsupported pack version {version}", path.display());
+        }
+        let nblocks = u64::from_le_bytes(head[8..16].try_into().unwrap()) as usize;
+        let block_len = u64::from_le_bytes(head[16..24].try_into().unwrap()) as usize;
+        let data_off = u64::from_le_bytes(head[24..32].try_into().unwrap()) as usize;
+        if nblocks == 0 || block_len == 0 {
+            return Err(bad("empty pack file"));
+        }
+        // checked header extent: a hostile nblocks near usize::MAX must
+        // surface as this Err, not an arithmetic-overflow panic in
+        // debug builds
+        let header_bytes = nblocks
+            .checked_mul(8)
+            .and_then(|b| b.checked_add(32))
+            .ok_or_else(|| bad("pack header dimensions overflow"))?;
+        if data_off % PACK_ALIGN != 0 || data_off < header_bytes {
+            return Err(bad("misaligned payload offset"));
+        }
+        let payload_bytes = nblocks
+            .checked_mul(block_len)
+            .and_then(|n| n.checked_mul(8))
+            .ok_or_else(|| bad("pack header dimensions overflow"))?;
+        let want_len = data_off as u64 + payload_bytes as u64;
+        if file_len != want_len {
+            anyhow::bail!(
+                "{}: truncated or size-mismatched pack payload — header declares {} blocks \
+                 of {} f64s ({want_len} bytes expected) but the file holds {file_len} bytes",
+                path.display(),
+                nblocks,
+                block_len
+            );
+        }
+        let mut index = vec![0u64; nblocks];
+        let mut buf = [0u8; 8];
+        for (s, slot) in index.iter_mut().enumerate() {
+            f.read_exact(&mut buf).map_err(|_| bad("truncated offset index"))?;
+            let off = u64::from_le_bytes(buf);
+            // checked end: a corrupt entry near u64::MAX must fail the
+            // bounds test, not wrap past it
+            let in_bounds = match off.checked_add((block_len * 8) as u64) {
+                Some(end) => off % 8 == 0 && off >= data_off as u64 && end <= file_len,
+                None => false,
+            };
+            if !in_bounds {
+                anyhow::bail!("{}: offset index entry {s} out of bounds", path.display());
+            }
+            *slot = off;
+        }
+
+        // zero-copy map where the platform allows it, buffered otherwise
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        {
+            if let Ok(map) = mmap_shim::Mapping::map(&f, file_len as usize) {
+                return Ok(PackFile {
+                    nblocks,
+                    block_len,
+                    data_off,
+                    index,
+                    storage: Storage::Mapped(map),
+                });
+            }
+        }
+        f.seek(std::io::SeekFrom::Start(data_off as u64))?;
+        let mut bytes = vec![0u8; payload_bytes];
+        f.read_exact(&mut bytes).map_err(|_| bad("truncated pack payload"))?;
+        let data = bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(PackFile { nblocks, block_len, data_off, index, storage: Storage::Owned(data) })
+    }
+
+    pub fn nblocks(&self) -> usize {
+        self.nblocks
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    /// Whether this reader serves straight out of an mmap (no copy was
+    /// made at open).
+    pub fn zero_copy(&self) -> bool {
+        match &self.storage {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Storage::Mapped(_) => true,
+            Storage::Owned(_) => false,
+        }
+    }
+
+    /// Sample `s`'s payload block.
+    #[inline]
+    pub fn block(&self, s: usize) -> &[f64] {
+        assert!(s < self.nblocks, "pack block {s} out of range ({})", self.nblocks);
+        match &self.storage {
+            #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+            Storage::Mapped(map) => {
+                let off = self.index[s] as usize;
+                let bytes = &map.as_bytes()[off..off + self.block_len * 8];
+                // index entries are validated 8-aligned and the mapping
+                // is page-aligned, so the reinterpretation never has a
+                // misaligned prefix
+                let (pre, data, post) = unsafe { bytes.align_to::<f64>() };
+                debug_assert!(pre.is_empty() && post.is_empty());
+                data
+            }
+            Storage::Owned(data) => {
+                let start = (self.index[s] as usize - self.data_off) / 8;
+                &data[start..start + self.block_len]
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- artifact level
+
+/// Pack-file names of one artifact, derived from the store meta:
+/// `u.pack`, one `view{v}.pack` per view, `link.pack` when the store
+/// carries a Macau link model.  All live in a `packed/` subdirectory of
+/// the store.
+pub const PACKED_SUBDIR: &str = "packed";
+
+pub fn u_pack_path(store_dir: &Path) -> PathBuf {
+    store_dir.join(PACKED_SUBDIR).join("u.pack")
+}
+
+pub fn view_pack_path(store_dir: &Path, view: usize) -> PathBuf {
+    store_dir.join(PACKED_SUBDIR).join(format!("view{view}.pack"))
+}
+
+pub fn link_pack_path(store_dir: &Path) -> PathBuf {
+    store_dir.join(PACKED_SUBDIR).join("link.pack")
+}
+
+/// Per-sample f64 count of view `v`'s block (all its non-shared modes'
+/// factors concatenated in mode order).
+pub fn view_block_len(meta: &StoreMeta, v: usize) -> usize {
+    meta.view_dims[v].iter().map(|&d| d * meta.num_latent).sum()
+}
+
+/// Per-sample f64 count of the link block: β (F×K) + μ (K) + λ_β (1).
+pub fn link_block_len(meta: &StoreMeta) -> usize {
+    meta.link_features * meta.num_latent + meta.num_latent + 1
+}
+
+/// The open pack files of one artifact, shape-validated against the
+/// manifest.  This is what `ServingModel` builds its borrowed factor
+/// panels over.
+pub struct PackedStore {
+    pub u: PackFile,
+    pub views: Vec<PackFile>,
+    pub link: Option<PackFile>,
+}
+
+impl PackedStore {
+    /// Open and validate every pack file of the artifact in `store_dir`
+    /// against `meta` and the manifest's sample count.
+    pub fn open(store_dir: &Path, meta: &StoreMeta, nsamples: usize) -> anyhow::Result<PackedStore> {
+        let check = |f: &PackFile, what: &str, want_block: usize| -> anyhow::Result<()> {
+            if f.nblocks() != nsamples || f.block_len() != want_block {
+                anyhow::bail!(
+                    "packed artifact mismatch: {what} holds {} blocks of {}, manifest says \
+                     {nsamples} of {want_block} (re-run compact())",
+                    f.nblocks(),
+                    f.block_len()
+                );
+            }
+            Ok(())
+        };
+        let u = PackFile::open(&u_pack_path(store_dir))?;
+        check(&u, "u.pack", meta.nrows * meta.num_latent)?;
+        let mut views = Vec::with_capacity(meta.nviews());
+        for v in 0..meta.nviews() {
+            let pf = PackFile::open(&view_pack_path(store_dir, v))?;
+            check(&pf, &format!("view{v}.pack"), view_block_len(meta, v))?;
+            views.push(pf);
+        }
+        let link = if meta.link_features > 0 {
+            let pf = PackFile::open(&link_pack_path(store_dir))?;
+            check(&pf, "link.pack", link_block_len(meta))?;
+            Some(pf)
+        } else {
+            None
+        };
+        Ok(PackedStore { u, views, link })
+    }
+
+    /// True when every pack file is served zero-copy out of an mmap.
+    pub fn zero_copy(&self) -> bool {
+        self.u.zero_copy()
+            && self.views.iter().all(|v| v.zero_copy())
+            && self.link.as_ref().map(|l| l.zero_copy()).unwrap_or(true)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("smurff_pack_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn pack_round_trip_and_alignment() {
+        let dir = scratch("rt");
+        let p = dir.join("t.pack");
+        let blocks: Vec<Vec<f64>> = (0..3)
+            .map(|s| (0..10).map(|i| (s * 100 + i) as f64 * 0.5 - 1.0).collect())
+            .collect();
+        let mut w = PackWriter::create(&p, 3, 10).unwrap();
+        for b in &blocks {
+            w.write_slice(b).unwrap();
+        }
+        w.finish().unwrap();
+
+        // payload starts on a page boundary
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(bytes.len(), PACK_ALIGN + 3 * 10 * 8);
+
+        let f = PackFile::open(&p).unwrap();
+        assert_eq!((f.nblocks(), f.block_len()), (3, 10));
+        for (s, b) in blocks.iter().enumerate() {
+            assert_eq!(f.block(s), &b[..]);
+        }
+        #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+        assert!(f.zero_copy(), "unix readers must map zero-copy");
+    }
+
+    #[test]
+    fn writer_enforces_promised_lengths() {
+        let dir = scratch("short");
+        let mut w = PackWriter::create(&dir.join("s.pack"), 2, 4).unwrap();
+        w.write_slice(&[1.0; 4]).unwrap();
+        assert!(w.finish().is_err(), "one block missing");
+        let mut w = PackWriter::create(&dir.join("o.pack"), 1, 2).unwrap();
+        assert!(w.write_slice(&[1.0; 3]).is_err(), "overflow");
+        assert!(PackWriter::create(&dir.join("z.pack"), 0, 4).is_err());
+    }
+
+    #[test]
+    fn open_rejects_corrupt_files() {
+        let dir = scratch("bad");
+        let p = dir.join("g.pack");
+        let mut w = PackWriter::create(&p, 2, 8).unwrap();
+        w.write_slice(&[0.5; 16]).unwrap();
+        w.finish().unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // wrong magic
+        let bad = dir.join("magic.pack");
+        std::fs::write(&bad, b"NOPE").unwrap();
+        assert!(PackFile::open(&bad).is_err());
+
+        // truncated payload
+        let cut = dir.join("cut.pack");
+        std::fs::write(&cut, &good[..good.len() - 8]).unwrap();
+        let err = PackFile::open(&cut).unwrap_err().to_string();
+        assert!(err.contains("truncated or size-mismatched"), "{err}");
+
+        // offset index pointing outside the file
+        let mut evil = good.clone();
+        let off = (good.len() as u64).to_le_bytes();
+        evil[32..40].copy_from_slice(&off);
+        let ev = dir.join("evil.pack");
+        std::fs::write(&ev, &evil).unwrap();
+        let err = PackFile::open(&ev).unwrap_err().to_string();
+        assert!(err.contains("offset index"), "{err}");
+
+        // unsupported version
+        let mut v9 = good.clone();
+        v9[4..8].copy_from_slice(&9u32.to_le_bytes());
+        let vp = dir.join("v9.pack");
+        std::fs::write(&vp, &v9).unwrap();
+        assert!(PackFile::open(&vp).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn many_blocks_spill_header_past_one_page() {
+        // 600 index entries do not fit the first page: data_off moves to
+        // the next page multiple and blocks stay aligned
+        let dir = scratch("manyblocks");
+        let p = dir.join("m.pack");
+        let n = 600;
+        let mut w = PackWriter::create(&p, n, 2).unwrap();
+        for s in 0..n {
+            w.write_slice(&[s as f64, -(s as f64)]).unwrap();
+        }
+        w.finish().unwrap();
+        let f = PackFile::open(&p).unwrap();
+        assert_eq!(f.nblocks(), n);
+        assert_eq!(f.block(599), &[599.0, -599.0]);
+        assert_eq!(f.block(0), &[0.0, -0.0]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Store-migration coverage (ISSUE 5 satellite): hand-written version-1
+//! and version-2 snapshot-dir stores must load through the version-3
+//! reader, and `ModelStore::compact()` on each must produce a packed
+//! artifact whose served predictions are **bit-identical** to the
+//! snapshot-dir path.
+
+use smurff::linalg::Mat;
+use smurff::predict::PredictSession;
+use smurff::sparse::io::write_dbm;
+use smurff::store::{ModelStore, STORE_FORMAT};
+use std::path::{Path, PathBuf};
+
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("smurff_migrate_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Deterministic factor payload: value depends on (sample, mat, cell).
+fn mat(sample: usize, tag: usize, rows: usize, cols: usize) -> Mat {
+    let data = (0..rows * cols)
+        .map(|i| ((sample * 131 + tag * 17 + i) % 97) as f64 * 0.125 - 4.0)
+        .collect();
+    Mat::from_vec(rows, cols, data)
+}
+
+/// Write one sample dir (flat v{i}.dbm naming, shared by v1/v2/v3).
+fn write_sample(dir: &Path, iteration: usize, u: &Mat, vs: &[Mat], alphas: &[f64]) {
+    let sdir = dir.join(format!("sample_{iteration:05}"));
+    std::fs::create_dir_all(&sdir).unwrap();
+    write_dbm(u, &sdir.join("u.dbm")).unwrap();
+    for (i, v) in vs.iter().enumerate() {
+        write_dbm(v, &sdir.join(format!("v{i}.dbm"))).unwrap();
+    }
+    let alphas: Vec<String> = alphas.iter().map(|a| a.to_string()).collect();
+    std::fs::write(
+        sdir.join("meta.json"),
+        format!(r#"{{"iteration": {iteration}, "alphas": [{}]}}"#, alphas.join(", ")),
+    )
+    .unwrap();
+}
+
+fn snapshot_entries(iters: &[usize]) -> String {
+    let entries: Vec<String> = iters
+        .iter()
+        .map(|it| format!(r#"{{"iteration":{it},"dir":"sample_{it:05}"}}"#))
+        .collect();
+    entries.join(",")
+}
+
+/// (nrows, ncols, k, iterations) shared by both hand-written layouts.
+const NROWS: usize = 7;
+const NCOLS: usize = 5;
+const K: usize = 3;
+const ITERS: [usize; 3] = [2, 4, 6];
+
+fn write_payloads(dir: &Path) {
+    for (s, &it) in ITERS.iter().enumerate() {
+        let u = mat(s, 0, NROWS, K);
+        let v = mat(s, 1, NCOLS, K);
+        write_sample(dir, it, &u, &[v], &[2.5 + s as f64]);
+    }
+}
+
+fn write_v1(dir: &Path) {
+    write_payloads(dir);
+    std::fs::write(
+        dir.join("manifest.json"),
+        format!(
+            r#"{{"format":"{STORE_FORMAT}","version":1,"num_latent":{K},"nrows":{NROWS},
+                "view_ncols":[{NCOLS}],"offsets":[0.5],"save_freq":2,"link_features":0,
+                "snapshots":[{}]}}"#,
+            snapshot_entries(&ITERS)
+        ),
+    )
+    .unwrap();
+}
+
+fn write_v2(dir: &Path) {
+    write_payloads(dir);
+    std::fs::write(
+        dir.join("manifest.json"),
+        format!(
+            r#"{{"format":"{STORE_FORMAT}","version":2,"num_latent":{K},"nrows":{NROWS},
+                "view_dims":[[{NCOLS}]],"offsets":[0.5],"save_freq":2,"link_features":0,
+                "snapshots":[{}]}}"#,
+            snapshot_entries(&ITERS)
+        ),
+    )
+    .unwrap();
+}
+
+/// (pointwise mean/std bits, per-row top-K, fast-path means) — the
+/// serving surface captured for comparison.
+type Fingerprint = (Vec<(u64, u64)>, Vec<Vec<(u32, f64)>>, Vec<f64>);
+
+fn serve_fingerprint(dir: &Path) -> Fingerprint {
+    let ps = PredictSession::open_with_threads(dir, 2).unwrap();
+    assert_eq!(ps.nsamples(), ITERS.len());
+    let mut cells = Vec::new();
+    let mut rows = Vec::new();
+    let mut cols = Vec::new();
+    for r in 0..NROWS {
+        for c in 0..NCOLS {
+            rows.push(r as u32);
+            cols.push(c as u32);
+        }
+    }
+    for p in ps.predict_cells(0, &rows, &cols) {
+        cells.push((p.mean.to_bits(), p.std.to_bits()));
+    }
+    let topk = (0..NROWS).map(|r| ps.top_k(0, r, 3, &[])).collect();
+    let means = ps.predict_cells_mean(0, &rows, &cols);
+    (cells, topk, means)
+}
+
+fn migrate_and_compare(dir: &Path) {
+    // loads through the v3 reader, meta normalized to view_dims
+    let store = ModelStore::open(dir).unwrap();
+    assert_eq!(store.meta().view_dims, vec![vec![NCOLS]]);
+    assert_eq!(store.meta().offsets, vec![0.5]);
+    assert_eq!(store.iterations(), ITERS.to_vec());
+    assert!(!store.is_packed());
+    let before = serve_fingerprint(dir);
+
+    // compact() produces the packed v3 artifact …
+    let mut store = ModelStore::open(dir).unwrap();
+    store.compact().unwrap();
+    let reopened = ModelStore::open(dir).unwrap();
+    assert!(reopened.is_packed());
+    assert!(dir.join("packed/u.pack").exists());
+    assert!(dir.join("packed/view0.pack").exists());
+
+    // … whose predictions are bit-identical to the snapshot-dir path
+    let after = serve_fingerprint(dir);
+    assert_eq!(before, after, "packed serving must be bit-identical");
+
+    // snapshots loaded from the packs match the original payloads too
+    for it in reopened.iterations() {
+        std::fs::remove_dir_all(dir.join(format!("sample_{it:05}"))).unwrap();
+    }
+    let packs_only = ModelStore::open(dir).unwrap();
+    for (s, _) in ITERS.iter().enumerate() {
+        let snap = packs_only.load_snapshot(s).unwrap();
+        assert_eq!(snap.u.max_abs_diff(&mat(s, 0, NROWS, K)), 0.0);
+        assert_eq!(snap.vs[0].max_abs_diff(&mat(s, 1, NCOLS, K)), 0.0);
+        assert_eq!(snap.alphas, vec![2.5 + s as f64]);
+    }
+    // and the packs-only artifact still serves the same answers
+    assert_eq!(serve_fingerprint(dir), after, "packs-only serving must be bit-identical");
+}
+
+#[test]
+fn v1_store_loads_and_compacts_bit_identically() {
+    let dir = scratch("v1");
+    write_v1(&dir);
+    migrate_and_compare(&dir);
+}
+
+#[test]
+fn v2_store_loads_and_compacts_bit_identically() {
+    let dir = scratch("v2");
+    write_v2(&dir);
+    migrate_and_compare(&dir);
+}
