@@ -103,6 +103,10 @@ impl Report {
         JsonValue::obj(vec![
             ("name", JsonValue::str(&self.name)),
             ("tables", JsonValue::Array(self.tables.iter().map(|t| t.to_json()).collect())),
+            // Registry snapshot: phase counters/histograms accumulated while
+            // the bench ran, so BENCH_*.json carries a breakdown alongside
+            // the headline tables (quantiles are approximate, see obs docs).
+            ("metrics", crate::obs::snapshot_json()),
         ])
     }
 }
@@ -167,6 +171,13 @@ mod tests {
     fn table_rejects_ragged_rows() {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn report_json_embeds_metrics_snapshot() {
+        let j = Report::new("r").to_json();
+        let m = j.get("metrics").expect("report carries a registry snapshot");
+        assert!(m.get("counters").is_some());
     }
 
     #[test]

@@ -473,6 +473,38 @@ impl SweepPlan {
     pub fn rhs_base(&self) -> Option<&[f64]> {
         self.rhs_base.as_deref()
     }
+
+    /// Fold the per-lane sweep statistics into the global [`crate::obs`]
+    /// registry — called once per sweep, after the pool has joined, so
+    /// reading the arena is single-threaded.  Gated on `obs::enabled()`;
+    /// the arena is fresh per sweep, so stats never double-count.
+    fn fold_obs(&self) {
+        if !crate::obs::enabled() {
+            return;
+        }
+        let (mut rows, mut tiled, mut rank4, mut degen, mut fused) = (0u64, 0u64, 0u64, 0u64, 0u64);
+        for l in 0..self.arena.lanes.len() {
+            // SAFETY: the sweep's pool call has returned — no thread
+            // holds a lane any more.
+            let s = &unsafe { self.arena.lane(l) }.stats;
+            rows += s.rows;
+            tiled += s.gram_tiled;
+            rank4 += s.gram_rank4;
+            degen += s.chol_degenerate;
+            fused += s.sse_fused;
+            if s.rows > 0 {
+                crate::obs::counter_add(
+                    &format!("smurff_sweep_lane_rows_total{{lane=\"{l}\"}}"),
+                    s.rows,
+                );
+            }
+        }
+        crate::obs::counter_add("smurff_sweep_rows_total", rows);
+        crate::obs::counter_add("smurff_sweep_gram_tiled_total", tiled);
+        crate::obs::counter_add("smurff_sweep_gram_rank4_total", rank4);
+        crate::obs::counter_add("smurff_sweep_chol_degenerate_total", degen);
+        crate::obs::counter_add("smurff_sweep_sse_fused_rows_total", fused);
+    }
 }
 
 /// Descending-nnz (LPT-style) permutation of the sweep's local row
@@ -591,6 +623,10 @@ impl NativeEngine {
         if n == 0 {
             return fuse_sse.then_some((0.0, 0));
         }
+        let _sweep_span = crate::obs::span_dyn("sweep", || {
+            format!("sweep side{} rows{}", sweep.side_id, n)
+        });
+        let sweep_timer = crate::util::Timer::start();
         let plan = SweepPlan::build(sweep, &rows, k, pool.nthreads());
         let writer = RowWriter::new(latents);
         let mut sse_rows: Vec<f64> = vec![0.0; if fuse_sse { n } else { 0 }];
@@ -619,6 +655,11 @@ impl NativeEngine {
                 unsafe { *sse_ptr.0.add(t) = sse };
             }
         });
+        plan.fold_obs();
+        if crate::obs::enabled() {
+            crate::obs::histogram("smurff_sweep_seconds", crate::obs::LATENCY_BOUNDS_S)
+                .observe(sweep_timer.elapsed_s());
+        }
         fuse_sse.then(|| {
             // fold per-row partials with view_sse's chunk grouping so
             // the two are bit-identical
@@ -638,6 +679,21 @@ thread_local! {
     static ROW_WORK: std::cell::RefCell<Option<RowWork>> = const { std::cell::RefCell::new(None) };
 }
 
+/// Plain per-lane sweep statistics (ISSUE 6).  Not atomic on purpose:
+/// lane exclusivity already guarantees single-writer, so these cost one
+/// register increment per row; [`SweepPlan::fold_obs`] folds them into
+/// the global registry once per sweep, after the pool has joined.  The
+/// increments are unconditional and touch no RNG, so the sampled chain
+/// is bit-identical with or without observability.
+#[derive(Default)]
+struct LaneStats {
+    rows: u64,
+    gram_tiled: u64,
+    gram_rank4: u64,
+    chol_degenerate: u64,
+    sse_fused: u64,
+}
+
 struct RowWork {
     lambda: Mat,
     rhs: Vec<f64>,
@@ -650,6 +706,7 @@ struct RowWork {
     xs: Vec<f64>,
     /// gathered (probit: augmented) observation values
     vals: Vec<f64>,
+    stats: LaneStats,
 }
 
 impl RowWork {
@@ -662,6 +719,7 @@ impl RowWork {
             design: Vec::new(),
             xs: Vec::new(),
             vals: Vec::new(),
+            stats: LaneStats::default(),
         }
     }
 
@@ -714,7 +772,8 @@ fn sample_one_row_mvn_with(
     tuning: SweepTuning,
     fuse_sse: bool,
 ) -> f64 {
-    let RowWork { lambda, rhs, tmp, eps, design, xs, vals } = work;
+    let RowWork { lambda, rhs, tmp, eps, design, xs, vals, stats } = work;
+    stats.rows += 1;
     lambda.data_mut().copy_from_slice(sweep.lambda0.data());
     let mean_i = sweep.means.row(i);
     match (rhs_base, &sweep.means) {
@@ -756,6 +815,7 @@ fn sample_one_row_mvn_with(
                         // unbounded gather.  Bit-identical to the rank-4
                         // path (GRAM_TILE_ROWS is a multiple of 4, so
                         // the 4-row groups align).
+                        stats.gram_tiled += 1;
                         let cap = crate::linalg::GRAM_TILE_ROWS;
                         xs.resize(cap * k, 0.0);
                         vals.resize(cap, 0.0);
@@ -791,6 +851,7 @@ fn sample_one_row_mvn_with(
                             );
                         }
                     } else {
+                        stats.gram_rank4 += 1;
                         xs.clear();
                         vals.clear();
                         view.operand.for_each_design(i, design, |vrow, r| {
@@ -826,6 +887,7 @@ fn sample_one_row_mvn_with(
     //   mean = Λ⁻¹ rhs,  u = mean + L⁻ᵀ ε
     if crate::linalg::chol_inplace(lambda).is_err() {
         // numerically degenerate row: fall back to the prior mean
+        stats.chol_degenerate += 1;
         row_in_out.copy_from_slice(mean_i);
     } else {
         let l = &*lambda;
@@ -840,6 +902,7 @@ fn sample_one_row_mvn_with(
     if !fuse_sse {
         return 0.0;
     }
+    stats.sse_fused += 1;
     // §Perf PR4 change #2: fused SSE — residuals against the freshly
     // sampled row.  Reuse the in-cache gather when it is complete,
     // otherwise re-walk the fiber; both sum in observation order, so

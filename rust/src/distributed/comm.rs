@@ -11,8 +11,12 @@
 //! over a subset of ranks.
 //!
 //! Every byte sent and every second spent inside a communication call is
-//! accounted on the [`Comm`] (`bytes_sent`, `comm_seconds`) so sessions
-//! can report per-strategy comm/compute splits.
+//! accounted on the [`Comm`]'s [`crate::obs::CommMeter`] (read through
+//! [`Comm::bytes_sent`] / [`Comm::comm_seconds`]) so sessions can report
+//! per-strategy comm/compute splits; `DistributedSession` folds the
+//! totals into the global registry as labelled
+//! `smurff_dist_*{strategy=…,rank=…}` metrics at run end (ISSUE 6: one
+//! counter system).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
@@ -64,11 +68,9 @@ pub struct Comm {
     /// out-of-order messages (a fast peer may already be in the next
     /// phase while we still collect the current one)
     stash: Vec<Block>,
-    /// bytes sent by this node (for the comm/compute accounting)
-    pub bytes_sent: u64,
-    /// wall-clock seconds this node spent inside communication calls
+    /// bytes sent / seconds spent inside communication calls
     /// (send/recv/barrier, including the simulated wire cost)
-    pub comm_seconds: f64,
+    meter: crate::obs::CommMeter,
 }
 
 impl Comm {
@@ -93,17 +95,26 @@ impl Comm {
                 inbox,
                 barrier: barrier.clone(),
                 stash: Vec::new(),
-                bytes_sent: 0,
-                comm_seconds: 0.0,
+                meter: crate::obs::CommMeter::new(),
             })
             .collect()
+    }
+
+    /// Bytes sent by this node (for the comm/compute accounting).
+    pub fn bytes_sent(&self) -> u64 {
+        self.meter.bytes()
+    }
+
+    /// Wall-clock seconds this node spent inside communication calls.
+    pub fn comm_seconds(&self) -> f64 {
+        self.meter.seconds()
     }
 
     /// Send a block to `to` (applies the simulated wire cost).
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
         let t = Timer::start();
         let bytes = data.len() * 8;
-        self.bytes_sent += bytes as u64;
+        self.meter.add_bytes(bytes as u64);
         let d = self.net.delay_for(bytes);
         if !d.is_zero() {
             std::thread::sleep(d);
@@ -111,7 +122,7 @@ impl Comm {
         self.senders[to]
             .send(Block { from: self.rank, tag, data })
             .expect("peer hung up");
-        self.comm_seconds += t.elapsed_s();
+        self.meter.add_seconds(t.elapsed_s());
     }
 
     /// Blocking receive of the next block with `tag`.  Messages from
@@ -120,7 +131,7 @@ impl Comm {
     pub fn recv(&mut self, tag: u64) -> Block {
         let t = Timer::start();
         let b = self.recv_inner(tag);
-        self.comm_seconds += t.elapsed_s();
+        self.meter.add_seconds(t.elapsed_s());
         b
     }
 
@@ -140,7 +151,7 @@ impl Comm {
     pub fn barrier(&mut self) {
         let t = Timer::start();
         self.barrier.wait();
-        self.comm_seconds += t.elapsed_s();
+        self.meter.add_seconds(t.elapsed_s());
     }
 
     /// Allgather: every node contributes `mine`; returns all blocks
@@ -396,7 +407,7 @@ mod tests {
                 comm.recv(1);
             }
             comm.barrier();
-            comm.bytes_sent
+            comm.bytes_sent()
         });
         assert_eq!(got[0], 800);
         assert_eq!(got[1], 0);
@@ -409,7 +420,7 @@ mod tests {
         let got = run_cluster(3, NetSpec::instant(), |mut comm| {
             comm.allgather(2, vec![1.0; 5]);
             comm.barrier();
-            comm.bytes_sent
+            comm.bytes_sent()
         });
         assert_eq!(got, vec![80, 80, 80]);
         assert_eq!(got.iter().sum::<u64>(), 240);
@@ -445,7 +456,7 @@ mod tests {
             } else {
                 comm.recv(1);
             }
-            comm.comm_seconds
+            comm.comm_seconds()
         });
         assert!(t.elapsed_s() > 0.002, "latency not applied");
         // the sender's comm-time accounting must include the wire cost

@@ -355,6 +355,25 @@ impl DistributedSession {
             }
         }
         let lead = lead.expect("rank 0 must produce the merged-model output");
+        // ISSUE 6: fold the per-node comm accounting into the global
+        // registry, labelled per strategy and rank, so the metrics
+        // endpoint carries the compute-vs-communication attribution the
+        // distributed papers report.
+        if crate::obs::enabled() {
+            let strategy = self.spec.strategy.name();
+            for c in &comm {
+                let labels = format!("{{strategy=\"{strategy}\",rank=\"{}\"}}", c.rank);
+                crate::obs::counter_add(
+                    &format!("smurff_dist_bytes_sent_total{labels}"),
+                    c.bytes_sent,
+                );
+                crate::obs::gauge_add(
+                    &format!("smurff_dist_comm_seconds{labels}"),
+                    c.comm_seconds,
+                );
+                crate::obs::gauge_add(&format!("smurff_dist_node_seconds{labels}"), c.seconds);
+            }
+        }
         let result = TrainResult {
             rmse: lead.view_rmse.first().copied().unwrap_or(f64::NAN),
             auc: lead.auc,
@@ -684,8 +703,8 @@ fn worker_run(
     });
     Ok(WorkerOut {
         rank,
-        bytes_sent: comm.bytes_sent,
-        comm_seconds: comm.comm_seconds,
+        bytes_sent: comm.bytes_sent(),
+        comm_seconds: comm.comm_seconds(),
         seconds: timer.elapsed_s(),
         lead,
     })

@@ -8,7 +8,13 @@
 //!
 //! * substrates: [`util`], [`rng`], [`linalg`], [`sparse`] (CSR/CSC
 //!               matrices *and* the N-mode [`sparse::SparseTensor`]
-//!               with one compressed fiber index per mode)
+//!               with one compressed fiber index per mode), [`obs`]
+//!               (the process-wide observability registry: atomic
+//!               counters/gauges/histograms with p50/p90/p99
+//!               estimation, Prometheus text exposition, and span
+//!               tracing emitting Chrome trace-event JSON — every
+//!               layer below reports through it, and instrumentation
+//!               is sample-preserving by construction)
 //! * framework:  [`data`], [`noise`], [`priors`], [`model`], [`session`]
 //!               — sessions factorize both matrix views and N-mode
 //!               tensor views (CP/PARAFAC) with per-mode priors; the
@@ -86,6 +92,7 @@
 //! ```
 
 pub mod util;
+pub mod obs;
 pub mod rng;
 pub mod linalg;
 pub mod sparse;

@@ -29,21 +29,25 @@ const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|b
            [--prior normal|macau | normal,normal,... per tensor mode] [--side <mtx>]
            [--checkpoint <dir>] [--verbose] [--save-dir <dir>] [--save-freq N]
            [--nodes N] [--comm sync|async[:S]|pprop[:R]] [--net instant|cluster]
+           [--trace <out.json>]   (writes a chrome://tracing profile of the run)
   predict  --store <dir> [--view N] [--threads N]
            --row N --col N        pointwise prediction with uncertainty
            --row N --topk K       top-K column recommendations for a row
   serve    --store <dir> [--addr host:port] [--threads N] [--batch N]
            [--batch-wait-ms N] [--queue-cap N] [--poll-ms N] [--allow-shutdown]
            (newline-delimited JSON over TCP; hot-reloads when the store grows)
-  query    --addr host:port  --status | --shutdown-server
+  query    --addr host:port  --status | --metrics | --shutdown-server
            | --row N --col N [--view N] | --row N --topk K [--view N]
-           (one-shot client for `smurff serve`; prints the raw JSON reply)
+           (one-shot client for `smurff serve`; prints the raw JSON reply;
+            --metrics prints the decoded Prometheus text exposition)
   compact  --store <dir>     pack a snapshot-dir store into the v3 serving
            artifact (page-aligned, mmap'd zero-copy by predict/serve)
   generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
            [--side-out <mtx>] [--seed N]
   bench    <fig3|fig4|fig5|gfa|macau|scaling|serving|sweep|table1|tensor|all> [--quick]
-           [--json <path>]   (writes the report to disk; --out is an alias)
+           [--json <path>]   (writes the report to disk; --out is an alias;
+            reports embed a metrics-registry snapshot with phase breakdowns)
+           [--trace <out.json>]   (chrome://tracing profile of the bench run)
   info     [--artifacts <dir>]";
 
 fn main() {
@@ -65,6 +69,7 @@ fn run() -> anyhow::Result<()> {
         "help",
         "allow-shutdown",
         "status",
+        "metrics",
         "shutdown-server",
     ])
     .map_err(anyhow::Error::msg)?;
@@ -83,6 +88,28 @@ fn run() -> anyhow::Result<()> {
         "info" => cmd_info(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
+}
+
+/// `--trace <path>`: turn span recording on for the run; the caller
+/// writes the buffer out with [`write_trace`] when the run finishes.
+fn trace_path(args: &Args) -> Option<PathBuf> {
+    let p = args.get("trace").map(PathBuf::from);
+    if p.is_some() {
+        smurff::obs::trace_enable(true);
+    }
+    p
+}
+
+/// Stop recording and write the buffered spans as Chrome trace-event
+/// JSON (chrome://tracing / ui.perfetto.dev loadable).
+fn write_trace(path: &Path) -> anyhow::Result<()> {
+    smurff::obs::trace_enable(false);
+    std::fs::write(path, smurff::obs::chrome_trace_json().to_string_pretty())?;
+    println!(
+        "trace written to {} (load in chrome://tracing or ui.perfetto.dev)",
+        path.display()
+    );
+    Ok(())
 }
 
 fn session_config_from_args(args: &Args) -> anyhow::Result<SessionConfig> {
@@ -217,6 +244,7 @@ fn cmd_train_tensor(args: &Args, path: &str) -> anyhow::Result<()> {
     let mut builder =
         SessionBuilder::new(cfg.clone()).tensor_view(train, mode_priors, noise, test);
     builder = attach_engine(builder, &args.get_str("engine", "native"))?;
+    let trace = trace_path(args);
     let mut session = builder.build();
     println!(
         "tensor training: {nmodes} modes, K={} burnin={} nsamples={} threads={}",
@@ -246,6 +274,9 @@ fn cmd_train_tensor(args: &Args, path: &str) -> anyhow::Result<()> {
     );
     if result.rmse.is_finite() {
         println!("test RMSE = {:.4}", result.rmse);
+    }
+    if let Some(p) = &trace {
+        write_trace(p)?;
     }
     Ok(())
 }
@@ -332,9 +363,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         (other, _) => anyhow::bail!("unknown prior '{other}'"),
     };
 
+    let trace = trace_path(args);
     let nodes = args.get_usize("nodes", 1).map_err(anyhow::Error::msg)?;
     if nodes > 1 {
-        return run_distributed(builder, &cfg, nodes, args);
+        run_distributed(builder, &cfg, nodes, args)?;
+        if let Some(p) = &trace {
+            write_trace(p)?;
+        }
+        return Ok(());
     }
     builder = attach_engine(builder, &args.get_str("engine", "native"))?;
 
@@ -381,6 +417,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if result.auc.is_finite() {
         println!("test AUC  = {:.4}", result.auc);
+    }
+    if let Some(p) = &trace {
+        write_trace(p)?;
     }
     Ok(())
 }
@@ -542,6 +581,8 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7799");
     let request = if args.get_bool("status") {
         r#"{"op":"status"}"#.to_string()
+    } else if args.get_bool("metrics") {
+        r#"{"op":"metrics"}"#.to_string()
     } else if args.get_bool("shutdown-server") {
         r#"{"op":"shutdown"}"#.to_string()
     } else {
@@ -572,6 +613,16 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
     BufReader::new(stream).read_line(&mut line)?;
     if line.trim().is_empty() {
         anyhow::bail!("server closed the connection without replying");
+    }
+    // --metrics: unwrap the exposition text out of the one-line JSON
+    // reply so the output is directly Prometheus-scrapeable
+    if args.get_bool("metrics") {
+        if let Ok(v) = smurff::util::JsonValue::parse(line.trim()) {
+            if let Some(text) = v.get("text").and_then(|t| t.as_str()) {
+                print!("{text}");
+                return Ok(());
+            }
+        }
     }
     println!("{}", line.trim());
     Ok(())
@@ -643,6 +694,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         .map(|s| s.as_str())
         .ok_or_else(|| anyhow::anyhow!("bench needs a figure name\n{USAGE}"))?;
     let quick = args.get_bool("quick");
+    let trace = trace_path(args);
     let report = smurff::bench::run_by_name(which, quick)?;
     // `--json` is the documented spelling, `--out` a compat alias: both
     // write the pretty report (the BENCH_*.json perf-trajectory files)
@@ -651,6 +703,9 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             std::fs::write(path, report.to_json().to_string_pretty())?;
             println!("wrote {path}");
         }
+    }
+    if let Some(p) = &trace {
+        write_trace(p)?;
     }
     Ok(())
 }

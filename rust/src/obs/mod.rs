@@ -1,0 +1,630 @@
+//! Unified observability substrate: one process-wide metrics registry
+//! (counters, gauges, fixed-bucket histograms) plus lightweight span
+//! tracing ([`trace`]) — the single counter system every layer reports
+//! through (train sweeps, the distributed comm substrate, the serve
+//! front-end, the bench harness).
+//!
+//! Design rules, in order:
+//!
+//! 1. **Sample-preserving.**  No instrumentation point may touch an RNG
+//!    stream, reorder float summation, or change a scheduling decision.
+//!    Everything here is passive: relaxed atomics and wall-clock reads.
+//!    `session::tests::tracing_preserves_samples_bit_identically` holds
+//!    this invariant down to the bit.
+//! 2. **Lock-cheap.**  Handle lookup ([`counter`] / [`gauge`] /
+//!    [`histogram`]) takes a registry mutex and is meant for setup code
+//!    or per-iteration granularity; hot paths cache the returned `Arc`
+//!    and then pay only relaxed atomic ops per update.  With the
+//!    registry disabled ([`set_enabled`]`(false)`) a histogram
+//!    observation or span is a single relaxed load — counters and
+//!    gauges stay live (they *are* just a relaxed `fetch_add`).
+//! 3. **No new dependencies.**  Exposition is hand-rolled Prometheus
+//!    text ([`render_prometheus`]); traces serialize through
+//!    [`crate::util::json`] as Chrome trace-event JSON.
+//!
+//! ## Naming
+//!
+//! Metric names follow Prometheus conventions:
+//! `smurff_<layer>_<what>[_total]`, with labels inline in the name
+//! (`smurff_dist_bytes_sent_total{strategy="sync",rank="0"}`).  The
+//! exposition groups series of one family under a single `# TYPE` line.
+
+pub mod trace;
+
+pub use trace::{
+    chrome_trace_json, span, span_dyn, trace_clear, trace_counter, trace_enable, trace_enabled,
+    Span,
+};
+
+use crate::util::JsonValue;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Master switch for the *optional* collection paths (histogram
+/// observations, span recording, per-sweep registry folds).  Counters
+/// and gauges are unconditional — a relaxed `fetch_add` is already the
+/// floor this flag exists to guarantee.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------- primitives
+
+/// Monotone event counter (u64, relaxed).
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, v: u64) {
+        self.0.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-value / accumulating gauge (f64 stored as bits, relaxed).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Fixed-bucket histogram with Prometheus `le` (≤ bound) semantics:
+/// `buckets[i]` counts observations `v <= bounds[i]`, the final slot is
+/// the +Inf overflow.  Quantiles are estimated by linear interpolation
+/// inside the covering bucket — the classic fixed-bucket estimator, so
+/// the error is bounded by one bucket width.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.  A no-op while the registry is disabled
+    /// (the documented cheap path: one relaxed load).
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn bounds(&self) -> &[f64] {
+        &self.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts; last entry is the overflow.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Estimated `q`-quantile (`0.0..=1.0`), NaN when empty.  Values in
+    /// the overflow bucket clamp to the largest bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= target {
+                if i == self.bounds.len() {
+                    return self.bounds[self.bounds.len() - 1];
+                }
+                let lo = if i == 0 { 0.0f64.min(self.bounds[0]) } else { self.bounds[i - 1] };
+                let hi = self.bounds[i];
+                let frac = (target - cum as f64) / c as f64;
+                return lo + (hi - lo) * frac.clamp(0.0, 1.0);
+            }
+            cum = next;
+        }
+        self.bounds[self.bounds.len() - 1]
+    }
+
+    fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_bits.store(0, Ordering::Relaxed);
+    }
+}
+
+// ------------------------------------------------------ shared bounds
+
+/// Latency bounds in seconds: 10µs … 10s, roughly ×2.5 steps.
+pub const LATENCY_BOUNDS_S: &[f64] = &[
+    1e-5, 2.5e-5, 5e-5, 1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.25,
+    0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+/// Size/count bounds: powers of two up to 64Ki.
+pub const SIZE_BOUNDS: &[f64] = &[
+    1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0, 8192.0,
+    16384.0, 32768.0, 65536.0,
+];
+
+// ------------------------------------------------------------ registry
+
+/// The process-wide metric registry: three name-sorted maps of shared
+/// handles.  Lookup locks a mutex; updates through the handles do not.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+pub fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+/// Get (registering on first use) the counter called `name`.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut m = registry().counters.lock().unwrap();
+    m.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())).clone()
+}
+
+/// Get (registering on first use) the gauge called `name`.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut m = registry().gauges.lock().unwrap();
+    m.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())).clone()
+}
+
+/// Get (registering on first use) the histogram called `name`.  The
+/// first registration pins the bucket bounds; later callers receive the
+/// existing histogram (bounds argument ignored, asserted in debug).
+pub fn histogram(name: &str, bounds: &[f64]) -> Arc<Histogram> {
+    let mut m = registry().histograms.lock().unwrap();
+    let h = m.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new(bounds))).clone();
+    debug_assert_eq!(h.bounds(), bounds, "histogram '{name}' re-registered with other bounds");
+    h
+}
+
+/// One-shot counter bump for cold paths (per-sweep / per-iteration
+/// granularity — takes the registry lock).
+pub fn counter_add(name: &str, v: u64) {
+    counter(name).add(v);
+}
+
+/// One-shot gauge store for cold paths.
+pub fn gauge_set(name: &str, v: f64) {
+    gauge(name).set(v);
+}
+
+/// One-shot gauge accumulate for cold paths.
+pub fn gauge_add(name: &str, v: f64) {
+    gauge(name).add(v);
+}
+
+/// Zero every metric (tests / bench isolation).  Handles stay valid.
+pub fn reset() {
+    for c in registry().counters.lock().unwrap().values() {
+        c.reset();
+    }
+    for g in registry().gauges.lock().unwrap().values() {
+        g.reset();
+    }
+    for h in registry().histograms.lock().unwrap().values() {
+        h.reset();
+    }
+}
+
+// ----------------------------------------------------- comm accounting
+
+/// Per-instance byte/time meter for the distributed comm substrate —
+/// the registry-primitive replacement for the plain-field accounting
+/// `distributed::comm` used to carry (one counter system, satellite of
+/// ISSUE 6).  Instances are not registered globally: a `Comm` is
+/// per-node per-run, and [`crate::distributed::DistributedSession`]
+/// folds the totals into labelled registry metrics at run end.
+#[derive(Default)]
+pub struct CommMeter {
+    bytes: Counter,
+    nanos: Counter,
+}
+
+impl CommMeter {
+    pub fn new() -> CommMeter {
+        CommMeter::default()
+    }
+
+    pub fn add_bytes(&self, b: u64) {
+        self.bytes.add(b);
+    }
+
+    pub fn add_seconds(&self, s: f64) {
+        self.nanos.add((s * 1e9) as u64);
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes.get()
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.nanos.get() as f64 * 1e-9
+    }
+}
+
+// ---------------------------------------------------------- exposition
+
+/// Format an f64 the Prometheus way (`+Inf`, integers without `.0`).
+fn fmt_val(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// `name{a="b"}` → (`name`, `a="b"`); unlabelled names return ("", ..).
+fn split_labels(name: &str) -> (&str, &str) {
+    match name.find('{') {
+        Some(i) => (&name[..i], name[i + 1..].trim_end_matches('}')),
+        None => (name, ""),
+    }
+}
+
+/// Append a series line, merging existing labels with `extra` labels.
+fn push_series(out: &mut String, base: &str, labels: &str, extra: &str, value: &str) {
+    out.push_str(base);
+    let joined = match (labels.is_empty(), extra.is_empty()) {
+        (true, true) => String::new(),
+        (true, false) => extra.to_string(),
+        (false, true) => labels.to_string(),
+        (false, false) => format!("{labels},{extra}"),
+    };
+    if !joined.is_empty() {
+        out.push('{');
+        out.push_str(&joined);
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(value);
+    out.push('\n');
+}
+
+/// Render every registered metric as Prometheus text exposition
+/// (`text/plain; version=0.0.4`): counters, gauges, then histograms
+/// with cumulative `_bucket{le=…}` series plus `_sum` / `_count`.
+pub fn render_prometheus() -> String {
+    let mut out = String::new();
+    let mut last_family = String::new();
+    let mut type_line = |out: &mut String, base: &str, kind: &str| {
+        if base != last_family {
+            out.push_str(&format!("# TYPE {base} {kind}\n"));
+            last_family = base.to_string();
+        }
+    };
+    for (name, c) in registry().counters.lock().unwrap().iter() {
+        let (base, labels) = split_labels(name);
+        type_line(&mut out, base, "counter");
+        push_series(&mut out, base, labels, "", &c.get().to_string());
+    }
+    for (name, g) in registry().gauges.lock().unwrap().iter() {
+        let (base, labels) = split_labels(name);
+        type_line(&mut out, base, "gauge");
+        push_series(&mut out, base, labels, "", &fmt_val(g.get()));
+    }
+    for (name, h) in registry().histograms.lock().unwrap().iter() {
+        let (base, labels) = split_labels(name);
+        type_line(&mut out, base, "histogram");
+        let counts = h.bucket_counts();
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            let le = if i == h.bounds().len() { f64::INFINITY } else { h.bounds()[i] };
+            push_series(
+                &mut out,
+                &format!("{base}_bucket"),
+                labels,
+                &format!("le=\"{}\"", fmt_val(le)),
+                &cum.to_string(),
+            );
+        }
+        push_series(&mut out, &format!("{base}_sum"), labels, "", &fmt_val(h.sum()));
+        push_series(&mut out, &format!("{base}_count"), labels, "", &cum.to_string());
+    }
+    out
+}
+
+/// Snapshot every metric as JSON — the phase-breakdown section the
+/// bench harness embeds into its `--json` reports.  Histograms carry
+/// count/sum and the p50/p90/p99 estimates.
+pub fn snapshot_json() -> JsonValue {
+    let counters: BTreeMap<String, JsonValue> = registry()
+        .counters
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, c)| (k.clone(), JsonValue::num(c.get() as f64)))
+        .collect();
+    let gauges: BTreeMap<String, JsonValue> = registry()
+        .gauges
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, g)| (k.clone(), JsonValue::num(g.get())))
+        .collect();
+    let histograms: BTreeMap<String, JsonValue> = registry()
+        .histograms
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(k, h)| {
+            // empty histograms have NaN quantiles — emit null, not an
+            // unparseable bare NaN token
+            let q = |q: f64| {
+                let v = h.quantile(q);
+                if v.is_finite() { JsonValue::num(v) } else { JsonValue::Null }
+            };
+            (
+                k.clone(),
+                JsonValue::obj(vec![
+                    ("count", JsonValue::num(h.count() as f64)),
+                    ("sum", JsonValue::num(h.sum())),
+                    ("p50", q(0.50)),
+                    ("p90", q(0.90)),
+                    ("p99", q(0.99)),
+                ]),
+            )
+        })
+        .collect();
+    JsonValue::Object(
+        [
+            ("counters".to_string(), JsonValue::Object(counters)),
+            ("gauges".to_string(), JsonValue::Object(gauges)),
+            ("histograms".to_string(), JsonValue::Object(histograms)),
+        ]
+        .into_iter()
+        .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that observe histograms (or flip [`set_enabled`]) must not
+    /// interleave with the disabled-flag test: the flag is process-wide
+    /// and `cargo test` runs threads in parallel.
+    fn flag_lock() -> std::sync::MutexGuard<'static, ()> {
+        static L: Mutex<()> = Mutex::new(());
+        L.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = counter("test_obs_basics_total");
+        c.add(2);
+        c.add(3);
+        assert_eq!(c.get(), 5);
+        // same name -> same handle
+        counter("test_obs_basics_total").add(1);
+        assert_eq!(c.get(), 6);
+
+        let g = gauge("test_obs_basics_gauge");
+        g.set(1.5);
+        g.add(0.25);
+        assert_eq!(g.get(), 1.75);
+        g.set(-3.0);
+        assert_eq!(g.get(), -3.0);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_le() {
+        // Prometheus `le` semantics: a value exactly on a bound lands in
+        // that bound's bucket, the next representable value above it in
+        // the following one; above the last bound -> overflow.
+        let _g = flag_lock();
+        let h = Histogram::new(&[1.0, 2.0, 5.0]);
+        h.observe(0.0);
+        h.observe(1.0);
+        h.observe(f64::from_bits(1.0f64.to_bits() + 1));
+        h.observe(2.0);
+        h.observe(5.0);
+        h.observe(5.0 + 1e-12);
+        h.observe(1e12);
+        assert_eq!(h.bucket_counts(), vec![2, 2, 1, 2]);
+        assert_eq!(h.count(), 7);
+        assert!((h.sum() - (0.0 + 1.0 + 1.0 + 2.0 + 5.0 + 5.0 + 1e12)).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantile_estimates_track_exact_quantiles() {
+        // uniform 1..=1000 into 20 linear buckets: the interpolated
+        // estimate must sit within one bucket width of the exact value
+        let _g = flag_lock();
+        let bounds: Vec<f64> = (1..=20).map(|i| (i * 50) as f64).collect();
+        let h = Histogram::new(&bounds);
+        for v in 1..=1000 {
+            h.observe(v as f64);
+        }
+        for (q, exact) in [(0.5, 500.0), (0.9, 900.0), (0.99, 990.0)] {
+            let est = h.quantile(q);
+            assert!(
+                (est - exact).abs() <= 50.0,
+                "q={q}: estimate {est} vs exact {exact}"
+            );
+        }
+        // degenerate cases
+        assert!(Histogram::new(&[1.0]).quantile(0.5).is_nan());
+        let h = Histogram::new(&[1.0, 2.0]);
+        h.observe(100.0); // overflow-only population clamps to the top bound
+        assert_eq!(h.quantile(0.5), 2.0);
+    }
+
+    #[test]
+    fn concurrent_updates_from_the_threadpool_are_exact() {
+        let _g = flag_lock();
+        let pool = crate::coordinator::ThreadPool::new(4);
+        let c = counter("test_obs_pool_total");
+        let h = histogram("test_obs_pool_hist", &[10.0, 100.0, 1000.0]);
+        let before = c.get();
+        let hbefore = h.count();
+        pool.parallel_for(10_000, 16, |t| {
+            c.add(1);
+            h.observe((t % 2000) as f64);
+        });
+        assert_eq!(c.get() - before, 10_000);
+        assert_eq!(h.count() - hbefore, 10_000);
+        let counts = h.bucket_counts();
+        assert_eq!(counts.iter().sum::<u64>(), h.count());
+    }
+
+    #[test]
+    fn disabled_registry_skips_histograms_but_keeps_counters() {
+        let _g = flag_lock();
+        let c = counter("test_obs_disabled_total");
+        let h = histogram("test_obs_disabled_hist", &[1.0, 2.0]);
+        set_enabled(false);
+        let hc = h.count();
+        h.observe(1.0);
+        c.add(1);
+        assert_eq!(h.count(), hc, "disabled histogram must not record");
+        set_enabled(true);
+        h.observe(1.0);
+        assert_eq!(h.count(), hc + 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_is_well_formed() {
+        let _g = flag_lock();
+        counter("test_obs_expo_total{kind=\"a\"}").add(3);
+        counter("test_obs_expo_total{kind=\"b\"}").add(4);
+        gauge("test_obs_expo_depth").set(2.0);
+        let h = histogram("test_obs_expo_lat", &[0.5, 1.0]);
+        h.observe(0.25);
+        h.observe(0.75);
+        h.observe(9.0);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE test_obs_expo_total counter"));
+        // one TYPE line per family, both labelled series present
+        assert_eq!(text.matches("# TYPE test_obs_expo_total counter").count(), 1);
+        assert!(text.contains("test_obs_expo_total{kind=\"a\"} 3"));
+        assert!(text.contains("test_obs_expo_total{kind=\"b\"} 4"));
+        assert!(text.contains("# TYPE test_obs_expo_depth gauge"));
+        assert!(text.contains("test_obs_expo_depth 2"));
+        assert!(text.contains("# TYPE test_obs_expo_lat histogram"));
+        assert!(text.contains("test_obs_expo_lat_bucket{le=\"0.5\"} 1"));
+        assert!(text.contains("test_obs_expo_lat_bucket{le=\"1\"} 2"));
+        assert!(text.contains("test_obs_expo_lat_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("test_obs_expo_lat_count 3"));
+    }
+
+    #[test]
+    fn snapshot_json_carries_quantiles() {
+        let _g = flag_lock();
+        let h = histogram("test_obs_snap_hist", &[1.0, 2.0, 4.0]);
+        for _ in 0..10 {
+            h.observe(1.5);
+        }
+        let snap = snapshot_json();
+        let hj = snap.get("histograms").unwrap().get("test_obs_snap_hist").unwrap();
+        assert!(hj.get("count").unwrap().as_f64().unwrap() >= 10.0);
+        let p50 = hj.get("p50").unwrap().as_f64().unwrap();
+        assert!(p50 > 1.0 && p50 <= 2.0, "p50 {p50} must interpolate inside (1,2]");
+    }
+
+    #[test]
+    fn comm_meter_accumulates() {
+        let m = CommMeter::new();
+        m.add_bytes(100);
+        m.add_bytes(28);
+        m.add_seconds(0.5);
+        m.add_seconds(0.25);
+        assert_eq!(m.bytes(), 128);
+        assert!((m.seconds() - 0.75).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,246 @@
+//! Lightweight span tracing: scoped phase timers that serialize as
+//! Chrome trace-event JSON (`chrome://tracing` / Perfetto loadable).
+//!
+//! Tracing is **off by default** and costs one relaxed load per
+//! instrumentation point while off — no allocation, no clock read, no
+//! lock.  When enabled ([`trace_enable`]), a [`Span`] guard records a
+//! complete ("ph":"X") event on drop with microsecond timestamps
+//! relative to the first event, and [`trace_counter`] records counter
+//! ("ph":"C") samples (e.g. RMSE per Gibbs iteration).  The buffer is
+//! bounded: past [`MAX_EVENTS`] new events are counted as dropped
+//! rather than grown, so a forgotten `--trace` cannot OOM a long run.
+//!
+//! The recording path takes a single process-wide mutex per event.
+//! That is deliberate: spans here mark *phases* (a sweep, a Cholesky
+//! pass over a mode, a serve batch), not per-row work, so contention is
+//! negligible — and the sample-preserving invariant matters more than
+//! nanoseconds (see `obs` module docs).
+
+use crate::util::JsonValue;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Bounded trace buffer size; ~100 bytes/event keeps worst case <100MB.
+pub const MAX_EVENTS: usize = 1 << 20;
+
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+enum Event {
+    /// Complete duration event ("ph":"X").
+    Span { name: String, cat: &'static str, ts_us: u64, dur_us: u64, tid: u64 },
+    /// Counter sample ("ph":"C").
+    Counter { name: String, ts_us: u64, value: f64 },
+}
+
+#[derive(Default)]
+struct TraceBuf {
+    events: Vec<Event>,
+    /// Small stable ints per OS thread for the "tid" field.
+    tids: HashMap<std::thread::ThreadId, u64>,
+}
+
+fn buf() -> &'static Mutex<TraceBuf> {
+    static B: OnceLock<Mutex<TraceBuf>> = OnceLock::new();
+    B.get_or_init(|| Mutex::new(TraceBuf::default()))
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// Turn trace recording on or off (process-wide).
+pub fn trace_enable(on: bool) {
+    if on {
+        let _ = epoch(); // pin t=0 before the first span
+    }
+    TRACE_ON.store(on, Ordering::Relaxed);
+}
+
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Discard all buffered events (tests / between bench cases).
+pub fn trace_clear() {
+    let mut b = buf().lock().unwrap();
+    b.events.clear();
+    DROPPED.store(0, Ordering::Relaxed);
+}
+
+fn push(ev: Event) {
+    let mut b = buf().lock().unwrap();
+    if b.events.len() >= MAX_EVENTS {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    b.events.push(ev);
+}
+
+/// RAII phase timer: records a complete event from construction to drop.
+/// While tracing is disabled, construction is a single relaxed load and
+/// the guard is inert.
+pub struct Span(Option<SpanStart>);
+
+struct SpanStart {
+    name: String,
+    cat: &'static str,
+    start_us: u64,
+}
+
+/// Open a span named `name` in category `cat` (the chrome trace "cat"
+/// field — use one per layer: "gibbs", "sweep", "serve", "dist").
+pub fn span(cat: &'static str, name: &str) -> Span {
+    if !trace_enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanStart { name: name.to_string(), cat, start_us: now_us() }))
+}
+
+/// Like [`span`] but the name is built lazily, so callers can use
+/// `format!` without paying the allocation when tracing is off.
+pub fn span_dyn(cat: &'static str, name: impl FnOnce() -> String) -> Span {
+    if !trace_enabled() {
+        return Span(None);
+    }
+    Span(Some(SpanStart { name: name(), cat, start_us: now_us() }))
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.0.take() {
+            let end = now_us();
+            let tid = {
+                let mut b = buf().lock().unwrap();
+                let next = b.tids.len() as u64 + 1;
+                *b.tids.entry(std::thread::current().id()).or_insert(next)
+            };
+            push(Event::Span {
+                name: s.name,
+                cat: s.cat,
+                ts_us: s.start_us,
+                dur_us: end.saturating_sub(s.start_us),
+                tid,
+            });
+        }
+    }
+}
+
+/// Record a counter sample (rendered as a stacked chart by the trace
+/// viewer) — e.g. `trace_counter("rmse", r)` once per iteration.
+pub fn trace_counter(name: &str, value: f64) {
+    if !trace_enabled() {
+        return;
+    }
+    push(Event::Counter { name: name.to_string(), ts_us: now_us(), value });
+}
+
+/// Number of buffered events (diagnostics/tests).
+pub fn event_count() -> usize {
+    buf().lock().unwrap().events.len()
+}
+
+/// Serializes tests that toggle the process-wide trace flag —
+/// `cargo test` runs threads in parallel, and one test flipping the
+/// flag mid-span of another would drop that other test's events.
+#[cfg(test)]
+pub(crate) fn test_flag_lock() -> std::sync::MutexGuard<'static, ()> {
+    static L: Mutex<()> = Mutex::new(());
+    L.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Serialize the buffer in Chrome trace-event format (the object form:
+/// `{"traceEvents": [...], "displayTimeUnit": "ms"}`), loadable in
+/// chrome://tracing or https://ui.perfetto.dev.
+pub fn chrome_trace_json() -> JsonValue {
+    let b = buf().lock().unwrap();
+    let events: Vec<JsonValue> = b
+        .events
+        .iter()
+        .map(|ev| match ev {
+            Event::Span { name, cat, ts_us, dur_us, tid } => JsonValue::obj(vec![
+                ("name", JsonValue::str(name)),
+                ("cat", JsonValue::str(cat)),
+                ("ph", JsonValue::str("X")),
+                ("ts", JsonValue::num(*ts_us as f64)),
+                ("dur", JsonValue::num(*dur_us as f64)),
+                ("pid", JsonValue::num(1.0)),
+                ("tid", JsonValue::num(*tid as f64)),
+            ]),
+            Event::Counter { name, ts_us, value } => JsonValue::obj(vec![
+                ("name", JsonValue::str(name)),
+                ("ph", JsonValue::str("C")),
+                ("ts", JsonValue::num(*ts_us as f64)),
+                ("pid", JsonValue::num(1.0)),
+                ("args", JsonValue::obj(vec![("value", JsonValue::num(*value))])),
+            ]),
+        })
+        .collect();
+    JsonValue::obj(vec![
+        ("traceEvents", JsonValue::Array(events)),
+        ("displayTimeUnit", JsonValue::str("ms")),
+        ("droppedEvents", JsonValue::num(DROPPED.load(Ordering::Relaxed) as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = test_flag_lock();
+        trace_enable(false);
+        let n = event_count();
+        {
+            let _s = span("test", "should_not_appear");
+        }
+        trace_counter("test_ctr", 1.0);
+        assert_eq!(event_count(), n);
+    }
+
+    #[test]
+    fn spans_round_trip_through_chrome_json() {
+        let _g = test_flag_lock();
+        trace_enable(true);
+        {
+            let _s = span("testcat", "test_phase_a");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        {
+            let _s = span_dyn("testcat", || format!("test_phase_{}", 2));
+        }
+        trace_counter("test_rmse", 0.5);
+        trace_enable(false);
+
+        let j = chrome_trace_json();
+        // must survive a parse round-trip of our own JSON layer
+        let reparsed = JsonValue::parse(&j.to_string_pretty()).unwrap();
+        let evs = reparsed.get("traceEvents").unwrap().as_array().unwrap();
+        let names: Vec<&str> =
+            evs.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+        assert!(names.contains(&"test_phase_a"));
+        assert!(names.contains(&"test_phase_2"));
+        assert!(names.contains(&"test_rmse"));
+        let a = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("test_phase_a"))
+            .unwrap();
+        assert_eq!(a.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(a.get("dur").unwrap().as_f64().unwrap() >= 1000.0, "slept 1ms -> dur >= 1000us");
+        assert!(a.get("ts").is_some() && a.get("tid").is_some() && a.get("pid").is_some());
+        let c = evs
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("test_rmse"))
+            .unwrap();
+        assert_eq!(c.get("ph").unwrap().as_str().unwrap(), "C");
+        assert_eq!(c.get("args").unwrap().get("value").unwrap().as_f64().unwrap(), 0.5);
+    }
+}

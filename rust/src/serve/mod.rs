@@ -17,9 +17,17 @@
 //! ← {"ok":true,"items":[[12,4.4],[7,4.1], …]}
 //! → {"op":"status"}
 //! ← {"ok":true,"samples":32,"served":12045,"reloads":2,"zero_copy":true, …}
+//! → {"op":"metrics"}
+//! ← {"ok":true,"format":"prometheus-text-0.0.4","text":"# TYPE …"}
 //! → {"op":"shutdown"}                   (only with allow_shutdown)
 //! ← {"ok":true,"bye":true}
 //! ```
+//!
+//! The `metrics` op returns the whole [`crate::obs`] registry as
+//! Prometheus text exposition (escaped into the one-line JSON reply):
+//! request/served/reload counters, batch-size and end-to-end latency
+//! histograms and the live queue-depth gauge, alongside whatever the
+//! train/distributed layers recorded in this process.
 //!
 //! Failures answer `{"ok":false,"error":"…"}` and keep the connection
 //! open; protocol-level junk (unparseable line) also answers an error.
@@ -51,7 +59,7 @@ use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -126,6 +134,9 @@ struct BatchQueue {
     not_empty: Condvar,
     not_full: Condvar,
     cap: usize,
+    /// live queue depth, published to the obs registry under the
+    /// queue's lock (ISSUE 6)
+    depth: Arc<crate::obs::Gauge>,
 }
 
 impl BatchQueue {
@@ -135,6 +146,7 @@ impl BatchQueue {
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             cap: cap.max(1),
+            depth: crate::obs::gauge("smurff_serve_queue_depth"),
         }
     }
 
@@ -152,6 +164,7 @@ impl BatchQueue {
             q = self.not_full.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
         }
         q.push_back(job);
+        self.depth.set(q.len() as f64);
         self.not_empty.notify_one();
         true
     }
@@ -181,6 +194,7 @@ impl BatchQueue {
         }
         let n = q.len().min(max);
         let batch: Vec<Job> = q.drain(..n).collect();
+        self.depth.set(q.len() as f64);
         self.not_full.notify_all();
         batch
     }
@@ -195,6 +209,7 @@ impl BatchQueue {
     fn drain_all(&self) -> Vec<Job> {
         let mut q = self.inner.lock().unwrap();
         let jobs = q.drain(..).collect();
+        self.depth.set(0.0);
         self.not_full.notify_all();
         jobs
     }
@@ -202,15 +217,46 @@ impl BatchQueue {
 
 // -------------------------------------------------------------- engine
 
+/// Cached handles into the [`crate::obs`] registry — looked up once at
+/// server start so the request path pays only relaxed atomics (ISSUE 6:
+/// these replace the engine-local `served`/`reloads` counters; one
+/// counter system).
+struct ServeMetrics {
+    /// every request line handled (any op)
+    requests: Arc<crate::obs::Counter>,
+    /// scoring jobs completed by the batcher
+    served: Arc<crate::obs::Counter>,
+    /// hot-reload model swaps
+    reloads: Arc<crate::obs::Counter>,
+    /// scoring jobs per batcher round
+    batch_size: Arc<crate::obs::Histogram>,
+    /// end-to-end queue→reply latency of scoring requests
+    latency: Arc<crate::obs::Histogram>,
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        ServeMetrics {
+            requests: crate::obs::counter("smurff_serve_requests_total"),
+            served: crate::obs::counter("smurff_serve_scored_jobs_total"),
+            reloads: crate::obs::counter("smurff_serve_model_reloads_total"),
+            batch_size: crate::obs::histogram("smurff_serve_batch_size", crate::obs::SIZE_BOUNDS),
+            latency: crate::obs::histogram(
+                "smurff_serve_latency_seconds",
+                crate::obs::LATENCY_BOUNDS_S,
+            ),
+        }
+    }
+}
+
 /// The shared serving state: the hot-swappable session, the queue, and
-/// the counters `status` reports.
+/// the registry handles `status` and `metrics` report.
 struct Engine {
     store_dir: PathBuf,
     session: Mutex<Arc<PredictSession>>,
     queue: BatchQueue,
     stop: AtomicBool,
-    served: AtomicU64,
-    reloads: AtomicU64,
+    metrics: ServeMetrics,
     cfg: ServeConfig,
 }
 
@@ -231,7 +277,7 @@ impl Engine {
         let model = Arc::new(ServingModel::from_store(&store)?);
         let swapped = current.with_model(model);
         *self.session.lock().unwrap() = Arc::new(swapped);
-        self.reloads.fetch_add(1, Ordering::Relaxed);
+        self.metrics.reloads.add(1);
         crate::log_info!(
             "serve: hot-reloaded model from {} ({} samples)",
             self.store_dir.display(),
@@ -245,8 +291,10 @@ impl Engine {
     /// model snapshot, scatter the answers; top-K jobs run individually
     /// on the same snapshot.
     fn execute_batch(&self, jobs: Vec<Job>) {
+        let _span = crate::obs::span("serve", "execute_batch");
         let session = self.current();
-        self.served.fetch_add(jobs.len() as u64, Ordering::Relaxed);
+        self.metrics.served.add(jobs.len() as u64);
+        self.metrics.batch_size.observe(jobs.len() as f64);
         // (view, want_std) -> (job indices, per-job cell counts, rows, cols)
         let mut groups: std::collections::BTreeMap<(usize, bool), Vec<usize>> =
             std::collections::BTreeMap::new();
@@ -317,8 +365,8 @@ impl Engine {
             ("nrows", JsonValue::num(s.nrows() as f64)),
             ("nviews", JsonValue::num(s.nviews() as f64)),
             ("zero_copy", JsonValue::Bool(s.zero_copy())),
-            ("served", JsonValue::num(self.served.load(Ordering::Relaxed) as f64)),
-            ("reloads", JsonValue::num(self.reloads.load(Ordering::Relaxed) as f64)),
+            ("served", JsonValue::num(self.metrics.served.get() as f64)),
+            ("reloads", JsonValue::num(self.metrics.reloads.get() as f64)),
             (
                 "iterations",
                 JsonValue::arr_usize(s.model().iterations()),
@@ -531,6 +579,17 @@ fn parse_request(line: &str, engine: &Engine) -> Parsed {
             )
         }
         "status" => Parsed::Direct(engine.status_json().to_string()),
+        "metrics" => Parsed::Direct(
+            // Prometheus text exposition, shipped inside the one-line
+            // JSON reply (the protocol is newline-delimited); clients
+            // unwrap "text" to get the scrapeable form
+            JsonValue::obj(vec![
+                ("ok", JsonValue::Bool(true)),
+                ("format", JsonValue::str("prometheus-text-0.0.4")),
+                ("text", JsonValue::str(&crate::obs::render_prometheus())),
+            ])
+            .to_string(),
+        ),
         "shutdown" => {
             if engine.cfg.allow_shutdown {
                 Parsed::Shutdown
@@ -539,7 +598,7 @@ fn parse_request(line: &str, engine: &Engine) -> Parsed {
             }
         }
         other => Parsed::Direct(err_json(&format!(
-            "unknown op '{other}' (predict|predict_batch|topk|status|shutdown)"
+            "unknown op '{other}' (predict|predict_batch|topk|status|metrics|shutdown)"
         ))),
     }
 }
@@ -605,8 +664,7 @@ pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle>
         session: Mutex::new(Arc::new(session)),
         queue: BatchQueue::new(cfg.queue_cap),
         stop: AtomicBool::new(false),
-        served: AtomicU64::new(0),
-        reloads: AtomicU64::new(0),
+        metrics: ServeMetrics::new(),
         cfg: cfg.clone(),
     });
     let mut threads = Vec::new();
@@ -696,6 +754,7 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
             let _ = writeln!(writer, "{}", err_json("server is shutting down"));
             break;
         }
+        engine.metrics.requests.add(1);
         let response = match parse_request(line.trim(), &engine) {
             Parsed::Direct(resp) => resp,
             Parsed::Shutdown => {
@@ -711,6 +770,7 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
                 break;
             }
             Parsed::Queue(op, unwrap_single) => {
+                let queued_at = Instant::now();
                 let (tx, rx) = mpsc::channel();
                 if !engine.queue.push(Job { op, tx }, &engine.stop) {
                     err_json("server is shutting down")
@@ -729,6 +789,11 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
                             }
                         }
                     };
+                    // end-to-end scoring latency: queue push → reply
+                    engine
+                        .metrics
+                        .latency
+                        .observe(queued_at.elapsed().as_secs_f64());
                     match received {
                         None => err_json("server dropped the request (shutting down?)"),
                         Some(Reply::Preds(preds)) if unwrap_single && preds.len() == 1 => {
@@ -934,6 +999,36 @@ mod tests {
         // and the swapped model still answers
         let p = c.roundtrip(r#"{"op":"predict","view":0,"row":0,"col":0}"#);
         assert_eq!(p.get("ok").unwrap().as_bool(), Some(true));
+        handle.stop();
+    }
+
+    #[test]
+    fn metrics_op_exposes_prometheus_families() {
+        let dir = tiny_store("metrics", 3);
+        let handle = serve(&dir, test_cfg()).unwrap();
+        let mut c = Client::connect(handle.addr());
+        // drive some scoring traffic so the histograms have samples
+        for i in 0..5 {
+            let p = c.roundtrip(&format!(r#"{{"op":"predict","view":0,"row":{i},"col":1}}"#));
+            assert_eq!(p.get("ok").unwrap().as_bool(), Some(true));
+        }
+        let m = c.roundtrip(r#"{"op":"metrics"}"#);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(m.get("format").unwrap().as_str(), Some("prometheus-text-0.0.4"));
+        let text = m.get("text").unwrap().as_str().unwrap().to_string();
+        for family in [
+            "smurff_serve_requests_total",
+            "smurff_serve_scored_jobs_total",
+            "smurff_serve_model_reloads_total",
+            "smurff_serve_batch_size",
+            "smurff_serve_latency_seconds_bucket",
+            "smurff_serve_queue_depth",
+        ] {
+            assert!(text.contains(family), "metrics text missing {family}:\n{text}");
+        }
+        assert!(text.contains("# TYPE smurff_serve_latency_seconds histogram"));
+        // training in tiny_store ran in-process: train families present
+        assert!(text.contains("smurff_train_iterations_total"));
         handle.stop();
     }
 

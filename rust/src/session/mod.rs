@@ -626,9 +626,18 @@ impl TrainSession {
     /// the engine declines to fuse or `SweepTuning::fused_sse` was off
     /// at build time.
     pub fn step(&mut self) {
+        // ISSUE 6: phase spans + counters.  Instrumentation is passive —
+        // it never touches the RNG streams or reorders any float sum, so
+        // the chain is bit-identical with tracing on or off (asserted by
+        // `tracing_preserves_samples_bit_identically`).
+        let _iter_span =
+            crate::obs::span_dyn("gibbs", || format!("iteration {}", self.iteration));
         let mut hyper_rng = self.hyper_rng();
         let nrows = self.u.rows();
-        self.sample_row_side(0..nrows, &mut hyper_rng);
+        {
+            let _s = crate::obs::span("gibbs", "mode0_sweep");
+            self.sample_row_side(0..nrows, &mut hyper_rng);
+        }
         for vi in 0..self.views.len() {
             let adaptive = self.noise_is_adaptive(vi);
             let last = self.views[vi].nmodes() - 1;
@@ -636,9 +645,11 @@ impl TrainSession {
             for m in 1..=last {
                 let n = self.views[vi].mode_len(m);
                 let fuse = adaptive && self.tuning.fused_sse && m == last;
+                let _s = crate::obs::span_dyn("gibbs", || format!("mode{m}_sweep view{vi}"));
                 fused = self.sample_mode_side_fused(vi, m, 0..n, &mut hyper_rng, fuse);
             }
             if adaptive {
+                let _s = crate::obs::span_dyn("gibbs", || format!("noise_update view{vi}"));
                 let (sse, nobs) = match fused {
                     Some(x) => x,
                     None => self.view_sse_local(vi),
@@ -646,8 +657,12 @@ impl TrainSession {
                 self.update_view_noise(vi, sse, nobs, &mut hyper_rng);
             }
         }
-        self.aggregate_test_predictions();
+        {
+            let _s = crate::obs::span("gibbs", "aggregate_test");
+            self.aggregate_test_predictions();
+        }
         self.iteration += 1;
+        crate::obs::counter_add("smurff_train_iterations_total", 1);
     }
 
     /// The deterministic hyper-parameter RNG stream for the current
@@ -982,12 +997,20 @@ impl TrainSession {
         let total = self.cfg.burnin + self.cfg.nsamples;
         let mut store = self.open_store()?;
         let mut rmse_history = Vec::new();
+        let iter_hist =
+            crate::obs::histogram("smurff_train_iter_seconds", crate::obs::LATENCY_BOUNDS_S);
         while self.iteration < total {
+            let iter_timer = Timer::start();
             self.step();
+            iter_hist.observe(iter_timer.elapsed_s());
             if self.iteration > self.cfg.burnin {
                 let r = self.view_rmse(0);
                 if !r.is_nan() {
                     rmse_history.push(r);
+                    // RMSE-per-iteration telemetry: live gauge for the
+                    // metrics endpoint, counter track for the trace view
+                    crate::obs::gauge_set("smurff_train_rmse", r);
+                    crate::obs::trace_counter("rmse", r);
                 }
             }
             if let Some(st) = store.as_mut() {
@@ -1234,6 +1257,46 @@ mod tests {
         let a = run(1);
         let b = run(4);
         assert_eq!(a, b, "thread count must not change results");
+    }
+
+    #[test]
+    fn tracing_preserves_samples_bit_identically() {
+        // ISSUE 6's non-negotiable invariant: instrumentation is
+        // sample-preserving.  Run the same adaptive-noise session (so
+        // the fused-SSE path and its spans are exercised) with trace
+        // recording off and then on, at 1/4/7 threads, and require
+        // factors identical down to the bit pattern.
+        let _g = crate::obs::trace::test_flag_lock();
+        let (train, _) = crate::data::movielens_like(50, 40, 1200, 0.0, 11);
+        for &threads in &[1usize, 4, 7] {
+            let run = |trace_on: bool| {
+                let mut cfg = quick_cfg(4, 2, 4);
+                cfg.threads = threads;
+                crate::obs::trace_enable(trace_on);
+                let mut s = SessionBuilder::new(cfg)
+                    .add_view(
+                        MatrixConfig::SparseUnknown(train.clone()),
+                        NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 50.0 },
+                        None,
+                    )
+                    .build();
+                for _ in 0..6 {
+                    s.step();
+                }
+                crate::obs::trace_enable(false);
+                s
+            };
+            let off = run(false);
+            let on = run(true);
+            for (a, b) in off.u.data().iter().zip(on.u.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: U bit-diverged");
+            }
+            for (a, b) in
+                off.views[0].col_latents().data().iter().zip(on.views[0].col_latents().data())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: V bit-diverged");
+            }
+        }
     }
 
     #[test]

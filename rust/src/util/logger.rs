@@ -1,41 +1,66 @@
 //! Leveled stderr logger (env_logger replacement, DESIGN.md §7).
 //!
-//! Level comes from `SMURFF_LOG` (error|warn|info|debug|trace) or is set
-//! programmatically; messages carry elapsed wall-clock since process start
-//! so session logs double as coarse profiles.
+//! Level comes from `SMURFF_LOG` (off|error|warn|info|debug|trace) or is
+//! set programmatically; messages carry elapsed wall-clock since process
+//! start so session logs double as coarse profiles.  Unrecognized
+//! `SMURFF_LOG` values fall back to Info *with a warning* rather than
+//! silently.  Every Warn/Error record — printed or suppressed — also
+//! bumps `smurff_log_records_total{level=…}` in the [`crate::obs`]
+//! registry, so the serve metrics endpoint surfaces error rates.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum Level {
-    Error = 0,
-    Warn = 1,
-    Info = 2,
-    Debug = 3,
-    Trace = 4,
+    /// Disables all output; never used to tag a message.
+    Off = 0,
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static LEVEL: AtomicU8 = AtomicU8::new(3); // Info
 
 fn start() -> Instant {
-    use std::sync::OnceLock;
     static START: OnceLock<Instant> = OnceLock::new();
     *START.get_or_init(Instant::now)
+}
+
+/// Parse a `SMURFF_LOG` value; `None` for unrecognized input.
+pub fn level_from_str(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" | "none" => Some(Level::Off),
+        "error" => Some(Level::Error),
+        "warn" => Some(Level::Warn),
+        "info" => Some(Level::Info),
+        "debug" => Some(Level::Debug),
+        "trace" => Some(Level::Trace),
+        _ => None,
+    }
 }
 
 /// Initialise from the environment; call once early in main.
 pub fn init_from_env() {
     let _ = start();
     if let Ok(v) = std::env::var("SMURFF_LOG") {
-        set_level(match v.to_ascii_lowercase().as_str() {
-            "error" => Level::Error,
-            "warn" => Level::Warn,
-            "debug" => Level::Debug,
-            "trace" => Level::Trace,
-            _ => Level::Info,
-        });
+        match level_from_str(&v) {
+            Some(l) => set_level(l),
+            None => {
+                set_level(Level::Info);
+                log(
+                    Level::Warn,
+                    module_path!(),
+                    &format!(
+                        "unrecognized SMURFF_LOG value '{v}' (expected off|error|warn|info|debug|trace); using info"
+                    ),
+                );
+            }
+        }
     }
 }
 
@@ -45,22 +70,45 @@ pub fn set_level(l: Level) {
 
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
-        0 => Level::Error,
-        1 => Level::Warn,
-        2 => Level::Info,
-        3 => Level::Debug,
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        4 => Level::Debug,
         _ => Level::Trace,
     }
 }
 
 pub fn enabled(l: Level) -> bool {
-    l <= level()
+    l != Level::Off && l <= level()
+}
+
+/// Cached obs counter handles — the log path must not take the registry
+/// lock per record.
+fn record_counter(l: Level) -> Option<&'static Arc<crate::obs::Counter>> {
+    static ERRORS: OnceLock<Arc<crate::obs::Counter>> = OnceLock::new();
+    static WARNS: OnceLock<Arc<crate::obs::Counter>> = OnceLock::new();
+    match l {
+        Level::Error => {
+            Some(ERRORS.get_or_init(|| crate::obs::counter("smurff_log_records_total{level=\"error\"}")))
+        }
+        Level::Warn => {
+            Some(WARNS.get_or_init(|| crate::obs::counter("smurff_log_records_total{level=\"warn\"}")))
+        }
+        _ => None,
+    }
 }
 
 pub fn log(l: Level, module: &str, msg: &str) {
+    // Count Warn/Error records before the level gate: a suppressed error
+    // still shows up on the metrics endpoint.
+    if let Some(c) = record_counter(l) {
+        c.add(1);
+    }
     if enabled(l) {
         let t = start().elapsed().as_secs_f64();
         let tag = match l {
+            Level::Off => return,
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
@@ -95,14 +143,51 @@ macro_rules! log_error {
 mod tests {
     use super::*;
 
+    /// The level is process-wide and `cargo test` is parallel: tests
+    /// that set it must not interleave.
+    fn level_lock() -> std::sync::MutexGuard<'static, ()> {
+        static L: std::sync::Mutex<()> = std::sync::Mutex::new(());
+        L.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     #[test]
     fn level_ordering_gates_output() {
+        let _g = level_lock();
         set_level(Level::Warn);
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
         set_level(Level::Trace);
         assert!(enabled(Level::Debug));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        assert!(!enabled(Level::Off), "Off never passes the gate");
         set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn env_values_parse_strictly() {
+        assert_eq!(level_from_str("off"), Some(Level::Off));
+        assert_eq!(level_from_str("ERROR"), Some(Level::Error));
+        assert_eq!(level_from_str("Info"), Some(Level::Info));
+        assert_eq!(level_from_str("trace"), Some(Level::Trace));
+        assert_eq!(level_from_str("verbose"), None, "unknown values must not map to Info silently");
+        assert_eq!(level_from_str(""), None);
+    }
+
+    #[test]
+    fn warn_and_error_records_reach_the_obs_registry() {
+        let _g = level_lock();
+        let warns = crate::obs::counter("smurff_log_records_total{level=\"warn\"}");
+        let errors = crate::obs::counter("smurff_log_records_total{level=\"error\"}");
+        let (w0, e0) = (warns.get(), errors.get());
+        let prev = level();
+        set_level(Level::Off); // even suppressed records must be counted
+        log(Level::Warn, "test", "suppressed warn");
+        log(Level::Error, "test", "suppressed error");
+        log(Level::Info, "test", "info records are not counted");
+        set_level(prev);
+        assert!(warns.get() >= w0 + 1);
+        assert!(errors.get() >= e0 + 1);
     }
 }

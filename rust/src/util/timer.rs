@@ -1,8 +1,10 @@
-//! Wall-clock timers and operation counters used by the session status
-//! reports, the bench harness and the hardware model's instrumentation.
+//! Wall-clock timers used by the session status reports and the bench
+//! harness.
+//!
+//! Accumulating *counters* used to live here too; they are superseded
+//! by the process-wide [`crate::obs`] registry (counters, gauges,
+//! histograms) — exactly one counter system (ISSUE 6).
 
-use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Simple scoped stopwatch.
@@ -24,52 +26,6 @@ impl Timer {
     }
 }
 
-/// Thread-safe accumulating counters: named f64 totals (stored as u64
-/// nanos / op counts).  Used to attribute time and FLOPs/bytes to phases;
-/// the hwmodel consumes the flop/byte counters (DESIGN.md Fig 4).
-#[derive(Default)]
-pub struct Counters {
-    counts: BTreeMap<String, AtomicU64>,
-}
-
-impl Counters {
-    pub fn new(names: &[&str]) -> Counters {
-        let mut counts = BTreeMap::new();
-        for n in names {
-            counts.insert(n.to_string(), AtomicU64::new(0));
-        }
-        Counters { counts }
-    }
-
-    /// Add to a counter; unknown names are ignored in release builds but
-    /// panic in debug so typos get caught by tests.
-    pub fn add(&self, name: &str, v: u64) {
-        match self.counts.get(name) {
-            Some(c) => {
-                c.fetch_add(v, Ordering::Relaxed);
-            }
-            None => debug_assert!(false, "unknown counter {name}"),
-        }
-    }
-
-    pub fn get(&self, name: &str) -> u64 {
-        self.counts.get(name).map(|c| c.load(Ordering::Relaxed)).unwrap_or(0)
-    }
-
-    pub fn reset(&self) {
-        for c in self.counts.values() {
-            c.store(0, Ordering::Relaxed);
-        }
-    }
-
-    pub fn snapshot(&self) -> BTreeMap<String, u64> {
-        self.counts
-            .iter()
-            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
-            .collect()
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,37 +36,5 @@ mod tests {
         let a = t.elapsed_s();
         let b = t.elapsed_s();
         assert!(b >= a && a >= 0.0);
-    }
-
-    #[test]
-    fn counters_accumulate_and_reset() {
-        let c = Counters::new(&["flops", "bytes"]);
-        c.add("flops", 10);
-        c.add("flops", 5);
-        c.add("bytes", 3);
-        assert_eq!(c.get("flops"), 15);
-        assert_eq!(c.get("bytes"), 3);
-        let snap = c.snapshot();
-        assert_eq!(snap["flops"], 15);
-        c.reset();
-        assert_eq!(c.get("flops"), 0);
-    }
-
-    #[test]
-    fn counters_thread_safe() {
-        let c = std::sync::Arc::new(Counters::new(&["x"]));
-        let mut hs = vec![];
-        for _ in 0..4 {
-            let c = c.clone();
-            hs.push(std::thread::spawn(move || {
-                for _ in 0..1000 {
-                    c.add("x", 1);
-                }
-            }));
-        }
-        for h in hs {
-            h.join().unwrap();
-        }
-        assert_eq!(c.get("x"), 4000);
     }
 }
