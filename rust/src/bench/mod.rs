@@ -87,11 +87,15 @@ impl Table {
 pub struct Report {
     pub name: String,
     pub tables: Vec<Table>,
+    /// Convergence report of a diag-enabled training run inside the
+    /// bench (ISSUE 7), embedded in the `--json` dump so BENCH_*.json
+    /// records sampler health next to its timings.
+    pub diagnostics: Option<JsonValue>,
 }
 
 impl Report {
     pub fn new(name: &str) -> Report {
-        Report { name: name.to_string(), tables: Vec::new() }
+        Report { name: name.to_string(), tables: Vec::new(), diagnostics: None }
     }
 
     pub fn push(&mut self, t: Table) {
@@ -107,6 +111,7 @@ impl Report {
             // the bench ran, so BENCH_*.json carries a breakdown alongside
             // the headline tables (quantiles are approximate, see obs docs).
             ("metrics", crate::obs::snapshot_json()),
+            ("diagnostics", self.diagnostics.clone().unwrap_or(JsonValue::Null)),
         ])
     }
 }
@@ -132,6 +137,9 @@ pub fn run_by_name(name: &str, quick: bool) -> anyhow::Result<Report> {
             ] {
                 let r = run_by_name(n, quick)?;
                 all.tables.extend(r.tables);
+                if all.diagnostics.is_none() {
+                    all.diagnostics = r.diagnostics;
+                }
             }
             Ok(all)
         }
@@ -178,6 +186,8 @@ mod tests {
         let j = Report::new("r").to_json();
         let m = j.get("metrics").expect("report carries a registry snapshot");
         assert!(m.get("counters").is_some());
+        // diagnostics key always present; null until a bench attaches one
+        assert_eq!(j.get("diagnostics"), Some(&JsonValue::Null));
     }
 
     #[test]

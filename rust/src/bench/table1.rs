@@ -80,14 +80,20 @@ pub fn run(quick: bool) -> Report {
     for cell in &cells {
         let metric = match cell.algorithm {
             "BMF" => {
-                let mut s = SessionBuilder::new(cfg.clone())
+                // diag on for the canonical cell: its convergence report
+                // (R̂/ESS per tracked statistic) rides in the bench JSON
+                let mut dcfg = cfg.clone();
+                dcfg.diag = true;
+                let mut s = SessionBuilder::new(dcfg)
                     .add_view(
                         MatrixConfig::SparseUnknown(train.clone()),
                         NoiseConfig::Fixed { precision: 5.0 },
                         Some(test_set.clone()),
                     )
                     .build();
-                format!("RMSE {:.3}", s.run().rmse)
+                let r = s.run();
+                report.diagnostics = r.diagnostics.as_ref().map(|d| d.to_json());
+                format!("RMSE {:.3}", r.rmse)
             }
             "BMF (adaptive)" => {
                 let mut s = SessionBuilder::new(cfg.clone())
@@ -210,6 +216,10 @@ mod tests {
         let r = super::run(true);
         let t = &r.tables[0];
         assert_eq!(t.rows.len(), 7);
+        // the BMF cell ran with diag on: the report carries its
+        // convergence block for the JSON dump (ISSUE 7)
+        let d = r.diagnostics.as_ref().expect("bench embeds diagnostics");
+        assert!(!d.get("stats").unwrap().as_array().unwrap().is_empty());
         for row in &t.rows {
             let metric = &row[5];
             let val: f64 = metric.split_whitespace().last().unwrap().parse().unwrap();

@@ -1,0 +1,606 @@
+//! Sampler-health diagnostics: online convergence monitoring for the
+//! Gibbs chain (ISSUE 7).
+//!
+//! The obs layer measures *mechanics* — time, bytes, throughput.  This
+//! layer measures *statistics*: has the chain burned in, is it mixing,
+//! and (in the distributed strategies) have the rank-local replicas
+//! silently diverged.  Three pieces:
+//!
+//!  * [`ChainMonitor`] — fed once per iteration with cheap scalar
+//!    summaries of the chain (train RMSE, per-mode factor Frobenius
+//!    norms, noise α, hyperprior means).  Maintains the raw series and
+//!    computes split-chain R̂ (Gelman–Rubin), autocorrelation-based
+//!    effective sample size (Geyer initial-positive-sequence
+//!    truncation), and a Geweke-style burn-in z-score on demand.
+//!    Strictly read-only over the model: it never draws from an RNG,
+//!    never reorders a float reduction, never touches scheduling — the
+//!    diag-on-vs-off property test in `session` proves bit-identity.
+//!
+//!  * [`StateHasher`] / [`state_hash_parts`] — FNV-1a over the
+//!    little-endian bytes of factor/hyper state.  Cheap enough to run
+//!    every iteration; `DistributedSession` exchanges the 8-byte digest
+//!    at every coherent point so the sync strategy can *assert*
+//!    bit-agreement across ranks and async/pprop can report a
+//!    divergence magnitude as `smurff_dist_divergence{strategy,rank}`.
+//!
+//!  * [`DiagnosticsReport`] — the JSON-serializable summary persisted
+//!    as `diagnostics.json` next to the ModelStore manifest, embedded
+//!    in `bench --json`, served by the `status` verb, and printed as a
+//!    convergence table by `smurff train --diag` / `smurff diag`.
+
+use crate::util::JsonValue;
+
+/// R̂ threshold below which a statistic is considered converged
+/// (Gelman et al. recommend 1.1; stan folk lore now prefers 1.01 but
+/// our chains are short, so we keep the classic bound).
+pub const RHAT_CONVERGED: f64 = 1.1;
+
+/// |Geweke z| threshold for the burn-in flag (two-sided 95%).
+pub const GEWEKE_Z_BOUND: f64 = 2.0;
+
+// ---------------------------------------------------------------------------
+// FNV-1a state hashing
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// Incremental FNV-1a 64-bit hasher over little-endian `f64` bytes.
+///
+/// FNV-1a is not cryptographic — it is chosen because it is branch-free,
+/// 1 multiply + 1 xor per byte, and stable across platforms for a given
+/// byte stream.  Two ranks holding bit-identical factors produce the
+/// same digest; a single flipped mantissa bit changes it.
+#[derive(Debug, Clone)]
+pub struct StateHasher(u64);
+
+impl StateHasher {
+    pub fn new() -> Self {
+        StateHasher(FNV_OFFSET)
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_bytes(&x.to_bits().to_le_bytes());
+    }
+
+    pub fn write_f64s(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.write_f64(x);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for StateHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Hash a sequence of `f64` slices (factors, hypers, alphas) in order.
+pub fn state_hash_parts<'a>(parts: impl IntoIterator<Item = &'a [f64]>) -> u64 {
+    let mut h = StateHasher::new();
+    for p in parts {
+        h.write_f64s(p);
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Per-statistic diagnostics
+// ---------------------------------------------------------------------------
+
+/// Frobenius norm of a factor matrix's raw storage — the cheap "where
+/// is the chain" summary the session feeds the monitor per mode.
+pub fn frobenius(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (n-1 denominator); 0 for len < 2.
+fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Split-chain R̂ (Gelman–Rubin potential scale reduction).
+///
+/// A single chain is split into two half-chains of length n; the
+/// between-half variance B and mean within-half variance W combine into
+/// the pooled posterior-variance estimate `var+ = (n-1)/n·W + B/n` and
+/// `R̂ = sqrt(var+/W)`.  A well-mixed stationary chain gives R̂ ≈ 1; a
+/// trending (non-burned-in) chain inflates B and pushes R̂ well above
+/// [`RHAT_CONVERGED`].  Returns 1.0 for degenerate (constant / too
+/// short) series — a constant statistic has trivially converged.
+pub fn split_rhat(series: &[f64]) -> f64 {
+    let n2 = series.len() / 2;
+    if n2 < 2 {
+        return 1.0;
+    }
+    // Drop the middle element on odd lengths so halves match.
+    let a = &series[..n2];
+    let b = &series[series.len() - n2..];
+    let w = 0.5 * (variance(a) + variance(b));
+    if w <= 0.0 || !w.is_finite() {
+        return 1.0;
+    }
+    let grand = 0.5 * (mean(a) + mean(b));
+    let bvar = n2 as f64 * ((mean(a) - grand).powi(2) + (mean(b) - grand).powi(2));
+    let var_plus = (n2 as f64 - 1.0) / n2 as f64 * w + bvar / n2 as f64;
+    (var_plus / w).sqrt()
+}
+
+/// Lag-`t` autocorrelation of `series` (biased estimator, standard for
+/// ESS: divides by n, not n-t, which keeps the spectral sum stable).
+fn autocorr(series: &[f64], t: usize, m: f64, var0: f64) -> f64 {
+    let n = series.len();
+    if t >= n || var0 <= 0.0 {
+        return 0.0;
+    }
+    let mut s = 0.0;
+    for i in 0..n - t {
+        s += (series[i] - m) * (series[i + t] - m);
+    }
+    s / (n as f64 * var0)
+}
+
+/// Autocorrelation-based effective sample size with Geyer's
+/// initial-positive-sequence truncation: sum paired autocorrelations
+/// ρ(2k-1)+ρ(2k) while the pair sum stays positive, then
+/// `ESS = n / (1 + 2·Σρ)`.  Clamped to `[1, n]`.  A constant series
+/// reports `n` (every draw of a deterministic statistic is "effective").
+pub fn effective_sample_size(series: &[f64]) -> f64 {
+    let n = series.len();
+    if n < 4 {
+        return n.max(1) as f64;
+    }
+    let m = mean(series);
+    // Biased lag-0 "variance" (n denominator) to match autocorr's scale.
+    let var0 = series.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n as f64;
+    if var0 <= 0.0 || !var0.is_finite() {
+        return n as f64;
+    }
+    let mut rho_sum = 0.0;
+    let mut t = 1;
+    while t + 1 < n {
+        let pair = autocorr(series, t, m, var0) + autocorr(series, t + 1, m, var0);
+        if pair <= 0.0 {
+            break;
+        }
+        rho_sum += pair;
+        t += 2;
+    }
+    (n as f64 / (1.0 + 2.0 * rho_sum)).clamp(1.0, n as f64)
+}
+
+/// Geweke burn-in z-score: compares the mean of the first 10% of the
+/// series against the last 50% under a normal approximation,
+/// `z = (m_a - m_b) / sqrt(var_a/n_a + var_b/n_b)`.  |z| ≳ 2 suggests
+/// the early window has not yet reached the stationary distribution.
+/// Returns 0.0 for series too short to window (nothing to flag).
+pub fn geweke_z(series: &[f64]) -> f64 {
+    let n = series.len();
+    let na = (n / 10).max(2);
+    let nb = n / 2;
+    if n < 8 || na + nb > n {
+        return 0.0;
+    }
+    let a = &series[..na];
+    let b = &series[n - nb..];
+    let denom = (variance(a) / na as f64 + variance(b) / nb as f64).sqrt();
+    if denom <= 0.0 || !denom.is_finite() {
+        return 0.0;
+    }
+    (mean(a) - mean(b)) / denom
+}
+
+// ---------------------------------------------------------------------------
+// ChainMonitor
+// ---------------------------------------------------------------------------
+
+/// One tracked scalar statistic of the chain: a `(view, stat)` key and
+/// its per-iteration value series.
+#[derive(Debug, Clone)]
+struct Series {
+    view: String,
+    stat: String,
+    values: Vec<f64>,
+}
+
+/// Online per-chain convergence monitor.
+///
+/// Feed it once per Gibbs iteration via [`ChainMonitor::observe`] with
+/// scalar summaries keyed by `(view, stat)` — e.g. `("0", "rmse")`,
+/// `("global", "u_frob")`.  Series may have different lengths (RMSE
+/// only exists after burn-in); each is diagnosed independently.  All
+/// inputs are *read* from the model — the monitor performs no draws and
+/// mutates nothing outside itself, so enabling it cannot perturb the
+/// sample stream.
+#[derive(Debug, Clone)]
+pub struct ChainMonitor {
+    burnin: usize,
+    iterations: usize,
+    series: Vec<Series>,
+}
+
+impl ChainMonitor {
+    pub fn new(burnin: usize) -> Self {
+        ChainMonitor { burnin, iterations: 0, series: Vec::new() }
+    }
+
+    /// Record one iteration's scalar summaries.  Non-finite values are
+    /// skipped (e.g. RMSE before any posterior sample exists).
+    pub fn observe(&mut self, stats: &[(&str, &str, f64)]) {
+        self.iterations += 1;
+        for &(view, stat, value) in stats {
+            if !value.is_finite() {
+                continue;
+            }
+            match self.series.iter_mut().find(|s| s.view == view && s.stat == stat) {
+                Some(s) => s.values.push(value),
+                None => self.series.push(Series {
+                    view: view.to_string(),
+                    stat: stat.to_string(),
+                    values: vec![value],
+                }),
+            }
+        }
+    }
+
+    /// Number of iterations observed so far.
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// Compute the full diagnostics report over the post-burn-in part
+    /// of every series.  `state_hash` stamps the chain state the report
+    /// describes (0 when unknown, e.g. recomputed from partial data).
+    pub fn report(&self, state_hash: u64) -> DiagnosticsReport {
+        let stats: Vec<StatDiag> = self
+            .series
+            .iter()
+            .map(|s| {
+                // Series shorter than the total iteration count started
+                // late (post-burn-in stats like RMSE): use them whole.
+                let skip = self
+                    .burnin
+                    .saturating_sub(self.iterations.saturating_sub(s.values.len()))
+                    .min(s.values.len());
+                let tail = &s.values[skip..];
+                let rhat = split_rhat(tail);
+                let z = geweke_z(tail);
+                StatDiag {
+                    view: s.view.clone(),
+                    stat: s.stat.clone(),
+                    n: tail.len(),
+                    mean: mean(tail),
+                    rhat,
+                    ess: effective_sample_size(tail),
+                    geweke_z: z,
+                    converged: rhat < RHAT_CONVERGED && z.abs() < GEWEKE_Z_BOUND,
+                }
+            })
+            .collect();
+        let converged = !stats.is_empty() && stats.iter().all(|s| s.converged);
+        DiagnosticsReport {
+            iterations: self.iterations,
+            burnin: self.burnin,
+            stats,
+            state_hash,
+            converged,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DiagnosticsReport
+// ---------------------------------------------------------------------------
+
+/// Convergence diagnostics of one tracked statistic.
+#[derive(Debug, Clone)]
+pub struct StatDiag {
+    /// View index the statistic belongs to, or `"global"` for
+    /// cross-view state (shared row factors, hyperprior means).
+    pub view: String,
+    /// Statistic name: `rmse`, `alpha`, `frob_m1`, `u_frob`, ...
+    pub stat: String,
+    /// Post-burn-in draws the diagnostics were computed over.
+    pub n: usize,
+    pub mean: f64,
+    /// Split-chain potential scale reduction factor (→ 1 when mixed).
+    pub rhat: f64,
+    /// Autocorrelation-based effective sample size, in `[1, n]`.
+    pub ess: f64,
+    /// Geweke early-vs-late z-score (|z| < 2 ⇒ burn-in looks complete).
+    pub geweke_z: f64,
+    pub converged: bool,
+}
+
+/// The persisted sampler-health report (`diagnostics.json`).
+#[derive(Debug, Clone)]
+pub struct DiagnosticsReport {
+    /// Total chain iterations observed (burn-in + sampling).
+    pub iterations: usize,
+    pub burnin: usize,
+    pub stats: Vec<StatDiag>,
+    /// FNV-1a digest of the final chain state (hex string in JSON).
+    pub state_hash: u64,
+    /// True when every tracked statistic passed both the R̂ and Geweke
+    /// thresholds.
+    pub converged: bool,
+}
+
+impl DiagnosticsReport {
+    pub fn to_json(&self) -> JsonValue {
+        let stats: Vec<JsonValue> = self
+            .stats
+            .iter()
+            .map(|s| {
+                JsonValue::obj(vec![
+                    ("view", JsonValue::str(&s.view)),
+                    ("stat", JsonValue::str(&s.stat)),
+                    ("n", JsonValue::num(s.n as f64)),
+                    ("mean", JsonValue::num(s.mean)),
+                    ("rhat", JsonValue::num(s.rhat)),
+                    ("ess", JsonValue::num(s.ess)),
+                    ("geweke_z", JsonValue::num(s.geweke_z)),
+                    ("converged", JsonValue::Bool(s.converged)),
+                ])
+            })
+            .collect();
+        JsonValue::obj(vec![
+            ("iterations", JsonValue::num(self.iterations as f64)),
+            ("burnin", JsonValue::num(self.burnin as f64)),
+            ("stats", JsonValue::Array(stats)),
+            ("state_hash", JsonValue::str(&format!("{:016x}", self.state_hash))),
+            ("converged", JsonValue::Bool(self.converged)),
+        ])
+    }
+
+    pub fn from_json(v: &JsonValue) -> anyhow::Result<DiagnosticsReport> {
+        let need = |k: &str| {
+            v.get(k).ok_or_else(|| anyhow::anyhow!("diagnostics.json: missing key '{k}'"))
+        };
+        let stats = need("stats")?
+            .as_array()
+            .ok_or_else(|| anyhow::anyhow!("diagnostics.json: 'stats' is not an array"))?
+            .iter()
+            .map(|s| {
+                let f = |k: &str| s.get(k).and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
+                let txt = |k: &str| s.get(k).and_then(|x| x.as_str()).unwrap_or("").to_string();
+                StatDiag {
+                    view: txt("view"),
+                    stat: txt("stat"),
+                    n: f("n") as usize,
+                    mean: f("mean"),
+                    rhat: f("rhat"),
+                    ess: f("ess"),
+                    geweke_z: f("geweke_z"),
+                    converged: s.get("converged").and_then(|x| x.as_bool()).unwrap_or(false),
+                }
+            })
+            .collect();
+        let hash_hex = need("state_hash")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("diagnostics.json: 'state_hash' is not a string"))?
+            .to_string();
+        Ok(DiagnosticsReport {
+            iterations: need("iterations")?.as_usize().unwrap_or(0),
+            burnin: need("burnin")?.as_usize().unwrap_or(0),
+            stats,
+            state_hash: u64::from_str_radix(&hash_hex, 16)
+                .map_err(|e| anyhow::anyhow!("diagnostics.json: bad state_hash: {e}"))?,
+            converged: need("converged")?.as_bool().unwrap_or(false),
+        })
+    }
+
+    /// Push the report into the obs registry as
+    /// `smurff_diag_rhat{view,stat}` / `smurff_diag_ess{view,stat}`
+    /// gauges plus a `smurff_diag_converged` 0/1 gauge, so any process
+    /// holding the report (trainer or server) exposes the same
+    /// families.
+    pub fn publish_gauges(&self) {
+        for s in &self.stats {
+            let labels = format!("{{view=\"{}\",stat=\"{}\"}}", s.view, s.stat);
+            crate::obs::gauge_set(&format!("smurff_diag_rhat{labels}"), s.rhat);
+            crate::obs::gauge_set(&format!("smurff_diag_ess{labels}"), s.ess);
+        }
+        crate::obs::gauge_set("smurff_diag_converged", if self.converged { 1.0 } else { 0.0 });
+    }
+
+    /// Fixed-width convergence table for `train --diag` / `smurff diag`.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "convergence diagnostics ({} iterations, {} burn-in, state hash {:016x})\n",
+            self.iterations, self.burnin, self.state_hash
+        ));
+        out.push_str(&format!(
+            "  {:<8} {:<10} {:>5} {:>12} {:>8} {:>8} {:>9}  {}\n",
+            "view", "stat", "n", "mean", "rhat", "ess", "geweke_z", "ok"
+        ));
+        for s in &self.stats {
+            out.push_str(&format!(
+                "  {:<8} {:<10} {:>5} {:>12.5} {:>8.4} {:>8.1} {:>9.3}  {}\n",
+                s.view,
+                s.stat,
+                s.n,
+                s.mean,
+                s.rhat,
+                s.ess,
+                s.geweke_z,
+                if s.converged { "yes" } else { "NO" }
+            ));
+        }
+        out.push_str(&format!(
+            "  chain {}\n",
+            if self.converged { "CONVERGED" } else { "NOT CONVERGED" }
+        ));
+        out
+    }
+}
+
+/// Re-publish diag gauges from an already-serialized `diagnostics.json`
+/// value — used by the serve layer so a freshly started server exposes
+/// `smurff_diag_*` for the artifact it loaded even though the training
+/// run happened in another process.
+pub fn publish_json_gauges(v: &JsonValue) {
+    if let Ok(rep) = DiagnosticsReport::from_json(v) {
+        rep.publish_gauges();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Reference FNV-1a 64: hash of empty input is the offset basis;
+        // hash of "a" is 0xaf63dc4c8601ec8c.
+        assert_eq!(StateHasher::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = StateHasher::new();
+        h.write_bytes(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn state_hash_detects_single_bit_flips() {
+        let a = vec![1.0, 2.0, 3.0];
+        let mut b = a.clone();
+        let h0 = state_hash_parts([a.as_slice()]);
+        assert_eq!(h0, state_hash_parts([b.as_slice()]), "identical state, identical hash");
+        b[1] = f64::from_bits(b[1].to_bits() ^ 1); // flip lowest mantissa bit
+        assert_ne!(h0, state_hash_parts([b.as_slice()]));
+        // Part boundaries matter: [1,2]+[3] must differ from [1]+[2,3]
+        // only if byte stream differs — it doesn't, FNV is stream-wise.
+        assert_eq!(h0, state_hash_parts([&a[..2], &a[2..]]));
+    }
+
+    #[test]
+    fn rhat_near_one_for_well_mixed_chain() {
+        let mut rng = Rng::new(7);
+        let mut xs = vec![0.0; 400];
+        rng.fill_normal(&mut xs);
+        let r = split_rhat(&xs);
+        assert!((r - 1.0).abs() < 0.05, "iid chain should give rhat ~ 1, got {r}");
+        assert!(geweke_z(&xs).abs() < GEWEKE_Z_BOUND);
+    }
+
+    #[test]
+    fn rhat_flags_trending_chain() {
+        // A steady drift: the two half-chains have very different means.
+        let xs: Vec<f64> = (0..200).map(|i| i as f64 * 0.1).collect();
+        let r = split_rhat(&xs);
+        assert!(r > RHAT_CONVERGED, "ramp should fail the rhat bound, got {r}");
+        assert!(geweke_z(&xs).abs() >= GEWEKE_Z_BOUND, "ramp should fail geweke");
+    }
+
+    #[test]
+    fn rhat_degenerate_series_is_one() {
+        assert_eq!(split_rhat(&[]), 1.0);
+        assert_eq!(split_rhat(&[1.0, 1.0, 1.0]), 1.0);
+        assert_eq!(split_rhat(&[5.0; 50]), 1.0);
+    }
+
+    #[test]
+    fn ess_bounds_hold() {
+        let mut rng = Rng::new(3);
+        let mut iid = vec![0.0; 300];
+        rng.fill_normal(&mut iid);
+        let e = effective_sample_size(&iid);
+        assert!((1.0..=300.0).contains(&e));
+        assert!(e > 150.0, "iid draws should be mostly effective, got {e}");
+
+        // AR(1) with high autocorrelation: ESS must collapse well below n.
+        let mut ar = vec![0.0; 300];
+        let mut noise = vec![0.0; 300];
+        rng.fill_normal(&mut noise);
+        for i in 1..300 {
+            ar[i] = 0.95 * ar[i - 1] + 0.1 * noise[i];
+        }
+        let ea = effective_sample_size(&ar);
+        assert!((1.0..=300.0).contains(&ea));
+        assert!(ea < e / 3.0, "sticky chain should have far fewer effective draws ({ea} vs {e})");
+
+        // Constant series: every draw is "effective".
+        assert_eq!(effective_sample_size(&[2.5; 64]), 64.0);
+    }
+
+    #[test]
+    fn monitor_report_round_trips_through_json() {
+        let mut m = ChainMonitor::new(2);
+        let mut rng = Rng::new(9);
+        let mut xs = vec![0.0; 40];
+        rng.fill_normal(&mut xs);
+        for (i, &x) in xs.iter().enumerate() {
+            let rmse = if i >= 2 { 1.0 + 0.01 * x } else { f64::NAN };
+            m.observe(&[("global", "u_frob", 10.0 + x), ("0", "rmse", rmse)]);
+        }
+        assert_eq!(m.iterations(), 40);
+        let rep = m.report(0xdead_beef);
+        assert_eq!(rep.iterations, 40);
+        assert_eq!(rep.stats.len(), 2);
+        let uf = rep.stats.iter().find(|s| s.stat == "u_frob").unwrap();
+        assert_eq!(uf.n, 38, "burn-in draws excluded");
+        let rm = rep.stats.iter().find(|s| s.stat == "rmse").unwrap();
+        assert_eq!(rm.n, 38, "late-starting series used whole");
+        assert!(rep.converged, "well-mixed synthetic chain should converge");
+
+        let j = rep.to_json();
+        let back = DiagnosticsReport::from_json(&JsonValue::parse(&j.to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.iterations, rep.iterations);
+        assert_eq!(back.burnin, rep.burnin);
+        assert_eq!(back.state_hash, rep.state_hash);
+        assert_eq!(back.converged, rep.converged);
+        assert_eq!(back.stats.len(), rep.stats.len());
+        for (a, b) in back.stats.iter().zip(&rep.stats) {
+            assert_eq!(a.view, b.view);
+            assert_eq!(a.stat, b.stat);
+            assert_eq!(a.n, b.n);
+            assert!((a.rhat - b.rhat).abs() < 1e-12);
+            assert!((a.ess - b.ess).abs() < 1e-9);
+        }
+        // Table renders every stat row.
+        let tbl = rep.render_table();
+        assert!(tbl.contains("u_frob") && tbl.contains("rmse") && tbl.contains("CONVERGED"));
+    }
+
+    #[test]
+    fn gauges_publish_labelled_families() {
+        crate::obs::set_enabled(true);
+        crate::obs::reset();
+        let mut m = ChainMonitor::new(0);
+        for i in 0..20 {
+            m.observe(&[("0", "alpha", 2.0 + 0.001 * (i % 3) as f64)]);
+        }
+        m.report(1).publish_gauges();
+        let text = crate::obs::render_prometheus();
+        assert!(text.contains("smurff_diag_rhat{view=\"0\",stat=\"alpha\"}"), "{text}");
+        assert!(text.contains("smurff_diag_ess{view=\"0\",stat=\"alpha\"}"), "{text}");
+        assert!(text.contains("smurff_diag_converged"), "{text}");
+    }
+}

@@ -165,6 +165,8 @@ struct LeadOut {
     rmse_history: Vec<f64>,
     store_path: Option<PathBuf>,
     nsnapshots: usize,
+    /// rank 0's sampler-health report when the run had `cfg.diag`
+    diagnostics: Option<crate::diag::DiagnosticsReport>,
 }
 
 struct WorkerOut {
@@ -383,6 +385,7 @@ impl DistributedSession {
             view_rmse: lead.view_rmse,
             store_path: lead.store_path,
             nsnapshots: lead.nsnapshots,
+            diagnostics: lead.diagnostics,
         };
         Ok(DistResult { result, nodes: self.spec.nodes, strategy: self.spec.strategy.name(), comm })
     }
@@ -531,11 +534,19 @@ fn worker_run(
     let timer = Timer::start();
     let mut sess = build_worker_session(parts);
     let nviews = sess.views.len();
-    // tag slots per iteration: U exchange + per view (V exchange, SSE)
-    let tags_per_iter = (1 + 2 * nviews) as u64;
+    // tag slots per iteration: U exchange + per view (V exchange, SSE) +
+    // the ISSUE 7 chain-state-hash exchange slot
+    let tags_per_iter = (2 + 2 * nviews) as u64;
     let my_rows = ctx.row_parts[rank].clone();
     let mut save_err: Option<anyhow::Error> = None;
     let mut rmse_history = Vec::new();
+    // ISSUE 7 diagnostics: hash the chain state at every coherent point
+    // and compare across ranks — sync must agree bit-for-bit, async and
+    // pprop report the observed divergence fraction as a gauge
+    let diag_on = sess.cfg.diag;
+    let mut hash_mismatch: Option<String> = None;
+    let mut hash_exchanges = 0u64;
+    let mut hash_divergences = 0u64;
 
     while sess.iteration() < ctx.total {
         let it = sess.iteration();
@@ -652,11 +663,44 @@ fn worker_run(
                 }
             }
         }
+        // ISSUE 7: exchange the 8-byte FNV-1a chain-state digest (one
+        // dedicated tag slot) — sync/async every iteration, pprop at its
+        // merge points.  Transported as the f64 with the same bit
+        // pattern; only `to_bits` is ever compared, so NaN payloads are
+        // harmless.  Strictly observational: the allgather adds traffic
+        // but reads no RNG and mutates no model state.
+        if diag_on {
+            let exchange = match ctx.strategy {
+                Strategy::PosteriorProp { .. } => coherent,
+                _ => true,
+            };
+            if exchange {
+                let h = sess.state_hash();
+                let hashes =
+                    comm.allgather(tag0 + (1 + 2 * nviews) as u64, vec![f64::from_bits(h)]);
+                let peers_diverged = hashes.iter().filter(|b| b[0].to_bits() != h).count();
+                hash_exchanges += 1;
+                hash_divergences += (peers_diverged > 0) as u64;
+                if peers_diverged > 0
+                    && matches!(ctx.strategy, Strategy::Sync)
+                    && hash_mismatch.is_none()
+                {
+                    // a sync replica diverging is a correctness bug, not
+                    // a statistics question — captured (not thrown) so
+                    // the comm protocol winds down cleanly first
+                    hash_mismatch = Some(format!(
+                        "sync chain-state divergence at iteration {it}: rank {rank} hash \
+                         {h:016x} disagrees with {peers_diverged} peer(s)"
+                    ));
+                }
+            }
+        }
         if rank == 0 && coherent {
             sess.aggregate_test_predictions();
         }
         sess.advance_iteration();
         if rank == 0 {
+            sess.diag_observe();
             if coherent && sess.iteration() > ctx.burnin {
                 let r = sess.view_rmse(0);
                 if !r.is_nan() {
@@ -684,8 +728,23 @@ fn worker_run(
     // keep every Comm alive until all traffic has landed: a rank that
     // finished early must not drop its inbox while peers still publish
     comm.barrier();
+    if diag_on && hash_exchanges > 0 {
+        // per-rank divergence fraction, labelled like the ISSUE 6 comm
+        // fold: 0 on sync (or the run would have failed), the observed
+        // staleness/independence magnitude on async/pprop
+        crate::obs::gauge_set(
+            &format!(
+                "smurff_dist_divergence{{strategy=\"{}\",rank=\"{rank}\"}}",
+                ctx.strategy.name()
+            ),
+            hash_divergences as f64 / hash_exchanges as f64,
+        );
+    }
     if let Some(e) = save_err {
         return Err(e);
+    }
+    if let Some(msg) = hash_mismatch {
+        return Err(anyhow::anyhow!(msg));
     }
     // rank 0 packs the merged store into the v3 serving artifact, same
     // as a single-node session's save path
@@ -694,12 +753,22 @@ fn worker_run(
             st.compact()?;
         }
     }
+    // rank 0's diagnostics report rides with the result and the store,
+    // exactly like a single-node `try_run`
+    let diagnostics = if rank == 0 { sess.diag_report() } else { None };
+    if let Some(rep) = &diagnostics {
+        rep.publish_gauges();
+        if let Some(st) = store.as_ref() {
+            st.save_diagnostics(&rep.to_json())?;
+        }
+    }
     let lead = (rank == 0).then(|| LeadOut {
         view_rmse: (0..nviews).map(|i| sess.view_rmse(i)).collect(),
         auc: sess.view_auc(0),
         rmse_history,
         store_path: store.as_ref().map(|s| s.dir().to_path_buf()),
         nsnapshots: store.as_ref().map(|s| s.len()).unwrap_or(0),
+        diagnostics,
     });
     Ok(WorkerOut {
         rank,
@@ -764,6 +833,55 @@ mod tests {
             assert_eq!(r.nodes, nodes);
             assert_eq!(r.comm.len(), nodes);
             assert!(r.total_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn sync_state_hashes_agree_across_ranks_and_match_single_node() {
+        // ISSUE 7: with diagnostics on, every sync iteration asserts
+        // bit-agreement of the FNV-1a chain-state digest across ranks
+        // (worker_run fails the run otherwise), and rank 0's final hash
+        // must equal the single-node chain's — same samples, same bits
+        let (train, test) = crate::data::movielens_like(50, 40, 1200, 0.2, 71);
+        let mut c = cfg(4, 3, 6, 71);
+        c.diag = true;
+        let mut single =
+            crate::session::TrainSession::bmf(train.clone(), Some(test.clone()), c.clone());
+        let r1 = single.run();
+        let h1 = r1.diagnostics.as_ref().expect("diag on").state_hash;
+        assert_eq!(h1, single.state_hash());
+        for nodes in [2, 3] {
+            let dist = bmf_builder(&train, &test, c.clone())
+                .distributed(nodes, Strategy::Sync, NetSpec::instant())
+                .build_distributed();
+            let r = dist.run().unwrap(); // per-iteration hash assert held
+            let rep = r.result.diagnostics.as_ref().expect("rank 0 reports");
+            assert_eq!(rep.state_hash, h1, "nodes={nodes}");
+            assert!(rep.iterations > 0);
+            assert!(rep.stats.iter().any(|s| s.stat == "rmse"));
+        }
+    }
+
+    #[test]
+    fn divergent_strategies_report_divergence_gauges_without_failing() {
+        // async replicas are transiently stale and pprop chains are
+        // independent between merges — diagnostics must *report* that
+        // as a labelled gauge, never fail the run
+        let (train, test) = crate::data::movielens_like(50, 40, 1200, 0.2, 72);
+        let mut c = cfg(4, 3, 6, 72);
+        c.diag = true;
+        for strategy in [Strategy::Async { staleness: 1 }, Strategy::PosteriorProp { rounds: 3 }] {
+            let name = strategy.name();
+            let dist = bmf_builder(&train, &test, c.clone())
+                .distributed(2, strategy, NetSpec::instant())
+                .build_distributed();
+            let r = dist.run().unwrap();
+            assert!(r.result.diagnostics.is_some(), "{name}: rank 0 still reports");
+            let text = crate::obs::render_prometheus();
+            assert!(
+                text.contains(&format!("smurff_dist_divergence{{strategy=\"{name}\"")),
+                "{name}: divergence gauge missing from exposition"
+            );
         }
     }
 

@@ -14,7 +14,13 @@
 //!               estimation, Prometheus text exposition, and span
 //!               tracing emitting Chrome trace-event JSON — every
 //!               layer below reports through it, and instrumentation
-//!               is sample-preserving by construction)
+//!               is sample-preserving by construction), [`diag`]
+//!               (sampler-health diagnostics: a `ChainMonitor` fed
+//!               per-iteration scalar summaries computing split-chain
+//!               R̂ / autocorrelation ESS / Geweke burn-in flags, plus
+//!               FNV-1a chain-state hashing that the distributed layer
+//!               compares across ranks at every sync point — like
+//!               [`obs`], strictly read-only over the model)
 //! * framework:  [`data`], [`noise`], [`priors`], [`model`], [`session`]
 //!               — sessions factorize both matrix views and N-mode
 //!               tensor views (CP/PARAFAC) with per-mode priors; the
@@ -93,6 +99,7 @@
 
 pub mod util;
 pub mod obs;
+pub mod diag;
 pub mod rng;
 pub mod linalg;
 pub mod sparse;
@@ -114,6 +121,7 @@ pub mod bench;
 /// Convenient glob-import surface for examples and downstream users.
 pub mod prelude {
     pub use crate::data::{MatrixConfig, SideInfo, TensorTestSet};
+    pub use crate::diag::{ChainMonitor, DiagnosticsReport};
     pub use crate::distributed::{DistResult, DistributedSession, NetSpec, Strategy};
     pub use crate::linalg::Mat;
     pub use crate::noise::NoiseConfig;

@@ -5,6 +5,7 @@
 //!   generate  write a synthetic dataset (ChEMBL-like / MovieLens-like)
 //!   bench     regenerate a paper table/figure or perf table
 //!             (fig3|fig4|fig5|gfa|macau|scaling|serving|sweep|table1|tensor)
+//!   diag      recompute convergence diagnostics from a saved store
 //!   info      show the AOT artifact manifest the runtime would use
 //!
 //! Examples:
@@ -21,7 +22,7 @@ use smurff::util::cli::Args;
 use smurff::util::config::Config;
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|bench|info> [flags]
+const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|bench|diag|info> [flags]
   train    --config <toml> | --data <mtx> [--test <mtx>] | --tensor <tns> [--test <tns>]
            | --synthetic <chembl|movielens>
            [--k N] [--burnin N] [--nsamples N] [--seed N] [--threads N]
@@ -30,6 +31,8 @@ const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|b
            [--checkpoint <dir>] [--verbose] [--save-dir <dir>] [--save-freq N]
            [--nodes N] [--comm sync|async[:S]|pprop[:R]] [--net instant|cluster]
            [--trace <out.json>]   (writes a chrome://tracing profile of the run)
+           [--diag]   (online convergence diagnostics: prints an R̂/ESS table,
+            persists diagnostics.json into the --save-dir store — sample-preserving)
   predict  --store <dir> [--view N] [--threads N]
            --row N --col N        pointwise prediction with uncertainty
            --row N --topk K       top-K column recommendations for a row
@@ -48,6 +51,8 @@ const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|b
            [--json <path>]   (writes the report to disk; --out is an alias;
             reports embed a metrics-registry snapshot with phase breakdowns)
            [--trace <out.json>]   (chrome://tracing profile of the bench run)
+  diag     --store <dir> [--json <path>]   recompute convergence diagnostics
+           (streaming split-R\u{302}, ESS, Geweke) from a store's snapshot sequence
   info     [--artifacts <dir>]";
 
 fn main() {
@@ -71,6 +76,7 @@ fn run() -> anyhow::Result<()> {
         "status",
         "metrics",
         "shutdown-server",
+        "diag",
     ])
     .map_err(anyhow::Error::msg)?;
     if args.get_bool("help") || args.positionals.is_empty() {
@@ -85,6 +91,7 @@ fn run() -> anyhow::Result<()> {
         "compact" => cmd_compact(&args),
         "generate" => cmd_generate(&args),
         "bench" => cmd_bench(&args),
+        "diag" => cmd_diag(&args),
         "info" => cmd_info(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
@@ -122,6 +129,7 @@ fn session_config_from_args(args: &Args) -> anyhow::Result<SessionConfig> {
         verbose: args.get_bool("verbose"),
         save_freq: args.get_usize("save-freq", 0).map_err(anyhow::Error::msg)?,
         save_dir: args.get("save-dir").map(PathBuf::from),
+        diag: args.get_bool("diag"),
         ..Default::default()
     })
 }
@@ -139,6 +147,7 @@ fn session_config_from_file(path: &Path) -> anyhow::Result<(SessionConfig, Confi
         "session.engine",
         "session.save_freq",
         "session.save_dir",
+        "session.diag",
         "data.train",
         "data.test",
         "data.side",
@@ -158,6 +167,7 @@ fn session_config_from_file(path: &Path) -> anyhow::Result<(SessionConfig, Confi
         verbose: cfg.get_bool("session.verbose", false),
         save_freq: cfg.get_usize("session.save_freq", 0),
         save_dir: if save_dir.is_empty() { None } else { Some(PathBuf::from(save_dir)) },
+        diag: cfg.get_bool("session.diag", false),
         ..Default::default()
     };
     Ok((sc, cfg))
@@ -274,6 +284,9 @@ fn cmd_train_tensor(args: &Args, path: &str) -> anyhow::Result<()> {
     );
     if result.rmse.is_finite() {
         println!("test RMSE = {:.4}", result.rmse);
+    }
+    if let Some(rep) = &result.diagnostics {
+        println!("{}", rep.render_table());
     }
     if let Some(p) = &trace {
         write_trace(p)?;
@@ -418,6 +431,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if result.auc.is_finite() {
         println!("test AUC  = {:.4}", result.auc);
     }
+    if let Some(rep) = &result.diagnostics {
+        println!("{}", rep.render_table());
+    }
     if let Some(p) = &trace {
         write_trace(p)?;
     }
@@ -480,6 +496,9 @@ fn run_distributed(
     );
     if r.result.rmse.is_finite() {
         println!("test RMSE = {:.4}", r.result.rmse);
+    }
+    if let Some(rep) = &r.result.diagnostics {
+        println!("{}", rep.render_table());
     }
     Ok(())
 }
@@ -706,6 +725,61 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(p) = &trace {
         write_trace(p)?;
+    }
+    Ok(())
+}
+
+/// Offline diagnostics: replay a store's saved snapshot sequence
+/// through the same [`smurff::diag::ChainMonitor`] the trainer uses —
+/// one observation per snapshot (all post-burn-in samples, so the
+/// monitor runs with burn-in 0) — and print the convergence table.
+fn cmd_diag(args: &Args) -> anyhow::Result<()> {
+    let store = args
+        .get("store")
+        .ok_or_else(|| anyhow::anyhow!("diag needs --store <dir>\n{USAGE}"))?;
+    let s = smurff::store::ModelStore::open(Path::new(store))?;
+    if s.is_empty() {
+        anyhow::bail!("{store} holds no snapshots to diagnose");
+    }
+    let mut monitor = smurff::diag::ChainMonitor::new(0);
+    let mut last_hash = 0u64;
+    for i in 0..s.len() {
+        let snap = s.load_snapshot(i)?;
+        let mut stats: Vec<(String, String, f64)> = Vec::new();
+        stats.push(("global".into(), "u_frob".into(), smurff::diag::frobenius(snap.u.data())));
+        // vs holds one factor matrix per non-shared mode, grouped by
+        // view in mode order — a matrix view contributes exactly its V
+        for (mi, v) in snap.vs.iter().enumerate() {
+            stats.push((mi.to_string(), "v_frob".into(), smurff::diag::frobenius(v.data())));
+        }
+        for (vi, a) in snap.alphas.iter().enumerate() {
+            stats.push((vi.to_string(), "alpha".into(), *a));
+        }
+        let refs: Vec<(&str, &str, f64)> =
+            stats.iter().map(|(v, st, x)| (v.as_str(), st.as_str(), *x)).collect();
+        monitor.observe(&refs);
+        if i + 1 == s.len() {
+            let mut h = smurff::diag::StateHasher::new();
+            h.write_f64s(snap.u.data());
+            for v in &snap.vs {
+                h.write_f64s(v.data());
+            }
+            for a in &snap.alphas {
+                h.write_f64(*a);
+            }
+            last_hash = h.finish();
+        }
+    }
+    let rep = monitor.report(last_hash);
+    println!(
+        "{store}: {} snapshots, state hash {:016x}",
+        s.len(),
+        rep.state_hash
+    );
+    println!("{}", rep.render_table());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, rep.to_json().to_string_pretty())?;
+        println!("wrote {path}");
     }
     Ok(())
 }

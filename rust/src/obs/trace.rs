@@ -79,6 +79,9 @@ fn push(ev: Event) {
     let mut b = buf().lock().unwrap();
     if b.events.len() >= MAX_EVENTS {
         DROPPED.fetch_add(1, Ordering::Relaxed);
+        // Mirror into the registry so buffer saturation is scrapeable,
+        // not only visible inside the trace file (ISSUE 7 satellite).
+        crate::obs::counter_add("smurff_trace_dropped_total", 1);
         return;
     }
     b.events.push(ev);

@@ -258,6 +258,21 @@ struct Engine {
     stop: AtomicBool,
     metrics: ServeMetrics,
     cfg: ServeConfig,
+    /// server start time, reported as `uptime_seconds` by `status`
+    started: Instant,
+    /// the training run's `diagnostics.json` from the store (ISSUE 7) —
+    /// refreshed on hot reload and republished as `smurff_diag_*`
+    /// gauges, so a scrape of the *serve* process sees the convergence
+    /// health of the model it is serving
+    diagnostics: Mutex<Option<JsonValue>>,
+}
+
+/// Read `diagnostics.json` from the store, if the training run wrote
+/// one, and republish its R̂/ESS gauges into this process's registry.
+fn load_store_diagnostics(dir: &Path) -> Option<JsonValue> {
+    let diag = crate::store::ModelStore::open(dir).ok()?.load_diagnostics().ok()??;
+    crate::diag::publish_json_gauges(&diag);
+    Some(diag)
 }
 
 impl Engine {
@@ -278,6 +293,12 @@ impl Engine {
         let swapped = current.with_model(model);
         *self.session.lock().unwrap() = Arc::new(swapped);
         self.metrics.reloads.add(1);
+        // pick up the training run's refreshed diagnostics too (kept if
+        // the new store has not written its report yet — a run only
+        // persists diagnostics.json at the end)
+        if let Some(d) = load_store_diagnostics(&self.store_dir) {
+            *self.diagnostics.lock().unwrap() = Some(d);
+        }
         crate::log_info!(
             "serve: hot-reloaded model from {} ({} samples)",
             self.store_dir.display(),
@@ -371,10 +392,19 @@ impl Engine {
                 "iterations",
                 JsonValue::arr_usize(s.model().iterations()),
             ),
+            ("uptime_seconds", JsonValue::num(self.started.elapsed().as_secs_f64())),
+            ("version", JsonValue::str(env!("CARGO_PKG_VERSION"))),
+            ("snapshots", JsonValue::num(s.nsamples() as f64)),
         ];
         if s.nviews() > 0 && s.nmodes(0) == 2 {
             pairs.push(("ncols", JsonValue::num(s.ncols(0) as f64)));
         }
+        // the training run's convergence report, verbatim (null until a
+        // run persists one into this store)
+        pairs.push((
+            "diagnostics",
+            self.diagnostics.lock().unwrap().clone().unwrap_or(JsonValue::Null),
+        ));
         JsonValue::obj(pairs)
     }
 }
@@ -666,6 +696,8 @@ pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle>
         stop: AtomicBool::new(false),
         metrics: ServeMetrics::new(),
         cfg: cfg.clone(),
+        started: Instant::now(),
+        diagnostics: Mutex::new(load_store_diagnostics(store_dir)),
     });
     let mut threads = Vec::new();
 
@@ -837,6 +869,7 @@ mod tests {
             threads: 1,
             save_freq: 1,
             save_dir: Some(dir.clone()),
+            diag: true, // so the store carries diagnostics.json (ISSUE 7)
             ..Default::default()
         };
         TrainSession::bmf(train, None, cfg).run();
@@ -886,6 +919,14 @@ mod tests {
         assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(st.get("samples").unwrap().as_usize(), Some(5));
         assert_eq!(st.get("nrows").unwrap().as_usize(), Some(40));
+        // ISSUE 7 satellite: uptime / version / snapshot count
+        assert!(st.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(st.get("version").unwrap().as_str(), Some(env!("CARGO_PKG_VERSION")));
+        assert_eq!(st.get("snapshots").unwrap().as_usize(), Some(5));
+        // and the training run's convergence report, served verbatim
+        let diag = st.get("diagnostics").expect("diagnostics block");
+        assert_eq!(diag.get("iterations").unwrap().as_usize(), Some(8)); // 3 burn-in + 5
+        assert!(!diag.get("stats").unwrap().as_array().unwrap().is_empty());
 
         // pointwise: identical to the in-process engine
         let p = c.roundtrip(r#"{"op":"predict","view":0,"row":3,"col":7}"#);
@@ -1029,6 +1070,10 @@ mod tests {
         assert!(text.contains("# TYPE smurff_serve_latency_seconds histogram"));
         // training in tiny_store ran in-process: train families present
         assert!(text.contains("smurff_train_iterations_total"));
+        // diagnostics gauges republished from the store's
+        // diagnostics.json at server start (ISSUE 7) — what the CI
+        // smoke job scrapes from the standalone serve process
+        assert!(text.contains("smurff_diag_rhat"), "diag gauges missing:\n{text}");
         handle.stop();
     }
 

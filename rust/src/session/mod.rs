@@ -60,6 +60,12 @@ pub struct SessionConfig {
     pub save_freq: usize,
     /// posterior model-store directory (required when `save_freq > 0`)
     pub save_dir: Option<PathBuf>,
+    /// collect sampler-health diagnostics ([`crate::diag`]): per-iteration
+    /// scalar summaries feed a `ChainMonitor`, and the run's
+    /// `TrainResult` / store gain a `diagnostics.json` report.  Strictly
+    /// read-only over the chain (asserted bit-exactly by
+    /// `diag_preserves_samples_bit_identically`).
+    pub diag: bool,
 }
 
 impl Default for SessionConfig {
@@ -75,6 +81,7 @@ impl Default for SessionConfig {
             report_freq: 10,
             save_freq: 0,
             save_dir: None,
+            diag: false,
         }
     }
 }
@@ -213,6 +220,9 @@ pub struct TrainResult {
     pub store_path: Option<PathBuf>,
     /// number of posterior snapshots persisted to `store_path`
     pub nsnapshots: usize,
+    /// sampler-health report when the session ran with `cfg.diag`
+    /// (also persisted as `diagnostics.json` when a store was written)
+    pub diagnostics: Option<crate::diag::DiagnosticsReport>,
 }
 
 /// Builder: the composition surface of Table 1, plus N-mode tensor
@@ -487,6 +497,7 @@ impl SessionBuilder {
         } else {
             self.cfg.threads
         };
+        let monitor = self.cfg.diag.then(|| crate::diag::ChainMonitor::new(self.cfg.burnin));
         TrainSession {
             cfg: self.cfg,
             u,
@@ -498,6 +509,7 @@ impl SessionBuilder {
             // snapshot the sweep tuning once: a session's fuse decision
             // must not change mid-chain
             tuning: self.tuning.unwrap_or_else(SweepTuning::global),
+            monitor,
         }
     }
 }
@@ -543,6 +555,9 @@ pub struct TrainSession {
     iteration: usize,
     /// sweep tuning snapshotted at build time (see [`SweepTuning`])
     tuning: SweepTuning,
+    /// convergence monitor, present when `cfg.diag` is set — fed one
+    /// read-only set of scalar summaries per iteration
+    monitor: Option<crate::diag::ChainMonitor>,
 }
 
 impl TrainSession {
@@ -663,6 +678,75 @@ impl TrainSession {
         }
         self.iteration += 1;
         crate::obs::counter_add("smurff_train_iterations_total", 1);
+        self.diag_observe();
+    }
+
+    /// Feed the convergence monitor this iteration's scalar summaries
+    /// (no-op without `cfg.diag`).  Like the rest of the ISSUE 6/7
+    /// instrumentation this is *passive*: it only reads factors, noise
+    /// and hyperprior state — no RNG stream is touched and no float sum
+    /// of the chain is reordered, so the sampled chain is bit-identical
+    /// with diagnostics on or off.  Distributed workers composing the
+    /// sub-steps manually call this themselves at coherent points.
+    pub fn diag_observe(&mut self) {
+        if self.monitor.is_none() {
+            return;
+        }
+        let mut stats: Vec<(String, String, f64)> = Vec::new();
+        stats.push(("global".into(), "u_frob".into(), crate::diag::frobenius(self.u.data())));
+        if let Some(spec) = self.row_prior.mvn_spec() {
+            let mu = match spec.means {
+                crate::priors::MeanSpec::Shared(m) => crate::util::mean(m),
+                crate::priors::MeanSpec::PerRow(m) => crate::util::mean(m.data()),
+            };
+            stats.push(("global".into(), "hyper_mean".into(), mu));
+        }
+        for (vi, view) in self.views.iter().enumerate() {
+            let v = vi.to_string();
+            for (m, mf) in view.modes.iter().enumerate() {
+                stats.push((
+                    v.clone(),
+                    format!("frob_m{}", m + 1),
+                    crate::diag::frobenius(mf.latents.data()),
+                ));
+            }
+            stats.push((v.clone(), "alpha".into(), view.noise.alpha()));
+        }
+        for vi in 0..self.views.len() {
+            // NaN before the first posterior sample; the monitor skips it
+            stats.push((vi.to_string(), "rmse".into(), self.view_rmse(vi)));
+        }
+        let refs: Vec<(&str, &str, f64)> =
+            stats.iter().map(|(v, s, x)| (v.as_str(), s.as_str(), *x)).collect();
+        self.monitor.as_mut().expect("checked above").observe(&refs);
+    }
+
+    /// FNV-1a digest of the full chain state: shared factors, every
+    /// further mode's factors, per-view noise precision, and the Macau
+    /// link model when present.  Two sessions holding bit-identical
+    /// chains hash identically — the distributed layer compares this
+    /// across ranks at every sync point.
+    pub fn state_hash(&self) -> u64 {
+        let mut h = crate::diag::StateHasher::new();
+        h.write_f64s(self.u.data());
+        for view in &self.views {
+            for mf in &view.modes {
+                h.write_f64s(mf.latents.data());
+            }
+            h.write_f64(view.noise.alpha());
+        }
+        if let Some(l) = self.row_prior.link_spec() {
+            h.write_f64s(l.beta.data());
+            h.write_f64s(l.mu);
+            h.write_f64(l.lambda_beta);
+        }
+        h.finish()
+    }
+
+    /// The diagnostics report for the chain observed so far (`None`
+    /// without `cfg.diag`), stamped with the current [`state_hash`](TrainSession::state_hash).
+    pub fn diag_report(&self) -> Option<crate::diag::DiagnosticsReport> {
+        self.monitor.as_ref().map(|m| m.report(self.state_hash()))
     }
 
     /// The deterministic hyper-parameter RNG stream for the current
@@ -1038,6 +1122,16 @@ impl TrainSession {
                 st.compact()?;
             }
         }
+        // ISSUE 7: the sampler-health report rides along with the run —
+        // published as smurff_diag_* gauges and persisted next to the
+        // store manifest for `smurff diag` / the serve status verb
+        let diagnostics = self.diag_report();
+        if let Some(rep) = &diagnostics {
+            rep.publish_gauges();
+            if let Some(st) = store.as_ref() {
+                st.save_diagnostics(&rep.to_json())?;
+            }
+        }
         let view_rmse: Vec<f64> = (0..self.views.len()).map(|i| self.view_rmse(i)).collect();
         let auc = self.view_auc(0);
         Ok(TrainResult {
@@ -1049,6 +1143,7 @@ impl TrainSession {
             view_rmse,
             store_path: store.as_ref().map(|s| s.dir().to_path_buf()),
             nsnapshots: store.as_ref().map(|s| s.len()).unwrap_or(0),
+            diagnostics,
         })
     }
 
@@ -1297,6 +1392,80 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: V bit-diverged");
             }
         }
+    }
+
+    #[test]
+    fn diag_preserves_samples_bit_identically() {
+        // ISSUE 7's counterpart of the tracing invariance test: the
+        // convergence monitor only *reads* the chain, so the same
+        // adaptive-noise session (fused-SSE path exercised) with
+        // diagnostics off and on must produce factors identical down to
+        // the bit pattern, at every pool size.
+        let (train, _) = crate::data::movielens_like(50, 40, 1200, 0.0, 11);
+        for &threads in &[1usize, 4, 7] {
+            let run = |diag_on: bool| {
+                let mut cfg = quick_cfg(4, 2, 4);
+                cfg.threads = threads;
+                cfg.diag = diag_on;
+                let mut s = SessionBuilder::new(cfg)
+                    .add_view(
+                        MatrixConfig::SparseUnknown(train.clone()),
+                        NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 50.0 },
+                        None,
+                    )
+                    .build();
+                for _ in 0..6 {
+                    s.step();
+                }
+                s
+            };
+            let off = run(false);
+            let on = run(true);
+            assert!(off.monitor.is_none());
+            assert_eq!(on.monitor.as_ref().unwrap().iterations(), 6);
+            for (a, b) in off.u.data().iter().zip(on.u.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: U bit-diverged");
+            }
+            for (a, b) in
+                off.views[0].col_latents().data().iter().zip(on.views[0].col_latents().data())
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "{threads} threads: V bit-diverged");
+            }
+            assert_eq!(
+                off.state_hash(),
+                on.state_hash(),
+                "{threads} threads: state hash diverged"
+            );
+            assert!(on.diag_report().unwrap().stats.iter().all(|s| s.rhat.is_finite()));
+        }
+    }
+
+    #[test]
+    fn diag_report_persists_into_store_and_result() {
+        let (train, test) = crate::data::movielens_like(50, 40, 1_000, 0.2, 13);
+        let dir = store_scratch("diag");
+        let mut cfg = quick_cfg(4, 3, 8);
+        cfg.save_freq = 2;
+        cfg.save_dir = Some(dir.clone());
+        cfg.diag = true;
+        let mut s = TrainSession::bmf(train, Some(test), cfg);
+        let r = s.run();
+        let rep = r.diagnostics.as_ref().expect("diag run must yield a report");
+        assert_eq!(rep.iterations, 11);
+        assert_eq!(rep.burnin, 3);
+        assert!(rep.stats.iter().any(|st| st.stat == "rmse"));
+        assert!(rep.stats.iter().any(|st| st.stat == "u_frob"));
+        assert!(rep.stats.iter().any(|st| st.stat == "alpha"));
+        assert!(rep.stats.iter().all(|st| st.rhat.is_finite() && st.ess >= 1.0));
+        assert_eq!(rep.state_hash, s.state_hash(), "report stamps the final chain state");
+
+        // round-trip through the store's diagnostics.json
+        let store = crate::store::ModelStore::open(&dir).unwrap();
+        let j = store.load_diagnostics().unwrap().expect("diagnostics.json written");
+        let back = crate::diag::DiagnosticsReport::from_json(&j).unwrap();
+        assert_eq!(back.state_hash, rep.state_hash);
+        assert_eq!(back.iterations, rep.iterations);
+        assert_eq!(back.stats.len(), rep.stats.len());
     }
 
     #[test]

@@ -61,6 +61,9 @@ pub const STORE_FORMAT: &str = "smurff-model-store";
 /// Version-1 and version-2 stores still load (every v1 view maps to a
 /// single-mode list, and the flat factor-file numbering is unchanged).
 pub const STORE_VERSION: usize = 3;
+/// Sampler-health report written next to the manifest by diag-enabled
+/// training runs (ISSUE 7) — absent on stores trained without `--diag`.
+pub const DIAGNOSTICS_FILE: &str = "diagnostics.json";
 
 /// Immutable description of the model a store holds (shapes + the
 /// prediction constants that do not vary per sample).
@@ -371,6 +374,36 @@ impl ModelStore {
     /// Iterations at which samples were taken, ascending.
     pub fn iterations(&self) -> Vec<usize> {
         self.snapshots.iter().map(|s| s.iteration).collect()
+    }
+
+    /// Path of the sampler-health report living next to the manifest.
+    pub fn diagnostics_path(&self) -> PathBuf {
+        self.dir.join(DIAGNOSTICS_FILE)
+    }
+
+    /// Persist a [`crate::diag::DiagnosticsReport`]'s JSON as
+    /// `diagnostics.json` alongside the manifest (ISSUE 7).  Same
+    /// write-then-rename discipline as the manifest, so readers (the
+    /// serve status verb, `smurff diag`) never see a torn report.
+    pub fn save_diagnostics(&self, report: &JsonValue) -> anyhow::Result<()> {
+        let tmp = self.dir.join("diagnostics.json.tmp");
+        std::fs::write(&tmp, report.to_string_pretty())?;
+        std::fs::rename(&tmp, self.diagnostics_path())?;
+        Ok(())
+    }
+
+    /// Load the persisted `diagnostics.json` (`Ok(None)` when the store
+    /// has no report — diagnostics are opt-in at training time).
+    pub fn load_diagnostics(&self) -> anyhow::Result<Option<JsonValue>> {
+        let path = self.diagnostics_path();
+        if !path.exists() {
+            return Ok(None);
+        }
+        let src = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        Ok(Some(
+            JsonValue::parse(&src).map_err(|e| anyhow::anyhow!("bad diagnostics.json: {e}"))?,
+        ))
     }
 
     fn write_manifest(&self) -> anyhow::Result<()> {
@@ -1019,6 +1052,29 @@ mod tests {
         let again = ModelStore::open(&dir).unwrap();
         assert!(again.is_packed());
         assert_eq!(again.load_snapshot(0).unwrap().u.max_abs_diff(&s1.u), 0.0);
+    }
+
+    #[test]
+    fn diagnostics_json_round_trips_next_to_the_manifest() {
+        let dir = scratch("diagjson");
+        let mut rng = Rng::new(95);
+        let mut store = ModelStore::create(&dir, meta(5, 2, &[3], 0)).unwrap();
+        assert_eq!(store.load_diagnostics().unwrap(), None, "absent before any save");
+        store.save_snapshot(&random_snapshot(&mut rng, 1, 5, 2, &[3])).unwrap();
+        let report = JsonValue::obj(vec![
+            ("iterations", JsonValue::num(6.0)),
+            ("burnin", JsonValue::num(2.0)),
+            ("stats", JsonValue::Array(vec![])),
+            ("state_hash", JsonValue::str("00000000deadbeef")),
+            ("converged", JsonValue::Bool(false)),
+        ]);
+        store.save_diagnostics(&report).unwrap();
+        assert!(dir.join(DIAGNOSTICS_FILE).exists());
+        // survives a fresh open, parses back identically
+        let loaded = ModelStore::open(&dir).unwrap().load_diagnostics().unwrap().unwrap();
+        assert_eq!(loaded, report);
+        // and the manifest/snapshots are untouched
+        assert_eq!(ModelStore::open(&dir).unwrap().len(), 1);
     }
 
     #[test]
