@@ -19,7 +19,9 @@
 //!  * [`StateHasher`] / [`state_hash_parts`] — FNV-1a over the
 //!    little-endian bytes of factor/hyper state.  Cheap enough to run
 //!    every iteration; `DistributedSession` exchanges the 8-byte digest
-//!    at every coherent point so the sync strategy can *assert*
+//!    paced by each strategy's own communication discipline (sync
+//!    allgathers per iteration, async stale-publishes without blocking,
+//!    pprop compares at merge points) so the sync strategy can *assert*
 //!    bit-agreement across ranks and async/pprop can report a
 //!    divergence magnitude as `smurff_dist_divergence{strategy,rank}`.
 //!
@@ -43,7 +45,7 @@ pub const GEWEKE_Z_BOUND: f64 = 2.0;
 // ---------------------------------------------------------------------------
 
 const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x1000_0000_01b3;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
 
 /// Incremental FNV-1a 64-bit hasher over little-endian `f64` bytes.
 ///

@@ -547,6 +547,10 @@ fn worker_run(
     let mut hash_mismatch: Option<String> = None;
     let mut hash_exchanges = 0u64;
     let mut hash_divergences = 0u64;
+    // async only: this rank's per-iteration digests, so a peer hash read
+    // `staleness` iterations late is compared against our own state at
+    // that same past iteration
+    let mut my_hashes: Vec<u64> = Vec::new();
 
     while sess.iteration() < ctx.total {
         let it = sess.iteration();
@@ -664,34 +668,64 @@ fn worker_run(
             }
         }
         // ISSUE 7: exchange the 8-byte FNV-1a chain-state digest (one
-        // dedicated tag slot) — sync/async every iteration, pprop at its
-        // merge points.  Transported as the f64 with the same bit
+        // dedicated tag slot).  Transported as the f64 with the same bit
         // pattern; only `to_bits` is ever compared, so NaN payloads are
-        // harmless.  Strictly observational: the allgather adds traffic
-        // but reads no RNG and mutates no model state.
+        // harmless.  Strictly observational: the exchange adds traffic
+        // but reads no RNG and mutates no model state.  Pacing matches
+        // each strategy's own discipline so --diag cannot change it:
+        // sync allgathers (it is lockstep anyway), async publishes
+        // without waiting and reads peer digests `staleness` iterations
+        // late — comparing them against our own digest at that same past
+        // iteration — and pprop only compares at its merge points.
         if diag_on {
-            let exchange = match ctx.strategy {
-                Strategy::PosteriorProp { .. } => coherent,
-                _ => true,
-            };
-            if exchange {
-                let h = sess.state_hash();
-                let hashes =
-                    comm.allgather(tag0 + (1 + 2 * nviews) as u64, vec![f64::from_bits(h)]);
-                let peers_diverged = hashes.iter().filter(|b| b[0].to_bits() != h).count();
-                hash_exchanges += 1;
-                hash_divergences += (peers_diverged > 0) as u64;
-                if peers_diverged > 0
-                    && matches!(ctx.strategy, Strategy::Sync)
-                    && hash_mismatch.is_none()
-                {
-                    // a sync replica diverging is a correctness bug, not
-                    // a statistics question — captured (not thrown) so
-                    // the comm protocol winds down cleanly first
-                    hash_mismatch = Some(format!(
-                        "sync chain-state divergence at iteration {it}: rank {rank} hash \
-                         {h:016x} disagrees with {peers_diverged} peer(s)"
-                    ));
+            let hash_slot = tags_per_iter - 1;
+            match ctx.strategy {
+                Strategy::Sync => {
+                    let h = sess.state_hash();
+                    let hashes = comm.allgather(tag0 + hash_slot, vec![f64::from_bits(h)]);
+                    let peers_diverged = hashes.iter().filter(|b| b[0].to_bits() != h).count();
+                    hash_exchanges += 1;
+                    hash_divergences += (peers_diverged > 0) as u64;
+                    if peers_diverged > 0 && hash_mismatch.is_none() {
+                        // a sync replica diverging is a correctness bug,
+                        // not a statistics question — captured (not
+                        // thrown) so the comm protocol winds down cleanly
+                        hash_mismatch = Some(format!(
+                            "sync chain-state divergence at iteration {it}: rank {rank} hash \
+                             {h:016x} disagrees with {peers_diverged} peer(s)"
+                        ));
+                    }
+                }
+                Strategy::Async { staleness } => {
+                    let stale = staleness.max(1) as u64;
+                    let h = sess.state_hash();
+                    my_hashes.push(h);
+                    for peer in 0..comm.size {
+                        if peer != rank {
+                            comm.send(peer, tag0 + hash_slot, vec![f64::from_bits(h)]);
+                        }
+                    }
+                    if itu >= stale {
+                        let old = (itu - stale) * tags_per_iter + hash_slot;
+                        let mine_then = my_hashes[(itu - stale) as usize];
+                        let mut peers_diverged = 0usize;
+                        for _ in 0..comm.size - 1 {
+                            let b = comm.recv(old);
+                            peers_diverged += (b.data[0].to_bits() != mine_then) as usize;
+                        }
+                        hash_exchanges += 1;
+                        hash_divergences += (peers_diverged > 0) as u64;
+                    }
+                }
+                Strategy::PosteriorProp { .. } => {
+                    if coherent {
+                        let h = sess.state_hash();
+                        let hashes = comm.allgather(tag0 + hash_slot, vec![f64::from_bits(h)]);
+                        let peers_diverged =
+                            hashes.iter().filter(|b| b[0].to_bits() != h).count();
+                        hash_exchanges += 1;
+                        hash_divergences += (peers_diverged > 0) as u64;
+                    }
                 }
             }
         }

@@ -743,14 +743,24 @@ fn cmd_diag(args: &Args) -> anyhow::Result<()> {
     }
     let mut monitor = smurff::diag::ChainMonitor::new(0);
     let mut last_hash = 0u64;
+    let meta = s.meta().clone();
     for i in 0..s.len() {
         let snap = s.load_snapshot(i)?;
         let mut stats: Vec<(String, String, f64)> = Vec::new();
         stats.push(("global".into(), "u_frob".into(), smurff::diag::frobenius(snap.u.data())));
         // vs holds one factor matrix per non-shared mode, grouped by
-        // view in mode order — a matrix view contributes exactly its V
-        for (mi, v) in snap.vs.iter().enumerate() {
-            stats.push((mi.to_string(), "v_frob".into(), smurff::diag::frobenius(v.data())));
+        // view in mode order: recover (view, mode) from the manifest's
+        // view_dims so labels match the online monitor's `frob_m{n}`
+        // keyed by the true view index
+        for (vi, dims) in meta.view_dims.iter().enumerate() {
+            let base = meta.vs_offset(vi);
+            for m in 0..dims.len() {
+                stats.push((
+                    vi.to_string(),
+                    format!("frob_m{}", m + 1),
+                    smurff::diag::frobenius(snap.vs[base + m].data()),
+                ));
+            }
         }
         for (vi, a) in snap.alphas.iter().enumerate() {
             stats.push((vi.to_string(), "alpha".into(), *a));
@@ -759,13 +769,24 @@ fn cmd_diag(args: &Args) -> anyhow::Result<()> {
             stats.iter().map(|(v, st, x)| (v.as_str(), st.as_str(), *x)).collect();
         monitor.observe(&refs);
         if i + 1 == s.len() {
+            // same digest order as TrainSession::state_hash — shared U,
+            // then per view its mode latents followed by alpha, then the
+            // Macau link model — so the value printed here matches the
+            // state_hash in diagnostics.json when the last snapshot
+            // coincides with the final chain state
             let mut h = smurff::diag::StateHasher::new();
             h.write_f64s(snap.u.data());
-            for v in &snap.vs {
-                h.write_f64s(v.data());
+            for (vi, dims) in meta.view_dims.iter().enumerate() {
+                let base = meta.vs_offset(vi);
+                for m in 0..dims.len() {
+                    h.write_f64s(snap.vs[base + m].data());
+                }
+                h.write_f64(snap.alphas.get(vi).copied().unwrap_or(f64::NAN));
             }
-            for a in &snap.alphas {
-                h.write_f64(*a);
+            if let Some(l) = &snap.link {
+                h.write_f64s(l.beta.data());
+                h.write_f64s(&l.mu);
+                h.write_f64(l.lambda_beta);
             }
             last_hash = h.finish();
         }
