@@ -106,6 +106,9 @@ impl Report {
     pub fn to_json(&self) -> JsonValue {
         JsonValue::obj(vec![
             ("name", JsonValue::str(&self.name)),
+            // the machine the numbers came from: arch, vector features,
+            // selected kernel ISA (ISSUE 8)
+            ("host", JsonValue::str(&crate::hwmodel::describe_host())),
             ("tables", JsonValue::Array(self.tables.iter().map(|t| t.to_json()).collect())),
             // Registry snapshot: phase counters/histograms accumulated while
             // the bench ran, so BENCH_*.json carries a breakdown alongside
@@ -117,7 +120,10 @@ impl Report {
 }
 
 /// Dispatch used by `smurff bench <name>` and the bench wrappers.
+/// Prints the host line first so every bench log records which CPU and
+/// kernel ISA produced the numbers.
 pub fn run_by_name(name: &str, quick: bool) -> anyhow::Result<Report> {
+    println!("{}", crate::hwmodel::describe_host());
     match name {
         "fig3" => Ok(fig3::run(quick)),
         "fig4" => Ok(fig4::run(quick)),

@@ -2,7 +2,7 @@
 //! once a posterior store is on disk — the ROADMAP's "serve heavy
 //! traffic" axis, measured the same way the paper-figure benches are.
 //!
-//! Four tables:
+//! Five tables:
 //! * pointwise QPS with p50/p99 per-request latency vs. samples served
 //!   (the numbers a serving SLO is written against);
 //! * the **batched vs. seed-scalar sweep** over samples × batch — the
@@ -11,7 +11,8 @@
 //!   (owned per-snapshot `Mat`s, one scalar `dot` per (sample, cell));
 //! * top-K recommendations/s (one `dots_into` panel pass per sample vs.
 //!   the seed per-candidate loop);
-//! * dense-block GEMM throughput (cells/s) over a samples × batch sweep.
+//! * dense-block GEMM throughput (cells/s) over a samples × batch sweep;
+//! * the `dots_into` panel kernel, scalar twin vs SIMD (ISSUE 8).
 
 use super::{Report, Table};
 use crate::linalg::dot;
@@ -164,6 +165,9 @@ pub fn run(quick: bool) -> Report {
             let batched = ps.predict_cells_mean(0, &rows, &cols);
             let batched_rate = b as f64 / timer.elapsed_s() / 1e6;
             assert_eq!(scalar.len(), batched.len());
+            // bitwise: both paths dispatch `dot` on the same process
+            // global, so within one run they share a kernel family —
+            // ISA-uniform by construction (see linalg::simd docs)
             for (a, g) in scalar.iter().zip(&batched) {
                 assert_eq!(a.to_bits(), g.to_bits(), "batched path must match the seed path");
             }
@@ -227,6 +231,50 @@ pub fn run(quick: bool) -> Report {
                 format!("{rate:.2}"),
             ]);
         }
+    }
+    report.push(t);
+
+    // ---- SIMD: the top-K panel kernel (`dots_into` over the candidate
+    // panel) — scalar seed twin vs the `linalg::simd` entry point on the
+    // exact panel shape the recommender scores (ISSUE 8)
+    let isa = crate::linalg::Backend::Simd.isa_label();
+    let mut t = Table::new(
+        &format!("top-K panel kernel dots_into: scalar twin vs {isa}, sec/panel"),
+        &["K", "panel rows", "scalar", "simd", "speedup"],
+    );
+    let reps = if quick { 100 } else { 1_000 };
+    let mut rng = crate::rng::Rng::new(23);
+    for &k in &[16usize, 64] {
+        let mut panel = crate::linalg::Mat::zeros(ncols, k);
+        rng.fill_normal(panel.data_mut());
+        let mut x = vec![0.0; k];
+        rng.fill_normal(&mut x);
+        let mut out = vec![0.0; ncols];
+        let mut time = |simd: bool| {
+            let mut best = f64::INFINITY;
+            for _ in 0..3 {
+                let timer = Timer::start();
+                for _ in 0..reps {
+                    if simd {
+                        crate::linalg::simd::dots_into(&x, panel.view(), &mut out);
+                    } else {
+                        crate::linalg::dots_into_scalar(&x, panel.view(), &mut out);
+                    }
+                }
+                best = best.min(timer.elapsed_s() / reps as f64);
+            }
+            best
+        };
+        let sc = time(false);
+        let ve = time(true);
+        std::hint::black_box(&out);
+        t.row(vec![
+            format!("{k}"),
+            format!("{ncols}"),
+            super::fmt_s(sc),
+            super::fmt_s(ve),
+            format!("{:.2}x", sc / ve),
+        ]);
     }
     report.push(t);
     report

@@ -123,34 +123,152 @@ pub fn run(quick: bool) -> Report {
         hist.len()
     );
 
-    let tiled_only = SweepTuning {
-        tiled_gram: true,
-        fused_sse: false,
-        lpt_schedule: false,
-        hoist_rhs: false,
-    };
+    let tiled_only = SweepTuning { tiled_gram: true, ..SweepTuning::baseline() };
+    let simd_all = SweepTuning::all_on().with_backend(crate::linalg::Backend::Simd);
     let mut t = Table::new(
         &format!(
-            "Gibbs sweep: power-law {rows}x{cols} ({} nnz), adaptive noise, sec/iter",
-            train.nnz()
+            "Gibbs sweep: power-law {rows}x{cols} ({} nnz), adaptive noise, sec/iter (simd: {})",
+            train.nnz(),
+            crate::linalg::Backend::Simd.isa_label(),
         ),
-        &["K", "baseline (rank-4, unfused)", "tiled gram", "tiled+fused+hoist+lpt", "speedup"],
+        &[
+            "K",
+            "baseline (rank-4, unfused)",
+            "tiled gram",
+            "tiled+fused+hoist+lpt",
+            "all+simd",
+            "speedup",
+            "simd speedup",
+        ],
     );
     for &k in sweep_ks {
         let base = measure_sweep(&train, k, iters, SweepTuning::baseline());
         let tiled = measure_sweep(&train, k, iters, tiled_only);
         let all = measure_sweep(&train, k, iters, SweepTuning::all_on());
+        let simd = measure_sweep(&train, k, iters, simd_all);
         t.row(vec![
             k.to_string(),
             fmt_s(base),
             fmt_s(tiled),
             fmt_s(all),
+            fmt_s(simd),
             format!("{:.2}x", base / all),
+            format!("{:.2}x", all / simd),
         ]);
     }
     report.push(t);
 
+    report.push(simd_kernel_table(quick));
+
     report
+}
+
+/// Per-kernel scalar-vs-SIMD comparison over every converted hot-path
+/// kernel (ISSUE 8 acceptance table).  Each row times the scalar seed
+/// twin against the `linalg::simd` entry point on the same operands; on
+/// hosts without AVX2+FMA/NEON the SIMD column falls back to scalar
+/// inside the wrapper, so the speedup reads ~1.0x and the table header
+/// says `scalar`.
+fn simd_kernel_table(quick: bool) -> Table {
+    use crate::linalg::{simd, Backend, MatRef};
+    let isa = if simd::available() { simd::isa_name() } else { "scalar (no simd support)" };
+    let reps = if quick { 200 } else { 2000 };
+    let mut rng = crate::rng::Rng::new(17);
+    let mut t = Table::new(
+        &format!("SIMD kernels: scalar twin vs {isa}, sec/op"),
+        &["kernel", "shape", "scalar", "simd", "speedup"],
+    );
+    let mut row = |name: &str, shape: String, scalar: f64, vector: f64| {
+        t.row(vec![
+            name.to_string(),
+            shape,
+            fmt_s(scalar),
+            fmt_s(vector),
+            format!("{:.2}x", scalar / vector),
+        ]);
+    };
+
+    // dot / dots_into
+    let n = 4096usize;
+    let (mut x, mut y) = (vec![0.0; n], vec![0.0; n]);
+    rng.fill_normal(&mut x);
+    rng.fill_normal(&mut y);
+    let mut sink = 0.0;
+    let sc = best_of(reps, || sink += crate::linalg::dot_scalar(&x, &y));
+    let ve = best_of(reps, || sink += simd::dot(&x, &y));
+    row("dot", format!("n={n}"), sc, ve);
+
+    let (m, k) = (256usize, 64usize);
+    let mut a = Mat::zeros(m, k);
+    rng.fill_normal(a.data_mut());
+    let mut out = vec![0.0; m];
+    let xk = &x[..k];
+    let sc = best_of(reps, || crate::linalg::dots_into_scalar(xk, a.view(), &mut out));
+    let ve = best_of(reps, || simd::dots_into(xk, a.view(), &mut out));
+    sink += out[0];
+    row("dots_into", format!("{m}x{k}"), sc, ve);
+
+    // fused Gram+rhs tile (the sweep's syrk-style inner kernel)
+    let gk = 32usize;
+    let mut xs = vec![0.0; GRAM_TILE_ROWS * gk];
+    let mut vals = vec![0.0; GRAM_TILE_ROWS];
+    rng.fill_normal(&mut xs);
+    rng.fill_normal(&mut vals);
+    let mut g = Mat::eye(gk);
+    let mut grhs = vec![0.0; gk];
+    let sc = best_of(reps, || crate::linalg::gram_rhs_tile_scalar(&mut g, &mut grhs, 1.5, &xs, &vals));
+    let ve = best_of(reps, || simd::gram_rhs_tile(&mut g, &mut grhs, 1.5, &xs, &vals));
+    sink += g[(0, 0)];
+    row("gram_rhs_tile", format!("{GRAM_TILE_ROWS}x{gk}"), sc, ve);
+
+    // triangular solves on a Cholesky factor (the per-row solve step)
+    let sn = 64usize;
+    let mut spd = Mat::zeros(sn + 2, sn);
+    rng.fill_normal(spd.data_mut());
+    let mut l = crate::linalg::syrk(&spd, Backend::Blocked);
+    for i in 0..sn {
+        l[(i, i)] += sn as f64;
+    }
+    crate::linalg::chol_inplace(&mut l).expect("bench SPD factor");
+    let b = &x[..sn];
+    let mut sol = vec![0.0; sn];
+    let sc = best_of(reps, || crate::linalg::tri_solve_lower_into_scalar(&l, b, &mut sol));
+    let ve = best_of(reps, || simd::tri_solve_lower_into(&l, b, &mut sol));
+    row("tri_solve_lower", format!("n={sn}"), sc, ve);
+    let sc = best_of(reps, || crate::linalg::tri_solve_upper_t_into_scalar(&l, b, &mut sol));
+    let ve = best_of(reps, || simd::tri_solve_upper_t_into(&l, b, &mut sol));
+    sink += sol[0];
+    row("tri_solve_upper_t", format!("n={sn}"), sc, ve);
+
+    // gemm microkernel (serving/posterior path)
+    let gn = if quick { 64 } else { 128 };
+    let greps = reps / 20 + 1;
+    let mut ga = Mat::zeros(gn, gn);
+    let mut gb = Mat::zeros(gn, gn);
+    rng.fill_normal(ga.data_mut());
+    rng.fill_normal(gb.data_mut());
+    let mut gc = Mat::zeros(gn, gn);
+    let (gav, gbv): (MatRef<'_>, MatRef<'_>) = (ga.view(), gb.view());
+    let sc = best_of(greps, || crate::linalg::gemm_ref_into(gav, gbv, &mut gc, Backend::Blocked));
+    let ve = best_of(greps, || crate::linalg::gemm_ref_into(gav, gbv, &mut gc, Backend::Simd));
+    sink += gc[(0, 0)];
+    row("gemm", format!("{gn}x{gn}x{gn}"), sc, ve);
+
+    assert!(sink.is_finite(), "bench kernels produced non-finite values");
+    t
+}
+
+/// Best-of-3 mean seconds per call of `f` over `reps` calls.
+fn best_of<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Timer::start();
+        for _ in 0..reps {
+            f();
+        }
+        best = best.min(t.elapsed_s() / reps as f64);
+    }
+    best
 }
 
 #[cfg(test)]
@@ -160,7 +278,12 @@ mod tests {
     #[test]
     fn quick_sweep_bench_runs() {
         let r = run(true);
-        assert_eq!(r.tables.len(), 2);
+        assert_eq!(r.tables.len(), 3);
         assert!(r.tables.iter().all(|t| !t.rows.is_empty()));
+        // the SIMD kernel table covers every converted kernel
+        let simd = &r.tables[2];
+        for kernel in ["dot", "dots_into", "gram_rhs_tile", "tri_solve_lower", "tri_solve_upper_t", "gemm"] {
+            assert!(simd.rows.iter().any(|row| row[0] == kernel), "missing kernel row {kernel}");
+        }
     }
 }

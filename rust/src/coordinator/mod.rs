@@ -59,6 +59,21 @@ pub const TILE_NNZ_MIN: usize = 2 * crate::linalg::GRAM_TILE_ROWS;
 /// the adaptive-noise SSE is summed over (the final mode instead of
 /// mode 0) — a float-summation-order difference in the noise update
 /// only, never in the sampled latents of a sweep.
+///
+/// `backend` (ISSUE 8) is the one exception to "sample-preserving": it
+/// selects the kernel ISA family ([`crate::linalg::Backend`]) for the
+/// sweep's solve path.  `Blocked`/`Naive` stay in the seed-identical
+/// scalar family; `Simd` is tolerance-equivalent (see
+/// [`crate::linalg::simd`]) and is masked back to `Blocked` while
+/// strict mode is on.  It rides this struct so the existing snapshot
+/// seam (per-session at build, replicated verbatim to every distributed
+/// worker) pins the ISA uniformly across threads and ranks — which is
+/// what keeps the distributed `sync` cross-rank hash assert green under
+/// SIMD.  It is *not* part of the four-switch global bitmask:
+/// [`SweepTuning::set_global`] stores only the switches, and every
+/// constructor reads the backend from [`crate::linalg::Backend::global`]
+/// at call time, so `all_on()`/`baseline()` comparisons are always
+/// ISA-uniform.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SweepTuning {
     /// cache-blocked tiled Gram for rows with ≥ [`TILE_NNZ_MIN`] obs
@@ -69,29 +84,53 @@ pub struct SweepTuning {
     pub lpt_schedule: bool,
     /// hoist the shared Λ₀·μ rhs base out of the row loop
     pub hoist_rhs: bool,
+    /// kernel ISA family for the MVN solve path (see struct docs)
+    pub backend: crate::linalg::Backend,
 }
 
 static SWEEP_TUNING: AtomicU8 = AtomicU8::new(0b1111);
 
 impl SweepTuning {
-    /// Every optimisation enabled (the library default).
+    /// Every optimisation enabled (the library default), on the
+    /// process-default kernel backend.
     pub fn all_on() -> SweepTuning {
-        SweepTuning { tiled_gram: true, fused_sse: true, lpt_schedule: true, hoist_rhs: true }
+        SweepTuning {
+            tiled_gram: true,
+            fused_sse: true,
+            lpt_schedule: true,
+            hoist_rhs: true,
+            backend: crate::linalg::Backend::global(),
+        }
     }
 
     /// The pre-PR4 baseline: rank-4 gather only, standalone SSE pass,
-    /// natural row order, per-row rhs dots.
+    /// natural row order, per-row rhs dots.  Same backend as
+    /// [`SweepTuning::all_on`], so switch comparisons never cross ISA.
     pub fn baseline() -> SweepTuning {
-        SweepTuning { tiled_gram: false, fused_sse: false, lpt_schedule: false, hoist_rhs: false }
+        SweepTuning {
+            tiled_gram: false,
+            fused_sse: false,
+            lpt_schedule: false,
+            hoist_rhs: false,
+            backend: crate::linalg::Backend::global(),
+        }
     }
 
-    /// Set the process-wide *default*.  The global is only consulted
-    /// when a session is built without an explicit
+    /// This tuning with the kernel backend replaced — the builder-side
+    /// hook for `--engine native:scalar` / `native:simd`.
+    pub fn with_backend(self, backend: crate::linalg::Backend) -> SweepTuning {
+        SweepTuning { backend: backend.sanitized(), ..self }
+    }
+
+    /// Set the process-wide *default* switches.  The global is only
+    /// consulted when a session is built without an explicit
     /// `SessionBuilder::sweep_tuning` override — the hot path reads the
     /// sweep's own [`MvnSweep::tuning`] snapshot, never this global —
     /// so code that needs a specific tuning for one session (tests,
     /// the bench harness) should pin it on the builder instead of
-    /// flipping this around a build.
+    /// flipping this around a build.  The `backend` field is *not*
+    /// stored here; its process-wide default is
+    /// [`crate::linalg::Backend::set_global`].
     pub fn set_global(t: SweepTuning) {
         let bits = t.tiled_gram as u8
             | (t.fused_sse as u8) << 1
@@ -107,6 +146,7 @@ impl SweepTuning {
             fused_sse: b & 2 != 0,
             lpt_schedule: b & 4 != 0,
             hoist_rhs: b & 8 != 0,
+            backend: crate::linalg::Backend::global(),
         }
     }
 }
@@ -483,11 +523,13 @@ impl SweepPlan {
             return;
         }
         let (mut rows, mut tiled, mut rank4, mut degen, mut fused) = (0u64, 0u64, 0u64, 0u64, 0u64);
+        let mut rows_simd = 0u64;
         for l in 0..self.arena.lanes.len() {
             // SAFETY: the sweep's pool call has returned — no thread
             // holds a lane any more.
             let s = &unsafe { self.arena.lane(l) }.stats;
             rows += s.rows;
+            rows_simd += s.rows_simd;
             tiled += s.gram_tiled;
             rank4 += s.gram_rank4;
             degen += s.chol_degenerate;
@@ -500,6 +542,7 @@ impl SweepPlan {
             }
         }
         crate::obs::counter_add("smurff_sweep_rows_total", rows);
+        crate::obs::counter_add("smurff_sweep_rows_simd_total", rows_simd);
         crate::obs::counter_add("smurff_sweep_gram_tiled_total", tiled);
         crate::obs::counter_add("smurff_sweep_gram_rank4_total", rank4);
         crate::obs::counter_add("smurff_sweep_chol_degenerate_total", degen);
@@ -688,6 +731,7 @@ thread_local! {
 #[derive(Default)]
 struct LaneStats {
     rows: u64,
+    rows_simd: u64,
     gram_tiled: u64,
     gram_rank4: u64,
     chol_degenerate: u64,
@@ -756,6 +800,19 @@ pub fn sample_one_row_mvn(
     });
 }
 
+/// Tiled Gram+rhs update pinned to one kernel family: the sweep selects
+/// SIMD or the scalar seed twin from its [`SweepTuning::backend`]
+/// snapshot instead of re-reading the process-global backend per call,
+/// so a row never mixes families mid-accumulation.
+#[inline]
+fn gram_tile_b(a: &mut Mat, rhs: &mut [f64], alpha: f64, xs: &[f64], vals: &[f64], simd: bool) {
+    if simd {
+        crate::linalg::simd::gram_rhs_tile(a, rhs, alpha, xs, vals)
+    } else {
+        crate::linalg::gram_rhs_tile_scalar(a, rhs, alpha, xs, vals)
+    }
+}
+
 /// The row conditional over an explicit work area.  Returns the row's
 /// fused-SSE partial when `fuse_sse` is set (0.0 otherwise): residuals
 /// against the freshly sampled row, summed sequentially in observation
@@ -790,6 +847,17 @@ fn sample_one_row_mvn_with(
     // does `xs`/`vals` hold the row's complete gather with raw values
     // when the solve finishes?  (drives the fused-SSE fast path)
     let mut gathered_full = false;
+    // Kernel ISA for this row's Gram accumulation and triangular
+    // solves: the session's snapshot, strict-masked at call time.
+    // Scope note: `dot`/`axpy` calls inside the row (probit preds, rhs
+    // dots, fused SSE) keep dispatching on the process global, so the
+    // hoist/fused bit-contracts compare like against like; the pinned
+    // backend governs the syrk-style kernels and the solves.
+    let backend = tuning.backend.effective();
+    let use_simd = backend == crate::linalg::Backend::Simd;
+    if use_simd {
+        stats.rows_simd += 1;
+    }
     for view in &sweep.views {
         let alpha = view.alpha;
         match (&view.full_gram, view.probit) {
@@ -806,7 +874,7 @@ fn sample_one_row_mvn_with(
                 // and (Blocked backend) gather-then-kernel so the inner
                 // loops are long enough to vectorize; mirrored once
                 // below before the Cholesky.
-                if crate::linalg::Backend::global() == crate::linalg::Backend::Blocked {
+                if backend != crate::linalg::Backend::Naive {
                     let nnz = view.operand.nnz(i);
                     if tuning.tiled_gram && nnz >= TILE_NNZ_MIN {
                         // §Perf PR4 change #1: high-nnz rows stream
@@ -828,13 +896,7 @@ fn sample_one_row_mvn_with(
                                 r
                             };
                             if fill == cap {
-                                crate::linalg::gram_rhs_tile(
-                                    lambda,
-                                    rhs,
-                                    alpha,
-                                    &xs[..cap * k],
-                                    &vals[..cap],
-                                );
+                                gram_tile_b(lambda, rhs, alpha, &xs[..cap * k], &vals[..cap], use_simd);
                                 fill = 0;
                             }
                             xs[fill * k..(fill + 1) * k].copy_from_slice(vrow);
@@ -842,13 +904,7 @@ fn sample_one_row_mvn_with(
                             fill += 1;
                         });
                         if fill > 0 {
-                            crate::linalg::gram_rhs_tile(
-                                lambda,
-                                rhs,
-                                alpha,
-                                &xs[..fill * k],
-                                &vals[..fill],
-                            );
+                            gram_tile_b(lambda, rhs, alpha, &xs[..fill * k], &vals[..fill], use_simd);
                         }
                     } else {
                         stats.gram_rank4 += 1;
@@ -864,7 +920,11 @@ fn sample_one_row_mvn_with(
                             xs.extend_from_slice(vrow);
                             vals.push(val);
                         });
-                        crate::linalg::gram_rhs_rank4(lambda, rhs, alpha, xs, vals);
+                        if use_simd {
+                            crate::linalg::simd::gram_rhs_rank4(lambda, rhs, alpha, xs, vals);
+                        } else {
+                            crate::linalg::gram_rhs_rank4_scalar(lambda, rhs, alpha, xs, vals);
+                        }
                         gathered_full = !view.probit;
                     }
                 } else {
@@ -875,7 +935,7 @@ fn sample_one_row_mvn_with(
                         } else {
                             r
                         };
-                        crate::linalg::ger_sym_upper(lambda, alpha, vrow);
+                        crate::linalg::ger_sym_upper_with(lambda, alpha, vrow, backend);
                         crate::linalg::axpy(rhs, alpha * val, vrow);
                     });
                 }
@@ -891,10 +951,17 @@ fn sample_one_row_mvn_with(
         row_in_out.copy_from_slice(mean_i);
     } else {
         let l = &*lambda;
-        crate::linalg::tri_solve_lower_into(l, rhs, tmp);
-        crate::linalg::tri_solve_upper_t_into(l, tmp, rhs); // rhs := mean
-        rng.fill_normal(eps);
-        crate::linalg::tri_solve_upper_t_into(l, eps, tmp); // tmp := L⁻ᵀε
+        if use_simd {
+            crate::linalg::simd::tri_solve_lower_into(l, rhs, tmp);
+            crate::linalg::simd::tri_solve_upper_t_into(l, tmp, rhs); // rhs := mean
+            rng.fill_normal(eps);
+            crate::linalg::simd::tri_solve_upper_t_into(l, eps, tmp); // tmp := L⁻ᵀε
+        } else {
+            crate::linalg::tri_solve_lower_into_scalar(l, rhs, tmp);
+            crate::linalg::tri_solve_upper_t_into_scalar(l, tmp, rhs); // rhs := mean
+            rng.fill_normal(eps);
+            crate::linalg::tri_solve_upper_t_into_scalar(l, eps, tmp); // tmp := L⁻ᵀε
+        }
         for c in 0..k {
             row_in_out[c] = rhs[c] + tmp[c];
         }

@@ -139,7 +139,11 @@ struct WorkerParts {
     col_data: Vec<Option<MatrixConfig>>,
     offsets: Vec<f64>,
     /// the leading builder's sweep-tuning override, replicated so every
-    /// worker chain makes the same fuse decision
+    /// worker chain makes the same fuse decision — and, since ISSUE 8,
+    /// runs the same kernel ISA (`SweepTuning::backend`): the sync
+    /// strategy's cross-rank state-hash assert only holds when every
+    /// rank sums floats in the same order, so the kernel family must be
+    /// uniform across the cluster, never re-detected per rank
     tuning: Option<crate::coordinator::SweepTuning>,
 }
 
@@ -692,7 +696,10 @@ fn worker_run(
                         // thrown) so the comm protocol winds down cleanly
                         hash_mismatch = Some(format!(
                             "sync chain-state divergence at iteration {it}: rank {rank} hash \
-                             {h:016x} disagrees with {peers_diverged} peer(s)"
+                             {h:016x} disagrees with {peers_diverged} peer(s) \
+                             (kernel ISA {}; mixed-ISA replicas would diverge here — \
+                             pin one family via SweepTuning::backend or --strict)",
+                            sess.kernel_backend().isa_label()
                         ));
                     }
                 }

@@ -15,6 +15,46 @@
 //! spill penalty) are calibrated once against the paper's reported
 //! ratios and then held fixed across all workloads.
 
+// ---------------------------------------------------------------------
+// Host introspection (ISSUE 8): what the *running* CPU offers and which
+// kernel ISA the dispatch layer selected — surfaced in the bench report
+// header, the `smurff serve` status reply, and the obs registry.
+
+/// The running host's architecture string (`x86_64`, `aarch64`, ...).
+pub fn host_arch() -> &'static str {
+    std::env::consts::ARCH
+}
+
+/// One-line CPU feature summary, e.g. `avx2=yes fma=yes neon=no`.
+pub fn cpu_feature_summary() -> String {
+    let f = crate::linalg::simd::cpu_features();
+    format!(
+        "avx2={} fma={} neon={}",
+        if f.avx2 { "yes" } else { "no" },
+        if f.fma { "yes" } else { "no" },
+        if f.neon { "yes" } else { "no" },
+    )
+}
+
+/// Host description for report headers: arch, detected vector features,
+/// and the kernel ISA the global dispatch currently selects.
+pub fn describe_host() -> String {
+    format!(
+        "host: {} ({}), kernel ISA {}",
+        host_arch(),
+        cpu_feature_summary(),
+        crate::linalg::Backend::global().isa_label(),
+    )
+}
+
+/// Publish the selected kernel ISA as an info-style gauge
+/// (`smurff_kernel_isa{isa="..."} 1`) into the [`crate::obs`] registry —
+/// the Prometheus idiom for exposing a label-valued fact.
+pub fn publish_kernel_isa_gauge() {
+    let isa = crate::linalg::Backend::global().isa_label();
+    crate::obs::gauge_set(&format!("smurff_kernel_isa{{isa=\"{isa}\"}}"), 1.0);
+}
+
 /// A modelled processor.
 #[derive(Debug, Clone)]
 pub struct Platform {

@@ -6,7 +6,12 @@
 //!
 //! The crate is organised in layers:
 //!
-//! * substrates: [`util`], [`rng`], [`linalg`], [`sparse`] (CSR/CSC
+//! * substrates: [`util`], [`rng`], [`linalg`] (BLAS-like kernels on a
+//!               three-way `Backend` axis — naive / cache-blocked
+//!               scalar / `linalg::simd` AVX2+FMA/NEON vector variants
+//!               with one-time runtime CPU-feature detection, scalar
+//!               fallback, and a strict mode pinning the bit-exact
+//!               seed path — see README §Performance), [`sparse`] (CSR/CSC
 //!               matrices *and* the N-mode [`sparse::SparseTensor`]
 //!               with one compressed fiber index per mode), [`obs`]
 //!               (the process-wide observability registry: atomic

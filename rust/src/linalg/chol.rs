@@ -5,6 +5,11 @@ use super::Mat;
 
 /// In-place lower Cholesky of an SPD matrix.  Returns Err on a
 /// non-positive pivot (matrix not SPD within round-off).
+///
+/// Always scalar, on every [`super::Backend`]: the K×K factorization is
+/// a tiny fraction of the row-update flops, and keeping the pivot
+/// recurrence bit-stable means the SIMD backend's only divergence
+/// sources are the documented reduction kernels.
 pub fn chol_inplace(a: &mut Mat) -> Result<(), &'static str> {
     let n = a.rows();
     assert_eq!(n, a.cols(), "cholesky needs a square matrix");
@@ -71,30 +76,15 @@ impl Chol {
 
 /// Forward substitution: solve L y = b for lower-triangular L.
 pub fn tri_solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
-    let n = l.rows();
-    assert_eq!(b.len(), n);
-    let mut y = vec![0.0; n];
-    for i in 0..n {
-        let row = l.row(i);
-        let s = super::dot(&row[..i], &y[..i]);
-        y[i] = (b[i] - s) / row[i];
-    }
+    let mut y = vec![0.0; l.rows()];
+    tri_solve_lower_into(l, b, &mut y);
     y
 }
 
 /// Backward substitution: solve Lᵀ x = b for lower-triangular L.
 pub fn tri_solve_upper_t(l: &Mat, b: &[f64]) -> Vec<f64> {
-    let n = l.rows();
-    assert_eq!(b.len(), n);
-    let mut x = vec![0.0; n];
-    for i in (0..n).rev() {
-        let mut s = b[i];
-        // (L^T)[i][j] = L[j][i] for j > i
-        for j in i + 1..n {
-            s -= l[(j, i)] * x[j];
-        }
-        x[i] = s / l[(i, i)];
-    }
+    let mut x = vec![0.0; l.rows()];
+    tri_solve_upper_t_into(l, b, &mut x);
     x
 }
 
@@ -104,18 +94,40 @@ pub fn chol_solve(a: Mat, b: &[f64]) -> Result<Vec<f64>, &'static str> {
 }
 
 /// Allocation-free forward substitution into `y` (§Perf hot path).
+/// Dispatches on the global [`super::Backend`]; the sweep passes its
+/// per-session snapshot by picking the twin directly.
 pub fn tri_solve_lower_into(l: &Mat, b: &[f64], y: &mut [f64]) {
+    if super::simd_enabled() {
+        super::simd::tri_solve_lower_into(l, b, y)
+    } else {
+        tri_solve_lower_into_scalar(l, b, y)
+    }
+}
+
+/// Scalar twin of [`tri_solve_lower_into`] (the seed arithmetic).
+pub fn tri_solve_lower_into_scalar(l: &Mat, b: &[f64], y: &mut [f64]) {
     let n = l.rows();
     debug_assert!(b.len() == n && y.len() == n);
     for i in 0..n {
         let row = l.row(i);
-        let s = super::dot(&row[..i], &y[..i]);
+        let s = super::dot_scalar(&row[..i], &y[..i]);
         y[i] = (b[i] - s) / row[i];
     }
 }
 
-/// Allocation-free backward substitution (solve Lᵀ x = b) into `x`.
+/// Allocation-free backward substitution (solve Lᵀ x = b) into `x`,
+/// dispatching like [`tri_solve_lower_into`].
 pub fn tri_solve_upper_t_into(l: &Mat, b: &[f64], x: &mut [f64]) {
+    if super::simd_enabled() {
+        super::simd::tri_solve_upper_t_into(l, b, x)
+    } else {
+        tri_solve_upper_t_into_scalar(l, b, x)
+    }
+}
+
+/// Scalar twin of [`tri_solve_upper_t_into`] (the seed arithmetic:
+/// strided column walk, one low-to-high residual pass per output).
+pub fn tri_solve_upper_t_into_scalar(l: &Mat, b: &[f64], x: &mut [f64]) {
     let n = l.rows();
     debug_assert!(b.len() == n && x.len() == n);
     for i in (0..n).rev() {

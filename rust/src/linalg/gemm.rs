@@ -10,29 +10,122 @@
 use super::{Mat, MatRef};
 use std::sync::atomic::{AtomicU8, Ordering};
 
-/// Which gemm/syrk implementation to use.  Global default + per-call
-/// override — the bench harness flips the global, the library defaults
-/// to Blocked.
+/// Which kernel implementation to use — the one "engine choice" axis
+/// (ISSUE 8).  Global default + per-call override — the bench harness
+/// flips the global, sessions snapshot it into their [`SweepTuning`]
+/// (`crate::coordinator::SweepTuning::backend`), and the library
+/// defaults to Blocked.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
-    /// Tiled + unrolled (MKL stand-in, "native/dispatching" build).
-    Blocked,
+    /// Tiled + unrolled scalar f64 (MKL stand-in, "native/dispatching"
+    /// build).  The reproducibility anchor: bit-identical to the seed.
+    Blocked = 0,
     /// Textbook loops (generic OpenBLAS stand-in).
-    Naive,
+    Naive = 1,
+    /// Explicit `std::arch` vector kernels ([`super::simd`]; AVX2+FMA
+    /// on x86_64, NEON on aarch64) over the Blocked layout.  Tolerance-
+    /// (not bit-) equivalent to Blocked — see the simd module docs.
+    Simd = 2,
 }
 
-static GLOBAL_BACKEND: AtomicU8 = AtomicU8::new(0);
+/// Sentinel meaning "not yet resolved": the first [`Backend::global`]
+/// call reads `SMURFF_KERNEL_ISA` and caches the answer.
+const BACKEND_UNSET: u8 = u8::MAX;
+
+static GLOBAL_BACKEND: AtomicU8 = AtomicU8::new(BACKEND_UNSET);
 
 impl Backend {
     pub fn set_global(b: Backend) {
-        GLOBAL_BACKEND.store(b as u8, Ordering::Relaxed);
+        GLOBAL_BACKEND.store(b.sanitized() as u8, Ordering::Relaxed);
     }
 
+    /// The process-wide default backend.  Resolved lazily on first
+    /// call: honours the `SMURFF_KERNEL_ISA` environment variable
+    /// (`scalar`/`blocked` | `naive` | `simd` | `auto`), defaulting to
+    /// `Blocked` — the seed-identical path — when unset.  The answer is
+    /// always [`Backend::effective`]: strict mode masks `Simd` back to
+    /// `Blocked`.
     pub fn global() -> Backend {
-        if GLOBAL_BACKEND.load(Ordering::Relaxed) == 0 {
+        let mut v = GLOBAL_BACKEND.load(Ordering::Relaxed);
+        if v == BACKEND_UNSET {
+            let b = Backend::from_env().sanitized();
+            // benign race: concurrent first calls resolve identically
+            GLOBAL_BACKEND.store(b as u8, Ordering::Relaxed);
+            v = b as u8;
+        }
+        let b = match v {
+            1 => Backend::Naive,
+            2 => Backend::Simd,
+            _ => Backend::Blocked,
+        };
+        b.effective()
+    }
+
+    /// What this backend actually dispatches to right now: `Simd`
+    /// degrades to `Blocked` under [`super::simd::strict`] mode or when
+    /// the CPU lacks a vector ISA.  Sweep code calls this once per row
+    /// on its snapshotted backend.
+    #[inline]
+    pub fn effective(self) -> Backend {
+        if self == Backend::Simd && (super::simd::strict() || !super::simd::available()) {
             Backend::Blocked
         } else {
-            Backend::Naive
+            self
+        }
+    }
+
+    /// Downgrade `Simd` to `Blocked` (with a warning) when no vector
+    /// ISA is available, so a stored `Simd` always implies the feature
+    /// check passed.
+    pub fn sanitized(self) -> Backend {
+        if self == Backend::Simd && !super::simd::available() {
+            crate::log_warn!("SIMD backend requested but this CPU has no AVX2+FMA/NEON; using scalar Blocked");
+            Backend::Blocked
+        } else {
+            self
+        }
+    }
+
+    /// The best backend for this CPU: `Simd` when a vector ISA is
+    /// available, else `Blocked`.
+    pub fn detect() -> Backend {
+        if super::simd::available() {
+            Backend::Simd
+        } else {
+            Backend::Blocked
+        }
+    }
+
+    /// Parse a kernel-ISA spec (CLI `--kernel-isa`, `SMURFF_KERNEL_ISA`
+    /// env, `--engine native:<isa>` suffix).
+    pub fn parse(s: &str) -> Result<Backend, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" | "blocked" => Ok(Backend::Blocked),
+            "naive" => Ok(Backend::Naive),
+            "simd" => Ok(Backend::Simd),
+            "auto" => Ok(Backend::detect()),
+            other => Err(format!("unknown kernel ISA '{other}' (scalar|naive|simd|auto)")),
+        }
+    }
+
+    fn from_env() -> Backend {
+        match std::env::var("SMURFF_KERNEL_ISA") {
+            Ok(s) if !s.is_empty() => Backend::parse(&s).unwrap_or_else(|e| {
+                crate::log_warn!("SMURFF_KERNEL_ISA: {e}; using scalar Blocked");
+                Backend::Blocked
+            }),
+            _ => Backend::Blocked,
+        }
+    }
+
+    /// Short label of the instruction set this backend runs —
+    /// "avx2+fma"/"neon" for `Simd`, "scalar" otherwise.  Used by the
+    /// bench header, train banner, serve `status`, and the
+    /// `smurff_kernel_isa` gauge.
+    pub fn isa_label(self) -> &'static str {
+        match self.effective() {
+            Backend::Simd => super::simd::isa_name(),
+            Backend::Blocked | Backend::Naive => "scalar",
         }
     }
 }
@@ -101,6 +194,41 @@ pub fn gemm_ref_into(a: MatRef<'_>, b: MatRef<'_>, c: &mut Mat, backend: Backend
                 }
             }
         }
+        Backend::Simd => {
+            // Blocked's exact tiling with the explicit-FMA microkernel
+            // on the contiguous j span (tolerance-, not bit-, equal).
+            let (m, kk, n) = (a.rows(), a.cols(), b.cols());
+            for i0 in (0..m).step_by(TILE) {
+                let i1 = (i0 + TILE).min(m);
+                for k0 in (0..kk).step_by(TILE) {
+                    let k1 = (k0 + TILE).min(kk);
+                    for j0 in (0..n).step_by(TILE) {
+                        let j1 = (j0 + TILE).min(n);
+                        for i in i0..i1 {
+                            let mut k = k0;
+                            while k + 1 < k1 {
+                                let aik0 = a[(i, k)];
+                                let aik1 = a[(i, k + 1)];
+                                let (bk0, bk1) = (b.row(k), b.row(k + 1));
+                                super::simd::fma2_into(
+                                    &mut c.row_mut(i)[j0..j1],
+                                    aik0,
+                                    &bk0[j0..j1],
+                                    aik1,
+                                    &bk1[j0..j1],
+                                );
+                                k += 2;
+                            }
+                            if k < k1 {
+                                let aik = a[(i, k)];
+                                let bk = b.row(k);
+                                super::simd::axpy(&mut c.row_mut(i)[j0..j1], aik, &bk[j0..j1]);
+                            }
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -111,12 +239,17 @@ pub fn gemm(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = A^T · B (A is m×n -> C is n×p).  Tiled over the m reduction.
+/// C = A^T · B (A is m×n -> C is n×p) with the global backend.
 pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
+    gemm_tn_with(a, b, Backend::global())
+}
+
+/// [`gemm_tn`] with an explicit backend (bench/test entry point).
+pub fn gemm_tn_with(a: &Mat, b: &Mat, backend: Backend) -> Mat {
     assert_eq!(a.rows(), b.rows(), "gemm_tn inner dim");
     let (m, n, p) = (a.rows(), a.cols(), b.cols());
     let mut c = Mat::zeros(n, p);
-    match Backend::global() {
+    match backend {
         Backend::Naive => {
             for i in 0..n {
                 for j in 0..p {
@@ -142,6 +275,20 @@ pub fn gemm_tn(a: &Mat, b: &Mat) -> Mat {
                     for j in 0..p {
                         crow[j] += aki * brow[j];
                     }
+                }
+            }
+        }
+        Backend::Simd => {
+            // Blocked's rank-1 structure with FMA-lane row updates
+            for k in 0..m {
+                let arow = a.row(k);
+                let brow = b.row(k);
+                for i in 0..n {
+                    let aki = arow[i];
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    super::simd::axpy(c.row_mut(i), aki, brow);
                 }
             }
         }
@@ -220,6 +367,23 @@ pub fn syrk(a: &Mat, backend: Backend) -> Mat {
                 }
             }
         }
+        Backend::Simd => {
+            for k in 0..m {
+                let row = a.row(k);
+                for i in 0..n {
+                    let aki = row[i];
+                    if aki == 0.0 {
+                        continue;
+                    }
+                    super::simd::axpy(&mut c.row_mut(i)[i..], aki, &row[i..]);
+                }
+            }
+            for i in 0..n {
+                for j in i + 1..n {
+                    c[(j, i)] = c[(i, j)];
+                }
+            }
+        }
     }
     c
 }
@@ -256,7 +420,7 @@ mod tests {
             let a = random_mat(m, k, &mut rng);
             let b = random_mat(k, n, &mut rng);
             let want = gemm_naive(&a, &b);
-            for backend in [Backend::Naive, Backend::Blocked] {
+            for backend in [Backend::Naive, Backend::Blocked, Backend::Simd] {
                 let mut c = Mat::zeros(m, n);
                 gemm_into(&a, &b, &mut c, backend);
                 assert!(c.max_abs_diff(&want) < 1e-9, "{backend:?} {m}x{k}x{n}");
@@ -266,16 +430,17 @@ mod tests {
 
     #[test]
     fn gemm_tn_matches_explicit_transpose() {
+        // explicit-backend entry point: never flips the process global
+        // (setting it to Simd mid-run would race concurrent bitwise
+        // dispatch tests when Simd is sample-divergent from Blocked)
         let mut rng = Rng::new(2);
-        for backend in [Backend::Naive, Backend::Blocked] {
-            Backend::set_global(backend);
+        for backend in [Backend::Naive, Backend::Blocked, Backend::Simd] {
             let a = random_mat(23, 7, &mut rng);
             let b = random_mat(23, 11, &mut rng);
             let want = gemm_naive(&a.transpose(), &b);
-            let got = gemm_tn(&a, &b);
-            assert!(got.max_abs_diff(&want) < 1e-9);
+            let got = gemm_tn_with(&a, &b, backend);
+            assert!(got.max_abs_diff(&want) < 1e-9, "{backend:?}");
         }
-        Backend::set_global(Backend::Blocked);
     }
 
     #[test]
@@ -290,7 +455,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let a = random_mat(31, 12, &mut rng);
         let want = gemm_naive(&a.transpose(), &a);
-        for backend in [Backend::Naive, Backend::Blocked] {
+        for backend in [Backend::Naive, Backend::Blocked, Backend::Simd] {
             let got = syrk(&a, backend);
             assert!(got.max_abs_diff(&want) < 1e-9, "{backend:?}");
             // symmetric
@@ -300,10 +465,42 @@ mod tests {
 
     #[test]
     fn global_backend_switch() {
+        // only the sample-identical scalar pair here: storing Simd in
+        // the global mid-suite would change concurrent tests' dispatch
+        let prev = Backend::global();
         Backend::set_global(Backend::Naive);
         assert_eq!(Backend::global(), Backend::Naive);
         Backend::set_global(Backend::Blocked);
         assert_eq!(Backend::global(), Backend::Blocked);
+        // restore the env-selected backend so a forced-SIMD test run
+        // (SMURFF_KERNEL_ISA=simd) keeps exercising SIMD dispatch in the
+        // tests scheduled after this one
+        Backend::set_global(prev);
+    }
+
+    #[test]
+    fn backend_parse_and_masks() {
+        assert_eq!(Backend::parse("scalar"), Ok(Backend::Blocked));
+        assert_eq!(Backend::parse("Blocked"), Ok(Backend::Blocked));
+        assert_eq!(Backend::parse("naive"), Ok(Backend::Naive));
+        assert_eq!(Backend::parse("simd"), Ok(Backend::Simd));
+        assert!(Backend::parse("avx512").is_err());
+        // auto resolves to whatever this CPU supports
+        let auto = Backend::parse("auto").unwrap();
+        assert_eq!(auto, Backend::detect());
+        if super::super::simd::available() {
+            assert_eq!(Backend::detect(), Backend::Simd);
+            assert_eq!(Backend::Simd.sanitized(), Backend::Simd);
+            assert_eq!(Backend::Simd.effective(), Backend::Simd);
+            assert_ne!(Backend::Simd.isa_label(), "scalar");
+        } else {
+            assert_eq!(Backend::detect(), Backend::Blocked);
+            assert_eq!(Backend::Simd.sanitized(), Backend::Blocked);
+            assert_eq!(Backend::Simd.effective(), Backend::Blocked);
+            assert_eq!(Backend::Simd.isa_label(), "scalar");
+        }
+        assert_eq!(Backend::Blocked.isa_label(), "scalar");
+        assert_eq!(Backend::Naive.effective(), Backend::Naive);
     }
 
     #[test]

@@ -1,0 +1,865 @@
+//! Explicit `std::arch` vector kernels for the Gibbs-sweep hot path —
+//! the "hand-tuned beats generic BLAS" half of the paper's Figure-5
+//! argument that [`super::Backend::Blocked`] alone (blocking, scalar
+//! arithmetic) does not reproduce.
+//!
+//! Layout mirrors the scalar kernels one-to-one: every public function
+//! here has a `*_scalar` twin in `linalg`/`linalg::chol`, and the
+//! dispatching wrappers in those modules pick between the two based on
+//! [`super::Backend::global()`].  On x86_64 the vector arms need
+//! AVX2+FMA (checked once at runtime via `is_x86_feature_detected!`,
+//! cached in a [`OnceLock`]); on aarch64 NEON is architecturally
+//! baseline.  On any other target — or when the features are missing —
+//! every wrapper silently runs its scalar twin, so calling into this
+//! module is always safe and always correct, just not always vectorized.
+//!
+//! ## Tolerance contract
+//!
+//! FMA contraction and vector-lane reassociation change the summation
+//! order, so SIMD results are **not** bit-identical to the scalar
+//! kernels.  The documented contract (property-tested in
+//! `tests/simd_props.rs` and below) is a relative error bound of
+//! `SIMD_REL_TOL_PER_ELEM * n` against the scalar twin, where `n` is
+//! the reduction length — the standard `O(n·eps)` backward-error bound,
+//! with a constant small enough that both orderings sit within a few
+//! hundred ulps of the exact sum for every shape the sweep produces.
+//! Within the SIMD family the PR 4 structural contracts still hold
+//! bitwise: [`gram_rhs_tile`] replays [`gram_rhs_rank4`]'s per-element
+//! order (both call the same inner helpers), and [`dots_into`] runs
+//! [`dot`]'s exact reduction per panel row.
+//!
+//! ## Strict mode
+//!
+//! [`set_strict`]`(true)` pins every dispatcher to the scalar path
+//! regardless of the selected backend — the reproducibility escape
+//! hatch for the bit-identity property tests and for distributed runs
+//! that must hash-agree with scalar baselines recorded elsewhere.
+
+use super::{Mat, MatRef};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Per-element relative tolerance of the SIMD-vs-scalar contract; the
+/// total bound for a length-`n` reduction is `SIMD_REL_TOL_PER_ELEM * n`
+/// (see module docs).  `4·eps` absorbs the worst observed reassociation
+/// drift with an order of magnitude to spare.
+pub const SIMD_REL_TOL_PER_ELEM: f64 = 4.0 * f64::EPSILON;
+
+/// CPU vector features relevant to the f64 kernels, detected once.
+#[derive(Debug, Clone, Copy)]
+pub struct CpuFeatures {
+    pub avx2: bool,
+    pub fma: bool,
+    pub neon: bool,
+}
+
+impl CpuFeatures {
+    /// True when a vector arm exists for this CPU.
+    pub fn usable(&self) -> bool {
+        (self.avx2 && self.fma) || self.neon
+    }
+}
+
+static CPU_FEATURES: OnceLock<CpuFeatures> = OnceLock::new();
+
+/// Runtime CPU-feature snapshot (detected on first call, then cached).
+pub fn cpu_features() -> &'static CpuFeatures {
+    CPU_FEATURES.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            CpuFeatures {
+                avx2: std::arch::is_x86_feature_detected!("avx2"),
+                fma: std::arch::is_x86_feature_detected!("fma"),
+                neon: false,
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // NEON (ASIMD) is architecturally mandatory on AArch64
+            CpuFeatures { avx2: false, fma: false, neon: true }
+        }
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            CpuFeatures { avx2: false, fma: false, neon: false }
+        }
+    })
+}
+
+/// True when the SIMD kernels would actually run vector code here.
+pub fn available() -> bool {
+    cpu_features().usable()
+}
+
+/// Human-readable name of the vector ISA the SIMD backend uses on this
+/// CPU ("avx2+fma", "neon"), or "scalar" when none is available.
+pub fn isa_name() -> &'static str {
+    let f = cpu_features();
+    if f.avx2 && f.fma {
+        "avx2+fma"
+    } else if f.neon {
+        "neon"
+    } else {
+        "scalar"
+    }
+}
+
+static STRICT: AtomicBool = AtomicBool::new(false);
+
+/// Pin every backend dispatcher to the scalar path (see module docs).
+pub fn set_strict(on: bool) {
+    STRICT.store(on, Ordering::Relaxed);
+}
+
+/// Is strict (scalar-pinned) mode on?
+pub fn strict() -> bool {
+    STRICT.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// Safe wrappers.  Each checks `available()` and falls back to the
+// scalar twin, so the `unsafe` target-feature arms are provably only
+// reached when the features were detected.
+// ---------------------------------------------------------------------
+
+/// Vector dot product (8-wide FMA accumulation on AVX2, 4-wide on NEON,
+/// serial tail).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if cpu_features().usable() {
+        return unsafe { x86::dot(a, b) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if cpu_features().usable() {
+        return unsafe { arm::dot(a, b) };
+    }
+    super::dot_scalar(a, b)
+}
+
+/// Three-way Hadamard dot `Σ_i a_i·b_i·c_i` — the 3-mode tensor
+/// [`crate::model::hadamard_dot`] reduction.
+#[inline]
+pub fn dot3(a: &[f64], b: &[f64], c: &[f64]) -> f64 {
+    debug_assert!(a.len() == b.len() && a.len() == c.len());
+    #[cfg(target_arch = "x86_64")]
+    if cpu_features().usable() {
+        return unsafe { x86::dot3(a, b, c) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if cpu_features().usable() {
+        return unsafe { arm::dot3(a, b, c) };
+    }
+    let mut s = [0.0f64; 4];
+    let chunks = a.len() / 4;
+    for ch in 0..chunks {
+        let i = ch * 4;
+        for l in 0..4 {
+            s[l] += a[i + l] * b[i + l] * c[i + l];
+        }
+    }
+    let mut rest = 0.0;
+    for i in chunks * 4..a.len() {
+        rest += a[i] * b[i] * c[i];
+    }
+    s[0] + s[1] + s[2] + s[3] + rest
+}
+
+/// y += s·x with FMA lanes.
+#[inline]
+pub fn axpy(y: &mut [f64], s: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    #[cfg(target_arch = "x86_64")]
+    if cpu_features().usable() {
+        return unsafe { x86::axpy(y, s, x) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if cpu_features().usable() {
+        return unsafe { arm::axpy(y, s, x) };
+    }
+    super::axpy_scalar(y, s, x)
+}
+
+/// c += a0·x0 + a1·x1 — the 2-way-unrolled gemm microkernel inner loop.
+#[inline]
+pub fn fma2_into(c: &mut [f64], a0: f64, x0: &[f64], a1: f64, x1: &[f64]) {
+    debug_assert!(c.len() == x0.len() && c.len() == x1.len());
+    #[cfg(target_arch = "x86_64")]
+    if cpu_features().usable() {
+        return unsafe { x86::fma2_into(c, a0, x0, a1, x1) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if cpu_features().usable() {
+        return unsafe { arm::fma2_into(c, a0, x0, a1, x1) };
+    }
+    for i in 0..c.len() {
+        c[i] += a0 * x0[i] + a1 * x1[i];
+    }
+}
+
+/// Batched panel dot: `out[j] += dot(x, a.row(j))` — runs [`dot`]'s
+/// exact reduction per row, so every output is bit-identical to a
+/// standalone [`dot`] call (the serving-path contract, ISA-uniform).
+pub fn dots_into(x: &[f64], a: MatRef<'_>, out: &mut [f64]) {
+    debug_assert_eq!(a.cols(), x.len());
+    debug_assert_eq!(a.rows(), out.len());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o += dot(x, a.row(j));
+    }
+}
+
+/// Fused Gram + RHS over a gathered batch — vector sibling of
+/// [`super::gram_rhs_rank4_scalar`]; same rank-4 grouping, FMA lanes.
+pub fn gram_rhs_rank4(a: &mut Mat, rhs: &mut [f64], alpha: f64, xs: &[f64], vals: &[f64]) {
+    let k = rhs.len();
+    debug_assert_eq!(a.rows(), k);
+    debug_assert_eq!(xs.len(), vals.len() * k);
+    let nnz = vals.len();
+    let mut t = 0;
+    while t + 4 <= nnz {
+        let x4 = [
+            &xs[t * k..(t + 1) * k],
+            &xs[(t + 1) * k..(t + 2) * k],
+            &xs[(t + 2) * k..(t + 3) * k],
+            &xs[(t + 3) * k..(t + 4) * k],
+        ];
+        for i in 0..k {
+            gram_update4(&mut a.row_mut(i)[i..], i, x4, alpha);
+        }
+        rhs_update4(rhs, alpha, x4, [vals[t], vals[t + 1], vals[t + 2], vals[t + 3]]);
+        t += 4;
+    }
+    while t < nnz {
+        let x = &xs[t * k..(t + 1) * k];
+        for i in 0..k {
+            axpy(&mut a.row_mut(i)[i..], alpha * x[i], &x[i..]);
+        }
+        axpy(rhs, alpha * vals[t], x);
+        t += 1;
+    }
+}
+
+/// Tiled sibling of [`gram_rhs_rank4`] (i-outer / group-middle /
+/// j-inner).  Calls the *same* inner helpers in the same per-element
+/// order, so tile-by-tile accumulation with a multiple-of-4 tile stays
+/// bit-identical to one [`gram_rhs_rank4`] call — the PR 4 structural
+/// contract, preserved inside the SIMD family.
+pub fn gram_rhs_tile(a: &mut Mat, rhs: &mut [f64], alpha: f64, xs: &[f64], vals: &[f64]) {
+    let k = rhs.len();
+    debug_assert_eq!(a.rows(), k);
+    debug_assert_eq!(xs.len(), vals.len() * k);
+    let nnz = vals.len();
+    let groups = nnz / 4;
+    for i in 0..k {
+        let row = a.row_mut(i);
+        for g in 0..groups {
+            let t = g * 4;
+            let x4 = [
+                &xs[t * k..(t + 1) * k],
+                &xs[(t + 1) * k..(t + 2) * k],
+                &xs[(t + 2) * k..(t + 3) * k],
+                &xs[(t + 3) * k..(t + 4) * k],
+            ];
+            gram_update4(&mut row[i..], i, x4, alpha);
+        }
+        for t in groups * 4..nnz {
+            let x = &xs[t * k..(t + 1) * k];
+            axpy(&mut row[i..], alpha * x[i], &x[i..]);
+        }
+    }
+    for g in 0..groups {
+        let t = g * 4;
+        let x4 = [
+            &xs[t * k..(t + 1) * k],
+            &xs[(t + 1) * k..(t + 2) * k],
+            &xs[(t + 2) * k..(t + 3) * k],
+            &xs[(t + 3) * k..(t + 4) * k],
+        ];
+        rhs_update4(rhs, alpha, x4, [vals[t], vals[t + 1], vals[t + 2], vals[t + 3]]);
+    }
+    for t in groups * 4..nnz {
+        axpy(rhs, alpha * vals[t], &xs[t * k..(t + 1) * k]);
+    }
+}
+
+/// row[j] += Σ_l (alpha·x4[l][off])·x4[l][off+j] — the shared 4-row
+/// Gram inner of [`gram_rhs_rank4`] and [`gram_rhs_tile`].  `row` is the
+/// upper-triangle suffix starting at column `off`; `x4[l][off..]` are
+/// the matching source suffixes.
+#[inline]
+fn gram_update4(row: &mut [f64], off: usize, x4: [&[f64]; 4], alpha: f64) {
+    let a4 = [
+        alpha * x4[0][off],
+        alpha * x4[1][off],
+        alpha * x4[2][off],
+        alpha * x4[3][off],
+    ];
+    let s4 = [&x4[0][off..], &x4[1][off..], &x4[2][off..], &x4[3][off..]];
+    #[cfg(target_arch = "x86_64")]
+    if cpu_features().usable() {
+        return unsafe { x86::fma4_into(row, a4, s4) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if cpu_features().usable() {
+        return unsafe { arm::fma4_into(row, a4, s4) };
+    }
+    for (j, rj) in row.iter_mut().enumerate() {
+        *rj += a4[0] * s4[0][j] + a4[1] * s4[1][j] + a4[2] * s4[2][j] + a4[3] * s4[3][j];
+    }
+}
+
+/// rhs[j] += alpha·Σ_l v4[l]·x4[l][j] — the shared 4-row RHS inner.
+#[inline]
+fn rhs_update4(rhs: &mut [f64], alpha: f64, x4: [&[f64]; 4], v4: [f64; 4]) {
+    #[cfg(target_arch = "x86_64")]
+    if cpu_features().usable() {
+        return unsafe { x86::rhs4_into(rhs, alpha, x4, v4) };
+    }
+    #[cfg(target_arch = "aarch64")]
+    if cpu_features().usable() {
+        return unsafe { arm::rhs4_into(rhs, alpha, x4, v4) };
+    }
+    for (j, rj) in rhs.iter_mut().enumerate() {
+        *rj += alpha * (v4[0] * x4[0][j] + v4[1] * x4[1][j] + v4[2] * x4[2][j] + v4[3] * x4[3][j]);
+    }
+}
+
+/// Forward substitution with the vector [`dot`] on each row prefix.
+pub fn tri_solve_lower_into(l: &Mat, b: &[f64], y: &mut [f64]) {
+    let n = l.rows();
+    debug_assert!(b.len() == n && y.len() == n);
+    for i in 0..n {
+        let row = l.row(i);
+        let s = dot(&row[..i], &y[..i]);
+        y[i] = (b[i] - s) / row[i];
+    }
+}
+
+/// Backward substitution (solve Lᵀx = b) in outer-product form: after
+/// fixing `x[i]`, subtract `x[i]·L[i, ..i]` from the running residual —
+/// a contiguous [`axpy`] over row `i` of L instead of the scalar twin's
+/// strided column walk.  Different summation order than the scalar
+/// kernel (each residual element receives contributions high-to-low
+/// instead of in one low-to-high pass), covered by the tolerance
+/// contract.
+pub fn tri_solve_upper_t_into(l: &Mat, b: &[f64], x: &mut [f64]) {
+    let n = l.rows();
+    debug_assert!(b.len() == n && x.len() == n);
+    x.copy_from_slice(b);
+    for i in (0..n).rev() {
+        let xi = x[i] / l[(i, i)];
+        x[i] = xi;
+        let (head, _) = x.split_at_mut(i);
+        axpy(head, -xi, &l.row(i)[..i]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// AVX2+FMA arms.  All unsafe fns here require the features checked by
+// the safe wrappers above; loads/stores are unaligned (`loadu`), so the
+// only precondition is slice-length agreement, which the wrappers
+// debug-assert and the loop bounds enforce.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    #[inline]
+    unsafe fn hsum(v: __m256d) -> f64 {
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), v);
+        (lanes[0] + lanes[1]) + (lanes[2] + lanes[3])
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(ap.add(i)), _mm256_loadu_pd(bp.add(i)), acc0);
+            acc1 = _mm256_fmadd_pd(
+                _mm256_loadu_pd(ap.add(i + 4)),
+                _mm256_loadu_pd(bp.add(i + 4)),
+                acc1,
+            );
+            i += 8;
+        }
+        if i + 4 <= n {
+            acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(ap.add(i)), _mm256_loadu_pd(bp.add(i)), acc0);
+            i += 4;
+        }
+        let mut s = hsum(_mm256_add_pd(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot3(a: &[f64], b: &[f64], c: &[f64]) -> f64 {
+        let n = a.len();
+        let mut acc = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 4 <= n {
+            let ab = _mm256_mul_pd(
+                _mm256_loadu_pd(a.as_ptr().add(i)),
+                _mm256_loadu_pd(b.as_ptr().add(i)),
+            );
+            acc = _mm256_fmadd_pd(ab, _mm256_loadu_pd(c.as_ptr().add(i)), acc);
+            i += 4;
+        }
+        let mut s = hsum(acc);
+        while i < n {
+            s += a[i] * b[i] * c[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn axpy(y: &mut [f64], s: f64, x: &[f64]) {
+        let n = y.len();
+        let vs = _mm256_set1_pd(s);
+        let (yp, xp) = (y.as_mut_ptr(), x.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            let r = _mm256_fmadd_pd(vs, _mm256_loadu_pd(xp.add(i)), _mm256_loadu_pd(yp.add(i)));
+            _mm256_storeu_pd(yp.add(i), r);
+            i += 4;
+        }
+        while i < n {
+            y[i] = s.mul_add(x[i], y[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fma2_into(c: &mut [f64], a0: f64, x0: &[f64], a1: f64, x1: &[f64]) {
+        let n = c.len();
+        let (va0, va1) = (_mm256_set1_pd(a0), _mm256_set1_pd(a1));
+        let cp = c.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let mut r = _mm256_loadu_pd(cp.add(i));
+            r = _mm256_fmadd_pd(va0, _mm256_loadu_pd(x0.as_ptr().add(i)), r);
+            r = _mm256_fmadd_pd(va1, _mm256_loadu_pd(x1.as_ptr().add(i)), r);
+            _mm256_storeu_pd(cp.add(i), r);
+            i += 4;
+        }
+        while i < n {
+            c[i] = a1.mul_add(x1[i], a0.mul_add(x0[i], c[i]));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn fma4_into(row: &mut [f64], a4: [f64; 4], s4: [&[f64]; 4]) {
+        let n = row.len();
+        let va = [
+            _mm256_set1_pd(a4[0]),
+            _mm256_set1_pd(a4[1]),
+            _mm256_set1_pd(a4[2]),
+            _mm256_set1_pd(a4[3]),
+        ];
+        let rp = row.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let mut r = _mm256_loadu_pd(rp.add(j));
+            r = _mm256_fmadd_pd(va[0], _mm256_loadu_pd(s4[0].as_ptr().add(j)), r);
+            r = _mm256_fmadd_pd(va[1], _mm256_loadu_pd(s4[1].as_ptr().add(j)), r);
+            r = _mm256_fmadd_pd(va[2], _mm256_loadu_pd(s4[2].as_ptr().add(j)), r);
+            r = _mm256_fmadd_pd(va[3], _mm256_loadu_pd(s4[3].as_ptr().add(j)), r);
+            _mm256_storeu_pd(rp.add(j), r);
+            j += 4;
+        }
+        while j < n {
+            let mut r = row[j];
+            r = a4[0].mul_add(s4[0][j], r);
+            r = a4[1].mul_add(s4[1][j], r);
+            r = a4[2].mul_add(s4[2][j], r);
+            r = a4[3].mul_add(s4[3][j], r);
+            row[j] = r;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn rhs4_into(rhs: &mut [f64], alpha: f64, x4: [&[f64]; 4], v4: [f64; 4]) {
+        let n = rhs.len();
+        let valpha = _mm256_set1_pd(alpha);
+        let vv = [
+            _mm256_set1_pd(v4[0]),
+            _mm256_set1_pd(v4[1]),
+            _mm256_set1_pd(v4[2]),
+            _mm256_set1_pd(v4[3]),
+        ];
+        let rp = rhs.as_mut_ptr();
+        let mut j = 0;
+        while j + 4 <= n {
+            let mut t = _mm256_mul_pd(vv[0], _mm256_loadu_pd(x4[0].as_ptr().add(j)));
+            t = _mm256_fmadd_pd(vv[1], _mm256_loadu_pd(x4[1].as_ptr().add(j)), t);
+            t = _mm256_fmadd_pd(vv[2], _mm256_loadu_pd(x4[2].as_ptr().add(j)), t);
+            t = _mm256_fmadd_pd(vv[3], _mm256_loadu_pd(x4[3].as_ptr().add(j)), t);
+            let r = _mm256_fmadd_pd(valpha, t, _mm256_loadu_pd(rp.add(j)));
+            _mm256_storeu_pd(rp.add(j), r);
+            j += 4;
+        }
+        while j < n {
+            let mut t = v4[0] * x4[0][j];
+            t = v4[1].mul_add(x4[1][j], t);
+            t = v4[2].mul_add(x4[2][j], t);
+            t = v4[3].mul_add(x4[3][j], t);
+            rhs[j] = alpha.mul_add(t, rhs[j]);
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// NEON arms (2-lane f64).  NEON is baseline on aarch64, so the feature
+// gate is formal; the wrappers still route through `cpu_features()`.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = vdupq_n_f64(0.0);
+        let mut acc1 = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i)));
+            acc1 = vfmaq_f64(acc1, vld1q_f64(ap.add(i + 2)), vld1q_f64(bp.add(i + 2)));
+            i += 4;
+        }
+        if i + 2 <= n {
+            acc0 = vfmaq_f64(acc0, vld1q_f64(ap.add(i)), vld1q_f64(bp.add(i)));
+            i += 2;
+        }
+        let mut s = vaddvq_f64(vaddq_f64(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot3(a: &[f64], b: &[f64], c: &[f64]) -> f64 {
+        let n = a.len();
+        let mut acc = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i + 2 <= n {
+            let ab = vmulq_f64(vld1q_f64(a.as_ptr().add(i)), vld1q_f64(b.as_ptr().add(i)));
+            acc = vfmaq_f64(acc, ab, vld1q_f64(c.as_ptr().add(i)));
+            i += 2;
+        }
+        let mut s = vaddvq_f64(acc);
+        while i < n {
+            s += a[i] * b[i] * c[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(y: &mut [f64], s: f64, x: &[f64]) {
+        let n = y.len();
+        let vs = vdupq_n_f64(s);
+        let (yp, xp) = (y.as_mut_ptr(), x.as_ptr());
+        let mut i = 0;
+        while i + 2 <= n {
+            let r = vfmaq_f64(vld1q_f64(yp.add(i)), vs, vld1q_f64(xp.add(i)));
+            vst1q_f64(yp.add(i), r);
+            i += 2;
+        }
+        while i < n {
+            y[i] = s.mul_add(x[i], y[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fma2_into(c: &mut [f64], a0: f64, x0: &[f64], a1: f64, x1: &[f64]) {
+        let n = c.len();
+        let (va0, va1) = (vdupq_n_f64(a0), vdupq_n_f64(a1));
+        let cp = c.as_mut_ptr();
+        let mut i = 0;
+        while i + 2 <= n {
+            let mut r = vld1q_f64(cp.add(i));
+            r = vfmaq_f64(r, va0, vld1q_f64(x0.as_ptr().add(i)));
+            r = vfmaq_f64(r, va1, vld1q_f64(x1.as_ptr().add(i)));
+            vst1q_f64(cp.add(i), r);
+            i += 2;
+        }
+        while i < n {
+            c[i] = a1.mul_add(x1[i], a0.mul_add(x0[i], c[i]));
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn fma4_into(row: &mut [f64], a4: [f64; 4], s4: [&[f64]; 4]) {
+        let n = row.len();
+        let va = [
+            vdupq_n_f64(a4[0]),
+            vdupq_n_f64(a4[1]),
+            vdupq_n_f64(a4[2]),
+            vdupq_n_f64(a4[3]),
+        ];
+        let rp = row.as_mut_ptr();
+        let mut j = 0;
+        while j + 2 <= n {
+            let mut r = vld1q_f64(rp.add(j));
+            r = vfmaq_f64(r, va[0], vld1q_f64(s4[0].as_ptr().add(j)));
+            r = vfmaq_f64(r, va[1], vld1q_f64(s4[1].as_ptr().add(j)));
+            r = vfmaq_f64(r, va[2], vld1q_f64(s4[2].as_ptr().add(j)));
+            r = vfmaq_f64(r, va[3], vld1q_f64(s4[3].as_ptr().add(j)));
+            vst1q_f64(rp.add(j), r);
+            j += 2;
+        }
+        while j < n {
+            let mut r = row[j];
+            r = a4[0].mul_add(s4[0][j], r);
+            r = a4[1].mul_add(s4[1][j], r);
+            r = a4[2].mul_add(s4[2][j], r);
+            r = a4[3].mul_add(s4[3][j], r);
+            row[j] = r;
+            j += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn rhs4_into(rhs: &mut [f64], alpha: f64, x4: [&[f64]; 4], v4: [f64; 4]) {
+        let n = rhs.len();
+        let valpha = vdupq_n_f64(alpha);
+        let vv = [
+            vdupq_n_f64(v4[0]),
+            vdupq_n_f64(v4[1]),
+            vdupq_n_f64(v4[2]),
+            vdupq_n_f64(v4[3]),
+        ];
+        let rp = rhs.as_mut_ptr();
+        let mut j = 0;
+        while j + 2 <= n {
+            let mut t = vmulq_f64(vv[0], vld1q_f64(x4[0].as_ptr().add(j)));
+            t = vfmaq_f64(t, vv[1], vld1q_f64(x4[1].as_ptr().add(j)));
+            t = vfmaq_f64(t, vv[2], vld1q_f64(x4[2].as_ptr().add(j)));
+            t = vfmaq_f64(t, vv[3], vld1q_f64(x4[3].as_ptr().add(j)));
+            let r = vfmaq_f64(vld1q_f64(rp.add(j)), valpha, t);
+            vst1q_f64(rp.add(j), r);
+            j += 2;
+        }
+        while j < n {
+            let mut t = v4[0] * x4[0][j];
+            t = v4[1].mul_add(x4[1][j], t);
+            t = v4[2].mul_add(x4[2][j], t);
+            t = v4[3].mul_add(x4[3][j], t);
+            rhs[j] = alpha.mul_add(t, rhs[j]);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{
+        dot_scalar, gram_rhs_rank4_scalar, mirror_upper_to_lower, tri_solve_lower_into_scalar,
+        tri_solve_upper_t_into_scalar,
+    };
+    use crate::rng::Rng;
+
+    fn rel_close(a: f64, b: f64, n: usize, mag: f64) -> bool {
+        let tol = SIMD_REL_TOL_PER_ELEM * (n.max(1) as f64) * mag.max(1.0);
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn detection_is_stable_and_consistent() {
+        let f1 = *cpu_features();
+        let f2 = *cpu_features();
+        assert_eq!(f1.usable(), f2.usable());
+        assert_eq!(available(), f1.usable());
+        if available() {
+            assert_ne!(isa_name(), "scalar");
+        } else {
+            assert_eq!(isa_name(), "scalar");
+        }
+    }
+
+    #[test]
+    fn dot_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(71);
+        // lengths straddle every remainder-lane case: 0, <4, 4, 5..8, odd
+        for n in [0usize, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 64, 65, 127] {
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            let got = dot(&a, &b);
+            let want = dot_scalar(&a, &b);
+            let mag: f64 = a.iter().zip(&b).map(|(x, y)| (x * y).abs()).sum();
+            assert!(rel_close(got, want, n, mag), "n={n} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn dot3_matches_naive_within_tolerance() {
+        let mut rng = Rng::new(72);
+        for n in [0usize, 1, 3, 4, 6, 7, 16, 33] {
+            let mut a = vec![0.0; n];
+            let mut b = vec![0.0; n];
+            let mut c = vec![0.0; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            rng.fill_normal(&mut c);
+            let got = dot3(&a, &b, &c);
+            let want: f64 = (0..n).map(|i| a[i] * b[i] * c[i]).sum();
+            let mag: f64 = (0..n).map(|i| (a[i] * b[i] * c[i]).abs()).sum();
+            assert!(rel_close(got, want, n, mag), "n={n}");
+        }
+    }
+
+    #[test]
+    fn axpy_and_fma2_match_scalar() {
+        let mut rng = Rng::new(73);
+        for n in [0usize, 1, 3, 4, 5, 11, 16, 31] {
+            let mut y0 = vec![0.0; n];
+            rng.fill_normal(&mut y0);
+            let mut x0 = vec![0.0; n];
+            let mut x1 = vec![0.0; n];
+            rng.fill_normal(&mut x0);
+            rng.fill_normal(&mut x1);
+            let mut ys = y0.clone();
+            crate::linalg::axpy_scalar(&mut ys, 1.3, &x0);
+            let mut yv = y0.clone();
+            axpy(&mut yv, 1.3, &x0);
+            for i in 0..n {
+                assert!(rel_close(yv[i], ys[i], 1, ys[i].abs()), "axpy n={n} i={i}");
+            }
+            let mut cs = y0.clone();
+            for i in 0..n {
+                cs[i] += 0.7 * x0[i] + -0.2 * x1[i];
+            }
+            let mut cv = y0.clone();
+            fma2_into(&mut cv, 0.7, &x0, -0.2, &x1);
+            for i in 0..n {
+                assert!(rel_close(cv[i], cs[i], 2, cs[i].abs()), "fma2 n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dots_into_is_bitwise_dot_per_row() {
+        let mut rng = Rng::new(74);
+        for (rows, k) in [(0usize, 4usize), (1, 3), (5, 16), (7, 5), (12, 17)] {
+            let mut panel = crate::linalg::Mat::zeros(rows, k);
+            rng.fill_normal(panel.data_mut());
+            let mut x = vec![0.0; k];
+            rng.fill_normal(&mut x);
+            let mut out = vec![0.5; rows];
+            dots_into(&x, panel.view(), &mut out);
+            for j in 0..rows {
+                let want = 0.5 + dot(&x, panel.row(j));
+                assert_eq!(out[j].to_bits(), want.to_bits(), "rows={rows} k={k} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_tile_is_bit_identical_to_gram_rank4() {
+        // the PR 4 structural contract, restated inside the SIMD family
+        let mut rng = Rng::new(75);
+        for (k, nnz) in [(3usize, 1usize), (8, 31), (16, 32), (16, 70), (5, 129)] {
+            let mut xs = vec![0.0; nnz * k];
+            let mut vals = vec![0.0; nnz];
+            rng.fill_normal(&mut xs);
+            rng.fill_normal(&mut vals);
+            let mut a4 = crate::linalg::Mat::eye(k);
+            let mut r4 = vec![0.25; k];
+            gram_rhs_rank4(&mut a4, &mut r4, 0.9, &xs, &vals);
+            let mut at = crate::linalg::Mat::eye(k);
+            let mut rt = vec![0.25; k];
+            let mut t0 = 0;
+            while t0 < nnz {
+                let t1 = (t0 + crate::linalg::GRAM_TILE_ROWS).min(nnz);
+                gram_rhs_tile(&mut at, &mut rt, 0.9, &xs[t0 * k..t1 * k], &vals[t0..t1]);
+                t0 = t1;
+            }
+            assert_eq!(a4.max_abs_diff(&at), 0.0, "Λ k={k} nnz={nnz}");
+            for (x, y) in r4.iter().zip(&rt) {
+                assert_eq!(x.to_bits(), y.to_bits(), "rhs k={k} nnz={nnz}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matches_scalar_within_tolerance() {
+        let mut rng = Rng::new(76);
+        for (k, nnz) in [(4usize, 1usize), (8, 3), (16, 11), (5, 37), (33, 64)] {
+            let mut xs = vec![0.0; nnz * k];
+            let mut vals = vec![0.0; nnz];
+            rng.fill_normal(&mut xs);
+            rng.fill_normal(&mut vals);
+            let mut av = crate::linalg::Mat::eye(k);
+            let mut rv = vec![0.5; k];
+            gram_rhs_rank4(&mut av, &mut rv, 1.7, &xs, &vals);
+            mirror_upper_to_lower(&mut av);
+            let mut a_s = crate::linalg::Mat::eye(k);
+            let mut rs = vec![0.5; k];
+            gram_rhs_rank4_scalar(&mut a_s, &mut rs, 1.7, &xs, &vals);
+            mirror_upper_to_lower(&mut a_s);
+            let tol = SIMD_REL_TOL_PER_ELEM * (nnz as f64) * 16.0;
+            assert!(av.max_abs_diff(&a_s) < tol.max(1e-10), "Λ k={k} nnz={nnz}");
+            for (x, y) in rv.iter().zip(&rs) {
+                assert!((x - y).abs() < tol.max(1e-10), "rhs k={k} nnz={nnz}");
+            }
+        }
+    }
+
+    #[test]
+    fn tri_solves_match_scalar_within_tolerance() {
+        let mut rng = Rng::new(77);
+        for n in [1usize, 2, 3, 5, 9, 16, 31] {
+            // well-conditioned lower-triangular factor
+            let mut l = crate::linalg::Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..i {
+                    l[(i, j)] = 0.3 * ((i + 2 * j) % 5) as f64 / 5.0;
+                }
+                l[(i, i)] = 1.5 + (i % 3) as f64 * 0.25;
+            }
+            let mut b = vec![0.0; n];
+            rng.fill_normal(&mut b);
+            let mut ys = vec![0.0; n];
+            tri_solve_lower_into_scalar(&l, &b, &mut ys);
+            let mut yv = vec![0.0; n];
+            tri_solve_lower_into(&l, &b, &mut yv);
+            let mut xs = vec![0.0; n];
+            tri_solve_upper_t_into_scalar(&l, &b, &mut xs);
+            let mut xv = vec![0.0; n];
+            tri_solve_upper_t_into(&l, &b, &mut xv);
+            let tol = SIMD_REL_TOL_PER_ELEM * (n as f64) * 64.0;
+            for i in 0..n {
+                assert!((ys[i] - yv[i]).abs() <= tol.max(1e-12), "lower n={n} i={i}");
+                assert!((xs[i] - xv[i]).abs() <= tol.max(1e-12), "upper_t n={n} i={i}");
+            }
+        }
+    }
+
+    // NOTE: no unit test toggles `set_strict` here — flipping the
+    // process-global flag races the dispatch-bitwise tests above when
+    // the suite runs with SMURFF_KERNEL_ISA=simd.  Strict-mode coverage
+    // lives in the dedicated `tests/strict_mode.rs` binary, which owns
+    // the flag for its whole process.
+}

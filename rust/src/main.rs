@@ -26,7 +26,9 @@ const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|b
   train    --config <toml> | --data <mtx> [--test <mtx>] | --tensor <tns> [--test <tns>]
            | --synthetic <chembl|movielens>
            [--k N] [--burnin N] [--nsamples N] [--seed N] [--threads N]
-           [--engine native|xla] [--noise fixed|adaptive|probit] [--alpha F]
+           [--engine native[:scalar|simd|auto]|xla] [--noise fixed|adaptive|probit] [--alpha F]
+           [--kernel-isa scalar|naive|simd|auto]   (process-wide kernel backend;
+            --strict pins the bit-reproducible scalar path everywhere)
            [--prior normal|macau | normal,normal,... per tensor mode] [--side <mtx>]
            [--checkpoint <dir>] [--verbose] [--save-dir <dir>] [--save-freq N]
            [--nodes N] [--comm sync|async[:S]|pprop[:R]] [--net instant|cluster]
@@ -77,11 +79,22 @@ fn run() -> anyhow::Result<()> {
         "metrics",
         "shutdown-server",
         "diag",
+        "strict",
     ])
     .map_err(anyhow::Error::msg)?;
     if args.get_bool("help") || args.positionals.is_empty() {
         println!("{USAGE}");
         return Ok(());
+    }
+    // Resolve the kernel ISA once, before any subcommand touches a
+    // kernel: `--strict` pins the scalar seed path (bit-reproducible
+    // runs), `--kernel-isa` overrides the SMURFF_KERNEL_ISA env.
+    if args.get_bool("strict") {
+        smurff::linalg::simd::set_strict(true);
+    }
+    if let Some(isa) = args.get("kernel-isa") {
+        let b = smurff::linalg::Backend::parse(isa).map_err(anyhow::Error::msg)?;
+        smurff::linalg::Backend::set_global(b);
     }
     match args.positionals[0].as_str() {
         "train" => cmd_train(&args),
@@ -190,7 +203,16 @@ fn attach_engine(b: SessionBuilder, engine: &str) -> anyhow::Result<SessionBuild
             let e = smurff::runtime::XlaEngine::new(&dir)?;
             Ok(b.engine(Box::new(e)))
         }
-        other => anyhow::bail!("unknown engine '{other}' (native|xla)"),
+        other => {
+            // `native:<isa>` pins the session's kernel family through the
+            // same dispatch seam the engine choice rides — one axis for
+            // "who runs the sweep" (native/xla) and "which kernels".
+            if let Some(isa) = other.strip_prefix("native:") {
+                let backend = smurff::linalg::Backend::parse(isa).map_err(anyhow::Error::msg)?;
+                return Ok(b.kernel_backend(backend));
+            }
+            anyhow::bail!("unknown engine '{other}' (native[:scalar|simd|auto]|xla)")
+        }
     }
 }
 
@@ -397,6 +419,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         session.engine_name(),
         session.row_prior.describe(),
     );
+    println!(
+        "kernel ISA: {} ({})",
+        session.kernel_backend().isa_label(),
+        smurff::hwmodel::cpu_feature_summary()
+    );
     let result = session.try_run()?;
     if let Some(dir) = args.get("checkpoint") {
         session.checkpoint(Path::new(dir))?;
@@ -458,9 +485,19 @@ fn run_distributed(
         anyhow::bail!("--checkpoint is not supported with --nodes; use --save-dir/--save-freq");
     }
     let engine = args.get_str("engine", "native");
-    if engine != "native" {
-        anyhow::bail!("--engine {engine} cannot combine with --nodes (workers are native-only)");
-    }
+    let mut isa = smurff::linalg::Backend::global();
+    let builder = match engine.as_str() {
+        // native:<isa> only pins the kernel family, which replicates to
+        // every worker through the tuning snapshot — allowed with --nodes
+        "native" => builder,
+        e if e.starts_with("native:") => {
+            isa = smurff::linalg::Backend::parse(&e["native:".len()..])
+                .map_err(anyhow::Error::msg)?
+                .sanitized();
+            attach_engine(builder, e)?
+        }
+        e => anyhow::bail!("--engine {e} cannot combine with --nodes (workers are native-only)"),
+    };
     let dist = builder.distributed(nodes, strategy, net).build_distributed();
     println!(
         "distributed training: K={} burnin={} nsamples={} nodes={nodes} comm={}",
@@ -468,6 +505,11 @@ fn run_distributed(
         cfg.burnin,
         cfg.nsamples,
         strategy.name(),
+    );
+    println!(
+        "kernel ISA: {} ({}) — replicated to all ranks via the tuning snapshot",
+        isa.isa_label(),
+        smurff::hwmodel::cpu_feature_summary()
     );
     let r = dist.run()?;
     for c in &r.comm {

@@ -116,12 +116,29 @@ impl FactorRows for crate::linalg::MatRef<'_> {
 /// per-sample Hadamard-dot.  Multiplications run in ascending-mode
 /// order and the accumulation replays [`crate::linalg::dot`]'s 4-lane
 /// pattern, so for two modes this is bit-identical to
-/// [`predict_cells`]'s `dot`.
+/// [`predict_cells`]'s `dot` — under every kernel ISA: when the `Simd`
+/// backend is live, the 2-mode case routes to [`crate::linalg::simd::dot`]
+/// (the same reduction `dot` dispatches to) and the 3-mode case to
+/// [`crate::linalg::simd::dot3`]; ≥ 4 modes stay scalar (no tensor view
+/// we run has them on the hot path).
 #[inline]
 pub fn hadamard_dot<F: FactorRows>(factors: &[F], coords: &[usize]) -> f64 {
     debug_assert_eq!(factors.len(), coords.len());
     let k = factors[0].factor_cols();
     let first = factors[0].factor_row(coords[0]);
+    if crate::linalg::simd_enabled() {
+        match factors.len() {
+            2 => return crate::linalg::simd::dot(first, factors[1].factor_row(coords[1])),
+            3 => {
+                return crate::linalg::simd::dot3(
+                    first,
+                    factors[1].factor_row(coords[1]),
+                    factors[2].factor_row(coords[2]),
+                )
+            }
+            _ => {}
+        }
+    }
     let prod = |c: usize| {
         let mut p = first[c];
         for (f, &i) in factors[1..].iter().zip(&coords[1..]) {
@@ -246,9 +263,33 @@ mod tests {
             let mut v = Mat::zeros(2, k);
             rng.fill_normal(u.data_mut());
             rng.fill_normal(v.data_mut());
-            let a = crate::linalg::dot(u.row(1), v.row(0));
+            // hadamard_dot dispatches like linalg::dot, so it must land
+            // bit-exactly on one of the two families (comparing against
+            // both keeps this immune to a concurrent global-backend flip
+            // between the reference call and the hadamard call)
+            let scalar = crate::linalg::dot_scalar(u.row(1), v.row(0));
+            let vector = crate::linalg::simd::dot(u.row(1), v.row(0));
             let b = hadamard_dot(&[&u, &v], &[1, 0]);
-            assert_eq!(a, b, "k={k}");
+            assert!(
+                b.to_bits() == scalar.to_bits() || b.to_bits() == vector.to_bits(),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn hadamard_dot_three_modes_matches_naive_product() {
+        let mut rng = Rng::new(63);
+        for k in [1usize, 2, 3, 5, 8, 17] {
+            let mut u = Mat::zeros(1, k);
+            let mut v = Mat::zeros(1, k);
+            let mut w = Mat::zeros(1, k);
+            rng.fill_normal(u.data_mut());
+            rng.fill_normal(v.data_mut());
+            rng.fill_normal(w.data_mut());
+            let naive: f64 = (0..k).map(|c| u.row(0)[c] * v.row(0)[c] * w.row(0)[c]).sum();
+            let got = hadamard_dot(&[&u, &v, &w], &[0, 0, 0]);
+            assert!((got - naive).abs() < 1e-10 * (k as f64 + 1.0), "k={k}");
         }
     }
 

@@ -395,6 +395,8 @@ impl Engine {
             ("uptime_seconds", JsonValue::num(self.started.elapsed().as_secs_f64())),
             ("version", JsonValue::str(env!("CARGO_PKG_VERSION"))),
             ("snapshots", JsonValue::num(s.nsamples() as f64)),
+            // which kernel family the serving math dispatches to (ISSUE 8)
+            ("kernel_isa", JsonValue::str(crate::linalg::Backend::global().isa_label())),
         ];
         if s.nviews() > 0 && s.nmodes(0) == 2 {
             pairs.push(("ncols", JsonValue::num(s.ncols(0) as f64)));
@@ -686,6 +688,9 @@ pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle>
         session.zero_copy(),
         cfg.addr
     );
+    // expose the selected kernel family in the metrics exposition
+    // (`smurff_kernel_isa{isa="..."} 1`) alongside the status reply
+    crate::hwmodel::publish_kernel_isa_gauge();
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", cfg.addr))?;
     let addr = listener.local_addr()?;

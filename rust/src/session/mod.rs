@@ -305,6 +305,19 @@ impl SessionBuilder {
         self
     }
 
+    /// Pin this session's kernel ISA ([`crate::linalg::Backend`])
+    /// without disturbing the other tuning switches: the backend rides
+    /// the session's [`SweepTuning`] snapshot, so it replicates to
+    /// distributed workers with the rest of the tuning and every rank
+    /// runs the same kernel family (keeping the sync hash assert
+    /// meaningful).  `Simd` is sanitized to scalar `Blocked` when the
+    /// CPU lacks AVX2+FMA/NEON.
+    pub fn kernel_backend(mut self, backend: crate::linalg::Backend) -> Self {
+        let base = self.tuning.unwrap_or_else(SweepTuning::global);
+        self.tuning = Some(base.with_backend(backend));
+        self
+    }
+
     pub fn row_prior(mut self, kind: PriorKind) -> Self {
         self.row_prior = match kind {
             PriorKind::Normal => PriorChoice::Normal,
@@ -623,6 +636,12 @@ impl TrainSession {
     /// [`SweepTuning::global`] at build time).
     pub fn tuning(&self) -> SweepTuning {
         self.tuning
+    }
+
+    /// The kernel ISA this session's sweeps run on (strict-masked at
+    /// query time, like the hot path itself).
+    pub fn kernel_backend(&self) -> crate::linalg::Backend {
+        self.tuning.backend.effective()
     }
 
     /// One full Gibbs iteration (Algorithm 1's outer-loop body) —

@@ -1,0 +1,143 @@
+//! ISSUE 8 strict mode: `simd::set_strict(true)` pins the scalar seed
+//! path everywhere — `Backend::global()` and `Backend::effective()`
+//! mask `Simd` down to `Blocked` — so a strict run is bit-identical to
+//! the pre-SIMD seed chain regardless of CPU features or the
+//! `SMURFF_KERNEL_ISA` environment.
+//!
+//! These tests live in their own integration binary ON PURPOSE: the
+//! strict flag is process-global, and toggling it inside the lib test
+//! binary would flip concurrently running dispatch tests between kernel
+//! families mid-assert.  Integration test binaries run sequentially,
+//! and within this binary a mutex serializes the toggling tests.
+
+use smurff::linalg::{simd, Backend};
+use std::sync::{Mutex, OnceLock};
+
+/// Serialize every test that touches the process-global strict flag.
+fn strict_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    match LOCK.get_or_init(|| Mutex::new(())).lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// RAII guard: strict on for the scope, restored off on drop (also on
+/// panic, so one failing test cannot leak strict mode into the next).
+struct StrictOn(std::sync::MutexGuard<'static, ()>);
+
+impl StrictOn {
+    fn new() -> StrictOn {
+        let g = strict_lock();
+        simd::set_strict(true);
+        StrictOn(g)
+    }
+}
+
+impl Drop for StrictOn {
+    fn drop(&mut self) {
+        simd::set_strict(false);
+    }
+}
+
+#[test]
+fn strict_masks_simd_to_the_scalar_backend() {
+    let _strict = StrictOn::new();
+    assert!(simd::strict());
+    assert_eq!(Backend::Simd.effective(), Backend::Blocked);
+    assert_eq!(Backend::Simd.isa_label(), "scalar");
+    // the global dispatch answer is masked too, whatever the env chose
+    assert_ne!(Backend::global(), Backend::Simd);
+    assert!(!smurff::linalg::simd_enabled());
+    drop(_strict);
+    // off again: Simd resolves by CPU capability alone
+    let _g = strict_lock();
+    assert!(!simd::strict());
+    let expect = if simd::available() { Backend::Simd } else { Backend::Blocked };
+    assert_eq!(Backend::Simd.effective(), expect);
+}
+
+#[test]
+fn strict_sessions_are_bit_identical_to_the_scalar_seed_path_across_threads() {
+    // a Simd-pinned session under strict must replay the exact chain of
+    // an (unstricted) scalar-pinned session — the seed arithmetic — at
+    // every thread count; this is the reproducibility contract that
+    // property tests and the distributed sync hash assert lean on
+    let (train, test) = smurff::data::movielens_like(70, 50, 2000, 0.2, 911);
+    let run_one = |backend: Backend, threads: usize| {
+        let cfg = smurff::session::SessionConfig {
+            num_latent: 5,
+            burnin: 3,
+            nsamples: 5,
+            seed: 911,
+            threads,
+            ..Default::default()
+        };
+        let mut s = smurff::session::SessionBuilder::new(cfg)
+            .add_view(
+                smurff::data::MatrixConfig::SparseUnknown(train.clone()),
+                smurff::noise::NoiseConfig::Adaptive { sn_init: 1.0, sn_max: 10.0 },
+                Some(smurff::data::TestSet::from_sparse(&test)),
+            )
+            .kernel_backend(backend)
+            .build();
+        s.run();
+        s.state_hash()
+    };
+    // reference: the scalar seed path — computed UNDER strict so the
+    // globally-dispatched dot/axpy calls inside the row are scalar even
+    // when SMURFF_KERNEL_ISA=simd forced the process global to Simd
+    let _strict = StrictOn::new();
+    let seed_hash = run_one(Backend::Blocked, 1);
+    for threads in [1usize, 4, 7] {
+        // under strict, even an explicit Simd pin must replay the seed
+        // chain bit-for-bit (effective() masks it at every row update)
+        assert_eq!(
+            run_one(Backend::Simd, threads),
+            seed_hash,
+            "strict Simd pin diverged from the seed path at {threads} threads"
+        );
+        assert_eq!(run_one(Backend::Blocked, threads), seed_hash);
+    }
+    drop(_strict);
+    // and strict changed nothing vs an ordinary scalar run: when the
+    // process global already dispatches the scalar family (i.e. no
+    // forced-SIMD environment), an unstricted Blocked-pinned session
+    // IS the seed chain
+    let _g = strict_lock();
+    if Backend::global() != Backend::Simd {
+        assert_eq!(run_one(Backend::Blocked, 1), seed_hash);
+    }
+}
+
+#[test]
+fn strict_distributed_sync_replays_the_seed_chain() {
+    let (train, test) = smurff::data::movielens_like(50, 40, 1200, 0.2, 912);
+    let mut c = smurff::session::SessionConfig {
+        num_latent: 4,
+        burnin: 2,
+        nsamples: 4,
+        seed: 912,
+        threads: 1,
+        ..Default::default()
+    };
+    c.diag = true; // per-iteration cross-rank hash assert on
+    let build = || {
+        smurff::session::SessionBuilder::new(c.clone())
+            .add_view(
+                smurff::data::MatrixConfig::SparseUnknown(train.clone()),
+                smurff::noise::NoiseConfig::default(),
+                Some(smurff::data::TestSet::from_sparse(&test)),
+            )
+            .kernel_backend(Backend::Simd)
+    };
+    let _strict = StrictOn::new();
+    let mut single = build().build();
+    single.run();
+    let dist = build()
+        .distributed(2, smurff::distributed::Strategy::Sync, smurff::distributed::NetSpec::instant())
+        .build_distributed();
+    let r = dist.run().expect("strict sync run must keep the hash assert green");
+    let rep = r.result.diagnostics.as_ref().expect("rank 0 reports");
+    assert_eq!(rep.state_hash, single.state_hash());
+}

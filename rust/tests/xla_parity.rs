@@ -1,10 +1,12 @@
-//! End-to-end parity between the native engine and the XLA AOT engine
-//! (the full three-layer stack: Rust coordinator → HLO artifacts
-//! compiled from the JAX/Pallas layers).
+//! End-to-end parity across the *engine choice* axis — the XLA AOT
+//! engine and the native SIMD kernel backends both ride the same
+//! dispatch seam (ISSUE 8): "who runs the sweep" (native/xla) and
+//! "which kernel family" (`native:scalar` / `native:simd`) are one
+//! abstraction, so the parity harness is shared.
 //!
-//! These tests require `make artifacts`; they self-skip (with a stderr
-//! note) when the manifest is absent so `cargo test` stays green in a
-//! bare checkout.
+//! The XLA tests require `make artifacts`; the SIMD test requires
+//! AVX2+FMA or NEON.  Each self-skips (with a stderr note) when its
+//! prerequisite is absent so `cargo test` stays green everywhere.
 
 use smurff::session::{SessionConfig, TrainSession};
 
@@ -56,6 +58,53 @@ fn full_bmf_session_native_vs_xla() {
     let truth: Vec<f64> = test.triplets().map(|t| t.2).collect();
     let base = smurff::model::rmse(&vec![3.0; truth.len()], &truth);
     assert!(r_xla.rmse < base);
+}
+
+/// The `native:scalar` vs `native:simd` leg of the same parity matrix:
+/// identical RNG streams, FMA-reassociated vs seed float arithmetic —
+/// the RMSE band mirrors the f32-vs-f64 contract of the XLA leg above
+/// (tolerance rationale in `smurff::linalg::simd` docs).
+#[test]
+fn full_bmf_session_scalar_vs_simd_kernels() {
+    use smurff::linalg::Backend;
+    if !smurff::linalg::simd::available() {
+        eprintln!("skipping: this CPU has no AVX2+FMA/NEON");
+        return;
+    }
+    let (train, test) = smurff::data::movielens_like(300, 200, 12_000, 0.2, 55);
+    let cfg = SessionConfig {
+        num_latent: 16,
+        burnin: 5,
+        nsamples: 15,
+        seed: 55,
+        threads: 2,
+        ..Default::default()
+    };
+    let run_with = |backend: Backend| {
+        let mut s = smurff::session::SessionBuilder::new(cfg.clone())
+            .add_view(
+                smurff::data::MatrixConfig::SparseUnknown(train.clone()),
+                smurff::noise::NoiseConfig::default(),
+                Some(smurff::data::TestSet::from_sparse(&test)),
+            )
+            .kernel_backend(backend)
+            .build();
+        assert_eq!(s.kernel_backend(), backend);
+        s.run()
+    };
+    let r_scalar = run_with(Backend::Blocked);
+    let r_simd = run_with(Backend::Simd);
+    assert!(r_scalar.rmse.is_finite() && r_simd.rmse.is_finite());
+    assert!(
+        (r_scalar.rmse - r_simd.rmse).abs() < 0.05,
+        "scalar {} vs simd {}",
+        r_scalar.rmse,
+        r_simd.rmse
+    );
+    // and both actually learned
+    let truth: Vec<f64> = test.triplets().map(|t| t.2).collect();
+    let base = smurff::model::rmse(&vec![3.0; truth.len()], &truth);
+    assert!(r_simd.rmse < base);
 }
 
 #[test]
