@@ -124,7 +124,7 @@ pub fn run(quick: bool) -> Report {
     let node_sweep: Vec<usize> = vec![1, 2, 4, 8];
     let net = NetSpec::cluster();
     let gaspi_iters = iters.min(3);
-    let r1 = baselines::gaspi_like::run_bmf(&train, &test, k, gaspi_iters, 1, net, 42);
+    let r1 = baselines::gaspi_like::run_bmf(&train, &test, k, gaspi_iters, 1, net.clone(), 42);
     for &nodes in &node_sweep {
         // measured on this host (threads share its cores) + projection
         // for a real cluster: compute scales 1/nodes, allgather adds
@@ -136,7 +136,7 @@ pub fn run(quick: bool) -> Report {
         let measured = if nodes == 1 {
             r1.clone()
         } else {
-            baselines::gaspi_like::run_bmf(&train, &test, k, gaspi_iters, nodes, net, 42)
+            baselines::gaspi_like::run_bmf(&train, &test, k, gaspi_iters, nodes, net.clone(), 42)
         };
         t.row(vec![
             format!("BMF+GASPI-like ({nodes} nodes, projected {})", fmt_s(projected)),

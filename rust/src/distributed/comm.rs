@@ -17,30 +17,83 @@
 //! totals into the global registry as labelled
 //! `smurff_dist_*{strategy=…,rank=…}` metrics at run end (ISSUE 6: one
 //! counter system).
+//!
+//! ## Fault tolerance (ISSUE 9)
+//!
+//! When the [`NetSpec`] carries a [`FaultPlan`] or a receive timeout,
+//! the substrate switches to its fault-tolerant path:
+//!
+//! * every message carries a per-sender sequence number; `send` is
+//!   at-least-once (an injected drop loses the first transmission and
+//!   retransmits, counted in `smurff_comm_retries_total`) and the
+//!   receiver suppresses duplicates by sequence number;
+//! * [`Comm::recv_ft`] waits with a bounded exponential backoff up to
+//!   the configured timeout per probe, heartbeating on the shared
+//!   [`ClusterHealth`] board and probing its [`FailureDetector`]; a
+//!   peer whose heartbeat stalls for `detect_probes` consecutive probes
+//!   is declared dead and the call returns [`RankDeath`] so the session
+//!   layer can re-shard and warm-restart (never hanging the cluster);
+//! * the barrier becomes an arrival-counter barrier that skips dead
+//!   ranks, and collectives expect contributions from live ranks only.
+//!
+//! Without a fault plan and without a timeout, behaviour is bit-for-bit
+//! the pre-ISSUE-9 substrate: blocking receives, `std::sync::Barrier`,
+//! panics on torn-down peers.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::HashSet;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Barrier};
+use std::time::Duration;
 
+use super::fault::{ClusterHealth, FailureDetector, FaultKind, FaultPlan};
 use crate::util::Timer;
 
-/// Simulated interconnect properties.
-#[derive(Debug, Clone, Copy)]
+/// Receive-timeout probe window when fault tolerance is on but no
+/// explicit `--recv-timeout` was given.
+pub const DEFAULT_RECV_TIMEOUT_MS: u64 = 200;
+
+/// Simulated interconnect properties (+ the ISSUE 9 chaos schedule).
+#[derive(Debug, Clone)]
 pub struct NetSpec {
     /// one-way message latency
     pub latency_us: f64,
     /// per-byte cost (1/bandwidth)
     pub gbs: f64,
+    /// deterministic fault-injection schedule; `Some` switches the
+    /// substrate to its fault-tolerant path
+    pub fault: Option<FaultPlan>,
+    /// receive-timeout probe window in ms; `Some` switches the
+    /// substrate to its fault-tolerant path even without a fault plan
+    pub recv_timeout_ms: Option<u64>,
 }
 
 impl NetSpec {
     /// Zero-cost interconnect (pure shared-memory behaviour).
     pub fn instant() -> NetSpec {
-        NetSpec { latency_us: 0.0, gbs: f64::INFINITY }
+        NetSpec { latency_us: 0.0, gbs: f64::INFINITY, fault: None, recv_timeout_ms: None }
     }
 
     /// Infiniband-ish cluster interconnect.
     pub fn cluster() -> NetSpec {
-        NetSpec { latency_us: 2.0, gbs: 10.0 }
+        NetSpec { latency_us: 2.0, gbs: 10.0, fault: None, recv_timeout_ms: None }
+    }
+
+    /// Attach a chaos schedule (enables the fault-tolerant path).
+    pub fn with_fault(mut self, plan: FaultPlan) -> NetSpec {
+        self.fault = Some(plan);
+        self
+    }
+
+    /// Set the receive-timeout probe window (enables the fault-tolerant
+    /// path).
+    pub fn with_recv_timeout_ms(mut self, ms: u64) -> NetSpec {
+        self.recv_timeout_ms = Some(ms.max(1));
+        self
+    }
+
+    /// Does this spec run the fault-tolerant substrate?
+    pub fn fault_tolerant(&self) -> bool {
+        self.fault.is_some() || self.recv_timeout_ms.is_some()
     }
 
     fn delay_for(&self, bytes: usize) -> std::time::Duration {
@@ -49,12 +102,76 @@ impl NetSpec {
     }
 }
 
-/// A message between nodes: a tagged row-block of f64s.
+/// A message between nodes: a tagged row-block of f64s.  `seq` is the
+/// sender's monotone sequence number — the receiver's duplicate
+/// suppression key under at-least-once delivery.
 #[derive(Debug, Clone)]
 pub struct Block {
     pub from: usize,
     pub tag: u64,
+    pub seq: u64,
     pub data: Vec<f64>,
+}
+
+/// A peer was declared dead (heartbeat stalled through the detector's
+/// probe budget).  Carries the global rank of the newly dead peer so
+/// the session layer can re-shard around it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankDeath(pub usize);
+
+impl std::fmt::Display for RankDeath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank {} declared dead (heartbeat stalled)", self.0)
+    }
+}
+
+impl std::error::Error for RankDeath {}
+
+/// Per-sender duplicate-suppression window.
+#[derive(Default)]
+struct SeqSeen {
+    max: u64,
+    seen: HashSet<u64>,
+}
+
+impl SeqSeen {
+    /// Record `seq`; returns false when it was already delivered.
+    fn accept(&mut self, seq: u64) -> bool {
+        if !self.seen.insert(seq) {
+            return false;
+        }
+        self.max = self.max.max(seq);
+        if self.seen.len() > 2048 {
+            let floor = self.max.saturating_sub(1024);
+            self.seen.retain(|&s| s >= floor);
+        }
+        true
+    }
+}
+
+/// Pre-resolved fault metric handles (cold-path registry lookups hoisted
+/// out of the per-message path).
+struct FaultMeters {
+    retries: Arc<crate::obs::Counter>,
+    delay: Arc<crate::obs::Counter>,
+    drop: Arc<crate::obs::Counter>,
+    dup: Arc<crate::obs::Counter>,
+    reorder: Arc<crate::obs::Counter>,
+}
+
+impl FaultMeters {
+    fn new() -> FaultMeters {
+        let kind = |k: &str| {
+            crate::obs::counter(&format!("smurff_fault_injected_total{{kind=\"{k}\"}}"))
+        };
+        FaultMeters {
+            retries: crate::obs::counter("smurff_comm_retries_total"),
+            delay: kind("delay"),
+            drop: kind("drop"),
+            dup: kind("dup"),
+            reorder: kind("reorder"),
+        }
+    }
 }
 
 /// Per-node communicator handle.
@@ -71,6 +188,21 @@ pub struct Comm {
     /// bytes sent / seconds spent inside communication calls
     /// (send/recv/barrier, including the simulated wire cost)
     meter: crate::obs::CommMeter,
+    /// ---- fault-tolerant path state (inert when `!fault_tolerant()`)
+    health: Arc<ClusterHealth>,
+    detector: FailureDetector,
+    /// deaths this Comm has already *reported* to its caller (a death is
+    /// surfaced exactly once; afterwards the rank is simply skipped)
+    known_dead: Vec<bool>,
+    /// per-sender sequence numbers seen (duplicate suppression)
+    seen: Vec<SeqSeen>,
+    /// monotone sequence number of my next send
+    next_seq: u64,
+    /// reorder injection: at most one held-back message per destination,
+    /// shipped after the next message to that peer (or at the next
+    /// blocking call)
+    held: Vec<Option<Block>>,
+    meters: Option<FaultMeters>,
 }
 
 impl Comm {
@@ -84,20 +216,51 @@ impl Comm {
             receivers.push(rx);
         }
         let barrier = Arc::new(Barrier::new(size));
+        let health = Arc::new(ClusterHealth::new(size));
+        let probes = net.fault.as_ref().map(|f| f.detect_probes).unwrap_or(8);
+        let ft = net.fault_tolerant();
         receivers
             .into_iter()
             .enumerate()
             .map(|(rank, inbox)| Comm {
                 rank,
                 size,
-                net,
+                net: net.clone(),
                 senders: senders.clone(),
                 inbox,
                 barrier: barrier.clone(),
                 stash: Vec::new(),
                 meter: crate::obs::CommMeter::new(),
+                health: health.clone(),
+                detector: FailureDetector::new(size, probes),
+                known_dead: vec![false; size],
+                seen: (0..size).map(|_| SeqSeen::default()).collect(),
+                next_seq: 0,
+                held: (0..size).map(|_| None).collect(),
+                meters: ft.then(FaultMeters::new),
             })
             .collect()
+    }
+
+    /// Is the fault-tolerant path active on this cluster?
+    pub fn fault_tolerant(&self) -> bool {
+        self.net.fault_tolerant()
+    }
+
+    /// The shared health board (heartbeats, death flags, recovery
+    /// rendezvous state).
+    pub fn health(&self) -> &Arc<ClusterHealth> {
+        &self.health
+    }
+
+    /// Has `rank` been declared dead?
+    pub fn is_rank_dead(&self, rank: usize) -> bool {
+        self.health.is_dead(rank)
+    }
+
+    /// Number of live peers this rank still exchanges with.
+    pub fn live_peers(&self) -> usize {
+        (0..self.size).filter(|&p| p != self.rank && !self.health.is_dead(p)).count()
     }
 
     /// Bytes sent by this node (for the comm/compute accounting).
@@ -110,8 +273,37 @@ impl Comm {
         self.meter.seconds()
     }
 
-    /// Send a block to `to` (applies the simulated wire cost).
+    fn timeout(&self) -> Duration {
+        Duration::from_millis(self.net.recv_timeout_ms.unwrap_or(DEFAULT_RECV_TIMEOUT_MS))
+    }
+
+    /// Put one block on a peer's channel.  On the fault-tolerant path a
+    /// torn-down peer is not an error (it was, or is about to be,
+    /// declared dead); otherwise it is the pre-existing hard failure.
+    fn enqueue(&self, to: usize, b: Block) {
+        if self.fault_tolerant() {
+            let _ = self.senders[to].send(b);
+        } else {
+            self.senders[to].send(b).expect("peer hung up");
+        }
+    }
+
+    /// Ship any reorder-held messages (called before every blocking
+    /// operation so a held message can never deadlock the cluster).
+    fn flush_held(&mut self) {
+        for to in 0..self.size {
+            if let Some(b) = self.held[to].take() {
+                self.enqueue(to, b);
+            }
+        }
+    }
+
+    /// Send a block to `to` (applies the simulated wire cost, then the
+    /// fault plan's injections).  Sends to dead ranks are dropped.
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<f64>) {
+        if self.fault_tolerant() && self.health.is_dead(to) {
+            return;
+        }
         let t = Timer::start();
         let bytes = data.len() * 8;
         self.meter.add_bytes(bytes as u64);
@@ -119,20 +311,73 @@ impl Comm {
         if !d.is_zero() {
             std::thread::sleep(d);
         }
-        self.senders[to]
-            .send(Block { from: self.rank, tag, data })
-            .expect("peer hung up");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let b = Block { from: self.rank, tag, seq, data };
+        match &self.net.fault {
+            Some(f) if f.perturbs_messages() => {
+                let m = self.meters.as_ref().expect("fault path has meters");
+                if f.roll(FaultKind::Delay, self.rank, to, tag, seq) {
+                    m.delay.add(1);
+                    std::thread::sleep(Duration::from_secs_f64(f.delay_us * 1e-6));
+                }
+                // a "dropped" first transmission is retransmitted right
+                // away: at-least-once delivery, one retry accounted
+                if f.roll(FaultKind::Drop, self.rank, to, tag, seq) {
+                    m.drop.add(1);
+                    m.retries.add(1);
+                }
+                let duplicate = f.roll(FaultKind::Duplicate, self.rank, to, tag, seq);
+                if f.roll(FaultKind::Reorder, self.rank, to, tag, seq)
+                    && self.held[to].is_none()
+                {
+                    // hold this message; it ships after the next message
+                    // to the same peer (or at the next blocking call)
+                    m.reorder.add(1);
+                    self.held[to] = Some(b);
+                } else {
+                    self.enqueue(to, b.clone());
+                    if duplicate {
+                        m.dup.add(1);
+                        self.enqueue(to, b);
+                    }
+                    if let Some(h) = self.held[to].take() {
+                        self.enqueue(to, h);
+                    }
+                }
+            }
+            _ => self.enqueue(to, b),
+        }
         self.meter.add_seconds(t.elapsed_s());
     }
 
     /// Blocking receive of the next block with `tag`.  Messages from
     /// peers already in a later phase are stashed and delivered when
-    /// their tag is asked for.
+    /// their tag is asked for.  On the fault-tolerant path a rank death
+    /// panics — callers that can recover use [`Comm::recv_ft`].
     pub fn recv(&mut self, tag: u64) -> Block {
         let t = Timer::start();
-        let b = self.recv_inner(tag);
+        let b = if self.fault_tolerant() {
+            self.recv_deadline(tag).expect("rank died with no recovery handler")
+        } else {
+            self.recv_inner(tag)
+        };
         self.meter.add_seconds(t.elapsed_s());
         b
+    }
+
+    /// Fault-aware receive: like [`Comm::recv`] but surfaces a detected
+    /// rank death instead of panicking.  Infallible (plain blocking
+    /// receive) when the fault-tolerant path is off.
+    pub fn recv_ft(&mut self, tag: u64) -> Result<Block, RankDeath> {
+        let t = Timer::start();
+        let r = if self.fault_tolerant() {
+            self.recv_deadline(tag)
+        } else {
+            Ok(self.recv_inner(tag))
+        };
+        self.meter.add_seconds(t.elapsed_s());
+        r
     }
 
     fn recv_inner(&mut self, tag: u64) -> Block {
@@ -148,15 +393,142 @@ impl Comm {
         }
     }
 
+    /// The ISSUE 9 deadline path: wait for `tag` with exponentially
+    /// backed-off probe windows (bounded by the configured timeout).
+    /// Each expired window heartbeats this rank, bumps
+    /// `smurff_comm_retries_total`, and probes the failure detector; a
+    /// newly declared death — detected here or flagged by any peer —
+    /// aborts the wait.
+    fn recv_deadline(&mut self, tag: u64) -> Result<Block, RankDeath> {
+        self.flush_held();
+        if let Some(pos) = self.stash.iter().position(|b| b.tag == tag) {
+            return Ok(self.stash.swap_remove(pos));
+        }
+        let cap = self.timeout();
+        let mut wait = (cap / 64).max(Duration::from_millis(1));
+        loop {
+            match self.inbox.recv_timeout(wait) {
+                Ok(b) => {
+                    if !self.seen[b.from].accept(b.seq) {
+                        continue; // duplicate transmission: suppressed
+                    }
+                    if b.tag == tag {
+                        return Ok(b);
+                    }
+                    self.stash.push(b);
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // still alive, just waiting — and retrying
+                    self.health.beat(self.rank);
+                    if let Some(m) = &self.meters {
+                        m.retries.add(1);
+                    }
+                    if let Some(dead) = self.check_new_death() {
+                        return Err(RankDeath(dead));
+                    }
+                    // probe the detector only once per *full* timeout
+                    // window (not during the backoff ramp): a peer is
+                    // declared dead after `detect_probes` windows of
+                    // heartbeat silence, never by short-wait jitter
+                    if wait >= cap {
+                        if let Some(dead) = self.detector.probe(&self.health, self.rank) {
+                            self.known_dead[dead] = true;
+                            return Err(RankDeath(dead));
+                        }
+                    }
+                    wait = (wait * 2).min(cap); // bounded exponential backoff
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // every sender gone mid-wait: treat as a death of
+                    // whichever peer we have not yet accounted for
+                    if let Some(dead) = self.check_new_death() {
+                        return Err(RankDeath(dead));
+                    }
+                    panic!("all peers hung up with no death recorded");
+                }
+            }
+        }
+    }
+
+    /// First death flagged on the shared board that this Comm has not
+    /// yet reported to its caller (marks it reported).
+    fn check_new_death(&mut self) -> Option<usize> {
+        for p in 0..self.size {
+            if p != self.rank && !self.known_dead[p] && self.health.is_dead(p) {
+                self.known_dead[p] = true;
+                return Some(p);
+            }
+        }
+        None
+    }
+
+    /// Poll for a death flagged by a peer (or by our own detector during
+    /// waits) without blocking — the session layer calls this at safe
+    /// points (e.g. pprop compute-only iterations) so every survivor
+    /// joins the recovery rendezvous promptly.
+    pub fn poll_death(&mut self) -> Option<RankDeath> {
+        if !self.fault_tolerant() {
+            return None;
+        }
+        self.check_new_death().map(RankDeath)
+    }
+
+    /// Heartbeat: "this rank is alive and making progress".
+    pub fn beat(&self) {
+        self.health.beat(self.rank);
+    }
+
+    /// Drop every stashed block whose tag predates `floor` (stale
+    /// epochs after a recovery rollback).
+    pub fn purge_stash_below(&mut self, floor: u64) {
+        self.stash.retain(|b| b.tag >= floor);
+    }
+
     pub fn barrier(&mut self) {
         let t = Timer::start();
-        self.barrier.wait();
+        if self.fault_tolerant() {
+            self.ft_barrier();
+        } else {
+            self.barrier.wait();
+        }
         self.meter.add_seconds(t.elapsed_s());
+    }
+
+    /// Arrival-counter barrier over *live* ranks: bump my arrival
+    /// generation, then wait until every live rank has reached it.  A
+    /// rank declared dead while we wait is skipped (the std barrier
+    /// would hang forever — the exact failure mode ISSUE 9 removes).
+    fn ft_barrier(&mut self) {
+        self.flush_held();
+        let my = self.health.arrive(self.rank);
+        let cap = self.timeout();
+        let mut waited = Duration::ZERO;
+        loop {
+            let pending = (0..self.size).any(|p| {
+                p != self.rank && !self.health.is_dead(p) && self.health.arrival_of(p) < my
+            });
+            if !pending {
+                return;
+            }
+            self.health.beat(self.rank);
+            std::thread::sleep(Duration::from_millis(1));
+            waited += Duration::from_millis(1);
+            // same probe cadence as the receive path: one detector probe
+            // per full timeout window, so a peer that is merely slow to
+            // arrive is not rushed into the dead set
+            if waited >= cap {
+                waited = Duration::ZERO;
+                self.detector.probe(&self.health, self.rank);
+            }
+        }
     }
 
     /// Allgather: every node contributes `mine`; returns all blocks
     /// ordered by rank (one-sided-ish exchange, like GASPI segments).
     pub fn allgather(&mut self, tag: u64, mine: Vec<f64>) -> Vec<Vec<f64>> {
+        if self.fault_tolerant() {
+            return self.allgather_ft(tag, mine).expect("rank died with no recovery handler");
+        }
         for peer in 0..self.size {
             if peer != self.rank {
                 self.send(peer, tag, mine.clone());
@@ -171,11 +543,40 @@ impl Comm {
         out.into_iter().map(|o| o.expect("missing rank block")).collect()
     }
 
+    /// Fault-aware allgather over the live ranks: dead ranks contribute
+    /// an empty block.  Surfaces a death detected mid-collective.
+    pub fn allgather_ft(&mut self, tag: u64, mine: Vec<f64>) -> Result<Vec<Vec<f64>>, RankDeath> {
+        if !self.fault_tolerant() {
+            return Ok(self.allgather(tag, mine));
+        }
+        if let Some(d) = self.check_new_death() {
+            return Err(RankDeath(d));
+        }
+        let expected: Vec<usize> = (0..self.size)
+            .filter(|&p| p != self.rank && !self.health.is_dead(p))
+            .collect();
+        for &peer in &expected {
+            self.send(peer, tag, mine.clone());
+        }
+        let mut out: Vec<Vec<f64>> = vec![Vec::new(); self.size];
+        out[self.rank] = mine;
+        for _ in 0..expected.len() {
+            let b = self.recv_ft(tag)?;
+            out[b.from] = b.data;
+        }
+        Ok(out)
+    }
+
     /// Element-wise-sum allreduce: every node contributes a vector of
     /// the same length and gets back the rank-ordered sum (summation
     /// order is rank order on every node, so results are identical
     /// across nodes).
     pub fn allreduce_sum(&mut self, tag: u64, mine: Vec<f64>) -> Vec<f64> {
+        if self.fault_tolerant() {
+            return self
+                .allreduce_sum_ft(tag, mine)
+                .expect("rank died with no recovery handler");
+        }
         let n = mine.len();
         let blocks = self.allgather(tag, mine);
         let mut out = vec![0.0; n];
@@ -188,6 +589,24 @@ impl Comm {
         out
     }
 
+    /// Fault-aware allreduce over the live ranks (dead ranks' empty
+    /// blocks contribute nothing; summation order stays rank order).
+    pub fn allreduce_sum_ft(&mut self, tag: u64, mine: Vec<f64>) -> Result<Vec<f64>, RankDeath> {
+        let n = mine.len();
+        let blocks = self.allgather_ft(tag, mine)?;
+        let mut out = vec![0.0; n];
+        for b in &blocks {
+            if b.is_empty() {
+                continue; // a dead rank's slot
+            }
+            debug_assert_eq!(b.len(), n, "allreduce contributions must agree in length");
+            for (o, x) in out.iter_mut().zip(b) {
+                *o += x;
+            }
+        }
+        Ok(out)
+    }
+
     /// Sub-communicator over `members` (global ranks; must contain this
     /// node's rank, and every member must call with the same list).
     /// Collectives on the subgroup run over the parent's channels, so
@@ -198,6 +617,29 @@ impl Comm {
             .position(|&g| g == self.rank)
             .expect("subgroup must contain the calling rank");
         SubComm { parent: self, members: members.to_vec(), rank }
+    }
+
+    /// A crashed rank's afterlife: mark myself dead, then keep my inbox
+    /// alive — draining stray traffic — until every live rank has
+    /// finished, so survivors' sends never hit a torn-down channel.
+    /// Consumes the Comm.
+    pub fn zombie_drain(self) {
+        self.health.mark_dead(self.rank);
+        loop {
+            while self.inbox.try_recv().is_ok() {}
+            if self.health.finished_count() >= self.health.live_count() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// A live rank is completely done (after its final barrier): lets
+    /// any zombie rank release its inbox and exit.
+    pub fn finish(&self) {
+        if self.fault_tolerant() {
+            self.health.finish(self.rank);
+        }
     }
 }
 
@@ -450,7 +892,8 @@ mod tests {
     #[test]
     fn simulated_latency_slows_things_down() {
         let t = crate::util::Timer::start();
-        let comm_secs = run_cluster(2, NetSpec { latency_us: 3000.0, gbs: 1.0 }, |mut comm| {
+        let net = NetSpec { latency_us: 3000.0, ..NetSpec::cluster() };
+        let comm_secs = run_cluster(2, NetSpec { gbs: 1.0, ..net }, |mut comm| {
             if comm.rank == 0 {
                 comm.send(1, 1, vec![0.0; 10]);
             } else {
@@ -472,5 +915,133 @@ mod tests {
             all[0]
         });
         assert_eq!(got, vec![8.0, 8.0, 8.0]);
+    }
+
+    // ---------------------------------------------- ISSUE 9 fault path
+
+    fn chaos_net(plan: &str) -> NetSpec {
+        NetSpec::instant().with_fault(FaultPlan::parse(plan).unwrap())
+    }
+
+    #[test]
+    fn certain_duplication_is_suppressed() {
+        // dup=1: every message is transmitted twice; the receiver must
+        // deliver each exactly once, in collectives and point-to-point
+        let got = run_cluster(3, chaos_net("seed=3,dup=1"), |mut comm| {
+            let all = comm.allgather(1, vec![comm.rank as f64]);
+            let more = comm.allgather(2, vec![10.0 + comm.rank as f64]);
+            comm.barrier();
+            comm.finish();
+            (all, more)
+        });
+        for (all, more) in &got {
+            assert_eq!(all.iter().map(|b| b[0]).collect::<Vec<_>>(), vec![0.0, 1.0, 2.0]);
+            assert_eq!(more.iter().map(|b| b[0]).collect::<Vec<_>>(), vec![10.0, 11.0, 12.0]);
+        }
+    }
+
+    #[test]
+    fn certain_drop_still_delivers_at_least_once() {
+        // drop=1: every first transmission is lost and retransmitted;
+        // delivery must still happen, with retries accounted
+        crate::obs::reset();
+        let got = run_cluster(2, chaos_net("seed=4,drop=1"), |mut comm| {
+            let all = comm.allreduce_sum(5, vec![1.0]);
+            comm.barrier();
+            comm.finish();
+            all[0]
+        });
+        assert_eq!(got, vec![2.0, 2.0]);
+        let text = crate::obs::render_prometheus();
+        assert!(
+            text.contains("smurff_comm_retries_total"),
+            "retransmissions must be visible in the registry"
+        );
+    }
+
+    #[test]
+    fn reorder_chaos_is_absorbed_by_the_stash() {
+        // reorder=1 with two back-to-back tags: the first message to
+        // each peer is held and shipped after the second — delivered
+        // out of order, reassembled by tag
+        let got = run_cluster(2, chaos_net("seed=5,reorder=1"), |mut comm| {
+            if comm.rank == 0 {
+                comm.send(1, 1, vec![10.0]);
+                comm.send(1, 2, vec![20.0]);
+                comm.barrier();
+                comm.finish();
+                vec![]
+            } else {
+                let first = comm.recv_ft(1).unwrap();
+                let second = comm.recv_ft(2).unwrap();
+                comm.barrier();
+                comm.finish();
+                vec![first.data[0], second.data[0]]
+            }
+        });
+        assert_eq!(got[1], vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn recv_ft_declares_a_silent_peer_dead() {
+        // rank 1 exits immediately without sending: rank 0's deadline
+        // path must declare it dead instead of hanging forever
+        let net = NetSpec::instant()
+            .with_fault(FaultPlan::parse("probes=3").unwrap())
+            .with_recv_timeout_ms(20);
+        let got = run_cluster(2, net, |mut comm| {
+            if comm.rank == 1 {
+                comm.zombie_drain();
+                return usize::MAX;
+            }
+            let err = comm.recv_ft(7).expect_err("peer is silent: must be declared dead");
+            assert_eq!(err, RankDeath(1));
+            comm.finish();
+            err.0
+        });
+        assert_eq!(got[0], 1);
+    }
+
+    #[test]
+    fn ft_barrier_skips_a_dead_rank() {
+        let net = NetSpec::instant()
+            .with_fault(FaultPlan::parse("probes=3").unwrap())
+            .with_recv_timeout_ms(20);
+        let got = run_cluster(3, net, |mut comm| {
+            if comm.rank == 2 {
+                comm.zombie_drain();
+                return 0;
+            }
+            // wait out the detection, then barrier among the live two
+            let dead = comm.recv_ft(9).expect_err("rank 2 must be declared dead").0;
+            comm.barrier();
+            comm.finish();
+            dead
+        });
+        assert_eq!(got[0], 2);
+        assert_eq!(got[1], 2);
+    }
+
+    #[test]
+    fn allgather_ft_covers_live_ranks_after_a_death() {
+        let net = NetSpec::instant()
+            .with_fault(FaultPlan::parse("probes=3").unwrap())
+            .with_recv_timeout_ms(20);
+        let got = run_cluster(3, net, |mut comm| {
+            if comm.rank == 1 {
+                comm.zombie_drain();
+                return vec![];
+            }
+            let _ = comm.recv_ft(50).expect_err("rank 1 silent");
+            let all = comm.allgather_ft(51, vec![comm.rank as f64]).unwrap();
+            comm.barrier();
+            comm.finish();
+            all
+        });
+        for &r in &[0usize, 2] {
+            assert_eq!(got[r][0], vec![0.0], "rank {r}");
+            assert!(got[r][1].is_empty(), "dead rank contributes an empty block");
+            assert_eq!(got[r][2], vec![2.0]);
+        }
     }
 }

@@ -1,0 +1,401 @@
+//! Chaos injection + failure detection for the distributed layer
+//! (ISSUE 9): a deterministic, seedable [`FaultPlan`] that perturbs the
+//! message substrate (delay / drop / duplication / reorder) and kills a
+//! rank at a chosen iteration, plus the shared [`ClusterHealth`] board
+//! and per-rank [`FailureDetector`] the fault-tolerant comm path uses to
+//! declare peers dead after `detect_probes` missed heartbeats.
+//!
+//! Every injection decision is a pure function of
+//! `(plan seed, from, to, tag, seq, kind)` — two runs with the same plan
+//! inject exactly the same faults, so chaos tests are reproducible and a
+//! sync run under message chaos (no crash) can be asserted bit-identical
+//! to the fault-free run: drops are retransmitted (at-least-once),
+//! duplicates are suppressed by sequence number, reorders are absorbed by
+//! the receiver's stash, and delays only cost wall-clock.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Kill `rank` when it reaches the top of Gibbs iteration `iteration`
+/// (the rank sends nothing for that iteration and stops heartbeating).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashSpec {
+    pub rank: usize,
+    pub iteration: usize,
+}
+
+/// A deterministic, seedable chaos schedule attached to
+/// [`NetSpec`](super::comm::NetSpec).  Probabilities are per message;
+/// `crash` fires once.  Rank 0 cannot crash: it owns the test set, the
+/// aggregator and the model store (the coordinator is assumed resilient,
+/// as in the GASPI design where the master re-launches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// seed of the injection hash — same seed, same faults
+    pub seed: u64,
+    /// probability a message is held an extra `delay_us` on the wire
+    pub delay_p: f64,
+    /// the extra delay applied to delayed messages
+    pub delay_us: f64,
+    /// probability the first transmission of a message is lost (the
+    /// sender retransmits immediately: at-least-once delivery)
+    pub drop_p: f64,
+    /// probability a message is delivered twice (the receiver's
+    /// per-sender sequence window suppresses the duplicate)
+    pub dup_p: f64,
+    /// probability a message is held back and shipped *after* the next
+    /// message to the same peer (exercises the receiver's stash)
+    pub reorder_p: f64,
+    /// kill one rank at one iteration
+    pub crash: Option<CrashSpec>,
+    /// consecutive stalled-heartbeat probes before a peer is declared
+    /// dead (each probe is one `recv` timeout window)
+    pub detect_probes: u32,
+}
+
+/// Injection decision salts — one stream per fault kind.
+#[derive(Debug, Clone, Copy)]
+pub enum FaultKind {
+    Delay = 1,
+    Drop = 2,
+    Duplicate = 3,
+    Reorder = 4,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            delay_p: 0.0,
+            delay_us: 0.0,
+            drop_p: 0.0,
+            dup_p: 0.0,
+            reorder_p: 0.0,
+            crash: None,
+            detect_probes: 8,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse the CLI spelling: comma-separated `key=value` pairs.
+    ///
+    /// `seed=<u64>`, `delay=<p>`, `delay-us=<f64>`, `drop=<p>`,
+    /// `dup=<p>`, `reorder=<p>`, `crash=<rank>@<iteration>`,
+    /// `probes=<n>` — e.g.
+    /// `seed=42,drop=0.05,dup=0.05,reorder=0.1,crash=1@5`.
+    pub fn parse(s: &str) -> anyhow::Result<FaultPlan> {
+        let mut p = FaultPlan { delay_us: 200.0, ..FaultPlan::default() };
+        for part in s.split(',').filter(|t| !t.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault plan entry '{part}' is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let prob = || -> anyhow::Result<f64> {
+                let x: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad probability '{v}' for '{k}'"))?;
+                if !(0.0..=1.0).contains(&x) {
+                    anyhow::bail!("probability '{k}={v}' must lie in [0, 1]");
+                }
+                Ok(x)
+            };
+            match k {
+                "seed" => p.seed = v.parse().map_err(|_| anyhow::anyhow!("bad seed '{v}'"))?,
+                "delay" => p.delay_p = prob()?,
+                "delay-us" | "delay_us" => {
+                    p.delay_us = v.parse().map_err(|_| anyhow::anyhow!("bad delay-us '{v}'"))?
+                }
+                "drop" => p.drop_p = prob()?,
+                "dup" => p.dup_p = prob()?,
+                "reorder" => p.reorder_p = prob()?,
+                "probes" => {
+                    p.detect_probes =
+                        v.parse().map_err(|_| anyhow::anyhow!("bad probes '{v}'"))?;
+                    if p.detect_probes == 0 {
+                        anyhow::bail!("probes must be >= 1");
+                    }
+                }
+                "crash" => {
+                    let (r, i) = v.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("crash spec '{v}' must be <rank>@<iteration>")
+                    })?;
+                    let rank =
+                        r.parse().map_err(|_| anyhow::anyhow!("bad crash rank '{r}'"))?;
+                    let iteration =
+                        i.parse().map_err(|_| anyhow::anyhow!("bad crash iteration '{i}'"))?;
+                    if rank == 0 {
+                        anyhow::bail!(
+                            "rank 0 cannot crash: it owns the test set and the model store"
+                        );
+                    }
+                    p.crash = Some(CrashSpec { rank, iteration });
+                }
+                other => anyhow::bail!(
+                    "unknown fault plan key '{other}' \
+                     (seed|delay|delay-us|drop|dup|reorder|crash|probes)"
+                ),
+            }
+        }
+        Ok(p)
+    }
+
+    /// Does this plan perturb messages at all (crash aside)?
+    pub fn perturbs_messages(&self) -> bool {
+        self.delay_p > 0.0 || self.drop_p > 0.0 || self.dup_p > 0.0 || self.reorder_p > 0.0
+    }
+
+    /// The deterministic injection decision for one message and fault
+    /// kind: FNV-1a over the identifying tuple, folded to [0, 1).
+    pub fn roll(&self, kind: FaultKind, from: usize, to: usize, tag: u64, seq: u64) -> bool {
+        let p = match kind {
+            FaultKind::Delay => self.delay_p,
+            FaultKind::Drop => self.drop_p,
+            FaultKind::Duplicate => self.dup_p,
+            FaultKind::Reorder => self.reorder_p,
+        };
+        if p <= 0.0 {
+            return false;
+        }
+        let mut h = 0xcbf29ce484222325u64 ^ self.seed;
+        for w in [kind as u64, from as u64, to as u64, tag, seq] {
+            for b in w.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        // upper 53 bits -> uniform f64 in [0, 1)
+        (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64) < p
+    }
+
+    /// Does `rank` crash at the top of `iteration` (epoch 0 only — a
+    /// plan kills each rank at most once)?
+    pub fn crashes(&self, rank: usize, iteration: usize) -> bool {
+        matches!(self.crash, Some(c) if c.rank == rank && c.iteration == iteration)
+    }
+}
+
+/// The cluster-wide health board shared by every rank's [`Comm`]: one
+/// heartbeat counter and death flag per rank, the arrival counters of
+/// the fault-tolerant barrier, the recovery-rendezvous proposals, and
+/// the finished-rank count a crashed rank's zombie drain loop watches.
+///
+/// [`Comm`]: super::comm::Comm
+pub struct ClusterHealth {
+    beats: Vec<AtomicU64>,
+    dead: Vec<AtomicBool>,
+    arrivals: Vec<AtomicU64>,
+    /// `recover_iter[rank]` = 1 + the iteration that rank proposes to
+    /// roll back to (0 = no proposal)
+    recover_iter: Vec<AtomicU64>,
+    finished: AtomicUsize,
+}
+
+impl ClusterHealth {
+    pub fn new(size: usize) -> ClusterHealth {
+        ClusterHealth {
+            beats: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..size).map(|_| AtomicBool::new(false)).collect(),
+            arrivals: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            recover_iter: (0..size).map(|_| AtomicU64::new(0)).collect(),
+            finished: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.beats.len()
+    }
+
+    /// "I am alive": bumped at iteration tops and on every blocking-wait
+    /// probe, so a rank stuck waiting is never mistaken for a dead one.
+    pub fn beat(&self, rank: usize) {
+        self.beats[rank].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn beat_of(&self, rank: usize) -> u64 {
+        self.beats[rank].load(Ordering::Relaxed)
+    }
+
+    pub fn mark_dead(&self, rank: usize) {
+        self.dead[rank].store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.dead[rank].load(Ordering::SeqCst)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.dead.iter().filter(|d| !d.load(Ordering::SeqCst)).count()
+    }
+
+    pub fn live_ranks(&self) -> Vec<usize> {
+        (0..self.size()).filter(|&r| !self.is_dead(r)).collect()
+    }
+
+    /// Fault-tolerant barrier arrival: bump and return my generation.
+    pub fn arrive(&self, rank: usize) -> u64 {
+        self.arrivals[rank].fetch_add(1, Ordering::SeqCst) + 1
+    }
+
+    pub fn arrival_of(&self, rank: usize) -> u64 {
+        self.arrivals[rank].load(Ordering::SeqCst)
+    }
+
+    /// Publish this rank's rollback proposal (its current, incomplete
+    /// iteration) for the recovery rendezvous.
+    pub fn propose_recovery(&self, rank: usize, iteration: usize) {
+        self.recover_iter[rank].store(iteration as u64 + 1, Ordering::SeqCst);
+    }
+
+    pub fn clear_proposal(&self, rank: usize) {
+        self.recover_iter[rank].store(0, Ordering::SeqCst);
+    }
+
+    /// Smallest proposed rollback iteration across live ranks (all live
+    /// ranks must have proposed — call after the rendezvous barrier).
+    pub fn agreed_rollback(&self) -> Option<usize> {
+        self.recover_iter
+            .iter()
+            .zip(&self.dead)
+            .filter(|(_, d)| !d.load(Ordering::SeqCst))
+            .map(|(p, _)| p.load(Ordering::SeqCst))
+            .filter(|&p| p > 0)
+            .min()
+            .map(|p| (p - 1) as usize)
+    }
+
+    /// A live rank is done with the whole run.
+    pub fn finish(&self, _rank: usize) {
+        self.finished.fetch_add(1, Ordering::SeqCst);
+    }
+
+    pub fn finished_count(&self) -> usize {
+        self.finished.load(Ordering::SeqCst)
+    }
+}
+
+/// Per-rank failure detector: watches peers' heartbeat counters and
+/// declares a peer dead after `probes` consecutive stalled observations.
+/// One probe = one `recv` timeout window, so with the default 8 probes
+/// and exponentially backed-off waits a hung peer is declared dead
+/// within a couple of seconds.
+pub struct FailureDetector {
+    last_beat: Vec<u64>,
+    stale: Vec<u32>,
+    probes: u32,
+}
+
+impl FailureDetector {
+    pub fn new(size: usize, probes: u32) -> FailureDetector {
+        FailureDetector { last_beat: vec![0; size], stale: vec![0; size], probes: probes.max(1) }
+    }
+
+    /// One probe round: refresh per-peer staleness from the health
+    /// board; returns the first peer newly declared dead this round (the
+    /// declaration is published on the board for every other rank).
+    pub fn probe(&mut self, health: &ClusterHealth, myself: usize) -> Option<usize> {
+        let mut newly = None;
+        for p in 0..self.last_beat.len() {
+            if p == myself || health.is_dead(p) {
+                continue;
+            }
+            let cur = health.beat_of(p);
+            if cur != self.last_beat[p] {
+                self.last_beat[p] = cur;
+                self.stale[p] = 0;
+            } else {
+                self.stale[p] += 1;
+                if self.stale[p] >= self.probes && newly.is_none() {
+                    health.mark_dead(p);
+                    newly = Some(p);
+                }
+            }
+        }
+        newly
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spelling() {
+        let p = FaultPlan::parse("seed=42,delay=0.1,delay-us=300,drop=0.05,dup=0.2,reorder=0.3,crash=2@7,probes=5")
+            .unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.delay_p, 0.1);
+        assert_eq!(p.delay_us, 300.0);
+        assert_eq!(p.drop_p, 0.05);
+        assert_eq!(p.dup_p, 0.2);
+        assert_eq!(p.reorder_p, 0.3);
+        assert_eq!(p.crash, Some(CrashSpec { rank: 2, iteration: 7 }));
+        assert_eq!(p.detect_probes, 5);
+        assert!(p.perturbs_messages());
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("drop=1.5").is_err());
+        assert!(FaultPlan::parse("drop=-0.1").is_err());
+        assert!(FaultPlan::parse("crash=0@3").is_err(), "rank 0 must not crash");
+        assert!(FaultPlan::parse("crash=17").is_err());
+        assert!(FaultPlan::parse("gremlins=1").is_err());
+        assert!(FaultPlan::parse("seed").is_err());
+        assert!(FaultPlan::parse("probes=0").is_err());
+    }
+
+    #[test]
+    fn rolls_are_deterministic_and_roughly_calibrated() {
+        let p = FaultPlan { drop_p: 0.3, seed: 7, ..FaultPlan::default() };
+        let a: Vec<bool> =
+            (0..4000).map(|s| p.roll(FaultKind::Drop, 0, 1, 12, s)).collect();
+        let b: Vec<bool> =
+            (0..4000).map(|s| p.roll(FaultKind::Drop, 0, 1, 12, s)).collect();
+        assert_eq!(a, b, "same plan, same rolls");
+        let hits = a.iter().filter(|&&x| x).count();
+        assert!((800..1600).contains(&hits), "p=0.3 over 4000 draws hit {hits} times");
+        // independent streams per kind
+        let dup_hits =
+            (0..4000).filter(|&s| p.roll(FaultKind::Duplicate, 0, 1, 12, s)).count();
+        assert_eq!(dup_hits, 0, "dup_p=0 must never fire");
+    }
+
+    #[test]
+    fn crash_matcher() {
+        let p = FaultPlan::parse("crash=1@5").unwrap();
+        assert!(p.crashes(1, 5));
+        assert!(!p.crashes(1, 4));
+        assert!(!p.crashes(2, 5));
+        assert!(!FaultPlan::default().crashes(1, 5));
+    }
+
+    #[test]
+    fn detector_declares_after_k_stalled_probes() {
+        let h = ClusterHealth::new(3);
+        let mut d = FailureDetector::new(3, 3);
+        h.beat(1);
+        h.beat(2);
+        assert_eq!(d.probe(&h, 0), None); // first sight: fresh
+        h.beat(2); // rank 2 keeps beating, rank 1 stalls
+        assert_eq!(d.probe(&h, 0), None);
+        assert_eq!(d.probe(&h, 0), None);
+        assert_eq!(d.probe(&h, 0), Some(1));
+        assert!(h.is_dead(1));
+        assert!(!h.is_dead(2));
+        assert_eq!(h.live_ranks(), vec![0, 2]);
+        assert_eq!(d.probe(&h, 0), None, "a dead rank is declared once");
+    }
+
+    #[test]
+    fn rollback_rendezvous_takes_live_minimum() {
+        let h = ClusterHealth::new(3);
+        assert_eq!(h.agreed_rollback(), None);
+        h.propose_recovery(0, 9);
+        h.propose_recovery(2, 7);
+        h.mark_dead(1); // never proposes
+        assert_eq!(h.agreed_rollback(), Some(7));
+        h.clear_proposal(0);
+        h.clear_proposal(2);
+        assert_eq!(h.agreed_rollback(), None);
+    }
+}

@@ -6,13 +6,21 @@
 //!   allreduce, sub-communicators, byte + time accounting.
 //! * [`shard`] — block ownership and data scatter: nnz-balanced
 //!   contiguous row/column partitions and the per-node submatrices.
+//! * [`fault`] — ISSUE 9 chaos + failure detection: a deterministic
+//!   seedable [`FaultPlan`] injecting message delay/drop/duplication/
+//!   reorder and rank crashes, the shared heartbeat board, and the
+//!   K-missed-beats failure detector behind the comm layer's
+//!   deadline/backoff receive path.
 //! * [`session`] — [`DistributedSession`]: drives any
 //!   [`SessionBuilder`](crate::session::SessionBuilder) composition
 //!   across sharded workers under a selectable communication
 //!   [`Strategy`] (synchronous allgather / bounded-staleness async /
 //!   limited-communication posterior propagation), merging shard
 //!   snapshots into the posterior [`ModelStore`](crate::store::ModelStore)
-//!   so `PredictSession` serves distributed-trained models unchanged.
+//!   so `PredictSession` serves distributed-trained models unchanged —
+//!   and, when the fault-tolerant path is on, recovering from a rank
+//!   death by re-sharding the dead block over the survivors and
+//!   warm-restarting from the in-memory checkpoint ring.
 //!
 //! References: Vander Aa et al., *Distributed Bayesian Probabilistic
 //! Matrix Factorization* (2017) for the synchronous design; Vander Aa
@@ -20,9 +28,11 @@
 //! Communication* (2020) for posterior propagation.
 
 pub mod comm;
+pub mod fault;
 pub mod session;
 pub mod shard;
 
-pub use comm::{run_cluster, run_cluster_parts, Block, Comm, NetSpec, SubComm};
+pub use comm::{run_cluster, run_cluster_parts, Block, Comm, NetSpec, RankDeath, SubComm};
+pub use fault::{CrashSpec, FaultPlan};
 pub use session::{CommStats, DistResult, DistSpec, DistributedSession, Strategy};
 pub use shard::{partition, partition_by_weight, ShardPlan};

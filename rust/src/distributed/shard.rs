@@ -59,6 +59,46 @@ pub fn partition_by_weight(weights: &[usize], parts: usize) -> Vec<Range<usize>>
     out
 }
 
+/// Distribute `ranges` (one per live rank, in order) over the global
+/// rank space: dead ranks receive an empty range pinned at the current
+/// boundary, so together the per-rank ranges still cover `0..n` exactly,
+/// in rank order — the shape every unpack/exchange loop expects.
+fn spread_over_live(ranges: Vec<Range<usize>>, live: &[bool]) -> Vec<Range<usize>> {
+    let mut it = ranges.into_iter();
+    let mut lo = 0usize;
+    let mut out = Vec::with_capacity(live.len());
+    for &alive in live {
+        if alive {
+            let r = it.next().expect("one range per live rank");
+            lo = r.end;
+            out.push(r);
+        } else {
+            out.push(lo..lo);
+        }
+    }
+    out
+}
+
+/// [`partition_by_weight`] over the live ranks only (ISSUE 9 recovery
+/// re-shard): the dead ranks' weight is redistributed across the
+/// survivors, whose ranges stay contiguous and covering; dead ranks own
+/// empty ranges.
+pub fn partition_by_weight_live(
+    weights: &[usize],
+    live: &[bool],
+) -> Vec<Range<usize>> {
+    let n = live.iter().filter(|&&a| a).count();
+    assert!(n > 0, "cannot re-shard over zero live ranks");
+    spread_over_live(partition_by_weight(weights, n), live)
+}
+
+/// [`partition`] over the live ranks only (dense views, ISSUE 9).
+pub fn partition_live(n_items: usize, live: &[bool]) -> Vec<Range<usize>> {
+    let n = live.iter().filter(|&&a| a).count();
+    assert!(n > 0, "cannot re-shard over zero live ranks");
+    spread_over_live(partition(n_items, n), live)
+}
+
 /// The observations a node needs for the *row* side: all triplets whose
 /// row falls in `rows`, kept at the global shape so global row/column
 /// indices keep working unchanged.
@@ -98,8 +138,19 @@ impl ShardPlan {
     /// by its full length; sparse views by nonzero count (+1 per item so
     /// fully empty stretches still spread over nodes).
     pub fn plan(views: &[&MatrixConfig], nodes: usize) -> ShardPlan {
+        ShardPlan::plan_live(views, &vec![true; nodes.max(1)])
+    }
+
+    /// Like [`ShardPlan::plan`], restricted to the live ranks (ISSUE 9
+    /// recovery): a dead rank's rows and columns are redistributed over
+    /// the survivors and it keeps empty ranges, so rank-indexed exchange
+    /// loops need no re-numbering.  Every survivor computes this from
+    /// the same full views and the same death set, so the new plan is
+    /// identical cluster-wide without any coordination message.
+    pub fn plan_live(views: &[&MatrixConfig], live: &[bool]) -> ShardPlan {
         assert!(!views.is_empty(), "shard plan needs at least one view");
-        let nodes = nodes.max(1);
+        let nodes = live.len().max(1);
+        let live = if live.is_empty() { &[true][..] } else { live };
         let nrows = views[0].nrows();
         let mut row_w = vec![1usize; nrows];
         for v in views {
@@ -116,15 +167,15 @@ impl ShardPlan {
                 }
             }
         }
-        let rows = partition_by_weight(&row_w, nodes);
+        let rows = partition_by_weight_live(&row_w, live);
         let view_cols = views
             .iter()
             .map(|v| match v {
                 MatrixConfig::SparseUnknown(m) | MatrixConfig::SparseFull(m) => {
                     let col_w: Vec<usize> = (0..m.ncols()).map(|j| 1 + m.col_nnz(j)).collect();
-                    partition_by_weight(&col_w, nodes)
+                    partition_by_weight_live(&col_w, live)
                 }
-                MatrixConfig::Dense(m) => partition(m.cols(), nodes),
+                MatrixConfig::Dense(m) => partition_live(m.cols(), live),
             })
             .collect();
         ShardPlan { nodes, rows, view_cols }
@@ -205,6 +256,48 @@ mod tests {
     fn weighted_partition_matches_equal_split_on_uniform_weights() {
         let parts = partition_by_weight(&[7; 12], 4);
         assert_eq!(parts, partition(12, 4));
+    }
+
+    #[test]
+    fn live_partition_leaves_dead_ranks_empty_and_still_covers() {
+        let weights = [4, 4, 4, 4, 4, 4, 4, 4];
+        let parts = partition_by_weight_live(&weights, &[true, false, true]);
+        assert_eq!(parts.len(), 3);
+        assert!(parts[1].is_empty(), "dead rank must own nothing: {:?}", parts[1]);
+        check_cover(&parts, 8);
+        // survivors split the dead rank's share roughly evenly
+        assert_eq!(parts[0], 0..4);
+        assert_eq!(parts[2], 4..8);
+        // dense variant
+        let parts = partition_live(6, &[false, true, true]);
+        assert!(parts[0].is_empty());
+        check_cover(&parts, 6);
+    }
+
+    #[test]
+    fn plan_live_matches_plan_when_everyone_is_alive() {
+        let m = toy_matrix();
+        let mc = MatrixConfig::SparseUnknown(m);
+        let a = ShardPlan::plan(&[&mc], 3);
+        let b = ShardPlan::plan_live(&[&mc], &[true, true, true]);
+        assert_eq!(a.rows, b.rows);
+        assert_eq!(a.view_cols, b.view_cols);
+    }
+
+    #[test]
+    fn plan_live_reassigns_a_dead_shard() {
+        let m = toy_matrix();
+        let mc = MatrixConfig::SparseUnknown(m.clone());
+        let p = ShardPlan::plan_live(&[&mc], &[true, false, true]);
+        assert_eq!(p.nodes, 3);
+        assert!(p.rows[1].is_empty());
+        assert!(p.view_cols[0][1].is_empty());
+        check_cover(&p.rows, m.nrows());
+        check_cover(&p.view_cols[0], m.ncols());
+        // every observation still lands in exactly one surviving shard
+        let total: usize =
+            p.rows.iter().map(|r| shard_sparse_rows(&m, r).nnz()).sum();
+        assert_eq!(total, m.nnz());
     }
 
     fn toy_matrix() -> SparseMatrix {

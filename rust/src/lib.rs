@@ -42,12 +42,23 @@
 //!               bit-exactness-preserving — see README §Performance and
 //!               `bench sweep`), [`runtime`] (PJRT/XLA AOT engine)
 //! * distributed: [`distributed`] — `comm` (message substrate with
-//!               allgather/allreduce/sub-communicators and byte + time
-//!               accounting), `shard` (nnz-balanced block ownership and
-//!               data scatter), `session` (`DistributedSession`: any
-//!               builder composition across sharded nodes under sync /
+//!               allgather/allreduce/sub-communicators, byte + time
+//!               accounting, and a deadline/backoff receive path with
+//!               at-least-once sends and per-sender duplicate
+//!               suppression), [`distributed::fault`] (chaos + failure
+//!               detection: the deterministic seedable `FaultPlan`
+//!               injecting message delay/drop/duplication/reorder and
+//!               rank crashes, the shared heartbeat board and the
+//!               K-missed-beats failure detector), `shard`
+//!               (nnz-balanced block ownership and data scatter,
+//!               including live-rank re-planning after a death),
+//!               `session` (`DistributedSession`: any builder
+//!               composition across sharded nodes under sync /
 //!               bounded-staleness async / posterior-propagation
-//!               communication strategies)
+//!               communication strategies; with fault tolerance armed,
+//!               survivors re-shard a dead rank's block and
+//!               warm-restart from the in-memory checkpoint ring — see
+//!               README §Robustness)
 //! * serving:    [`store`] (versioned on-disk posterior model store —
 //!               one factor matrix per mode; version-1/2 stores still
 //!               load, and `ModelStore::compact()` migrates any of them
@@ -64,8 +75,12 @@
 //!               Macau side info), [`serve`] (`smurff serve`: a TCP
 //!               front-end speaking newline-delimited JSON with a
 //!               bounded micro-batching queue over the coordinator
-//!               pool, and a snapshot watcher that hot-swaps the model
-//!               `Arc` when training appends snapshots)
+//!               pool, a snapshot watcher that hot-swaps the model
+//!               `Arc` when training appends snapshots, and overload
+//!               hardening — load shedding with structured
+//!               `overloaded` replies, per-request deadlines, capped
+//!               request lines, slow-client write timeouts and a
+//!               graceful shutdown drain)
 //! * evaluation: [`baselines`] (PyMC3-like, GraphChi-like, GASPI-like),
 //!               [`hwmodel`] (Xeon / Xeon Phi / ARM roofline+cache model),
 //!               [`bench`] (the harness regenerating every paper figure)
@@ -127,7 +142,9 @@ pub mod bench;
 pub mod prelude {
     pub use crate::data::{MatrixConfig, SideInfo, TensorTestSet};
     pub use crate::diag::{ChainMonitor, DiagnosticsReport};
-    pub use crate::distributed::{DistResult, DistributedSession, NetSpec, Strategy};
+    pub use crate::distributed::{
+        DistResult, DistributedSession, FaultPlan, NetSpec, Strategy,
+    };
     pub use crate::linalg::Mat;
     pub use crate::noise::NoiseConfig;
     pub use crate::predict::{BlockPrediction, PredictSession, Prediction, ServingModel};

@@ -32,6 +32,9 @@ const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|b
            [--prior normal|macau | normal,normal,... per tensor mode] [--side <mtx>]
            [--checkpoint <dir>] [--verbose] [--save-dir <dir>] [--save-freq N]
            [--nodes N] [--comm sync|async[:S]|pprop[:R]] [--net instant|cluster]
+           [--fault-plan <spec>] [--recv-timeout <ms>]   (chaos injection + the
+            fault-tolerant recovery path; spec e.g.
+            seed=42,drop=0.05,dup=0.1,reorder=0.1,crash=2@7 — see README §Robustness)
            [--trace <out.json>]   (writes a chrome://tracing profile of the run)
            [--diag]   (online convergence diagnostics: prints an R̂/ESS table,
             persists diagnostics.json into the --save-dir store — sample-preserving)
@@ -39,7 +42,9 @@ const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|b
            --row N --col N        pointwise prediction with uncertainty
            --row N --topk K       top-K column recommendations for a row
   serve    --store <dir> [--addr host:port] [--threads N] [--batch N]
-           [--batch-wait-ms N] [--queue-cap N] [--poll-ms N] [--allow-shutdown]
+           [--batch-wait-ms N] [--max-queue N] [--poll-ms N] [--allow-shutdown]
+           [--deadline-ms N]   (per-request deadline; a full --max-queue sheds
+            with {\"error\":\"overloaded\",\"retry_after_ms\":…} instead of blocking)
            (newline-delimited JSON over TCP; hot-reloads when the store grows)
   query    --addr host:port  --status | --metrics | --shutdown-server
            | --row N --col N [--view N] | --row N --topk K [--view N]
@@ -476,11 +481,21 @@ fn run_distributed(
     args: &Args,
 ) -> anyhow::Result<()> {
     let strategy = smurff::distributed::Strategy::parse(&args.get_str("comm", "sync"))?;
-    let net = match args.get_str("net", "instant").as_str() {
+    let mut net = match args.get_str("net", "instant").as_str() {
         "instant" => smurff::distributed::NetSpec::instant(),
         "cluster" => smurff::distributed::NetSpec::cluster(),
         other => anyhow::bail!("unknown net '{other}' (instant|cluster)"),
     };
+    // ISSUE 9: chaos injection + the fault-tolerant recovery path.
+    // Either flag arms fault tolerance (checkpoint ring, heartbeats,
+    // deadline/backoff receive, re-shard on rank death).
+    if let Some(spec) = args.get("fault-plan") {
+        net = net.with_fault(smurff::distributed::FaultPlan::parse(spec)?);
+    }
+    if args.has("recv-timeout") {
+        let ms = args.get_usize("recv-timeout", 200).map_err(anyhow::Error::msg)?;
+        net = net.with_recv_timeout_ms(ms as u64);
+    }
     if args.has("checkpoint") {
         anyhow::bail!("--checkpoint is not supported with --nodes; use --save-dir/--save-freq");
     }
@@ -498,6 +513,7 @@ fn run_distributed(
         }
         e => anyhow::bail!("--engine {e} cannot combine with --nodes (workers are native-only)"),
     };
+    let fault_tolerant = net.fault_tolerant();
     let dist = builder.distributed(nodes, strategy, net).build_distributed();
     println!(
         "distributed training: K={} burnin={} nsamples={} nodes={nodes} comm={}",
@@ -506,6 +522,12 @@ fn run_distributed(
         cfg.nsamples,
         strategy.name(),
     );
+    if fault_tolerant {
+        println!(
+            "fault tolerance: on (checkpoint ring + heartbeat detector; \
+             injected faults and recoveries land in smurff_fault_* metrics)"
+        );
+    }
     println!(
         "kernel ISA: {} ({}) — replicated to all ranks via the tuning snapshot",
         isa.isa_label(),
@@ -618,11 +640,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         batch_wait: Duration::from_millis(
             args.get_usize("batch-wait-ms", 1).map_err(anyhow::Error::msg)? as u64,
         ),
-        queue_cap: args.get_usize("queue-cap", 1024).map_err(anyhow::Error::msg)?,
+        // --max-queue is the documented spelling (ISSUE 9), --queue-cap
+        // the original one; both set the shedding threshold
+        queue_cap: if args.has("max-queue") {
+            args.get_usize("max-queue", 1024).map_err(anyhow::Error::msg)?
+        } else {
+            args.get_usize("queue-cap", 1024).map_err(anyhow::Error::msg)?
+        },
         poll: Duration::from_millis(
             args.get_usize("poll-ms", 500).map_err(anyhow::Error::msg)? as u64,
         ),
         allow_shutdown: args.get_bool("allow-shutdown"),
+        deadline: match args.get_usize("deadline-ms", 0).map_err(anyhow::Error::msg)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms as u64)),
+        },
     };
     let handle = smurff::serve::serve(Path::new(store), cfg)?;
     println!(

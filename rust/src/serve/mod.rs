@@ -32,11 +32,35 @@
 //! Failures answer `{"ok":false,"error":"…"}` and keep the connection
 //! open; protocol-level junk (unparseable line) also answers an error.
 //!
+//! ## Overload safety (ISSUE 9)
+//!
+//! The front-end never stalls on a hostile or saturating client:
+//!
+//! * **Load shedding** — when the bounded queue is full, a scoring
+//!   request is answered immediately with
+//!   `{"ok":false,"error":"overloaded","retry_after_ms":N}` instead of
+//!   blocking the connection handler (counted in
+//!   `smurff_serve_shed_total`).
+//! * **Per-request deadlines** — with [`ServeConfig::deadline`] set,
+//!   a request that cannot be scored in time is answered with a
+//!   structured `deadline exceeded` error, both when the batcher
+//!   dequeues it late and when the handler gives up waiting
+//!   (`smurff_serve_deadline_expired_total`).
+//! * **Request-line cap** — lines are read through a bounded
+//!   `read_until` (≤ [`MAX_LINE_BYTES`]); an oversized line is drained
+//!   and answered with a structured error, and the connection stays
+//!   usable.
+//! * **Slow clients** — sockets carry a write timeout, so a peer that
+//!   stops reading cannot pin a handler thread forever; reads poll the
+//!   stop flag so handlers exit promptly on shutdown.
+//! * **Graceful drain** — on shutdown the batcher finishes every job
+//!   already queued (new requests are refused), then exits.
+//!
 //! ## Micro-batching
 //!
 //! Connection handlers never touch the scoring pool: every scoring
-//! request is pushed onto a **bounded queue** (back-pressure: producers
-//! block when it fills) and a single batcher thread drains up to
+//! request is pushed onto a **bounded queue** (full queue = shed, see
+//! above) and a single batcher thread drains up to
 //! `batch_max` requests per round — waiting `batch_wait` after the
 //! first arrival so concurrent pointwise queries coalesce — then runs
 //! *one* batched [`PredictSession::predict_cells`] /
@@ -56,7 +80,7 @@
 use crate::predict::{PredictSession, Prediction, ServingModel};
 use crate::util::JsonValue;
 use std::collections::VecDeque;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -67,6 +91,23 @@ use std::time::{Duration, Instant};
 /// Upper bound on cells in one `predict_batch` request (keeps a hostile
 /// line from ballooning memory).
 const MAX_CELLS_PER_REQUEST: usize = 1 << 16;
+
+/// Upper bound on one request line in bytes (ISSUE 9): a line past this
+/// is drained and answered with a structured error instead of buffering
+/// without limit; the connection stays usable.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Write timeout on client sockets — a peer that stops reading cannot
+/// pin a handler thread past this.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Read timeout used as a poll interval so blocked handlers notice the
+/// stop flag (graceful shutdown) without a dedicated wakeup channel.
+const READ_POLL: Duration = Duration::from_millis(250);
+
+/// How long a handler keeps waiting for its reply after it has seen the
+/// stop flag — covers the batcher's shutdown drain of queued jobs.
+const DRAIN_GRACE: Duration = Duration::from_secs(2);
 
 /// Serving front-end configuration.
 #[derive(Debug, Clone)]
@@ -79,12 +120,18 @@ pub struct ServeConfig {
     pub batch_max: usize,
     /// micro-batch window after the first request of a round
     pub batch_wait: Duration,
-    /// bounded queue capacity (producers block beyond this)
+    /// bounded queue capacity (a full queue sheds: requests are
+    /// answered `{"error":"overloaded","retry_after_ms":…}` instead of
+    /// blocking the connection handler)
     pub queue_cap: usize,
     /// store-manifest poll interval for hot reload
     pub poll: Duration,
     /// whether the `shutdown` op is honoured (CI smoke / tests)
     pub allow_shutdown: bool,
+    /// per-request scoring deadline: a request that cannot be answered
+    /// within this budget gets a structured `deadline exceeded` error
+    /// instead of waiting indefinitely (`None` = no deadline)
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -97,6 +144,7 @@ impl Default for ServeConfig {
             queue_cap: 1024,
             poll: Duration::from_millis(500),
             allow_shutdown: false,
+            deadline: None,
         }
     }
 }
@@ -121,18 +169,28 @@ enum Reply {
 struct Job {
     op: Op,
     tx: mpsc::Sender<Reply>,
+    /// wall-clock instant past which this request must not be scored
+    /// (`ServeConfig::deadline` stamped at enqueue time)
+    deadline: Option<Instant>,
+}
+
+/// Outcome of offering a job to the bounded queue (ISSUE 9: a full
+/// queue **sheds** instead of blocking the connection handler).
+enum Push {
+    Queued,
+    Shed,
+    Stopped,
 }
 
 // --------------------------------------------------------------- queue
 
-/// Bounded MPSC queue with a micro-batching consumer: `push` blocks on
-/// a full queue (back-pressure), `pop_batch` waits for the first job,
-/// then keeps the round open `wait` longer so concurrent requests
-/// coalesce into one panel sweep.
+/// Bounded MPSC queue with a micro-batching consumer: a full queue
+/// sheds the offered job (the caller answers `overloaded`), `pop_batch`
+/// waits for the first job, then keeps the round open `wait` longer so
+/// concurrent requests coalesce into one panel sweep.
 struct BatchQueue {
     inner: Mutex<VecDeque<Job>>,
     not_empty: Condvar,
-    not_full: Condvar,
     cap: usize,
     /// live queue depth, published to the obs registry under the
     /// queue's lock (ISSUE 6)
@@ -144,29 +202,25 @@ impl BatchQueue {
         BatchQueue {
             inner: Mutex::new(VecDeque::new()),
             not_empty: Condvar::new(),
-            not_full: Condvar::new(),
             cap: cap.max(1),
             depth: crate::obs::gauge("smurff_serve_queue_depth"),
         }
     }
 
-    /// Returns false when the server is stopping (job dropped, sender's
-    /// recv will error out).
-    fn push(&self, job: Job, stop: &AtomicBool) -> bool {
+    /// Offer a job: enqueue if there is room, shed if the queue is full
+    /// — never blocks past the mutex.
+    fn push_or_shed(&self, job: Job, stop: &AtomicBool) -> Push {
         if stop.load(Ordering::Acquire) {
-            return false;
+            return Push::Stopped;
         }
         let mut q = self.inner.lock().unwrap();
-        while q.len() >= self.cap {
-            if stop.load(Ordering::Acquire) {
-                return false;
-            }
-            q = self.not_full.wait_timeout(q, Duration::from_millis(50)).unwrap().0;
+        if q.len() >= self.cap {
+            return Push::Shed;
         }
         q.push_back(job);
         self.depth.set(q.len() as f64);
         self.not_empty.notify_one();
-        true
+        Push::Queued
     }
 
     /// Drain up to `max` jobs; empty result means the server stopped.
@@ -195,14 +249,12 @@ impl BatchQueue {
         let n = q.len().min(max);
         let batch: Vec<Job> = q.drain(..n).collect();
         self.depth.set(q.len() as f64);
-        self.not_full.notify_all();
         batch
     }
 
     fn wake_all(&self) {
         let _q = self.inner.lock().unwrap();
         self.not_empty.notify_all();
-        self.not_full.notify_all();
     }
 
     /// Take everything still queued (shutdown drain).
@@ -210,7 +262,6 @@ impl BatchQueue {
         let mut q = self.inner.lock().unwrap();
         let jobs = q.drain(..).collect();
         self.depth.set(0.0);
-        self.not_full.notify_all();
         jobs
     }
 }
@@ -232,6 +283,10 @@ struct ServeMetrics {
     batch_size: Arc<crate::obs::Histogram>,
     /// end-to-end queue→reply latency of scoring requests
     latency: Arc<crate::obs::Histogram>,
+    /// requests answered `overloaded` because the queue was full
+    shed: Arc<crate::obs::Counter>,
+    /// requests answered `deadline exceeded` (batcher- or handler-side)
+    deadline_expired: Arc<crate::obs::Counter>,
 }
 
 impl ServeMetrics {
@@ -245,6 +300,8 @@ impl ServeMetrics {
                 "smurff_serve_latency_seconds",
                 crate::obs::LATENCY_BOUNDS_S,
             ),
+            shed: crate::obs::counter("smurff_serve_shed_total"),
+            deadline_expired: crate::obs::counter("smurff_serve_deadline_expired_total"),
         }
     }
 }
@@ -313,6 +370,18 @@ impl Engine {
     /// on the same snapshot.
     fn execute_batch(&self, jobs: Vec<Job>) {
         let _span = crate::obs::span("serve", "execute_batch");
+        // answer jobs whose deadline lapsed while they sat in the queue
+        // before spending any scoring work on them
+        let now = Instant::now();
+        let (jobs, expired): (Vec<Job>, Vec<Job>) =
+            jobs.into_iter().partition(|j| j.deadline.is_none_or(|d| now < d));
+        for job in expired {
+            self.metrics.deadline_expired.add(1);
+            let _ = job.tx.send(Reply::Err("deadline exceeded before scoring".to_string()));
+        }
+        if jobs.is_empty() {
+            return;
+        }
         let session = self.current();
         self.metrics.served.add(jobs.len() as u64);
         self.metrics.batch_size.observe(jobs.len() as f64);
@@ -455,6 +524,30 @@ fn validate_cells(
 fn err_json(msg: &str) -> String {
     JsonValue::obj(vec![("ok", JsonValue::Bool(false)), ("error", JsonValue::str(msg))])
         .to_string()
+}
+
+/// The load-shed reply: a full queue answers immediately with a
+/// `retry_after_ms` hint — the time the batcher needs to work through a
+/// full queue at the configured round cadence.
+fn overloaded_json(cfg: &ServeConfig) -> String {
+    let rounds = cfg.queue_cap.div_ceil(cfg.batch_max.max(1)).max(1) as u64;
+    let retry_after_ms = (cfg.batch_wait.as_millis() as u64).max(1) * rounds;
+    JsonValue::obj(vec![
+        ("ok", JsonValue::Bool(false)),
+        ("error", JsonValue::str("overloaded")),
+        ("retry_after_ms", JsonValue::num(retry_after_ms as f64)),
+    ])
+    .to_string()
+}
+
+/// The per-request deadline reply (handler-side expiry).
+fn deadline_json(budget: Duration) -> String {
+    JsonValue::obj(vec![
+        ("ok", JsonValue::Bool(false)),
+        ("error", JsonValue::str("deadline exceeded")),
+        ("deadline_ms", JsonValue::num(budget.as_millis() as f64)),
+    ])
+    .to_string()
 }
 
 fn reply_json(reply: Reply) -> String {
@@ -720,10 +813,20 @@ pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle>
                     engine.execute_batch(batch);
                 }
             }
-            // fail any straggler that raced the stop flag, so its
-            // handler's recv() errors out instead of blocking forever
-            for job in engine.queue.drain_all() {
-                let _ = job.tx.send(Reply::Err("server is shutting down".to_string()));
+            // graceful drain (ISSUE 9): handlers refuse new work once
+            // the stop flag is up, so everything still queued is finite
+            // — score it instead of failing it, in batch_max rounds;
+            // the outer loop catches a push that raced the flag
+            loop {
+                let mut leftover = engine.queue.drain_all();
+                if leftover.is_empty() {
+                    break;
+                }
+                while !leftover.is_empty() {
+                    let rest = leftover.split_off(leftover.len().min(engine.cfg.batch_max));
+                    engine.execute_batch(leftover);
+                    leftover = rest;
+                }
             }
         }));
     }
@@ -773,16 +876,110 @@ pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle>
     Ok(ServerHandle { addr, engine, threads })
 }
 
+/// One capped, stop-aware request line off the wire.
+enum LineRead {
+    /// complete line (without the trailing newline), lossy UTF-8
+    Line(String),
+    /// line exceeded [`MAX_LINE_BYTES`]; the remainder has been drained
+    /// up to its newline — the connection is still usable
+    TooLong,
+    /// client EOF or a hard socket error — close the connection
+    Closed,
+    /// server stop flag observed while waiting for bytes
+    Stopped,
+}
+
+/// Read one `\n`-terminated line through a byte cap: the reader only
+/// ever buffers `MAX_LINE_BYTES + 1` bytes of one line, so a hostile
+/// newline-free stream cannot balloon memory (ISSUE 9 satellite).
+/// Socket read timeouts ([`READ_POLL`]) surface as `WouldBlock`/
+/// `TimedOut` and are used to poll the stop flag.
+fn read_request_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> LineRead {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let room = (MAX_LINE_BYTES + 1 - buf.len()) as u64;
+        match reader.by_ref().take(room).read_until(b'\n', &mut buf) {
+            Ok(0) if buf.is_empty() => return LineRead::Closed,
+            Ok(_) => {
+                if buf.last() == Some(&b'\n') {
+                    buf.pop();
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    return LineRead::Line(String::from_utf8_lossy(&buf).into_owned());
+                }
+                if buf.len() > MAX_LINE_BYTES {
+                    return drain_oversized_line(reader, stop);
+                }
+                // EOF mid-line: serve the unterminated tail as a line
+                return LineRead::Line(String::from_utf8_lossy(&buf).into_owned());
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // partial bytes stay in buf; poll the stop flag and retry
+                if stop.load(Ordering::Acquire) {
+                    return LineRead::Stopped;
+                }
+            }
+            Err(_) => return LineRead::Closed,
+        }
+    }
+}
+
+/// Discard the rest of an over-cap line (bounded chunks) so the next
+/// request on this connection starts clean.
+fn drain_oversized_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> LineRead {
+    let mut scratch: Vec<u8> = Vec::new();
+    loop {
+        scratch.clear();
+        match reader.by_ref().take(1 << 16).read_until(b'\n', &mut scratch) {
+            Ok(0) => return LineRead::Closed,
+            Ok(_) if scratch.last() == Some(&b'\n') => return LineRead::TooLong,
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Acquire) {
+                    return LineRead::Stopped;
+                }
+            }
+            Err(_) => return LineRead::Closed,
+        }
+    }
+}
+
 fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
+    // slow-client hardening (ISSUE 9): a peer that stops reading hits
+    // the write timeout instead of pinning this thread; the read
+    // timeout doubles as the stop-flag poll interval
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(READ_POLL));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
-            Err(_) => break,
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_request_line(&mut reader, &engine.stop) {
+            LineRead::Closed => break,
+            LineRead::Stopped => {
+                let _ = writeln!(writer, "{}", err_json("server is shutting down"));
+                break;
+            }
+            LineRead::TooLong => {
+                engine.metrics.requests.add(1);
+                let resp = err_json(&format!(
+                    "request line too long (> {MAX_LINE_BYTES} bytes)"
+                ));
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+                continue;
+            }
+            LineRead::Line(l) => l,
         };
         if line.trim().is_empty() {
             continue;
@@ -807,48 +1004,67 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
                 break;
             }
             Parsed::Queue(op, unwrap_single) => {
-                let queued_at = Instant::now();
-                let (tx, rx) = mpsc::channel();
-                if !engine.queue.push(Job { op, tx }, &engine.stop) {
-                    err_json("server is shutting down")
-                } else {
-                    // stop-aware receive: a job that raced the shutdown
-                    // drain (pushed after the batcher emptied the queue)
-                    // must not strand this handler on a forever-recv
-                    let received = loop {
-                        match rx.recv_timeout(Duration::from_millis(200)) {
-                            Ok(r) => break Some(r),
-                            Err(mpsc::RecvTimeoutError::Disconnected) => break None,
-                            Err(mpsc::RecvTimeoutError::Timeout) => {
-                                if engine.stop.load(Ordering::Acquire) {
-                                    break None;
-                                }
-                            }
-                        }
-                    };
-                    // end-to-end scoring latency: queue push → reply
-                    engine
-                        .metrics
-                        .latency
-                        .observe(queued_at.elapsed().as_secs_f64());
-                    match received {
-                        None => err_json("server dropped the request (shutting down?)"),
-                        Some(Reply::Preds(preds)) if unwrap_single && preds.len() == 1 => {
-                            JsonValue::obj(vec![
-                                ("ok", JsonValue::Bool(true)),
-                                ("mean", JsonValue::num(preds[0].mean)),
-                                ("std", JsonValue::num(preds[0].std)),
-                            ])
-                            .to_string()
-                        }
-                        Some(reply) => reply_json(reply),
-                    }
-                }
+                handle_scoring_request(&engine, op, unwrap_single)
             }
         };
         if writeln!(writer, "{response}").is_err() {
             break;
         }
+    }
+}
+
+/// Queue one scoring op and wait for its reply, enforcing the overload
+/// and deadline policies: a full queue sheds immediately, an expired
+/// deadline answers a structured error even if the batcher is still
+/// busy, and a server stop is honoured after the drain grace.
+fn handle_scoring_request(engine: &Engine, op: Op, unwrap_single: bool) -> String {
+    let queued_at = Instant::now();
+    let deadline = engine.cfg.deadline.map(|d| queued_at + d);
+    let (tx, rx) = mpsc::channel();
+    match engine.queue.push_or_shed(Job { op, tx, deadline }, &engine.stop) {
+        Push::Stopped => return err_json("server is shutting down"),
+        Push::Shed => {
+            engine.metrics.shed.add(1);
+            return overloaded_json(&engine.cfg);
+        }
+        Push::Queued => {}
+    }
+    // stop- and deadline-aware receive: the batcher answers every job
+    // eventually (graceful drain), but a request past its deadline is
+    // answered here and its late reply discarded (rx drops below)
+    let mut stop_seen: Option<Instant> = None;
+    let received = loop {
+        match rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => break Some(r),
+            Err(mpsc::RecvTimeoutError::Disconnected) => break None,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        engine.metrics.deadline_expired.add(1);
+                        engine.metrics.latency.observe(queued_at.elapsed().as_secs_f64());
+                        return deadline_json(engine.cfg.deadline.unwrap_or_default());
+                    }
+                }
+                if engine.stop.load(Ordering::Acquire) {
+                    let seen = *stop_seen.get_or_insert_with(Instant::now);
+                    if seen.elapsed() > DRAIN_GRACE {
+                        break None;
+                    }
+                }
+            }
+        }
+    };
+    // end-to-end scoring latency: queue push → reply
+    engine.metrics.latency.observe(queued_at.elapsed().as_secs_f64());
+    match received {
+        None => err_json("server dropped the request (shutting down?)"),
+        Some(Reply::Preds(preds)) if unwrap_single && preds.len() == 1 => JsonValue::obj(vec![
+            ("ok", JsonValue::Bool(true)),
+            ("mean", JsonValue::num(preds[0].mean)),
+            ("std", JsonValue::num(preds[0].std)),
+        ])
+        .to_string(),
+        Some(reply) => reply_json(reply),
     }
 }
 
@@ -1079,6 +1295,99 @@ mod tests {
         // diagnostics.json at server start (ISSUE 7) — what the CI
         // smoke job scrapes from the standalone serve process
         assert!(text.contains("smurff_diag_rhat"), "diag gauges missing:\n{text}");
+        handle.stop();
+    }
+
+    #[test]
+    fn saturated_queue_sheds_with_structured_overload_replies() {
+        let dir = tiny_store("shed", 2);
+        let cfg = ServeConfig {
+            // a long batch window with a 2-slot queue: concurrent
+            // requests past the first two must shed, not block
+            queue_cap: 2,
+            batch_max: 64,
+            batch_wait: Duration::from_millis(150),
+            ..test_cfg()
+        };
+        let handle = serve(&dir, cfg).unwrap();
+        let addr = handle.addr();
+        let n = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let mut joins = Vec::new();
+        for _ in 0..n {
+            let barrier = barrier.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                barrier.wait(); // all clients fire within the same round
+                c.roundtrip(r#"{"op":"predict","view":0,"row":1,"col":1}"#)
+            }));
+        }
+        let mut ok = 0usize;
+        let mut shed = 0usize;
+        for j in joins {
+            let r = j.join().unwrap();
+            if r.get("ok").unwrap().as_bool() == Some(true) {
+                ok += 1;
+            } else {
+                assert_eq!(r.get("error").unwrap().as_str(), Some("overloaded"));
+                // the structured reply carries a positive retry hint
+                assert!(r.get("retry_after_ms").unwrap().as_f64().unwrap() >= 1.0);
+                shed += 1;
+            }
+        }
+        assert_eq!(ok + shed, n);
+        assert!(ok >= 1, "the queued requests must still be scored");
+        assert!(shed >= 1, "an 8-way burst into a 2-slot queue must shed");
+        // and the event is visible to a metrics scrape
+        let mut c = Client::connect(addr);
+        let m = c.roundtrip(r#"{"op":"metrics"}"#);
+        let text = m.get("text").unwrap().as_str().unwrap().to_string();
+        assert!(text.contains("smurff_serve_shed_total"), "shed counter missing:\n{text}");
+        handle.stop();
+    }
+
+    #[test]
+    fn oversized_request_line_errors_and_keeps_the_connection() {
+        let dir = tiny_store("bigline", 2);
+        let handle = serve(&dir, test_cfg()).unwrap();
+        let mut c = Client::connect(handle.addr());
+        // a line past the cap: answered with a structured error, the
+        // remainder drained, and the connection still serves
+        let big = format!(r#"{{"op":"status","pad":"{}"}}"#, "a".repeat(MAX_LINE_BYTES));
+        let e = c.roundtrip(&big);
+        assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("too long"));
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+        handle.stop();
+    }
+
+    #[test]
+    fn requests_past_their_deadline_get_a_structured_error() {
+        let dir = tiny_store("deadline", 2);
+        let cfg = ServeConfig {
+            // the batch window (300ms) dwarfs the deadline (25ms): the
+            // handler must answer before the batcher ever scores
+            deadline: Some(Duration::from_millis(25)),
+            batch_wait: Duration::from_millis(300),
+            batch_max: 64,
+            ..test_cfg()
+        };
+        let handle = serve(&dir, cfg).unwrap();
+        let mut c = Client::connect(handle.addr());
+        let t0 = Instant::now();
+        let r = c.roundtrip(r#"{"op":"predict","view":0,"row":1,"col":1}"#);
+        assert_eq!(r.get("ok").unwrap().as_bool(), Some(false));
+        assert_eq!(r.get("error").unwrap().as_str(), Some("deadline exceeded"));
+        assert_eq!(r.get("deadline_ms").unwrap().as_usize(), Some(25));
+        // answered by the deadline path, not the 300ms batch round
+        assert!(t0.elapsed() < Duration::from_millis(250), "request stalled past its deadline");
+        // the connection stays usable and non-queued ops still answer
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+        let m = c.roundtrip(r#"{"op":"metrics"}"#);
+        let text = m.get("text").unwrap().as_str().unwrap().to_string();
+        assert!(text.contains("smurff_serve_deadline_expired_total"));
         handle.stop();
     }
 

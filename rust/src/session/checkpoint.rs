@@ -1,10 +1,34 @@
 //! Session checkpointing: save/restore the latent matrices + iteration
 //! counter so long runs survive restarts (SMURFF's save_freq feature).
+//!
+//! ISSUE 9 hardening: `save` is atomic — every factor file is written to
+//! a `.tmp` sibling and renamed into place, and `meta.json` (the
+//! checkpoint's validity marker) lands *last*, matching the
+//! `diagnostics.json` pattern in the store — so a crash mid-save can
+//! never leave a checkpoint that parses but carries truncated factors.
+//! `load`/`restore_into` validate shapes against the session before
+//! mutating anything and return descriptive errors instead of
+//! panicking.  [`MemCheckpoint`] is the in-memory counterpart the
+//! distributed recovery path keeps in a small ring for warm restarts.
 
 use crate::linalg::Mat;
 use crate::sparse::io::{read_dbm, write_dbm};
 use crate::util::JsonValue;
 use std::path::{Path, PathBuf};
+
+/// Write `f(tmp)` to a `.tmp` sibling of `path`, then rename into place
+/// — readers see the old file or the new file, never a partial one.
+fn atomic_write(
+    path: &Path,
+    f: impl FnOnce(&Path) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    f(&tmp)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
 
 /// On-disk checkpoint layout: `<dir>/meta.json`, `<dir>/u.dbm`,
 /// `<dir>/v<i>.dbm`.
@@ -17,60 +41,65 @@ pub struct Checkpoint {
 impl Checkpoint {
     pub fn save(dir: &Path, iteration: usize, u: &Mat, vs: &[&Mat]) -> anyhow::Result<()> {
         std::fs::create_dir_all(dir)?;
+        atomic_write(&dir.join("u.dbm"), |tmp| write_dbm(u, tmp))?;
+        for (i, v) in vs.iter().enumerate() {
+            atomic_write(&dir.join(format!("v{i}.dbm")), |tmp| write_dbm(v, tmp))?;
+        }
+        // meta is the validity marker: written (atomically) only after
+        // every factor file is in place
         let meta = JsonValue::obj(vec![
             ("iteration", JsonValue::num(iteration as f64)),
             ("nviews", JsonValue::num(vs.len() as f64)),
             ("k", JsonValue::num(u.cols() as f64)),
         ]);
-        std::fs::write(dir.join("meta.json"), meta.to_string())?;
-        write_dbm(u, &dir.join("u.dbm"))?;
-        for (i, v) in vs.iter().enumerate() {
-            write_dbm(v, &dir.join(format!("v{i}.dbm")))?;
-        }
-        Ok(())
+        atomic_write(&dir.join("meta.json"), |tmp| {
+            std::fs::write(tmp, meta.to_string()).map_err(Into::into)
+        })
     }
 
     pub fn load(dir: &Path) -> anyhow::Result<Checkpoint> {
         let meta = JsonValue::parse(&std::fs::read_to_string(dir.join("meta.json"))?)
-            .map_err(|e| anyhow::anyhow!("bad checkpoint meta: {e}"))?;
-        let iteration = meta
-            .get("iteration")
-            .and_then(|v| v.as_usize())
-            .ok_or_else(|| anyhow::anyhow!("checkpoint meta missing iteration"))?;
-        let nviews = meta
-            .get("nviews")
-            .and_then(|v| v.as_usize())
-            .ok_or_else(|| anyhow::anyhow!("checkpoint meta missing nviews"))?;
-        let u = read_dbm(&dir.join("u.dbm"))?;
+            .map_err(|e| anyhow::anyhow!("bad checkpoint meta in {}: {e}", dir.display()))?;
+        let field = |k: &str| {
+            meta.get(k).and_then(|v| v.as_usize()).ok_or_else(|| {
+                anyhow::anyhow!("checkpoint meta in {} missing '{k}'", dir.display())
+            })
+        };
+        let iteration = field("iteration")?;
+        let nviews = field("nviews")?;
+        let k = field("k")?;
+        let u = read_dbm(&dir.join("u.dbm"))
+            .map_err(|e| anyhow::anyhow!("checkpoint U unreadable ({e})"))?;
+        if u.cols() != k {
+            anyhow::bail!(
+                "checkpoint U has {} latent dims but meta records k={k} — truncated or \
+                 mismatched checkpoint in {}",
+                u.cols(),
+                dir.display()
+            );
+        }
         let mut vs = Vec::new();
         for i in 0..nviews {
-            vs.push(read_dbm(&dir.join(format!("v{i}.dbm")))?);
+            let v = read_dbm(&dir.join(format!("v{i}.dbm")))
+                .map_err(|e| anyhow::anyhow!("checkpoint factor v{i} unreadable ({e})"))?;
+            if v.cols() != k {
+                anyhow::bail!(
+                    "checkpoint factor v{i} has {} latent dims but meta records k={k}",
+                    v.cols()
+                );
+            }
+            vs.push(v);
         }
         Ok(Checkpoint { iteration, u, vs })
     }
 
-    /// Apply a loaded checkpoint to a session (shapes must match).  The
+    /// Apply a loaded checkpoint to a session.  Every shape is validated
+    /// *before* any state is mutated, so a mismatched checkpoint leaves
+    /// the session untouched and returns a descriptive error.  The
     /// factor list holds one matrix per non-shared mode, grouped by view
     /// (a matrix view contributes exactly one).
     pub fn restore_into(self, session: &mut super::TrainSession) -> anyhow::Result<()> {
-        if self.u.rows() != session.u.rows() || self.u.cols() != session.u.cols() {
-            anyhow::bail!("checkpoint U shape mismatch");
-        }
-        let total: usize = session.views.iter().map(|v| v.modes.len()).sum();
-        if self.vs.len() != total {
-            anyhow::bail!("checkpoint factor count mismatch");
-        }
-        {
-            let mut it = self.vs.iter();
-            for view in &session.views {
-                for mf in &view.modes {
-                    let v = it.next().expect("length checked");
-                    if v.rows() != mf.latents.rows() || v.cols() != mf.latents.cols() {
-                        anyhow::bail!("checkpoint factor shape mismatch");
-                    }
-                }
-            }
-        }
+        validate_factor_shapes(session, &self.u, &self.vs)?;
         session.u = self.u;
         let mut it = self.vs.into_iter();
         for view in session.views.iter_mut() {
@@ -79,6 +108,107 @@ impl Checkpoint {
             }
         }
         // continue from the recorded iteration
+        session.set_iteration(self.iteration);
+        Ok(())
+    }
+}
+
+/// Check `u`/`vs` against a session's factor layout without mutating it.
+fn validate_factor_shapes(
+    session: &super::TrainSession,
+    u: &Mat,
+    vs: &[Mat],
+) -> anyhow::Result<()> {
+    if u.rows() != session.u.rows() || u.cols() != session.u.cols() {
+        anyhow::bail!(
+            "checkpoint U shape mismatch: checkpoint is {}x{}, session expects {}x{}",
+            u.rows(),
+            u.cols(),
+            session.u.rows(),
+            session.u.cols()
+        );
+    }
+    let total: usize = session.views.iter().map(|v| v.modes.len()).sum();
+    if vs.len() != total {
+        anyhow::bail!(
+            "checkpoint factor count mismatch: checkpoint holds {} factor matrices, \
+             session expects {total}",
+            vs.len()
+        );
+    }
+    let mut it = vs.iter();
+    for (vi, view) in session.views.iter().enumerate() {
+        for (mi, mf) in view.modes.iter().enumerate() {
+            let v = it.next().expect("length checked");
+            if v.rows() != mf.latents.rows() || v.cols() != mf.latents.cols() {
+                anyhow::bail!(
+                    "checkpoint factor shape mismatch at view {vi} mode {}: checkpoint is \
+                     {}x{}, session expects {}x{}",
+                    mi + 1,
+                    v.rows(),
+                    v.cols(),
+                    mf.latents.rows(),
+                    mf.latents.cols()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+/// An in-memory checkpoint of the sampled chain state — factors, noise
+/// precisions, iteration — cheap enough to capture every iteration.
+/// The ISSUE 9 distributed recovery keeps a short ring of these per
+/// rank: on a peer's death, survivors roll back to the agreed iteration
+/// and warm-restart bit-exactly (per-row RNG streams are keyed by
+/// `(seed, iteration, row)`, so a restored chain replays the same
+/// samples no matter which rank now owns which rows).
+#[derive(Clone)]
+pub struct MemCheckpoint {
+    pub iteration: usize,
+    u: Mat,
+    vs: Vec<Mat>,
+    alphas: Vec<f64>,
+}
+
+impl MemCheckpoint {
+    /// Snapshot the chain state of `session` (start-of-iteration call
+    /// site: captures the state every rank agrees on under sync).
+    pub fn capture(session: &super::TrainSession) -> MemCheckpoint {
+        MemCheckpoint {
+            iteration: session.iteration(),
+            u: session.u.clone(),
+            vs: session
+                .views
+                .iter()
+                .flat_map(|v| v.modes.iter().map(|mf| mf.latents.clone()))
+                .collect(),
+            alphas: session.views.iter().map(|v| v.noise.alpha()).collect(),
+        }
+    }
+
+    /// Restore this state into `session` (typically a freshly re-sharded
+    /// one), validating shapes first.  Restores factors, adaptive-noise
+    /// precisions and the iteration counter.
+    pub fn restore_into(&self, session: &mut super::TrainSession) -> anyhow::Result<()> {
+        validate_factor_shapes(session, &self.u, &self.vs)?;
+        if self.alphas.len() != session.views.len() {
+            anyhow::bail!(
+                "checkpoint alpha count mismatch: {} vs {} views",
+                self.alphas.len(),
+                session.views.len()
+            );
+        }
+        session.u = self.u.clone();
+        let mut it = self.vs.iter();
+        for view in session.views.iter_mut() {
+            for mf in view.modes.iter_mut() {
+                mf.latents = it.next().expect("length checked").clone();
+            }
+        }
+        for (view, &a) in session.views.iter_mut().zip(&self.alphas) {
+            view.noise.restore_alpha(a);
+        }
         session.set_iteration(self.iteration);
         Ok(())
     }
@@ -143,11 +273,90 @@ mod tests {
         let mut cfg2 = cfg;
         cfg2.num_latent = 8;
         let mut s2 = TrainSession::bmf(train, None, cfg2);
-        assert!(Checkpoint::load(&dir).unwrap().restore_into(&mut s2).is_err());
+        let before = s2.u.clone();
+        let err = Checkpoint::load(&dir)
+            .unwrap()
+            .restore_into(&mut s2)
+            .expect_err("k=4 checkpoint into k=8 session must fail");
+        // descriptive, and the session is untouched
+        let msg = format!("{err}");
+        assert!(msg.contains("shape mismatch"), "{msg}");
+        assert!(msg.contains("expects"), "{msg}");
+        assert_eq!(s2.u.max_abs_diff(&before), 0.0, "failed restore must not mutate");
     }
 
     #[test]
     fn load_missing_dir_errors() {
         assert!(Checkpoint::load(Path::new("/nonexistent/xyz")).is_err());
+    }
+
+    #[test]
+    fn save_is_atomic_and_leaves_no_tmp_litter() {
+        let (train, _) = crate::data::movielens_like(20, 15, 200, 0.0, 23);
+        let cfg = SessionConfig { num_latent: 3, threads: 1, ..Default::default() };
+        let s = TrainSession::bmf(train, None, cfg);
+        let dir = scratch_dir("ckpt_atomic");
+        s.checkpoint(&dir).unwrap();
+        for f in ["meta.json", "u.dbm", "v0.dbm"] {
+            assert!(dir.join(f).exists(), "{f} missing");
+            assert!(!dir.join(format!("{f}.tmp")).exists(), "{f}.tmp left behind");
+        }
+        // overwriting an existing checkpoint goes through the same
+        // tmp+rename path
+        s.checkpoint(&dir).unwrap();
+        assert!(Checkpoint::load(&dir).is_ok());
+    }
+
+    #[test]
+    fn load_rejects_truncated_or_mismatched_checkpoint() {
+        let (train, _) = crate::data::movielens_like(20, 15, 200, 0.0, 24);
+        let cfg = SessionConfig { num_latent: 3, threads: 1, ..Default::default() };
+        let s = TrainSession::bmf(train, None, cfg);
+        let dir = scratch_dir("ckpt_trunc");
+        s.checkpoint(&dir).unwrap();
+        // truncate a factor file: load must fail with a description, not
+        // panic
+        let v0 = dir.join("v0.dbm");
+        let bytes = std::fs::read(&v0).unwrap();
+        std::fs::write(&v0, &bytes[..bytes.len() / 2]).unwrap();
+        let err = Checkpoint::load(&dir).expect_err("truncated factor must not load");
+        assert!(format!("{err}").contains("v0"), "{err}");
+        // missing factor file
+        std::fs::remove_file(&v0).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+    }
+
+    #[test]
+    fn mem_checkpoint_round_trips_the_chain() {
+        let (train, test) = crate::data::movielens_like(30, 25, 500, 0.2, 25);
+        let cfg = SessionConfig { num_latent: 4, burnin: 1, nsamples: 3, threads: 1, ..Default::default() };
+        let mut s = TrainSession::bmf(train.clone(), Some(test.clone()), cfg.clone());
+        s.step();
+        s.step();
+        let ck = MemCheckpoint::capture(&s);
+        assert_eq!(ck.iteration, 2);
+        s.step(); // move past the capture point
+        let mut s2 = TrainSession::bmf(train, Some(test), cfg);
+        ck.restore_into(&mut s2).unwrap();
+        assert_eq!(s2.iteration(), 2);
+        // the restored chain replays the original's next step bit-exactly
+        s2.step();
+        assert_eq!(s2.u.max_abs_diff(&s.u), 0.0);
+        assert_eq!(
+            s2.views[0].col_latents().max_abs_diff(s.views[0].col_latents()),
+            0.0
+        );
+    }
+
+    #[test]
+    fn mem_checkpoint_rejects_wrong_shapes() {
+        let (train, _) = crate::data::movielens_like(20, 15, 200, 0.0, 26);
+        let cfg = SessionConfig { num_latent: 3, threads: 1, ..Default::default() };
+        let s = TrainSession::bmf(train.clone(), None, cfg.clone());
+        let ck = MemCheckpoint::capture(&s);
+        let mut cfg2 = cfg;
+        cfg2.num_latent = 5;
+        let mut s2 = TrainSession::bmf(train, None, cfg2);
+        assert!(ck.restore_into(&mut s2).is_err());
     }
 }

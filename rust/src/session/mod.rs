@@ -25,7 +25,7 @@
 
 mod checkpoint;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, MemCheckpoint};
 
 use crate::coordinator::{
     access_for, DataAccess, Engine, MvnSweep, NativeEngine, Operand, SweepTuning,
