@@ -277,5 +277,46 @@ pub fn run(quick: bool) -> Report {
         ]);
     }
     report.push(t);
+
+    // ---- ISSUE 10: the end-to-end saturation curve through the whole
+    // serving stack — bounded connection pool, per-model micro-batcher,
+    // top-K reply cache — driven by the open-loop power-law load
+    // generator.  `connections` deliberately exceeds the pool's slot
+    // count (workers + backlogs), so the table records the shed path
+    // (structured `overloaded` replies) alongside achieved QPS, tail
+    // latency, and the cache hit-rate a skewed audience produces.
+    {
+        use std::time::Duration;
+        let serve_cfg = crate::serve::ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 0,
+            conn_workers: 4,
+            conn_backlog: 1,
+            poll: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let handle = crate::serve::serve_multi(
+            &[("bench".to_string(), dir.clone())],
+            serve_cfg,
+        )
+        .expect("serve for the saturation bench");
+        let lg = crate::serve::loadgen::LoadgenConfig {
+            addr: handle.addr().to_string(),
+            model: Some("bench".to_string()),
+            levels: if quick { vec![300.0, 1_200.0] } else { vec![500.0, 2_000.0, 8_000.0] },
+            duration: Duration::from_millis(if quick { 400 } else { 1_500 }),
+            connections: 16, // > 4 workers + 4 backlog slots: excess sheds
+            rows: 0,
+            exponent: 1.2,
+            k: 10,
+            seed: 7,
+            // fail fast when a connection is parked behind a full pool —
+            // the shed path, not the timeout, is what the table measures
+            timeout: Duration::from_secs(1),
+        };
+        let results = crate::serve::loadgen::run(&lg).expect("loadgen saturation run");
+        report.push(crate::serve::loadgen::table(&results));
+        handle.stop();
+    }
     report
 }

@@ -192,6 +192,82 @@ pub fn movielens_like(
     }
 }
 
+/// Power-law row-popularity distribution: Zipf weights
+/// ∝ (rank+1)^-exponent over degree ranks, with the rank→row map
+/// shuffled so heavy rows are spread over the index space.  This is the
+/// degree machinery of [`power_law_matrix`], factored out (ISSUE 10) so
+/// the serving load generator can replay the *same* skew as the data
+/// the paper's workloads are shaped like: a few promiscuous
+/// compounds/users drawing most of the traffic, a long cold tail.
+pub struct PowerLawRows {
+    /// rank → row index (rank 0 = heaviest)
+    row_of_rank: Vec<usize>,
+    /// Zipf weight per rank, 1/(rank+1)^exponent
+    weights: Vec<f64>,
+    /// Σ weights
+    total: f64,
+    /// cumulative weights (inclusive), for inverse-CDF sampling
+    cum: Vec<f64>,
+}
+
+impl PowerLawRows {
+    /// Build over `rows` rows, consuming exactly one `shuffle` from the
+    /// caller's generator — the same draw order [`power_law_matrix`]
+    /// has always used, so matrices built through this stay
+    /// bit-identical to the pre-refactor generator.
+    pub fn with_rng(rows: usize, exponent: f64, rng: &mut Rng) -> PowerLawRows {
+        assert!(rows > 0);
+        let weights: Vec<f64> =
+            (0..rows).map(|r| 1.0 / ((r + 1) as f64).powf(exponent)).collect();
+        let total: f64 = weights.iter().sum();
+        let mut row_of_rank: Vec<usize> = (0..rows).collect();
+        rng.shuffle(&mut row_of_rank);
+        let mut cum = Vec::with_capacity(rows);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w;
+            cum.push(acc);
+        }
+        PowerLawRows { row_of_rank, weights, total, cum }
+    }
+
+    /// Standalone constructor with its own deterministic stream.
+    pub fn new(rows: usize, exponent: f64, seed: u64) -> PowerLawRows {
+        let mut rng = Rng::from_parts(seed, 0x90_17);
+        PowerLawRows::with_rng(rows, exponent, &mut rng)
+    }
+
+    /// Number of rows in the universe.
+    pub fn len(&self) -> usize {
+        self.row_of_rank.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.row_of_rank.is_empty()
+    }
+
+    /// The row holding degree rank `rank` (0 = heaviest).
+    pub fn row_of_rank(&self, rank: usize) -> usize {
+        self.row_of_rank[rank]
+    }
+
+    /// Expected degree of the rank-th heaviest row when `nnz` draws are
+    /// spread over the distribution, clamped to [1, max_degree] — the
+    /// exact rounding [`power_law_matrix`] sizes its rows with.
+    pub fn expected_degree(&self, rank: usize, nnz: usize, max_degree: usize) -> usize {
+        ((nnz as f64 * self.weights[rank] / self.total).round() as usize).clamp(1, max_degree)
+    }
+
+    /// Draw one row with probability ∝ its Zipf weight (inverse-CDF on
+    /// the cumulative weights) — the loadgen request stream.
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64() * self.total;
+        // first rank whose cumulative weight reaches u
+        let rank = self.cum.partition_point(|&c| c < u).min(self.cum.len() - 1);
+        self.row_of_rank[rank]
+    }
+}
+
 /// Sparse matrix whose **row degrees follow a power law** — the
 /// compound-activity shape (a few promiscuous compounds with thousands
 /// of measurements, a long tail with a handful) that the nnz-weighted
@@ -216,15 +292,14 @@ pub fn power_law_matrix(
     rng.fill_normal(v.data_mut());
     let scale = 1.0 / (k as f64).sqrt();
 
-    // Zipf weights over degree ranks, then shuffle the rank→row map
-    let weights: Vec<f64> = (0..rows).map(|r| 1.0 / ((r + 1) as f64).powf(exponent)).collect();
-    let total: f64 = weights.iter().sum();
-    let mut row_of_rank: Vec<usize> = (0..rows).collect();
-    rng.shuffle(&mut row_of_rank);
+    // the shared degree machinery (consumes the shuffle draw exactly
+    // where the weights+shuffle block used to sit)
+    let dist = PowerLawRows::with_rng(rows, exponent, &mut rng);
 
     let mut trips = Vec::with_capacity(nnz);
-    for (rank, &i) in row_of_rank.iter().enumerate() {
-        let want = ((nnz as f64 * weights[rank] / total).round() as usize).clamp(1, cols);
+    for rank in 0..dist.len() {
+        let i = dist.row_of_rank(rank);
+        let want = dist.expected_degree(rank, nnz, cols);
         for _ in 0..want {
             let j = rng.next_below(cols);
             let val = scale * crate::linalg::dot(u.row(i), v.row(j)) + 0.3 * rng.normal();
@@ -462,6 +537,31 @@ mod tests {
             a.activity.triplets().collect::<Vec<_>>(),
             b.activity.triplets().collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn power_law_rows_sample_is_deterministic_and_head_heavy() {
+        let dist = PowerLawRows::new(200, 1.0, 9);
+        // deterministic: same seed, same stream of draws
+        let draws = |rng: &mut Rng| (0..5_000).map(|_| dist.sample(rng)).collect::<Vec<usize>>();
+        let a = draws(&mut Rng::from_parts(42, 1));
+        let b = draws(&mut Rng::from_parts(42, 1));
+        assert_eq!(a, b);
+        // every draw is a valid row
+        assert!(a.iter().all(|&r| r < 200));
+        // head-heavy: the 20 heaviest ranks own well over uniform share
+        let head: std::collections::HashSet<usize> =
+            (0..20).map(|rank| dist.row_of_rank(rank)).collect();
+        let head_hits = a.iter().filter(|r| head.contains(r)).count();
+        assert!(
+            head_hits * 2 > a.len(),
+            "top-10% rows drew {head_hits}/{} — not power-law shaped",
+            a.len()
+        );
+        // expected_degree reproduces the generator's rounding exactly
+        let nnz = 10_000;
+        assert!(dist.expected_degree(0, nnz, usize::MAX) > dist.expected_degree(199, nnz, usize::MAX));
+        assert_eq!(dist.expected_degree(199, 10, 50), 1, "tail rows are clamped up to 1");
     }
 
     #[test]

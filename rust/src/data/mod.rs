@@ -6,7 +6,7 @@ pub mod generators;
 
 pub use generators::{
     chembl_synth, cp_tensor_synth, gfa_study_data, movielens_like, power_law_matrix, ChemblSpec,
-    CpData, CpSpec, GfaSpec,
+    CpData, CpSpec, GfaSpec, PowerLawRows,
 };
 
 use crate::linalg::Mat;

@@ -73,14 +73,20 @@
 //!               path bit-identical to the scalar path — plus tensor
 //!               coordinate serving and out-of-matrix prediction via
 //!               Macau side info), [`serve`] (`smurff serve`: a TCP
-//!               front-end speaking newline-delimited JSON with a
-//!               bounded micro-batching queue over the coordinator
-//!               pool, a snapshot watcher that hot-swaps the model
-//!               `Arc` when training appends snapshots, and overload
-//!               hardening — load shedding with structured
-//!               `overloaded` replies, per-request deadlines, capped
-//!               request lines, slow-client write timeouts and a
-//!               graceful shutdown drain)
+//!               front-end speaking newline-delimited JSON — a bounded
+//!               connection-worker pool (`serve::pool`) caps live
+//!               handlers and sheds excess connections, a multi-model
+//!               registry (`serve::registry`) hosts several named
+//!               stores per process each with its own micro-batching
+//!               queue and hot-reload snapshot watcher, a sharded
+//!               per-model top-K reply LRU ([`serve::cache`]) replays
+//!               exact reply bytes and is generation-guard invalidated
+//!               on reload, and overload hardening — load shedding
+//!               with structured `overloaded` replies, per-request
+//!               deadlines, capped request lines, slow-client write
+//!               timeouts and a graceful shutdown drain; plus
+//!               [`serve::loadgen`] (`smurff loadgen`: an open-loop
+//!               power-law load harness emitting the saturation table))
 //! * evaluation: [`baselines`] (PyMC3-like, GraphChi-like, GASPI-like),
 //!               [`hwmodel`] (Xeon / Xeon Phi / ARM roofline+cache model),
 //!               [`bench`] (the harness regenerating every paper figure)
@@ -149,7 +155,7 @@ pub mod prelude {
     pub use crate::noise::NoiseConfig;
     pub use crate::predict::{BlockPrediction, PredictSession, Prediction, ServingModel};
     pub use crate::priors::PriorKind;
-    pub use crate::serve::{serve, ServeConfig, ServerHandle};
+    pub use crate::serve::{serve, serve_multi, ServeConfig, ServerHandle};
     pub use crate::session::{
         ModePrior, SessionBuilder, SessionConfig, TrainResult, TrainSession,
     };

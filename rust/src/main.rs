@@ -22,7 +22,7 @@ use smurff::util::cli::Args;
 use smurff::util::config::Config;
 use std::path::{Path, PathBuf};
 
-const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|bench|diag|info> [flags]
+const USAGE: &str = "usage: smurff <train|predict|serve|query|loadgen|compact|generate|bench|diag|info> [flags]
   train    --config <toml> | --data <mtx> [--test <mtx>] | --tensor <tns> [--test <tns>]
            | --synthetic <chembl|movielens>
            [--k N] [--burnin N] [--nsamples N] [--seed N] [--threads N]
@@ -41,15 +41,27 @@ const USAGE: &str = "usage: smurff <train|predict|serve|query|compact|generate|b
   predict  --store <dir> [--view N] [--threads N]
            --row N --col N        pointwise prediction with uncertainty
            --row N --topk K       top-K column recommendations for a row
-  serve    --store <dir> [--addr host:port] [--threads N] [--batch N]
+  serve    --store <dir> | --model name=dir [--model name=dir ...]
+           [--addr host:port] [--threads N] [--batch N]
            [--batch-wait-ms N] [--max-queue N] [--poll-ms N] [--allow-shutdown]
            [--deadline-ms N]   (per-request deadline; a full --max-queue sheds
             with {\"error\":\"overloaded\",\"retry_after_ms\":…} instead of blocking)
-           (newline-delimited JSON over TCP; hot-reloads when the store grows)
+           [--conn-workers N] [--conn-backlog N]   (bounded connection pool:
+            handler threads are pinned at N; saturated accepts shed)
+           [--cache N]   (per-model top-K reply cache capacity; 0 disables)
+           (newline-delimited JSON over TCP; requests pick a model with a
+            \"model\" field, absent = the first listed; each model hot-reloads
+            when its store grows)
   query    --addr host:port  --status | --metrics | --shutdown-server
            | --row N --col N [--view N] | --row N --topk K [--view N]
+           [--model name]   (address one model of a multi-model server)
            (one-shot client for `smurff serve`; prints the raw JSON reply;
             --metrics prints the decoded Prometheus text exposition)
+  loadgen  --addr host:port [--model name] [--qps F[,F,...]] [--duration S]
+           [--connections N] [--exponent F] [--topk K] [--rows N] [--seed N]
+           [--timeout-ms N] [--json <path>]   (open-loop power-law top-K load generator:
+            one saturation-table row per offered-QPS level — offered vs
+            achieved QPS, p50/p99 ms, shed rate, cache hit-rate)
   compact  --store <dir>     pack a snapshot-dir store into the v3 serving
            artifact (page-aligned, mmap'd zero-copy by predict/serve)
   generate --kind <chembl|movielens> --out <mtx> [--rows N] [--cols N] [--nnz N]
@@ -106,6 +118,7 @@ fn run() -> anyhow::Result<()> {
         "predict" => cmd_predict(&args),
         "serve" => cmd_serve(&args),
         "query" => cmd_query(&args),
+        "loadgen" => cmd_loadgen(&args),
         "compact" => cmd_compact(&args),
         "generate" => cmd_generate(&args),
         "bench" => cmd_bench(&args),
@@ -630,9 +643,26 @@ fn cmd_predict(args: &Args) -> anyhow::Result<()> {
 /// training store gains snapshots.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use std::time::Duration;
-    let store = args
-        .get("store")
-        .ok_or_else(|| anyhow::anyhow!("serve needs --store <dir>\n{USAGE}"))?;
+    // the model set: repeated `--model name=dir` flags, or the PR 5
+    // single-store spelling `--store dir` (served as model "default")
+    let mut models: Vec<(String, PathBuf)> = Vec::new();
+    for spec in args.get_all("model") {
+        let (name, dir) = spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--model expects name=dir, got '{spec}'\n{USAGE}")
+        })?;
+        models.push((name.to_string(), PathBuf::from(dir)));
+    }
+    if let Some(store) = args.get("store") {
+        anyhow::ensure!(
+            models.is_empty(),
+            "serve takes --store <dir> or --model name=dir flags, not both\n{USAGE}"
+        );
+        models.push(("default".to_string(), PathBuf::from(store)));
+    }
+    anyhow::ensure!(
+        !models.is_empty(),
+        "serve needs --store <dir> or --model name=dir\n{USAGE}"
+    );
     let cfg = smurff::serve::ServeConfig {
         addr: args.get_str("addr", "127.0.0.1:7799"),
         threads: args.get_usize("threads", 0).map_err(anyhow::Error::msg)?,
@@ -655,10 +685,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             0 => None,
             ms => Some(Duration::from_millis(ms as u64)),
         },
+        conn_workers: args.get_usize("conn-workers", 32).map_err(anyhow::Error::msg)?,
+        conn_backlog: args.get_usize("conn-backlog", 2).map_err(anyhow::Error::msg)?,
+        cache_cap: args.get_usize("cache", 4096).map_err(anyhow::Error::msg)?,
     };
-    let handle = smurff::serve::serve(Path::new(store), cfg)?;
+    let handle = smurff::serve::serve_multi(&models, cfg)?;
     println!(
-        "serving {store} on {} (try `smurff query --addr {} --status`)",
+        "serving {} model(s) [{}] on {} (try `smurff query --addr {} --status`)",
+        models.len(),
+        models.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(", "),
         handle.addr(),
         handle.addr()
     );
@@ -672,6 +707,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 fn cmd_query(args: &Args) -> anyhow::Result<()> {
     use std::io::{BufRead, BufReader, Write};
     let addr = args.get_str("addr", "127.0.0.1:7799");
+    // `--model name` routes scoring requests on a multi-model server
+    // (absent = the server's default model)
+    let model_field = match args.get("model") {
+        Some(m) => format!(r#""model":"{m}","#),
+        None => String::new(),
+    };
     let request = if args.get_bool("status") {
         r#"{"op":"status"}"#.to_string()
     } else if args.get_bool("metrics") {
@@ -688,13 +729,13 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         }
         if args.has("topk") {
             let k = args.get_usize("topk", 10).map_err(anyhow::Error::msg)?;
-            format!(r#"{{"op":"topk","view":{view},"row":{row},"k":{k}}}"#)
+            format!(r#"{{"op":"topk",{model_field}"view":{view},"row":{row},"k":{k}}}"#)
         } else {
             let col = args.get_usize("col", usize::MAX).map_err(anyhow::Error::msg)?;
             if col == usize::MAX {
                 anyhow::bail!("query needs --col N (or --topk K) with --row\n{USAGE}");
             }
-            format!(r#"{{"op":"predict","view":{view},"row":{row},"col":{col}}}"#)
+            format!(r#"{{"op":"predict",{model_field}"view":{view},"row":{row},"col":{col}}}"#)
         }
     };
     let stream = std::net::TcpStream::connect(&addr)
@@ -718,6 +759,47 @@ fn cmd_query(args: &Args) -> anyhow::Result<()> {
         }
     }
     println!("{}", line.trim());
+    Ok(())
+}
+
+/// Open-loop power-law load generator against a live serve process:
+/// prints the saturation table, optionally dumps it as JSON (the CI
+/// smoke leg validates that file).
+fn cmd_loadgen(args: &Args) -> anyhow::Result<()> {
+    use std::time::Duration;
+    let mut levels = Vec::new();
+    for part in args.get_str("qps", "200").split(',') {
+        let qps: f64 = part
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--qps expects numbers, got '{part}'"))?;
+        levels.push(qps);
+    }
+    let cfg = smurff::serve::loadgen::LoadgenConfig {
+        addr: args.get_str("addr", "127.0.0.1:7799"),
+        model: args.get("model").map(String::from),
+        levels,
+        duration: Duration::from_secs_f64(args.get_f64("duration", 3.0).map_err(anyhow::Error::msg)?),
+        connections: args.get_usize("connections", 8).map_err(anyhow::Error::msg)?,
+        rows: args.get_usize("rows", 0).map_err(anyhow::Error::msg)?,
+        exponent: args.get_f64("exponent", 1.0).map_err(anyhow::Error::msg)?,
+        k: args.get_usize("topk", 10).map_err(anyhow::Error::msg)?,
+        seed: args.get_usize("seed", 7).map_err(anyhow::Error::msg)? as u64,
+        timeout: Duration::from_millis(
+            args.get_usize("timeout-ms", 10_000).map_err(anyhow::Error::msg)? as u64,
+        ),
+    };
+    let results = smurff::serve::loadgen::run(&cfg)?;
+    smurff::serve::loadgen::table(&results).print();
+    for flag in ["json", "out"] {
+        if let Some(path) = args.get(flag) {
+            std::fs::write(
+                path,
+                smurff::serve::loadgen::to_json(&cfg, &results).to_string_pretty(),
+            )?;
+            println!("wrote {path}");
+        }
+    }
     Ok(())
 }
 

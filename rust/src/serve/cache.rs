@@ -1,0 +1,391 @@
+//! Sharded LRU cache for serialized top-K replies (ISSUE 10 tentpole).
+//!
+//! Top-K is the expensive verb — one `dots_into` panel pass per
+//! posterior sample over every candidate column — and under power-law
+//! traffic a handful of hot rows absorb most of the load.  Caching the
+//! **serialized reply line** (not the scored items) makes a hit
+//! trivially bit-identical to the cold score: the batcher renders the
+//! reply once, stores the exact bytes, and every later hit returns the
+//! same string the cold request was answered with.
+//!
+//! ## Keying and invalidation
+//!
+//! Entries are keyed on `(view, row, k)` within one model's cache (the
+//! model axis is the per-[`crate::serve::registry::ModelEntry`] cache
+//! instance itself, so the full key is `(model, view, row, k)`).
+//! Requests carrying an `exclude` list bypass the cache — their replies
+//! depend on the list, and the recommendation hot path sends none.
+//!
+//! A hot reload calls [`TopKCache::invalidate_all`], which bumps the
+//! cache **generation** *before* clearing the shards.  The batcher
+//! stamps every insert with the generation it read before taking its
+//! model snapshot ([`TopKCache::begin`]); an insert whose generation is
+//! stale — the model swapped while the batch was scoring — is dropped
+//! under the shard lock, so a reply computed on the old model can never
+//! outlive that model's cache.  Only the reloaded model's cache is
+//! touched; sibling models keep their entries.
+//!
+//! ## Sharding and eviction
+//!
+//! The key hashes to one of [`SHARDS`] independently-locked shards, so
+//! concurrent connection handlers don't serialize on one mutex.  Each
+//! shard is a classic O(1) LRU: a slot arena threaded with an intrusive
+//! doubly-linked recency list plus a `HashMap` index.  Capacity
+//! overflow evicts from the cold end, counted per model in
+//! `smurff_serve_cache_evictions_total{model}` alongside
+//! `smurff_serve_cache_{hits,misses}_total{model}`.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shard count: enough to keep handler threads from serializing on one
+/// lock, small enough that a tiny capacity still gives each shard room.
+pub const SHARDS: usize = 8;
+
+/// Cache key within one model: `(view, row, k)` — `k` as requested on
+/// the wire (pre-clamp), so equal requests hit regardless of the
+/// model's column count.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct TopKKey {
+    pub view: u32,
+    pub row: u32,
+    pub k: u32,
+}
+
+const NIL: usize = usize::MAX;
+
+struct Slot {
+    key: TopKKey,
+    /// the exact serialized reply line the cold request was answered with
+    val: String,
+    prev: usize,
+    next: usize,
+}
+
+/// One LRU shard: slot arena + intrusive recency list + key index.
+/// `head` is the most recently used slot, `tail` the eviction candidate.
+struct Shard {
+    map: HashMap<TopKKey, usize>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    head: usize,
+    tail: usize,
+    cap: usize,
+}
+
+impl Shard {
+    fn new(cap: usize) -> Shard {
+        Shard {
+            map: HashMap::with_capacity(cap),
+            slots: Vec::with_capacity(cap),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+            cap: cap.max(1),
+        }
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (prev, next) = (self.slots[i].prev, self.slots[i].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+
+    fn get(&mut self, key: &TopKKey) -> Option<String> {
+        let i = *self.map.get(key)?;
+        // refresh recency: move the slot to the hot end
+        self.unlink(i);
+        self.push_front(i);
+        Some(self.slots[i].val.clone())
+    }
+
+    /// Insert (or refresh) `key`; returns how many entries were evicted
+    /// to make room (0 or 1).
+    fn insert(&mut self, key: TopKKey, val: String) -> u64 {
+        if let Some(&i) = self.map.get(&key) {
+            self.slots[i].val = val;
+            self.unlink(i);
+            self.push_front(i);
+            return 0;
+        }
+        let mut evicted = 0;
+        if self.map.len() >= self.cap {
+            // evict the cold end
+            let t = self.tail;
+            debug_assert_ne!(t, NIL);
+            self.unlink(t);
+            self.map.remove(&self.slots[t].key);
+            self.free.push(t);
+            evicted = 1;
+        }
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = Slot { key, val, prev: NIL, next: NIL };
+                i
+            }
+            None => {
+                self.slots.push(Slot { key, val, prev: NIL, next: NIL });
+                self.slots.len() - 1
+            }
+        };
+        self.map.insert(key, i);
+        self.push_front(i);
+        evicted
+    }
+
+    fn clear(&mut self) {
+        self.map.clear();
+        self.slots.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    fn len(&self) -> usize {
+        self.map.len()
+    }
+}
+
+/// Per-model sharded LRU over serialized top-K replies.  See the module
+/// docs for the keying, generation, and eviction contracts.
+pub struct TopKCache {
+    shards: Vec<Mutex<Shard>>,
+    /// reload generation: bumped by [`invalidate_all`](Self::invalidate_all)
+    /// before the shards clear, checked by [`insert`](Self::insert)
+    /// under the shard lock
+    generation: AtomicU64,
+    hits: Arc<crate::obs::Counter>,
+    misses: Arc<crate::obs::Counter>,
+    evictions: Arc<crate::obs::Counter>,
+}
+
+impl TopKCache {
+    /// A cache holding up to ~`capacity` replies for the named model,
+    /// spread over [`SHARDS`] shards (fewer when `capacity < SHARDS`).
+    pub fn new(capacity: usize, model: &str) -> TopKCache {
+        let nshards = SHARDS.min(capacity.max(1));
+        Self::with_shards(capacity, nshards, model)
+    }
+
+    /// Shard-count override — tests pin `nshards = 1` so the global
+    /// eviction order is observable.
+    pub fn with_shards(capacity: usize, nshards: usize, model: &str) -> TopKCache {
+        let nshards = nshards.max(1);
+        let per_shard = capacity.max(1).div_ceil(nshards);
+        TopKCache {
+            shards: (0..nshards).map(|_| Mutex::new(Shard::new(per_shard))).collect(),
+            generation: AtomicU64::new(0),
+            hits: crate::obs::counter(&format!(
+                "smurff_serve_cache_hits_total{{model=\"{model}\"}}"
+            )),
+            misses: crate::obs::counter(&format!(
+                "smurff_serve_cache_misses_total{{model=\"{model}\"}}"
+            )),
+            evictions: crate::obs::counter(&format!(
+                "smurff_serve_cache_evictions_total{{model=\"{model}\"}}"
+            )),
+        }
+    }
+
+    fn shard_of(&self, key: &TopKKey) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// The generation an insert must be stamped with: read it *before*
+    /// taking the model snapshot the reply is scored on.
+    pub fn begin(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Look up a reply, counting the hit or miss.  Only call for
+    /// cacheable requests (top-K, empty exclude list) so the counters
+    /// mean what the hit-rate math assumes.
+    pub fn get(&self, key: &TopKKey) -> Option<String> {
+        let got = self.shard_of(key).lock().unwrap().get(key);
+        if got.is_some() {
+            self.hits.add(1);
+        } else {
+            self.misses.add(1);
+        }
+        got
+    }
+
+    /// Insert a reply scored under generation `gen` (from [`begin`]).
+    /// Dropped if a reload bumped the generation since — the reply was
+    /// computed on a model this cache no longer represents.
+    pub fn insert(&self, key: TopKKey, val: String, gen: u64) {
+        let shard = self.shard_of(&key);
+        let mut s = shard.lock().unwrap();
+        if self.generation.load(Ordering::Acquire) != gen {
+            return;
+        }
+        let evicted = s.insert(key, val);
+        if evicted > 0 {
+            self.evictions.add(evicted);
+        }
+    }
+
+    /// Atomic hot-reload invalidation: bump the generation (so in-flight
+    /// inserts stamped with the old one are rejected), then clear every
+    /// shard.  Sibling models' caches are untouched by construction.
+    pub fn invalidate_all(&self) {
+        self.generation.fetch_add(1, Ordering::AcqRel);
+        for shard in &self.shards {
+            shard.lock().unwrap().clear();
+        }
+    }
+
+    /// Live entries across all shards (status reporting).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime hit/miss/eviction totals (status reporting; the same
+    /// counters the Prometheus exposition renders).
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (self.hits.get(), self.misses.get(), self.evictions.get())
+    }
+
+    /// hits / (hits + misses), or 0 before any lookup.
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m, _) = self.stats();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(row: u32) -> TopKKey {
+        TopKKey { view: 0, row, k: 10 }
+    }
+
+    #[test]
+    fn hit_returns_the_exact_inserted_bytes() {
+        let c = TopKCache::with_shards(8, 1, "t_bytes");
+        let gen = c.begin();
+        let reply = r#"{"items":[[7,4.4],[2,4.1]],"ok":true}"#.to_string();
+        c.insert(key(3), reply.clone(), gen);
+        assert_eq!(c.get(&key(3)).as_deref(), Some(reply.as_str()));
+        // and again — a hit must not degrade the stored bytes
+        assert_eq!(c.get(&key(3)).as_deref(), Some(reply.as_str()));
+        let (h, m, _) = c.stats();
+        assert_eq!((h, m), (2, 0));
+    }
+
+    #[test]
+    fn capacity_evicts_in_lru_order() {
+        let c = TopKCache::with_shards(3, 1, "t_evict");
+        let gen = c.begin();
+        for r in 0..3 {
+            c.insert(key(r), format!("v{r}"), gen);
+        }
+        // touch 0 so 1 becomes the cold end
+        assert!(c.get(&key(0)).is_some());
+        c.insert(key(9), "v9".into(), gen);
+        assert_eq!(c.len(), 3);
+        assert!(c.get(&key(1)).is_none(), "LRU entry must be the one evicted");
+        assert!(c.get(&key(0)).is_some());
+        assert!(c.get(&key(2)).is_some());
+        assert!(c.get(&key(9)).is_some());
+        let (_, _, e) = c.stats();
+        assert_eq!(e, 1);
+        // the gets above refreshed recency to (hot→cold) 9, 2, 0: the
+        // next overflow must evict 0, strictly from the cold end
+        c.insert(key(10), "v10".into(), gen);
+        assert!(c.get(&key(0)).is_none());
+        assert!(c.get(&key(2)).is_some());
+        assert!(c.get(&key(9)).is_some());
+        assert!(c.get(&key(10)).is_some());
+    }
+
+    #[test]
+    fn reinsert_refreshes_value_and_recency() {
+        let c = TopKCache::with_shards(2, 1, "t_refresh");
+        let gen = c.begin();
+        c.insert(key(1), "a".into(), gen);
+        c.insert(key(2), "b".into(), gen);
+        c.insert(key(1), "a2".into(), gen); // refresh, no eviction
+        let (_, _, e) = c.stats();
+        assert_eq!(e, 0);
+        c.insert(key(3), "c".into(), gen); // evicts 2 (1 was refreshed)
+        assert_eq!(c.get(&key(1)).as_deref(), Some("a2"));
+        assert!(c.get(&key(2)).is_none());
+    }
+
+    #[test]
+    fn invalidate_clears_and_rejects_stale_inserts() {
+        let c = TopKCache::with_shards(8, 2, "t_gen");
+        let gen = c.begin();
+        c.insert(key(1), "a".into(), gen);
+        assert_eq!(c.len(), 1);
+        c.invalidate_all();
+        assert!(c.is_empty());
+        assert!(c.get(&key(1)).is_none());
+        // an insert stamped with the pre-reload generation is dropped:
+        // its reply was scored on the model that just went away
+        c.insert(key(2), "stale".into(), gen);
+        assert!(c.get(&key(2)).is_none());
+        // the post-reload generation inserts fine
+        c.insert(key(2), "fresh".into(), c.begin());
+        assert_eq!(c.get(&key(2)).as_deref(), Some("fresh"));
+    }
+
+    #[test]
+    fn keys_differ_by_view_row_and_k() {
+        let c = TopKCache::with_shards(16, 4, "t_keys");
+        let gen = c.begin();
+        c.insert(TopKKey { view: 0, row: 1, k: 10 }, "a".into(), gen);
+        assert!(c.get(&TopKKey { view: 1, row: 1, k: 10 }).is_none());
+        assert!(c.get(&TopKKey { view: 0, row: 2, k: 10 }).is_none());
+        assert!(c.get(&TopKKey { view: 0, row: 1, k: 11 }).is_none());
+        assert!(c.get(&TopKKey { view: 0, row: 1, k: 10 }).is_some());
+    }
+
+    #[test]
+    fn sharded_capacity_holds_roughly_cap_entries() {
+        let c = TopKCache::new(64, "t_cap");
+        let gen = c.begin();
+        for r in 0..1_000u32 {
+            c.insert(key(r), "x".into(), gen);
+        }
+        // per-shard caps are ceil(cap/shards): never wildly over capacity
+        assert!(c.len() <= 64 + SHARDS, "len {} over capacity", c.len());
+        let (_, _, e) = c.stats();
+        assert!(e >= 1_000 - 64 - SHARDS as u64);
+    }
+}

@@ -1,0 +1,483 @@
+//! `smurff loadgen` — an open-loop, power-law load generator for a live
+//! serve process (ISSUE 10 tentpole, part 4).
+//!
+//! The paper's serving workload is *skewed*: a few compounds/users draw
+//! most of the traffic.  This module replays that shape against a
+//! running server — row popularity follows the exact
+//! [`PowerLawRows`](crate::data::PowerLawRows) machinery the synthetic
+//! training data is generated with — and reports the saturation curve
+//! the BENCH file records: offered QPS × achieved QPS × p50/p99 × shed
+//! rate × cache hit-rate.
+//!
+//! ## Open-loop pacing
+//!
+//! Request *i* of a level has a fixed send instant `start + i/qps`,
+//! scheduled before the level begins.  A slow server does not slow the
+//! offered rate down (that would be closed-loop, which hides
+//! saturation); instead the lag shows up where it belongs — in the
+//! latency distribution, measured from the **scheduled** instant, so
+//! coordinated omission cannot flatter the tail.  Requests are spread
+//! over `connections` client sockets; a shed connection (the server's
+//! bounded pool answered `overloaded` and closed) reconnects and the
+//! event is counted, never hidden.
+//!
+//! The workload is top-K (`{"op":"topk", …}`): the verb the reply cache
+//! serves, so a power-law run demonstrates the hit-rate a skewed
+//! audience produces — the acceptance criterion of the issue.
+
+use crate::data::PowerLawRows;
+use crate::rng::Rng;
+use crate::util::JsonValue;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Load-generator configuration (`smurff loadgen` flags).
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// server address, e.g. `127.0.0.1:7799`
+    pub addr: String,
+    /// model to address (`None` = the server's default model)
+    pub model: Option<String>,
+    /// offered-QPS levels, one saturation-table row each
+    pub levels: Vec<f64>,
+    /// wall-clock length of each level
+    pub duration: Duration,
+    /// concurrent client connections the requests are spread over
+    pub connections: usize,
+    /// row universe (0 = learn `nrows` from the server's status reply)
+    pub rows: usize,
+    /// power-law exponent of the row-popularity distribution
+    pub exponent: f64,
+    /// K of the top-K requests
+    pub k: usize,
+    /// RNG seed for the request stream
+    pub seed: u64,
+    /// connect/read timeout per request — under saturation a connection
+    /// parked in a full worker queue gets no reply; the generator drops
+    /// it after this long, reconnects, and counts the miss honestly
+    pub timeout: Duration,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> LoadgenConfig {
+        LoadgenConfig {
+            addr: "127.0.0.1:7799".to_string(),
+            model: None,
+            levels: vec![200.0],
+            duration: Duration::from_secs(3),
+            connections: 8,
+            rows: 0,
+            exponent: 1.0,
+            k: 10,
+            seed: 7,
+            timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// One saturation-table row: what one offered-QPS level measured.
+#[derive(Debug, Clone)]
+pub struct LevelResult {
+    pub offered_qps: f64,
+    /// ok replies per second of wall clock
+    pub achieved_qps: f64,
+    pub sent: usize,
+    pub ok: usize,
+    /// structured `overloaded` replies (queue shed or connection shed)
+    pub shed: usize,
+    /// transport failures (reconnect exhausted, bad reply)
+    pub errors: usize,
+    /// latency percentiles over ok replies, measured from the scheduled
+    /// send instant (coordinated-omission corrected), in milliseconds
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub shed_rate: f64,
+    /// the target model's cache hit-rate over this level (from the
+    /// server's per-model status counters; 0 when caching is off)
+    pub cache_hit_rate: f64,
+}
+
+/// One client connection speaking the newline-delimited protocol.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn connect(addr: &str, timeout: Duration) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(timeout))?;
+        stream.set_write_timeout(Some(timeout))?;
+        Ok(Conn { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    /// One request line → one reply line ("" = peer closed).
+    fn request(&mut self, line: &str) -> std::io::Result<String> {
+        writeln!(self.writer, "{line}")?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        Ok(reply.trim_end().to_string())
+    }
+}
+
+/// Ask the server for the target model's shape and cache counters:
+/// `(nrows, cache_hits, cache_misses)`.
+fn probe(addr: &str, model: Option<&str>, timeout: Duration) -> anyhow::Result<(usize, u64, u64)> {
+    let mut conn = Conn::connect(addr, timeout)
+        .map_err(|e| anyhow::anyhow!("loadgen: cannot connect to {addr}: {e}"))?;
+    let reply = conn.request(r#"{"op":"status"}"#)?;
+    let st = JsonValue::parse(&reply)
+        .map_err(|e| anyhow::anyhow!("loadgen: bad status reply: {e}"))?;
+    anyhow::ensure!(
+        st.get("ok").and_then(|b| b.as_bool()) == Some(true),
+        "loadgen: server status not ok: {reply}"
+    );
+    // the per-model block when a model is named, the flat default
+    // fields otherwise
+    let block = match model {
+        Some(name) => st
+            .get("per_model")
+            .and_then(|pm| pm.get(name))
+            .ok_or_else(|| anyhow::anyhow!("loadgen: server has no model '{name}'"))?
+            .clone(),
+        None => st.clone(),
+    };
+    let nrows = block
+        .get("nrows")
+        .and_then(|n| n.as_usize())
+        .ok_or_else(|| anyhow::anyhow!("loadgen: status reply carries no nrows"))?;
+    // the cache counters live in the per-model block; "no model" means
+    // the default model, i.e. the first name in the status `models` list
+    let default_name = st
+        .get("models")
+        .and_then(|m| m.as_array())
+        .and_then(|a| a.first())
+        .and_then(|v| v.as_str());
+    let cache_block = model
+        .or(default_name)
+        .and_then(|name| st.get("per_model").and_then(|pm| pm.get(name)))
+        .and_then(|b| b.get("cache"));
+    let counter = |key: &str| -> u64 {
+        cache_block
+            .and_then(|c| c.get(key))
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u64)
+            .unwrap_or(0)
+    };
+    Ok((nrows, counter("hits"), counter("misses")))
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Run every configured level against the live server and return one
+/// [`LevelResult`] per level.
+pub fn run(cfg: &LoadgenConfig) -> anyhow::Result<Vec<LevelResult>> {
+    anyhow::ensure!(!cfg.levels.is_empty(), "loadgen needs at least one --qps level");
+    anyhow::ensure!(cfg.duration > Duration::ZERO, "loadgen needs a positive --duration");
+    let (probed_rows, _, _) = probe(&cfg.addr, cfg.model.as_deref(), cfg.timeout)?;
+    let rows = if cfg.rows > 0 { cfg.rows.min(probed_rows) } else { probed_rows };
+    anyhow::ensure!(rows > 0, "loadgen: the target model has no rows");
+    crate::log_info!(
+        "loadgen: {} → {} level(s), {} rows, exponent {}, k {}",
+        cfg.addr,
+        cfg.levels.len(),
+        rows,
+        cfg.exponent,
+        cfg.k
+    );
+    let mut results = Vec::with_capacity(cfg.levels.len());
+    for (li, &qps) in cfg.levels.iter().enumerate() {
+        anyhow::ensure!(qps > 0.0, "offered QPS must be positive (got {qps})");
+        results.push(run_level(cfg, rows, qps, li)?);
+    }
+    Ok(results)
+}
+
+fn run_level(
+    cfg: &LoadgenConfig,
+    rows: usize,
+    qps: f64,
+    level_idx: usize,
+) -> anyhow::Result<LevelResult> {
+    // the whole request stream is scheduled up front (open loop): row
+    // draws from the power-law distribution, send instants at i/qps
+    let dist = PowerLawRows::new(rows, cfg.exponent, cfg.seed);
+    let mut rng = Rng::from_parts(cfg.seed, 0x10AD ^ level_idx as u64);
+    let total = ((qps * cfg.duration.as_secs_f64()).round() as usize).max(1);
+    let model_field = match &cfg.model {
+        Some(m) => format!("\"model\":\"{m}\","),
+        None => String::new(),
+    };
+    let requests: Vec<String> = (0..total)
+        .map(|_| {
+            let row = dist.sample(&mut rng);
+            format!(r#"{{"op":"topk",{model_field}"view":0,"row":{row},"k":{}}}"#, cfg.k)
+        })
+        .collect();
+    let nthreads = cfg.connections.clamp(1, total);
+    let gap = Duration::from_secs_f64(1.0 / qps);
+
+    let (hits0, misses0) = {
+        let (_, h, m) = probe(&cfg.addr, cfg.model.as_deref(), cfg.timeout)?;
+        (h, m)
+    };
+
+    // start far enough out that every thread has connected
+    let start = Instant::now() + Duration::from_millis(50);
+    let mut joins = Vec::with_capacity(nthreads);
+    for t in 0..nthreads {
+        let addr = cfg.addr.clone();
+        let timeout = cfg.timeout;
+        // thread t owns requests t, t+nthreads, t+2·nthreads, …
+        let mine: Vec<(usize, String)> = requests
+            .iter()
+            .enumerate()
+            .skip(t)
+            .step_by(nthreads)
+            .map(|(i, r)| (i, r.clone()))
+            .collect();
+        joins.push(std::thread::spawn(move || {
+            let mut conn = Conn::connect(&addr, timeout).ok();
+            let (mut ok, mut shed, mut errors) = (0usize, 0usize, 0usize);
+            let mut latencies_ms: Vec<f64> = Vec::with_capacity(mine.len());
+            for (i, req) in &mine {
+                // open-loop pacing: wait for this request's scheduled
+                // instant; a late previous reply eats into the wait and
+                // surfaces as latency, never as a lower offered rate
+                let scheduled = start + gap.mul_f64(*i as f64);
+                let now = Instant::now();
+                if scheduled > now {
+                    std::thread::sleep(scheduled - now);
+                }
+                // one reconnect attempt per request: a connection the
+                // server shed (overloaded + close) comes back up here
+                let mut attempts = 0;
+                let reply = loop {
+                    attempts += 1;
+                    match conn.as_mut().map(|c| c.request(req)) {
+                        Some(Ok(r)) if !r.is_empty() => break Some(r),
+                        _ => {
+                            conn = Conn::connect(&addr, timeout).ok();
+                            if attempts >= 2 {
+                                break None;
+                            }
+                        }
+                    }
+                };
+                match reply.and_then(|r| JsonValue::parse(&r).ok()) {
+                    None => errors += 1,
+                    Some(v) => {
+                        if v.get("ok").and_then(|b| b.as_bool()) == Some(true) {
+                            ok += 1;
+                            latencies_ms
+                                .push(scheduled.elapsed().as_secs_f64() * 1e3);
+                        } else if v.get("error").and_then(|e| e.as_str()) == Some("overloaded") {
+                            shed += 1;
+                        } else {
+                            errors += 1;
+                        }
+                    }
+                }
+            }
+            (ok, shed, errors, latencies_ms)
+        }));
+    }
+    let (mut ok, mut shed, mut errors) = (0usize, 0usize, 0usize);
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(total);
+    for j in joins {
+        let (o, s, e, l) = j.join().unwrap();
+        ok += o;
+        shed += s;
+        errors += e;
+        latencies_ms.extend(l);
+    }
+    let wall = (Instant::now() - start).as_secs_f64().max(1e-9);
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    let (hits1, misses1) = {
+        let (_, h, m) = probe(&cfg.addr, cfg.model.as_deref(), cfg.timeout)?;
+        (h, m)
+    };
+    let (dh, dm) = (hits1.saturating_sub(hits0), misses1.saturating_sub(misses0));
+    let cache_hit_rate = if dh + dm > 0 { dh as f64 / (dh + dm) as f64 } else { 0.0 };
+
+    Ok(LevelResult {
+        offered_qps: qps,
+        achieved_qps: ok as f64 / wall,
+        sent: total,
+        ok,
+        shed,
+        errors,
+        p50_ms: percentile(&latencies_ms, 0.50),
+        p99_ms: percentile(&latencies_ms, 0.99),
+        shed_rate: shed as f64 / total.max(1) as f64,
+        cache_hit_rate,
+    })
+}
+
+/// The saturation table (`smurff loadgen` output, also embedded in the
+/// serving bench).
+pub fn table(results: &[LevelResult]) -> crate::bench::Table {
+    let mut t = crate::bench::Table::new(
+        "Serving saturation: offered vs achieved QPS under power-law top-K traffic",
+        &[
+            "offered_qps",
+            "achieved_qps",
+            "p50_ms",
+            "p99_ms",
+            "shed_rate",
+            "cache_hit_rate",
+            "sent",
+            "ok",
+            "shed",
+            "errors",
+        ],
+    );
+    for r in results {
+        t.row(vec![
+            format!("{:.1}", r.offered_qps),
+            format!("{:.1}", r.achieved_qps),
+            format!("{:.3}", r.p50_ms),
+            format!("{:.3}", r.p99_ms),
+            format!("{:.4}", r.shed_rate),
+            format!("{:.4}", r.cache_hit_rate),
+            r.sent.to_string(),
+            r.ok.to_string(),
+            r.shed.to_string(),
+            r.errors.to_string(),
+        ]);
+    }
+    t
+}
+
+/// The `--json` dump: config echo + one object per level.
+pub fn to_json(cfg: &LoadgenConfig, results: &[LevelResult]) -> JsonValue {
+    JsonValue::obj(vec![
+        ("name", JsonValue::str("loadgen")),
+        ("addr", JsonValue::str(&cfg.addr)),
+        (
+            "model",
+            cfg.model.as_deref().map(JsonValue::str).unwrap_or(JsonValue::Null),
+        ),
+        ("exponent", JsonValue::num(cfg.exponent)),
+        ("k", JsonValue::num(cfg.k as f64)),
+        ("connections", JsonValue::num(cfg.connections as f64)),
+        ("duration_s", JsonValue::num(cfg.duration.as_secs_f64())),
+        (
+            "levels",
+            JsonValue::Array(
+                results
+                    .iter()
+                    .map(|r| {
+                        JsonValue::obj(vec![
+                            ("offered_qps", JsonValue::num(r.offered_qps)),
+                            ("achieved_qps", JsonValue::num(r.achieved_qps)),
+                            ("p50_ms", JsonValue::num(r.p50_ms)),
+                            ("p99_ms", JsonValue::num(r.p99_ms)),
+                            ("shed_rate", JsonValue::num(r.shed_rate)),
+                            ("cache_hit_rate", JsonValue::num(r.cache_hit_rate)),
+                            ("sent", JsonValue::num(r.sent as f64)),
+                            ("ok", JsonValue::num(r.ok as f64)),
+                            ("shed", JsonValue::num(r.shed as f64)),
+                            ("errors", JsonValue::num(r.errors as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{SessionConfig, TrainSession};
+    use std::path::PathBuf;
+
+    fn tiny_store(tag: &str) -> PathBuf {
+        let (train, _) = crate::data::movielens_like(40, 30, 1_200, 0.0, 61);
+        let dir =
+            std::env::temp_dir().join(format!("smurff_loadgen_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = SessionConfig {
+            num_latent: 4,
+            burnin: 3,
+            nsamples: 3,
+            seed: 61,
+            threads: 1,
+            save_freq: 1,
+            save_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        TrainSession::bmf(train, None, cfg).run();
+        dir
+    }
+
+    #[test]
+    fn loadgen_measures_a_live_server_and_sees_cache_hits() {
+        let dir = tiny_store("live");
+        let serve_cfg = crate::serve::ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 1,
+            poll: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let handle =
+            crate::serve::serve_multi(&[("lgm".to_string(), dir)], serve_cfg).unwrap();
+        let cfg = LoadgenConfig {
+            addr: handle.addr().to_string(),
+            model: Some("lgm".to_string()),
+            levels: vec![120.0],
+            duration: Duration::from_millis(500),
+            connections: 2,
+            // a steep exponent over a small universe: repeats (and so
+            // cache hits) are statistically certain over ~60 requests
+            exponent: 2.0,
+            k: 5,
+            seed: 7,
+            rows: 0,
+            timeout: Duration::from_secs(10),
+        };
+        let results = run(&cfg).unwrap();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.offered_qps, 120.0);
+        assert!(r.sent >= 50, "sent {}", r.sent);
+        assert!(r.ok > 0, "no ok replies: {r:?}");
+        assert_eq!(r.ok + r.shed + r.errors, r.sent);
+        assert!(r.achieved_qps > 0.0);
+        assert!(r.p99_ms >= r.p50_ms);
+        assert!(
+            r.cache_hit_rate > 0.0,
+            "power-law repeats must hit the reply cache: {r:?}"
+        );
+        // the table and JSON forms carry one row per level
+        let t = table(&results);
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.headers.len(), t.rows[0].len());
+        let j = to_json(&cfg, &results);
+        assert_eq!(j.get("name").unwrap().as_str(), Some("loadgen"));
+        assert_eq!(j.get("levels").unwrap().as_array().unwrap().len(), 1);
+        handle.stop();
+    }
+
+    #[test]
+    fn loadgen_refuses_a_dead_server_gracefully() {
+        let cfg = LoadgenConfig {
+            // a port from the ephemeral range with nothing bound: the
+            // probe must fail with a clear error, not hang or panic
+            addr: "127.0.0.1:1".to_string(),
+            duration: Duration::from_millis(100),
+            ..Default::default()
+        };
+        let err = run(&cfg).unwrap_err().to_string();
+        assert!(err.contains("cannot connect"), "{err}");
+    }
+}

@@ -1,6 +1,31 @@
 //! `smurff serve` — a concurrent TCP front-end over the batched
-//! serving engine (ISSUE 5 tentpole, the ROADMAP's "serves heavy
-//! traffic" axis).
+//! serving engine (ISSUE 5 tentpole, rebuilt as a production serving
+//! subsystem in ISSUE 10 — the ROADMAP's "serves heavy traffic" axis).
+//!
+//! ## Layout (ISSUE 10)
+//!
+//! The subsystem is split along the engine/front-end seam:
+//!
+//! * [`pool`] — the bounded connection-worker pool and the
+//!   [`StopSignal`](pool::StopSignal) shutdown primitive.  Handler
+//!   count is pinned at `--conn-workers`; saturation sheds new sockets
+//!   with the structured `overloaded` reply instead of spawning
+//!   unbounded threads.
+//! * [`registry`] — the multi-model registry.  One process serves
+//!   several named stores (`--model name=dir`), each with its own
+//!   packed artifact, micro-batch queue + batcher, snapshot watcher,
+//!   and reply cache.  Requests pick a model with a `"model"` field;
+//!   absent means the default (first) model, which keeps the PR 5
+//!   single-model wire protocol intact.
+//! * [`cache`] — the sharded LRU over **serialized** top-K replies,
+//!   keyed `(model, view, row, k)` and invalidated atomically on that
+//!   model's hot reload.  Caching the rendered bytes makes a hit
+//!   trivially bit-identical to the cold score.
+//! * [`loadgen`] — the open-loop power-law load generator behind
+//!   `smurff loadgen`, producing the saturation table the serving
+//!   bench records.
+//! * this module — the wire protocol, the micro-batcher, and the
+//!   server lifecycle gluing them together.
 //!
 //! ## Protocol
 //!
@@ -11,12 +36,14 @@
 //! ```text
 //! → {"op":"predict","view":0,"row":3,"col":17}
 //! ← {"ok":true,"mean":3.82,"std":0.41}
+//! → {"op":"predict","model":"chembl","view":0,"row":3,"col":17}
+//! ← {"ok":true,"mean":6.14,"std":0.22}
 //! → {"op":"predict_batch","view":0,"cells":[[3,17],[4,2]],"mean_only":true}
 //! ← {"ok":true,"means":[3.82,2.11]}
 //! → {"op":"topk","view":0,"row":3,"k":10,"exclude":[5,9]}
 //! ← {"ok":true,"items":[[12,4.4],[7,4.1], …]}
 //! → {"op":"status"}
-//! ← {"ok":true,"samples":32,"served":12045,"reloads":2,"zero_copy":true, …}
+//! ← {"ok":true,"samples":32,"models":["default"],"per_model":{…}, …}
 //! → {"op":"metrics"}
 //! ← {"ok":true,"format":"prometheus-text-0.0.4","text":"# TYPE …"}
 //! → {"op":"shutdown"}                   (only with allow_shutdown)
@@ -26,18 +53,25 @@
 //! The `metrics` op returns the whole [`crate::obs`] registry as
 //! Prometheus text exposition (escaped into the one-line JSON reply):
 //! request/served/reload counters, batch-size and end-to-end latency
-//! histograms and the live queue-depth gauge, alongside whatever the
-//! train/distributed layers recorded in this process.
+//! histograms, live queue-depth and connection gauges, and the
+//! per-model `smurff_serve_cache_{hits,misses,evictions}_total{model}`
+//! families, alongside whatever the train/distributed layers recorded
+//! in this process.
 //!
 //! Failures answer `{"ok":false,"error":"…"}` and keep the connection
 //! open; protocol-level junk (unparseable line) also answers an error.
 //!
-//! ## Overload safety (ISSUE 9)
+//! ## Overload safety (ISSUE 9 + 10)
 //!
 //! The front-end never stalls on a hostile or saturating client:
 //!
-//! * **Load shedding** — when the bounded queue is full, a scoring
-//!   request is answered immediately with
+//! * **Bounded handlers** — accepted sockets are dispatched to the
+//!   fixed worker pool; when every per-worker backlog is full the
+//!   socket is answered `overloaded` and closed
+//!   (`smurff_serve_conn_rejected_total`), so the accept loop never
+//!   blocks and handler count never exceeds `--conn-workers`.
+//! * **Load shedding** — when a model's bounded queue is full, a
+//!   scoring request is answered immediately with
 //!   `{"ok":false,"error":"overloaded","retry_after_ms":N}` instead of
 //!   blocking the connection handler (counted in
 //!   `smurff_serve_shed_total`).
@@ -52,38 +86,48 @@
 //!   usable.
 //! * **Slow clients** — sockets carry a write timeout, so a peer that
 //!   stops reading cannot pin a handler thread forever; reads poll the
-//!   stop flag so handlers exit promptly on shutdown.
-//! * **Graceful drain** — on shutdown the batcher finishes every job
-//!   already queued (new requests are refused), then exits.
+//!   stop signal so handlers exit promptly on shutdown.
+//! * **Graceful drain** — on shutdown each batcher finishes every job
+//!   already queued (new requests are refused), then exits; sleepers
+//!   park on the stop signal's condvar, so `stop()` returns promptly
+//!   regardless of `--poll-ms`.
 //!
 //! ## Micro-batching
 //!
-//! Connection handlers never touch the scoring pool: every scoring
-//! request is pushed onto a **bounded queue** (full queue = shed, see
-//! above) and a single batcher thread drains up to
-//! `batch_max` requests per round — waiting `batch_wait` after the
+//! Connection handlers never touch a scoring pool: every scoring
+//! request is pushed onto its model's **bounded queue** (full queue =
+//! shed, see above) and that model's single batcher thread drains up
+//! to `batch_max` requests per round — waiting `batch_wait` after the
 //! first arrival so concurrent pointwise queries coalesce — then runs
 //! *one* batched [`PredictSession::predict_cells`] /
 //! [`predict_cells_mean`](PredictSession::predict_cells_mean) call per
 //! (view, uncertainty) group and scatters the answers back to the
-//! waiting handlers.  This keeps the fork-join pool single-submitter
+//! waiting handlers.  This keeps each fork-join pool single-submitter
 //! (its contract) and turns N scalar requests into one panel sweep.
 //!
 //! ## Hot reload
 //!
-//! A watcher thread polls the store manifest; when the training run
-//! appends snapshots, it rebuilds an [`Arc<ServingModel>`] and
-//! atomically swaps the serving session (sharing the thread pool).
-//! In-flight batches finish on the model they started with — the swap
-//! is wait-free for readers.
+//! A watcher thread per model polls that store's manifest; when the
+//! training run appends snapshots, it rebuilds an `Arc<ServingModel>`
+//! and atomically swaps that model's serving session (sharing the
+//! thread pool), then invalidates that model's reply cache — sibling
+//! models keep serving theirs.  In-flight batches finish on the model
+//! they started with — the swap is wait-free for readers.
 
-use crate::predict::{PredictSession, Prediction, ServingModel};
+pub mod cache;
+pub mod loadgen;
+pub(crate) mod pool;
+pub(crate) mod registry;
+
+use crate::predict::{PredictSession, Prediction};
 use crate::util::JsonValue;
+use cache::TopKKey;
+use pool::{ConnPool, Dispatch, StopSignal};
+use registry::{ModelEntry, Registry};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -102,11 +146,11 @@ pub const MAX_LINE_BYTES: usize = 1 << 20;
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Read timeout used as a poll interval so blocked handlers notice the
-/// stop flag (graceful shutdown) without a dedicated wakeup channel.
+/// stop signal (graceful shutdown) without a dedicated wakeup channel.
 const READ_POLL: Duration = Duration::from_millis(250);
 
 /// How long a handler keeps waiting for its reply after it has seen the
-/// stop flag — covers the batcher's shutdown drain of queued jobs.
+/// stop signal — covers the batcher's shutdown drain of queued jobs.
 const DRAIN_GRACE: Duration = Duration::from_secs(2);
 
 /// Serving front-end configuration.
@@ -114,15 +158,15 @@ const DRAIN_GRACE: Duration = Duration::from_secs(2);
 pub struct ServeConfig {
     /// listen address, e.g. `127.0.0.1:7799` (port 0 = ephemeral)
     pub addr: String,
-    /// scoring pool size (0 = all cores)
+    /// scoring pool size per model (0 = all cores)
     pub threads: usize,
     /// max scoring requests drained per batch round
     pub batch_max: usize,
     /// micro-batch window after the first request of a round
     pub batch_wait: Duration,
-    /// bounded queue capacity (a full queue sheds: requests are
-    /// answered `{"error":"overloaded","retry_after_ms":…}` instead of
-    /// blocking the connection handler)
+    /// bounded queue capacity per model (a full queue sheds: requests
+    /// are answered `{"error":"overloaded","retry_after_ms":…}` instead
+    /// of blocking the connection handler)
     pub queue_cap: usize,
     /// store-manifest poll interval for hot reload
     pub poll: Duration,
@@ -132,6 +176,17 @@ pub struct ServeConfig {
     /// within this budget gets a structured `deadline exceeded` error
     /// instead of waiting indefinitely (`None` = no deadline)
     pub deadline: Option<Duration>,
+    /// connection-handler pool size (`--conn-workers`): live handler
+    /// threads are pinned at this count no matter how many peers
+    /// connect (ISSUE 10 tentpole)
+    pub conn_workers: usize,
+    /// per-worker connection backlog depth (`--conn-backlog`): sockets
+    /// beyond `conn_workers + conn_workers * conn_backlog` are shed
+    /// with the structured `overloaded` reply
+    pub conn_backlog: usize,
+    /// top-K reply cache capacity per model (`--cache`, entries;
+    /// 0 disables caching)
+    pub cache_cap: usize,
 }
 
 impl Default for ServeConfig {
@@ -145,28 +200,35 @@ impl Default for ServeConfig {
             poll: Duration::from_millis(500),
             allow_shutdown: false,
             deadline: None,
+            conn_workers: 32,
+            conn_backlog: 2,
+            cache_cap: 4096,
         }
     }
 }
 
 // ------------------------------------------------------------ requests
 
-/// A scoring operation routed through the micro-batch queue.
-enum Op {
+/// A scoring operation routed through a model's micro-batch queue.
+pub(crate) enum Op {
     /// pointwise cells of one view; answered as means or mean±std
     Cells { view: usize, rows: Vec<u32>, cols: Vec<u32>, want_std: bool },
     /// top-K candidates for one row
     TopK { view: usize, row: usize, k: usize, exclude: Vec<u32> },
 }
 
-enum Reply {
+pub(crate) enum Reply {
     Preds(Vec<Prediction>),
     Means(Vec<f64>),
     TopK(Vec<(u32, f64)>),
+    /// an already-rendered reply line — the batcher serializes top-K
+    /// replies once so the cached copy and the wire copy are the same
+    /// bytes (ISSUE 10 cache bit-identity)
+    Raw(String),
     Err(String),
 }
 
-struct Job {
+pub(crate) struct Job {
     op: Op,
     tx: mpsc::Sender<Reply>,
     /// wall-clock instant past which this request must not be scored
@@ -176,7 +238,7 @@ struct Job {
 
 /// Outcome of offering a job to the bounded queue (ISSUE 9: a full
 /// queue **sheds** instead of blocking the connection handler).
-enum Push {
+pub(crate) enum Push {
     Queued,
     Shed,
     Stopped,
@@ -187,8 +249,9 @@ enum Push {
 /// Bounded MPSC queue with a micro-batching consumer: a full queue
 /// sheds the offered job (the caller answers `overloaded`), `pop_batch`
 /// waits for the first job, then keeps the round open `wait` longer so
-/// concurrent requests coalesce into one panel sweep.
-struct BatchQueue {
+/// concurrent requests coalesce into one panel sweep.  One instance per
+/// model (ISSUE 10), each publishing its own labeled depth gauge.
+pub(crate) struct BatchQueue {
     inner: Mutex<VecDeque<Job>>,
     not_empty: Condvar,
     cap: usize,
@@ -198,19 +261,19 @@ struct BatchQueue {
 }
 
 impl BatchQueue {
-    fn new(cap: usize) -> BatchQueue {
+    pub(crate) fn new(cap: usize, depth_gauge: &str) -> BatchQueue {
         BatchQueue {
             inner: Mutex::new(VecDeque::new()),
             not_empty: Condvar::new(),
             cap: cap.max(1),
-            depth: crate::obs::gauge("smurff_serve_queue_depth"),
+            depth: crate::obs::gauge(depth_gauge),
         }
     }
 
     /// Offer a job: enqueue if there is room, shed if the queue is full
     /// — never blocks past the mutex.
-    fn push_or_shed(&self, job: Job, stop: &AtomicBool) -> Push {
-        if stop.load(Ordering::Acquire) {
+    pub(crate) fn push_or_shed(&self, job: Job, stop: &StopSignal) -> Push {
+        if stop.is_stopped() {
             return Push::Stopped;
         }
         let mut q = self.inner.lock().unwrap();
@@ -224,10 +287,10 @@ impl BatchQueue {
     }
 
     /// Drain up to `max` jobs; empty result means the server stopped.
-    fn pop_batch(&self, max: usize, wait: Duration, stop: &AtomicBool) -> Vec<Job> {
+    pub(crate) fn pop_batch(&self, max: usize, wait: Duration, stop: &StopSignal) -> Vec<Job> {
         let mut q = self.inner.lock().unwrap();
         while q.is_empty() {
-            if stop.load(Ordering::Acquire) {
+            if stop.is_stopped() {
                 return Vec::new();
             }
             q = self.not_empty.wait_timeout(q, Duration::from_millis(100)).unwrap().0;
@@ -252,17 +315,22 @@ impl BatchQueue {
         batch
     }
 
-    fn wake_all(&self) {
+    pub(crate) fn wake_all(&self) {
         let _q = self.inner.lock().unwrap();
         self.not_empty.notify_all();
     }
 
     /// Take everything still queued (shutdown drain).
-    fn drain_all(&self) -> Vec<Job> {
+    pub(crate) fn drain_all(&self) -> Vec<Job> {
         let mut q = self.inner.lock().unwrap();
         let jobs = q.drain(..).collect();
         self.depth.set(0.0);
         jobs
+    }
+
+    /// Live depth (status reporting).
+    pub(crate) fn depth(&self) -> f64 {
+        self.depth.get()
     }
 }
 
@@ -270,23 +338,24 @@ impl BatchQueue {
 
 /// Cached handles into the [`crate::obs`] registry — looked up once at
 /// server start so the request path pays only relaxed atomics (ISSUE 6:
-/// these replace the engine-local `served`/`reloads` counters; one
-/// counter system).
+/// one counter system).  Per-model families (reloads, cache, queue
+/// depth) live on the [`ModelEntry`] instead.
 struct ServeMetrics {
     /// every request line handled (any op)
     requests: Arc<crate::obs::Counter>,
-    /// scoring jobs completed by the batcher
+    /// scoring jobs completed by the batchers (all models)
     served: Arc<crate::obs::Counter>,
-    /// hot-reload model swaps
-    reloads: Arc<crate::obs::Counter>,
     /// scoring jobs per batcher round
     batch_size: Arc<crate::obs::Histogram>,
     /// end-to-end queue→reply latency of scoring requests
     latency: Arc<crate::obs::Histogram>,
-    /// requests answered `overloaded` because the queue was full
+    /// requests answered `overloaded` because a model queue was full
     shed: Arc<crate::obs::Counter>,
     /// requests answered `deadline exceeded` (batcher- or handler-side)
     deadline_expired: Arc<crate::obs::Counter>,
+    /// connections currently inside a handler (written by the pool,
+    /// read back for `status`)
+    active_connections: Arc<crate::obs::Gauge>,
 }
 
 impl ServeMetrics {
@@ -294,7 +363,6 @@ impl ServeMetrics {
         ServeMetrics {
             requests: crate::obs::counter("smurff_serve_requests_total"),
             served: crate::obs::counter("smurff_serve_scored_jobs_total"),
-            reloads: crate::obs::counter("smurff_serve_model_reloads_total"),
             batch_size: crate::obs::histogram("smurff_serve_batch_size", crate::obs::SIZE_BOUNDS),
             latency: crate::obs::histogram(
                 "smurff_serve_latency_seconds",
@@ -302,73 +370,41 @@ impl ServeMetrics {
             ),
             shed: crate::obs::counter("smurff_serve_shed_total"),
             deadline_expired: crate::obs::counter("smurff_serve_deadline_expired_total"),
+            active_connections: crate::obs::gauge("smurff_serve_active_connections"),
         }
     }
 }
 
-/// The shared serving state: the hot-swappable session, the queue, and
-/// the registry handles `status` and `metrics` report.
+/// The shared serving state: the model registry, the stop signal, and
+/// the metric handles `status` and `metrics` report.
 struct Engine {
-    store_dir: PathBuf,
-    session: Mutex<Arc<PredictSession>>,
-    queue: BatchQueue,
-    stop: AtomicBool,
+    registry: Registry,
+    stop: Arc<StopSignal>,
     metrics: ServeMetrics,
     cfg: ServeConfig,
     /// server start time, reported as `uptime_seconds` by `status`
     started: Instant,
-    /// the training run's `diagnostics.json` from the store (ISSUE 7) —
-    /// refreshed on hot reload and republished as `smurff_diag_*`
-    /// gauges, so a scrape of the *serve* process sees the convergence
-    /// health of the model it is serving
-    diagnostics: Mutex<Option<JsonValue>>,
 }
 
-/// Read `diagnostics.json` from the store, if the training run wrote
-/// one, and republish its R̂/ESS gauges into this process's registry.
-fn load_store_diagnostics(dir: &Path) -> Option<JsonValue> {
-    let diag = crate::store::ModelStore::open(dir).ok()?.load_diagnostics().ok()??;
-    crate::diag::publish_json_gauges(&diag);
-    Some(diag)
+/// The cache key for a top-K request, if it is cacheable: in-range
+/// coordinates keyed on the *requested* `k` (pre-clamp).  Requests with
+/// an `exclude` list never reach this (their replies depend on the
+/// list); coordinates past `u32` simply bypass the cache.
+fn topk_key(view: usize, row: usize, k: usize) -> Option<TopKKey> {
+    Some(TopKKey {
+        view: u32::try_from(view).ok()?,
+        row: u32::try_from(row).ok()?,
+        k: u32::try_from(k).ok()?,
+    })
 }
 
 impl Engine {
-    fn current(&self) -> Arc<PredictSession> {
-        self.session.lock().unwrap().clone()
-    }
-
-    /// Rebuild the serving model iff the store gained (or changed)
-    /// snapshots since the current one was built.  Returns whether a
-    /// swap happened.
-    fn reload_if_changed(&self) -> anyhow::Result<bool> {
-        let store = crate::store::ModelStore::open(&self.store_dir)?;
-        let current = self.current();
-        if store.iterations() == current.model().iterations() {
-            return Ok(false);
-        }
-        let model = Arc::new(ServingModel::from_store(&store)?);
-        let swapped = current.with_model(model);
-        *self.session.lock().unwrap() = Arc::new(swapped);
-        self.metrics.reloads.add(1);
-        // pick up the training run's refreshed diagnostics too (kept if
-        // the new store has not written its report yet — a run only
-        // persists diagnostics.json at the end)
-        if let Some(d) = load_store_diagnostics(&self.store_dir) {
-            *self.diagnostics.lock().unwrap() = Some(d);
-        }
-        crate::log_info!(
-            "serve: hot-reloaded model from {} ({} samples)",
-            self.store_dir.display(),
-            store.len()
-        );
-        Ok(true)
-    }
-
-    /// One batcher round: group the drained jobs' pointwise cells by
-    /// (view, want_std), run one batched call per group on a single
-    /// model snapshot, scatter the answers; top-K jobs run individually
-    /// on the same snapshot.
-    fn execute_batch(&self, jobs: Vec<Job>) {
+    /// One batcher round for `entry`: group the drained jobs' pointwise
+    /// cells by (view, want_std), run one batched call per group on a
+    /// single model snapshot, scatter the answers; top-K jobs run
+    /// individually on the same snapshot, and cacheable ones (empty
+    /// exclude) fill the model's reply cache with the rendered bytes.
+    fn execute_batch(&self, entry: &ModelEntry, jobs: Vec<Job>) {
         let _span = crate::obs::span("serve", "execute_batch");
         // answer jobs whose deadline lapsed while they sat in the queue
         // before spending any scoring work on them
@@ -382,10 +418,16 @@ impl Engine {
         if jobs.is_empty() {
             return;
         }
-        let session = self.current();
+        // the cache generation must be read BEFORE the model snapshot:
+        // if a reload lands in between, the generation is stale and the
+        // insert is dropped — a reply scored on the old model can never
+        // outlive that model's cache (see cache module docs)
+        let cache_gen = entry.cache.as_ref().map(|c| c.begin());
+        let session = entry.current();
         self.metrics.served.add(jobs.len() as u64);
+        entry.served.add(jobs.len() as u64);
         self.metrics.batch_size.observe(jobs.len() as f64);
-        // (view, want_std) -> (job indices, per-job cell counts, rows, cols)
+        // (view, want_std) -> job indices
         let mut groups: std::collections::BTreeMap<(usize, bool), Vec<usize>> =
             std::collections::BTreeMap::new();
         for (ji, job) in jobs.iter().enumerate() {
@@ -402,14 +444,28 @@ impl Engine {
                         .and_then(|()| validate_row(&session, *row))
                     {
                         Err(e) => Reply::Err(e),
-                        Ok(()) if *k == 0 => Reply::TopK(Vec::new()),
                         // clamp k to the candidate count: top_k can never
                         // return more, and an unchecked huge k would let
                         // one request allocate k+1 heap slots on the
                         // batcher thread
                         Ok(()) => {
-                            let k = (*k).min(session.ncols(*view));
-                            Reply::TopK(session.top_k(*view, *row, k, exclude))
+                            let kk = (*k).min(session.ncols(*view));
+                            let items = if kk == 0 {
+                                Vec::new()
+                            } else {
+                                session.top_k(*view, *row, kk, exclude)
+                            };
+                            // render once; the cache stores the exact
+                            // bytes this cold request is answered with
+                            let rendered = reply_json(Reply::TopK(items));
+                            if exclude.is_empty() {
+                                if let (Some(cache), Some(gen), Some(key)) =
+                                    (&entry.cache, cache_gen, topk_key(*view, *row, *k))
+                                {
+                                    cache.insert(key, rendered.clone(), gen);
+                                }
+                            }
+                            Reply::Raw(rendered)
                         }
                     };
                     let _ = jobs[ji].tx.send(reply);
@@ -446,8 +502,12 @@ impl Engine {
         }
     }
 
+    /// The `status` reply: the PR 5 flat fields for the default model
+    /// (existing smoke greps keep passing), plus the ISSUE 10 top-level
+    /// `models` list and `per_model` blocks.
     fn status_json(&self) -> JsonValue {
-        let s = self.current();
+        let def = self.registry.default_entry();
+        let s = def.current();
         let mut pairs = vec![
             ("ok", JsonValue::Bool(true)),
             ("samples", JsonValue::num(s.nsamples() as f64)),
@@ -456,16 +516,19 @@ impl Engine {
             ("nviews", JsonValue::num(s.nviews() as f64)),
             ("zero_copy", JsonValue::Bool(s.zero_copy())),
             ("served", JsonValue::num(self.metrics.served.get() as f64)),
-            ("reloads", JsonValue::num(self.metrics.reloads.get() as f64)),
-            (
-                "iterations",
-                JsonValue::arr_usize(s.model().iterations()),
-            ),
+            ("reloads", JsonValue::num(def.reloads.get() as f64)),
+            ("iterations", JsonValue::arr_usize(s.model().iterations())),
             ("uptime_seconds", JsonValue::num(self.started.elapsed().as_secs_f64())),
             ("version", JsonValue::str(env!("CARGO_PKG_VERSION"))),
             ("snapshots", JsonValue::num(s.nsamples() as f64)),
             // which kernel family the serving math dispatches to (ISSUE 8)
             ("kernel_isa", JsonValue::str(crate::linalg::Backend::global().isa_label())),
+            // connection front-end shape (ISSUE 10)
+            ("conn_workers", JsonValue::num(self.cfg.conn_workers.max(1) as f64)),
+            (
+                "active_connections",
+                JsonValue::num(self.metrics.active_connections.get()),
+            ),
         ];
         if s.nviews() > 0 && s.nmodes(0) == 2 {
             pairs.push(("ncols", JsonValue::num(s.ncols(0) as f64)));
@@ -474,7 +537,25 @@ impl Engine {
         // run persists one into this store)
         pairs.push((
             "diagnostics",
-            self.diagnostics.lock().unwrap().clone().unwrap_or(JsonValue::Null),
+            def.diagnostics.lock().unwrap().clone().unwrap_or(JsonValue::Null),
+        ));
+        // ISSUE 10: every model this process serves, plus a status
+        // block per model (snapshots, cache hit-rate, queue depth, …)
+        pairs.push((
+            "models",
+            JsonValue::Array(
+                self.registry.names().iter().map(|n| JsonValue::str(n)).collect(),
+            ),
+        ));
+        pairs.push((
+            "per_model",
+            JsonValue::obj(
+                self.registry
+                    .entries()
+                    .iter()
+                    .map(|e| (e.name.as_str(), e.status_block()))
+                    .collect(),
+            ),
         ));
         JsonValue::obj(pairs)
     }
@@ -526,9 +607,10 @@ fn err_json(msg: &str) -> String {
         .to_string()
 }
 
-/// The load-shed reply: a full queue answers immediately with a
-/// `retry_after_ms` hint — the time the batcher needs to work through a
-/// full queue at the configured round cadence.
+/// The load-shed reply: a full queue (or a saturated connection pool)
+/// answers immediately with a `retry_after_ms` hint — the time the
+/// batcher needs to work through a full queue at the configured round
+/// cadence.
 fn overloaded_json(cfg: &ServeConfig) -> String {
     let rounds = cfg.queue_cap.div_ceil(cfg.batch_max.max(1)).max(1) as u64;
     let retry_after_ms = (cfg.batch_wait.as_millis() as u64).max(1) * rounds;
@@ -553,6 +635,7 @@ fn deadline_json(budget: Duration) -> String {
 fn reply_json(reply: Reply) -> String {
     match reply {
         Reply::Err(e) => err_json(&e),
+        Reply::Raw(s) => s,
         Reply::Preds(preds) => JsonValue::obj(vec![
             ("ok", JsonValue::Bool(true)),
             (
@@ -588,11 +671,10 @@ fn reply_json(reply: Reply) -> String {
     }
 }
 
-/// Parse one request line into a queueable op, or answer it directly
-/// (`status` / `shutdown` / errors).  Returns `Err(response)` for
-/// direct answers, `Ok(op)` for ops that go through the queue.
+/// Parse one request line into a queueable op (bound to the model it
+/// addresses), or answer it directly (`status` / `metrics` / errors).
 enum Parsed {
-    Queue(Op, bool /* single-cell predict: unwrap reply */),
+    Queue(Arc<ModelEntry>, Op, bool /* single-cell predict: unwrap reply */),
     Direct(String),
     Shutdown,
 }
@@ -603,6 +685,24 @@ fn parse_request(line: &str, engine: &Engine) -> Parsed {
         Err(e) => return Parsed::Direct(err_json(&format!("bad request json: {e}"))),
     };
     let op = v.get("op").and_then(|o| o.as_str()).unwrap_or("");
+    // model routing (ISSUE 10): absent = default model, so the PR 5
+    // single-model protocol is served unchanged; an unknown name is an
+    // error that lists what this process serves
+    let entry = match v.get("model") {
+        None => engine.registry.default_entry().clone(),
+        Some(m) => match m.as_str() {
+            None => return Parsed::Direct(err_json("'model' must be a string")),
+            Some(name) => match engine.registry.get(name) {
+                Some(e) => e.clone(),
+                None => {
+                    return Parsed::Direct(err_json(&format!(
+                        "unknown model '{name}' (models: {})",
+                        engine.registry.names().join(", ")
+                    )))
+                }
+            },
+        },
+    };
     // absent keys take the default, but a present key that is not a
     // non-negative integer is an error — a typo must never be silently
     // coerced into serving a different view / K
@@ -632,6 +732,7 @@ fn parse_request(line: &str, engine: &Engine) -> Parsed {
                 return Parsed::Direct(err_json("row/col out of addressable range"));
             }
             Parsed::Queue(
+                entry,
                 Op::Cells {
                     view: req!(get_usize("view", 0)),
                     rows: vec![row as u32],
@@ -668,6 +769,7 @@ fn parse_request(line: &str, engine: &Engine) -> Parsed {
             }
             let mean_only = v.get("mean_only").and_then(|b| b.as_bool()).unwrap_or(false);
             Parsed::Queue(
+                entry,
                 Op::Cells { view: req!(get_usize("view", 0)), rows, cols, want_std: !mean_only },
                 false,
             )
@@ -694,6 +796,7 @@ fn parse_request(line: &str, engine: &Engine) -> Parsed {
                 }
             }
             Parsed::Queue(
+                entry,
                 Op::TopK {
                     view: req!(get_usize("view", 0)),
                     row,
@@ -734,6 +837,7 @@ fn parse_request(line: &str, engine: &Engine) -> Parsed {
 pub struct ServerHandle {
     addr: SocketAddr,
     engine: Arc<Engine>,
+    pool: Arc<ConnPool>,
     threads: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -749,6 +853,7 @@ impl ServerHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        self.pool.shutdown();
     }
 
     /// Block until the server stops (a `shutdown` request or `stop()`).
@@ -756,111 +861,131 @@ impl ServerHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        self.pool.shutdown();
     }
 }
 
 fn stop_engine(engine: &Engine, addr: SocketAddr) {
-    engine.stop.store(true, Ordering::Release);
-    engine.queue.wake_all();
+    engine.stop.stop();
+    for entry in engine.registry.entries() {
+        entry.queue.wake_all();
+    }
     // unblock the accept loop
     let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(200));
 }
 
-/// Bind `cfg.addr`, load the store, and spawn the accept loop, the
-/// batcher and the hot-reload watcher.  Returns once the socket is
-/// listening; callers `wait()` (CLI) or `stop()` (tests) the handle.
+/// Single-model entry point (PR 5 API, CLI `smurff serve <store>`):
+/// serves `store_dir` as the model named `default`.
 pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle> {
+    serve_multi(&[("default".to_string(), store_dir.to_path_buf())], cfg)
+}
+
+/// Bind `cfg.addr`, load every named store, and spawn the accept loop,
+/// one batcher + snapshot watcher per model, and the bounded
+/// connection-worker pool.  Returns once the socket is listening;
+/// callers `wait()` (CLI) or `stop()` (tests) the handle.
+pub fn serve_multi(models: &[(String, PathBuf)], cfg: ServeConfig) -> anyhow::Result<ServerHandle> {
     // batch_max = 0 would make pop_batch return empty batches forever
     // (requests never served, batcher spinning); clamp like queue_cap
     let cfg = ServeConfig { batch_max: cfg.batch_max.max(1), ..cfg };
-    let session = PredictSession::open_with_threads(store_dir, cfg.threads)?;
-    crate::log_info!(
-        "serve: {} samples, K={}, zero_copy={} on {}",
-        session.nsamples(),
-        session.num_latent(),
-        session.zero_copy(),
-        cfg.addr
-    );
+    let registry = Registry::open(models, &cfg)?;
     // expose the selected kernel family in the metrics exposition
     // (`smurff_kernel_isa{isa="..."} 1`) alongside the status reply
     crate::hwmodel::publish_kernel_isa_gauge();
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("cannot bind {}: {e}", cfg.addr))?;
     let addr = listener.local_addr()?;
+    crate::log_info!(
+        "serve: {} model(s) [{}] on {addr}",
+        registry.entries().len(),
+        registry.names().join(", ")
+    );
+    let stop = Arc::new(StopSignal::new());
     let engine = Arc::new(Engine {
-        store_dir: store_dir.to_path_buf(),
-        session: Mutex::new(Arc::new(session)),
-        queue: BatchQueue::new(cfg.queue_cap),
-        stop: AtomicBool::new(false),
+        registry,
+        stop: stop.clone(),
         metrics: ServeMetrics::new(),
         cfg: cfg.clone(),
         started: Instant::now(),
-        diagnostics: Mutex::new(load_store_diagnostics(store_dir)),
     });
     let mut threads = Vec::new();
 
-    // the single batcher: the only thread that submits scoring work
-    {
-        let engine = engine.clone();
-        threads.push(std::thread::spawn(move || {
-            while !engine.stop.load(Ordering::Acquire) {
-                let batch = engine.queue.pop_batch(
-                    engine.cfg.batch_max,
-                    engine.cfg.batch_wait,
-                    &engine.stop,
-                );
-                if !batch.is_empty() {
-                    engine.execute_batch(batch);
+    for entry in engine.registry.entries().iter().cloned().collect::<Vec<_>>() {
+        // this model's batcher: the only thread that submits scoring
+        // work to this model's pool
+        {
+            let engine = engine.clone();
+            let entry = entry.clone();
+            threads.push(std::thread::spawn(move || {
+                while !engine.stop.is_stopped() {
+                    let batch = entry.queue.pop_batch(
+                        engine.cfg.batch_max,
+                        engine.cfg.batch_wait,
+                        &engine.stop,
+                    );
+                    if !batch.is_empty() {
+                        engine.execute_batch(&entry, batch);
+                    }
                 }
-            }
-            // graceful drain (ISSUE 9): handlers refuse new work once
-            // the stop flag is up, so everything still queued is finite
-            // — score it instead of failing it, in batch_max rounds;
-            // the outer loop catches a push that raced the flag
-            loop {
-                let mut leftover = engine.queue.drain_all();
-                if leftover.is_empty() {
-                    break;
+                // graceful drain (ISSUE 9): handlers refuse new work once
+                // the stop signal is up, so everything still queued is
+                // finite — score it instead of failing it, in batch_max
+                // rounds; the outer loop catches a push that raced the flag
+                loop {
+                    let mut leftover = entry.queue.drain_all();
+                    if leftover.is_empty() {
+                        break;
+                    }
+                    while !leftover.is_empty() {
+                        let rest = leftover.split_off(leftover.len().min(engine.cfg.batch_max));
+                        engine.execute_batch(&entry, leftover);
+                        leftover = rest;
+                    }
                 }
-                while !leftover.is_empty() {
-                    let rest = leftover.split_off(leftover.len().min(engine.cfg.batch_max));
-                    engine.execute_batch(leftover);
-                    leftover = rest;
+            }));
+        }
+
+        // this model's snapshot watcher (hot reload): parks on the stop
+        // signal's condvar, so shutdown is prompt regardless of --poll-ms
+        // (ISSUE 10 satellite — this used to sleep the full interval)
+        {
+            let engine = engine.clone();
+            threads.push(std::thread::spawn(move || {
+                while !engine.stop.sleep(engine.cfg.poll) {
+                    if let Err(e) = entry.reload_if_changed() {
+                        crate::log_warn!("serve: reload of '{}' failed: {e}", entry.name);
+                    }
                 }
-            }
-        }));
+            }));
+        }
     }
 
-    // the snapshot watcher (hot reload)
-    {
+    // the bounded connection-worker pool (ISSUE 10 tentpole): handler
+    // count is pinned at conn_workers no matter how many peers connect
+    let pool = {
         let engine = engine.clone();
-        threads.push(std::thread::spawn(move || {
-            while !engine.stop.load(Ordering::Acquire) {
-                std::thread::sleep(engine.cfg.poll);
-                if engine.stop.load(Ordering::Acquire) {
-                    break;
-                }
-                if let Err(e) = engine.reload_if_changed() {
-                    crate::log_warn!("serve: reload failed: {e}");
-                }
-            }
-        }));
-    }
+        Arc::new(ConnPool::new(
+            cfg.conn_workers,
+            cfg.conn_backlog,
+            stop.clone(),
+            move |stream| handle_connection(stream, engine.clone(), addr),
+        ))
+    };
 
-    // the accept loop; connection handlers are detached (they exit on
-    // client EOF or server stop)
+    // the accept loop: dispatch to the pool, shed when it is saturated
     {
         let engine = engine.clone();
+        let pool = pool.clone();
         threads.push(std::thread::spawn(move || {
             for conn in listener.incoming() {
-                if engine.stop.load(Ordering::Acquire) {
+                if engine.stop.is_stopped() {
                     break;
                 }
                 match conn {
-                    Ok(stream) => {
-                        let engine = engine.clone();
-                        std::thread::spawn(move || handle_connection(stream, engine, addr));
-                    }
+                    Ok(stream) => match pool.dispatch(stream) {
+                        Dispatch::Accepted => {}
+                        Dispatch::Rejected(stream) => shed_connection(stream, &engine.cfg),
+                    },
                     Err(e) => {
                         // transient accept failures (EMFILE under load,
                         // ECONNABORTED from a client RST) must not end
@@ -873,7 +998,17 @@ pub fn serve(store_dir: &Path, cfg: ServeConfig) -> anyhow::Result<ServerHandle>
         }));
     }
 
-    Ok(ServerHandle { addr, engine, threads })
+    Ok(ServerHandle { addr, engine, pool, threads })
+}
+
+/// Accept backpressure: a socket the saturated pool handed back is
+/// answered with the structured `overloaded` reply and closed — same
+/// shape a full scoring queue sheds with, so clients need one retry
+/// path.  A short write timeout keeps a non-reading peer from stalling
+/// the accept thread.
+fn shed_connection(mut stream: TcpStream, cfg: &ServeConfig) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+    let _ = writeln!(stream, "{}", overloaded_json(cfg));
 }
 
 /// One capped, stop-aware request line off the wire.
@@ -885,7 +1020,7 @@ enum LineRead {
     TooLong,
     /// client EOF or a hard socket error — close the connection
     Closed,
-    /// server stop flag observed while waiting for bytes
+    /// server stop signal observed while waiting for bytes
     Stopped,
 }
 
@@ -893,8 +1028,8 @@ enum LineRead {
 /// ever buffers `MAX_LINE_BYTES + 1` bytes of one line, so a hostile
 /// newline-free stream cannot balloon memory (ISSUE 9 satellite).
 /// Socket read timeouts ([`READ_POLL`]) surface as `WouldBlock`/
-/// `TimedOut` and are used to poll the stop flag.
-fn read_request_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> LineRead {
+/// `TimedOut` and are used to poll the stop signal.
+fn read_request_line(reader: &mut BufReader<TcpStream>, stop: &StopSignal) -> LineRead {
     let mut buf: Vec<u8> = Vec::new();
     loop {
         let room = (MAX_LINE_BYTES + 1 - buf.len()) as u64;
@@ -918,8 +1053,8 @@ fn read_request_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> Li
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                // partial bytes stay in buf; poll the stop flag and retry
-                if stop.load(Ordering::Acquire) {
+                // partial bytes stay in buf; poll the stop signal and retry
+                if stop.is_stopped() {
                     return LineRead::Stopped;
                 }
             }
@@ -930,7 +1065,7 @@ fn read_request_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> Li
 
 /// Discard the rest of an over-cap line (bounded chunks) so the next
 /// request on this connection starts clean.
-fn drain_oversized_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) -> LineRead {
+fn drain_oversized_line(reader: &mut BufReader<TcpStream>, stop: &StopSignal) -> LineRead {
     let mut scratch: Vec<u8> = Vec::new();
     loop {
         scratch.clear();
@@ -942,7 +1077,7 @@ fn drain_oversized_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) ->
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if stop.load(Ordering::Acquire) {
+                if stop.is_stopped() {
                     return LineRead::Stopped;
                 }
             }
@@ -954,7 +1089,7 @@ fn drain_oversized_line(reader: &mut BufReader<TcpStream>, stop: &AtomicBool) ->
 fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
     // slow-client hardening (ISSUE 9): a peer that stops reading hits
     // the write timeout instead of pinning this thread; the read
-    // timeout doubles as the stop-flag poll interval
+    // timeout doubles as the stop-signal poll interval
     let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
     let _ = stream.set_read_timeout(Some(READ_POLL));
     let mut writer = match stream.try_clone() {
@@ -984,7 +1119,7 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
         if line.trim().is_empty() {
             continue;
         }
-        if engine.stop.load(Ordering::Acquire) {
+        if engine.stop.is_stopped() {
             let _ = writeln!(writer, "{}", err_json("server is shutting down"));
             break;
         }
@@ -1003,8 +1138,8 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
                 stop_engine(&engine, addr);
                 break;
             }
-            Parsed::Queue(op, unwrap_single) => {
-                handle_scoring_request(&engine, op, unwrap_single)
+            Parsed::Queue(entry, op, unwrap_single) => {
+                handle_scoring_request(&engine, &entry, op, unwrap_single)
             }
         };
         if writeln!(writer, "{response}").is_err() {
@@ -1013,15 +1148,35 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, addr: SocketAddr) {
     }
 }
 
-/// Queue one scoring op and wait for its reply, enforcing the overload
-/// and deadline policies: a full queue sheds immediately, an expired
-/// deadline answers a structured error even if the batcher is still
-/// busy, and a server stop is honoured after the drain grace.
-fn handle_scoring_request(engine: &Engine, op: Op, unwrap_single: bool) -> String {
+/// Answer one scoring op on `entry`: serve a cached top-K reply when
+/// one exists (the exact bytes the cold score was answered with), else
+/// queue it and wait, enforcing the overload and deadline policies — a
+/// full queue sheds immediately, an expired deadline answers a
+/// structured error even if the batcher is still busy, and a server
+/// stop is honoured after the drain grace.
+fn handle_scoring_request(
+    engine: &Engine,
+    entry: &Arc<ModelEntry>,
+    op: Op,
+    unwrap_single: bool,
+) -> String {
     let queued_at = Instant::now();
+    // cache fast path (ISSUE 10): top-K with no exclude list — the only
+    // verb whose reply is a pure function of (model, view, row, k)
+    if let Op::TopK { view, row, k, exclude } = &op {
+        if exclude.is_empty() {
+            if let (Some(cache), Some(key)) = (&entry.cache, topk_key(*view, *row, *k)) {
+                if let Some(hit) = cache.get(&key) {
+                    entry.served.add(1);
+                    engine.metrics.latency.observe(queued_at.elapsed().as_secs_f64());
+                    return hit;
+                }
+            }
+        }
+    }
     let deadline = engine.cfg.deadline.map(|d| queued_at + d);
     let (tx, rx) = mpsc::channel();
-    match engine.queue.push_or_shed(Job { op, tx, deadline }, &engine.stop) {
+    match entry.queue.push_or_shed(Job { op, tx, deadline }, &engine.stop) {
         Push::Stopped => return err_json("server is shutting down"),
         Push::Shed => {
             engine.metrics.shed.add(1);
@@ -1045,7 +1200,7 @@ fn handle_scoring_request(engine: &Engine, op: Op, unwrap_single: bool) -> Strin
                         return deadline_json(engine.cfg.deadline.unwrap_or_default());
                     }
                 }
-                if engine.stop.load(Ordering::Acquire) {
+                if engine.stop.is_stopped() {
                     let seen = *stop_seen.get_or_insert_with(Instant::now);
                     if seen.elapsed() > DRAIN_GRACE {
                         break None;
@@ -1079,14 +1234,14 @@ mod tests {
         d
     }
 
-    fn tiny_store(tag: &str, nsamples: usize) -> PathBuf {
-        let (train, _) = crate::data::movielens_like(40, 30, 1_200, 0.0, 61);
+    fn tiny_store_seeded(tag: &str, nsamples: usize, seed: u64) -> PathBuf {
+        let (train, _) = crate::data::movielens_like(40, 30, 1_200, 0.0, seed);
         let dir = scratch(tag);
         let cfg = SessionConfig {
             num_latent: 4,
             burnin: 3,
             nsamples,
-            seed: 61,
+            seed,
             threads: 1,
             save_freq: 1,
             save_dir: Some(dir.clone()),
@@ -1095,6 +1250,10 @@ mod tests {
         };
         TrainSession::bmf(train, None, cfg).run();
         dir
+    }
+
+    fn tiny_store(tag: &str, nsamples: usize) -> PathBuf {
+        tiny_store_seeded(tag, nsamples, 61)
     }
 
     fn test_cfg() -> ServeConfig {
@@ -1120,11 +1279,16 @@ mod tests {
             Client { reader: BufReader::new(stream.try_clone().unwrap()), writer: stream }
         }
 
-        fn roundtrip(&mut self, req: &str) -> JsonValue {
+        /// One request → the raw reply line (bit-identity assertions).
+        fn roundtrip_raw(&mut self, req: &str) -> String {
             writeln!(self.writer, "{req}").unwrap();
             let mut line = String::new();
             self.reader.read_line(&mut line).unwrap();
-            JsonValue::parse(line.trim()).unwrap()
+            line.trim_end().to_string()
+        }
+
+        fn roundtrip(&mut self, req: &str) -> JsonValue {
+            JsonValue::parse(&self.roundtrip_raw(req)).unwrap()
         }
     }
 
@@ -1144,6 +1308,15 @@ mod tests {
         assert!(st.get("uptime_seconds").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(st.get("version").unwrap().as_str(), Some(env!("CARGO_PKG_VERSION")));
         assert_eq!(st.get("snapshots").unwrap().as_usize(), Some(5));
+        // ISSUE 10: single-store serving is the model named "default"
+        let models = st.get("models").unwrap().as_array().unwrap();
+        assert_eq!(models.len(), 1);
+        assert_eq!(models[0].as_str(), Some("default"));
+        let block = st.get("per_model").unwrap().get("default").expect("per-model block");
+        assert_eq!(block.get("snapshots").unwrap().as_usize(), Some(5));
+        assert!(block.get("kernel_isa").unwrap().as_str().is_some());
+        assert!(block.get("cache").unwrap().get("hit_rate").is_some());
+        assert!(st.get("conn_workers").unwrap().as_usize().unwrap() >= 1);
         // and the training run's convergence report, served verbatim
         let diag = st.get("diagnostics").expect("diagnostics block");
         assert_eq!(diag.get("iterations").unwrap().as_usize(), Some(8)); // 3 burn-in + 5
@@ -1192,6 +1365,10 @@ mod tests {
         assert!(e.get("error").unwrap().as_str().unwrap().contains("non-negative integer"));
         let e = c.roundtrip(r#"{"op":"topk","row":0,"k":1.5}"#);
         assert_eq!(e.get("ok").unwrap().as_bool(), Some(false));
+        // an unknown model routes nowhere and says what exists
+        let e = c.roundtrip(r#"{"op":"predict","model":"nope","view":0,"row":0,"col":0}"#);
+        let msg = e.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(msg.contains("unknown model 'nope'") && msg.contains("default"), "{msg}");
 
         // served counter moved
         let st = c.roundtrip(r#"{"op":"status"}"#);
@@ -1269,10 +1446,15 @@ mod tests {
         let dir = tiny_store("metrics", 3);
         let handle = serve(&dir, test_cfg()).unwrap();
         let mut c = Client::connect(handle.addr());
-        // drive some scoring traffic so the histograms have samples
+        // drive some scoring traffic so the histograms have samples,
+        // plus a repeated top-K so the cache families move
         for i in 0..5 {
             let p = c.roundtrip(&format!(r#"{{"op":"predict","view":0,"row":{i},"col":1}}"#));
             assert_eq!(p.get("ok").unwrap().as_bool(), Some(true));
+        }
+        for _ in 0..2 {
+            let t = c.roundtrip(r#"{"op":"topk","view":0,"row":1,"k":3}"#);
+            assert_eq!(t.get("ok").unwrap().as_bool(), Some(true));
         }
         let m = c.roundtrip(r#"{"op":"metrics"}"#);
         assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
@@ -1285,6 +1467,12 @@ mod tests {
             "smurff_serve_batch_size",
             "smurff_serve_latency_seconds_bucket",
             "smurff_serve_queue_depth",
+            // ISSUE 10 families: pool shape + per-model cache
+            "smurff_serve_conn_workers",
+            "smurff_serve_active_connections",
+            "smurff_serve_conn_rejected_total",
+            "smurff_serve_cache_hits_total{model=\"default\"}",
+            "smurff_serve_cache_misses_total{model=\"default\"}",
         ] {
             assert!(text.contains(family), "metrics text missing {family}:\n{text}");
         }
@@ -1346,6 +1534,259 @@ mod tests {
         handle.stop();
     }
 
+    /// ISSUE 10 tentpole: with more concurrent connections than
+    /// `--conn-workers` can hold (workers + backlogs), the surplus is
+    /// answered with the structured `overloaded` reply and closed —
+    /// never hung, never given an unbounded thread.
+    #[test]
+    fn conn_pool_sheds_connections_beyond_workers() {
+        let dir = tiny_store("connshed", 2);
+        let cfg = ServeConfig {
+            conn_workers: 2,
+            conn_backlog: 1,
+            ..test_cfg()
+        };
+        let handle = serve(&dir, cfg).unwrap();
+        let addr = handle.addr();
+
+        // two connections roundtrip and stay open: both workers are now
+        // held (the replies prove their handlers run)
+        let mut held: Vec<Client> = (0..2).map(|_| Client::connect(addr)).collect();
+        for c in &mut held {
+            let st = c.roundtrip(r#"{"op":"status"}"#);
+            assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+        }
+        // two more fill the per-worker backlogs (no replies yet — they
+        // wait for a worker); give the accept loop a moment to dispatch
+        let queued: Vec<Client> = (0..2).map(|_| Client::connect(addr)).collect();
+        std::thread::sleep(Duration::from_millis(200));
+
+        // beyond workers + backlogs: the accept loop must shed with the
+        // same structured reply the scoring queue uses, then close
+        let mut rejected = 0;
+        for _ in 0..3 {
+            let mut c = Client::connect(addr);
+            let mut line = String::new();
+            c.reader.read_line(&mut line).unwrap();
+            let r = JsonValue::parse(line.trim()).unwrap();
+            if r.get("error").unwrap().as_str() == Some("overloaded") {
+                assert!(r.get("retry_after_ms").unwrap().as_f64().unwrap() >= 1.0);
+                rejected += 1;
+            }
+            // and the socket is closed (EOF), not held
+            line.clear();
+            assert_eq!(c.reader.read_line(&mut line).unwrap(), 0, "shed socket must close");
+        }
+        assert!(rejected >= 1, "a saturated pool must shed new connections");
+
+        // freeing the workers lets the queued connections get served
+        // (each queued socket waits in one specific worker's inbox, so
+        // release both workers before expecting both answers)
+        drop(held);
+        let mut queued = queued;
+        for c in queued.iter_mut() {
+            let st = c.roundtrip(r#"{"op":"status"}"#);
+            assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
+        }
+        drop(queued);
+        handle.stop();
+    }
+
+    /// ISSUE 10 tentpole: a cache hit returns byte-for-byte the reply
+    /// the cold request was answered with, and both match a direct
+    /// `PredictSession` on the same store.
+    #[test]
+    fn topk_cache_hits_are_bit_identical_over_the_wire() {
+        let dir = tiny_store("cachebits", 4);
+        let handle =
+            serve_multi(&[("cachem".to_string(), dir.clone())], test_cfg()).unwrap();
+        let direct = PredictSession::open_with_threads(&dir, 1).unwrap();
+        let mut c = Client::connect(handle.addr());
+
+        let req = r#"{"op":"topk","model":"cachem","view":0,"row":7,"k":5}"#;
+        let cold = c.roundtrip_raw(req);
+        let hit = c.roundtrip_raw(req);
+        assert_eq!(cold, hit, "cached reply must be the cold reply's exact bytes");
+        // …and both carry exactly the direct session's scores
+        let parsed = JsonValue::parse(&hit).unwrap();
+        let items = parsed.get("items").unwrap().as_array().unwrap();
+        let want = direct.top_k(0, 7, 5, &[]);
+        assert_eq!(items.len(), want.len());
+        for (it, (wc, ws)) in items.iter().zip(&want) {
+            let pair = it.as_array().unwrap();
+            assert_eq!(pair[0].as_usize(), Some(*wc as usize));
+            assert_eq!(pair[1].as_f64(), Some(*ws));
+        }
+        // an exclude-carrying request bypasses the cache but still
+        // answers correctly
+        let t = c.roundtrip(r#"{"op":"topk","model":"cachem","view":0,"row":7,"k":5,"exclude":[2]}"#);
+        let items = t.get("items").unwrap().as_array().unwrap();
+        let want = direct.top_k(0, 7, 5, &[2]);
+        assert_eq!(items.len(), want.len());
+
+        // the status block records the hit
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        let cache = st
+            .get("per_model")
+            .unwrap()
+            .get("cachem")
+            .unwrap()
+            .get("cache")
+            .expect("cache block");
+        assert!(cache.get("hits").unwrap().as_usize().unwrap() >= 1);
+        assert!(cache.get("entries").unwrap().as_usize().unwrap() >= 1);
+        assert!(cache.get("hit_rate").unwrap().as_f64().unwrap() > 0.0);
+        handle.stop();
+    }
+
+    /// ISSUE 10: named models answer from their own stores; the default
+    /// (first) model serves requests without a `"model"` field.
+    #[test]
+    fn multi_model_requests_route_to_the_named_store() {
+        let dir_a = tiny_store_seeded("mm_a", 3, 61);
+        let dir_b = tiny_store_seeded("mm_b", 3, 62);
+        let handle = serve_multi(
+            &[("alpha".to_string(), dir_a.clone()), ("beta".to_string(), dir_b.clone())],
+            test_cfg(),
+        )
+        .unwrap();
+        let direct_a = PredictSession::open_with_threads(&dir_a, 1).unwrap();
+        let direct_b = PredictSession::open_with_threads(&dir_b, 1).unwrap();
+        let mut c = Client::connect(handle.addr());
+
+        let pa = c.roundtrip(r#"{"op":"predict","model":"alpha","view":0,"row":3,"col":7}"#);
+        let pb = c.roundtrip(r#"{"op":"predict","model":"beta","view":0,"row":3,"col":7}"#);
+        let pd = c.roundtrip(r#"{"op":"predict","view":0,"row":3,"col":7}"#);
+        assert_eq!(pa.get("mean").unwrap().as_f64(), Some(direct_a.predict_one(0, 3, 7).mean));
+        assert_eq!(pb.get("mean").unwrap().as_f64(), Some(direct_b.predict_one(0, 3, 7).mean));
+        // no model field = the default (first listed) model
+        assert_eq!(pd.get("mean").unwrap().as_f64(), Some(direct_a.predict_one(0, 3, 7).mean));
+        // the two stores were trained on different data: routing is real
+        assert_ne!(
+            pa.get("mean").unwrap().as_f64(),
+            pb.get("mean").unwrap().as_f64(),
+            "distinct stores must answer differently"
+        );
+
+        // top-K routes the same way
+        let ta = c.roundtrip(r#"{"op":"topk","model":"alpha","view":0,"row":2,"k":3}"#);
+        let want = direct_a.top_k(0, 2, 3, &[]);
+        let items = ta.get("items").unwrap().as_array().unwrap();
+        assert_eq!(items.len(), want.len());
+        for (it, (wc, ws)) in items.iter().zip(&want) {
+            let pair = it.as_array().unwrap();
+            assert_eq!(pair[0].as_usize(), Some(*wc as usize));
+            assert_eq!(pair[1].as_f64(), Some(*ws));
+        }
+
+        // status lists both models with their own blocks
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        let names: Vec<String> = st
+            .get("models")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|m| m.as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, vec!["alpha".to_string(), "beta".to_string()]);
+        let pm = st.get("per_model").unwrap();
+        for name in ["alpha", "beta"] {
+            let block = pm.get(name).expect("per-model block");
+            assert_eq!(block.get("snapshots").unwrap().as_usize(), Some(3));
+            assert!(block.get("queue_depth").unwrap().as_f64().is_some());
+        }
+        handle.stop();
+    }
+
+    /// ISSUE 10: a hot reload invalidates only the reloaded model's
+    /// cache; the sibling keeps its entries, and post-reload scores
+    /// match a fresh direct session on the grown store.
+    #[test]
+    fn hot_reload_invalidates_only_that_models_cache() {
+        let dir_a = tiny_store_seeded("inv_a", 3, 61);
+        let dir_b = tiny_store_seeded("inv_b", 3, 62);
+        let handle = serve_multi(
+            &[("inva".to_string(), dir_a.clone()), ("invb".to_string(), dir_b.clone())],
+            test_cfg(),
+        )
+        .unwrap();
+        let mut c = Client::connect(handle.addr());
+
+        // prime both caches
+        assert_eq!(
+            c.roundtrip(r#"{"op":"topk","model":"inva","view":0,"row":5,"k":4}"#)
+                .get("ok")
+                .unwrap()
+                .as_bool(),
+            Some(true)
+        );
+        assert_eq!(
+            c.roundtrip(r#"{"op":"topk","model":"invb","view":0,"row":5,"k":4}"#)
+                .get("ok")
+                .unwrap()
+                .as_bool(),
+            Some(true)
+        );
+        let st = c.roundtrip(r#"{"op":"status"}"#);
+        let entries = |st: &JsonValue, m: &str| {
+            st.get("per_model")
+                .unwrap()
+                .get(m)
+                .unwrap()
+                .get("cache")
+                .unwrap()
+                .get("entries")
+                .unwrap()
+                .as_usize()
+                .unwrap()
+        };
+        assert_eq!(entries(&st, "inva"), 1);
+        assert_eq!(entries(&st, "invb"), 1);
+
+        // grow model A's store; the watcher reloads it
+        let mut store = crate::store::ModelStore::open(&dir_a).unwrap();
+        let mut snap = store.load_snapshot(store.len() - 1).unwrap();
+        snap.iteration += 1;
+        store.save_snapshot(&snap).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            std::thread::sleep(Duration::from_millis(25));
+            let st = c.roundtrip(r#"{"op":"status"}"#);
+            let reloads = st
+                .get("per_model")
+                .unwrap()
+                .get("inva")
+                .unwrap()
+                .get("reloads")
+                .unwrap()
+                .as_usize()
+                .unwrap();
+            if reloads >= 1 {
+                // A's cache dropped its entries; B's survived untouched
+                assert_eq!(entries(&st, "inva"), 0, "reloaded model must invalidate");
+                assert_eq!(entries(&st, "invb"), 1, "sibling cache must survive");
+                break;
+            }
+            assert!(Instant::now() < deadline, "hot reload never happened");
+        }
+
+        // post-reload, the same request scores cold on the new model —
+        // and matches a direct session opened on the grown store
+        let t = c.roundtrip(r#"{"op":"topk","model":"inva","view":0,"row":5,"k":4}"#);
+        let direct = PredictSession::open_with_threads(&dir_a, 1).unwrap();
+        assert_eq!(direct.nsamples(), 4);
+        let want = direct.top_k(0, 5, 4, &[]);
+        let items = t.get("items").unwrap().as_array().unwrap();
+        assert_eq!(items.len(), want.len());
+        for (it, (wc, ws)) in items.iter().zip(&want) {
+            let pair = it.as_array().unwrap();
+            assert_eq!(pair[0].as_usize(), Some(*wc as usize));
+            assert_eq!(pair[1].as_f64(), Some(*ws));
+        }
+        handle.stop();
+    }
+
     #[test]
     fn oversized_request_line_errors_and_keeps_the_connection() {
         let dir = tiny_store("bigline", 2);
@@ -1404,5 +1845,26 @@ mod tests {
         let st = c.roundtrip(r#"{"op":"status"}"#);
         assert_eq!(st.get("ok").unwrap().as_bool(), Some(true));
         handle.stop();
+    }
+
+    /// ISSUE 10 satellite: the watcher parks on the stop signal, so
+    /// stopping a server with a long `--poll-ms` is prompt.
+    #[test]
+    fn stop_is_prompt_despite_a_long_poll_interval() {
+        let dir = tiny_store("promptstop", 2);
+        let cfg = ServeConfig {
+            poll: Duration::from_secs(60),
+            ..test_cfg()
+        };
+        let handle = serve(&dir, cfg).unwrap();
+        // let the watcher enter its first sleep
+        std::thread::sleep(Duration::from_millis(50));
+        let t0 = Instant::now();
+        handle.stop();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "stop() took {:?} — the watcher slept through the signal",
+            t0.elapsed()
+        );
     }
 }

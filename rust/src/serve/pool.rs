@@ -1,0 +1,342 @@
+//! Bounded connection-worker pool + the interruptible stop signal
+//! (ISSUE 10 tentpole).
+//!
+//! The PR 5 front-end spawned one detached `std::thread` per accepted
+//! connection: under a connection flood the *handler count* — not the
+//! scoring kernels — became the throughput ceiling (unbounded stacks,
+//! scheduler thrash, no shed point).  This module fixes the shape:
+//!
+//! * a **fixed pool** of `conn_workers` handler threads, spawned once —
+//!   live handler threads are bounded at `N` no matter how many peers
+//!   connect;
+//! * a **bounded per-worker connection queue** (`conn_backlog` deep):
+//!   an accepted socket is dispatched round-robin to the first worker
+//!   with queue room, giving saturated workers short, fair backlogs;
+//! * **accept backpressure**: when every queue is full the dispatcher
+//!   answers the socket with the same structured `overloaded` reply the
+//!   scoring queue sheds with, and closes it — the accept loop never
+//!   blocks and never grows state (counted in
+//!   `smurff_serve_conn_rejected_total`).
+//!
+//! [`StopSignal`] is the subsystem-wide shutdown primitive (ISSUE 10
+//! satellite): threads that used to `sleep(poll)` the full interval now
+//! park on its condvar via [`StopSignal::sleep`], so `stop()` returns
+//! promptly regardless of `--poll-ms`.
+
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------- stop signal
+
+/// One-way stop flag with a condvar, so sleepers wake the moment
+/// `stop()` is called instead of finishing their full timeout.
+#[derive(Default)]
+pub(crate) struct StopSignal {
+    stopped: AtomicBool,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl StopSignal {
+    pub fn new() -> StopSignal {
+        StopSignal::default()
+    }
+
+    /// Raise the flag and wake every [`sleep`](Self::sleep)er.
+    pub fn stop(&self) {
+        self.stopped.store(true, Ordering::Release);
+        let _g = self.mu.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::Acquire)
+    }
+
+    /// Park for up to `dur`, returning `true` as soon as the signal is
+    /// (or becomes) stopped — the watcher's `--poll` interval no longer
+    /// delays shutdown (ISSUE 10 satellite).
+    pub fn sleep(&self, dur: Duration) -> bool {
+        let deadline = Instant::now() + dur;
+        let mut g = self.mu.lock().unwrap();
+        loop {
+            if self.is_stopped() {
+                return true;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            g = self.cv.wait_timeout(g, deadline - now).unwrap().0;
+        }
+    }
+}
+
+// ----------------------------------------------------------- conn queue
+
+/// One worker's bounded connection inbox.
+struct WorkerQueue {
+    inner: Mutex<VecDeque<TcpStream>>,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl WorkerQueue {
+    fn new(cap: usize) -> WorkerQueue {
+        WorkerQueue { inner: Mutex::new(VecDeque::new()), not_empty: Condvar::new(), cap }
+    }
+
+    /// Enqueue if there is room; hand the stream back otherwise.
+    fn offer(&self, conn: TcpStream) -> Result<(), TcpStream> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err(conn);
+        }
+        q.push_back(conn);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with a stop-aware bounded wait; `None` = stopping.
+    fn pop(&self, stop: &StopSignal) -> Option<TcpStream> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(conn) = q.pop_front() {
+                return Some(conn);
+            }
+            if stop.is_stopped() {
+                return None;
+            }
+            q = self.not_empty.wait_timeout(q, Duration::from_millis(100)).unwrap().0;
+        }
+    }
+
+    fn wake(&self) {
+        let _q = self.inner.lock().unwrap();
+        self.not_empty.notify_all();
+    }
+}
+
+// ------------------------------------------------------------ conn pool
+
+/// The outcome of offering an accepted socket to the pool.
+pub(crate) enum Dispatch {
+    /// queued for a worker; a handler will run the connection
+    Accepted,
+    /// every worker queue is full — the caller sheds the socket
+    /// (answer `overloaded`, close)
+    Rejected(TcpStream),
+}
+
+/// Fixed worker pool over bounded per-worker connection queues.  The
+/// handler closure runs one connection to completion; worker count —
+/// and therefore live handler count — is pinned at construction.
+pub(crate) struct ConnPool {
+    queues: Vec<Arc<WorkerQueue>>,
+    /// joined (and drained) by [`shutdown`](Self::shutdown), which runs
+    /// through a shared reference — the accept loop holds the pool in
+    /// an `Arc` while the server handle keeps the right to tear it down
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    rr: AtomicUsize,
+    stop: Arc<StopSignal>,
+    /// connections currently inside a handler (≤ worker count by
+    /// construction) — `smurff_serve_active_connections`
+    active: Arc<crate::obs::Gauge>,
+    /// sockets shed because every worker queue was full
+    rejected: Arc<crate::obs::Counter>,
+}
+
+impl ConnPool {
+    /// Spawn `workers` handler threads, each with a `backlog`-deep
+    /// inbox.  `handler` is invoked once per connection, on a worker.
+    pub fn new<F>(workers: usize, backlog: usize, stop: Arc<StopSignal>, handler: F) -> ConnPool
+    where
+        F: Fn(TcpStream) + Send + Sync + 'static,
+    {
+        let workers_n = workers.max(1);
+        let backlog = backlog.max(1);
+        let handler = Arc::new(handler);
+        let active = crate::obs::gauge("smurff_serve_active_connections");
+        crate::obs::gauge_set("smurff_serve_conn_workers", workers_n as f64);
+        let queues: Vec<Arc<WorkerQueue>> =
+            (0..workers_n).map(|_| Arc::new(WorkerQueue::new(backlog))).collect();
+        let mut handles = Vec::with_capacity(workers_n);
+        for q in &queues {
+            let q = q.clone();
+            let stop = stop.clone();
+            let handler = handler.clone();
+            let active = active.clone();
+            handles.push(std::thread::spawn(move || {
+                while let Some(conn) = q.pop(&stop) {
+                    active.add(1.0);
+                    handler(conn);
+                    active.add(-1.0);
+                }
+            }));
+        }
+        ConnPool {
+            queues,
+            workers: Mutex::new(handles),
+            rr: AtomicUsize::new(0),
+            stop,
+            active,
+            rejected: crate::obs::counter("smurff_serve_conn_rejected_total"),
+        }
+    }
+
+    /// Round-robin dispatch with a full scan fallback: the socket lands
+    /// on the first worker queue with room, or comes back `Rejected`
+    /// when the whole pool is saturated.  Never blocks.
+    pub fn dispatch(&self, conn: TcpStream) -> Dispatch {
+        let n = self.queues.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed);
+        let mut conn = conn;
+        for i in 0..n {
+            match self.queues[(start + i) % n].offer(conn) {
+                Ok(()) => return Dispatch::Accepted,
+                Err(back) => conn = back,
+            }
+        }
+        self.rejected.add(1);
+        Dispatch::Rejected(conn)
+    }
+
+    /// Wake and join every worker (idempotent).  Callers raise the stop
+    /// signal first; handlers notice it through their read-poll loops.
+    pub fn shutdown(&self) {
+        debug_assert!(self.stop.is_stopped(), "raise the stop signal before shutdown");
+        for q in &self.queues {
+            q.wake();
+        }
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for w in handles {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+
+    #[test]
+    fn stop_signal_interrupts_a_long_sleep_promptly() {
+        let s = Arc::new(StopSignal::new());
+        let s2 = s.clone();
+        let t = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            // 30s nominal sleep — must return the moment stop() lands
+            assert!(s2.sleep(Duration::from_secs(30)), "sleep must report the stop");
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        s.stop();
+        let woke_after = t.join().unwrap();
+        assert!(woke_after < Duration::from_secs(2), "stop took {woke_after:?}");
+        // and a sleep after stop returns immediately
+        assert!(s.sleep(Duration::from_secs(30)));
+    }
+
+    #[test]
+    fn stop_signal_sleep_times_out_when_not_stopped() {
+        let s = StopSignal::new();
+        let t0 = Instant::now();
+        assert!(!s.sleep(Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    /// Echo-ish handler pool over a real listener: worker count bounds
+    /// concurrent handlers, saturation rejects instead of blocking.
+    #[test]
+    fn pool_bounds_handlers_and_rejects_when_saturated() {
+        let stop = Arc::new(StopSignal::new());
+        let peak = Arc::new(AtomicUsize::new(0));
+        let live = Arc::new(AtomicUsize::new(0));
+        let (peak2, live2) = (peak.clone(), live.clone());
+        // handler: track concurrency, then hold the connection until the
+        // client closes (reads one line, echoes, waits for EOF)
+        let pool = ConnPool::new(2, 1, stop.clone(), move |conn: TcpStream| {
+            let n = live2.fetch_add(1, Ordering::SeqCst) + 1;
+            peak2.fetch_max(n, Ordering::SeqCst);
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            let mut writer = conn;
+            let mut line = String::new();
+            while reader.read_line(&mut line).map(|n| n > 0).unwrap_or(false) {
+                let _ = writeln!(writer, "echo: {}", line.trim());
+                line.clear();
+            }
+            live2.fetch_sub(1, Ordering::SeqCst);
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let connect = || {
+            let c = TcpStream::connect(addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+            let (conn, _) = listener.accept().unwrap();
+            (c, conn)
+        };
+        let roundtrip = |c: &TcpStream, msg: &str| {
+            let mut w = c.try_clone().unwrap();
+            writeln!(w, "{msg}").unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), format!("echo: {msg}"));
+        };
+
+        // phase 1: two connections occupy the two workers (the
+        // roundtrips prove a handler holds each, so both inboxes are
+        // drained and empty)
+        let (c0, s0) = connect();
+        assert!(matches!(pool.dispatch(s0), Dispatch::Accepted));
+        let (c1, s1) = connect();
+        assert!(matches!(pool.dispatch(s1), Dispatch::Accepted));
+        roundtrip(&c0, "hi0");
+        roundtrip(&c1, "hi1");
+
+        // phase 2: two more fill the two backlog slots (workers are
+        // pinned by the open c0/c1, so these stay queued)
+        let (c2, s2) = connect();
+        assert!(matches!(pool.dispatch(s2), Dispatch::Accepted));
+        let (c3, s3) = connect();
+        assert!(matches!(pool.dispatch(s3), Dispatch::Accepted));
+
+        // phase 3: the pool is saturated — further sockets come back
+        for _ in 0..2 {
+            let (_c, s) = connect();
+            assert!(
+                matches!(pool.dispatch(s), Dispatch::Rejected(_)),
+                "saturated pool must reject, not queue"
+            );
+        }
+        assert!(peak.load(Ordering::SeqCst) <= 2, "handler concurrency exceeded the pool");
+
+        // phase 4: closing a live connection frees its worker, which
+        // picks up a queued socket — no connection is lost
+        drop(c0);
+        roundtrip(&c2, "queued2");
+        drop(c1);
+        roundtrip(&c3, "queued3");
+        assert!(peak.load(Ordering::SeqCst) <= 2);
+
+        drop((c2, c3));
+        stop.stop();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn pool_shutdown_joins_idle_workers_quickly() {
+        let stop = Arc::new(StopSignal::new());
+        let pool = ConnPool::new(4, 2, stop.clone(), |_conn| {});
+        let t0 = Instant::now();
+        stop.stop();
+        pool.shutdown();
+        assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+}

@@ -1,0 +1,214 @@
+//! Multi-model registry: several named posterior stores served by one
+//! process (ISSUE 10 tentpole).
+//!
+//! `smurff serve --model chembl=/stores/chembl --model ml=/stores/ml`
+//! loads one [`ModelEntry`] per named store.  Each entry is a complete,
+//! independent serving unit:
+//!
+//! * its own hot-swappable [`PredictSession`] (own packed artifact,
+//!   own scoring pool — the fork-join pool's single-submitter contract
+//!   is per entry, held by that entry's batcher);
+//! * its own bounded micro-batch queue and batcher thread;
+//! * its own snapshot watcher (a training run appending to *one* store
+//!   hot-reloads *that* model only);
+//! * its own top-K [`TopKCache`], invalidated atomically on that
+//!   model's reload — sibling caches keep their entries.
+//!
+//! Requests address a model with a `"model"` field in the JSON line;
+//! an absent field routes to the **default model** (the first one
+//! listed), which preserves the PR 5 single-model wire protocol
+//! verbatim.
+
+use super::cache::TopKCache;
+use super::ServeConfig;
+use crate::predict::{PredictSession, ServingModel};
+use crate::util::JsonValue;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Read `diagnostics.json` from a store, if the training run wrote one,
+/// and republish its R̂/ESS gauges into this process's registry.
+pub(crate) fn load_store_diagnostics(dir: &Path) -> Option<JsonValue> {
+    let diag = crate::store::ModelStore::open(dir).ok()?.load_diagnostics().ok()??;
+    crate::diag::publish_json_gauges(&diag);
+    Some(diag)
+}
+
+/// One named model: store, session, queue, cache, and its counters.
+pub(crate) struct ModelEntry {
+    pub name: String,
+    pub store_dir: PathBuf,
+    session: Mutex<Arc<PredictSession>>,
+    /// this model's micro-batch queue, drained by its own batcher
+    pub queue: super::BatchQueue,
+    /// top-K reply cache (`None` when `cache_cap == 0`)
+    pub cache: Option<TopKCache>,
+    /// hot-reload swaps completed for this model
+    /// (`smurff_serve_model_reloads_total{model}`)
+    pub reloads: Arc<crate::obs::Counter>,
+    /// the training run's `diagnostics.json`, refreshed on hot reload
+    pub diagnostics: Mutex<Option<JsonValue>>,
+    /// total scoring requests this model answered (status reporting)
+    pub served: Arc<crate::obs::Counter>,
+}
+
+impl ModelEntry {
+    fn open(name: &str, dir: &Path, cfg: &ServeConfig) -> anyhow::Result<Arc<ModelEntry>> {
+        let session = PredictSession::open_with_threads(dir, cfg.threads)
+            .map_err(|e| anyhow::anyhow!("model '{name}' ({}): {e}", dir.display()))?;
+        crate::log_info!(
+            "serve: model '{name}': {} samples, K={}, zero_copy={} from {}",
+            session.nsamples(),
+            session.num_latent(),
+            session.zero_copy(),
+            dir.display()
+        );
+        Ok(Arc::new(ModelEntry {
+            name: name.to_string(),
+            store_dir: dir.to_path_buf(),
+            session: Mutex::new(Arc::new(session)),
+            queue: super::BatchQueue::new(
+                cfg.queue_cap,
+                &format!("smurff_serve_queue_depth{{model=\"{name}\"}}"),
+            ),
+            cache: (cfg.cache_cap > 0).then(|| TopKCache::new(cfg.cache_cap, name)),
+            reloads: crate::obs::counter(&format!(
+                "smurff_serve_model_reloads_total{{model=\"{name}\"}}"
+            )),
+            diagnostics: Mutex::new(load_store_diagnostics(dir)),
+            served: crate::obs::counter(&format!(
+                "smurff_serve_model_served_total{{model=\"{name}\"}}"
+            )),
+        }))
+    }
+
+    /// The live session snapshot (wait-free for the batcher: one mutex
+    /// clone of an `Arc`).
+    pub fn current(&self) -> Arc<PredictSession> {
+        self.session.lock().unwrap().clone()
+    }
+
+    /// Rebuild the serving model iff this model's store gained (or
+    /// changed) snapshots.  On a swap the top-K cache is invalidated
+    /// *after* the new session is visible — its generation guard drops
+    /// any insert still in flight against the old model — and the
+    /// store's refreshed diagnostics are picked up.  Returns whether a
+    /// swap happened.
+    pub fn reload_if_changed(&self) -> anyhow::Result<bool> {
+        let store = crate::store::ModelStore::open(&self.store_dir)?;
+        let current = self.current();
+        if store.iterations() == current.model().iterations() {
+            return Ok(false);
+        }
+        let model = Arc::new(ServingModel::from_store(&store)?);
+        let swapped = current.with_model(model);
+        *self.session.lock().unwrap() = Arc::new(swapped);
+        if let Some(cache) = &self.cache {
+            cache.invalidate_all();
+        }
+        self.reloads.add(1);
+        // pick up the training run's refreshed diagnostics too (kept if
+        // the new store has not written its report yet — a run only
+        // persists diagnostics.json at the end)
+        if let Some(d) = load_store_diagnostics(&self.store_dir) {
+            *self.diagnostics.lock().unwrap() = Some(d);
+        }
+        crate::log_info!(
+            "serve: hot-reloaded model '{}' from {} ({} samples)",
+            self.name,
+            self.store_dir.display(),
+            store.len()
+        );
+        Ok(true)
+    }
+
+    /// The `status` block for this model (per-model fields of the
+    /// ISSUE 10 `status` verb).
+    pub fn status_block(&self) -> JsonValue {
+        let s = self.current();
+        let mut pairs = vec![
+            ("store", JsonValue::str(&self.store_dir.display().to_string())),
+            ("samples", JsonValue::num(s.nsamples() as f64)),
+            ("snapshots", JsonValue::num(s.nsamples() as f64)),
+            ("num_latent", JsonValue::num(s.num_latent() as f64)),
+            ("nrows", JsonValue::num(s.nrows() as f64)),
+            ("nviews", JsonValue::num(s.nviews() as f64)),
+            ("zero_copy", JsonValue::Bool(s.zero_copy())),
+            ("reloads", JsonValue::num(self.reloads.get() as f64)),
+            ("served", JsonValue::num(self.served.get() as f64)),
+            ("queue_depth", JsonValue::num(self.queue.depth())),
+            (
+                "kernel_isa",
+                JsonValue::str(crate::linalg::Backend::global().isa_label()),
+            ),
+        ];
+        if s.nviews() > 0 && s.nmodes(0) == 2 {
+            pairs.push(("ncols", JsonValue::num(s.ncols(0) as f64)));
+        }
+        match &self.cache {
+            Some(c) => {
+                let (hits, misses, evictions) = c.stats();
+                pairs.push((
+                    "cache",
+                    JsonValue::obj(vec![
+                        ("entries", JsonValue::num(c.len() as f64)),
+                        ("hits", JsonValue::num(hits as f64)),
+                        ("misses", JsonValue::num(misses as f64)),
+                        ("evictions", JsonValue::num(evictions as f64)),
+                        ("hit_rate", JsonValue::num(c.hit_rate())),
+                    ]),
+                ));
+            }
+            None => pairs.push(("cache", JsonValue::Null)),
+        }
+        JsonValue::obj(pairs)
+    }
+}
+
+/// The set of models this process serves, addressed by name; the first
+/// listed is the default for requests without a `"model"` field.
+pub(crate) struct Registry {
+    entries: Vec<Arc<ModelEntry>>,
+}
+
+impl Registry {
+    /// Open every named store.  Names must be unique, non-empty, and
+    /// label-safe (they are embedded into Prometheus series names).
+    pub fn open(models: &[(String, PathBuf)], cfg: &ServeConfig) -> anyhow::Result<Registry> {
+        anyhow::ensure!(!models.is_empty(), "serve needs at least one model");
+        let mut entries: Vec<Arc<ModelEntry>> = Vec::with_capacity(models.len());
+        for (name, dir) in models {
+            anyhow::ensure!(
+                !name.is_empty()
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')),
+                "model name '{name}' must be non-empty [A-Za-z0-9_.-]"
+            );
+            anyhow::ensure!(
+                entries.iter().all(|e| e.name != *name),
+                "duplicate model name '{name}'"
+            );
+            entries.push(ModelEntry::open(name, dir, cfg)?);
+        }
+        Ok(Registry { entries })
+    }
+
+    /// The default model: the first one listed.
+    pub fn default_entry(&self) -> &Arc<ModelEntry> {
+        &self.entries[0]
+    }
+
+    /// Look up a model by name.
+    pub fn get(&self, name: &str) -> Option<&Arc<ModelEntry>> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn entries(&self) -> &[Arc<ModelEntry>] {
+        &self.entries
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+}

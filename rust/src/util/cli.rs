@@ -12,6 +12,10 @@ pub struct Args {
     pub positionals: Vec<String>,
     flags: BTreeMap<String, String>,
     present: Vec<String>,
+    /// every (flag, value) occurrence in order — repeatable flags like
+    /// `--model a=dir --model b=dir` are read through [`Args::get_all`]
+    /// (the `flags` map keeps last-wins for everything else)
+    occurrences: Vec<(String, String)>,
 }
 
 impl Args {
@@ -29,9 +33,11 @@ impl Args {
                 if let Some((k, v)) = name.split_once('=') {
                     a.flags.insert(k.to_string(), v.to_string());
                     a.present.push(k.to_string());
+                    a.occurrences.push((k.to_string(), v.to_string()));
                 } else if bool_flags.contains(&name) {
                     a.flags.insert(name.to_string(), "true".to_string());
                     a.present.push(name.to_string());
+                    a.occurrences.push((name.to_string(), "true".to_string()));
                 } else {
                     i += 1;
                     let v = tokens
@@ -39,6 +45,7 @@ impl Args {
                         .ok_or_else(|| format!("flag --{name} expects a value"))?;
                     a.flags.insert(name.to_string(), v.clone());
                     a.present.push(name.to_string());
+                    a.occurrences.push((name.to_string(), v.clone()));
                 }
             } else {
                 a.positionals.push(t.clone());
@@ -81,6 +88,16 @@ impl Args {
 
     pub fn get_bool(&self, name: &str) -> bool {
         self.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    /// Every value a repeatable flag was given, in order — e.g.
+    /// `--model a=dir1 --model b=dir2` → `["a=dir1", "b=dir2"]`.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.occurrences
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     /// Reject flags outside the allowed set (catches typos).
@@ -135,6 +152,16 @@ mod tests {
         assert!(a.check_known(&["config"]).is_err());
         let a = Args::parse(&toks("--config x"), &[]).unwrap();
         assert!(a.check_known(&["config"]).is_ok());
+    }
+
+    #[test]
+    fn repeated_flags_are_all_kept_in_order() {
+        let a = Args::parse(&toks("serve --model a=/x --model b=/y --cache 64"), &[]).unwrap();
+        assert_eq!(a.get_all("model"), vec!["a=/x", "b=/y"]);
+        // the plain map keeps last-wins for single-valued reads
+        assert_eq!(a.get("model"), Some("b=/y"));
+        assert_eq!(a.get_all("cache"), vec!["64"]);
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]
